@@ -1,0 +1,44 @@
+//! Figure 1 regeneration: the full mpiBench sweep of the paper —
+//! 11 operations × message lengths 2^1..2^17 × node counts {1,2,4,8,16},
+//! raw vs modern interface, 10 reps averaged, geometric mean over ops.
+//!
+//! Writes results/mpibench_rows.csv, results/figure1.csv and
+//! results/figure1.md.
+//!
+//! Run: `cargo run --release --example mpibench -- [--quick]`
+//! (the full sweep takes tens of minutes on one core; --quick for a
+//! minutes-scale subset).
+
+use ferrompi::coordinator::{figure1_report, run_mpibench, MpiBenchConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        MpiBenchConfig::quick()
+    } else {
+        // The paper's sweep, sized to finish on a single-core simulator:
+        // full message range, all five node counts, 10 reps.
+        MpiBenchConfig { iters: 5, ..MpiBenchConfig::paper() }
+    };
+    eprintln!(
+        "mpibench: {} ops × {} msg lengths × {} node counts × 2 interfaces, reps={} iters={}",
+        cfg.ops.len(),
+        cfg.msg_lens.len(),
+        cfg.node_counts.len(),
+        cfg.reps,
+        cfg.iters
+    );
+    let t0 = std::time::Instant::now();
+    let rows = run_mpibench(&cfg, |m| eprintln!("{m}"));
+    let report = figure1_report(&rows);
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/mpibench_rows.csv", &report.rows_csv).unwrap();
+    std::fs::write("results/figure1.csv", &report.figure1_csv).unwrap();
+    std::fs::write("results/figure1.md", &report.markdown).unwrap();
+    println!("{}", report.markdown);
+    println!(
+        "swept {} cells in {:.1}s — results/ updated",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

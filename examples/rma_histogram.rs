@@ -1,0 +1,76 @@
+//! One-sided communication (chapter 12) demo: a distributed histogram
+//! built with RMA accumulates — no receiver-side code at all.
+//!
+//! Rank 0 hosts the histogram window; every rank bins its local samples
+//! and `accumulate`s into rank 0's memory under passive-target locks.
+//! A fetch_and_op counter hands out work chunks dynamically.
+//!
+//! Run: `cargo run --release --example rma_histogram`
+
+use ferrompi::modern::{Communicator, LockType, RmaWindow};
+use ferrompi::universe::Universe;
+use ferrompi::util::rng::Rng;
+
+const BINS: usize = 32;
+const SAMPLES_PER_CHUNK: usize = 1000;
+const CHUNKS: usize = 40;
+
+fn main() {
+    let universe = Universe::new(2, 2);
+    universe.run(|world| {
+        let comm = Communicator::world(world);
+        let r = comm.rank();
+
+        // Window: rank 0 hosts [counter][BINS histogram]; others host 0.
+        let elems = if r == 0 { 1 + BINS } else { 0 };
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, elems).unwrap();
+        win.fence().unwrap();
+
+        // Dynamic work distribution: fetch_and_op on the shared counter.
+        let mut local = [0i64; BINS];
+        let mut processed = 0usize;
+        loop {
+            win.lock(LockType::Shared, 0).unwrap();
+            let chunk = win.fetch_and_op(1, 0, 0, ferrompi::modern::ReduceOp::Sum).unwrap();
+            win.unlock(0).unwrap();
+            if chunk as usize >= CHUNKS {
+                break;
+            }
+            // Bin this chunk's samples (deterministic per chunk).
+            let mut rng = Rng::new(0xC0FFEE ^ chunk as u64);
+            for _ in 0..SAMPLES_PER_CHUNK {
+                // Roughly normal via sum of uniforms.
+                let x: f64 = (0..6).map(|_| rng.f64()).sum::<f64>() / 6.0;
+                let bin = ((x * BINS as f64) as usize).min(BINS - 1);
+                local[bin] += 1;
+            }
+            processed += 1;
+        }
+
+        // Push local bins into the global histogram with one accumulate.
+        win.lock(LockType::Exclusive, 0).unwrap();
+        win.accumulate(&local[..], 0, 1, ferrompi::modern::ReduceOp::Sum).unwrap();
+        win.unlock(0).unwrap();
+
+        let done = comm.all_reduce(processed as i64, ferrompi::modern::ReduceOp::Sum).unwrap();
+        win.fence().unwrap();
+
+        if r == 0 {
+            assert_eq!(done as usize, CHUNKS, "every chunk processed exactly once");
+            let hist = win.with_local(|mem| mem[1..].to_vec());
+            let total: i64 = hist.iter().sum();
+            assert_eq!(total as usize, CHUNKS * SAMPLES_PER_CHUNK);
+            println!("rma_histogram: {CHUNKS} chunks dynamically claimed by {} ranks", comm.size());
+            let max = *hist.iter().max().unwrap() as f64;
+            for (i, &count) in hist.iter().enumerate() {
+                let bar = "#".repeat((count as f64 / max * 50.0) as usize);
+                println!("bin {i:>2} {count:>7} {bar}");
+            }
+            // The sum-of-uniforms distribution must peak in the middle.
+            let mid: i64 = hist[BINS / 2 - 4..BINS / 2 + 4].iter().sum();
+            assert!(mid > total / 2, "distribution peaked in the middle");
+            println!("rma_histogram OK");
+        }
+        win.free().unwrap();
+    });
+}

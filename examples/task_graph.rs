@@ -1,0 +1,86 @@
+//! Listing 2 of the paper, as a runnable example, plus a fork/join task
+//! graph with `when_all` / `when_any`.
+//!
+//! Run: `cargo run --release --example task_graph`
+
+use ferrompi::modern::{when_all, when_any, Communicator, Source, Tag};
+use ferrompi::universe::Universe;
+
+fn main() {
+    let universe = Universe::new(1, 3);
+
+    // ---- Listing 2: chained immediate broadcasts; data == 3 everywhere ----
+    let results = universe.run(|world| {
+        let comm = Communicator::world(world);
+        let mut data: i32 = 0;
+        if comm.rank() == 0 {
+            data = 1;
+        }
+        let c2 = Communicator::world(world);
+        let c3 = Communicator::world(world);
+        comm.immediate_broadcast(data, 0)
+            .then(move |f| {
+                let mut v = f.get().unwrap();
+                if c2.rank() == 1 {
+                    v += 1;
+                }
+                c2.immediate_broadcast(v, 1)
+            })
+            .then(move |f| {
+                let mut v = f.get().unwrap();
+                if c3.rank() == 2 {
+                    v += 1;
+                }
+                c3.immediate_broadcast(v, 2)
+            })
+            .get()
+            .unwrap()
+    });
+    println!("listing 2: data per rank = {results:?} (paper: data == 3 in all ranks)");
+    assert_eq!(results, vec![3, 3, 3]);
+
+    // ---- fork/join: scatter work, join with when_all, race with when_any ----
+    universe.run(|world| {
+        let comm = Communicator::world(world);
+        let r = comm.rank();
+        let p = comm.size();
+
+        // Fork: everyone sends a "task result" to rank 0.
+        if r != 0 {
+            comm.immediate_send(&((r * r) as i64), 0, 1).unwrap().get().unwrap();
+        } else {
+            let futures: Vec<_> = (1..p)
+                .map(|s| comm.immediate_receive::<i64>(Source::Rank(s), Tag::Value(1)).unwrap())
+                .collect();
+            // Join: when_all forwards the underlying requests to waitall.
+            let joined = when_all(futures).get().unwrap();
+            let sum: i64 = joined.iter().map(|(v, _)| v).sum();
+            println!("when_all join: Σ r² over workers = {sum}");
+            assert_eq!(sum, (1..p as i64).map(|x| x * x).sum::<i64>());
+        }
+        comm.barrier().unwrap();
+
+        // Race: rank 0 waits on two sources, takes whichever lands first.
+        if r == 1 {
+            comm.send_tagged(&41i32, 0, 2).unwrap();
+        } else if r == 2 {
+            comm.send_tagged(&42i32, 0, 2).unwrap();
+        } else if r == 0 {
+            let f1 = comm.immediate_receive::<i32>(Source::Rank(1), Tag::Value(2)).unwrap();
+            let f2 = comm.immediate_receive::<i32>(Source::Rank(2), Tag::Value(2)).unwrap();
+            // when_any hands all futures back (C++ when_any_result): the
+            // winner is ready, the loser can still be waited on.
+            let result = when_any(vec![f1, f2]).get().unwrap();
+            let idx = result.index;
+            let (winner, losers) = result.take_winner();
+            let (v, _) = winner.unwrap();
+            println!("when_any race: source index {idx} delivered {v} first");
+            for loser in losers {
+                let (v2, _) = loser.get().unwrap();
+                println!("and the other one arrived with {v2}");
+            }
+        }
+        comm.barrier().unwrap();
+    });
+    println!("task_graph OK");
+}

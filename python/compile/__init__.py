@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 kernels + L2 model + AOT lowering).
+
+Never imported at runtime: `make artifacts` runs this once, the rust
+binary loads the resulting HLO text through PJRT.
+"""

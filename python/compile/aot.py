@@ -1,0 +1,57 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` or serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids, which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+(idempotent; `make artifacts` skips it when inputs are unchanged).
+"""
+
+import argparse
+import hashlib
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import artifact_specs
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="lower just one artifact by name")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = []
+    for name, (fn, example_args) in sorted(artifact_specs().items()):
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(fn, example_args)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest.append(f"{name}.hlo.txt {len(text)} {digest}")
+        print(f"wrote {path} ({len(text)} chars, sha256/16 {digest})")
+
+    (out / "MANIFEST.txt").write_text("\n".join(manifest) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""L1 Pallas kernels: element-wise reduction combiners.
+
+These are the compute hot-spot of the reproduction: MPI's predefined
+reduction operations (SUM/PROD/MAX/MIN) applied block-wise during
+``MPI_Reduce``/``MPI_Allreduce``. The rust coordinator executes the
+AOT-lowered HLO of these kernels through PJRT as a user-defined MPI op
+(``MPI_Op_create``), which is exactly how an accelerator-offloaded
+reduction would plug into a real MPI library.
+
+TPU-shape thinking (DESIGN.md §Hardware-Adaptation): the 1-D payload is
+viewed as (BLOCK_ROWS, 128) — the VPU lane width — and tiled in
+(8, 128)-multiple blocks sized well under VMEM. ``interpret=True`` is
+mandatory on this image (CPU PJRT cannot run Mosaic custom-calls); the
+lowered HLO is plain elementwise ops, which XLA:CPU vectorizes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Combine payloads are fixed-shape blocks of BLOCK elements; the rust side
+# chunks/pads arbitrary buffers into these.
+LANES = 128
+BLOCK_ROWS = 32  # 32 x 128 = 4096 elements per block
+BLOCK = BLOCK_ROWS * LANES
+
+# Tile: 8 sublanes x 128 lanes, the native f32 VREG tile on TPU.
+TILE_ROWS = 8
+
+OPS = ("sum", "prod", "max", "min")
+
+
+def _combine_kernel(op):
+    def kernel(x_ref, y_ref, o_ref):
+        x = x_ref[...]
+        y = y_ref[...]
+        if op == "sum":
+            o_ref[...] = x + y
+        elif op == "prod":
+            o_ref[...] = x * y
+        elif op == "max":
+            o_ref[...] = jnp.maximum(x, y)
+        elif op == "min":
+            o_ref[...] = jnp.minimum(x, y)
+        else:  # pragma: no cover - guarded by OPS
+            raise ValueError(op)
+
+    return kernel
+
+
+def combine(op: str, x, y):
+    """``out[i] = x[i] OP y[i]`` over one (BLOCK,) f32 payload block.
+
+    The grid walks (TILE_ROWS, LANES) tiles so each invocation touches one
+    VREG-aligned tile; VMEM footprint is 3 tiles (x, y, out) = 12 KiB f32.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown combine op {op!r}")
+    if x.shape != (BLOCK,) or y.shape != (BLOCK,):
+        raise ValueError(f"combine expects ({BLOCK},) blocks, got {x.shape}/{y.shape}")
+    x2 = x.reshape(BLOCK_ROWS, LANES)
+    y2 = y.reshape(BLOCK_ROWS, LANES)
+    out = pl.pallas_call(
+        _combine_kernel(op),
+        out_shape=jax.ShapeDtypeStruct((BLOCK_ROWS, LANES), x.dtype),
+        grid=(BLOCK_ROWS // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0)),
+        interpret=True,
+    )(x2, y2)
+    return out.reshape(BLOCK)

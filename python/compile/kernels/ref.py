@@ -1,0 +1,37 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+pytest (python/tests/test_kernel.py) asserts allclose between these and the
+interpret-mode Pallas kernels over hypothesis-generated inputs; the rust
+integration tests then compare the PJRT-executed AOT artifacts against the
+same semantics from the other side of the language boundary.
+"""
+
+import jax.numpy as jnp
+
+from . import stencil
+
+
+def combine_ref(op: str, x, y):
+    """Reference element-wise combiner (any shape)."""
+    if op == "sum":
+        return x + y
+    if op == "prod":
+        return x * y
+    if op == "max":
+        return jnp.maximum(x, y)
+    if op == "min":
+        return jnp.minimum(x, y)
+    raise ValueError(f"unknown combine op {op!r}")
+
+
+def heat_step_ref(u_padded):
+    """Reference 5-point Jacobi update: padded tile -> interior."""
+    c = u_padded[1:-1, 1:-1]
+    lap = (
+        u_padded[:-2, 1:-1]
+        + u_padded[2:, 1:-1]
+        + u_padded[1:-1, :-2]
+        + u_padded[1:-1, 2:]
+        - 4.0 * c
+    )
+    return c + stencil.ALPHA * lap

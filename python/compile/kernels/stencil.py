@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: 5-point Jacobi heat-diffusion step.
+
+The end-to-end example (examples/heat_stencil.rs) runs a 2-D heat equation
+on a 4x4 rank grid; each rank's local tile is (N, N) with a 1-cell halo
+exchanged through the modern interface's neighborhood collectives. The
+interior update is this kernel, AOT-lowered and executed by the rust
+runtime via PJRT.
+
+Tiling: the padded (N+2, N+2) input stays in one VMEM block (N=64 -> 17 KiB
+f32); the kernel reads four shifted views and writes the (N, N) interior.
+This is the BlockSpec analog of the halo-cell scheme a CUDA implementation
+would do with shared-memory tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Local tile edge (without halo).
+N = 64
+ALPHA = 0.25  # diffusion coefficient * dt / dx^2, stable for Jacobi
+
+
+def _heat_kernel(u_ref, o_ref):
+    u = u_ref[...]
+    center = u[1:-1, 1:-1]
+    north = u[:-2, 1:-1]
+    south = u[2:, 1:-1]
+    west = u[1:-1, :-2]
+    east = u[1:-1, 2:]
+    o_ref[...] = center + ALPHA * (north + south + east + west - 4.0 * center)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def heat_step(u_padded):
+    """One Jacobi step: (N+2, N+2) padded tile -> (N, N) updated interior."""
+    if u_padded.shape != (N + 2, N + 2):
+        raise ValueError(f"heat_step expects ({N + 2}, {N + 2}), got {u_padded.shape}")
+    return pl.pallas_call(
+        _heat_kernel,
+        out_shape=jax.ShapeDtypeStruct((N, N), u_padded.dtype),
+        interpret=True,
+    )(u_padded)

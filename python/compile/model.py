@@ -1,0 +1,57 @@
+"""L2: the JAX compute graphs the rust coordinator executes via PJRT.
+
+Each function here calls the L1 Pallas kernels and is lowered once by
+``aot.py`` to HLO text in ``artifacts/``. Python never runs on the request
+path: the rust runtime loads these artifacts at startup.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import combine, stencil
+
+BLOCK = combine.BLOCK
+TILE = stencil.N
+
+
+def combine_fn(op: str):
+    """One (BLOCK,)-f32 combine step: ``out = x OP y``.
+
+    Returned as a 1-tuple (the AOT bridge lowers with return_tuple=True and
+    the rust side unwraps with to_tuple1).
+    """
+
+    def fn(x, y):
+        return (combine.combine(op, x, y),)
+
+    fn.__name__ = f"combine_{op}"
+    return fn
+
+
+def heat_step_fn(u_padded):
+    """One Jacobi step over a padded local tile (see kernels.stencil)."""
+    return (stencil.heat_step(u_padded),)
+
+
+def heat_step_fused_fn(u_padded):
+    """Jacobi step fused with the local residual reduction: returns the
+    updated interior and sum((u_new - u_old)^2) so the coordinator gets
+    both from a single artifact execution (one PJRT call per step instead
+    of two)."""
+    new = stencil.heat_step(u_padded)
+    old = u_padded[1:-1, 1:-1]
+    resid = jnp.sum((new - old) ** 2, dtype=jnp.float32)
+    return (new, resid)
+
+
+def artifact_specs():
+    """name -> (callable, example args): everything aot.py lowers."""
+    f32 = jnp.float32
+    block = jax.ShapeDtypeStruct((BLOCK,), f32)
+    tile = jax.ShapeDtypeStruct((TILE + 2, TILE + 2), f32)
+    specs = {}
+    for op in combine.OPS:
+        specs[f"combine_{op}_f32"] = (combine_fn(op), (block, block))
+    specs["heat_step_f32"] = (heat_step_fn, (tile,))
+    specs["heat_step_fused_f32"] = (heat_step_fused_fn, (tile,))
+    return specs

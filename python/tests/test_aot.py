@@ -1,0 +1,39 @@
+"""AOT bridge checks: HLO text generation is well-formed and stable."""
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("name", ["combine_sum_f32", "heat_step_f32"])
+def test_hlo_text_wellformed(name):
+    fn, args = model.artifact_specs()[name]
+    text = aot.to_hlo_text(fn, args)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # return_tuple=True -> the root computation returns a tuple.
+    assert "tuple" in text.lower()
+
+
+def test_hlo_text_deterministic():
+    fn, args = model.artifact_specs()["combine_max_f32"]
+    assert aot.to_hlo_text(fn, args) == aot.to_hlo_text(fn, args)
+
+
+def test_cli_writes_artifacts(tmp_path):
+    rc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path), "--only", "combine_min_f32"],
+        cwd=pathlib.Path(__file__).resolve().parents[1],
+        capture_output=True,
+        text=True,
+    )
+    assert rc.returncode == 0, rc.stderr
+    out = tmp_path / "combine_min_f32.hlo.txt"
+    assert out.exists()
+    assert "ENTRY" in out.read_text()
+    manifest = (tmp_path / "MANIFEST.txt").read_text()
+    assert "combine_min_f32.hlo.txt" in manifest

@@ -1,0 +1,112 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+The CORE correctness signal for the compute layer — hypothesis sweeps
+values (shapes are artifact-fixed by design) including negatives, zeros,
+denormal-ish magnitudes, infs and ties.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import combine, ref, stencil
+
+BLOCK = combine.BLOCK
+
+
+def block_of(values):
+    """Tile arbitrary-length data to one (BLOCK,) f32 payload."""
+    a = np.asarray(values, dtype=np.float32)
+    if a.size == 0:
+        a = np.zeros(1, dtype=np.float32)
+    reps = -(-BLOCK // a.size)
+    return jnp.asarray(np.tile(a, reps)[:BLOCK])
+
+
+finite = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, allow_subnormal=False, width=32
+)
+
+
+@pytest.mark.parametrize("op", combine.OPS)
+def test_combine_matches_ref_simple(op):
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.standard_normal(BLOCK).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(BLOCK).astype(np.float32))
+    got = combine.combine(op, x, y)
+    want = ref.combine_ref(op, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", combine.OPS)
+@settings(max_examples=25, deadline=None)
+@given(data=st.lists(finite, min_size=1, max_size=64), seed=st.integers(0, 2**31 - 1))
+def test_combine_hypothesis_values(op, data, seed):
+    rng = np.random.default_rng(seed)
+    x = block_of(data)
+    y = jnp.asarray(rng.uniform(-1e6, 1e6, BLOCK).astype(np.float32))
+    got = combine.combine(op, x, y)
+    want = ref.combine_ref(op, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-30)
+
+
+@pytest.mark.parametrize("op", ["max", "min"])
+def test_combine_inf_and_ties(op):
+    x = block_of([np.inf, -np.inf, 0.0, -0.0, 1.0])
+    y = block_of([1.0, 1.0, 0.0, 0.0, 1.0])
+    got = combine.combine(op, x, y)
+    want = ref.combine_ref(op, x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_combine_sum_commutes():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(BLOCK).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(BLOCK).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(combine.combine("sum", x, y)), np.asarray(combine.combine("sum", y, x))
+    )
+
+
+def test_combine_rejects_bad_shapes_and_ops():
+    x = jnp.zeros((BLOCK,), jnp.float32)
+    with pytest.raises(ValueError):
+        combine.combine("sum", x[:-1], x)
+    with pytest.raises(ValueError):
+        combine.combine("median", x, x)
+
+
+def test_heat_step_matches_ref():
+    rng = np.random.default_rng(7)
+    u = jnp.asarray(rng.uniform(0, 100, (stencil.N + 2, stencil.N + 2)).astype(np.float32))
+    got = stencil.heat_step(u)
+    want = ref.heat_step_ref(u)
+    assert got.shape == (stencil.N, stencil.N)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_heat_step_uniform_field_fixed_point():
+    u = jnp.full((stencil.N + 2, stencil.N + 2), 3.5, jnp.float32)
+    got = stencil.heat_step(u)
+    np.testing.assert_allclose(got, 3.5, rtol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_heat_step_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal((stencil.N + 2, stencil.N + 2)).astype(np.float32))
+    np.testing.assert_allclose(stencil.heat_step(u), ref.heat_step_ref(u), rtol=1e-5, atol=1e-6)
+
+
+def test_heat_step_diffusion_smooths():
+    # A hot spike must spread: the max decreases, the neighbors warm up.
+    u = np.zeros((stencil.N + 2, stencil.N + 2), np.float32)
+    c = stencil.N // 2
+    u[c + 1, c + 1] = 100.0
+    out = np.asarray(stencil.heat_step(jnp.asarray(u)))
+    assert out[c, c] < 100.0
+    assert out[c - 1, c] > 0.0
+    assert out[c, c + 1] > 0.0

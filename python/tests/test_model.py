@@ -1,0 +1,40 @@
+"""L2 checks: model functions trace, shapes/dtypes are stable, the fused
+step agrees with its unfused parts."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_artifact_specs_cover_expected_names():
+    names = set(model.artifact_specs())
+    assert {"combine_sum_f32", "combine_prod_f32", "combine_max_f32", "combine_min_f32"} <= names
+    assert {"heat_step_f32", "heat_step_fused_f32"} <= names
+
+
+def test_all_specs_trace_and_return_tuples():
+    for name, (fn, args) in model.artifact_specs().items():
+        out_shape = jax.eval_shape(fn, *args)
+        assert isinstance(out_shape, tuple), name
+        for leaf in out_shape:
+            assert leaf.dtype == jnp.float32, name
+
+
+def test_combine_fn_executes():
+    fn, _ = model.artifact_specs()["combine_sum_f32"]
+    x = jnp.arange(model.BLOCK, dtype=jnp.float32)
+    y = jnp.ones((model.BLOCK,), jnp.float32)
+    (out,) = fn(x, y)
+    np.testing.assert_allclose(out, x + 1.0)
+
+
+def test_fused_heat_step_matches_parts():
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.uniform(0, 1, (model.TILE + 2, model.TILE + 2)).astype(np.float32))
+    new, resid = model.heat_step_fused_fn(u)
+    np.testing.assert_allclose(new, ref.heat_step_ref(u), rtol=1e-6)
+    expect = np.sum((np.asarray(new) - np.asarray(u)[1:-1, 1:-1]) ** 2)
+    np.testing.assert_allclose(resid, expect, rtol=1e-4)

@@ -1,0 +1,82 @@
+//! A4 — collective algorithm ablation: allreduce
+//! (recursive-doubling / ring / reduce+bcast) and bcast (binomial /
+//! linear) across message sizes; shows the crossovers the algorithm
+//! registry exists for.
+
+use ferrompi::collective::config::{self, AllreduceAlg, BcastAlg};
+use ferrompi::datatype::{Datatype, Primitive};
+use ferrompi::universe::Universe;
+use ferrompi::util::stats::mean;
+use ferrompi::util::table::Table;
+
+const REPS: usize = 30;
+
+fn time_allreduce(nodes: usize, ppn: usize, count: usize, alg: AllreduceAlg) -> f64 {
+    config::set_allreduce_alg(alg);
+    let times = Universe::new(nodes, ppn).run(move |comm| {
+        let t = Datatype::primitive(Primitive::F32);
+        let mine = vec![1.0f32; count];
+        let mut out = vec![0.0f32; count];
+        let sb = unsafe { std::slice::from_raw_parts(mine.as_ptr() as *const u8, count * 4) };
+        let rb = unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, count * 4) };
+        // warmup
+        for _ in 0..3 {
+            ferrompi::collective::allreduce(comm, Some(sb), rb, count, &t, &ferrompi::op::Op::SUM).unwrap();
+        }
+        ferrompi::collective::barrier(comm).unwrap();
+        let t0 = comm.wtime();
+        for _ in 0..REPS {
+            ferrompi::collective::allreduce(comm, Some(sb), rb, count, &t, &ferrompi::op::Op::SUM).unwrap();
+        }
+        (comm.wtime() - t0) / REPS as f64
+    });
+    config::set_allreduce_alg(AllreduceAlg::RecursiveDoubling);
+    mean(&times)
+}
+
+fn time_bcast(nodes: usize, ppn: usize, bytes: usize, alg: BcastAlg) -> f64 {
+    config::set_bcast_alg(alg);
+    let times = Universe::new(nodes, ppn).run(move |comm| {
+        let t = Datatype::primitive(Primitive::Byte);
+        let mut buf = vec![1u8; bytes];
+        for _ in 0..3 {
+            ferrompi::collective::bcast(comm, &mut buf, bytes, &t, 0).unwrap();
+        }
+        ferrompi::collective::barrier(comm).unwrap();
+        let t0 = comm.wtime();
+        for _ in 0..REPS {
+            ferrompi::collective::bcast(comm, &mut buf, bytes, &t, 0).unwrap();
+        }
+        (comm.wtime() - t0) / REPS as f64
+    });
+    config::set_bcast_alg(BcastAlg::Binomial);
+    mean(&times)
+}
+
+fn main() {
+    let (nodes, ppn) = (4, 2);
+    println!("\nA4 — allreduce algorithms, {nodes} nodes × {ppn} ppn (us/op):\n");
+    let mut t = Table::new(&["f32 count", "rec-doubling", "ring", "reduce+bcast"]);
+    for count in [16usize, 1024, 16384, 131072] {
+        let rd = time_allreduce(nodes, ppn, count, AllreduceAlg::RecursiveDoubling);
+        let ring = time_allreduce(nodes, ppn, count, AllreduceAlg::Ring);
+        let rb = time_allreduce(nodes, ppn, count, AllreduceAlg::ReduceBcast);
+        t.push(vec![
+            count.to_string(),
+            format!("{:.1}", rd * 1e6),
+            format!("{:.1}", ring * 1e6),
+            format!("{:.1}", rb * 1e6),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    println!("\nA4 — bcast algorithms, {nodes} nodes × {ppn} ppn (us/op):\n");
+    let mut t = Table::new(&["bytes", "binomial", "linear"]);
+    for bytes in [64usize, 4096, 262144] {
+        let bin = time_bcast(nodes, ppn, bytes, BcastAlg::Binomial);
+        let lin = time_bcast(nodes, ppn, bytes, BcastAlg::Linear);
+        t.push(vec![bytes.to_string(), format!("{:.1}", bin * 1e6), format!("{:.1}", lin * 1e6)]);
+    }
+    println!("{}", t.to_markdown());
+    println!("expected shape: rec-doubling wins small, ring wins large; binomial beats linear as p grows");
+}

@@ -1,0 +1,17 @@
+//! E1 — Figure 1, CI-sized: the mpiBench sweep through both interfaces,
+//! reduced to a minutes-scale subset. `examples/mpibench.rs` runs the
+//! paper-sized sweep.
+
+use ferrompi::coordinator::{figure1_report, run_mpibench, MpiBenchConfig};
+
+fn main() {
+    let cfg = MpiBenchConfig::quick();
+    eprintln!("bench_figure1 (quick subset; full sweep: cargo run --release --example mpibench)");
+    let rows = run_mpibench(&cfg, |m| eprintln!("{m}"));
+    let report = figure1_report(&rows);
+    println!("{}", report.markdown);
+    println!(
+        "E1 headline: modern/raw geomean overhead = {:.4} (paper: ≈1.0)",
+        report.overall_overhead
+    );
+}

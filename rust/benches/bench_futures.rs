@@ -1,0 +1,81 @@
+//! A2 — futures-vs-raw-wait overhead: the same nonblocking ping-pong
+//! through (a) raw isend/irecv + wait handles, (b) modern requests, and
+//! (c) modern futures with a `.then` continuation — measuring what the
+//! paper's future abstraction costs on top of the request layer.
+
+use ferrompi::modern::{Communicator, Source, Tag};
+use ferrompi::raw;
+use ferrompi::universe::Universe;
+use ferrompi::util::stats::mean;
+
+const ITERS: usize = 2000;
+
+fn bench_job(name: &str, f: impl Fn(&ferrompi::comm::Comm, usize) + Send + Sync) -> f64 {
+    // 2 ranks, zero-cost network: isolates software path length.
+    let times = Universe::test(2).run(|world| {
+        // warmup
+        f(world, 50);
+        let t0 = std::time::Instant::now();
+        f(world, ITERS);
+        t0.elapsed().as_secs_f64() / ITERS as f64
+    });
+    let t = mean(&times);
+    println!("bench {name:<42} {:>10.0} ns/roundtrip", t * 1e9);
+    t
+}
+
+fn main() {
+    println!("\nA2 — ping-pong roundtrip cost by completion style ({ITERS} iters):\n");
+
+    let raw_t = bench_job("raw: isend/irecv + mpi_waitall", |world, iters| {
+        raw::init(world);
+        let mut rank = -1;
+        raw::mpi_comm_rank(raw::MPI_COMM_WORLD, &mut rank);
+        let peer = 1 - rank;
+        let payload = [1i32];
+        let pb = unsafe { std::slice::from_raw_parts(payload.as_ptr() as *const u8, 4) };
+        for _ in 0..iters {
+            let mut incoming = [0i32];
+            let ib = unsafe { std::slice::from_raw_parts_mut(incoming.as_mut_ptr() as *mut u8, 4) };
+            let mut reqs = [raw::MPI_REQUEST_NULL; 2];
+            raw::mpi_irecv(ib, 1, raw::MPI_INT, peer, 0, raw::MPI_COMM_WORLD, &mut reqs[0]);
+            raw::mpi_isend(pb, 1, raw::MPI_INT, peer, 0, raw::MPI_COMM_WORLD, &mut reqs[1]);
+            let mut sts = [raw::MpiStatus::default(); 2];
+            raw::mpi_waitall(&mut reqs, &mut sts);
+        }
+        raw::finalize();
+    });
+
+    let req_t = bench_job("modern: requests + wait_all", |world, iters| {
+        let comm = Communicator::world(world);
+        let peer = 1 - comm.rank();
+        let dt = <i32 as ferrompi::modern::DataType>::datatype();
+        for _ in 0..iters {
+            let payload = [1i32];
+            let mut incoming = [0i32];
+            let pb = unsafe { std::slice::from_raw_parts(payload.as_ptr() as *const u8, 4) };
+            let ib = unsafe { std::slice::from_raw_parts_mut(incoming.as_mut_ptr() as *mut u8, 4) };
+            let r = comm.native().irecv(ib, 1, &dt, peer as i32, 0).unwrap();
+            let s = comm.native().isend(pb, 1, &dt, peer as i32, 0).unwrap();
+            ferrompi::request::wait_all(&[r, s]).unwrap();
+        }
+    });
+
+    let fut_t = bench_job("modern: futures + .then continuation", |world, iters| {
+        let comm = Communicator::world(world);
+        let peer = 1 - comm.rank();
+        for _ in 0..iters {
+            let send = comm.immediate_send(&1i32, peer, 0).unwrap();
+            let recv = comm.immediate_receive::<i32>(Source::Rank(peer), Tag::Value(0)).unwrap();
+            recv.then(move |f| {
+                let _ = f.get();
+                send
+            })
+            .get()
+            .unwrap();
+        }
+    });
+
+    println!("\nratios: requests/raw = {:.3}, futures/raw = {:.3}, futures/requests = {:.3}",
+        req_t / raw_t, fut_t / raw_t, fut_t / req_t);
+}

@@ -1,0 +1,37 @@
+//! A1 — per-operation interface overhead decomposition: raw vs modern,
+//! per op, at fixed shape (the paper reports only the geomean; this shows
+//! where any overhead would live).
+
+use ferrompi::coordinator::{run_mpibench, Interface, MpiBenchConfig, ALL_OPS};
+use ferrompi::util::table::Table;
+
+fn main() {
+    let cfg = MpiBenchConfig {
+        msg_lens: vec![1024],
+        node_counts: vec![2],
+        ppn: 2,
+        reps: 5,
+        iters: 10,
+        interfaces: vec![Interface::Raw, Interface::Modern],
+        ops: ALL_OPS.to_vec(),
+    };
+    let rows = run_mpibench(&cfg, |m| eprintln!("{m}"));
+    let mut t = Table::new(&["op", "raw (us)", "modern (us)", "modern/raw"]);
+    for op in ALL_OPS {
+        let get = |iface| {
+            rows.iter()
+                .find(|r| r.op == op && r.interface == iface)
+                .map(|r| r.mean_s)
+                .unwrap_or(f64::NAN)
+        };
+        let (raw, modern) = (get(Interface::Raw), get(Interface::Modern));
+        t.push(vec![
+            op.label().into(),
+            format!("{:.2}", raw * 1e6),
+            format!("{:.2}", modern * 1e6),
+            format!("{:.3}", modern / raw),
+        ]);
+    }
+    println!("\nA1 — per-op interface overhead (1 KiB, 2 nodes × 2 ppn):\n");
+    println!("{}", t.to_markdown());
+}

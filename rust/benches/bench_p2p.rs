@@ -1,0 +1,95 @@
+//! Transport microbenchmarks: eager vs rendezvous ping-pong latency,
+//! intra- vs inter-node, and matching-engine behaviour under unexpected-
+//! message floods (the substrate's hot paths, used by the §Perf log).
+
+use ferrompi::datatype::{Datatype, Primitive};
+use ferrompi::universe::Universe;
+use ferrompi::util::stats::mean;
+use ferrompi::util::table::Table;
+
+const ITERS: usize = 500;
+
+fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> f64 {
+    let times = Universe::new(nodes, ppn).run(move |comm| {
+        let t = Datatype::primitive(Primitive::Byte);
+        let payload = vec![1u8; bytes];
+        let mut buf = vec![0u8; bytes];
+        let me = comm.rank();
+        let peer = if me == 0 { (comm.size() - 1) as i32 } else { 0 };
+        if me != 0 && me != comm.size() - 1 {
+            return f64::NAN;
+        }
+        // warmup
+        for _ in 0..10 {
+            if me == 0 {
+                comm.send(&payload, bytes, &t, peer, 0).unwrap();
+                comm.recv(&mut buf, bytes, &t, peer, 0).unwrap();
+            } else {
+                comm.recv(&mut buf, bytes, &t, peer, 0).unwrap();
+                comm.send(&payload, bytes, &t, peer, 0).unwrap();
+            }
+        }
+        let t0 = comm.wtime();
+        for _ in 0..ITERS {
+            if me == 0 {
+                comm.send(&payload, bytes, &t, peer, 0).unwrap();
+                comm.recv(&mut buf, bytes, &t, peer, 0).unwrap();
+            } else {
+                comm.recv(&mut buf, bytes, &t, peer, 0).unwrap();
+                comm.send(&payload, bytes, &t, peer, 0).unwrap();
+            }
+        }
+        (comm.wtime() - t0) / ITERS as f64 / 2.0 // one-way
+    });
+    mean(&times.into_iter().filter(|t| !t.is_nan()).collect::<Vec<_>>())
+}
+
+fn unexpected_flood(depth: usize) -> f64 {
+    // Rank 0 sends `depth` messages with distinct tags before rank 1
+    // posts any receive; rank 1 then receives them in REVERSE tag order,
+    // forcing worst-case unexpected-queue scans.
+    let times = Universe::test(2).run(move |comm| {
+        let t = Datatype::primitive(Primitive::Byte);
+        let payload = [1u8; 8];
+        if comm.rank() == 0 {
+            for tag in 0..depth as i32 {
+                comm.send(&payload, 8, &t, 1, tag).unwrap();
+            }
+            0.0
+        } else {
+            // Wait until everything is queued.
+            while comm.rank_ctx().matcher.borrow().unexpected_len() < depth {
+                ferrompi::p2p::progress(comm.rank_ctx()).unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            let mut buf = [0u8; 8];
+            for tag in (0..depth as i32).rev() {
+                comm.recv(&mut buf, 8, &t, 0, tag).unwrap();
+            }
+            t0.elapsed().as_secs_f64() / depth as f64
+        }
+    });
+    times[1]
+}
+
+fn main() {
+    println!("\np2p — one-way latency (us), eager (≤64 KiB) vs rendezvous (>64 KiB):\n");
+    let mut t = Table::new(&["bytes", "intra-node", "inter-node"]);
+    for bytes in [8usize, 1024, 65536, 65537, 262144] {
+        let intra = pingpong(1, 2, bytes);
+        let inter = pingpong(2, 1, bytes);
+        t.push(vec![
+            bytes.to_string(),
+            format!("{:.2}", intra * 1e6),
+            format!("{:.2}", inter * 1e6),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    println!("\nmatching engine — unexpected-queue scan cost (ns per recv, reverse order):\n");
+    let mut t = Table::new(&["queue depth", "ns/recv"]);
+    for depth in [4usize, 64, 512] {
+        t.push(vec![depth.to_string(), format!("{:.0}", unexpected_flood(depth) * 1e9)]);
+    }
+    println!("{}", t.to_markdown());
+}

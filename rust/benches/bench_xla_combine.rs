@@ -1,0 +1,47 @@
+//! A5 — native vs XLA-offloaded reduction combine: the local combine step
+//! of Reduce/Allreduce computed by the native Rust loop vs the AOT
+//! Pallas kernel through PJRT (per-call dispatch cost vs throughput).
+
+use ferrompi::datatype::{Primitive, TypeMap};
+use ferrompi::op::{Op, OpKind};
+use ferrompi::runtime;
+use ferrompi::util::microbench::{quick, Bench};
+
+fn main() {
+    if !runtime::artifacts_available() {
+        eprintln!("A5 skipped: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    runtime::engine().unwrap().warmup().unwrap();
+    println!("\nA5 — local combine: native Rust vs AOT-Pallas-via-PJRT (f32 sum):\n");
+    let mut b = Bench::new(quick());
+    let map = TypeMap::primitive(Primitive::F32);
+    let xla = runtime::xla_op(OpKind::Sum).unwrap();
+
+    for count in [256usize, 4096, 65536] {
+        let input: Vec<u8> = (0..count).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        let base: Vec<u8> = (0..count).flat_map(|i| (2.0 * i as f32).to_le_bytes()).collect();
+
+        let mut inout = base.clone();
+        b.run(&format!("native sum, {count} f32"), || {
+            inout.copy_from_slice(&base);
+            Op::SUM.apply(&map, &input, &mut inout, count).unwrap();
+        });
+
+        let mut inout2 = base.clone();
+        b.run(&format!("xla    sum, {count} f32"), || {
+            inout2.copy_from_slice(&base);
+            xla.apply(&map, &input, &mut inout2, count).unwrap();
+        });
+        assert_eq!(inout, inout2, "both paths agree");
+
+        let r = b
+            .ratio(&format!("xla    sum, {count} f32"), &format!("native sum, {count} f32"))
+            .unwrap();
+        println!("  -> xla/native at {count}: {r:.1}x (PJRT dispatch amortizes with size)\n");
+    }
+    println!(
+        "note: interpret-mode CPU timings — on TPU the xla path wins at scale; \
+         see DESIGN.md §Hardware-Adaptation for the VMEM/VPU estimate"
+    );
+}

@@ -1,0 +1,824 @@
+//! Schedule builders: one per collective algorithm.
+//!
+//! Conventions:
+//! * `r` = this process's group rank, `p` = communicator size.
+//! * Peers are translated to world ranks here, at build time.
+//! * Local steps (pack/copy/reduce) that consume a transfer's data are
+//!   placed in a *later* round than the transfer; within a round, the
+//!   engine posts sends first, then executes local steps and receive posts
+//!   in builder order.
+//! * All arena contents are packed wire bytes.
+
+use super::config::{AllreduceAlg, BcastAlg};
+use super::schedule::{ArenaRange, SchedBuilder, Schedule};
+use crate::comm::Comm;
+use crate::datatype::Datatype;
+use crate::op::Op;
+use crate::p2p::{RawBuf, RawBufMut};
+use crate::Result;
+
+fn w(comm: &Comm, group_rank: usize) -> usize {
+    comm.group().world_rank(group_rank).expect("builder rank in range")
+}
+
+fn ceil_log2(p: usize) -> usize {
+    (usize::BITS - (p - 1).leading_zeros()) as usize
+}
+
+/// Disjoint sub-buffer capture (for at-displacement unpacks). The caller
+/// guarantees the (off, len) windows handed out are disjoint and in-bounds.
+pub(crate) unsafe fn subbuf_mut(buf: &mut [u8], off: usize, len: usize) -> RawBufMut {
+    assert!(off + len <= buf.len(), "sub-buffer out of bounds");
+    let slice = std::slice::from_raw_parts_mut(buf.as_mut_ptr().add(off), len);
+    RawBufMut::from_slice(slice)
+}
+
+pub(crate) fn subbuf(buf: &[u8], off: usize, len: usize) -> RawBuf {
+    assert!(off + len <= buf.len(), "sub-buffer out of bounds");
+    RawBuf::from_slice(&buf[off..off + len])
+}
+
+// ---------------- barrier ----------------
+
+/// Dissemination barrier: ceil(log2 p) rounds of zero-byte exchanges.
+pub fn barrier(comm: &Comm) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let mut sb = SchedBuilder::new();
+    if p > 1 {
+        let zero = sb.alloc(0);
+        let mut m = 1;
+        while m < p {
+            sb.send(w(comm, (r + m) % p), zero);
+            sb.recv(w(comm, (r + p - m) % p), zero);
+            sb.barrier_round();
+            m <<= 1;
+        }
+    }
+    sb.finish()
+}
+
+// ---------------- bcast ----------------
+
+pub fn bcast(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize, alg: BcastAlg) -> Schedule {
+    match alg {
+        BcastAlg::Binomial => bcast_binomial(comm, buf, count, dtype, root),
+        BcastAlg::Linear => bcast_linear(comm, buf, count, dtype, root),
+    }
+}
+
+/// Binomial-tree broadcast (doubling): after round t, ranks 0..2^(t+1)
+/// (in root-relative numbering) hold the data.
+fn bcast_binomial(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let n = dtype.size() * count;
+    let vr = (r + p - root) % p;
+    let mut sb = SchedBuilder::new();
+    let data = sb.alloc(n);
+    if r == root {
+        sb.pack_user(buf, count, dtype, data);
+        sb.barrier_round();
+    }
+    for t in 0..ceil_log2(p.max(2)) {
+        let m = 1usize << t;
+        if m > vr && vr + m < p {
+            // I already hold the data: forward.
+            sb.send(w(comm, (vr + m + root) % p), data);
+            sb.barrier_round();
+        } else if (m..2 * m).contains(&vr) {
+            sb.recv(w(comm, (vr - m + root) % p), data);
+            sb.barrier_round();
+        }
+    }
+    if r != root {
+        sb.unpack_user(data, buf, count, dtype);
+    }
+    sb.finish()
+}
+
+/// Flat broadcast: root sends to everyone (the ablation baseline).
+fn bcast_linear(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let n = dtype.size() * count;
+    let mut sb = SchedBuilder::new();
+    let data = sb.alloc(n);
+    if r == root {
+        sb.pack_user(buf, count, dtype, data);
+        sb.barrier_round();
+        for dst in 0..p {
+            if dst != root {
+                sb.send(w(comm, dst), data);
+            }
+        }
+    } else {
+        sb.recv(w(comm, root), data);
+        sb.barrier_round();
+        sb.unpack_user(data, buf, count, dtype);
+    }
+    sb.finish()
+}
+
+// ---------------- reduce ----------------
+
+/// Binomial-tree reduce for commutative ops; ordered linear gather-fold
+/// for non-commutative ones.
+#[allow(clippy::too_many_arguments)]
+pub fn reduce(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: Option<&mut [u8]>,
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+    root: usize,
+) -> Result<Schedule> {
+    if op.is_commutative() {
+        Ok(reduce_binomial(comm, sbuf, rbuf, count, dtype, root))
+    } else {
+        Ok(reduce_linear_ordered(comm, sbuf, rbuf, count, dtype, root))
+    }
+}
+
+/// `sbuf = None` means MPI_IN_PLACE at the root (contribution is in rbuf).
+fn pack_contribution(
+    sb: &mut SchedBuilder,
+    sbuf: Option<&[u8]>,
+    rbuf: &Option<&mut [u8]>,
+    count: usize,
+    dtype: &Datatype,
+    to: ArenaRange,
+) {
+    match sbuf {
+        Some(s) => sb.pack_user(s, count, dtype, to),
+        None => {
+            let rb = rbuf.as_ref().expect("IN_PLACE requires a receive buffer");
+            sb.pack_user_raw(subbuf(rb, 0, rb.len()), count, dtype, to);
+        }
+    }
+}
+
+fn reduce_binomial(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    mut rbuf: Option<&mut [u8]>,
+    count: usize,
+    dtype: &Datatype,
+    root: usize,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let n = dtype.size() * count;
+    let vr = (r + p - root) % p;
+    let mut sb = SchedBuilder::new();
+    let acc = sb.alloc(n);
+    let tmp = sb.alloc(n);
+    pack_contribution(&mut sb, sbuf, &rbuf, count, dtype, acc);
+    sb.barrier_round();
+    let mut m = 1usize;
+    while m < p {
+        if vr & m != 0 {
+            sb.send(w(comm, (vr - m + root) % p), acc);
+            sb.barrier_round();
+            break;
+        } else if vr + m < p {
+            sb.recv(w(comm, (vr + m + root) % p), tmp);
+            sb.barrier_round();
+            sb.reduce(tmp, acc, count);
+            sb.barrier_round();
+        }
+        m <<= 1;
+    }
+    if r == root {
+        let rb = rbuf.as_mut().expect("root must supply a receive buffer");
+        sb.unpack_user(acc, rb, count, dtype);
+    }
+    sb.finish()
+}
+
+/// Ordered reduction: the root receives every contribution and folds them
+/// left-to-right (rank 0 first), which is what non-commutative user ops
+/// require. `O(p)` messages but semantically exact.
+fn reduce_linear_ordered(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    mut rbuf: Option<&mut [u8]>,
+    count: usize,
+    dtype: &Datatype,
+    root: usize,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let n = dtype.size() * count;
+    let mut sb = SchedBuilder::new();
+    if r != root {
+        let stage = sb.alloc(n);
+        pack_contribution(&mut sb, sbuf, &rbuf, count, dtype, stage);
+        sb.barrier_round();
+        sb.send(w(comm, root), stage);
+    } else {
+        // Slot per rank, in rank order.
+        let slots: Vec<ArenaRange> = (0..p).map(|_| sb.alloc(n)).collect();
+        pack_contribution(&mut sb, sbuf, &rbuf, count, dtype, slots[r]);
+        sb.barrier_round();
+        for i in 0..p {
+            if i != r {
+                sb.recv(w(comm, i), slots[i]);
+            }
+        }
+        sb.barrier_round();
+        // Fold left→right: acc walks the slot array. apply(input, inout)
+        // computes `inout = input OP inout`, so folding slot[i] (left,
+        // already-accumulated) into slot[i+1] (right) keeps order.
+        for i in 0..p - 1 {
+            sb.reduce(slots[i], slots[i + 1], count);
+            sb.barrier_round();
+        }
+        let rb = rbuf.as_mut().expect("root must supply a receive buffer");
+        sb.unpack_user(slots[p - 1], rb, count, dtype);
+    }
+    sb.finish()
+}
+
+// ---------------- allreduce ----------------
+
+#[allow(clippy::too_many_arguments)]
+pub fn allreduce(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+    alg: AllreduceAlg,
+) -> Schedule {
+    if !op.is_commutative() || matches!(alg, AllreduceAlg::ReduceBcast) {
+        return allreduce_reduce_bcast(comm, sbuf, rbuf, count, dtype);
+    }
+    match alg {
+        AllreduceAlg::RecursiveDoubling => {
+            allreduce_recursive_doubling(comm, sbuf, rbuf, count, dtype)
+        }
+        AllreduceAlg::Ring => allreduce_ring(comm, sbuf, rbuf, count, dtype),
+        AllreduceAlg::ReduceBcast => unreachable!(),
+    }
+}
+
+/// Recursive doubling with the standard non-power-of-two pre/post phase.
+fn allreduce_recursive_doubling(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let n = dtype.size() * count;
+    let mut sb = SchedBuilder::new();
+    let acc = sb.alloc(n);
+    let tmp = sb.alloc(n);
+    {
+        let rb: Option<&mut [u8]> = None;
+        match sbuf {
+            Some(s) => sb.pack_user(s, count, dtype, acc),
+            None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), count, dtype, acc),
+        }
+        let _ = rb;
+    }
+    sb.barrier_round();
+
+    let p2 = if p.is_power_of_two() { p } else { 1 << (ceil_log2(p) - 1) };
+    let rem = p - p2;
+    // Pre-phase: fold odd ranks of the first 2*rem into their even peers.
+    let newrank: isize = if r < 2 * rem {
+        if r % 2 == 1 {
+            sb.send(w(comm, r - 1), acc);
+            sb.barrier_round();
+            -1
+        } else {
+            sb.recv(w(comm, r + 1), tmp);
+            sb.barrier_round();
+            sb.reduce(tmp, acc, count);
+            sb.barrier_round();
+            (r / 2) as isize
+        }
+    } else {
+        (r - rem) as isize
+    };
+
+    if newrank >= 0 {
+        let nr = newrank as usize;
+        let real = |x: usize| if x < rem { x * 2 } else { x + rem };
+        let mut m = 1usize;
+        while m < p2 {
+            let partner = real(nr ^ m);
+            sb.send(w(comm, partner), acc);
+            sb.recv(w(comm, partner), tmp);
+            sb.barrier_round();
+            sb.reduce(tmp, acc, count);
+            sb.barrier_round();
+            m <<= 1;
+        }
+    }
+
+    // Post-phase: evens hand the result back to their odd peers.
+    if r < 2 * rem {
+        if r % 2 == 0 {
+            sb.send(w(comm, r + 1), acc);
+        } else {
+            sb.recv(w(comm, r - 1), acc);
+        }
+        sb.barrier_round();
+    }
+    sb.unpack_user(acc, rbuf, count, dtype);
+    sb.finish()
+}
+
+/// Ring allreduce (reduce-scatter ring + allgather ring): bandwidth-optimal
+/// for large messages. Requires count >= p (falls back implicitly via
+/// uneven chunking when smaller).
+fn allreduce_ring(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let esz = dtype.size();
+    let n = esz * count;
+    let mut sb = SchedBuilder::new();
+    let acc = sb.alloc(n);
+    let tmp = sb.alloc(n.div_ceil(p.max(1)) + esz); // one chunk
+    match sbuf {
+        Some(s) => sb.pack_user(s, count, dtype, acc),
+        None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), count, dtype, acc),
+    }
+    sb.barrier_round();
+    if p > 1 {
+        // Chunk boundaries in elements.
+        let chunk = |i: usize| -> (usize, usize) {
+            let base = count / p;
+            let extra = count % p;
+            let lo = i * base + i.min(extra);
+            let hi = lo + base + usize::from(i < extra);
+            (lo, hi)
+        };
+        let range = |i: usize| -> ArenaRange {
+            let (lo, hi) = chunk(i);
+            ArenaRange { off: acc.off + lo * esz, len: (hi - lo) * esz }
+        };
+        let right = w(comm, (r + 1) % p);
+        let left = w(comm, (r + p - 1) % p);
+        // Reduce-scatter ring: after p-1 rounds, chunk (r+1)%p is fully
+        // reduced at rank r... we use the orientation where rank r ends
+        // owning chunk r.
+        for t in 0..p - 1 {
+            let send_chunk = (r + p - t) % p;
+            let recv_chunk = (r + p - t - 1) % p;
+            let rc = range(recv_chunk);
+            sb.send(right, range(send_chunk));
+            let tmp_r = ArenaRange { off: tmp.off, len: rc.len };
+            sb.recv(left, tmp_r);
+            sb.barrier_round();
+            let elems = rc.len / esz.max(1);
+            sb.reduce(tmp_r, rc, elems);
+            sb.barrier_round();
+        }
+        // Allgather ring.
+        for t in 0..p - 1 {
+            let send_chunk = (r + 1 + p - t) % p;
+            let recv_chunk = (r + p - t) % p;
+            sb.send(right, range(send_chunk));
+            sb.recv(left, range(recv_chunk));
+            sb.barrier_round();
+        }
+    }
+    sb.unpack_user(acc, rbuf, count, dtype);
+    sb.finish()
+}
+
+/// Composition fallback for non-commutative ops: ordered reduce to rank 0,
+/// then binomial broadcast of the result.
+fn allreduce_reduce_bcast(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let n = dtype.size() * count;
+    let root = 0usize;
+    let mut sb = SchedBuilder::new();
+
+    // --- ordered linear reduce into `res` at root ---
+    let res = if r != root {
+        let stage = sb.alloc(n);
+        match sbuf {
+            Some(s) => sb.pack_user(s, count, dtype, stage),
+            None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), count, dtype, stage),
+        }
+        sb.barrier_round();
+        sb.send(w(comm, root), stage);
+        sb.barrier_round();
+        stage
+    } else {
+        let slots: Vec<ArenaRange> = (0..p).map(|_| sb.alloc(n)).collect();
+        match sbuf {
+            Some(s) => sb.pack_user(s, count, dtype, slots[r]),
+            None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), count, dtype, slots[r]),
+        }
+        sb.barrier_round();
+        for i in 0..p {
+            if i != r {
+                sb.recv(w(comm, i), slots[i]);
+            }
+        }
+        sb.barrier_round();
+        for i in 0..p - 1 {
+            sb.reduce(slots[i], slots[i + 1], count);
+            sb.barrier_round();
+        }
+        slots[p - 1]
+    };
+
+    // --- binomial bcast of `res` from root (vr == r since root == 0) ---
+    for t in 0..ceil_log2(p.max(2)) {
+        let m = 1usize << t;
+        if m > r && r + m < p {
+            sb.send(w(comm, r + m), res);
+            sb.barrier_round();
+        } else if (m..2 * m).contains(&r) {
+            sb.recv(w(comm, r - m), res);
+            sb.barrier_round();
+        }
+    }
+    sb.unpack_user(res, rbuf, count, dtype);
+    sb.finish()
+}
+
+// ---------------- gather / scatter ----------------
+
+/// Linear gather with per-rank counts and byte displacements
+/// (`MPI_Gatherv`; `MPI_Gather` passes uniform counts/displs).
+#[allow(clippy::too_many_arguments)]
+pub fn gatherv(
+    comm: &Comm,
+    sbuf: &[u8],
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: Option<&mut [u8]>,
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+    root: usize,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let mut sb = SchedBuilder::new();
+    if r != root {
+        let stage = sb.alloc(sdtype.size() * scount);
+        sb.pack_user(sbuf, scount, sdtype, stage);
+        sb.barrier_round();
+        sb.send(w(comm, root), stage);
+    } else {
+        let rb = rbuf.expect("root must supply a receive buffer");
+        let slots: Vec<ArenaRange> = (0..p).map(|i| sb.alloc(rdtype.size() * rcounts[i])).collect();
+        sb.pack_user(sbuf, scount, sdtype, slots[r]);
+        sb.barrier_round();
+        for i in 0..p {
+            if i != r {
+                sb.recv(w(comm, i), slots[i]);
+            }
+        }
+        sb.barrier_round();
+        for i in 0..p {
+            let need = rdtype.extent() as usize * rcounts[i].saturating_sub(1)
+                + rdtype.map().true_extent() as usize * usize::from(rcounts[i] > 0);
+            let dst = unsafe { subbuf_mut(rb, rdispls_bytes[i], need) };
+            sb.unpack_user_raw(slots[i], dst, rcounts[i], rdtype);
+        }
+    }
+    sb.finish()
+}
+
+/// Linear scatter with per-rank counts and byte displacements
+/// (`MPI_Scatterv`).
+#[allow(clippy::too_many_arguments)]
+pub fn scatterv(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    scounts: &[usize],
+    sdispls_bytes: &[usize],
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcount: usize,
+    rdtype: &Datatype,
+    root: usize,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let mut sb = SchedBuilder::new();
+    if r != root {
+        let stage = sb.alloc(rdtype.size() * rcount);
+        sb.recv(w(comm, root), stage);
+        sb.barrier_round();
+        sb.unpack_user(stage, rbuf, rcount, rdtype);
+    } else {
+        let s = sbuf.expect("root must supply a send buffer");
+        let slots: Vec<ArenaRange> = (0..p).map(|i| sb.alloc(sdtype.size() * scounts[i])).collect();
+        for i in 0..p {
+            let need = sdtype.extent() as usize * scounts[i].saturating_sub(1)
+                + sdtype.map().true_extent() as usize * usize::from(scounts[i] > 0);
+            sb.pack_user_raw(subbuf(s, sdispls_bytes[i], need), scounts[i], sdtype, slots[i]);
+        }
+        sb.barrier_round();
+        for i in 0..p {
+            if i != r {
+                sb.send(w(comm, i), slots[i]);
+            }
+        }
+        sb.unpack_user(slots[r], rbuf, rcount, rdtype);
+    }
+    sb.finish()
+}
+
+// ---------------- allgather / alltoall ----------------
+
+/// Ring allgather with per-rank counts (`MPI_Allgatherv`; `MPI_Allgather`
+/// passes uniform counts).
+#[allow(clippy::too_many_arguments)]
+pub fn allgatherv(
+    comm: &Comm,
+    sbuf: Option<&[u8]>, // None = IN_PLACE (own block already in rbuf)
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let mut sb = SchedBuilder::new();
+    let slots: Vec<ArenaRange> = (0..p).map(|i| sb.alloc(rdtype.size() * rcounts[i])).collect();
+    match sbuf {
+        Some(s) => sb.pack_user(s, scount, sdtype, slots[r]),
+        None => {
+            let need = slot_span(rdtype, rcounts[r]);
+            sb.pack_user_raw(subbuf(rbuf, rdispls_bytes[r], need), rcounts[r], rdtype, slots[r]);
+        }
+    }
+    sb.barrier_round();
+    if p > 1 {
+        let right = w(comm, (r + 1) % p);
+        let left = w(comm, (r + p - 1) % p);
+        for t in 0..p - 1 {
+            let send_slot = (r + p - t) % p;
+            let recv_slot = (r + p - t - 1) % p;
+            sb.send(right, slots[send_slot]);
+            sb.recv(left, slots[recv_slot]);
+            sb.barrier_round();
+        }
+    }
+    for i in 0..p {
+        let need = slot_span(rdtype, rcounts[i]);
+        let dst = unsafe { subbuf_mut(rbuf, rdispls_bytes[i], need) };
+        sb.unpack_user_raw(slots[i], dst, rcounts[i], rdtype);
+    }
+    sb.finish()
+}
+
+fn slot_span(dtype: &Datatype, count: usize) -> usize {
+    if count == 0 {
+        0
+    } else {
+        dtype.extent() as usize * (count - 1) + dtype.map().true_extent() as usize
+    }
+}
+
+/// Rotation alltoall with per-pair counts and byte displacements
+/// (`MPI_Alltoallv`; `MPI_Alltoall` passes uniform). One send+recv per
+/// round, p-1 rounds.
+#[allow(clippy::too_many_arguments)]
+pub fn alltoallv(
+    comm: &Comm,
+    sbuf: &[u8],
+    scounts: &[usize],
+    sdispls_bytes: &[usize],
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let mut sb = SchedBuilder::new();
+    let sslots: Vec<ArenaRange> = (0..p).map(|i| sb.alloc(sdtype.size() * scounts[i])).collect();
+    let rslots: Vec<ArenaRange> = (0..p).map(|i| sb.alloc(rdtype.size() * rcounts[i])).collect();
+    for i in 0..p {
+        let need = slot_span(sdtype, scounts[i]);
+        sb.pack_user_raw(subbuf(sbuf, sdispls_bytes[i], need), scounts[i], sdtype, sslots[i]);
+    }
+    sb.barrier_round();
+    // Own block.
+    if sslots[r].len == rslots[r].len {
+        sb.copy(sslots[r], rslots[r]);
+    }
+    sb.barrier_round();
+    for t in 1..p {
+        let dst = (r + t) % p;
+        let src = (r + p - t) % p;
+        sb.send(w(comm, dst), sslots[dst]);
+        sb.recv(w(comm, src), rslots[src]);
+        sb.barrier_round();
+    }
+    for i in 0..p {
+        let need = slot_span(rdtype, rcounts[i]);
+        let dst = unsafe { subbuf_mut(rbuf, rdispls_bytes[i], need) };
+        sb.unpack_user_raw(rslots[i], dst, rcounts[i], rdtype);
+    }
+    sb.finish()
+}
+
+/// `MPI_Alltoallw`: per-pair datatypes and counts, displacements in bytes.
+#[allow(clippy::too_many_arguments)]
+pub fn alltoallw(
+    comm: &Comm,
+    sbuf: &[u8],
+    scounts: &[usize],
+    sdispls_bytes: &[usize],
+    sdtypes: &[Datatype],
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtypes: &[Datatype],
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let mut sb = SchedBuilder::new();
+    let sslots: Vec<ArenaRange> =
+        (0..p).map(|i| sb.alloc(sdtypes[i].size() * scounts[i])).collect();
+    let rslots: Vec<ArenaRange> =
+        (0..p).map(|i| sb.alloc(rdtypes[i].size() * rcounts[i])).collect();
+    for i in 0..p {
+        let need = slot_span(&sdtypes[i], scounts[i]);
+        sb.pack_user_raw(subbuf(sbuf, sdispls_bytes[i], need), scounts[i], &sdtypes[i], sslots[i]);
+    }
+    sb.barrier_round();
+    if sslots[r].len == rslots[r].len {
+        sb.copy(sslots[r], rslots[r]);
+    }
+    sb.barrier_round();
+    for t in 1..p {
+        let dst = (r + t) % p;
+        let src = (r + p - t) % p;
+        sb.send(w(comm, dst), sslots[dst]);
+        sb.recv(w(comm, src), rslots[src]);
+        sb.barrier_round();
+    }
+    for i in 0..p {
+        let need = slot_span(&rdtypes[i], rcounts[i]);
+        let dst = unsafe { subbuf_mut(rbuf, rdispls_bytes[i], need) };
+        sb.unpack_user_raw(rslots[i], dst, rcounts[i], &rdtypes[i]);
+    }
+    sb.finish()
+}
+
+// ---------------- scan / exscan ----------------
+
+/// Inclusive or exclusive prefix reduction; order-correct for
+/// non-commutative ops (incoming partials are always the left operand).
+pub fn scan(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    exclusive: bool,
+) -> Schedule {
+    let (r, p) = (comm.rank(), comm.size());
+    let n = dtype.size() * count;
+    let mut sb = SchedBuilder::new();
+    let result = sb.alloc(n);
+    let partial = sb.alloc(n);
+    let tmp = sb.alloc(n);
+    match sbuf {
+        Some(s) => sb.pack_user(s, count, dtype, partial),
+        None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), count, dtype, partial),
+    }
+    if !exclusive {
+        sb.copy(partial, result);
+    }
+    sb.barrier_round();
+    let mut m = 1usize;
+    let mut first_recv = true;
+    while m < p {
+        if r + m < p {
+            sb.send(w(comm, r + m), partial);
+        }
+        if r >= m {
+            sb.recv(w(comm, r - m), tmp);
+            sb.barrier_round();
+            // partial = tmp OP partial (tmp from lower ranks = left).
+            sb.reduce(tmp, partial, count);
+            if exclusive && first_recv {
+                sb.copy(tmp, result);
+                first_recv = false;
+            } else {
+                // result = tmp OP result — but careful: `reduce` updates in
+                // place; for the exclusive first case we copied instead.
+                sb.reduce(tmp, result, count);
+            }
+            sb.barrier_round();
+        } else {
+            sb.barrier_round();
+        }
+        m <<= 1;
+    }
+    // Rank 0's exclusive-scan result is undefined by the standard; we
+    // leave rbuf untouched there.
+    if !(exclusive && r == 0) {
+        sb.unpack_user(result, rbuf, count, dtype);
+    }
+    sb.finish()
+}
+
+// ---------------- reduce_scatter ----------------
+
+/// Reduce to rank 0 (ordered or binomial per op) followed by scatterv of
+/// the reduced vector.
+pub fn reduce_scatter(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<Schedule> {
+    let (r, p) = (comm.rank(), comm.size());
+    let total: usize = rcounts.iter().sum();
+    let esz = dtype.size();
+    let n = esz * total;
+    let root = 0usize;
+    let mut sb = SchedBuilder::new();
+
+    // Phase 1: reduce the full vector to root (binomial, commutative; the
+    // non-commutative case uses the ordered fold).
+    let acc = sb.alloc(n);
+    let tmp = sb.alloc(n);
+    match sbuf {
+        Some(s) => sb.pack_user(s, total, dtype, acc),
+        None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), total, dtype, acc),
+    }
+    sb.barrier_round();
+    if op.is_commutative() {
+        let mut m = 1usize;
+        while m < p {
+            if r & m != 0 {
+                sb.send(w(comm, r - m), acc);
+                sb.barrier_round();
+                break;
+            } else if r + m < p {
+                sb.recv(w(comm, r + m), tmp);
+                sb.barrier_round();
+                sb.reduce(tmp, acc, total);
+                sb.barrier_round();
+            }
+            m <<= 1;
+        }
+    } else {
+        // Ordered: everyone ships to root; root folds in rank order.
+        if r != root {
+            sb.send(w(comm, root), acc);
+            sb.barrier_round();
+        } else {
+            let slots: Vec<ArenaRange> = (0..p).map(|_| sb.alloc(n)).collect();
+            sb.copy(acc, slots[0]);
+            sb.barrier_round();
+            for i in 1..p {
+                sb.recv(w(comm, i), slots[i]);
+            }
+            sb.barrier_round();
+            for i in 0..p - 1 {
+                sb.reduce(slots[i], slots[i + 1], total);
+                sb.barrier_round();
+            }
+            sb.copy(slots[p - 1], acc);
+            sb.barrier_round();
+        }
+    }
+
+    // Phase 2: scatter chunk i (rcounts[i] elements) to rank i.
+    let my_n = esz * rcounts[r];
+    let offset_of = |i: usize| -> usize { esz * rcounts[..i].iter().sum::<usize>() };
+    if r == root {
+        for i in 0..p {
+            let chunk = ArenaRange { off: acc.off + offset_of(i), len: esz * rcounts[i] };
+            if i == root {
+                sb.unpack_user(chunk, rbuf, rcounts[r], dtype);
+            } else {
+                sb.send(w(comm, i), chunk);
+            }
+        }
+    } else {
+        let stage = sb.alloc(my_n);
+        sb.recv(w(comm, root), stage);
+        sb.barrier_round();
+        sb.unpack_user(stage, rbuf, rcounts[r], dtype);
+    }
+    Ok(sb.finish())
+}

@@ -1,0 +1,85 @@
+//! Collective algorithm selection knobs. These are process-global control
+//! variables, surfaced through the tool (`MPI_T`) interface as cvars and
+//! swept by the A4 ablation benchmark.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BcastAlg {
+    Binomial = 0,
+    Linear = 1,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllreduceAlg {
+    RecursiveDoubling = 0,
+    Ring = 1,
+    ReduceBcast = 2,
+}
+
+static BCAST_ALG: AtomicU8 = AtomicU8::new(0);
+static ALLREDUCE_ALG: AtomicU8 = AtomicU8::new(0);
+
+pub fn bcast_alg() -> BcastAlg {
+    match BCAST_ALG.load(Ordering::Relaxed) {
+        1 => BcastAlg::Linear,
+        _ => BcastAlg::Binomial,
+    }
+}
+
+pub fn set_bcast_alg(a: BcastAlg) {
+    BCAST_ALG.store(a as u8, Ordering::Relaxed);
+}
+
+pub fn allreduce_alg() -> AllreduceAlg {
+    match ALLREDUCE_ALG.load(Ordering::Relaxed) {
+        1 => AllreduceAlg::Ring,
+        2 => AllreduceAlg::ReduceBcast,
+        _ => AllreduceAlg::RecursiveDoubling,
+    }
+}
+
+pub fn set_allreduce_alg(a: AllreduceAlg) {
+    ALLREDUCE_ALG.store(a as u8, Ordering::Relaxed);
+}
+
+/// Parse from a cvar string value.
+pub fn parse_bcast_alg(s: &str) -> Option<BcastAlg> {
+    match s {
+        "binomial" => Some(BcastAlg::Binomial),
+        "linear" => Some(BcastAlg::Linear),
+        _ => None,
+    }
+}
+
+pub fn parse_allreduce_alg(s: &str) -> Option<AllreduceAlg> {
+    match s {
+        "recursive_doubling" => Some(AllreduceAlg::RecursiveDoubling),
+        "ring" => Some(AllreduceAlg::Ring),
+        "reduce_bcast" => Some(AllreduceAlg::ReduceBcast),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_settings() {
+        set_bcast_alg(BcastAlg::Linear);
+        assert_eq!(bcast_alg(), BcastAlg::Linear);
+        set_bcast_alg(BcastAlg::Binomial);
+        assert_eq!(bcast_alg(), BcastAlg::Binomial);
+        set_allreduce_alg(AllreduceAlg::Ring);
+        assert_eq!(allreduce_alg(), AllreduceAlg::Ring);
+        set_allreduce_alg(AllreduceAlg::RecursiveDoubling);
+    }
+
+    #[test]
+    fn parsing() {
+        assert_eq!(parse_bcast_alg("linear"), Some(BcastAlg::Linear));
+        assert_eq!(parse_allreduce_alg("ring"), Some(AllreduceAlg::Ring));
+        assert_eq!(parse_allreduce_alg("nope"), None);
+    }
+}

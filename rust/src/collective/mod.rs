@@ -1,0 +1,451 @@
+//! Collective operations (MPI-4.0 §6): blocking and nonblocking variants
+//! of barrier, bcast, gather(v), scatter(v), allgather(v), alltoall(v,w),
+//! reduce, allreduce, reduce_scatter(+_block), scan and exscan — all
+//! expressed as round-based schedules over the p2p engine (see
+//! [`schedule`]), so the `i*` variants are the same code wrapped in a
+//! request.
+
+pub mod builders;
+pub mod config;
+pub mod schedule;
+
+pub use config::{AllreduceAlg, BcastAlg};
+
+use crate::comm::Comm;
+use crate::datatype::Datatype;
+use crate::op::Op;
+use crate::request::Request;
+use crate::Result;
+use schedule::{run_blocking, run_nonblocking, CollState, Schedule};
+use std::rc::Rc;
+
+fn state(comm: &Comm, dtype: &Datatype, op: Option<Op>, sched: Schedule, name: &'static str) -> Rc<CollState> {
+    CollState::new(
+        comm.rank_ctx().clone(),
+        comm.ctx_coll(),
+        comm.group().clone(),
+        dtype.clone(),
+        op,
+        sched,
+        name,
+    )
+}
+
+fn byte() -> Datatype {
+    Datatype::primitive(crate::datatype::Primitive::Byte)
+}
+
+/// Uniform byte displacements `i * count * extent` used to lower the
+/// non-v collectives onto the v builders.
+fn uniform(comm: &Comm, count: usize, dtype: &Datatype) -> (Vec<usize>, Vec<usize>) {
+    let p = comm.size();
+    let stride = count * dtype.extent() as usize;
+    ((0..p).map(|_| count).collect(), (0..p).map(|i| i * stride).collect())
+}
+
+// ---------------- barrier ----------------
+
+/// `MPI_Barrier`.
+pub fn barrier(comm: &Comm) -> Result<()> {
+    let d = byte();
+    run_blocking(state(comm, &d, None, builders::barrier(comm), "barrier"))
+}
+
+/// `MPI_Ibarrier`.
+pub fn ibarrier(comm: &Comm) -> Result<Request> {
+    let d = byte();
+    Ok(run_nonblocking(state(comm, &d, None, builders::barrier(comm), "ibarrier")))
+}
+
+// ---------------- bcast ----------------
+
+/// `MPI_Bcast`.
+pub fn bcast(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Result<()> {
+    dtype.require_committed()?;
+    let sched = builders::bcast(comm, buf, count, dtype, root, config::bcast_alg());
+    run_blocking(state(comm, dtype, None, sched, "bcast"))
+}
+
+/// `MPI_Ibcast`.
+pub fn ibcast(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Result<Request> {
+    dtype.require_committed()?;
+    let sched = builders::bcast(comm, buf, count, dtype, root, config::bcast_alg());
+    Ok(run_nonblocking(state(comm, dtype, None, sched, "ibcast")))
+}
+
+// ---------------- reduce / allreduce ----------------
+
+/// `MPI_Reduce`. `sbuf = None` is `MPI_IN_PLACE` (root's contribution is
+/// in `rbuf`). Non-root ranks may pass `rbuf = None`.
+pub fn reduce(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: Option<&mut [u8]>,
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+    root: usize,
+) -> Result<()> {
+    dtype.require_committed()?;
+    let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root)?;
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "reduce"))
+}
+
+/// `MPI_Ireduce`.
+pub fn ireduce(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: Option<&mut [u8]>,
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+    root: usize,
+) -> Result<Request> {
+    dtype.require_committed()?;
+    let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root)?;
+    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "ireduce")))
+}
+
+/// `MPI_Allreduce`. `sbuf = None` is `MPI_IN_PLACE`.
+pub fn allreduce(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<()> {
+    dtype.require_committed()?;
+    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, config::allreduce_alg());
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "allreduce"))
+}
+
+/// `MPI_Iallreduce`.
+pub fn iallreduce(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<Request> {
+    dtype.require_committed()?;
+    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, config::allreduce_alg());
+    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "iallreduce")))
+}
+
+// ---------------- gather / scatter ----------------
+
+/// `MPI_Gather` (uniform counts).
+#[allow(clippy::too_many_arguments)]
+pub fn gather(
+    comm: &Comm,
+    sbuf: &[u8],
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: Option<&mut [u8]>,
+    rcount: usize,
+    rdtype: &Datatype,
+    root: usize,
+) -> Result<()> {
+    sdtype.require_committed()?;
+    let (counts, displs) = uniform(comm, rcount, rdtype);
+    gatherv(comm, sbuf, scount, sdtype, rbuf, &counts, &displs, rdtype, root)
+}
+
+/// `MPI_Gatherv` (displacements in **bytes** into the root's recv buffer).
+#[allow(clippy::too_many_arguments)]
+pub fn gatherv(
+    comm: &Comm,
+    sbuf: &[u8],
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: Option<&mut [u8]>,
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+    root: usize,
+) -> Result<()> {
+    sdtype.require_committed()?;
+    let sched =
+        builders::gatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype, root);
+    run_blocking(state(comm, sdtype, None, sched, "gatherv"))
+}
+
+/// `MPI_Igatherv`.
+#[allow(clippy::too_many_arguments)]
+pub fn igatherv(
+    comm: &Comm,
+    sbuf: &[u8],
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: Option<&mut [u8]>,
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+    root: usize,
+) -> Result<Request> {
+    sdtype.require_committed()?;
+    let sched =
+        builders::gatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype, root);
+    Ok(run_nonblocking(state(comm, sdtype, None, sched, "igatherv")))
+}
+
+/// `MPI_Scatter` (uniform counts).
+#[allow(clippy::too_many_arguments)]
+pub fn scatter(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcount: usize,
+    rdtype: &Datatype,
+    root: usize,
+) -> Result<()> {
+    rdtype.require_committed()?;
+    let (counts, displs) = uniform(comm, scount, sdtype);
+    scatterv(comm, sbuf, &counts, &displs, sdtype, rbuf, rcount, rdtype, root)
+}
+
+/// `MPI_Scatterv` (displacements in bytes into the root's send buffer).
+#[allow(clippy::too_many_arguments)]
+pub fn scatterv(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    scounts: &[usize],
+    sdispls_bytes: &[usize],
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcount: usize,
+    rdtype: &Datatype,
+    root: usize,
+) -> Result<()> {
+    rdtype.require_committed()?;
+    let sched =
+        builders::scatterv(comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcount, rdtype, root);
+    run_blocking(state(comm, rdtype, None, sched, "scatterv"))
+}
+
+/// `MPI_Iscatterv`.
+#[allow(clippy::too_many_arguments)]
+pub fn iscatterv(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    scounts: &[usize],
+    sdispls_bytes: &[usize],
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcount: usize,
+    rdtype: &Datatype,
+    root: usize,
+) -> Result<Request> {
+    rdtype.require_committed()?;
+    let sched =
+        builders::scatterv(comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcount, rdtype, root);
+    Ok(run_nonblocking(state(comm, rdtype, None, sched, "iscatterv")))
+}
+
+// ---------------- allgather / alltoall ----------------
+
+/// `MPI_Allgather`.
+#[allow(clippy::too_many_arguments)]
+pub fn allgather(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcount: usize,
+    rdtype: &Datatype,
+) -> Result<()> {
+    rdtype.require_committed()?;
+    let (counts, displs) = uniform(comm, rcount, rdtype);
+    allgatherv(comm, sbuf, scount, sdtype, rbuf, &counts, &displs, rdtype)
+}
+
+/// `MPI_Allgatherv`.
+#[allow(clippy::too_many_arguments)]
+pub fn allgatherv(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+) -> Result<()> {
+    rdtype.require_committed()?;
+    let sched =
+        builders::allgatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype);
+    run_blocking(state(comm, rdtype, None, sched, "allgatherv"))
+}
+
+/// `MPI_Iallgatherv`.
+#[allow(clippy::too_many_arguments)]
+pub fn iallgatherv(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+) -> Result<Request> {
+    rdtype.require_committed()?;
+    let sched =
+        builders::allgatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype);
+    Ok(run_nonblocking(state(comm, rdtype, None, sched, "iallgatherv")))
+}
+
+/// `MPI_Alltoall` (uniform counts).
+#[allow(clippy::too_many_arguments)]
+pub fn alltoall(
+    comm: &Comm,
+    sbuf: &[u8],
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcount: usize,
+    rdtype: &Datatype,
+) -> Result<()> {
+    rdtype.require_committed()?;
+    let (scounts, sdispls) = uniform(comm, scount, sdtype);
+    let (rcounts, rdispls) = uniform(comm, rcount, rdtype);
+    alltoallv(comm, sbuf, &scounts, &sdispls, sdtype, rbuf, &rcounts, &rdispls, rdtype)
+}
+
+/// `MPI_Alltoallv` (displacements in bytes).
+#[allow(clippy::too_many_arguments)]
+pub fn alltoallv(
+    comm: &Comm,
+    sbuf: &[u8],
+    scounts: &[usize],
+    sdispls_bytes: &[usize],
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+) -> Result<()> {
+    rdtype.require_committed()?;
+    let sched = builders::alltoallv(
+        comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcounts, rdispls_bytes, rdtype,
+    );
+    run_blocking(state(comm, rdtype, None, sched, "alltoallv"))
+}
+
+/// `MPI_Ialltoallv`.
+#[allow(clippy::too_many_arguments)]
+pub fn ialltoallv(
+    comm: &Comm,
+    sbuf: &[u8],
+    scounts: &[usize],
+    sdispls_bytes: &[usize],
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtype: &Datatype,
+) -> Result<Request> {
+    rdtype.require_committed()?;
+    let sched = builders::alltoallv(
+        comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcounts, rdispls_bytes, rdtype,
+    );
+    Ok(run_nonblocking(state(comm, rdtype, None, sched, "ialltoallv")))
+}
+
+/// `MPI_Alltoallw` (per-pair datatypes, byte displacements).
+#[allow(clippy::too_many_arguments)]
+pub fn alltoallw(
+    comm: &Comm,
+    sbuf: &[u8],
+    scounts: &[usize],
+    sdispls_bytes: &[usize],
+    sdtypes: &[Datatype],
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    rdispls_bytes: &[usize],
+    rdtypes: &[Datatype],
+) -> Result<()> {
+    for t in sdtypes.iter().chain(rdtypes) {
+        t.require_committed()?;
+    }
+    let sched = builders::alltoallw(
+        comm, sbuf, scounts, sdispls_bytes, sdtypes, rbuf, rcounts, rdispls_bytes, rdtypes,
+    );
+    run_blocking(state(comm, &byte(), None, sched, "alltoallw"))
+}
+
+// ---------------- scan / exscan / reduce_scatter ----------------
+
+/// `MPI_Scan` (inclusive prefix).
+pub fn scan(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<()> {
+    dtype.require_committed()?;
+    let sched = builders::scan(comm, sbuf, rbuf, count, dtype, false);
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "scan"))
+}
+
+/// `MPI_Exscan` (exclusive prefix; rank 0's output is undefined).
+pub fn exscan(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<()> {
+    dtype.require_committed()?;
+    let sched = builders::scan(comm, sbuf, rbuf, count, dtype, true);
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "exscan"))
+}
+
+/// `MPI_Iscan`.
+pub fn iscan(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<Request> {
+    dtype.require_committed()?;
+    let sched = builders::scan(comm, sbuf, rbuf, count, dtype, false);
+    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "iscan")))
+}
+
+/// `MPI_Reduce_scatter` (per-rank result counts).
+pub fn reduce_scatter(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    rcounts: &[usize],
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<()> {
+    dtype.require_committed()?;
+    let sched = builders::reduce_scatter(comm, sbuf, rbuf, rcounts, dtype, op)?;
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "reduce_scatter"))
+}
+
+/// `MPI_Reduce_scatter_block` (uniform count per rank).
+pub fn reduce_scatter_block(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    rcount: usize,
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<()> {
+    let counts = vec![rcount; comm.size()];
+    reduce_scatter(comm, sbuf, rbuf, &counts, dtype, op)
+}

@@ -1,0 +1,388 @@
+//! The round-based collective execution engine (libNBC-style).
+//!
+//! Every collective — blocking or nonblocking — is expressed as a
+//! [`Schedule`]: a sequence of *rounds*, each a set of steps (sends,
+//! receives, local copies/reductions, user-buffer pack/unpack). A round
+//! only starts when every transfer of the previous round has completed.
+//! Blocking collectives drive the schedule to completion inside the call;
+//! nonblocking ones wrap it in a request and the progress engine turns it.
+//!
+//! Wire data lives in a per-operation *arena* (allocated once, never
+//! reallocated, so raw-pointer ranges into it stay valid). All arena data
+//! is in packed wire format; `PackUser`/`UnpackUser` convert at the edges.
+
+use crate::datatype::{pack_into, unpack, Datatype};
+use crate::group::Group;
+use crate::op::Op;
+use crate::p2p::{self, engine, Progressable, RankCtx, RawBuf, RawBufMut, SendMode, Status};
+use crate::request::CustomRequest;
+use crate::{mpi_err, MpiError, Result};
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+/// A byte range in the operation's arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaRange {
+    pub off: usize,
+    pub len: usize,
+}
+
+/// One step of a round. Peers are *world* ranks (translated at build
+/// time). `tag_off` disambiguates multiple same-peer transfers in a round
+/// (both sides must assign matching offsets).
+#[derive(Debug)]
+pub enum Step {
+    Send { peer_world: usize, from: ArenaRange, tag_off: u8 },
+    Recv { peer_world: usize, into: ArenaRange, tag_off: u8 },
+    Copy { from: ArenaRange, to: ArenaRange },
+    /// `into = from OP into` over `count` packed elements.
+    Reduce { from: ArenaRange, into: ArenaRange, count: usize },
+    PackUser { src: RawBuf, count: usize, dtype: Datatype, to: ArenaRange },
+    UnpackUser { from: ArenaRange, dst: RawBufMut, count: usize, dtype: Datatype },
+}
+
+/// A built schedule plus its arena requirement.
+#[derive(Debug, Default)]
+pub struct Schedule {
+    pub rounds: Vec<Vec<Step>>,
+    pub arena_size: usize,
+}
+
+/// Builder helper used by the per-collective algorithms.
+#[derive(Debug, Default)]
+pub struct SchedBuilder {
+    rounds: Vec<Vec<Step>>,
+    arena_size: usize,
+    current: Vec<Step>,
+}
+
+impl SchedBuilder {
+    pub fn new() -> SchedBuilder {
+        SchedBuilder::default()
+    }
+
+    /// Reserve `len` arena bytes.
+    pub fn alloc(&mut self, len: usize) -> ArenaRange {
+        let off = self.arena_size;
+        self.arena_size += len;
+        ArenaRange { off, len }
+    }
+
+    /// Close the current round (no-op if empty).
+    pub fn barrier_round(&mut self) {
+        if !self.current.is_empty() {
+            self.rounds.push(std::mem::take(&mut self.current));
+        }
+    }
+
+    pub fn step(&mut self, s: Step) {
+        self.current.push(s);
+    }
+
+    pub fn send(&mut self, peer_world: usize, from: ArenaRange) {
+        self.step(Step::Send { peer_world, from, tag_off: 0 });
+    }
+
+    pub fn send_tagged(&mut self, peer_world: usize, from: ArenaRange, tag_off: u8) {
+        self.step(Step::Send { peer_world, from, tag_off });
+    }
+
+    pub fn recv(&mut self, peer_world: usize, into: ArenaRange) {
+        self.step(Step::Recv { peer_world, into, tag_off: 0 });
+    }
+
+    pub fn recv_tagged(&mut self, peer_world: usize, into: ArenaRange, tag_off: u8) {
+        self.step(Step::Recv { peer_world, into, tag_off });
+    }
+
+    pub fn copy(&mut self, from: ArenaRange, to: ArenaRange) {
+        self.step(Step::Copy { from, to });
+    }
+
+    pub fn reduce(&mut self, from: ArenaRange, into: ArenaRange, count: usize) {
+        self.step(Step::Reduce { from, into, count });
+    }
+
+    pub fn pack_user(&mut self, src: &[u8], count: usize, dtype: &Datatype, to: ArenaRange) {
+        self.step(Step::PackUser { src: RawBuf::from_slice(src), count, dtype: dtype.clone(), to });
+    }
+
+    pub fn unpack_user(&mut self, from: ArenaRange, dst: &mut [u8], count: usize, dtype: &Datatype) {
+        self.step(Step::UnpackUser { from, dst: RawBufMut::from_slice(dst), count, dtype: dtype.clone() });
+    }
+
+    /// Capture-based variants for disjoint sub-buffers the borrow checker
+    /// cannot see through (gatherv/scatterv displacements).
+    pub fn pack_user_raw(&mut self, src: RawBuf, count: usize, dtype: &Datatype, to: ArenaRange) {
+        self.step(Step::PackUser { src, count, dtype: dtype.clone(), to });
+    }
+
+    pub fn unpack_user_raw(&mut self, from: ArenaRange, dst: RawBufMut, count: usize, dtype: &Datatype) {
+        self.step(Step::UnpackUser { from, dst, count, dtype: dtype.clone() });
+    }
+
+    pub fn finish(mut self) -> Schedule {
+        self.barrier_round();
+        Schedule { rounds: self.rounds, arena_size: self.arena_size }
+    }
+}
+
+/// Executing state of one collective operation. Implements both
+/// [`Progressable`] (so the engine turns it) and [`CustomRequest`] (so a
+/// nonblocking collective is an ordinary request).
+pub struct CollState {
+    ctx: Rc<RankCtx>,
+    ctx_coll: u32,
+    base_tag: i32,
+    group: Group,
+    dtype: Datatype,
+    op: Option<Op>,
+    schedule: Schedule,
+    arena: RefCell<Vec<u8>>,
+    round: Cell<usize>,
+    outstanding_sends: RefCell<Vec<u64>>,
+    outstanding_recvs: RefCell<Vec<u64>>,
+    done: Cell<bool>,
+    error: RefCell<Option<MpiError>>,
+    /// Label for diagnostics ("bcast", "allreduce", ...).
+    pub name: &'static str,
+}
+
+/// How many distinct tag offsets a round may use.
+const TAG_SPACE: i64 = 64;
+
+impl CollState {
+    pub fn new(
+        ctx: Rc<RankCtx>,
+        ctx_coll: u32,
+        group: Group,
+        dtype: Datatype,
+        op: Option<Op>,
+        schedule: Schedule,
+        name: &'static str,
+    ) -> Rc<CollState> {
+        let seq = ctx.next_coll_seq(ctx_coll);
+        ctx.counters.collectives_started.set(ctx.counters.collectives_started.get() + 1);
+        let base_tag = ((seq as i64 * TAG_SPACE) % (crate::comm::TAG_UB as i64)) as i32;
+        let arena = vec![0u8; schedule.arena_size];
+        Rc::new(CollState {
+            ctx,
+            ctx_coll,
+            base_tag,
+            group,
+            dtype,
+            op,
+            schedule,
+            arena: RefCell::new(arena),
+            round: Cell::new(0),
+            outstanding_sends: RefCell::new(Vec::new()),
+            outstanding_recvs: RefCell::new(Vec::new()),
+            done: Cell::new(false),
+            error: RefCell::new(None),
+            name,
+        })
+    }
+
+    fn tag(&self, off: u8) -> i32 {
+        self.base_tag + off as i32
+    }
+
+    pub fn finished(&self) -> bool {
+        self.done.get() || self.error.borrow().is_some()
+    }
+
+    pub fn take_result(&self) -> Result<()> {
+        match self.error.borrow_mut().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Execute one step. Transfers are posted (tokens recorded); local
+    /// steps run immediately.
+    fn exec_step(&self, step: &Step) -> Result<()> {
+        let byte = Datatype::primitive(crate::datatype::Primitive::Byte);
+        match step {
+            Step::Send { peer_world, from, tag_off } => {
+                let arena = self.arena.borrow();
+                let data = &arena[from.off..from.off + from.len];
+                let token = engine::start_send(
+                    &self.ctx,
+                    p2p::SendParams {
+                        ctx_id: self.ctx_coll,
+                        dst_world: *peer_world,
+                        tag: self.tag(*tag_off),
+                        buf: data,
+                        count: from.len,
+                        dtype: &byte,
+                        mode: SendMode::Standard,
+                    },
+                )?;
+                drop(arena);
+                if let Some(t) = token {
+                    self.outstanding_sends.borrow_mut().push(t);
+                }
+            }
+            Step::Recv { peer_world, into, tag_off } => {
+                // Raw pointer into the fixed-size arena; delivery happens on
+                // this same thread with no arena borrow held.
+                let buf = {
+                    let mut arena = self.arena.borrow_mut();
+                    let slice = &mut arena[into.off..into.off + into.len];
+                    RawBufMut::from_slice(slice)
+                };
+                let token = engine::post_recv(
+                    &self.ctx,
+                    self.ctx_coll,
+                    Some(*peer_world),
+                    Some(self.tag(*tag_off)),
+                    buf,
+                    into.len,
+                    byte,
+                    self.group.clone(),
+                )?;
+                self.outstanding_recvs.borrow_mut().push(token);
+            }
+            Step::Copy { from, to } => {
+                if from.len != to.len {
+                    return Err(mpi_err!(Intern, "schedule copy length mismatch"));
+                }
+                let mut arena = self.arena.borrow_mut();
+                arena.copy_within(from.off..from.off + from.len, to.off);
+            }
+            Step::Reduce { from, into, count } => {
+                let op = self
+                    .op
+                    .as_ref()
+                    .ok_or_else(|| mpi_err!(Intern, "reduce step without an op"))?;
+                let mut arena = self.arena.borrow_mut();
+                // Split-borrow the two ranges.
+                let (a, b) = split_ranges(&mut arena, *from, *into)?;
+                op.apply(self.dtype.map(), a, b, *count)?;
+            }
+            Step::PackUser { src, count, dtype, to } => {
+                // Pack straight into the arena (perf pass: saves an
+                // alloc+copy per pack step — see EXPERIMENTS.md §Perf).
+                let mut arena = self.arena.borrow_mut();
+                pack_into(dtype.map(), unsafe { src.as_slice() }, *count, &mut arena[to.off..to.off + to.len])?;
+            }
+            Step::UnpackUser { from, dst, count, dtype } => {
+                let arena = self.arena.borrow();
+                let wire = &arena[from.off..from.off + from.len];
+                unpack(dtype.map(), wire, unsafe { dst.as_slice_mut() }, *count)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Core progression: returns true when the whole schedule completed.
+    fn turn(&self) -> Result<bool> {
+        if self.done.get() {
+            return Ok(true);
+        }
+        loop {
+            // Outstanding transfers of the in-flight round.
+            {
+                let mut sends = self.outstanding_sends.borrow_mut();
+                sends.retain(|&t| !engine::take_send_done(&self.ctx, t));
+                if !sends.is_empty() {
+                    return Ok(false);
+                }
+            }
+            {
+                let mut recvs = self.outstanding_recvs.borrow_mut();
+                let mut err = None;
+                recvs.retain(|&t| {
+                    if engine::recv_done(&self.ctx, t) {
+                        if let Some(Err(e)) = engine::take_recv_result(&self.ctx, t) {
+                            err = Some(e);
+                        }
+                        false
+                    } else {
+                        true
+                    }
+                });
+                if let Some(e) = err {
+                    return Err(e);
+                }
+                if !recvs.is_empty() {
+                    return Ok(false);
+                }
+            }
+            let r = self.round.get();
+            if r >= self.schedule.rounds.len() {
+                self.done.set(true);
+                return Ok(true);
+            }
+            // Post the next round (sends before receives so same-range
+            // exchange patterns read before they are overwritten).
+            let round = &self.schedule.rounds[r];
+            for step in round.iter().filter(|s| matches!(s, Step::Send { .. })) {
+                self.exec_step(step)?;
+            }
+            for step in round.iter().filter(|s| !matches!(s, Step::Send { .. })) {
+                self.exec_step(step)?;
+            }
+            self.round.set(r + 1);
+        }
+    }
+}
+
+/// Split two non-overlapping ranges out of the arena.
+fn split_ranges<'a>(
+    arena: &'a mut [u8],
+    a: ArenaRange,
+    b: ArenaRange,
+) -> Result<(&'a [u8], &'a mut [u8])> {
+    if a.off + a.len <= b.off {
+        let (lo, hi) = arena.split_at_mut(b.off);
+        Ok((&lo[a.off..a.off + a.len], &mut hi[..b.len]))
+    } else if b.off + b.len <= a.off {
+        let (lo, hi) = arena.split_at_mut(a.off);
+        Ok((&hi[..a.len], &mut lo[b.off..b.off + b.len]))
+    } else {
+        Err(mpi_err!(Intern, "overlapping reduce ranges in schedule"))
+    }
+}
+
+impl Progressable for CollState {
+    fn advance(&self, _ctx: &Rc<RankCtx>) -> Result<bool> {
+        if self.finished() {
+            return Ok(true);
+        }
+        match self.turn() {
+            Ok(done) => Ok(done),
+            Err(e) => {
+                *self.error.borrow_mut() = Some(e);
+                Ok(true) // finished (with error); surfaced at take_result
+            }
+        }
+    }
+}
+
+impl CustomRequest for CollState {
+    fn done(&self) -> bool {
+        self.finished()
+    }
+
+    fn take_status(&self) -> Result<Status> {
+        self.take_result().map(|()| Status::empty())
+    }
+}
+
+/// Run a schedule to completion (the blocking collective entry).
+pub fn run_blocking(state: Rc<CollState>) -> Result<()> {
+    let ctx = state.ctx.clone();
+    ctx.register_progressable(state.clone());
+    engine::wait_for(&ctx, || state.finished())?;
+    state.take_result()
+}
+
+/// Wrap a schedule as a nonblocking request.
+pub fn run_nonblocking(state: Rc<CollState>) -> crate::request::Request {
+    let ctx = state.ctx.clone();
+    ctx.register_progressable(state.clone());
+    // Kick it once so single-round local-only schedules complete inline.
+    let _ = state.advance(&ctx);
+    crate::request::Request::custom(ctx, state)
+}

@@ -1,0 +1,73 @@
+//! Communicator attribute caching (MPI-4.0 §7.7): keyvals + attributes.
+//! Attribute values are integers (the C interface's `void*` payloads); the
+//! modern layer stores richer data elsewhere.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+static NEXT_KEYVAL: AtomicU32 = AtomicU32::new(100);
+
+/// `MPI_Comm_create_keyval`: globally unique keys.
+pub fn create_keyval() -> u32 {
+    NEXT_KEYVAL.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Per-communicator attribute store.
+#[derive(Debug, Default)]
+pub struct AttrMap {
+    attrs: HashMap<u32, i64>,
+}
+
+impl AttrMap {
+    /// `MPI_Comm_set_attr`.
+    pub fn set(&mut self, keyval: u32, value: i64) {
+        self.attrs.insert(keyval, value);
+    }
+
+    /// `MPI_Comm_get_attr`.
+    pub fn get(&self, keyval: u32) -> Option<i64> {
+        self.attrs.get(&keyval).copied()
+    }
+
+    /// `MPI_Comm_delete_attr`. Returns whether present.
+    pub fn delete(&mut self, keyval: u32) -> bool {
+        self.attrs.remove(&keyval).is_some()
+    }
+
+    /// Copy-on-dup (`MPI_COMM_DUP_FN` semantics: duplicate everything).
+    pub fn dup(&self) -> AttrMap {
+        AttrMap { attrs: self.attrs.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyvals_unique() {
+        let a = create_keyval();
+        let b = create_keyval();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn set_get_delete() {
+        let mut m = AttrMap::default();
+        let k = create_keyval();
+        assert_eq!(m.get(k), None);
+        m.set(k, 42);
+        assert_eq!(m.get(k), Some(42));
+        assert!(m.delete(k));
+        assert!(!m.delete(k));
+    }
+
+    #[test]
+    fn dup_copies() {
+        let mut m = AttrMap::default();
+        let k = create_keyval();
+        m.set(k, 7);
+        let d = m.dup();
+        assert_eq!(d.get(k), Some(7));
+    }
+}

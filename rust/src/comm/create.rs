@@ -1,0 +1,134 @@
+//! Communicator construction (MPI-4.0 §7.4): dup, split, split_type,
+//! create — all collective over the parent, including the context-id
+//! agreement (allreduce-MAX of each rank's next free id, the classic
+//! MPICH recipe).
+
+use super::Comm;
+use crate::collective;
+use crate::datatype::{Datatype, Primitive};
+use crate::group::Group;
+use crate::op::Op;
+use crate::{mpi_err, Result};
+
+/// `MPI_UNDEFINED` for split colors.
+pub const UNDEFINED: i32 = -32766;
+
+impl Comm {
+    /// Collective agreement on a fresh context-id base: the max of every
+    /// participant's `next_ctx`.
+    fn agree_ctx_base(&self) -> Result<u32> {
+        let u64t = Datatype::primitive(Primitive::U64);
+        let mine = (self.rank_ctx().next_ctx.get() as u64).to_le_bytes();
+        let mut out = [0u8; 8];
+        collective::allreduce(self, Some(&mine), &mut out, 1, &u64t, &Op::MAX)?;
+        Ok(u64::from_le_bytes(out) as u32)
+    }
+
+    /// Reserve the id space consumed by one construction call.
+    fn bump_next_ctx(&self, base: u32) {
+        let w = self.rank_ctx().world_size() as u32;
+        self.rank_ctx().next_ctx.set(base + 2 * w + 2);
+    }
+
+    /// `MPI_Comm_dup`: same group, fresh contexts, attributes copied.
+    pub fn dup(&self) -> Result<Comm> {
+        let base = self.agree_ctx_base()?;
+        self.bump_next_ctx(base);
+        let c = Comm::from_parts(
+            self.rank_ctx().clone(),
+            self.group().clone(),
+            self.rank(),
+            base,
+            format!("{}_dup", self.name()),
+        );
+        *c.attrs().borrow_mut() = self.attrs().borrow().dup();
+        c.set_errhandler(self.errhandler());
+        Ok(c)
+    }
+
+    /// `MPI_Comm_split`. `color = UNDEFINED` (or any negative) opts out and
+    /// yields `None` (`MPI_COMM_NULL`).
+    pub fn split(&self, color: i32, key: i32) -> Result<Option<Comm>> {
+        let p = self.size();
+        let byte = Datatype::primitive(Primitive::Byte);
+        let mut mine = [0u8; 8];
+        mine[..4].copy_from_slice(&color.to_le_bytes());
+        mine[4..].copy_from_slice(&key.to_le_bytes());
+        let mut all = vec![0u8; 8 * p];
+        collective::allgather(self, Some(&mine), 8, &byte, &mut all, 8, &byte)?;
+        let base = self.agree_ctx_base()?;
+        self.bump_next_ctx(base);
+
+        let pairs: Vec<(i32, i32)> = (0..p)
+            .map(|i| {
+                (
+                    i32::from_le_bytes(all[8 * i..8 * i + 4].try_into().unwrap()),
+                    i32::from_le_bytes(all[8 * i + 4..8 * i + 8].try_into().unwrap()),
+                )
+            })
+            .collect();
+        if color < 0 {
+            return Ok(None);
+        }
+        // Distinct participating colors, sorted: the index determines the
+        // context offset deterministically on every rank.
+        let mut colors: Vec<i32> = pairs.iter().map(|&(c, _)| c).filter(|&c| c >= 0).collect();
+        colors.sort_unstable();
+        colors.dedup();
+        let color_idx = colors.binary_search(&color).expect("own color present") as u32;
+
+        // Members of my color, ordered by (key, parent rank).
+        let mut members: Vec<(i32, usize)> = pairs
+            .iter()
+            .enumerate()
+            .filter(|(_, &(c, _))| c == color)
+            .map(|(i, &(_, k))| (k, i))
+            .collect();
+        members.sort();
+        let world: Vec<usize> = members
+            .iter()
+            .map(|&(_, i)| self.group().world_rank(i).expect("parent rank valid"))
+            .collect();
+        let my_world = self.rank_ctx().world_rank;
+        let my_rank = world
+            .iter()
+            .position(|&wr| wr == my_world)
+            .ok_or_else(|| mpi_err!(Intern, "split: self missing from subgroup"))?;
+        let group = Group::new(world)?;
+        Ok(Some(Comm::from_parts(
+            self.rank_ctx().clone(),
+            group,
+            my_rank,
+            base + 2 * color_idx,
+            format!("{}_split", self.name()),
+        )))
+    }
+
+    /// `MPI_Comm_split_type(MPI_COMM_TYPE_SHARED)`: one communicator per
+    /// simulated node.
+    pub fn split_shared(&self, key: i32) -> Result<Option<Comm>> {
+        let node = self.rank_ctx().fabric.nodemap.node_of(self.rank_ctx().world_rank);
+        self.split(node as i32, key)
+    }
+
+    /// `MPI_Comm_create`: all ranks of the parent call it; ranks outside
+    /// `group` get `None`. Disjoint groups across ranks are supported (each
+    /// subgroup keys its context off its smallest world rank).
+    pub fn create(&self, group: &Group) -> Result<Option<Comm>> {
+        let base = self.agree_ctx_base()?;
+        self.bump_next_ctx(base);
+        let my_world = self.rank_ctx().world_rank;
+        let Some(my_rank) = group.rank_of(my_world) else {
+            return Ok(None);
+        };
+        let min_world =
+            *group.members().iter().min().ok_or_else(|| mpi_err!(Group, "empty group"))?;
+        Ok(Some(Comm::from_parts(
+            self.rank_ctx().clone(),
+            group.clone(),
+            my_rank,
+            base + 2 * min_world as u32,
+            format!("{}_create", self.name()),
+        )))
+    }
+}

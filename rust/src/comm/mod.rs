@@ -1,0 +1,417 @@
+//! Communicators (MPI-4.0 §7): the pairing of a process group with a pair
+//! of communication contexts (one for point-to-point, one for collectives,
+//! the classic MPICH recipe that keeps collective traffic from matching
+//! user receives).
+//!
+//! This is the substrate-level typed-but-byte-oriented API. The `raw` layer
+//! flattens it to C-style handles; the `modern` layer adds RAII, futures
+//! and generic datatypes on top.
+
+pub mod attr;
+pub mod create;
+
+use crate::datatype::Datatype;
+use crate::error::ErrorHandler;
+use crate::group::{Comparison, Group};
+use crate::p2p::{self, engine, RankCtx, RawBufMut, SendMode, Status};
+use crate::request::Request;
+use crate::{mpi_err, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// `MPI_PROC_NULL`: sends/receives to it complete immediately.
+pub const PROC_NULL: i32 = -1;
+/// `MPI_ANY_SOURCE`.
+pub const ANY_SOURCE: i32 = -2;
+/// `MPI_ANY_TAG`.
+pub const ANY_TAG: i32 = -1;
+/// Upper bound on user tags (`MPI_TAG_UB`).
+pub const TAG_UB: i32 = i32::MAX / 2;
+
+/// An intracommunicator.
+pub struct Comm {
+    ctx: Rc<RankCtx>,
+    group: Group,
+    /// This process's rank within `group`.
+    rank: usize,
+    ctx_p2p: u32,
+    ctx_coll: u32,
+    errhandler: RefCell<ErrorHandler>,
+    attrs: RefCell<attr::AttrMap>,
+    name: RefCell<String>,
+}
+
+impl Comm {
+    /// `MPI_COMM_WORLD` for this rank (context ids 0/1).
+    pub fn world(ctx: Rc<RankCtx>) -> Comm {
+        let group = Group::world(ctx.world_size());
+        let rank = ctx.world_rank;
+        Comm {
+            ctx,
+            group,
+            rank,
+            ctx_p2p: 0,
+            ctx_coll: 1,
+            errhandler: RefCell::new(ErrorHandler::ErrorsAreFatal),
+            attrs: RefCell::new(attr::AttrMap::default()),
+            name: RefCell::new("MPI_COMM_WORLD".to_string()),
+        }
+    }
+
+    /// `MPI_COMM_SELF`.
+    pub fn self_comm(ctx: Rc<RankCtx>) -> Comm {
+        let group = Group::new(vec![ctx.world_rank]).unwrap();
+        Comm {
+            ctx,
+            group,
+            rank: 0,
+            ctx_p2p: 2,
+            ctx_coll: 3,
+            errhandler: RefCell::new(ErrorHandler::ErrorsAreFatal),
+            attrs: RefCell::new(attr::AttrMap::default()),
+            name: RefCell::new("MPI_COMM_SELF".to_string()),
+        }
+    }
+
+    /// Internal: build a communicator from parts (used by dup/split/create
+    /// in the collective module, which owns the context-id agreement).
+    pub(crate) fn from_parts(ctx: Rc<RankCtx>, group: Group, rank: usize, ctx_p2p: u32, name: String) -> Comm {
+        Comm {
+            ctx,
+            group,
+            rank,
+            ctx_p2p,
+            ctx_coll: ctx_p2p + 1,
+            errhandler: RefCell::new(ErrorHandler::ErrorsAreFatal),
+            attrs: RefCell::new(attr::AttrMap::default()),
+            name: RefCell::new(name),
+        }
+    }
+
+    /// The "unmanaged constructor" analog of the paper: wrap the *same*
+    /// underlying communicator (identical contexts and group) without
+    /// taking responsibility for its lifetime. Used by the modern layer to
+    /// adopt externally owned communicators.
+    pub fn unmanaged_clone(&self) -> Comm {
+        Comm {
+            ctx: self.ctx.clone(),
+            group: self.group.clone(),
+            rank: self.rank,
+            ctx_p2p: self.ctx_p2p,
+            ctx_coll: self.ctx_coll,
+            errhandler: RefCell::new(self.errhandler()),
+            attrs: RefCell::new(self.attrs.borrow().dup()),
+            name: RefCell::new(self.name()),
+        }
+    }
+
+    // ---- identity ----
+
+    /// `MPI_Comm_rank`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// `MPI_Comm_size`.
+    pub fn size(&self) -> usize {
+        self.group.size()
+    }
+
+    /// `MPI_Comm_group`.
+    pub fn group(&self) -> &Group {
+        &self.group
+    }
+
+    pub fn rank_ctx(&self) -> &Rc<RankCtx> {
+        &self.ctx
+    }
+
+    /// The p2p context id (exposed for the raw layer and diagnostics).
+    pub fn ctx_p2p(&self) -> u32 {
+        self.ctx_p2p
+    }
+
+    /// The collective context id.
+    pub fn ctx_coll(&self) -> u32 {
+        self.ctx_coll
+    }
+
+    /// `MPI_Comm_compare`.
+    pub fn compare(&self, other: &Comm) -> Comparison {
+        if self.ctx_p2p == other.ctx_p2p {
+            Comparison::Identical
+        } else {
+            match self.group.compare(&other.group) {
+                Comparison::Identical => Comparison::Similar, // MPI_CONGRUENT
+                c => c,
+            }
+        }
+    }
+
+    /// `MPI_Comm_set_name` / `get_name`.
+    pub fn set_name(&self, name: &str) {
+        *self.name.borrow_mut() = name.to_string();
+    }
+
+    pub fn name(&self) -> String {
+        self.name.borrow().clone()
+    }
+
+    /// `MPI_Comm_set_errhandler` / `get_errhandler`.
+    pub fn set_errhandler(&self, h: ErrorHandler) {
+        *self.errhandler.borrow_mut() = h;
+    }
+
+    pub fn errhandler(&self) -> ErrorHandler {
+        self.errhandler.borrow().clone()
+    }
+
+    /// Run a result through this communicator's error handler.
+    pub fn handle<T>(&self, r: Result<T>) -> Result<T> {
+        self.errhandler.borrow().handle(r)
+    }
+
+    pub fn attrs(&self) -> &RefCell<attr::AttrMap> {
+        &self.attrs
+    }
+
+    /// `MPI_Wtime` on this rank's hybrid clock (seconds).
+    pub fn wtime(&self) -> f64 {
+        self.ctx.clock.now_ns() / 1e9
+    }
+
+    /// `MPI_Abort`.
+    pub fn abort(&self, code: i32) -> ! {
+        self.ctx.fabric.abort(code);
+        panic!("MPI_Abort({code})");
+    }
+
+    // ---- rank/tag validation & translation ----
+
+    /// Destination rank → world rank; `None` = PROC_NULL no-op.
+    pub fn resolve_dst(&self, dst: i32) -> Result<Option<usize>> {
+        if dst == PROC_NULL {
+            return Ok(None);
+        }
+        if dst < 0 || dst as usize >= self.size() {
+            return Err(mpi_err!(Rank, "rank {dst} invalid in communicator of size {}", self.size()));
+        }
+        Ok(Some(self.group.world_rank(dst as usize)?))
+    }
+
+    /// Source rank → `Some(world)` / `None` for ANY_SOURCE, or PROC_NULL.
+    #[allow(clippy::type_complexity)]
+    pub fn resolve_src(&self, src: i32) -> Result<SrcSel> {
+        match src {
+            PROC_NULL => Ok(SrcSel::ProcNull),
+            ANY_SOURCE => Ok(SrcSel::Any),
+            s if s >= 0 && (s as usize) < self.size() => {
+                Ok(SrcSel::Rank(self.group.world_rank(s as usize)?))
+            }
+            s => Err(mpi_err!(Rank, "rank {s} invalid in communicator of size {}", self.size())),
+        }
+    }
+
+    fn check_send_tag(&self, tag: i32) -> Result<()> {
+        if (0..=TAG_UB).contains(&tag) {
+            Ok(())
+        } else {
+            Err(mpi_err!(Tag, "send tag {tag} out of range [0, {TAG_UB}]"))
+        }
+    }
+
+    fn resolve_recv_tag(&self, tag: i32) -> Result<Option<i32>> {
+        match tag {
+            ANY_TAG => Ok(None),
+            t if (0..=TAG_UB).contains(&t) => Ok(Some(t)),
+            t => Err(mpi_err!(Tag, "receive tag {t} out of range")),
+        }
+    }
+
+    // ---- blocking point-to-point ----
+
+    /// `MPI_Send` (and siblings by mode) over packed bytes.
+    pub fn send_mode(&self, buf: &[u8], count: usize, dtype: &Datatype, dst: i32, tag: i32, mode: SendMode) -> Result<()> {
+        self.check_send_tag(tag)?;
+        let Some(dst_world) = self.resolve_dst(dst)? else { return Ok(()) };
+        let token = engine::start_send(
+            &self.ctx,
+            p2p::SendParams { ctx_id: self.ctx_p2p, dst_world, tag, buf, count, dtype, mode },
+        )?;
+        if let Some(t) = token {
+            engine::wait_for(&self.ctx, || engine::send_done(&self.ctx, t))?;
+            engine::take_send_done(&self.ctx, t);
+        }
+        Ok(())
+    }
+
+    pub fn send(&self, buf: &[u8], count: usize, dtype: &Datatype, dst: i32, tag: i32) -> Result<()> {
+        self.send_mode(buf, count, dtype, dst, tag, SendMode::Standard)
+    }
+
+    /// `MPI_Recv`.
+    pub fn recv(&self, buf: &mut [u8], count: usize, dtype: &Datatype, src: i32, tag: i32) -> Result<Status> {
+        let req = self.irecv(buf, count, dtype, src, tag)?;
+        req.wait()
+    }
+
+    // ---- immediate point-to-point ----
+
+    /// `MPI_Isend` (and siblings by mode). The payload is packed before
+    /// return, so the buffer is immediately reusable.
+    pub fn isend_mode(&self, buf: &[u8], count: usize, dtype: &Datatype, dst: i32, tag: i32, mode: SendMode) -> Result<Request> {
+        self.check_send_tag(tag)?;
+        let Some(dst_world) = self.resolve_dst(dst)? else {
+            return Ok(Request::ready(self.ctx.clone(), Status::empty()));
+        };
+        let token = engine::start_send(
+            &self.ctx,
+            p2p::SendParams { ctx_id: self.ctx_p2p, dst_world, tag, buf, count, dtype, mode },
+        )?;
+        Ok(Request::from_send(self.ctx.clone(), token))
+    }
+
+    pub fn isend(&self, buf: &[u8], count: usize, dtype: &Datatype, dst: i32, tag: i32) -> Result<Request> {
+        self.isend_mode(buf, count, dtype, dst, tag, SendMode::Standard)
+    }
+
+    /// `MPI_Irecv`. The buffer is captured until completion (standard MPI
+    /// contract: do not touch it before wait/test says done).
+    pub fn irecv(&self, buf: &mut [u8], count: usize, dtype: &Datatype, src: i32, tag: i32) -> Result<Request> {
+        let tag_sel = self.resolve_recv_tag(tag)?;
+        let src_sel = self.resolve_src(src)?;
+        let src_world = match src_sel {
+            SrcSel::ProcNull => {
+                return Ok(Request::ready(
+                    self.ctx.clone(),
+                    Status { source: PROC_NULL, tag: ANY_TAG, bytes: 0, cancelled: false },
+                ))
+            }
+            SrcSel::Any => None,
+            SrcSel::Rank(w) => Some(w),
+        };
+        let token = engine::post_recv(
+            &self.ctx,
+            self.ctx_p2p,
+            src_world,
+            tag_sel,
+            RawBufMut::from_slice(buf),
+            count,
+            dtype.clone(),
+            self.group.clone(),
+        )?;
+        Ok(Request::from_recv(self.ctx.clone(), token))
+    }
+
+    /// `MPI_Sendrecv`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sendrecv(
+        &self,
+        sbuf: &[u8],
+        scount: usize,
+        sdtype: &Datatype,
+        dst: i32,
+        stag: i32,
+        rbuf: &mut [u8],
+        rcount: usize,
+        rdtype: &Datatype,
+        src: i32,
+        rtag: i32,
+    ) -> Result<Status> {
+        let rreq = self.irecv(rbuf, rcount, rdtype, src, rtag)?;
+        let sreq = self.isend(sbuf, scount, sdtype, dst, stag)?;
+        let status = rreq.wait()?;
+        sreq.wait()?;
+        Ok(status)
+    }
+
+    /// `MPI_Sendrecv_replace`: same buffer for both directions.
+    pub fn sendrecv_replace(
+        &self,
+        buf: &mut [u8],
+        count: usize,
+        dtype: &Datatype,
+        dst: i32,
+        stag: i32,
+        src: i32,
+        rtag: i32,
+    ) -> Result<Status> {
+        // isend packs immediately, so posting send first then receiving
+        // into the same buffer is sound.
+        let sreq = self.isend(buf, count, dtype, dst, stag)?;
+        let rreq = self.irecv(buf, count, dtype, src, rtag)?;
+        let status = rreq.wait()?;
+        sreq.wait()?;
+        Ok(status)
+    }
+
+    // ---- probe family ----
+
+    /// `MPI_Probe`.
+    pub fn probe(&self, src: i32, tag: i32) -> Result<Status> {
+        let (src_world, tag_sel) = self.probe_sel(src, tag)?;
+        engine::probe(&self.ctx, self.ctx_p2p, src_world, tag_sel, &self.group)
+    }
+
+    /// `MPI_Iprobe` (`None` = no message — the `std::optional` of the
+    /// paper's immediate probe).
+    pub fn iprobe(&self, src: i32, tag: i32) -> Result<Option<Status>> {
+        let (src_world, tag_sel) = self.probe_sel(src, tag)?;
+        engine::iprobe(&self.ctx, self.ctx_p2p, src_world, tag_sel, &self.group)
+    }
+
+    /// `MPI_Mprobe`.
+    pub fn mprobe(&self, src: i32, tag: i32) -> Result<p2p::Message> {
+        let (src_world, tag_sel) = self.probe_sel(src, tag)?;
+        engine::mprobe(&self.ctx, self.ctx_p2p, src_world, tag_sel)
+    }
+
+    /// `MPI_Improbe`.
+    pub fn improbe(&self, src: i32, tag: i32) -> Result<Option<p2p::Message>> {
+        let (src_world, tag_sel) = self.probe_sel(src, tag)?;
+        engine::improbe(&self.ctx, self.ctx_p2p, src_world, tag_sel)
+    }
+
+    /// `MPI_Mrecv`.
+    pub fn mrecv(&self, msg: p2p::Message, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<Status> {
+        engine::mrecv(
+            &self.ctx,
+            msg,
+            RawBufMut::from_slice(buf),
+            count,
+            dtype.clone(),
+            self.group.clone(),
+        )
+    }
+
+    fn probe_sel(&self, src: i32, tag: i32) -> Result<(Option<usize>, Option<i32>)> {
+        let tag_sel = self.resolve_recv_tag(tag)?;
+        let src_world = match self.resolve_src(src)? {
+            SrcSel::ProcNull => {
+                return Err(mpi_err!(Rank, "probe with MPI_PROC_NULL source"));
+            }
+            SrcSel::Any => None,
+            SrcSel::Rank(w) => Some(w),
+        };
+        Ok((src_world, tag_sel))
+    }
+}
+
+/// Resolved source selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SrcSel {
+    ProcNull,
+    Any,
+    Rank(usize),
+}
+
+impl std::fmt::Debug for Comm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Comm")
+            .field("name", &self.name())
+            .field("rank", &self.rank)
+            .field("size", &self.size())
+            .field("ctx", &self.ctx_p2p)
+            .finish()
+    }
+}

@@ -1,0 +1,9 @@
+//! The evaluation coordinator: the mpiBench port (paper §III) and its
+//! reporting pipeline. `examples/mpibench.rs` and
+//! `rust/benches/bench_figure1.rs` drive this to regenerate Figure 1.
+
+pub mod mpibench;
+pub mod report;
+
+pub use mpibench::{BenchOp, Interface, MpiBenchConfig, MpiBenchRow, run_mpibench, ALL_OPS};
+pub use report::{figure1_cells, figure1_report, Figure1Cell, Figure1Report};

@@ -1,0 +1,555 @@
+//! The mpiBench port (Moody & Subramoni, LLNL): measures the runtime of
+//! 11 MPI operations for varying message lengths and node counts, through
+//! either the raw C-shaped interface or the modern interface — the paper's
+//! Figure 1 experiment.
+//!
+//! Protocol (mirroring mpiBench and the paper's §III):
+//! * message length 2^n bytes for 0 < n < 18 (configurable),
+//! * node counts {1, 2, 4, 8, 16} × ppn,
+//! * each measurement = a timed loop of `iters` operations, repeated
+//!   `reps` times and averaged; ranks synchronize with a barrier before
+//!   each rep and the slowest rank's time is taken (allreduce-MAX),
+//! * each Figure 1 data point = geometric mean over the 11 operations.
+//!
+//! Timing uses the hybrid clocks (`MPI_Wtime` analog): real software path
+//! length + modeled network time.
+
+use crate::comm::Comm;
+use crate::modern::{Communicator, ReduceOp};
+use crate::raw;
+use crate::universe::Universe;
+use crate::Result;
+
+/// Which interface drives the operations (the Figure 1 x-factor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interface {
+    /// The C-shaped baseline (original mpiBench).
+    Raw,
+    /// The paper's ergonomic interface (adapted mpiBench).
+    Modern,
+}
+
+impl Interface {
+    pub fn label(self) -> &'static str {
+        match self {
+            Interface::Raw => "raw",
+            Interface::Modern => "modern",
+        }
+    }
+}
+
+/// The 11 mpiBench operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchOp {
+    Barrier,
+    Bcast,
+    Gather,
+    Gatherv,
+    Scatter,
+    Allgather,
+    Allgatherv,
+    Alltoall,
+    Alltoallv,
+    Reduce,
+    Allreduce,
+}
+
+pub const ALL_OPS: [BenchOp; 11] = [
+    BenchOp::Barrier,
+    BenchOp::Bcast,
+    BenchOp::Gather,
+    BenchOp::Gatherv,
+    BenchOp::Scatter,
+    BenchOp::Allgather,
+    BenchOp::Allgatherv,
+    BenchOp::Alltoall,
+    BenchOp::Alltoallv,
+    BenchOp::Reduce,
+    BenchOp::Allreduce,
+];
+
+impl BenchOp {
+    pub fn label(self) -> &'static str {
+        match self {
+            BenchOp::Barrier => "Barrier",
+            BenchOp::Bcast => "Bcast",
+            BenchOp::Gather => "Gather",
+            BenchOp::Gatherv => "Gatherv",
+            BenchOp::Scatter => "Scatter",
+            BenchOp::Allgather => "Allgather",
+            BenchOp::Allgatherv => "Allgatherv",
+            BenchOp::Alltoall => "Alltoall",
+            BenchOp::Alltoallv => "Alltoallv",
+            BenchOp::Reduce => "Reduce",
+            BenchOp::Allreduce => "Allreduce",
+        }
+    }
+}
+
+/// Sweep configuration (defaults = the paper's setup, CI-scaled knobs for
+/// quick runs).
+#[derive(Debug, Clone)]
+pub struct MpiBenchConfig {
+    /// Message lengths in bytes (paper: 2^1 .. 2^17).
+    pub msg_lens: Vec<usize>,
+    /// Node counts (paper: 1, 2, 4, 8, 16).
+    pub node_counts: Vec<usize>,
+    /// Ranks per node.
+    pub ppn: usize,
+    /// Repetitions averaged per measurement (paper: 10).
+    pub reps: usize,
+    /// Operations per timed loop.
+    pub iters: usize,
+    pub interfaces: Vec<Interface>,
+    pub ops: Vec<BenchOp>,
+}
+
+impl MpiBenchConfig {
+    /// The paper's full sweep.
+    pub fn paper() -> MpiBenchConfig {
+        MpiBenchConfig {
+            msg_lens: (1..18).map(|n| 1usize << n).collect(),
+            node_counts: vec![1, 2, 4, 8, 16],
+            ppn: 2,
+            reps: 10,
+            iters: 10,
+            interfaces: vec![Interface::Raw, Interface::Modern],
+            ops: ALL_OPS.to_vec(),
+        }
+    }
+
+    /// A minutes-scale subset for CI / `cargo bench`.
+    pub fn quick() -> MpiBenchConfig {
+        MpiBenchConfig {
+            msg_lens: vec![2, 64, 2048, 1 << 15],
+            node_counts: vec![1, 4],
+            ppn: 2,
+            reps: 3,
+            iters: 5,
+            interfaces: vec![Interface::Raw, Interface::Modern],
+            ops: ALL_OPS.to_vec(),
+        }
+    }
+}
+
+/// One measured cell.
+#[derive(Debug, Clone)]
+pub struct MpiBenchRow {
+    pub interface: Interface,
+    pub op: BenchOp,
+    pub nodes: usize,
+    pub ranks: usize,
+    pub msg_len: usize,
+    /// Mean seconds per operation (max over ranks, averaged over reps).
+    pub mean_s: f64,
+    pub stddev_s: f64,
+}
+
+// ---------------- modern-interface drivers ----------------
+
+struct ModernBench<'a> {
+    comm: &'a Communicator,
+    msg: usize,
+    p: usize,
+    sbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+    fsend: Vec<f32>,
+    frecv: Vec<f32>,
+}
+
+impl<'a> ModernBench<'a> {
+    fn new(comm: &'a Communicator, msg: usize) -> ModernBench<'a> {
+        let p = comm.size();
+        ModernBench {
+            comm,
+            msg,
+            p,
+            sbuf: vec![1u8; msg * p],
+            rbuf: vec![0u8; msg * p],
+            fsend: vec![1.0f32; (msg / 4).max(1)],
+            frecv: vec![0.0f32; (msg / 4).max(1)],
+        }
+    }
+
+    fn run(&mut self, op: BenchOp) -> Result<()> {
+        let comm = self.comm;
+        let n = self.msg;
+        let p = self.p;
+        let root = 0usize;
+        match op {
+            BenchOp::Barrier => comm.barrier(),
+            BenchOp::Bcast => comm.broadcast(&mut self.rbuf[..n], root),
+            BenchOp::Gather => {
+                let me = comm.rank();
+                let (sb, rb) = (&self.sbuf[..n], &mut self.rbuf[..n * p]);
+                crate::collective::gather(
+                    comm.native(),
+                    sb,
+                    n,
+                    &u8::datatype_handle(),
+                    if me == root { Some(rb) } else { None },
+                    n,
+                    &u8::datatype_handle(),
+                    root,
+                )
+            }
+            BenchOp::Gatherv => {
+                let me = comm.rank();
+                let counts = vec![n; p];
+                let displs: Vec<usize> = (0..p).map(|i| i * n).collect();
+                crate::collective::gatherv(
+                    comm.native(),
+                    &self.sbuf[..n],
+                    n,
+                    &u8::datatype_handle(),
+                    if me == root { Some(&mut self.rbuf[..n * p]) } else { None },
+                    &counts,
+                    &displs,
+                    &u8::datatype_handle(),
+                    root,
+                )
+            }
+            BenchOp::Scatter => {
+                let me = comm.rank();
+                crate::collective::scatter(
+                    comm.native(),
+                    if me == root { Some(&self.sbuf[..n * p]) } else { None },
+                    n,
+                    &u8::datatype_handle(),
+                    &mut self.rbuf[..n],
+                    n,
+                    &u8::datatype_handle(),
+                    root,
+                )
+            }
+            BenchOp::Allgather => crate::collective::allgather(
+                comm.native(),
+                Some(&self.sbuf[..n]),
+                n,
+                &u8::datatype_handle(),
+                &mut self.rbuf[..n * p],
+                n,
+                &u8::datatype_handle(),
+            ),
+            BenchOp::Allgatherv => {
+                let counts = vec![n; p];
+                let displs: Vec<usize> = (0..p).map(|i| i * n).collect();
+                crate::collective::allgatherv(
+                    comm.native(),
+                    Some(&self.sbuf[..n]),
+                    n,
+                    &u8::datatype_handle(),
+                    &mut self.rbuf[..n * p],
+                    &counts,
+                    &displs,
+                    &u8::datatype_handle(),
+                )
+            }
+            BenchOp::Alltoall => crate::collective::alltoall(
+                comm.native(),
+                &self.sbuf[..n * p],
+                n,
+                &u8::datatype_handle(),
+                &mut self.rbuf[..n * p],
+                n,
+                &u8::datatype_handle(),
+            ),
+            BenchOp::Alltoallv => {
+                let counts = vec![n; p];
+                let displs: Vec<usize> = (0..p).map(|i| i * n).collect();
+                crate::collective::alltoallv(
+                    comm.native(),
+                    &self.sbuf[..n * p],
+                    &counts,
+                    &displs,
+                    &u8::datatype_handle(),
+                    &mut self.rbuf[..n * p],
+                    &counts,
+                    &displs,
+                    &u8::datatype_handle(),
+                )
+            }
+            BenchOp::Reduce => {
+                let me = comm.rank();
+                let cnt = self.fsend.len();
+                crate::collective::reduce(
+                    comm.native(),
+                    Some(f32s_as_bytes(&self.fsend)),
+                    if me == root { Some(f32s_as_bytes_mut(&mut self.frecv)) } else { None },
+                    cnt,
+                    &f32::datatype_handle(),
+                    &crate::op::Op::SUM,
+                    root,
+                )
+            }
+            BenchOp::Allreduce => {
+                let cnt = self.fsend.len();
+                comm.all_reduce_into(&self.fsend[..cnt], &mut self.frecv[..cnt], ReduceOp::Sum)
+            }
+        }
+    }
+}
+
+fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn f32s_as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4) }
+}
+
+/// Small helper so the modern drivers can reach cached datatype handles
+/// without generic plumbing.
+trait DatatypeHandle {
+    fn datatype_handle() -> crate::datatype::Datatype;
+}
+
+impl DatatypeHandle for u8 {
+    fn datatype_handle() -> crate::datatype::Datatype {
+        <u8 as crate::modern::DataType>::datatype()
+    }
+}
+
+impl DatatypeHandle for f32 {
+    fn datatype_handle() -> crate::datatype::Datatype {
+        <f32 as crate::modern::DataType>::datatype()
+    }
+}
+
+// ---------------- raw-interface drivers ----------------
+
+struct RawBench {
+    msg: usize,
+    sbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+    fsend: Vec<f32>,
+    frecv: Vec<f32>,
+    counts: Vec<i32>,
+    displs: Vec<i32>,
+    rank: i32,
+}
+
+impl RawBench {
+    fn new(msg: usize, p: usize) -> RawBench {
+        let mut rank = -1;
+        raw::mpi_comm_rank(raw::MPI_COMM_WORLD, &mut rank);
+        RawBench {
+            msg,
+            sbuf: vec![1u8; msg * p],
+            rbuf: vec![0u8; msg * p],
+            fsend: vec![1.0f32; (msg / 4).max(1)],
+            frecv: vec![0.0f32; (msg / 4).max(1)],
+            counts: vec![msg as i32; p],
+            displs: (0..p).map(|i| (i * msg) as i32).collect(),
+            rank,
+        }
+    }
+
+    fn run(&mut self, op: BenchOp) -> i32 {
+        const C: i32 = raw::MPI_COMM_WORLD;
+        let n = self.msg as i32;
+        let fcnt = self.fsend.len() as i32;
+        match op {
+            BenchOp::Barrier => raw::mpi_barrier(C),
+            BenchOp::Bcast => raw::mpi_bcast(&mut self.rbuf[..self.msg], n, raw::MPI_BYTE, 0, C),
+            BenchOp::Gather => raw::mpi_gather(
+                &self.sbuf[..self.msg],
+                n,
+                raw::MPI_BYTE,
+                if self.rank == 0 { Some(&mut self.rbuf[..]) } else { None },
+                n,
+                raw::MPI_BYTE,
+                0,
+                C,
+            ),
+            BenchOp::Gatherv => raw::mpi_gatherv(
+                &self.sbuf[..self.msg],
+                n,
+                raw::MPI_BYTE,
+                if self.rank == 0 { Some(&mut self.rbuf[..]) } else { None },
+                &self.counts,
+                &self.displs,
+                raw::MPI_BYTE,
+                0,
+                C,
+            ),
+            BenchOp::Scatter => raw::mpi_scatter(
+                if self.rank == 0 { Some(&self.sbuf[..]) } else { None },
+                n,
+                raw::MPI_BYTE,
+                &mut self.rbuf[..self.msg],
+                n,
+                raw::MPI_BYTE,
+                0,
+                C,
+            ),
+            BenchOp::Allgather => raw::mpi_allgather(
+                Some(&self.sbuf[..self.msg]),
+                n,
+                raw::MPI_BYTE,
+                &mut self.rbuf[..],
+                n,
+                raw::MPI_BYTE,
+                C,
+            ),
+            BenchOp::Allgatherv => raw::mpi_allgatherv(
+                Some(&self.sbuf[..self.msg]),
+                n,
+                raw::MPI_BYTE,
+                &mut self.rbuf[..],
+                &self.counts,
+                &self.displs,
+                raw::MPI_BYTE,
+                C,
+            ),
+            BenchOp::Alltoall => raw::mpi_alltoall(
+                &self.sbuf[..],
+                n,
+                raw::MPI_BYTE,
+                &mut self.rbuf[..],
+                n,
+                raw::MPI_BYTE,
+                C,
+            ),
+            BenchOp::Alltoallv => raw::mpi_alltoallv(
+                &self.sbuf[..],
+                &self.counts,
+                &self.displs,
+                raw::MPI_BYTE,
+                &mut self.rbuf[..],
+                &self.counts,
+                &self.displs,
+                raw::MPI_BYTE,
+                C,
+            ),
+            BenchOp::Reduce => raw::mpi_reduce(
+                Some(f32s_as_bytes(&self.fsend)),
+                if self.rank == 0 { Some(f32s_as_bytes_mut(&mut self.frecv)) } else { None },
+                fcnt,
+                raw::MPI_FLOAT,
+                raw::MPI_SUM,
+                0,
+                C,
+            ),
+            BenchOp::Allreduce => raw::mpi_allreduce(
+                Some(f32s_as_bytes(&self.fsend)),
+                f32s_as_bytes_mut(&mut self.frecv),
+                fcnt,
+                raw::MPI_FLOAT,
+                raw::MPI_SUM,
+                C,
+            ),
+        }
+    }
+}
+
+// ---------------- the measurement loop ----------------
+
+/// Measure every (op, msg_len) combination on one job (fixed node count),
+/// through one interface. Returns rows from rank 0's perspective (times
+/// are the max over ranks).
+fn measure_job(
+    world: &Comm,
+    iface: Interface,
+    cfg: &MpiBenchConfig,
+    nodes: usize,
+) -> Result<Vec<MpiBenchRow>> {
+    let modern_comm = Communicator::world(world);
+    if iface == Interface::Raw {
+        raw::init(world);
+    }
+    let p = world.size();
+    let mut rows = Vec::new();
+    for &op in &cfg.ops {
+        for &msg in &cfg.msg_lens {
+            let mut rep_times = Vec::with_capacity(cfg.reps);
+            match iface {
+                Interface::Modern => {
+                    let mut b = ModernBench::new(&modern_comm, msg);
+                    // Untimed warmup (page faults, allocator, schedule
+                    // caches) — mpiBench does the same.
+                    for _ in 0..2 {
+                        b.run(op)?;
+                    }
+                    for _ in 0..cfg.reps {
+                        modern_comm.barrier()?;
+                        let t0 = modern_comm.wtime();
+                        for _ in 0..cfg.iters {
+                            b.run(op)?;
+                        }
+                        let dt = (modern_comm.wtime() - t0) / cfg.iters as f64;
+                        rep_times.push(modern_comm.all_reduce(dt, ReduceOp::Max)?);
+                    }
+                }
+                Interface::Raw => {
+                    let mut b = RawBench::new(msg, p);
+                    for _ in 0..2 {
+                        let rc = b.run(op);
+                        debug_assert_eq!(rc, raw::MPI_SUCCESS);
+                    }
+                    for _ in 0..cfg.reps {
+                        raw::mpi_barrier(raw::MPI_COMM_WORLD);
+                        let t0 = raw::mpi_wtime();
+                        for _ in 0..cfg.iters {
+                            let rc = b.run(op);
+                            debug_assert_eq!(rc, raw::MPI_SUCCESS);
+                        }
+                        let dt = (raw::mpi_wtime() - t0) / cfg.iters as f64;
+                        let mut out = [0f64];
+                        raw::mpi_allreduce(
+                            Some(&dt.to_le_bytes()),
+                            unsafe {
+                                std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, 8)
+                            },
+                            1,
+                            raw::MPI_DOUBLE,
+                            raw::MPI_MAX,
+                            raw::MPI_COMM_WORLD,
+                        );
+                        rep_times.push(out[0]);
+                    }
+                }
+            }
+            rows.push(MpiBenchRow {
+                interface: iface,
+                op,
+                nodes,
+                ranks: p,
+                msg_len: msg,
+                mean_s: crate::util::stats::mean(&rep_times),
+                stddev_s: crate::util::stats::stddev(&rep_times),
+            });
+        }
+    }
+    if iface == Interface::Raw {
+        raw::finalize();
+    }
+    Ok(rows)
+}
+
+/// Run the full sweep: one simulated job per (interface, node count).
+pub fn run_mpibench(cfg: &MpiBenchConfig, mut progress: impl FnMut(&str)) -> Vec<MpiBenchRow> {
+    let mut all = Vec::new();
+    for &iface in &cfg.interfaces {
+        for &nodes in &cfg.node_counts {
+            progress(&format!(
+                "mpibench: interface={} nodes={} ranks={} ...",
+                iface.label(),
+                nodes,
+                nodes * cfg.ppn
+            ));
+            let u = Universe::new(nodes, cfg.ppn);
+            let cfg2 = cfg.clone();
+            let mut results = u.run(move |world| {
+                let rows = measure_job(world, iface, &cfg2, nodes).expect("bench job failed");
+                if world.rank() == 0 {
+                    Some(rows)
+                } else {
+                    None
+                }
+            });
+            all.extend(results.remove(0).expect("rank 0 returns rows"));
+        }
+    }
+    all
+}

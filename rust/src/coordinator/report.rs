@@ -1,0 +1,151 @@
+//! Report generation: per-op tables, the Figure 1 geomean series, CSV
+//! export, and the modern/raw overhead summary.
+
+use super::mpibench::{Interface, MpiBenchRow};
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use std::collections::BTreeSet;
+
+/// One Figure 1 data point: geometric mean over the benchmark ops.
+#[derive(Debug, Clone)]
+pub struct Figure1Cell {
+    pub interface: Interface,
+    pub nodes: usize,
+    pub msg_len: usize,
+    pub geomean_s: f64,
+}
+
+/// Collapse raw rows to Figure 1 cells (geomean over ops per
+/// interface × nodes × message length).
+pub fn figure1_cells(rows: &[MpiBenchRow]) -> Vec<Figure1Cell> {
+    let keys: BTreeSet<(usize, usize)> = rows.iter().map(|r| (r.nodes, r.msg_len)).collect();
+    let mut out = Vec::new();
+    for iface in [Interface::Raw, Interface::Modern] {
+        for &(nodes, msg_len) in &keys {
+            let times: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.interface == iface && r.nodes == nodes && r.msg_len == msg_len)
+                .map(|r| r.mean_s)
+                .collect();
+            if !times.is_empty() {
+                out.push(Figure1Cell { interface: iface, nodes, msg_len, geomean_s: geomean(&times) });
+            }
+        }
+    }
+    out
+}
+
+/// The full report bundle.
+pub struct Figure1Report {
+    /// Raw per-op rows (the CSV the paper's figure is plotted from).
+    pub rows_csv: String,
+    /// Figure 1 series as CSV.
+    pub figure1_csv: String,
+    /// Markdown rendering of Figure 1 (one table per node count).
+    pub markdown: String,
+    /// Geomean of (modern / raw) over every cell — the headline number.
+    pub overall_overhead: f64,
+}
+
+/// Build the report from measured rows.
+pub fn figure1_report(rows: &[MpiBenchRow]) -> Figure1Report {
+    // Per-op CSV.
+    let mut t = Table::new(&["interface", "op", "nodes", "ranks", "msg_bytes", "mean_us", "stddev_us"]);
+    for r in rows {
+        t.push(vec![
+            r.interface.label().into(),
+            r.op.label().into(),
+            r.nodes.to_string(),
+            r.ranks.to_string(),
+            r.msg_len.to_string(),
+            format!("{:.3}", r.mean_s * 1e6),
+            format!("{:.3}", r.stddev_s * 1e6),
+        ]);
+    }
+    let rows_csv = t.to_csv();
+
+    let cells = figure1_cells(rows);
+    let mut f = Table::new(&["interface", "nodes", "msg_bytes", "geomean_us"]);
+    for c in &cells {
+        f.push(vec![
+            c.interface.label().into(),
+            c.nodes.to_string(),
+            c.msg_len.to_string(),
+            format!("{:.3}", c.geomean_s * 1e6),
+        ]);
+    }
+    let figure1_csv = f.to_csv();
+
+    // Markdown: per node count, msg length vs (raw, modern, ratio).
+    let node_counts: BTreeSet<usize> = cells.iter().map(|c| c.nodes).collect();
+    let msg_lens: BTreeSet<usize> = cells.iter().map(|c| c.msg_len).collect();
+    let mut md = String::new();
+    let mut ratios = Vec::new();
+    for &nodes in &node_counts {
+        md.push_str(&format!("\n### Figure 1 — {nodes} node(s)\n\n"));
+        let mut tt = Table::new(&["msg bytes", "raw (us)", "modern (us)", "modern/raw"]);
+        for &msg in &msg_lens {
+            let get = |iface| {
+                cells
+                    .iter()
+                    .find(|c| c.interface == iface && c.nodes == nodes && c.msg_len == msg)
+                    .map(|c| c.geomean_s)
+            };
+            if let (Some(raw), Some(modern)) = (get(Interface::Raw), get(Interface::Modern)) {
+                let ratio = modern / raw;
+                ratios.push(ratio);
+                tt.push(vec![
+                    msg.to_string(),
+                    format!("{:.2}", raw * 1e6),
+                    format!("{:.2}", modern * 1e6),
+                    format!("{ratio:.3}"),
+                ]);
+            }
+        }
+        md.push_str(&tt.to_markdown());
+    }
+    let overall = geomean(&ratios);
+    md.push_str(&format!(
+        "\n**Overall modern/raw overhead (geomean over all cells): {overall:.4}** \
+         (paper claim: ≈1.0, \"no recognizable patterns that indicate a disparity\")\n"
+    ));
+
+    Figure1Report { rows_csv, figure1_csv, markdown: md, overall_overhead: overall }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mpibench::BenchOp;
+    use super::*;
+
+    fn row(iface: Interface, op: BenchOp, nodes: usize, msg: usize, s: f64) -> MpiBenchRow {
+        MpiBenchRow {
+            interface: iface,
+            op,
+            nodes,
+            ranks: nodes * 2,
+            msg_len: msg,
+            mean_s: s,
+            stddev_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn geomean_collapses_ops() {
+        let rows = vec![
+            row(Interface::Raw, BenchOp::Bcast, 1, 8, 1e-6),
+            row(Interface::Raw, BenchOp::Barrier, 1, 8, 4e-6),
+            row(Interface::Modern, BenchOp::Bcast, 1, 8, 2e-6),
+            row(Interface::Modern, BenchOp::Barrier, 1, 8, 2e-6),
+        ];
+        let cells = figure1_cells(&rows);
+        assert_eq!(cells.len(), 2);
+        let raw = cells.iter().find(|c| c.interface == Interface::Raw).unwrap();
+        assert!((raw.geomean_s - 2e-6).abs() < 1e-12); // sqrt(1*4) = 2
+        let report = figure1_report(&rows);
+        assert!((report.overall_overhead - 1.0).abs() < 1e-9);
+        assert!(report.markdown.contains("modern/raw"));
+        assert!(report.rows_csv.contains("Bcast"));
+        assert!(report.figure1_csv.contains("geomean_us"));
+    }
+}

@@ -1,0 +1,270 @@
+//! Pack/unpack: typed memory ⇄ contiguous wire bytes (`MPI_Pack` /
+//! `MPI_Unpack` and the serialization step of every send/receive).
+
+use super::typemap::TypeMap;
+use crate::{mpi_err, Result};
+
+/// Wire bytes needed for `count` elements (`MPI_Pack_size`).
+pub fn pack_size(map: &TypeMap, count: usize) -> usize {
+    map.size() * count
+}
+
+/// Validate that `count` elements described by `map` fit inside a buffer of
+/// `len` bytes (element `i` occupies `[i*extent + true_lb, i*extent +
+/// true_ub)` relative to the buffer start).
+fn check_span(map: &TypeMap, len: usize, count: usize, what: &str) -> Result<()> {
+    if count == 0 {
+        return Ok(());
+    }
+    let first_lo = map.true_lb().min((count as isize - 1) * map.extent() + map.true_lb());
+    let last_hi = map.true_ub().max((count as isize - 1) * map.extent() + map.true_ub());
+    if first_lo < 0 || last_hi > len as isize {
+        return Err(mpi_err!(
+            Buffer,
+            "{what} buffer too small: {count} element(s) span [{first_lo}, {last_hi}) but buffer is {len} bytes"
+        ));
+    }
+    Ok(())
+}
+
+/// Pack `count` elements from `src` into `out` (appending).
+pub fn pack(map: &TypeMap, src: &[u8], count: usize, out: &mut Vec<u8>) -> Result<()> {
+    check_span(map, src.len(), count, "send")?;
+    if count == 0 {
+        return Ok(());
+    }
+    if map.is_contiguous() {
+        out.extend_from_slice(&src[..map.size() * count]);
+        return Ok(());
+    }
+    out.reserve(map.size() * count);
+    for i in 0..count as isize {
+        let origin = i * map.extent();
+        for &(p, d) in map.entries() {
+            let off = (origin + d) as usize;
+            out.extend_from_slice(&src[off..off + p.size()]);
+        }
+    }
+    Ok(())
+}
+
+/// Pack directly into a preallocated wire buffer (hot-path variant used
+/// by the collective schedule engine: avoids the intermediate `Vec` of
+/// [`pack`]). `out` must be exactly `pack_size(map, count)` long.
+pub fn pack_into(map: &TypeMap, src: &[u8], count: usize, out: &mut [u8]) -> Result<()> {
+    let need = pack_size(map, count);
+    if out.len() != need {
+        return Err(mpi_err!(Intern, "pack_into buffer {} != needed {need}", out.len()));
+    }
+    check_span(map, src.len(), count, "send")?;
+    if count == 0 {
+        return Ok(());
+    }
+    if map.is_contiguous() {
+        out.copy_from_slice(&src[..need]);
+        return Ok(());
+    }
+    let mut w = 0usize;
+    for i in 0..count as isize {
+        let origin = i * map.extent();
+        for &(p, d) in map.entries() {
+            let off = (origin + d) as usize;
+            let s = p.size();
+            out[w..w + s].copy_from_slice(&src[off..off + s]);
+            w += s;
+        }
+    }
+    Ok(())
+}
+
+/// Unpack wire bytes into `count` elements of `dst`. Returns the number of
+/// wire bytes consumed. Errors with `Truncate` if `wire` holds fewer bytes
+/// than `count` elements need — the caller maps that to the MPI truncation
+/// semantics.
+pub fn unpack(map: &TypeMap, wire: &[u8], dst: &mut [u8], count: usize) -> Result<usize> {
+    let need = pack_size(map, count);
+    if wire.len() < need {
+        return Err(mpi_err!(
+            Truncate,
+            "unpack needs {need} wire bytes for {count} element(s), got {}",
+            wire.len()
+        ));
+    }
+    check_span(map, dst.len(), count, "recv")?;
+    if count == 0 {
+        return Ok(0);
+    }
+    if map.is_contiguous() {
+        dst[..need].copy_from_slice(&wire[..need]);
+        return Ok(need);
+    }
+    let mut w = 0usize;
+    for i in 0..count as isize {
+        let origin = i * map.extent();
+        for &(p, d) in map.entries() {
+            let off = (origin + d) as usize;
+            dst[off..off + p.size()].copy_from_slice(&wire[w..w + p.size()]);
+            w += p.size();
+        }
+    }
+    Ok(w)
+}
+
+/// Local typed copy (sendrecv to self, collective in-place shuffles):
+/// equivalent to pack(src) → unpack(dst) without the intermediate when both
+/// sides are contiguous.
+pub fn copy(
+    src_map: &TypeMap,
+    src: &[u8],
+    src_count: usize,
+    dst_map: &TypeMap,
+    dst: &mut [u8],
+    dst_count: usize,
+) -> Result<usize> {
+    let bytes = pack_size(src_map, src_count);
+    if bytes > pack_size(dst_map, dst_count) {
+        return Err(mpi_err!(
+            Truncate,
+            "typed copy: {bytes} source bytes exceed destination capacity {}",
+            pack_size(dst_map, dst_count)
+        ));
+    }
+    if src_map.is_contiguous() && dst_map.is_contiguous() {
+        check_span(src_map, src.len(), src_count, "send")?;
+        check_span(dst_map, dst.len(), dst_count, "recv")?;
+        dst[..bytes].copy_from_slice(&src[..bytes]);
+        return Ok(bytes);
+    }
+    let mut wire = Vec::with_capacity(bytes);
+    pack(src_map, src, src_count, &mut wire)?;
+    // Unpack as many whole destination elements as the wire provides.
+    let dst_elems = if dst_map.size() == 0 { 0 } else { bytes / dst_map.size() };
+    unpack(dst_map, &wire, dst, dst_elems)?;
+    Ok(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::typemap::{Primitive, TypeMap};
+    use super::*;
+
+    fn as_bytes<T>(v: &[T]) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+    }
+
+    fn as_bytes_mut<T>(v: &mut [T]) -> &mut [u8] {
+        unsafe {
+            std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, std::mem::size_of_val(v))
+        }
+    }
+
+    #[test]
+    fn contiguous_roundtrip() {
+        let t = TypeMap::primitive(Primitive::I32);
+        let src: Vec<i32> = (0..10).collect();
+        let mut wire = Vec::new();
+        pack(&t, as_bytes(&src), 10, &mut wire).unwrap();
+        assert_eq!(wire.len(), 40);
+        let mut dst = vec![0i32; 10];
+        let used = unpack(&t, &wire, as_bytes_mut(&mut dst), 10).unwrap();
+        assert_eq!(used, 40);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn strided_pack_gathers_columns() {
+        // A 3x4 i32 row-major matrix; column type = vector(3 rows, 1, stride 4).
+        let col = TypeMap::vector(3, 1, 4, &TypeMap::primitive(Primitive::I32));
+        let m: Vec<i32> = (0..12).collect();
+        let mut wire = Vec::new();
+        pack(&col, as_bytes(&m), 1, &mut wire).unwrap();
+        let vals: Vec<i32> = wire.chunks(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(vals, vec![0, 4, 8]); // column 0
+    }
+
+    #[test]
+    fn strided_unpack_scatters() {
+        let col = TypeMap::vector(3, 1, 4, &TypeMap::primitive(Primitive::I32));
+        let vals = [7i32, 8, 9];
+        let mut wire = Vec::new();
+        wire.extend(vals.iter().flat_map(|v| v.to_le_bytes()));
+        let mut m = vec![0i32; 12];
+        unpack(&col, &wire, as_bytes_mut(&mut m), 1).unwrap();
+        assert_eq!(m[0], 7);
+        assert_eq!(m[4], 8);
+        assert_eq!(m[8], 9);
+        assert_eq!(m.iter().filter(|&&x| x != 0).count(), 3);
+    }
+
+    #[test]
+    fn struct_skips_padding() {
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        struct S {
+            a: u8,
+            b: f64,
+        }
+        let map = TypeMap::aggregate(
+            &[(0, TypeMap::primitive(Primitive::U8)), (8, TypeMap::primitive(Primitive::F64))],
+            std::mem::size_of::<S>(),
+        );
+        let src = [S { a: 1, b: 2.5 }, S { a: 3, b: 4.5 }];
+        let mut wire = Vec::new();
+        pack(&map, as_bytes(&src), 2, &mut wire).unwrap();
+        assert_eq!(wire.len(), 18); // 2 × (1 + 8), padding not on the wire
+        let mut dst = [S { a: 0, b: 0.0 }; 2];
+        unpack(&map, &wire, as_bytes_mut(&mut dst), 2).unwrap();
+        assert_eq!(dst[0].a, 1);
+        assert_eq!(dst[0].b, 2.5);
+        assert_eq!(dst[1].a, 3);
+        assert_eq!(dst[1].b, 4.5);
+    }
+
+    #[test]
+    fn pack_detects_short_buffer() {
+        let t = TypeMap::primitive(Primitive::I64);
+        let src = [0u8; 12]; // 1.5 elements
+        let mut wire = Vec::new();
+        let e = pack(&t, &src, 2, &mut wire).unwrap_err();
+        assert_eq!(e.class, crate::ErrorClass::Buffer);
+    }
+
+    #[test]
+    fn unpack_detects_truncation() {
+        let t = TypeMap::primitive(Primitive::I32);
+        let wire = [0u8; 6];
+        let mut dst = [0u8; 8];
+        let e = unpack(&t, &wire, &mut dst, 2).unwrap_err();
+        assert_eq!(e.class, crate::ErrorClass::Truncate);
+    }
+
+    #[test]
+    fn zero_count_is_noop() {
+        let t = TypeMap::primitive(Primitive::I32);
+        let mut wire = Vec::new();
+        pack(&t, &[], 0, &mut wire).unwrap();
+        assert!(wire.is_empty());
+        let mut dst = [];
+        assert_eq!(unpack(&t, &[], &mut dst, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn typed_copy_between_layouts() {
+        // Copy a column into a contiguous vector.
+        let col = TypeMap::vector(3, 1, 4, &TypeMap::primitive(Primitive::I32));
+        let cont = TypeMap::contiguous(3, &TypeMap::primitive(Primitive::I32));
+        let m: Vec<i32> = (0..12).collect();
+        let mut out = vec![0i32; 3];
+        let n = copy(&col, as_bytes(&m), 1, &cont, as_bytes_mut(&mut out), 1).unwrap();
+        assert_eq!(n, 12);
+        assert_eq!(out, vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn typed_copy_rejects_overflow() {
+        let t = TypeMap::primitive(Primitive::I32);
+        let src = [0i32; 4];
+        let mut dst = [0i32; 2];
+        assert!(copy(&t, as_bytes(&src), 4, &t, as_bytes_mut(&mut dst), 2).is_err());
+    }
+}

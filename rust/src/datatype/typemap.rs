@@ -1,0 +1,412 @@
+//! Typemaps and the derived-datatype constructors (MPI-4.0 §5.1).
+
+use crate::{mpi_err, Result};
+
+/// The predefined primitive types (`MPI_INT`, `MPI_DOUBLE`, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Primitive {
+    I8,
+    U8,
+    I16,
+    U16,
+    I32,
+    U32,
+    I64,
+    U64,
+    F32,
+    F64,
+    /// `MPI_C_FLOAT_COMPLEX` / `std::complex<float>`.
+    C32,
+    /// `MPI_C_DOUBLE_COMPLEX` / `std::complex<double>`.
+    C64,
+    Bool,
+    /// `MPI_BYTE`: untyped bytes.
+    Byte,
+}
+
+impl Primitive {
+    pub const fn size(self) -> usize {
+        match self {
+            Primitive::I8 | Primitive::U8 | Primitive::Bool | Primitive::Byte => 1,
+            Primitive::I16 | Primitive::U16 => 2,
+            Primitive::I32 | Primitive::U32 | Primitive::F32 => 4,
+            Primitive::I64 | Primitive::U64 | Primitive::F64 | Primitive::C32 => 8,
+            Primitive::C64 => 16,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Primitive::I8 => "i8",
+            Primitive::U8 => "u8",
+            Primitive::I16 => "i16",
+            Primitive::U16 => "u16",
+            Primitive::I32 => "i32",
+            Primitive::U32 => "u32",
+            Primitive::I64 => "i64",
+            Primitive::U64 => "u64",
+            Primitive::F32 => "f32",
+            Primitive::F64 => "f64",
+            Primitive::C32 => "c32",
+            Primitive::C64 => "c64",
+            Primitive::Bool => "bool",
+            Primitive::Byte => "byte",
+        }
+    }
+}
+
+/// A flattened typemap: (primitive, displacement) entries plus lb/extent.
+///
+/// Invariants maintained by every constructor:
+/// * `size = Σ entry.size` (wire bytes per element),
+/// * `true_lb = min displacement`, `true_ub = max(displacement + size)`,
+/// * `ub = lb + extent` (extent may exceed the true span — padding — or be
+///   changed by `resized`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TypeMap {
+    entries: Vec<(Primitive, isize)>,
+    lb: isize,
+    extent: isize,
+    // cached derived quantities
+    size: usize,
+    true_lb: isize,
+    true_ub: isize,
+    contiguous: bool,
+}
+
+impl TypeMap {
+    fn build(entries: Vec<(Primitive, isize)>, lb: isize, extent: isize) -> TypeMap {
+        assert!(!entries.is_empty(), "typemap must have at least one entry");
+        let size = entries.iter().map(|(p, _)| p.size()).sum();
+        let true_lb = entries.iter().map(|&(_, d)| d).min().unwrap();
+        let true_ub = entries.iter().map(|&(p, d)| d + p.size() as isize).max().unwrap();
+        // Contiguous = entries tile [0, size) in increasing order with no
+        // gaps/overlaps and extent == size.
+        let mut contiguous = extent == size as isize && true_lb == 0 && lb == 0;
+        if contiguous {
+            let mut off = 0isize;
+            for &(p, d) in &entries {
+                if d != off {
+                    contiguous = false;
+                    break;
+                }
+                off += p.size() as isize;
+            }
+            contiguous = contiguous && off == size as isize;
+        }
+        TypeMap { entries, lb, extent, size, true_lb, true_ub, contiguous }
+    }
+
+    // ---- constructors (the MPI_Type_* family) ----
+
+    /// A predefined primitive type.
+    pub fn primitive(p: Primitive) -> TypeMap {
+        TypeMap::build(vec![(p, 0)], 0, p.size() as isize)
+    }
+
+    /// `MPI_Type_contiguous`.
+    pub fn contiguous(count: usize, base: &TypeMap) -> TypeMap {
+        assert!(count > 0, "contiguous count must be positive");
+        let mut entries = Vec::with_capacity(base.entries.len() * count);
+        for i in 0..count as isize {
+            let shift = base.lb + i * base.extent;
+            entries.extend(base.entries.iter().map(|&(p, d)| (p, d + shift - base.lb)));
+        }
+        TypeMap::build(entries, base.lb, base.extent * count as isize)
+    }
+
+    /// `MPI_Type_vector`: `count` blocks of `blocklength` elements, block
+    /// starts `stride` *elements* apart.
+    pub fn vector(count: usize, blocklength: usize, stride: isize, base: &TypeMap) -> TypeMap {
+        TypeMap::hvector(count, blocklength, stride * base.extent, base)
+    }
+
+    /// `MPI_Type_create_hvector`: stride in *bytes*.
+    pub fn hvector(count: usize, blocklength: usize, stride_bytes: isize, base: &TypeMap) -> TypeMap {
+        assert!(count > 0 && blocklength > 0, "hvector needs positive count/blocklength");
+        let mut entries = Vec::with_capacity(base.entries.len() * count * blocklength);
+        for i in 0..count as isize {
+            for j in 0..blocklength as isize {
+                let shift = i * stride_bytes + j * base.extent;
+                entries.extend(base.entries.iter().map(|&(p, d)| (p, d + shift)));
+            }
+        }
+        let lb = entries.iter().map(|&(_, d)| d).min().unwrap();
+        let ub = entries.iter().map(|&(p, d)| d + p.size() as isize).max().unwrap();
+        TypeMap::build(entries, lb, ub - lb)
+    }
+
+    /// `MPI_Type_indexed`: displacements in elements.
+    pub fn indexed(blocks: &[(usize, isize)], base: &TypeMap) -> TypeMap {
+        let byte_blocks: Vec<(usize, isize)> =
+            blocks.iter().map(|&(bl, d)| (bl, d * base.extent)).collect();
+        TypeMap::hindexed(&byte_blocks, base)
+    }
+
+    /// `MPI_Type_create_hindexed`: displacements in bytes.
+    pub fn hindexed(blocks: &[(usize, isize)], base: &TypeMap) -> TypeMap {
+        assert!(!blocks.is_empty(), "hindexed needs at least one block");
+        let mut entries = Vec::new();
+        for &(blocklength, disp) in blocks {
+            for j in 0..blocklength as isize {
+                let shift = disp + j * base.extent;
+                entries.extend(base.entries.iter().map(|&(p, d)| (p, d + shift)));
+            }
+        }
+        let lb = entries.iter().map(|&(_, d)| d).min().unwrap();
+        let ub = entries.iter().map(|&(p, d)| d + p.size() as isize).max().unwrap();
+        TypeMap::build(entries, lb, ub - lb)
+    }
+
+    /// `MPI_Type_create_indexed_block`: equal block lengths.
+    pub fn indexed_block(blocklength: usize, displs: &[isize], base: &TypeMap) -> TypeMap {
+        let blocks: Vec<(usize, isize)> = displs.iter().map(|&d| (blocklength, d)).collect();
+        TypeMap::indexed(&blocks, base)
+    }
+
+    /// `MPI_Type_create_struct`: fields at explicit byte displacements.
+    pub fn structure(fields: &[(isize, TypeMap, usize)]) -> TypeMap {
+        assert!(!fields.is_empty(), "struct needs at least one field");
+        let mut entries = Vec::new();
+        for (disp, map, count) in fields {
+            for i in 0..*count as isize {
+                let shift = disp + i * map.extent;
+                entries.extend(map.entries.iter().map(|&(p, d)| (p, d + shift)));
+            }
+        }
+        let lb = entries.iter().map(|&(_, d)| d).min().unwrap();
+        let ub = entries.iter().map(|&(p, d)| d + p.size() as isize).max().unwrap();
+        TypeMap::build(entries, lb, ub - lb)
+    }
+
+    /// The reflection entry point used by `#[derive(DataType)]`: fields at
+    /// `offset_of!` displacements, extent = `size_of` the aggregate (so
+    /// trailing padding is part of the stride, exactly like an array of the
+    /// struct in memory).
+    pub fn aggregate(fields: &[(isize, TypeMap)], struct_size: usize) -> TypeMap {
+        assert!(!fields.is_empty(), "aggregate needs at least one field");
+        let mut entries = Vec::new();
+        for (disp, map) in fields {
+            entries.extend(map.entries.iter().map(|&(p, d)| (p, d + disp)));
+        }
+        TypeMap::build(entries, 0, struct_size as isize)
+    }
+
+    /// `MPI_Type_create_resized`.
+    pub fn resized(&self, lb: isize, extent: isize) -> TypeMap {
+        TypeMap::build(self.entries.clone(), lb, extent)
+    }
+
+    /// `MPI_Type_create_subarray` (order = C, row-major).
+    pub fn subarray(sizes: &[usize], subsizes: &[usize], starts: &[usize], base: &TypeMap) -> Result<TypeMap> {
+        if sizes.len() != subsizes.len() || sizes.len() != starts.len() || sizes.is_empty() {
+            return Err(mpi_err!(Dims, "subarray dimension arrays must be equal nonzero length"));
+        }
+        for d in 0..sizes.len() {
+            if subsizes[d] == 0 || subsizes[d] + starts[d] > sizes[d] {
+                return Err(mpi_err!(
+                    Arg,
+                    "subarray dim {d}: start {} + subsize {} exceeds size {}",
+                    starts[d],
+                    subsizes[d],
+                    sizes[d]
+                ));
+            }
+        }
+        // Build innermost-out: contiguous run in the last dim, then hvector
+        // per outer dim with the full-array stride.
+        let ndims = sizes.len();
+        let mut cur = TypeMap::contiguous(subsizes[ndims - 1], base);
+        let mut stride = base.extent * sizes[ndims - 1] as isize;
+        for d in (0..ndims - 1).rev() {
+            cur = TypeMap::hvector(subsizes[d], 1, stride, &cur);
+            stride *= sizes[d] as isize;
+        }
+        // Shift to the start offset and fix lb/extent to the full array so
+        // consecutive elements stride over the whole array.
+        let mut elem_stride = base.extent;
+        let mut offset = 0isize;
+        for d in (0..ndims).rev() {
+            offset += starts[d] as isize * elem_stride;
+            elem_stride *= sizes[d] as isize;
+        }
+        let total_bytes = elem_stride; // base.extent * Π sizes
+        let entries: Vec<(Primitive, isize)> =
+            cur.entries.iter().map(|&(p, d)| (p, d + offset)).collect();
+        Ok(TypeMap::build(entries, 0, total_bytes))
+    }
+
+    /// `MPI_Type_dup`.
+    pub fn dup(&self) -> TypeMap {
+        self.clone()
+    }
+
+    // ---- accessors ----
+
+    pub fn entries(&self) -> &[(Primitive, isize)] {
+        &self.entries
+    }
+
+    /// Wire bytes per element (`MPI_Type_size`).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Stride between consecutive elements (`MPI_Type_get_extent`).
+    pub fn extent(&self) -> isize {
+        self.extent
+    }
+
+    pub fn lb(&self) -> isize {
+        self.lb
+    }
+
+    pub fn ub(&self) -> isize {
+        self.lb + self.extent
+    }
+
+    /// `MPI_Type_get_true_extent`.
+    pub fn true_lb(&self) -> isize {
+        self.true_lb
+    }
+
+    pub fn true_ub(&self) -> isize {
+        self.true_ub
+    }
+
+    pub fn true_extent(&self) -> isize {
+        self.true_ub - self.true_lb
+    }
+
+    /// Whether pack/unpack can memcpy.
+    pub fn is_contiguous(&self) -> bool {
+        self.contiguous
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn int() -> TypeMap {
+        TypeMap::primitive(Primitive::I32)
+    }
+
+    #[test]
+    fn primitive_properties() {
+        let t = TypeMap::primitive(Primitive::F64);
+        assert_eq!(t.size(), 8);
+        assert_eq!(t.extent(), 8);
+        assert!(t.is_contiguous());
+        assert_eq!(Primitive::C64.size(), 16);
+    }
+
+    #[test]
+    fn contiguous_tiles() {
+        let t = TypeMap::contiguous(4, &int());
+        assert_eq!(t.size(), 16);
+        assert_eq!(t.extent(), 16);
+        assert!(t.is_contiguous());
+        assert_eq!(t.entries().len(), 4);
+        assert_eq!(t.entries()[3], (Primitive::I32, 12));
+    }
+
+    #[test]
+    fn vector_strides() {
+        // 3 blocks of 2 ints, stride 4 ints: offsets 0,4, 16,20, 32,36.
+        let t = TypeMap::vector(3, 2, 4, &int());
+        assert_eq!(t.size(), 24);
+        assert!(!t.is_contiguous());
+        let offs: Vec<isize> = t.entries().iter().map(|&(_, d)| d).collect();
+        assert_eq!(offs, vec![0, 4, 16, 20, 32, 36]);
+        assert_eq!(t.true_ub(), 40);
+        assert_eq!(t.extent(), 40);
+    }
+
+    #[test]
+    fn hvector_with_byte_stride() {
+        let t = TypeMap::hvector(2, 1, 10, &int());
+        let offs: Vec<isize> = t.entries().iter().map(|&(_, d)| d).collect();
+        assert_eq!(offs, vec![0, 10]);
+        assert_eq!(t.size(), 8);
+        assert_eq!(t.extent(), 14);
+    }
+
+    #[test]
+    fn indexed_blocks() {
+        let t = TypeMap::indexed(&[(2, 0), (1, 5)], &int());
+        let offs: Vec<isize> = t.entries().iter().map(|&(_, d)| d).collect();
+        assert_eq!(offs, vec![0, 4, 20]);
+        assert_eq!(t.size(), 12);
+    }
+
+    #[test]
+    fn indexed_with_negative_displacement() {
+        let t = TypeMap::indexed(&[(1, -2), (1, 0)], &int());
+        assert_eq!(t.lb(), -8);
+        assert_eq!(t.true_lb(), -8);
+        assert_eq!(t.extent(), 12);
+        assert_eq!(t.size(), 8);
+    }
+
+    #[test]
+    fn struct_with_padding() {
+        // (i8 at 0, f64 at 8) like #[repr(C)] { a: i8, b: f64 } — size 16.
+        let t = TypeMap::structure(&[
+            (0, TypeMap::primitive(Primitive::I8), 1),
+            (8, TypeMap::primitive(Primitive::F64), 1),
+        ]);
+        assert_eq!(t.size(), 9); // wire size skips padding
+        assert_eq!(t.true_ub(), 16);
+        assert!(!t.is_contiguous());
+    }
+
+    #[test]
+    fn aggregate_uses_struct_size_as_extent() {
+        let t = TypeMap::aggregate(
+            &[(0, TypeMap::primitive(Primitive::I8)), (8, TypeMap::primitive(Primitive::F64))],
+            16,
+        );
+        assert_eq!(t.extent(), 16);
+        assert_eq!(t.size(), 9);
+        assert_eq!(t.lb(), 0);
+    }
+
+    #[test]
+    fn resized_changes_extent_only() {
+        let t = int().resized(-4, 12);
+        assert_eq!(t.lb(), -4);
+        assert_eq!(t.ub(), 8);
+        assert_eq!(t.extent(), 12);
+        assert_eq!(t.size(), 4);
+        assert!(!t.is_contiguous());
+    }
+
+    #[test]
+    fn subarray_2d() {
+        // 4x6 array of i32, take 2x3 block starting at (1,2).
+        let t = TypeMap::subarray(&[4, 6], &[2, 3], &[1, 2], &int()).unwrap();
+        assert_eq!(t.size(), 2 * 3 * 4);
+        assert_eq!(t.extent(), 4 * 6 * 4); // full array
+        let offs: Vec<isize> = t.entries().iter().map(|&(_, d)| d).collect();
+        // Row 1 cols 2..5 → elements 8,9,10; row 2 cols 2..5 → 14,15,16.
+        assert_eq!(offs, vec![32, 36, 40, 56, 60, 64]);
+    }
+
+    #[test]
+    fn subarray_validates() {
+        assert!(TypeMap::subarray(&[4], &[5], &[0], &int()).is_err());
+        assert!(TypeMap::subarray(&[4, 4], &[2], &[0], &int()).is_err());
+        assert!(TypeMap::subarray(&[4], &[2], &[3], &int()).is_err());
+    }
+
+    #[test]
+    fn nested_derived_types() {
+        // vector of contiguous pairs.
+        let pair = TypeMap::contiguous(2, &int());
+        let t = TypeMap::vector(2, 1, 2, &pair);
+        assert_eq!(t.size(), 16);
+        let offs: Vec<isize> = t.entries().iter().map(|&(_, d)| d).collect();
+        assert_eq!(offs, vec![0, 4, 16, 20]);
+    }
+}

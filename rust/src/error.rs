@@ -1,0 +1,306 @@
+//! MPI error classes, error codes and error handlers.
+//!
+//! The paper: *"Error handling is performed by checking the return values of
+//! viable MPI functions for success, throwing an exception otherwise. [...]
+//! The exceptions provide an error code, which derives from the error class
+//! as specified by the standard. Default error codes are available as
+//! variables scoped in the `mpi::error` namespace."*
+//!
+//! In Rust the exception analog is [`MpiError`] carried through
+//! `Result<T, MpiError>`; the `raw` layer converts it back to C-style
+//! integer return codes, and the `panic-on-error` cargo feature mirrors the
+//! paper's macro-enabled exception mode (the raw layer panics instead of
+//! returning a code).
+
+use std::fmt;
+
+/// The predefined MPI-4.0 error classes (standard §9.4, table "Error
+/// classes"). The integer values follow the conventional MPICH numbering so
+/// the `raw` interface exposes familiar constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(i32)]
+pub enum ErrorClass {
+    Success = 0,
+    Buffer = 1,
+    Count = 2,
+    Type = 3,
+    Tag = 4,
+    Comm = 5,
+    Rank = 6,
+    Request = 7,
+    Root = 8,
+    Group = 9,
+    Op = 10,
+    Topology = 11,
+    Dims = 12,
+    Arg = 13,
+    Unknown = 14,
+    Truncate = 15,
+    Other = 16,
+    Intern = 17,
+    InStatus = 18,
+    Pending = 19,
+    Keyval = 20,
+    NoMem = 21,
+    Base = 22,
+    InfoKey = 23,
+    InfoValue = 24,
+    InfoNokey = 25,
+    Spawn = 26,
+    Port = 27,
+    Service = 28,
+    Name = 29,
+    Win = 30,
+    Size = 31,
+    Disp = 32,
+    Info = 33,
+    Locktype = 34,
+    Assert = 35,
+    RmaConflict = 36,
+    RmaSync = 37,
+    RmaRange = 38,
+    RmaAttach = 39,
+    RmaShared = 40,
+    RmaFlavor = 41,
+    File = 42,
+    NotSame = 43,
+    Amode = 44,
+    UnsupportedDatarep = 45,
+    UnsupportedOperation = 46,
+    BadFile = 47,
+    NoSuchFile = 48,
+    FileExists = 49,
+    FileInUse = 50,
+    NoSpace = 51,
+    Quota = 52,
+    ReadOnly = 53,
+    AccessDenied = 54,
+    DupDatarep = 55,
+    Conversion = 56,
+    Io = 57,
+    Session = 58,
+    ProcAborted = 59,
+    ValueTooLarge = 60,
+    ErrPending = 61,
+}
+
+impl ErrorClass {
+    /// The C-style integer error code for this class (`MPI_ERR_*`).
+    pub const fn code(self) -> i32 {
+        self as i32
+    }
+
+    /// Inverse of [`ErrorClass::code`], `MPI_Error_class` analog.
+    pub fn from_code(code: i32) -> ErrorClass {
+        use ErrorClass::*;
+        const ALL: [ErrorClass; 62] = [
+            Success, Buffer, Count, Type, Tag, Comm, Rank, Request, Root, Group, Op, Topology,
+            Dims, Arg, Unknown, Truncate, Other, Intern, InStatus, Pending, Keyval, NoMem, Base,
+            InfoKey, InfoValue, InfoNokey, Spawn, Port, Service, Name, Win, Size, Disp, Info,
+            Locktype, Assert, RmaConflict, RmaSync, RmaRange, RmaAttach, RmaShared, RmaFlavor,
+            File, NotSame, Amode, UnsupportedDatarep, UnsupportedOperation, BadFile, NoSuchFile,
+            FileExists, FileInUse, NoSpace, Quota, ReadOnly, AccessDenied, DupDatarep, Conversion,
+            Io, Session, ProcAborted, ValueTooLarge, ErrPending,
+        ];
+        ALL.get(code as usize).copied().unwrap_or(Unknown)
+    }
+
+    /// `MPI_Error_string` analog.
+    pub fn as_str(self) -> &'static str {
+        use ErrorClass::*;
+        match self {
+            Success => "no error",
+            Buffer => "invalid buffer pointer",
+            Count => "invalid count argument",
+            Type => "invalid datatype argument",
+            Tag => "invalid tag argument",
+            Comm => "invalid communicator",
+            Rank => "invalid rank",
+            Request => "invalid request",
+            Root => "invalid root",
+            Group => "invalid group",
+            Op => "invalid operation",
+            Topology => "invalid topology",
+            Dims => "invalid dimension argument",
+            Arg => "invalid argument",
+            Unknown => "unknown error",
+            Truncate => "message truncated on receive",
+            Other => "known error not in this list",
+            Intern => "internal MPI error",
+            InStatus => "error code is in status",
+            Pending => "pending request",
+            Keyval => "invalid keyval",
+            NoMem => "out of memory",
+            Base => "invalid base",
+            InfoKey => "invalid info key",
+            InfoValue => "invalid info value",
+            InfoNokey => "info key not defined",
+            Spawn => "spawn error",
+            Port => "invalid port",
+            Service => "invalid service",
+            Name => "invalid name",
+            Win => "invalid window",
+            Size => "invalid size",
+            Disp => "invalid displacement",
+            Info => "invalid info object",
+            Locktype => "invalid lock type",
+            Assert => "invalid assert argument",
+            RmaConflict => "conflicting RMA accesses",
+            RmaSync => "invalid RMA synchronization",
+            RmaRange => "RMA target outside window",
+            RmaAttach => "memory cannot be attached",
+            RmaShared => "memory cannot be shared",
+            RmaFlavor => "wrong window flavor",
+            File => "invalid file handle",
+            NotSame => "collective argument mismatch across ranks",
+            Amode => "invalid access mode",
+            UnsupportedDatarep => "unsupported data representation",
+            UnsupportedOperation => "unsupported file operation",
+            BadFile => "invalid file name",
+            NoSuchFile => "file does not exist",
+            FileExists => "file exists",
+            FileInUse => "file currently in use",
+            NoSpace => "not enough space",
+            Quota => "quota exceeded",
+            ReadOnly => "read-only file or file system",
+            AccessDenied => "permission denied",
+            DupDatarep => "data representation already defined",
+            Conversion => "data conversion error",
+            Io => "I/O error",
+            Session => "invalid session",
+            ProcAborted => "peer process aborted",
+            ValueTooLarge => "value too large to store",
+            ErrPending => "operation still pending",
+        }
+    }
+}
+
+impl fmt::Display for ErrorClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The exception analog: every fallible operation in the library returns
+/// `Result<T, MpiError>`. The error carries its class (standard-specified)
+/// plus a human-readable context message.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("MPI error ({}): {message}", class.as_str())]
+pub struct MpiError {
+    pub class: ErrorClass,
+    pub message: String,
+}
+
+impl MpiError {
+    pub fn new(class: ErrorClass, message: impl Into<String>) -> Self {
+        MpiError { class, message: message.into() }
+    }
+
+    /// The integer error code (`MPI_Error_class` of the code is the class
+    /// itself for all errors raised by this library).
+    pub fn code(&self) -> i32 {
+        self.class.code()
+    }
+}
+
+/// Convenience constructor macro used throughout the substrate.
+#[macro_export]
+macro_rules! mpi_err {
+    ($class:ident, $($arg:tt)*) => {
+        $crate::error::MpiError::new($crate::error::ErrorClass::$class, format!($($arg)*))
+    };
+}
+
+pub type Result<T> = std::result::Result<T, MpiError>;
+
+/// Error handler semantics attached to communicators, windows and files
+/// (`MPI_Errhandler`). `ErrorsAreFatal` aborts the simulated job (panics the
+/// rank thread), `ErrorsReturn` propagates the `Result`, `Custom` invokes a
+/// user closure first and then returns.
+#[derive(Clone)]
+pub enum ErrorHandler {
+    ErrorsAreFatal,
+    ErrorsReturn,
+    /// `MPI_ERRORS_ABORT` (MPI 4.0): abort only the local rank.
+    ErrorsAbort,
+    Custom(std::sync::Arc<dyn Fn(&MpiError) + Send + Sync>),
+}
+
+impl fmt::Debug for ErrorHandler {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ErrorHandler::ErrorsAreFatal => f.write_str("ErrorsAreFatal"),
+            ErrorHandler::ErrorsReturn => f.write_str("ErrorsReturn"),
+            ErrorHandler::ErrorsAbort => f.write_str("ErrorsAbort"),
+            ErrorHandler::Custom(_) => f.write_str("Custom(..)"),
+        }
+    }
+}
+
+impl ErrorHandler {
+    /// Apply the handler to a result: fatal handlers panic, returning
+    /// handlers pass the error through (after invoking the custom hook).
+    pub fn handle<T>(&self, result: Result<T>) -> Result<T> {
+        match (&result, self) {
+            (Err(e), ErrorHandler::ErrorsAreFatal) | (Err(e), ErrorHandler::ErrorsAbort) => {
+                panic!("MPI_ERRORS_ARE_FATAL: {e}");
+            }
+            (Err(e), ErrorHandler::Custom(hook)) => {
+                hook(e);
+                result
+            }
+            _ => result,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_code_roundtrip() {
+        for code in 0..62 {
+            let class = ErrorClass::from_code(code);
+            assert_eq!(class.code(), code, "class {class:?}");
+        }
+        assert_eq!(ErrorClass::from_code(9999), ErrorClass::Unknown);
+    }
+
+    #[test]
+    fn error_display_contains_class_and_message() {
+        let e = MpiError::new(ErrorClass::Truncate, "recv buffer 4 < message 16");
+        let s = e.to_string();
+        assert!(s.contains("truncated"), "{s}");
+        assert!(s.contains("recv buffer"), "{s}");
+        assert_eq!(e.code(), 15);
+    }
+
+    #[test]
+    fn errors_return_passes_through() {
+        let h = ErrorHandler::ErrorsReturn;
+        let r: Result<i32> = Err(MpiError::new(ErrorClass::Tag, "bad tag"));
+        assert!(h.handle(r).is_err());
+        assert_eq!(h.handle(Ok(3i32)).unwrap(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "MPI_ERRORS_ARE_FATAL")]
+    fn errors_fatal_panics() {
+        let h = ErrorHandler::ErrorsAreFatal;
+        let r: Result<()> = Err(MpiError::new(ErrorClass::Rank, "rank 7 out of range"));
+        let _ = h.handle(r);
+    }
+
+    #[test]
+    fn custom_handler_invoked_then_returns() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let hit = Arc::new(AtomicBool::new(false));
+        let hit2 = hit.clone();
+        let h = ErrorHandler::Custom(Arc::new(move |_| hit2.store(true, Ordering::SeqCst)));
+        let r: Result<()> = Err(MpiError::new(ErrorClass::Count, "negative count"));
+        assert!(h.handle(r).is_err());
+        assert!(hit.load(Ordering::SeqCst));
+    }
+}

@@ -1,0 +1,262 @@
+//! Process groups (MPI-4.0 §7.3): ordered sets of world ranks with the
+//! full set algebra. Groups are cheap immutable values; communicators hold
+//! one.
+
+use crate::{mpi_err, Result};
+use std::sync::Arc;
+
+/// `MPI_GROUP_EMPTY` and friends. A group maps *group rank* (position) →
+/// *world rank* (value).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Group {
+    members: Arc<Vec<usize>>,
+}
+
+/// `MPI_Group_compare` / `MPI_Comm_compare` results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Comparison {
+    /// Same members, same order.
+    Identical,
+    /// Same members, different order.
+    Similar,
+    Unequal,
+}
+
+impl Group {
+    /// Build from an explicit world-rank list. Duplicates are invalid.
+    pub fn new(members: Vec<usize>) -> Result<Group> {
+        let mut seen = std::collections::HashSet::new();
+        for &m in &members {
+            if !seen.insert(m) {
+                return Err(mpi_err!(Group, "duplicate world rank {m} in group"));
+            }
+        }
+        Ok(Group { members: Arc::new(members) })
+    }
+
+    /// The group 0..n (world group of an n-rank job).
+    pub fn world(n: usize) -> Group {
+        Group { members: Arc::new((0..n).collect()) }
+    }
+
+    /// `MPI_GROUP_EMPTY`.
+    pub fn empty() -> Group {
+        Group { members: Arc::new(Vec::new()) }
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// World rank of group rank `r`.
+    pub fn world_rank(&self, r: usize) -> Result<usize> {
+        self.members.get(r).copied().ok_or_else(|| {
+            mpi_err!(Rank, "group rank {r} out of range (group size {})", self.size())
+        })
+    }
+
+    /// Group rank of this process given its world rank
+    /// (`MPI_Group_rank`; `None` = `MPI_UNDEFINED`).
+    pub fn rank_of(&self, world_rank: usize) -> Option<usize> {
+        self.members.iter().position(|&m| m == world_rank)
+    }
+
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// `MPI_Group_translate_ranks`: positions in `self` → positions in
+    /// `other` (`None` where absent).
+    pub fn translate_ranks(&self, ranks: &[usize], other: &Group) -> Result<Vec<Option<usize>>> {
+        ranks
+            .iter()
+            .map(|&r| self.world_rank(r).map(|w| other.rank_of(w)))
+            .collect()
+    }
+
+    /// `MPI_Group_union`: members of self, then members of other not in
+    /// self (standard-mandated order).
+    pub fn union(&self, other: &Group) -> Group {
+        let mut v: Vec<usize> = self.members.to_vec();
+        for &m in other.members.iter() {
+            if !self.members.contains(&m) {
+                v.push(m);
+            }
+        }
+        Group { members: Arc::new(v) }
+    }
+
+    /// `MPI_Group_intersection`: members of self that are in other, in
+    /// self's order.
+    pub fn intersection(&self, other: &Group) -> Group {
+        let v = self.members.iter().copied().filter(|m| other.members.contains(m)).collect();
+        Group { members: Arc::new(v) }
+    }
+
+    /// `MPI_Group_difference`: members of self not in other, in self's
+    /// order.
+    pub fn difference(&self, other: &Group) -> Group {
+        let v = self.members.iter().copied().filter(|m| !other.members.contains(m)).collect();
+        Group { members: Arc::new(v) }
+    }
+
+    /// `MPI_Group_incl`.
+    pub fn incl(&self, ranks: &[usize]) -> Result<Group> {
+        let mut v = Vec::with_capacity(ranks.len());
+        for &r in ranks {
+            v.push(self.world_rank(r)?);
+        }
+        Group::new(v)
+    }
+
+    /// `MPI_Group_excl`.
+    pub fn excl(&self, ranks: &[usize]) -> Result<Group> {
+        for &r in ranks {
+            self.world_rank(r)?; // validate
+        }
+        let v = (0..self.size())
+            .filter(|r| !ranks.contains(r))
+            .map(|r| self.members[r])
+            .collect();
+        Group::new(v)
+    }
+
+    /// `MPI_Group_range_incl`: triplets (first, last, stride).
+    pub fn range_incl(&self, ranges: &[(usize, usize, isize)]) -> Result<Group> {
+        let mut ranks = Vec::new();
+        for &(first, last, stride) in ranges {
+            if stride == 0 {
+                return Err(mpi_err!(Arg, "range stride must be nonzero"));
+            }
+            let mut r = first as isize;
+            if stride > 0 {
+                while r <= last as isize {
+                    ranks.push(r as usize);
+                    r += stride;
+                }
+            } else {
+                while r >= last as isize {
+                    ranks.push(r as usize);
+                    r += stride;
+                }
+            }
+        }
+        self.incl(&ranks)
+    }
+
+    /// `MPI_Group_range_excl`.
+    pub fn range_excl(&self, ranges: &[(usize, usize, isize)]) -> Result<Group> {
+        let included = self.range_incl(ranges)?;
+        let excl_ranks: Vec<usize> =
+            included.members.iter().filter_map(|&w| self.rank_of(w)).collect();
+        self.excl(&excl_ranks)
+    }
+
+    /// `MPI_Group_compare`.
+    pub fn compare(&self, other: &Group) -> Comparison {
+        if self.members == other.members {
+            return Comparison::Identical;
+        }
+        if self.size() == other.size() {
+            let mut a: Vec<usize> = self.members.to_vec();
+            let mut b: Vec<usize> = other.members.to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            if a == b {
+                return Comparison::Similar;
+            }
+        }
+        Comparison::Unequal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_and_rank_lookup() {
+        let g = Group::world(4);
+        assert_eq!(g.size(), 4);
+        assert_eq!(g.world_rank(2).unwrap(), 2);
+        assert_eq!(g.rank_of(3), Some(3));
+        assert_eq!(g.rank_of(4), None);
+        assert!(g.world_rank(4).is_err());
+    }
+
+    #[test]
+    fn duplicates_rejected() {
+        assert!(Group::new(vec![0, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn incl_excl() {
+        let g = Group::world(6);
+        let inc = g.incl(&[4, 2, 0]).unwrap();
+        assert_eq!(inc.members(), &[4, 2, 0]); // order preserved
+        let exc = g.excl(&[0, 5]).unwrap();
+        assert_eq!(exc.members(), &[1, 2, 3, 4]);
+        assert!(g.incl(&[9]).is_err());
+    }
+
+    #[test]
+    fn set_algebra() {
+        let g = Group::world(8);
+        let a = g.incl(&[0, 2, 4]).unwrap();
+        let b = g.incl(&[4, 5, 0]).unwrap();
+        assert_eq!(a.union(&b).members(), &[0, 2, 4, 5]);
+        assert_eq!(a.intersection(&b).members(), &[0, 4]);
+        assert_eq!(a.difference(&b).members(), &[2]);
+        assert_eq!(b.difference(&a).members(), &[5]);
+    }
+
+    #[test]
+    fn union_with_empty_identity() {
+        let g = Group::world(3);
+        assert_eq!(g.union(&Group::empty()).compare(&g), Comparison::Identical);
+        assert_eq!(Group::empty().union(&g).compare(&g), Comparison::Identical);
+        assert!(g.intersection(&Group::empty()).is_empty());
+    }
+
+    #[test]
+    fn range_incl_strides() {
+        let g = Group::world(10);
+        let r = g.range_incl(&[(0, 6, 2)]).unwrap();
+        assert_eq!(r.members(), &[0, 2, 4, 6]);
+        let rev = g.range_incl(&[(6, 0, -3)]).unwrap();
+        assert_eq!(rev.members(), &[6, 3, 0]);
+        assert!(g.range_incl(&[(0, 3, 0)]).is_err());
+    }
+
+    #[test]
+    fn range_excl_complement() {
+        let g = Group::world(6);
+        let r = g.range_excl(&[(1, 3, 1)]).unwrap();
+        assert_eq!(r.members(), &[0, 4, 5]);
+    }
+
+    #[test]
+    fn compare_semantics() {
+        let g = Group::world(4);
+        let same = g.incl(&[0, 1, 2, 3]).unwrap();
+        let shuffled = g.incl(&[3, 1, 2, 0]).unwrap();
+        let other = g.incl(&[0, 1]).unwrap();
+        assert_eq!(g.compare(&same), Comparison::Identical);
+        assert_eq!(g.compare(&shuffled), Comparison::Similar);
+        assert_eq!(g.compare(&other), Comparison::Unequal);
+    }
+
+    #[test]
+    fn translate_ranks_across_groups() {
+        let g = Group::world(8);
+        let a = g.incl(&[1, 3, 5, 7]).unwrap();
+        let b = g.incl(&[5, 1]).unwrap();
+        let t = a.translate_ranks(&[0, 1, 2, 3], &b).unwrap();
+        assert_eq!(t, vec![Some(1), None, Some(0), None]);
+        assert!(a.translate_ranks(&[4], &b).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Info objects (MPI-4.0 §10): string key/value hint dictionaries attached
+//! to communicators, windows, files and sessions.
+
+use std::collections::BTreeMap;
+
+/// `MPI_Info`. Cloning is `MPI_Info_dup`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Info {
+    kv: BTreeMap<String, String>,
+}
+
+impl Info {
+    /// `MPI_INFO_NULL` / `MPI_Info_create`.
+    pub fn new() -> Info {
+        Info::default()
+    }
+
+    /// Builder-style convenience used by the modern interface's
+    /// description objects.
+    pub fn with(mut self, key: &str, value: &str) -> Info {
+        self.set(key, value);
+        self
+    }
+
+    /// `MPI_Info_set`.
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.kv.insert(key.to_string(), value.to_string());
+    }
+
+    /// `MPI_Info_get`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    /// `MPI_Info_delete`. Returns whether the key existed.
+    pub fn delete(&mut self, key: &str) -> bool {
+        self.kv.remove(key).is_some()
+    }
+
+    /// `MPI_Info_get_nkeys`.
+    pub fn nkeys(&self) -> usize {
+        self.kv.len()
+    }
+
+    /// `MPI_Info_get_nthkey` (keys are in deterministic sorted order).
+    pub fn nth_key(&self, n: usize) -> Option<&str> {
+        self.kv.keys().nth(n).map(|s| s.as_str())
+    }
+
+    /// Typed read with default (hints are advisory).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.kv.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_delete() {
+        let mut i = Info::new();
+        i.set("cb_nodes", "4");
+        assert_eq!(i.get("cb_nodes"), Some("4"));
+        assert_eq!(i.nkeys(), 1);
+        assert!(i.delete("cb_nodes"));
+        assert!(!i.delete("cb_nodes"));
+        assert_eq!(i.get("cb_nodes"), None);
+    }
+
+    #[test]
+    fn overwrite_and_nth() {
+        let i = Info::new().with("b", "2").with("a", "1").with("b", "3");
+        assert_eq!(i.get("b"), Some("3"));
+        assert_eq!(i.nth_key(0), Some("a"));
+        assert_eq!(i.nth_key(1), Some("b"));
+        assert_eq!(i.nth_key(2), None);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let i = Info::new().with("stripe", "16").with("bad", "xyz");
+        assert_eq!(i.get_parsed_or("stripe", 4usize), 16);
+        assert_eq!(i.get_parsed_or("bad", 4usize), 4);
+        assert_eq!(i.get_parsed_or("missing", 4usize), 4);
+    }
+
+    #[test]
+    fn dup_is_clone() {
+        let a = Info::new().with("k", "v");
+        let b = a.clone();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,396 @@
+//! File handles (§14.2): open/close/delete, read/write at explicit
+//! offsets, individual and shared file pointers, collective and ordered
+//! variants, nonblocking wrappers.
+
+use super::view::View;
+use crate::collective;
+use crate::comm::Comm;
+use crate::datatype::{pack, unpack, Datatype, Primitive};
+use crate::op::Op;
+use crate::request::{grequest_start, Request};
+use crate::transport::fabric::FileNode;
+use crate::{mpi_err, ErrorClass, MpiError, Result};
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// `MPI_MODE_*` access-mode flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AccessMode {
+    pub rdonly: bool,
+    pub wronly: bool,
+    pub rdwr: bool,
+    pub create: bool,
+    pub excl: bool,
+    pub append: bool,
+    pub delete_on_close: bool,
+}
+
+impl AccessMode {
+    pub fn read() -> AccessMode {
+        AccessMode { rdonly: true, ..Default::default() }
+    }
+
+    pub fn write() -> AccessMode {
+        AccessMode { wronly: true, create: true, ..Default::default() }
+    }
+
+    pub fn read_write() -> AccessMode {
+        AccessMode { rdwr: true, create: true, ..Default::default() }
+    }
+
+    pub fn with_excl(mut self) -> AccessMode {
+        self.excl = true;
+        self
+    }
+
+    pub fn with_append(mut self) -> AccessMode {
+        self.append = true;
+        self
+    }
+
+    pub fn with_delete_on_close(mut self) -> AccessMode {
+        self.delete_on_close = true;
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        let n = [self.rdonly, self.wronly, self.rdwr].iter().filter(|&&b| b).count();
+        if n != 1 {
+            return Err(mpi_err!(Amode, "exactly one of RDONLY/WRONLY/RDWR required"));
+        }
+        if self.rdonly && (self.create || self.excl || self.append) {
+            return Err(mpi_err!(Amode, "RDONLY is incompatible with CREATE/EXCL/APPEND"));
+        }
+        Ok(())
+    }
+
+    pub fn can_read(&self) -> bool {
+        self.rdonly || self.rdwr
+    }
+
+    pub fn can_write(&self) -> bool {
+        self.wronly || self.rdwr
+    }
+}
+
+/// `MPI_File`.
+pub struct File {
+    comm: Comm,
+    node: Arc<FileNode>,
+    path: String,
+    amode: AccessMode,
+    view: RefCell<View>,
+    /// Individual file pointer, in *logical view bytes*.
+    ptr: Cell<u64>,
+    atomicity: Cell<bool>,
+}
+
+impl std::fmt::Debug for File {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("File")
+            .field("path", &self.path)
+            .field("amode", &self.amode)
+            .field("ptr", &self.ptr.get())
+            .finish_non_exhaustive()
+    }
+}
+
+impl File {
+    /// `MPI_File_open` — collective over `comm`.
+    pub fn open(comm: &Comm, path: &str, amode: AccessMode) -> Result<File> {
+        amode.validate()?;
+        let comm = comm.dup()?;
+        let fabric = comm.rank_ctx().fabric.clone();
+        // Rank 0 performs the filesystem transaction; the outcome is
+        // broadcast so every rank agrees.
+        let mut code = [0u8; 4];
+        if comm.rank() == 0 {
+            let mut files = fabric.files.lock().unwrap();
+            let exists = files.contains_key(path);
+            let c: i32 = if exists && amode.excl {
+                ErrorClass::FileExists.code()
+            } else if !exists && !amode.create {
+                ErrorClass::NoSuchFile.code()
+            } else {
+                files.entry(path.to_string()).or_default();
+                0
+            };
+            code.copy_from_slice(&c.to_le_bytes());
+        }
+        let i32t = Datatype::primitive(Primitive::I32);
+        collective::bcast(&comm, &mut code, 1, &i32t, 0)?;
+        let code = i32::from_le_bytes(code);
+        if code != 0 {
+            return Err(MpiError::new(ErrorClass::from_code(code), format!("open '{path}'")));
+        }
+        let node = fabric.files.lock().unwrap().get(path).unwrap().clone();
+        node.open_count.fetch_add(1, Ordering::SeqCst);
+        let f = File {
+            comm,
+            node,
+            path: path.to_string(),
+            amode,
+            view: RefCell::new(View::default()),
+            ptr: Cell::new(0),
+            atomicity: Cell::new(false),
+        };
+        if amode.append {
+            f.ptr.set(f.size()? as u64);
+        }
+        Ok(f)
+    }
+
+    /// `MPI_File_delete` (non-collective, any rank).
+    pub fn delete(comm: &Comm, path: &str) -> Result<()> {
+        let fabric = comm.rank_ctx().fabric.clone();
+        let mut files = fabric.files.lock().unwrap();
+        match files.get(path) {
+            None => Err(mpi_err!(NoSuchFile, "delete '{path}'")),
+            Some(node) if node.open_count.load(Ordering::SeqCst) > 0 => {
+                Err(mpi_err!(FileInUse, "delete '{path}' while open"))
+            }
+            Some(_) => {
+                files.remove(path);
+                Ok(())
+            }
+        }
+    }
+
+    /// `MPI_File_close` — collective; honors delete-on-close.
+    pub fn close(self) -> Result<()> {
+        collective::barrier(&self.comm)?;
+        let remaining = self.node.open_count.fetch_sub(1, Ordering::SeqCst) - 1;
+        if self.amode.delete_on_close && remaining == 0 && self.comm.rank() == 0 {
+            self.comm.rank_ctx().fabric.files.lock().unwrap().remove(&self.path);
+        }
+        Ok(())
+    }
+
+    pub fn amode(&self) -> AccessMode {
+        self.amode
+    }
+
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    /// `MPI_File_get_size` (physical bytes).
+    pub fn size(&self) -> Result<usize> {
+        Ok(self.node.data.lock().unwrap().len())
+    }
+
+    /// `MPI_File_set_size` (truncate or zero-extend); collective. The
+    /// leading barrier keeps the resize from racing reads other ranks
+    /// issue before entering the call.
+    pub fn set_size(&self, size: usize) -> Result<()> {
+        collective::barrier(&self.comm)?;
+        if self.comm.rank() == 0 {
+            self.node.data.lock().unwrap().resize(size, 0);
+        }
+        collective::barrier(&self.comm)
+    }
+
+    /// `MPI_File_preallocate`.
+    pub fn preallocate(&self, size: usize) -> Result<()> {
+        collective::barrier(&self.comm)?;
+        if self.comm.rank() == 0 {
+            let mut d = self.node.data.lock().unwrap();
+            if d.len() < size {
+                d.resize(size, 0);
+            }
+        }
+        collective::barrier(&self.comm)
+    }
+
+    /// `MPI_File_set_view` — collective.
+    pub fn set_view(&self, displacement: u64, etype: &Datatype, filetype: &Datatype) -> Result<()> {
+        let v = View::new(displacement, etype.clone(), filetype.clone())?;
+        *self.view.borrow_mut() = v;
+        self.ptr.set(0);
+        if self.comm.rank() == 0 {
+            *self.node.shared_ptr.lock().unwrap() = 0;
+        }
+        collective::barrier(&self.comm)
+    }
+
+    /// `MPI_File_get_view`.
+    pub fn view(&self) -> View {
+        self.view.borrow().clone()
+    }
+
+    /// `MPI_File_set_atomicity` / `get_atomicity`.
+    pub fn set_atomicity(&self, on: bool) {
+        self.atomicity.set(on);
+    }
+
+    pub fn atomicity(&self) -> bool {
+        self.atomicity.get()
+    }
+
+    /// `MPI_File_sync` (the in-memory store is always durable; this is a
+    /// collective ordering point).
+    pub fn sync(&self) -> Result<()> {
+        collective::barrier(&self.comm)
+    }
+
+    // ---- explicit-offset ops (§14.4.2) ----
+
+    /// `MPI_File_read_at`: `offset` is in etypes. Returns elements read.
+    pub fn read_at(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        if !self.amode.can_read() {
+            return Err(mpi_err!(Amode, "file not opened for reading"));
+        }
+        dtype.require_committed()?;
+        let view = self.view.borrow();
+        let lo = offset * view.etype.size() as u64;
+        let nbytes = dtype.size() * count;
+        let mut wire = vec![0u8; nbytes];
+        let got = {
+            let data = self.node.data.lock().unwrap();
+            view.read(&data, lo, &mut wire)
+        };
+        let whole = got / dtype.size().max(1);
+        unpack(dtype.map(), &wire[..whole * dtype.size()], buf, whole)?;
+        Ok(whole)
+    }
+
+    /// `MPI_File_write_at`. Returns elements written.
+    pub fn write_at(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        if !self.amode.can_write() {
+            return Err(mpi_err!(Amode, "file not opened for writing"));
+        }
+        dtype.require_committed()?;
+        let view = self.view.borrow();
+        let lo = offset * view.etype.size() as u64;
+        let mut wire = Vec::with_capacity(dtype.size() * count);
+        pack(dtype.map(), buf, count, &mut wire)?;
+        {
+            let mut data = self.node.data.lock().unwrap();
+            view.write(&mut data, lo, &wire);
+        }
+        Ok(count)
+    }
+
+    /// `MPI_File_read_at_all` / `write_at_all`: collective versions (the
+    /// in-memory store needs no two-phase aggregation; the collective
+    /// contract — all ranks arrive — is enforced with a barrier).
+    pub fn read_at_all(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let n = self.read_at(offset, buf, count, dtype)?;
+        collective::barrier(&self.comm)?;
+        Ok(n)
+    }
+
+    pub fn write_at_all(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let n = self.write_at(offset, buf, count, dtype)?;
+        collective::barrier(&self.comm)?;
+        Ok(n)
+    }
+
+    // ---- individual file pointer (§14.4.3) ----
+
+    /// `MPI_File_seek` (whence = set).
+    pub fn seek(&self, offset_etypes: u64) {
+        self.ptr.set(offset_etypes);
+    }
+
+    /// `MPI_File_get_position` (etypes).
+    pub fn position(&self) -> u64 {
+        self.ptr.get()
+    }
+
+    /// `MPI_File_read`.
+    pub fn read(&self, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let n = self.read_at(self.ptr.get(), buf, count, dtype)?;
+        let esz = self.view.borrow().etype.size().max(1);
+        self.ptr.set(self.ptr.get() + (n * dtype.size() / esz) as u64);
+        Ok(n)
+    }
+
+    /// `MPI_File_write`.
+    pub fn write(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let n = self.write_at(self.ptr.get(), buf, count, dtype)?;
+        let esz = self.view.borrow().etype.size().max(1);
+        self.ptr.set(self.ptr.get() + (n * dtype.size() / esz) as u64);
+        Ok(n)
+    }
+
+    /// `MPI_File_read_all` / `write_all`.
+    pub fn read_all(&self, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let n = self.read(buf, count, dtype)?;
+        collective::barrier(&self.comm)?;
+        Ok(n)
+    }
+
+    pub fn write_all(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let n = self.write(buf, count, dtype)?;
+        collective::barrier(&self.comm)?;
+        Ok(n)
+    }
+
+    // ---- shared file pointer (§14.4.4) ----
+
+    fn bump_shared(&self, etypes: u64) -> u64 {
+        let mut p = self.node.shared_ptr.lock().unwrap();
+        let at = *p;
+        *p += etypes;
+        at
+    }
+
+    /// `MPI_File_read_shared`.
+    pub fn read_shared(&self, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let esz = self.view.borrow().etype.size().max(1);
+        let at = self.bump_shared((dtype.size() * count / esz) as u64);
+        self.read_at(at, buf, count, dtype)
+    }
+
+    /// `MPI_File_write_shared`.
+    pub fn write_shared(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let esz = self.view.borrow().etype.size().max(1);
+        let at = self.bump_shared((dtype.size() * count / esz) as u64);
+        self.write_at(at, buf, count, dtype)
+    }
+
+    /// `MPI_File_write_ordered`: rank-order offsets via exscan of sizes.
+    pub fn write_ordered(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let esz = self.view.borrow().etype.size().max(1);
+        let mine = (dtype.size() * count / esz) as u64;
+        let base = {
+            let p = self.node.shared_ptr.lock().unwrap();
+            *p
+        };
+        let u64t = Datatype::primitive(Primitive::U64);
+        let mut before = [0u8; 8];
+        collective::exscan(&self.comm, Some(&mine.to_le_bytes()), &mut before, 1, &u64t, &Op::SUM)?;
+        let before = if self.comm.rank() == 0 { 0 } else { u64::from_le_bytes(before) };
+        let n = self.write_at(base + before, buf, count, dtype)?;
+        // Advance the shared pointer past everyone (rank 0, after barrier).
+        let mut total = [0u8; 8];
+        collective::allreduce(&self.comm, Some(&mine.to_le_bytes()), &mut total, 1, &u64t, &Op::SUM)?;
+        if self.comm.rank() == 0 {
+            *self.node.shared_ptr.lock().unwrap() = base + u64::from_le_bytes(total);
+        }
+        collective::barrier(&self.comm)?;
+        Ok(n)
+    }
+
+    // ---- nonblocking (§14.4.5): performed eagerly, completion via
+    // generalized request (legal: "nonblocking" bounds completion, not
+    // initiation). ----
+
+    /// `MPI_File_iread_at`.
+    pub fn iread_at(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        let n = self.read_at(offset, buf, count, dtype)?;
+        let (req, done) = grequest_start(self.comm.rank_ctx().clone());
+        done.complete(crate::p2p::Status { source: 0, tag: 0, bytes: n * dtype.size(), cancelled: false });
+        Ok(req)
+    }
+
+    /// `MPI_File_iwrite_at`.
+    pub fn iwrite_at(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        let n = self.write_at(offset, buf, count, dtype)?;
+        let (req, done) = grequest_start(self.comm.rank_ctx().clone());
+        done.complete(crate::p2p::Status { source: 0, tag: 0, bytes: n * dtype.size(), cancelled: false });
+        Ok(req)
+    }
+}

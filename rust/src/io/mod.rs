@@ -1,0 +1,14 @@
+//! The IO component (MPI-4.0 chapter 14, `MPI_File_*`).
+//!
+//! Files live in the fabric's simulated parallel filesystem (shared across
+//! the job's ranks). Views — displacement + etype + filetype — are full
+//! typemap-based mappings from each rank's logical element space to
+//! physical file bytes, so strided/subarray file access behaves exactly
+//! like the standard describes. Collective variants (`*_all`, ordered)
+//! synchronize over the file's own communicator.
+
+pub mod file;
+pub mod view;
+
+pub use file::{AccessMode, File};
+pub use view::View;

@@ -1,0 +1,50 @@
+//! # ferrompi — "A C++20 Interface for MPI 4.0", reproduced in Rust
+//!
+//! Three things live in this crate, mirroring the paper's structure:
+//!
+//! 1. **The substrate** ([`core`]-level modules: [`datatype`], [`group`],
+//!    [`comm`], [`p2p`], [`collective`], [`onesided`], [`topo`],
+//!    [`session`], [`io`], [`tool`], [`transport`], [`universe`]) — a full
+//!    MPI-4.0-semantics message-passing runtime over a simulated multi-node
+//!    fabric. This stands in for the production MPI library the paper
+//!    wrapped.
+//! 2. **The baseline** ([`raw`]) — a deliberately C-shaped flat API over
+//!    integer handles, mirroring what "calling the C interface" costs.
+//! 3. **The contribution** ([`modern`]) — the paper's ergonomic interface,
+//!    translated idiom-for-idiom: RAII wrappers, `#[derive(DataType)]`
+//!    aggregate reflection (Boost.PFR analog), requests-as-futures with
+//!    `.then()` continuations and `when_all`/`when_any`, scoped enums,
+//!    `Option`/`Result` returns and defaults.
+//!
+//! Plus the three-layer compute bridge ([`runtime`]: AOT HLO artifacts
+//! executed via PJRT) and the evaluation harness
+//! ([`coordinator`]: the mpiBench port regenerating Figure 1).
+
+// Allow `::ferrompi::...` paths (emitted by the derive macro) to resolve
+// inside this crate's own tests.
+extern crate self as ferrompi;
+
+pub mod util;
+pub mod error;
+pub mod info;
+pub mod transport;
+pub mod datatype;
+pub mod op;
+pub mod group;
+pub mod comm;
+pub mod p2p;
+pub mod request;
+pub mod collective;
+pub mod onesided;
+pub mod topo;
+pub mod session;
+pub mod universe;
+pub mod io;
+pub mod tool;
+pub mod raw;
+pub mod modern;
+pub mod runtime;
+pub mod coordinator;
+
+pub use error::{ErrorClass, MpiError, Result};
+pub use universe::Universe;

@@ -1,0 +1,168 @@
+//! The `ferrompi` CLI: launch simulated jobs, run the Figure 1 benchmark,
+//! inspect the tool (MPI_T) interface and the AOT artifacts.
+
+use ferrompi::coordinator::{figure1_report, run_mpibench, MpiBenchConfig};
+use ferrompi::modern::Communicator;
+use ferrompi::tool;
+use ferrompi::universe::Universe;
+use ferrompi::util::cli::{help, Args, OptSpec};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print_usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "bench" => cmd_bench(&rest),
+        "selftest" => cmd_selftest(&rest),
+        "pvars" => cmd_pvars(&rest),
+        "cvars" => cmd_cvars(),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try `ferrompi help`)")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ferrompi — reproduction of 'A C++20 Interface for MPI 4.0'\n\n\
+         commands:\n\
+         \x20 bench      run the mpiBench sweep (Figure 1)\n\
+         \x20 selftest   quick end-to-end smoke across all layers\n\
+         \x20 pvars      run a small job and dump MPI_T performance variables\n\
+         \x20 cvars      list MPI_T control variables\n\
+         \x20 artifacts  check the AOT artifact set\n\
+         \x20 help       this text\n"
+    );
+}
+
+fn bench_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "nodes", takes_value: true, default: Some("1,2,4,8,16"), help: "node counts to sweep" },
+        OptSpec { name: "ppn", takes_value: true, default: Some("2"), help: "ranks per node" },
+        OptSpec { name: "reps", takes_value: true, default: Some("10"), help: "repetitions per measurement" },
+        OptSpec { name: "iters", takes_value: true, default: Some("10"), help: "ops per timed loop" },
+        OptSpec { name: "max-pow", takes_value: true, default: Some("17"), help: "max message length exponent (2^n)" },
+        OptSpec { name: "min-pow", takes_value: true, default: Some("1"), help: "min message length exponent" },
+        OptSpec { name: "out", takes_value: true, default: Some("results"), help: "output directory for CSVs" },
+        OptSpec { name: "quick", takes_value: false, default: None, help: "CI-sized subset" },
+        OptSpec { name: "help", takes_value: false, default: None, help: "show help" },
+    ]
+}
+
+fn cmd_bench(rest: &[String]) -> Result<(), String> {
+    let spec = bench_spec();
+    let args = Args::parse(rest, &spec)?;
+    if args.flag("help") {
+        println!("{}", help("ferrompi bench", "regenerate the paper's Figure 1", &spec));
+        return Ok(());
+    }
+    let cfg = if args.flag("quick") {
+        MpiBenchConfig::quick()
+    } else {
+        let min: u32 = args.get_parsed("min-pow")?;
+        let max: u32 = args.get_parsed("max-pow")?;
+        MpiBenchConfig {
+            msg_lens: (min..=max).map(|n| 1usize << n).collect(),
+            node_counts: args.get_list("nodes")?,
+            ppn: args.get_parsed("ppn")?,
+            reps: args.get_parsed("reps")?,
+            iters: args.get_parsed("iters")?,
+            ..MpiBenchConfig::paper()
+        }
+    };
+    let rows = run_mpibench(&cfg, |msg| eprintln!("{msg}"));
+    let report = figure1_report(&rows);
+    let out = std::path::PathBuf::from(args.get("out").unwrap_or("results"));
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    std::fs::write(out.join("mpibench_rows.csv"), &report.rows_csv).map_err(|e| e.to_string())?;
+    std::fs::write(out.join("figure1.csv"), &report.figure1_csv).map_err(|e| e.to_string())?;
+    std::fs::write(out.join("figure1.md"), &report.markdown).map_err(|e| e.to_string())?;
+    println!("{}", report.markdown);
+    println!("wrote {}/mpibench_rows.csv, figure1.csv, figure1.md", out.display());
+    Ok(())
+}
+
+fn cmd_selftest(_rest: &[String]) -> Result<(), String> {
+    print!("substrate (4 ranks, allreduce+bcast) ... ");
+    let sums = Universe::test(4).run(|world| {
+        let comm = Communicator::world(world);
+        let s = comm.all_reduce(comm.rank() as i64 + 1, ferrompi::modern::ReduceOp::Sum).unwrap();
+        let mut v = if comm.rank() == 0 { 7i32 } else { 0 };
+        comm.broadcast(&mut v, 0).unwrap();
+        assert_eq!(v, 7);
+        s
+    });
+    assert!(sums.iter().all(|&s| s == 10));
+    println!("ok");
+
+    print!("AOT artifacts + PJRT execution ... ");
+    if ferrompi::runtime::artifacts_available() {
+        let eng = ferrompi::runtime::engine().map_err(|e| e.to_string())?;
+        let x = vec![1.0f32; 100];
+        let mut y = vec![2.0f32; 100];
+        eng.combine_f32("sum", &x, &mut y).map_err(|e| e.to_string())?;
+        assert!(y.iter().all(|&v| v == 3.0));
+        println!("ok");
+    } else {
+        println!("skipped (run `make artifacts`)");
+    }
+    println!("selftest passed");
+    Ok(())
+}
+
+fn cmd_pvars(_rest: &[String]) -> Result<(), String> {
+    let dump = Universe::new(2, 2).run(|world| {
+        let comm = Communicator::world(world);
+        // Generate some traffic.
+        let _ = comm.all_reduce(comm.rank() as i64, ferrompi::modern::ReduceOp::Sum).unwrap();
+        for _ in 0..3 {
+            comm.barrier().unwrap();
+        }
+        if comm.rank() == 0 {
+            let session = tool::PvarSession::create(comm.native());
+            Some(session.read_all())
+        } else {
+            None
+        }
+    });
+    println!("{:<28} {:>12}", "pvar", "value");
+    for (name, value) in dump[0].as_ref().unwrap() {
+        println!("{name:<28} {value:>12}");
+    }
+    Ok(())
+}
+
+fn cmd_cvars() -> Result<(), String> {
+    println!("{:<28} {:>8}  {}", "cvar", "writable", "value / description");
+    for c in tool::cvars() {
+        let v = tool::cvar_read(c.name).unwrap_or_else(|_| "?".into());
+        println!("{:<28} {:>8}  {} — {}", c.name, c.writable, v, c.description);
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    if !ferrompi::runtime::artifacts_available() {
+        return Err("artifacts missing — run `make artifacts`".into());
+    }
+    let eng = ferrompi::runtime::engine().map_err(|e| e.to_string())?;
+    eng.warmup().map_err(|e| e.to_string())?;
+    println!("all artifacts load and compile OK");
+    Ok(())
+}

@@ -1,0 +1,392 @@
+//! The modern communicator: RAII, generics over [`Buffer`]/[`DataType`],
+//! meaningful defaults (tag 0, root 0), futures for immediate operations,
+//! `Option` for immediate probes.
+
+use super::datatype::{Buffer, BufferMut, DataType};
+use super::enums::{ReduceOp, SendKind};
+use super::future::MpiFuture;
+use crate::collective;
+use crate::comm::{Comm, ANY_SOURCE, ANY_TAG};
+use crate::group::Group;
+use crate::op::Op;
+use crate::p2p::{SendMode, Status};
+use crate::Result;
+
+/// Default tag used when the caller does not specify one (the paper's
+/// "meaningful defaults for each MPI function").
+pub const DEFAULT_TAG: i32 = 0;
+
+/// Source selector for typed receives (scoped, instead of sentinel ints).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    Rank(usize),
+    Any,
+}
+
+impl Source {
+    fn as_i32(self) -> i32 {
+        match self {
+            Source::Rank(r) => r as i32,
+            Source::Any => ANY_SOURCE,
+        }
+    }
+}
+
+/// Tag selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tag {
+    Value(i32),
+    Any,
+}
+
+impl Tag {
+    fn as_i32(self) -> i32 {
+        match self {
+            Tag::Value(t) => t,
+            Tag::Any => ANY_TAG,
+        }
+    }
+}
+
+/// The managed communicator wrapper. No `Clone` (copy constructors are
+/// deleted); duplication is the explicit, collective [`Communicator::dup`]
+/// — exactly the paper's ownership story.
+pub struct Communicator {
+    inner: Comm,
+}
+
+impl Communicator {
+    /// Managed adoption of this rank's world communicator.
+    pub fn world(comm: &Comm) -> Communicator {
+        Communicator { inner: comm.unmanaged_clone() }
+    }
+
+    /// The "unmanaged constructor": wrap an existing communicator without
+    /// owning it (no destruction responsibility — in Rust terms, the
+    /// wrapper shares the underlying contexts).
+    pub fn unmanaged(comm: &Comm) -> Communicator {
+        Communicator { inner: comm.unmanaged_clone() }
+    }
+
+    /// Access the substrate object (escape hatch, like `.native()` handles
+    /// in the paper's interface).
+    pub fn native(&self) -> &Comm {
+        &self.inner
+    }
+
+    pub fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    pub fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    pub fn group(&self) -> &Group {
+        &self.inner.group()
+    }
+
+    pub fn wtime(&self) -> f64 {
+        self.inner.wtime()
+    }
+
+    /// `MPI_Comm_dup` — the one copy the paper allows (managed).
+    pub fn dup(&self) -> Result<Communicator> {
+        Ok(Communicator { inner: self.inner.dup()? })
+    }
+
+    /// `MPI_Comm_split` with scoped undefined handling via `Option`.
+    pub fn split(&self, color: Option<u32>, key: i32) -> Result<Option<Communicator>> {
+        let c = self.inner.split(color.map(|c| c as i32).unwrap_or(-1), key)?;
+        Ok(c.map(|inner| Communicator { inner }))
+    }
+
+    // ---- blocking point-to-point (defaults: tag 0) ----
+
+    /// `communicator.send(data, destination)` — works with a single
+    /// compliant value or a contiguous container (Listing 1).
+    pub fn send<B: Buffer + ?Sized>(&self, data: &B, dst: usize) -> Result<()> {
+        self.send_tagged(data, dst, DEFAULT_TAG)
+    }
+
+    pub fn send_tagged<B: Buffer + ?Sized>(&self, data: &B, dst: usize, tag: i32) -> Result<()> {
+        let dt = B::Elem::datatype();
+        self.inner.send(data.as_raw_bytes(), data.count(), &dt, dst as i32, tag)
+    }
+
+    /// Explicit-mode send with a scoped enum instead of four function
+    /// names.
+    pub fn send_mode<B: Buffer + ?Sized>(&self, data: &B, dst: usize, kind: SendKind, tag: i32) -> Result<()> {
+        let dt = B::Elem::datatype();
+        self.inner.send_mode(data.as_raw_bytes(), data.count(), &dt, dst as i32, tag, kind.into())
+    }
+
+    /// Typed single-value receive: `let (x, status) = comm.receive::<f64>(src)?`.
+    pub fn receive<T: DataType + Default>(&self, src: Source) -> Result<(T, Status)> {
+        let mut value = T::default();
+        let status = self.receive_into(&mut value, src, Tag::Any)?;
+        Ok((value, status))
+    }
+
+    /// Receive into an existing buffer.
+    pub fn receive_into<B: BufferMut + ?Sized>(&self, buf: &mut B, src: Source, tag: Tag) -> Result<Status> {
+        let dt = B::Elem::datatype();
+        let count = buf.count();
+        self.inner.recv(buf.as_raw_bytes_mut(), count, &dt, src.as_i32(), tag.as_i32())
+    }
+
+    /// Probe-and-receive a container whose length is chosen by the sender
+    /// (the pattern the paper's `std::optional` probe enables).
+    pub fn receive_vec<T: DataType + Default>(&self, src: Source, tag: Tag) -> Result<(Vec<T>, Status)> {
+        let st = self.inner.probe(src.as_i32(), tag.as_i32())?;
+        let n = st.get_count(&T::datatype()).unwrap_or(0);
+        let mut out = vec![T::default(); n];
+        let status = self.receive_into(&mut out[..], Source::Rank(st.source as usize), Tag::Value(st.tag))?;
+        Ok((out, status))
+    }
+
+    // ---- immediate operations → futures ----
+
+    /// `MPI_Isend` → future (payload packed immediately, so no borrow is
+    /// held — see the engine docs).
+    pub fn immediate_send<B: Buffer + ?Sized>(&self, data: &B, dst: usize, tag: i32) -> Result<MpiFuture<()>> {
+        let dt = B::Elem::datatype();
+        let req = self.inner.isend(data.as_raw_bytes(), data.count(), &dt, dst as i32, tag)?;
+        Ok(MpiFuture::from_request(req, |_s| Ok(())))
+    }
+
+    /// `MPI_Irecv` of a typed value → future owning its buffer.
+    pub fn immediate_receive<T: DataType + Default>(&self, src: Source, tag: Tag) -> Result<MpiFuture<(T, Status)>> {
+        let mut boxed = Box::new(T::default());
+        let dt = T::datatype();
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(&mut *boxed as *mut T as *mut u8, std::mem::size_of::<T>())
+        };
+        let req = self.inner.irecv(bytes, 1, &dt, src.as_i32(), tag.as_i32())?;
+        Ok(MpiFuture::from_request(req, move |status| Ok((*boxed, status))))
+    }
+
+    /// `MPI_Ibcast` of a single value → future yielding the broadcast
+    /// value on every rank (Listing 2's `immediate_broadcast`).
+    pub fn immediate_broadcast<T: DataType>(&self, value: T, root: usize) -> MpiFuture<T> {
+        let mut boxed = Box::new(value);
+        let dt = T::datatype();
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(&mut *boxed as *mut T as *mut u8, std::mem::size_of::<T>())
+        };
+        match collective::ibcast(&self.inner, bytes, 1, &dt, root) {
+            Ok(req) => MpiFuture::from_request(req, move |_| Ok(*boxed)),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// `MPI_Ibarrier` → future.
+    pub fn immediate_barrier(&self) -> MpiFuture<()> {
+        match collective::ibarrier(&self.inner) {
+            Ok(req) => MpiFuture::from_request(req, |_| Ok(())),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// `MPI_Iallreduce` over a single value → future of the result.
+    pub fn immediate_all_reduce<T: DataType>(&self, value: T, op: ReduceOp) -> MpiFuture<T> {
+        let mut boxed = Box::new(value);
+        let dt = T::datatype();
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(&mut *boxed as *mut T as *mut u8, std::mem::size_of::<T>())
+        };
+        let o: Op = op.into();
+        match collective::iallreduce(&self.inner, None, bytes, 1, &dt, &o) {
+            Ok(req) => MpiFuture::from_request(req, move |_| Ok(*boxed)),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// The paper's immediate probe returning `std::optional`.
+    pub fn immediate_probe(&self, src: Source, tag: Tag) -> Result<Option<Status>> {
+        self.inner.iprobe(src.as_i32(), tag.as_i32())
+    }
+
+    // ---- blocking collectives (defaults: root 0) ----
+
+    /// `MPI_Barrier`.
+    pub fn barrier(&self) -> Result<()> {
+        collective::barrier(&self.inner)
+    }
+
+    /// `MPI_Bcast` with a container or single value (Listing 1: a
+    /// user-defined type broadcasts without explicit datatype creation).
+    pub fn broadcast<B: BufferMut + ?Sized>(&self, data: &mut B, root: usize) -> Result<()> {
+        let dt = B::Elem::datatype();
+        let count = data.count();
+        collective::bcast(&self.inner, data.as_raw_bytes_mut(), count, &dt, root)
+    }
+
+    /// `MPI_Allreduce` producing a fresh value.
+    pub fn all_reduce<T: DataType + Default>(&self, value: T, op: ReduceOp) -> Result<T> {
+        let mut out = T::default();
+        let o: Op = op.into();
+        collective::allreduce(
+            &self.inner,
+            Some(Buffer::as_raw_bytes(&value)),
+            BufferMut::as_raw_bytes_mut(&mut out),
+            1,
+            &T::datatype(),
+            &o,
+        )?;
+        Ok(out)
+    }
+
+    /// Container all-reduce into a result buffer.
+    pub fn all_reduce_into<B: Buffer + ?Sized, C: BufferMut<Elem = B::Elem> + ?Sized>(
+        &self,
+        data: &B,
+        out: &mut C,
+        op: ReduceOp,
+    ) -> Result<()> {
+        let o: Op = op.into();
+        let count = data.count();
+        collective::allreduce(
+            &self.inner,
+            Some(data.as_raw_bytes()),
+            out.as_raw_bytes_mut(),
+            count,
+            &B::Elem::datatype(),
+            &o,
+        )
+    }
+
+    /// `MPI_Reduce` to `root` (non-roots get `None`).
+    pub fn reduce<T: DataType + Default>(&self, value: T, op: ReduceOp, root: usize) -> Result<Option<T>> {
+        let o: Op = op.into();
+        if self.rank() == root {
+            let mut out = T::default();
+            collective::reduce(
+                &self.inner,
+                Some(Buffer::as_raw_bytes(&value)),
+                Some(BufferMut::as_raw_bytes_mut(&mut out)),
+                1,
+                &T::datatype(),
+                &o,
+                root,
+            )?;
+            Ok(Some(out))
+        } else {
+            collective::reduce(&self.inner, Some(Buffer::as_raw_bytes(&value)), None, 1, &T::datatype(), &o, root)?;
+            Ok(None)
+        }
+    }
+
+    /// `MPI_Allgather` of one value per rank.
+    pub fn all_gather<T: DataType + Default>(&self, value: T) -> Result<Vec<T>> {
+        let mut out = vec![T::default(); self.size()];
+        collective::allgather(
+            &self.inner,
+            Some(Buffer::as_raw_bytes(&value)),
+            1,
+            &T::datatype(),
+            out[..].as_raw_bytes_mut(),
+            1,
+            &T::datatype(),
+        )?;
+        Ok(out)
+    }
+
+    /// `MPI_Gather` of one value per rank to `root`.
+    pub fn gather<T: DataType + Default>(&self, value: T, root: usize) -> Result<Option<Vec<T>>> {
+        if self.rank() == root {
+            let mut out = vec![T::default(); self.size()];
+            collective::gather(
+                &self.inner,
+                Buffer::as_raw_bytes(&value),
+                1,
+                &T::datatype(),
+                Some(out[..].as_raw_bytes_mut()),
+                1,
+                &T::datatype(),
+                root,
+            )?;
+            Ok(Some(out))
+        } else {
+            collective::gather(&self.inner, Buffer::as_raw_bytes(&value), 1, &T::datatype(), None, 1, &T::datatype(), root)?;
+            Ok(None)
+        }
+    }
+
+    /// `MPI_Scatter` of one value per rank from `root` (root supplies the
+    /// full vector).
+    pub fn scatter<T: DataType + Default>(&self, values: Option<&[T]>, root: usize) -> Result<T> {
+        let mut out = T::default();
+        collective::scatter(
+            &self.inner,
+            values.map(|v| v.as_raw_bytes()),
+            1,
+            &T::datatype(),
+            BufferMut::as_raw_bytes_mut(&mut out),
+            1,
+            &T::datatype(),
+            root,
+        )?;
+        Ok(out)
+    }
+
+    /// `MPI_Alltoall`: element `i` of the input goes to rank `i`.
+    pub fn all_to_all<T: DataType + Default>(&self, values: &[T]) -> Result<Vec<T>> {
+        let mut out = vec![T::default(); self.size()];
+        collective::alltoall(
+            &self.inner,
+            values.as_raw_bytes(),
+            1,
+            &T::datatype(),
+            out[..].as_raw_bytes_mut(),
+            1,
+            &T::datatype(),
+        )?;
+        Ok(out)
+    }
+
+    /// `MPI_Scan` (inclusive prefix).
+    pub fn scan<T: DataType + Default>(&self, value: T, op: ReduceOp) -> Result<T> {
+        let mut out = T::default();
+        let o: Op = op.into();
+        collective::scan(
+            &self.inner,
+            Some(Buffer::as_raw_bytes(&value)),
+            BufferMut::as_raw_bytes_mut(&mut out),
+            1,
+            &T::datatype(),
+            &o,
+        )?;
+        Ok(out)
+    }
+
+    /// Typed sendrecv with defaults.
+    pub fn send_receive<T: DataType + Default>(&self, value: T, dst: usize, src: Source) -> Result<(T, Status)> {
+        let mut out = T::default();
+        let dt = T::datatype();
+        let status = self.inner.sendrecv(
+            Buffer::as_raw_bytes(&value),
+            1,
+            &dt,
+            dst as i32,
+            DEFAULT_TAG,
+            BufferMut::as_raw_bytes_mut(&mut out),
+            1,
+            &dt,
+            src.as_i32(),
+            DEFAULT_TAG,
+        )?;
+        Ok((out, status))
+    }
+}
+
+impl From<SendKind> for SendMode {
+    fn from(k: SendKind) -> SendMode {
+        match k {
+            SendKind::Standard => SendMode::Standard,
+            SendKind::Synchronous => SendMode::Synchronous,
+            SendKind::Buffered => SendMode::Buffered,
+            SendKind::Ready => SendMode::Ready,
+        }
+    }
+}

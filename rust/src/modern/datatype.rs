@@ -1,0 +1,233 @@
+//! The `mpi::compliant` concept analog: the [`DataType`] trait, its
+//! implementations for arithmetic types, complex numbers, arrays and
+//! tuples, and the [`Buffer`]/[`BufferMut`] traits that let communication
+//! functions accept "a single or a contiguous sequential container of
+//! compliant types" (paper §II).
+//!
+//! `#[derive(DataType)]` (from `ferrompi-derive`) extends compliance to
+//! user aggregates — Listing 1 of the paper.
+
+use crate::datatype::{Datatype, Primitive, TypeMap};
+use once_cell::sync::Lazy;
+use std::any::TypeId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A type with a compile-time-known MPI typemap.
+///
+/// # Safety
+/// `typemap()` must describe `Self`'s exact memory layout (offsets within
+/// `size_of::<Self>()`), because pack/unpack walk raw bytes at those
+/// offsets.
+pub unsafe trait DataType: Copy + 'static {
+    fn typemap() -> TypeMap;
+
+    /// The committed datatype handle, cached per process (keyed by
+    /// `TypeId`, so the typemap is built once — the compile-time
+    /// generation of the paper, amortized).
+    fn datatype() -> Datatype {
+        static CACHE: Lazy<Mutex<HashMap<TypeId, Datatype>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+        let mut cache = CACHE.lock().unwrap();
+        cache
+            .entry(TypeId::of::<Self>())
+            .or_insert_with(|| {
+                let mut d = Datatype::new(Self::typemap());
+                d.commit();
+                d
+            })
+            .clone()
+    }
+}
+
+macro_rules! prim_datatype {
+    ($($t:ty => $p:ident),* $(,)?) => {
+        $(unsafe impl DataType for $t {
+            fn typemap() -> TypeMap {
+                TypeMap::primitive(Primitive::$p)
+            }
+        })*
+    };
+}
+
+prim_datatype! {
+    i8 => I8, u8 => U8, i16 => I16, u16 => U16, i32 => I32, u32 => U32,
+    i64 => I64, u64 => U64, f32 => F32, f64 => F64, bool => Bool,
+}
+
+unsafe impl DataType for isize {
+    fn typemap() -> TypeMap {
+        TypeMap::primitive(Primitive::I64)
+    }
+}
+
+unsafe impl DataType for usize {
+    fn typemap() -> TypeMap {
+        TypeMap::primitive(Primitive::U64)
+    }
+}
+
+unsafe impl DataType for char {
+    fn typemap() -> TypeMap {
+        TypeMap::primitive(Primitive::U32)
+    }
+}
+
+/// `std::complex` analog (maps to `MPI_C_*_COMPLEX`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(C)]
+pub struct Complex<T> {
+    pub re: T,
+    pub im: T,
+}
+
+impl<T> Complex<T> {
+    pub fn new(re: T, im: T) -> Complex<T> {
+        Complex { re, im }
+    }
+}
+
+unsafe impl DataType for Complex<f32> {
+    fn typemap() -> TypeMap {
+        TypeMap::primitive(Primitive::C32)
+    }
+}
+
+unsafe impl DataType for Complex<f64> {
+    fn typemap() -> TypeMap {
+        TypeMap::primitive(Primitive::C64)
+    }
+}
+
+// C-style arrays / std::array analog.
+unsafe impl<T: DataType, const N: usize> DataType for [T; N] {
+    fn typemap() -> TypeMap {
+        TypeMap::contiguous(N.max(1), &T::typemap())
+    }
+}
+
+// std::pair / std::tuple analogs (offsets via offset_of!, so Rust's
+// unspecified tuple layout is captured exactly).
+macro_rules! tuple_datatype {
+    ($(($($t:ident . $idx:tt),+)),+ $(,)?) => {
+        $(unsafe impl<$($t: DataType),+> DataType for ($($t,)+) {
+            fn typemap() -> TypeMap {
+                TypeMap::aggregate(
+                    &[$((std::mem::offset_of!(Self, $idx) as isize, $t::typemap())),+],
+                    std::mem::size_of::<Self>(),
+                )
+            }
+        })+
+    };
+}
+
+tuple_datatype! {
+    (A.0),
+    (A.0, B.1),
+    (A.0, B.1, C.2),
+    (A.0, B.1, C.2, D.3),
+    (A.0, B.1, C.2, D.3, E.4),
+    (A.0, B.1, C.2, D.3, E.4, F.5),
+}
+
+/// Anything usable as a send payload: a single compliant value or a
+/// contiguous container of them.
+pub trait Buffer {
+    type Elem: DataType;
+    fn as_raw_bytes(&self) -> &[u8];
+    fn count(&self) -> usize;
+}
+
+/// Mutable receive-side counterpart.
+pub trait BufferMut: Buffer {
+    fn as_raw_bytes_mut(&mut self) -> &mut [u8];
+}
+
+impl<T: DataType> Buffer for T {
+    type Elem = T;
+
+    fn as_raw_bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self as *const T as *const u8, std::mem::size_of::<T>()) }
+    }
+
+    fn count(&self) -> usize {
+        1
+    }
+}
+
+impl<T: DataType> BufferMut for T {
+    fn as_raw_bytes_mut(&mut self) -> &mut [u8] {
+        unsafe { std::slice::from_raw_parts_mut(self as *mut T as *mut u8, std::mem::size_of::<T>()) }
+    }
+}
+
+impl<T: DataType> Buffer for [T] {
+    type Elem = T;
+
+    fn as_raw_bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.as_ptr() as *const u8, std::mem::size_of_val(self)) }
+    }
+
+    fn count(&self) -> usize {
+        self.len()
+    }
+}
+
+impl<T: DataType> BufferMut for [T] {
+    fn as_raw_bytes_mut(&mut self) -> &mut [u8] {
+        unsafe {
+            std::slice::from_raw_parts_mut(self.as_mut_ptr() as *mut u8, std::mem::size_of_val(self))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_map() {
+        assert_eq!(i32::typemap().size(), 4);
+        assert_eq!(f64::typemap().size(), 8);
+        assert_eq!(usize::typemap().size(), 8);
+        assert_eq!(Complex::<f32>::typemap().size(), 8);
+        assert_eq!(Complex::<f64>::typemap().size(), 16);
+    }
+
+    #[test]
+    fn arrays_are_contiguous() {
+        let t = <[f32; 4]>::typemap();
+        assert_eq!(t.size(), 16);
+        assert!(t.is_contiguous());
+        // Nested arrays compose.
+        let t = <[[i16; 3]; 2]>::typemap();
+        assert_eq!(t.size(), 12);
+    }
+
+    #[test]
+    fn tuples_capture_real_offsets() {
+        let t = <(u8, f64)>::typemap();
+        assert_eq!(t.size(), 9); // wire bytes skip padding
+        assert_eq!(t.extent() as usize, std::mem::size_of::<(u8, f64)>());
+        let t3 = <(i32, i32, i32)>::typemap();
+        assert_eq!(t3.size(), 12);
+    }
+
+    #[test]
+    fn datatype_cache_returns_committed() {
+        let d1 = i64::datatype();
+        let d2 = i64::datatype();
+        assert!(d1.is_committed());
+        assert_eq!(d1.size(), d2.size());
+    }
+
+    #[test]
+    fn buffers_scalar_and_slice() {
+        let x = 7i32;
+        assert_eq!(Buffer::count(&x), 1);
+        assert_eq!(x.as_raw_bytes(), &7i32.to_le_bytes());
+        let v = [1i32, 2, 3];
+        let s: &[i32] = &v;
+        assert_eq!(Buffer::count(s), 3);
+        assert_eq!(s.as_raw_bytes().len(), 12);
+    }
+}

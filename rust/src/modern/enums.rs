@@ -1,0 +1,69 @@
+//! Scoped enumerations (paper §II: *"the library further contains scoped
+//! versions of each enumeration [...] which prevent passing erroneous
+//! values and provide code completion support"*).
+
+use crate::op::Op;
+
+/// The four send modes as one scoped enum (instead of `MPI_Send`,
+/// `MPI_Ssend`, `MPI_Bsend`, `MPI_Rsend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendKind {
+    Standard,
+    Synchronous,
+    Buffered,
+    Ready,
+}
+
+/// Predefined reduction operations, scoped (`mpi::sum` style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Prod,
+    Max,
+    Min,
+    LogicalAnd,
+    LogicalOr,
+    LogicalXor,
+    BitAnd,
+    BitOr,
+    BitXor,
+}
+
+impl From<ReduceOp> for Op {
+    fn from(r: ReduceOp) -> Op {
+        match r {
+            ReduceOp::Sum => Op::SUM,
+            ReduceOp::Prod => Op::PROD,
+            ReduceOp::Max => Op::MAX,
+            ReduceOp::Min => Op::MIN,
+            ReduceOp::LogicalAnd => Op::LAND,
+            ReduceOp::LogicalOr => Op::LOR,
+            ReduceOp::LogicalXor => Op::LXOR,
+            ReduceOp::BitAnd => Op::BAND,
+            ReduceOp::BitOr => Op::BOR,
+            ReduceOp::BitXor => Op::BXOR,
+        }
+    }
+}
+
+/// `MPI_THREAD_*` levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ThreadLevel {
+    Single,
+    Funneled,
+    Serialized,
+    Multiple,
+}
+
+/// Comparison results, re-exported scoped (`MPI_IDENT`/`CONGRUENT`/...).
+pub use crate::group::Comparison;
+
+/// Lock types, re-exported scoped.
+pub use crate::onesided::LockType;
+
+/// `MPI_COMM_TYPE_*` for split_type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitType {
+    Shared,
+    HwGuided,
+}

@@ -1,0 +1,78 @@
+//! Typed RAII wrapper over the IO component (`mpi::io` analog).
+
+use super::datatype::{Buffer, BufferMut, DataType};
+use crate::comm::Comm;
+use crate::io::{AccessMode, File};
+use crate::Result;
+
+/// A file of `T` records: etype defaults to `T` (meaningful default), so
+/// offsets are in elements.
+pub struct TypedFile<T: DataType> {
+    file: File,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: DataType + Default> TypedFile<T> {
+    /// Collective open; the view is set to `T` elements immediately.
+    pub fn open(comm: &Comm, path: &str, amode: AccessMode) -> Result<TypedFile<T>> {
+        let file = File::open(comm, path, amode)?;
+        let dt = T::datatype();
+        file.set_view(0, &dt, &dt)?;
+        Ok(TypedFile { file, _marker: std::marker::PhantomData })
+    }
+
+    pub fn native(&self) -> &File {
+        &self.file
+    }
+
+    /// Write a container at element offset.
+    pub fn write_at<B: Buffer<Elem = T> + ?Sized>(&self, offset: u64, data: &B) -> Result<usize> {
+        self.file.write_at(offset, data.as_raw_bytes(), data.count(), &T::datatype())
+    }
+
+    /// Read into a container at element offset; returns elements read.
+    pub fn read_at<B: BufferMut<Elem = T> + ?Sized>(&self, offset: u64, out: &mut B) -> Result<usize> {
+        let count = out.count();
+        self.file.read_at(offset, out.as_raw_bytes_mut(), count, &T::datatype())
+    }
+
+    /// Collective variants.
+    pub fn write_at_all<B: Buffer<Elem = T> + ?Sized>(&self, offset: u64, data: &B) -> Result<usize> {
+        self.file.write_at_all(offset, data.as_raw_bytes(), data.count(), &T::datatype())
+    }
+
+    pub fn read_at_all<B: BufferMut<Elem = T> + ?Sized>(&self, offset: u64, out: &mut B) -> Result<usize> {
+        let count = out.count();
+        self.file.read_at_all(offset, out.as_raw_bytes_mut(), count, &T::datatype())
+    }
+
+    /// Rank-ordered shared write.
+    pub fn write_ordered<B: Buffer<Elem = T> + ?Sized>(&self, data: &B) -> Result<usize> {
+        self.file.write_ordered(data.as_raw_bytes(), data.count(), &T::datatype())
+    }
+
+    /// File length in elements.
+    pub fn len(&self) -> Result<usize> {
+        Ok(self.file.size()? / T::datatype().size().max(1))
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.file.size()? == 0)
+    }
+
+    pub fn sync(&self) -> Result<()> {
+        self.file.sync()
+    }
+
+    /// Collective close.
+    pub fn close(self) -> Result<()> {
+        self.file.close()
+    }
+}
+
+pub use crate::io::AccessMode as FileMode;
+
+/// Convenience: delete a file (any rank).
+pub fn delete(comm: &Comm, path: &str) -> Result<()> {
+    File::delete(comm, path)
+}

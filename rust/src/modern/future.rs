@@ -1,0 +1,246 @@
+//! Requests as futures (paper §II, Listing 2): immediate operations
+//! return an [`MpiFuture`], chainable with `.then()` to express
+//! asynchronous sequential operations; `when_all`/`when_any` express task
+//! graph joins, forwarding to `MPI_Waitall`/`MPI_Waitany`.
+//!
+//! Evaluation model: a chain is demand-driven — `.get()` (or `.wait()`)
+//! drives the underlying request to completion, runs the continuation,
+//! and so on down the chain. This matches the paper's usage (the final
+//! `.get()` realizes the whole pipeline) while keeping continuations on
+//! the calling rank's thread, which MPI requires anyway.
+
+use crate::p2p::Status;
+use crate::request::{self, Request};
+use crate::{mpi_err, Result};
+
+enum Inner<T> {
+    /// Backed directly by an MPI request; `extract` turns the completed
+    /// status into the value (e.g. reads the owned receive buffer).
+    Pending { req: Request, extract: Box<dyn FnOnce(Status) -> Result<T>> },
+    /// A continuation chain not yet driven.
+    Deferred(Box<dyn FnOnce() -> Result<T>>),
+    Ready(Result<T>),
+    Consumed,
+}
+
+/// The paper's `mpi::future`.
+pub struct MpiFuture<T> {
+    inner: Inner<T>,
+}
+
+impl<T: 'static> MpiFuture<T> {
+    /// Wrap a request (`mpi::future(request)` in the paper).
+    pub fn from_request(req: Request, extract: impl FnOnce(Status) -> Result<T> + 'static) -> MpiFuture<T> {
+        MpiFuture { inner: Inner::Pending { req, extract: Box::new(extract) } }
+    }
+
+    /// An already-satisfied future.
+    pub fn ready(value: T) -> MpiFuture<T> {
+        MpiFuture { inner: Inner::Ready(Ok(value)) }
+    }
+
+    pub fn err(e: crate::MpiError) -> MpiFuture<T> {
+        MpiFuture { inner: Inner::Ready(Err(e)) }
+    }
+
+    fn deferred(f: impl FnOnce() -> Result<T> + 'static) -> MpiFuture<T> {
+        MpiFuture { inner: Inner::Deferred(Box::new(f)) }
+    }
+
+    /// `future::get()`: drive to completion and take the value.
+    pub fn get(mut self) -> Result<T> {
+        self.resolve()
+    }
+
+    fn resolve(&mut self) -> Result<T> {
+        match std::mem::replace(&mut self.inner, Inner::Consumed) {
+            Inner::Pending { req, extract } => {
+                let status = req.wait()?;
+                extract(status)
+            }
+            Inner::Deferred(f) => f(),
+            Inner::Ready(v) => v,
+            Inner::Consumed => Err(mpi_err!(Request, "future already consumed")),
+        }
+    }
+
+    /// Non-blocking readiness check (`future::wait_for(0)` analog). If the
+    /// underlying request just completed, the value is captured so a later
+    /// `.get()` returns immediately.
+    pub fn is_ready(&mut self) -> bool {
+        match std::mem::replace(&mut self.inner, Inner::Consumed) {
+            Inner::Pending { req, extract } => match req.test() {
+                Ok(Some(status)) => {
+                    self.inner = Inner::Ready(extract(status));
+                    true
+                }
+                Ok(None) => {
+                    self.inner = Inner::Pending { req, extract };
+                    false
+                }
+                Err(e) => {
+                    self.inner = Inner::Ready(Err(e));
+                    true
+                }
+            },
+            other => {
+                let ready = !matches!(other, Inner::Deferred(_));
+                self.inner = other;
+                ready
+            }
+        }
+    }
+
+    /// `.then()` — the continuation receives the *completed* future (call
+    /// `.get()` on it without blocking, exactly as in Listing 2) and
+    /// returns the next future in the chain.
+    pub fn then<U: 'static>(
+        self,
+        f: impl FnOnce(MpiFuture<T>) -> MpiFuture<U> + 'static,
+    ) -> MpiFuture<U> {
+        MpiFuture::deferred(move || {
+            let mut done = self;
+            let value = done.resolve();
+            f(MpiFuture { inner: Inner::Ready(value) }).get()
+        })
+    }
+
+    /// `.then()` for value-returning continuations (`future::then` with a
+    /// non-future callback return in the paper's interface).
+    pub fn map<U: 'static>(self, f: impl FnOnce(Result<T>) -> Result<U> + 'static) -> MpiFuture<U> {
+        MpiFuture::deferred(move || {
+            let mut done = self;
+            f(done.resolve())
+        })
+    }
+}
+
+/// `mpi::when_all`: completes when every future has; request-backed
+/// members are forwarded to `MPI_Waitall` in one call.
+pub fn when_all<T: 'static>(futures: Vec<MpiFuture<T>>) -> MpiFuture<Vec<T>> {
+    MpiFuture::deferred(move || {
+        // Partition: requests go to waitall together, others resolve in
+        // order.
+        let mut reqs = Vec::new();
+        let mut slots: Vec<Option<Result<T>>> = Vec::with_capacity(futures.len());
+        let mut extracts: Vec<(usize, Box<dyn FnOnce(Status) -> Result<T>>)> = Vec::new();
+        for (i, fut) in futures.into_iter().enumerate() {
+            match fut.inner {
+                Inner::Pending { req, extract } => {
+                    reqs.push(req);
+                    extracts.push((i, extract));
+                    slots.push(None);
+                }
+                Inner::Deferred(f) => slots.push(Some(f())),
+                Inner::Ready(v) => slots.push(Some(v)),
+                Inner::Consumed => slots.push(Some(Err(mpi_err!(Request, "consumed future")))),
+            }
+        }
+        let statuses = request::wait_all(&reqs)?;
+        for ((i, extract), status) in extracts.into_iter().zip(statuses) {
+            slots[i] = Some(extract(status));
+        }
+        slots.into_iter().map(|s| s.expect("slot filled")).collect()
+    })
+}
+
+/// Result of [`when_any`]: the completed index plus **all** futures handed
+/// back (the winner now ready, the rest still in flight) — mirroring
+/// C++'s `when_any_result` so losers can still be waited on.
+pub struct WhenAnyResult<T> {
+    pub index: usize,
+    pub futures: Vec<MpiFuture<T>>,
+}
+
+impl<T: 'static> WhenAnyResult<T> {
+    /// Take the winning value (`result.futures[result.index].get()`).
+    pub fn take_winner(mut self) -> (Result<T>, Vec<MpiFuture<T>>) {
+        let winner = self.futures.remove(self.index);
+        (winner.get(), self.futures)
+    }
+}
+
+/// `mpi::when_any`: completes when one does; request-backed members are
+/// forwarded to `MPI_Waitany`. The un-completed futures survive in the
+/// result.
+pub fn when_any<T: 'static>(futures: Vec<MpiFuture<T>>) -> MpiFuture<WhenAnyResult<T>> {
+    MpiFuture::deferred(move || {
+        // Any already-ready member wins immediately.
+        if let Some(i) = futures.iter().position(|f| matches!(f.inner, Inner::Ready(_))) {
+            return Ok(WhenAnyResult { index: i, futures });
+        }
+        // Waitany over the request-backed members.
+        let mut futures: Vec<MpiFuture<T>> = futures;
+        let reqs: Vec<(usize, &Request)> = futures
+            .iter()
+            .enumerate()
+            .filter_map(|(i, f)| match &f.inner {
+                Inner::Pending { req, .. } => Some((i, req)),
+                _ => None,
+            })
+            .collect();
+        if !reqs.is_empty() {
+            // Build a parallel array of borrowed requests for waitany.
+            let only: Vec<&Request> = reqs.iter().map(|(_, r)| *r).collect();
+            let ctx = only[0].rank_ctx().clone();
+            crate::p2p::engine::wait_for(&ctx, || {
+                only.iter().any(|r| r.test_ready_nonconsuming())
+            })?;
+            let k = only
+                .iter()
+                .position(|r| r.test_ready_nonconsuming())
+                .expect("one ready after wait");
+            let i = reqs[k].0;
+            // Resolve the winner in place.
+            let fut = &mut futures[i];
+            if let Inner::Pending { req, extract } =
+                std::mem::replace(&mut fut.inner, Inner::Consumed)
+            {
+                let status = req.wait()?; // already complete
+                fut.inner = Inner::Ready(extract(status));
+            }
+            return Ok(WhenAnyResult { index: i, futures });
+        }
+        // Only deferred chains left: drive the first.
+        match futures.iter().position(|f| matches!(f.inner, Inner::Deferred(_))) {
+            Some(i) => {
+                let fut = &mut futures[i];
+                if let Inner::Deferred(f) = std::mem::replace(&mut fut.inner, Inner::Consumed) {
+                    fut.inner = Inner::Ready(f());
+                }
+                Ok(WhenAnyResult { index: i, futures })
+            }
+            None => Err(mpi_err!(Request, "when_any of empty future set")),
+        }
+    })
+}
+
+/// `std::future::Future` interop: lets an `MpiFuture` be awaited by any
+/// executor. Polling drives the MPI progress engine once per poll and
+/// requests an immediate re-poll when still pending (MPI completion has no
+/// waker source; this is the documented busy-poll bridge).
+impl<T: 'static> std::future::Future for MpiFuture<T> {
+    type Output = Result<T>;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<Self::Output> {
+        let me = unsafe { self.get_unchecked_mut() };
+        match std::mem::replace(&mut me.inner, Inner::Consumed) {
+            Inner::Pending { req, extract } => match req.test() {
+                Ok(Some(status)) => std::task::Poll::Ready(extract(status)),
+                Ok(None) => {
+                    me.inner = Inner::Pending { req, extract };
+                    cx.waker().wake_by_ref();
+                    std::task::Poll::Pending
+                }
+                Err(e) => std::task::Poll::Ready(Err(e)),
+            },
+            other => {
+                me.inner = other;
+                std::task::Poll::Ready(me.resolve())
+            }
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! The **modern interface** — the paper's contribution, translated
+//! idiom-for-idiom from C++20 to Rust:
+//!
+//! | paper (C++20)                          | here (Rust)                               |
+//! |----------------------------------------|-------------------------------------------|
+//! | managed/unmanaged constructors, RAII   | owned wrappers; `Drop`; `unmanaged` ctor  |
+//! | deleted copy ctors unless `_dup` exists| no `Clone`; explicit `.dup()`             |
+//! | Boost.PFR aggregate reflection         | `#[derive(DataType)]` (`ferrompi-derive`) |
+//! | `mpi::compliant` concept               | the [`datatype::DataType`] trait          |
+//! | requests → futures, `.then()` chains   | [`future::MpiFuture`], `.then()`/`.map()` |
+//! | `mpi::when_all` / `when_any`           | [`future::when_all`] / [`future::when_any`] (forwarding to waitall/waitany) |
+//! | scoped enums                           | [`enums`]                                 |
+//! | `std::optional` returns                | `Option` (e.g. [`Communicator::immediate_probe`]) |
+//! | exceptions w/ error codes              | `Result<T, MpiError>`; `panic-on-error` feature |
+//! | defaulted arguments                    | short methods w/ defaults + `*_with_tag` and description objects |
+
+pub mod communicator;
+pub mod datatype;
+pub mod enums;
+pub mod file;
+pub mod future;
+pub mod window;
+
+pub use communicator::{Communicator, Source, Tag, DEFAULT_TAG};
+pub use datatype::{Buffer, BufferMut, Complex, DataType};
+pub use enums::*;
+pub use future::{when_all, when_any, MpiFuture, WhenAnyResult};
+pub use window::RmaWindow;
+
+// Re-export the derive macro so `use ferrompi::modern::DataType` +
+// `#[derive(DataType)]` work together (Listing 1 ergonomics).
+pub use ferrompi_derive::DataType as DataTypeDerive;

@@ -1,0 +1,122 @@
+//! Typed RAII wrapper over one-sided windows.
+
+use super::datatype::{Buffer, BufferMut, DataType};
+use super::enums::ReduceOp;
+use crate::comm::Comm;
+use crate::onesided::{LockType, Window};
+use crate::op::Op;
+use crate::Result;
+
+/// A window of `T` elements per rank. Managed: dropping after
+/// [`RmaWindow::free`] is the intended flow; `free` is collective like
+/// `MPI_Win_free`.
+pub struct RmaWindow<T: DataType> {
+    win: Window,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: DataType + Default> RmaWindow<T> {
+    /// `MPI_Win_allocate` of `count` elements of `T` per rank, disp unit =
+    /// `size_of::<T>()` (the meaningful default).
+    pub fn allocate(comm: &Comm, count: usize) -> Result<RmaWindow<T>> {
+        let win = Window::allocate(comm, count * T::datatype().size(), T::datatype().size())?;
+        Ok(RmaWindow { win, _marker: std::marker::PhantomData })
+    }
+
+    pub fn native(&self) -> &Window {
+        &self.win
+    }
+
+    /// Typed put of a single value or container at element `disp`.
+    pub fn put<B: Buffer<Elem = T> + ?Sized>(&self, data: &B, target: usize, disp: usize) -> Result<()> {
+        self.win.put(data.as_raw_bytes(), data.count(), &T::datatype(), target, disp)
+    }
+
+    /// Typed get.
+    pub fn get_into<B: BufferMut<Elem = T> + ?Sized>(&self, out: &mut B, target: usize, disp: usize) -> Result<()> {
+        let count = out.count();
+        self.win.get(out.as_raw_bytes_mut(), count, &T::datatype(), target, disp)
+    }
+
+    /// Typed single-element get.
+    pub fn get(&self, target: usize, disp: usize) -> Result<T> {
+        let mut v = T::default();
+        self.get_into(&mut v, target, disp)?;
+        Ok(v)
+    }
+
+    /// Typed accumulate.
+    pub fn accumulate<B: Buffer<Elem = T> + ?Sized>(
+        &self,
+        data: &B,
+        target: usize,
+        disp: usize,
+        op: ReduceOp,
+    ) -> Result<()> {
+        let o: Op = op.into();
+        self.win.accumulate(data.as_raw_bytes(), data.count(), &T::datatype(), target, disp, &o)
+    }
+
+    /// Typed fetch-and-op.
+    pub fn fetch_and_op(&self, value: T, target: usize, disp: usize, op: ReduceOp) -> Result<T> {
+        let mut old = T::default();
+        let o: Op = op.into();
+        self.win.fetch_and_op(
+            Buffer::as_raw_bytes(&value),
+            BufferMut::as_raw_bytes_mut(&mut old),
+            &T::datatype(),
+            target,
+            disp,
+            &o,
+        )?;
+        Ok(old)
+    }
+
+    /// Typed compare-and-swap.
+    pub fn compare_and_swap(&self, value: T, compare: T, target: usize, disp: usize) -> Result<T> {
+        let mut old = T::default();
+        self.win.compare_and_swap(
+            Buffer::as_raw_bytes(&value),
+            Buffer::as_raw_bytes(&compare),
+            BufferMut::as_raw_bytes_mut(&mut old),
+            &T::datatype(),
+            target,
+            disp,
+        )?;
+        Ok(old)
+    }
+
+    /// Local access to this rank's segment as `&mut [T]`.
+    pub fn with_local<R>(&self, f: impl FnOnce(&mut [T]) -> R) -> R {
+        self.win.with_local(|bytes| {
+            let n = bytes.len() / std::mem::size_of::<T>();
+            let slice = unsafe { std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut T, n) };
+            f(slice)
+        })
+    }
+
+    pub fn fence(&self) -> Result<()> {
+        self.win.fence()
+    }
+
+    pub fn lock(&self, lt: LockType, target: usize) -> Result<()> {
+        self.win.lock(lt, target)
+    }
+
+    pub fn unlock(&self, target: usize) -> Result<()> {
+        self.win.unlock(target)
+    }
+
+    pub fn lock_all(&self) -> Result<()> {
+        self.win.lock_all()
+    }
+
+    pub fn unlock_all(&self) -> Result<()> {
+        self.win.unlock_all()
+    }
+
+    /// Collective teardown.
+    pub fn free(self) -> Result<()> {
+        self.win.free()
+    }
+}

@@ -1,0 +1,14 @@
+//! One-sided communication (MPI-4.0 §12): windows, put/get/accumulate,
+//! and the three synchronization families (fence; post-start-complete-wait;
+//! passive-target lock/unlock).
+//!
+//! Simulation mapping: window memory is owned by the window object and
+//! shared across rank threads behind per-rank mutexes — the moral
+//! equivalent of RDMA-exposed memory. RMA data movement charges the α–β
+//! model to the *origin's* clock (one-sided: the target's CPU is not
+//! involved), and synchronization calls ride the ordinary collective /
+//! p2p machinery, which propagates clocks causally.
+
+pub mod window;
+
+pub use window::{LockType, Window};

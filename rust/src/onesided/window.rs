@@ -1,0 +1,384 @@
+//! RMA windows.
+
+use crate::collective;
+use crate::comm::Comm;
+use crate::datatype::{pack, unpack, Datatype};
+use crate::op::Op;
+use crate::{mpi_err, Result};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// `MPI_LOCK_EXCLUSIVE` / `MPI_LOCK_SHARED`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockType {
+    Exclusive,
+    Shared,
+}
+
+/// Passive-target lock state for one target rank.
+#[derive(Debug, Default)]
+struct LockState {
+    exclusive: bool,
+    shared: usize,
+}
+
+#[derive(Debug, Default)]
+struct TargetLock {
+    state: Mutex<LockState>,
+    cv: Condvar,
+}
+
+impl TargetLock {
+    fn acquire(&self, lt: LockType) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match lt {
+                LockType::Exclusive if !st.exclusive && st.shared == 0 => {
+                    st.exclusive = true;
+                    return;
+                }
+                LockType::Shared if !st.exclusive => {
+                    st.shared += 1;
+                    return;
+                }
+                _ => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    fn release(&self, lt: LockType) {
+        let mut st = self.state.lock().unwrap();
+        match lt {
+            LockType::Exclusive => st.exclusive = false,
+            LockType::Shared => st.shared = st.shared.saturating_sub(1),
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Shared (cross-rank) part of a window.
+#[derive(Debug)]
+struct WinShared {
+    segments: Vec<Mutex<Vec<u8>>>,
+    locks: Vec<TargetLock>,
+    disp_units: Vec<usize>,
+}
+
+/// An RMA window (`MPI_Win`), created collectively. Dropping it frees the
+/// local view; the shared memory lives until the last rank drops.
+pub struct Window {
+    comm: Comm,
+    key: u64,
+    shared: Arc<WinShared>,
+    /// Locks this rank currently holds (target → type), so unlock_all and
+    /// error checking work.
+    held: std::cell::RefCell<Vec<(usize, LockType)>>,
+}
+
+impl Window {
+    /// `MPI_Win_allocate`: every rank contributes `local_size` bytes with
+    /// displacement unit `disp_unit`. Collective over `comm` (which is
+    /// duplicated internally, like real implementations do, so window
+    /// traffic cannot interfere with user communication).
+    pub fn allocate(comm: &Comm, local_size: usize, disp_unit: usize) -> Result<Window> {
+        let comm = comm.dup()?;
+        let p = comm.size();
+        // Share sizes/disp units.
+        let u64t = Datatype::primitive(crate::datatype::Primitive::U64);
+        let mine = [(local_size as u64).to_le_bytes(), (disp_unit as u64).to_le_bytes()].concat();
+        let mut all = vec![0u8; 16 * p];
+        collective::allgather(&comm, Some(&mine), 2, &u64t, &mut all, 2, &u64t)?;
+        let sizes: Vec<usize> =
+            (0..p).map(|i| u64::from_le_bytes(all[16 * i..16 * i + 8].try_into().unwrap()) as usize).collect();
+        let disp_units: Vec<usize> = (0..p)
+            .map(|i| u64::from_le_bytes(all[16 * i + 8..16 * i + 16].try_into().unwrap()) as usize)
+            .collect();
+
+        // Rank 0 builds the shared segments and publishes them in the
+        // fabric registry under the (unique) window-communicator context
+        // id; a barrier orders publish before fetch.
+        let fabric = comm.rank_ctx().fabric.clone();
+        let key = 0x5749_0000_0000_0000u64 | comm.ctx_coll() as u64;
+        if comm.rank() == 0 {
+            let s: Arc<WinShared> = Arc::new(WinShared {
+                segments: sizes.iter().map(|&n| Mutex::new(vec![0u8; n])).collect(),
+                locks: (0..p).map(|_| TargetLock::default()).collect(),
+                disp_units,
+            });
+            fabric.publish(key, s);
+        }
+        collective::barrier(&comm)?;
+        let shared = fabric
+            .fetch(key)
+            .ok_or_else(|| mpi_err!(Win, "window registry entry missing"))?
+            .downcast::<WinShared>()
+            .map_err(|_| mpi_err!(Intern, "window registry type mismatch"))?;
+        Ok(Window { comm, key, shared, held: std::cell::RefCell::new(Vec::new()) })
+    }
+
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    pub fn size_of(&self, rank: usize) -> usize {
+        self.shared.segments[rank].lock().unwrap().len()
+    }
+
+    /// Read/modify this rank's local window memory
+    /// (`MPI_Win_allocate` base-pointer access).
+    pub fn with_local<T>(&self, f: impl FnOnce(&mut [u8]) -> T) -> T {
+        let mut seg = self.shared.segments[self.comm.rank()].lock().unwrap();
+        f(&mut seg)
+    }
+
+    fn charge(&self, bytes: usize, target: usize) {
+        let ctx = self.comm.rank_ctx();
+        let me = ctx.world_rank;
+        let tw = self.comm.group().world_rank(target).unwrap_or(me);
+        let same = ctx.fabric.nodemap.same_node(me, tw);
+        ctx.clock.charge(ctx.fabric.model.cost_ns(bytes, same));
+    }
+
+    fn byte_offset(&self, target: usize, disp: usize) -> usize {
+        disp * self.shared.disp_units[target]
+    }
+
+    /// `MPI_Put`.
+    pub fn put(&self, origin: &[u8], count: usize, dtype: &Datatype, target: usize, target_disp: usize) -> Result<()> {
+        dtype.require_committed()?;
+        let mut wire = Vec::new();
+        pack(dtype.map(), origin, count, &mut wire)?;
+        let off = self.byte_offset(target, target_disp);
+        {
+            let mut seg = self.shared.segments[target].lock().unwrap();
+            if off + wire.len() > seg.len() {
+                return Err(mpi_err!(RmaRange, "put of {} bytes at {off} exceeds window {}", wire.len(), seg.len()));
+            }
+            seg[off..off + wire.len()].copy_from_slice(&wire);
+        }
+        self.charge(wire.len(), target);
+        Ok(())
+    }
+
+    /// `MPI_Get`.
+    pub fn get(&self, origin: &mut [u8], count: usize, dtype: &Datatype, target: usize, target_disp: usize) -> Result<()> {
+        dtype.require_committed()?;
+        let nbytes = dtype.size() * count;
+        let off = self.byte_offset(target, target_disp);
+        let wire = {
+            let seg = self.shared.segments[target].lock().unwrap();
+            if off + nbytes > seg.len() {
+                return Err(mpi_err!(RmaRange, "get of {nbytes} bytes at {off} exceeds window {}", seg.len()));
+            }
+            seg[off..off + nbytes].to_vec()
+        };
+        unpack(dtype.map(), &wire, origin, count)?;
+        self.charge(nbytes, target);
+        Ok(())
+    }
+
+    /// `MPI_Accumulate` (predefined ops + REPLACE).
+    #[allow(clippy::too_many_arguments)]
+    pub fn accumulate(
+        &self,
+        origin: &[u8],
+        count: usize,
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+        op: &Op,
+    ) -> Result<()> {
+        dtype.require_committed()?;
+        let mut wire = Vec::new();
+        pack(dtype.map(), origin, count, &mut wire)?;
+        let off = self.byte_offset(target, target_disp);
+        {
+            let mut seg = self.shared.segments[target].lock().unwrap();
+            if off + wire.len() > seg.len() {
+                return Err(mpi_err!(RmaRange, "accumulate exceeds window"));
+            }
+            op.apply(dtype.map(), &wire, &mut seg[off..off + wire.len()], count)?;
+        }
+        self.charge(wire.len(), target);
+        Ok(())
+    }
+
+    /// `MPI_Get_accumulate`: fetch old value, then combine.
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_accumulate(
+        &self,
+        origin: &[u8],
+        result: &mut [u8],
+        count: usize,
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+        op: &Op,
+    ) -> Result<()> {
+        dtype.require_committed()?;
+        let mut wire = Vec::new();
+        pack(dtype.map(), origin, count, &mut wire)?;
+        let off = self.byte_offset(target, target_disp);
+        let old = {
+            let mut seg = self.shared.segments[target].lock().unwrap();
+            if off + wire.len() > seg.len() {
+                return Err(mpi_err!(RmaRange, "get_accumulate exceeds window"));
+            }
+            let old = seg[off..off + wire.len()].to_vec();
+            op.apply(dtype.map(), &wire, &mut seg[off..off + wire.len()], count)?;
+            old
+        };
+        unpack(dtype.map(), &old, result, count)?;
+        self.charge(2 * wire.len(), target);
+        Ok(())
+    }
+
+    /// `MPI_Fetch_and_op` (single element).
+    pub fn fetch_and_op(
+        &self,
+        origin: &[u8],
+        result: &mut [u8],
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+        op: &Op,
+    ) -> Result<()> {
+        self.get_accumulate(origin, result, 1, dtype, target, target_disp, op)
+    }
+
+    /// `MPI_Compare_and_swap` (single element): writes `origin` iff the
+    /// target equals `compare`; always returns the old value in `result`.
+    pub fn compare_and_swap(
+        &self,
+        origin: &[u8],
+        compare: &[u8],
+        result: &mut [u8],
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+    ) -> Result<()> {
+        dtype.require_committed()?;
+        let n = dtype.size();
+        let off = self.byte_offset(target, target_disp);
+        let mut owire = Vec::new();
+        pack(dtype.map(), origin, 1, &mut owire)?;
+        let mut cwire = Vec::new();
+        pack(dtype.map(), compare, 1, &mut cwire)?;
+        let old = {
+            let mut seg = self.shared.segments[target].lock().unwrap();
+            if off + n > seg.len() {
+                return Err(mpi_err!(RmaRange, "compare_and_swap exceeds window"));
+            }
+            let old = seg[off..off + n].to_vec();
+            if old == cwire {
+                seg[off..off + n].copy_from_slice(&owire);
+            }
+            old
+        };
+        unpack(dtype.map(), &old, result, 1)?;
+        self.charge(2 * n, target);
+        Ok(())
+    }
+
+    // ---- synchronization ----
+
+    /// `MPI_Win_fence`: separates RMA epochs; collective.
+    pub fn fence(&self) -> Result<()> {
+        collective::barrier(&self.comm)
+    }
+
+    /// `MPI_Win_lock`.
+    pub fn lock(&self, lt: LockType, target: usize) -> Result<()> {
+        if self.held.borrow().iter().any(|&(t, _)| t == target) {
+            return Err(mpi_err!(RmaSync, "window already locked for target {target}"));
+        }
+        self.shared.locks[target].acquire(lt);
+        self.held.borrow_mut().push((target, lt));
+        Ok(())
+    }
+
+    /// `MPI_Win_unlock`.
+    pub fn unlock(&self, target: usize) -> Result<()> {
+        let mut held = self.held.borrow_mut();
+        let idx = held
+            .iter()
+            .position(|&(t, _)| t == target)
+            .ok_or_else(|| mpi_err!(RmaSync, "unlock of target {target} not locked"))?;
+        let (_, lt) = held.remove(idx);
+        self.shared.locks[target].release(lt);
+        Ok(())
+    }
+
+    /// `MPI_Win_lock_all` (shared on every target).
+    pub fn lock_all(&self) -> Result<()> {
+        for t in 0..self.comm.size() {
+            self.lock(LockType::Shared, t)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_unlock_all`.
+    pub fn unlock_all(&self) -> Result<()> {
+        let held: Vec<(usize, LockType)> = self.held.borrow_mut().drain(..).collect();
+        for (t, lt) in held {
+            self.shared.locks[t].release(lt);
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_flush`: RMA here is synchronous, so flush only charges the
+    /// bookkeeping (ordering is already guaranteed).
+    pub fn flush(&self, _target: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Post-start-complete-wait (PSCW) active-target sync, expressed over
+    /// p2p: `post` tells each origin it may access; `start` waits for the
+    /// posts; `complete` notifies targets; `wait` collects completions.
+    pub fn post(&self, origins: &[usize]) -> Result<()> {
+        let byte = Datatype::primitive(crate::datatype::Primitive::Byte);
+        for &o in origins {
+            self.comm.send(&[], 0, &byte, o as i32, PSCW_POST_TAG)?;
+        }
+        Ok(())
+    }
+
+    pub fn start(&self, targets: &[usize]) -> Result<()> {
+        let byte = Datatype::primitive(crate::datatype::Primitive::Byte);
+        for &t in targets {
+            let mut empty = [];
+            self.comm.recv(&mut empty, 0, &byte, t as i32, PSCW_POST_TAG)?;
+        }
+        Ok(())
+    }
+
+    pub fn complete(&self, targets: &[usize]) -> Result<()> {
+        let byte = Datatype::primitive(crate::datatype::Primitive::Byte);
+        for &t in targets {
+            self.comm.send(&[], 0, &byte, t as i32, PSCW_COMPLETE_TAG)?;
+        }
+        Ok(())
+    }
+
+    pub fn wait(&self, origins: &[usize]) -> Result<()> {
+        let byte = Datatype::primitive(crate::datatype::Primitive::Byte);
+        for &o in origins {
+            let mut empty = [];
+            self.comm.recv(&mut empty, 0, &byte, o as i32, PSCW_COMPLETE_TAG)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_free` is collective; the registry entry is retired once
+    /// every rank has arrived.
+    pub fn free(self) -> Result<()> {
+        collective::barrier(&self.comm)?;
+        if self.comm.rank() == 0 {
+            self.comm.rank_ctx().fabric.unpublish(self.key);
+        }
+        Ok(())
+    }
+}
+
+const PSCW_POST_TAG: i32 = crate::comm::TAG_UB - 1;
+const PSCW_COMPLETE_TAG: i32 = crate::comm::TAG_UB - 2;

@@ -1,0 +1,469 @@
+//! Reduction operations (MPI-4.0 §6.9): the predefined `MPI_SUM`-family
+//! ops, `MPI_MAXLOC`/`MPI_MINLOC` over pair types, and user-defined ops
+//! (`MPI_Op_create`) — which is also the hook through which the AOT/PJRT
+//! combiner from [`crate::runtime`] plugs into the collectives.
+//!
+//! Ops act on buffers in *wire format* (packed, contiguous), which is what
+//! the collective engine reduces; element layout follows the datatype's
+//! packed entry sequence.
+
+use crate::datatype::{Primitive, TypeMap};
+use crate::{mpi_err, Result};
+use std::sync::Arc;
+
+/// The predefined operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Sum,
+    Prod,
+    Max,
+    Min,
+    /// Logical and/or/xor (C semantics: nonzero = true, result 0/1).
+    Land,
+    Lor,
+    Lxor,
+    /// Bitwise and/or/xor (integer types only).
+    Band,
+    Bor,
+    Bxor,
+    /// Max/min value with index (pair types only).
+    MaxLoc,
+    MinLoc,
+    /// `MPI_REPLACE` (RMA accumulate) / `MPI_NO_OP`.
+    Replace,
+    NoOp,
+}
+
+impl OpKind {
+    pub const fn name(self) -> &'static str {
+        match self {
+            OpKind::Sum => "sum",
+            OpKind::Prod => "prod",
+            OpKind::Max => "max",
+            OpKind::Min => "min",
+            OpKind::Land => "land",
+            OpKind::Lor => "lor",
+            OpKind::Lxor => "lxor",
+            OpKind::Band => "band",
+            OpKind::Bor => "bor",
+            OpKind::Bxor => "bxor",
+            OpKind::MaxLoc => "maxloc",
+            OpKind::MinLoc => "minloc",
+            OpKind::Replace => "replace",
+            OpKind::NoOp => "no_op",
+        }
+    }
+}
+
+/// User combine function: `f(input, inout, count, typemap)` computes
+/// `inout[i] = input[i] op inout[i]` over packed buffers.
+pub type UserFn = Arc<dyn Fn(&[u8], &mut [u8], usize, &TypeMap) -> Result<()> + Send + Sync>;
+
+/// An `MPI_Op` handle.
+#[derive(Clone)]
+pub enum Op {
+    Predefined(OpKind),
+    User { f: UserFn, commutative: bool, name: &'static str },
+}
+
+impl std::fmt::Debug for Op {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Op::Predefined(k) => write!(f, "Op::{}", k.name()),
+            Op::User { commutative, name, .. } => {
+                write!(f, "Op::user({name}, commutative={commutative})")
+            }
+        }
+    }
+}
+
+macro_rules! arith {
+    ($t:ty, $a:expr, $b:expr, $kind:expr) => {{
+        let x = <$t>::from_le_bytes($a.try_into().unwrap());
+        let y = <$t>::from_le_bytes($b.try_into().unwrap());
+        let r: $t = match $kind {
+            OpKind::Sum => x.wrapping_add(y),
+            OpKind::Prod => x.wrapping_mul(y),
+            OpKind::Max => x.max(y),
+            OpKind::Min => x.min(y),
+            OpKind::Land => ((x != 0) && (y != 0)) as $t,
+            OpKind::Lor => ((x != 0) || (y != 0)) as $t,
+            OpKind::Lxor => ((x != 0) != (y != 0)) as $t,
+            OpKind::Band => x & y,
+            OpKind::Bor => x | y,
+            OpKind::Bxor => x ^ y,
+            _ => unreachable!(),
+        };
+        $b.copy_from_slice(&r.to_le_bytes());
+    }};
+}
+
+macro_rules! farith {
+    ($t:ty, $a:expr, $b:expr, $kind:expr) => {{
+        let x = <$t>::from_le_bytes($a.try_into().unwrap());
+        let y = <$t>::from_le_bytes($b.try_into().unwrap());
+        let r: $t = match $kind {
+            OpKind::Sum => x + y,
+            OpKind::Prod => x * y,
+            OpKind::Max => x.max(y),
+            OpKind::Min => x.min(y),
+            OpKind::Land => (((x != 0.0) && (y != 0.0)) as u8) as $t,
+            OpKind::Lor => (((x != 0.0) || (y != 0.0)) as u8) as $t,
+            OpKind::Lxor => (((x != 0.0) != (y != 0.0)) as u8) as $t,
+            _ => unreachable!(),
+        };
+        $b.copy_from_slice(&r.to_le_bytes());
+    }};
+}
+
+/// Combine one primitive value: `inout = input OP inout` (note MPI's
+/// argument order: the *second* argument is in-out).
+fn combine_prim(kind: OpKind, p: Primitive, input: &[u8], inout: &mut [u8]) -> Result<()> {
+    use Primitive::*;
+    let bitwise_on_float = matches!(kind, OpKind::Band | OpKind::Bor | OpKind::Bxor)
+        && matches!(p, F32 | F64 | C32 | C64);
+    if bitwise_on_float {
+        return Err(mpi_err!(Op, "bitwise op {} invalid on {}", kind.name(), p.name()));
+    }
+    let minmax_on_complex =
+        matches!(kind, OpKind::Max | OpKind::Min) && matches!(p, C32 | C64);
+    if minmax_on_complex {
+        return Err(mpi_err!(Op, "{} invalid on complex type {}", kind.name(), p.name()));
+    }
+    match p {
+        I8 => arith!(i8, input, inout, kind),
+        U8 | Bool | Byte => arith!(u8, input, inout, kind),
+        I16 => arith!(i16, input, inout, kind),
+        U16 => arith!(u16, input, inout, kind),
+        I32 => arith!(i32, input, inout, kind),
+        U32 => arith!(u32, input, inout, kind),
+        I64 => arith!(i64, input, inout, kind),
+        U64 => arith!(u64, input, inout, kind),
+        F32 => farith!(f32, input, inout, kind),
+        F64 => farith!(f64, input, inout, kind),
+        C32 => {
+            // complex<f32> = (re, im); sum/prod only.
+            let (xr, xi) = (
+                f32::from_le_bytes(input[0..4].try_into().unwrap()),
+                f32::from_le_bytes(input[4..8].try_into().unwrap()),
+            );
+            let (yr, yi) = (
+                f32::from_le_bytes(inout[0..4].try_into().unwrap()),
+                f32::from_le_bytes(inout[4..8].try_into().unwrap()),
+            );
+            let (rr, ri) = match kind {
+                OpKind::Sum => (xr + yr, xi + yi),
+                OpKind::Prod => (xr * yr - xi * yi, xr * yi + xi * yr),
+                _ => return Err(mpi_err!(Op, "{} invalid on c32", kind.name())),
+            };
+            inout[0..4].copy_from_slice(&rr.to_le_bytes());
+            inout[4..8].copy_from_slice(&ri.to_le_bytes());
+        }
+        C64 => {
+            let (xr, xi) = (
+                f64::from_le_bytes(input[0..8].try_into().unwrap()),
+                f64::from_le_bytes(input[8..16].try_into().unwrap()),
+            );
+            let (yr, yi) = (
+                f64::from_le_bytes(inout[0..8].try_into().unwrap()),
+                f64::from_le_bytes(inout[8..16].try_into().unwrap()),
+            );
+            let (rr, ri) = match kind {
+                OpKind::Sum => (xr + yr, xi + yi),
+                OpKind::Prod => (xr * yr - xi * yi, xr * yi + xi * yr),
+                _ => return Err(mpi_err!(Op, "{} invalid on c64", kind.name())),
+            };
+            inout[0..8].copy_from_slice(&rr.to_le_bytes());
+            inout[8..16].copy_from_slice(&ri.to_le_bytes());
+        }
+    }
+    Ok(())
+}
+
+/// MAXLOC/MINLOC over a wire pair (value, i32 index).
+fn combine_loc(kind: OpKind, val: Primitive, input: &[u8], inout: &mut [u8]) -> Result<()> {
+    let vs = val.size();
+    macro_rules! loc {
+        ($t:ty) => {{
+            let x = <$t>::from_le_bytes(input[..vs].try_into().unwrap());
+            let xi = i32::from_le_bytes(input[vs..vs + 4].try_into().unwrap());
+            let y = <$t>::from_le_bytes(inout[..vs].try_into().unwrap());
+            let yi = i32::from_le_bytes(inout[vs..vs + 4].try_into().unwrap());
+            // MPI: on ties, the lower index wins.
+            let take_x = match kind {
+                OpKind::MaxLoc => x > y || (x == y && xi < yi),
+                OpKind::MinLoc => x < y || (x == y && xi < yi),
+                _ => unreachable!(),
+            };
+            if take_x {
+                inout[..vs].copy_from_slice(&input[..vs]);
+                inout[vs..vs + 4].copy_from_slice(&xi.to_le_bytes());
+            }
+        }};
+    }
+    match val {
+        Primitive::F32 => loc!(f32),
+        Primitive::F64 => loc!(f64),
+        Primitive::I32 => loc!(i32),
+        Primitive::I64 => loc!(i64),
+        Primitive::I16 => loc!(i16),
+        other => {
+            return Err(mpi_err!(Op, "{} unsupported pair value type {}", kind.name(), other.name()))
+        }
+    }
+    Ok(())
+}
+
+impl Op {
+    /// Predefined handles.
+    pub const SUM: Op = Op::Predefined(OpKind::Sum);
+    pub const PROD: Op = Op::Predefined(OpKind::Prod);
+    pub const MAX: Op = Op::Predefined(OpKind::Max);
+    pub const MIN: Op = Op::Predefined(OpKind::Min);
+    pub const LAND: Op = Op::Predefined(OpKind::Land);
+    pub const LOR: Op = Op::Predefined(OpKind::Lor);
+    pub const LXOR: Op = Op::Predefined(OpKind::Lxor);
+    pub const BAND: Op = Op::Predefined(OpKind::Band);
+    pub const BOR: Op = Op::Predefined(OpKind::Bor);
+    pub const BXOR: Op = Op::Predefined(OpKind::Bxor);
+    pub const MAXLOC: Op = Op::Predefined(OpKind::MaxLoc);
+    pub const MINLOC: Op = Op::Predefined(OpKind::MinLoc);
+    pub const REPLACE: Op = Op::Predefined(OpKind::Replace);
+    pub const NO_OP: Op = Op::Predefined(OpKind::NoOp);
+
+    /// `MPI_Op_create`.
+    pub fn user(f: UserFn, commutative: bool, name: &'static str) -> Op {
+        Op::User { f, commutative, name }
+    }
+
+    /// `MPI_Op_commutative`.
+    pub fn is_commutative(&self) -> bool {
+        match self {
+            Op::Predefined(_) => true, // all predefined MPI ops are commutative
+            Op::User { commutative, .. } => *commutative,
+        }
+    }
+
+    /// Apply `inout[i] = input[i] op inout[i]` over `count` packed elements
+    /// of `map`.
+    pub fn apply(&self, map: &TypeMap, input: &[u8], inout: &mut [u8], count: usize) -> Result<()> {
+        let esz = map.size();
+        let need = esz * count;
+        if input.len() < need || inout.len() < need {
+            return Err(mpi_err!(
+                Buffer,
+                "reduce buffers too small: need {need}, have {} / {}",
+                input.len(),
+                inout.len()
+            ));
+        }
+        match self {
+            Op::User { f, .. } => return f(input, inout, count, map),
+            Op::Predefined(OpKind::NoOp) => return Ok(()),
+            Op::Predefined(OpKind::Replace) => {
+                inout[..need].copy_from_slice(&input[..need]);
+                return Ok(());
+            }
+            Op::Predefined(kind @ (OpKind::MaxLoc | OpKind::MinLoc)) => {
+                // Pair type: exactly two entries, second must be i32 index.
+                let ents = map.entries();
+                if ents.len() != 2 || ents[1].0 != Primitive::I32 {
+                    return Err(mpi_err!(
+                        Op,
+                        "{} requires a (value, i32) pair datatype, got {} entr(ies)",
+                        kind.name(),
+                        ents.len()
+                    ));
+                }
+                let val = ents[0].0;
+                for i in 0..count {
+                    let off = i * esz;
+                    combine_loc(*kind, val, &input[off..off + esz], &mut inout[off..off + esz])?;
+                }
+                return Ok(());
+            }
+            Op::Predefined(kind) => {
+                // General path: apply per packed entry. Fast for the common
+                // homogeneous case too because entry iteration is cheap.
+                let mut off = 0usize;
+                for _ in 0..count {
+                    for &(p, _) in map.entries() {
+                        let s = p.size();
+                        let (a, b) = (&input[off..off + s], &mut inout[off..off + s]);
+                        combine_prim(*kind, p, a, b)?;
+                        off += s;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The predefined pair datatypes for MAXLOC/MINLOC (`MPI_FLOAT_INT`, ...).
+pub fn pair_type(value: Primitive) -> TypeMap {
+    // Wire layout (value, index) packed back-to-back; memory layout uses
+    // the equivalent #[repr(C)] struct offsets.
+    let vs = value.size() as isize;
+    let idx_off = vs.max(4); // natural alignment of i32 after the value
+    TypeMap::structure(&[
+        (0, TypeMap::primitive(value), 1),
+        (idx_off, TypeMap::primitive(Primitive::I32), 1),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn le<T: Copy>(v: &[T]) -> Vec<u8> {
+        unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)).to_vec()
+        }
+    }
+
+    fn from_le_i32(b: &[u8]) -> Vec<i32> {
+        b.chunks(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    #[test]
+    fn sum_i32() {
+        let t = TypeMap::primitive(Primitive::I32);
+        let a = le(&[1i32, 2, 3]);
+        let mut b = le(&[10i32, 20, 30]);
+        Op::SUM.apply(&t, &a, &mut b, 3).unwrap();
+        assert_eq!(from_le_i32(&b), vec![11, 22, 33]);
+    }
+
+    #[test]
+    fn all_arith_ops_f64() {
+        let t = TypeMap::primitive(Primitive::F64);
+        let cases = [
+            (Op::SUM, 7.0),
+            (Op::PROD, 12.0),
+            (Op::MAX, 4.0),
+            (Op::MIN, 3.0),
+        ];
+        for (op, expect) in cases {
+            let a = le(&[3.0f64]);
+            let mut b = le(&[4.0f64]);
+            op.apply(&t, &a, &mut b, 1).unwrap();
+            assert_eq!(f64::from_le_bytes(b.try_into().unwrap()), expect, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn logical_and_bitwise() {
+        let t = TypeMap::primitive(Primitive::U32);
+        let a = le(&[0b1100u32]);
+        let mut b = le(&[0b1010u32]);
+        Op::BAND.apply(&t, &a, &mut b, 1).unwrap();
+        assert_eq!(u32::from_le_bytes(b.clone().try_into().unwrap()), 0b1000);
+        let mut b = le(&[0b1010u32]);
+        Op::BXOR.apply(&t, &a, &mut b, 1).unwrap();
+        assert_eq!(u32::from_le_bytes(b.clone().try_into().unwrap()), 0b0110);
+        let mut b = le(&[0u32]);
+        Op::LOR.apply(&t, &a, &mut b, 1).unwrap();
+        assert_eq!(u32::from_le_bytes(b.try_into().unwrap()), 1);
+    }
+
+    #[test]
+    fn bitwise_on_float_rejected() {
+        let t = TypeMap::primitive(Primitive::F32);
+        let a = le(&[1.0f32]);
+        let mut b = le(&[1.0f32]);
+        assert!(Op::BAND.apply(&t, &a, &mut b, 1).is_err());
+    }
+
+    #[test]
+    fn complex_sum_prod() {
+        let t = TypeMap::primitive(Primitive::C64);
+        // (1+2i) * (3+4i) = -5 + 10i
+        let a = le(&[1.0f64, 2.0]);
+        let mut b = le(&[3.0f64, 4.0]);
+        Op::PROD.apply(&t, &a, &mut b, 1).unwrap();
+        let re = f64::from_le_bytes(b[0..8].try_into().unwrap());
+        let im = f64::from_le_bytes(b[8..16].try_into().unwrap());
+        assert_eq!((re, im), (-5.0, 10.0));
+        assert!(Op::MAX.apply(&t, &a, &mut b, 1).is_err());
+    }
+
+    #[test]
+    fn maxloc_ties_take_lower_index() {
+        let t = pair_type(Primitive::F64);
+        // wire layout: f64 then i32, packed (12 bytes/elem).
+        let mut input = le(&[5.0f64]);
+        input.extend(le(&[2i32]));
+        let mut inout = le(&[5.0f64]);
+        inout.extend(le(&[7i32]));
+        Op::MAXLOC.apply(&t, &input, &mut inout, 1).unwrap();
+        assert_eq!(i32::from_le_bytes(inout[8..12].try_into().unwrap()), 2);
+    }
+
+    #[test]
+    fn minloc_takes_smaller_value() {
+        let t = pair_type(Primitive::I32);
+        let mut input = le(&[3i32]);
+        input.extend(le(&[9i32]));
+        let mut inout = le(&[5i32]);
+        inout.extend(le(&[1i32]));
+        Op::MINLOC.apply(&t, &input, &mut inout, 1).unwrap();
+        assert_eq!(from_le_i32(&inout), vec![3, 9]);
+    }
+
+    #[test]
+    fn maxloc_requires_pair() {
+        let t = TypeMap::primitive(Primitive::F64);
+        let a = le(&[1.0f64]);
+        let mut b = le(&[2.0f64]);
+        assert!(Op::MAXLOC.apply(&t, &a, &mut b, 1).is_err());
+    }
+
+    #[test]
+    fn replace_and_noop() {
+        let t = TypeMap::primitive(Primitive::I32);
+        let a = le(&[9i32]);
+        let mut b = le(&[1i32]);
+        Op::REPLACE.apply(&t, &a, &mut b, 1).unwrap();
+        assert_eq!(from_le_i32(&b), vec![9]);
+        Op::NO_OP.apply(&t, &a, &mut b, 0).unwrap();
+        assert_eq!(from_le_i32(&b), vec![9]);
+    }
+
+    #[test]
+    fn user_op_invoked() {
+        let t = TypeMap::primitive(Primitive::I32);
+        // "take the second largest" stand-in: just add 100.
+        let f: UserFn = Arc::new(|input, inout, count, _map| {
+            for i in 0..count {
+                let x = i32::from_le_bytes(input[i * 4..i * 4 + 4].try_into().unwrap());
+                let y = i32::from_le_bytes(inout[i * 4..i * 4 + 4].try_into().unwrap());
+                inout[i * 4..i * 4 + 4].copy_from_slice(&(x + y + 100).to_le_bytes());
+            }
+            Ok(())
+        });
+        let op = Op::user(f, true, "plus100");
+        assert!(op.is_commutative());
+        let a = le(&[1i32]);
+        let mut b = le(&[2i32]);
+        op.apply(&t, &a, &mut b, 1).unwrap();
+        assert_eq!(from_le_i32(&b), vec![103]);
+    }
+
+    #[test]
+    fn heterogeneous_struct_reduce() {
+        // struct { a: i32, b: f64 } summed memberwise.
+        let t = TypeMap::structure(&[
+            (0, TypeMap::primitive(Primitive::I32), 1),
+            (8, TypeMap::primitive(Primitive::F64), 1),
+        ]);
+        // wire: i32 then f64 (packed, 12 bytes).
+        let mut input = le(&[1i32]);
+        input.extend(le(&[0.5f64]));
+        let mut inout = le(&[2i32]);
+        inout.extend(le(&[0.25f64]));
+        Op::SUM.apply(&t, &input, &mut inout, 1).unwrap();
+        assert_eq!(i32::from_le_bytes(inout[0..4].try_into().unwrap()), 3);
+        assert_eq!(f64::from_le_bytes(inout[4..12].try_into().unwrap()), 0.75);
+    }
+}

@@ -1,0 +1,106 @@
+//! Lifetime-erased buffer handles.
+//!
+//! The C MPI interface traffics in `void*` + count; requests capture the
+//! pointer and the standard forbids touching the buffer until completion.
+//! These wrappers reproduce that contract explicitly: constructing one from
+//! a slice erases the lifetime, and the unsafe `as_slice` accessors are
+//! only called by the owning rank's own progress engine (single-threaded
+//! access by construction).
+
+/// Borrowed send buffer (const). Only used transiently during posting —
+/// send payloads are packed immediately, so no send holds one across calls.
+#[derive(Debug, Clone, Copy)]
+pub struct RawBuf {
+    ptr: *const u8,
+    len: usize,
+}
+
+impl RawBuf {
+    pub fn from_slice(s: &[u8]) -> RawBuf {
+        RawBuf { ptr: s.as_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    /// The original buffer must still be live and not mutably aliased.
+    pub unsafe fn as_slice<'a>(&self) -> &'a [u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            std::slice::from_raw_parts(self.ptr, self.len)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Captured receive buffer. Held by a pending receive until completion.
+#[derive(Debug, Clone, Copy)]
+pub struct RawBufMut {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl RawBufMut {
+    /// Capture a mutable slice. The *caller* promises (per the MPI
+    /// contract) not to access the region until the receive completes.
+    pub fn from_slice(s: &mut [u8]) -> RawBufMut {
+        RawBufMut { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    /// Must only be called on the owning rank's thread while the original
+    /// allocation is live and the MPI completion contract holds.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn as_slice_mut<'a>(&self) -> &'a mut [u8] {
+        if self.len == 0 {
+            &mut []
+        } else {
+            std::slice::from_raw_parts_mut(self.ptr, self.len)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_const() {
+        let data = [1u8, 2, 3];
+        let b = RawBuf::from_slice(&data);
+        assert_eq!(b.len(), 3);
+        assert_eq!(unsafe { b.as_slice() }, &[1, 2, 3]);
+    }
+
+    #[test]
+    fn roundtrip_mut() {
+        let mut data = [0u8; 4];
+        let b = RawBufMut::from_slice(&mut data);
+        unsafe { b.as_slice_mut()[2] = 9 };
+        assert_eq!(data, [0, 0, 9, 0]);
+    }
+
+    #[test]
+    fn empty_buffers() {
+        let b = RawBuf::from_slice(&[]);
+        assert!(b.is_empty());
+        assert_eq!(unsafe { b.as_slice() }.len(), 0);
+        let mut v: Vec<u8> = vec![];
+        let m = RawBufMut::from_slice(&mut v);
+        assert!(m.is_empty());
+    }
+}

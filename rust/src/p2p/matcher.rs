@@ -1,0 +1,215 @@
+//! The matching engine: posted-receive queue and unexpected-message queue.
+//!
+//! MPI's non-overtaking rule — messages between the same (sender, receiver,
+//! communicator, tag) match in send order — falls out of FIFO mailboxes plus
+//! FIFO scanning of both queues here.
+
+use std::collections::VecDeque;
+
+/// What a receive is willing to match. `None` = wildcard
+/// (`MPI_ANY_SOURCE` / `MPI_ANY_TAG`). Source is a *world* rank (the comm
+/// layer translates group ranks before posting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatchSelector {
+    pub ctx: u32,
+    pub src: Option<usize>,
+    pub tag: Option<i32>,
+}
+
+impl MatchSelector {
+    fn matches(&self, ctx: u32, src: usize, tag: i32) -> bool {
+        self.ctx == ctx
+            && self.src.map(|s| s == src).unwrap_or(true)
+            && self.tag.map(|t| t == tag).unwrap_or(true)
+    }
+}
+
+/// A receive waiting for a message.
+#[derive(Debug)]
+pub struct PostedRecv {
+    pub recv_token: u64,
+    pub sel: MatchSelector,
+}
+
+/// A message that arrived before its receive was posted.
+#[derive(Debug)]
+pub struct UnexpectedMsg {
+    pub ctx: u32,
+    pub src: usize,
+    pub tag: i32,
+    /// Hybrid time at which the message became observable here.
+    pub depart_vt: f64,
+    pub body: UnexpectedBody,
+}
+
+#[derive(Debug)]
+pub enum UnexpectedBody {
+    /// Eager payload (wire bytes) and optional synchronous-send token.
+    Eager { data: Vec<u8>, sync_token: Option<u64> },
+    /// Rendezvous header: payload still at the sender.
+    Rts { nbytes: usize, token: u64, sync_token: Option<u64> },
+}
+
+impl UnexpectedMsg {
+    /// Payload size for probe's status.
+    pub fn nbytes(&self) -> usize {
+        match &self.body {
+            UnexpectedBody::Eager { data, .. } => data.len(),
+            UnexpectedBody::Rts { nbytes, .. } => *nbytes,
+        }
+    }
+}
+
+/// Per-rank matching state. High-watermark counters feed the tool layer.
+#[derive(Debug, Default)]
+pub struct Matcher {
+    posted: VecDeque<PostedRecv>,
+    unexpected: VecDeque<UnexpectedMsg>,
+    pub posted_hwm: usize,
+    pub unexpected_hwm: usize,
+    pub match_attempts: u64,
+}
+
+impl Matcher {
+    pub fn new() -> Matcher {
+        Matcher::default()
+    }
+
+    /// Post a receive, *after* the caller has checked the unexpected queue
+    /// (see [`Matcher::take_unexpected`]).
+    pub fn post(&mut self, recv: PostedRecv) {
+        self.posted.push_back(recv);
+        self.posted_hwm = self.posted_hwm.max(self.posted.len());
+    }
+
+    /// An incoming message looks for a posted receive (earliest match
+    /// wins). Removes and returns it.
+    pub fn take_posted(&mut self, ctx: u32, src: usize, tag: i32) -> Option<PostedRecv> {
+        self.match_attempts += 1;
+        let idx = self.posted.iter().position(|p| p.sel.matches(ctx, src, tag))?;
+        self.posted.remove(idx)
+    }
+
+    /// A new receive looks for an already-arrived message (earliest match
+    /// wins). Removes and returns it.
+    pub fn take_unexpected(&mut self, sel: &MatchSelector) -> Option<UnexpectedMsg> {
+        self.match_attempts += 1;
+        let idx = self
+            .unexpected
+            .iter()
+            .position(|m| sel.matches(m.ctx, m.src, m.tag))?;
+        self.unexpected.remove(idx)
+    }
+
+    /// Probe: peek the earliest matching unexpected message.
+    pub fn peek_unexpected(&self, sel: &MatchSelector) -> Option<&UnexpectedMsg> {
+        self.unexpected.iter().find(|m| sel.matches(m.ctx, m.src, m.tag))
+    }
+
+    /// Queue a message that found no posted receive.
+    pub fn push_unexpected(&mut self, msg: UnexpectedMsg) {
+        self.unexpected.push_back(msg);
+        self.unexpected_hwm = self.unexpected_hwm.max(self.unexpected.len());
+    }
+
+    /// Cancel a posted receive (`MPI_Cancel`). Returns whether it was still
+    /// pending (not yet matched).
+    pub fn cancel_posted(&mut self, recv_token: u64) -> bool {
+        if let Some(idx) = self.posted.iter().position(|p| p.recv_token == recv_token) {
+            self.posted.remove(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn posted_len(&self) -> usize {
+        self.posted.len()
+    }
+
+    pub fn unexpected_len(&self) -> usize {
+        self.unexpected.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eager(ctx: u32, src: usize, tag: i32) -> UnexpectedMsg {
+        UnexpectedMsg {
+            ctx,
+            src,
+            tag,
+            depart_vt: 0.0,
+            body: UnexpectedBody::Eager { data: vec![], sync_token: None },
+        }
+    }
+
+    #[test]
+    fn wildcard_matching() {
+        let any = MatchSelector { ctx: 1, src: None, tag: None };
+        assert!(any.matches(1, 5, 9));
+        assert!(!any.matches(2, 5, 9));
+        let specific = MatchSelector { ctx: 1, src: Some(5), tag: Some(9) };
+        assert!(specific.matches(1, 5, 9));
+        assert!(!specific.matches(1, 6, 9));
+        assert!(!specific.matches(1, 5, 8));
+    }
+
+    #[test]
+    fn fifo_order_among_equals() {
+        let mut m = Matcher::new();
+        m.push_unexpected(eager(0, 1, 7));
+        m.push_unexpected(eager(0, 1, 7));
+        m.post(PostedRecv { recv_token: 100, sel: MatchSelector { ctx: 0, src: Some(2), tag: None } });
+        m.post(PostedRecv { recv_token: 101, sel: MatchSelector { ctx: 0, src: None, tag: None } });
+        // Incoming from src 2 should match the earliest compatible posted
+        // recv — token 100 (not the wildcard posted later).
+        let p = m.take_posted(0, 2, 7).unwrap();
+        assert_eq!(p.recv_token, 100);
+        // And a new recv takes the earliest unexpected.
+        let sel = MatchSelector { ctx: 0, src: Some(1), tag: Some(7) };
+        assert!(m.take_unexpected(&sel).is_some());
+        assert_eq!(m.unexpected_len(), 1);
+    }
+
+    #[test]
+    fn wildcard_posted_matches_any_source() {
+        let mut m = Matcher::new();
+        m.post(PostedRecv { recv_token: 1, sel: MatchSelector { ctx: 3, src: None, tag: Some(2) } });
+        assert!(m.take_posted(3, 9, 2).is_some());
+        assert!(m.take_posted(3, 9, 2).is_none());
+    }
+
+    #[test]
+    fn context_isolation() {
+        let mut m = Matcher::new();
+        m.push_unexpected(eager(7, 0, 0));
+        let other_ctx = MatchSelector { ctx: 8, src: None, tag: None };
+        assert!(m.peek_unexpected(&other_ctx).is_none());
+        let same_ctx = MatchSelector { ctx: 7, src: None, tag: None };
+        assert_eq!(m.peek_unexpected(&same_ctx).unwrap().src, 0);
+    }
+
+    #[test]
+    fn cancel_removes_posted() {
+        let mut m = Matcher::new();
+        m.post(PostedRecv { recv_token: 42, sel: MatchSelector { ctx: 0, src: None, tag: None } });
+        assert!(m.cancel_posted(42));
+        assert!(!m.cancel_posted(42));
+        assert!(m.take_posted(0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn watermarks_track() {
+        let mut m = Matcher::new();
+        for i in 0..5 {
+            m.push_unexpected(eager(0, i, 0));
+        }
+        let sel = MatchSelector { ctx: 0, src: None, tag: None };
+        m.take_unexpected(&sel);
+        assert_eq!(m.unexpected_hwm, 5);
+        assert_eq!(m.unexpected_len(), 4);
+    }
+}

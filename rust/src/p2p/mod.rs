@@ -1,0 +1,26 @@
+//! Point-to-point communication (MPI-4.0 §3): envelopes, the matching
+//! engine (posted-receive queue + unexpected-message queue), the four send
+//! modes, immediate operations, probe/mprobe, and the progress engine that
+//! drives everything (collectives and IO ride on the same machinery).
+//!
+//! Threading model: each simulated rank is an OS thread; all of a rank's
+//! MPI state ([`RankCtx`]) is confined to that thread (`Rc`/`RefCell`), and
+//! the only cross-thread channel is the fabric mailbox. Every user buffer
+//! write happens on the owning rank's thread inside its own progress calls,
+//! which is what makes the small amount of raw-pointer buffer capture sound
+//! under the standard's "don't touch the buffer until completion" contract.
+
+pub mod buffer;
+pub mod engine;
+pub mod matcher;
+pub mod partitioned;
+pub mod state;
+
+pub use buffer::{RawBuf, RawBufMut};
+pub use engine::{
+    cancel_recv, improbe, iprobe, mprobe, mrecv, post_recv, probe, progress, recv_done,
+    send_done, start_send, take_recv_result, take_send_done, wait_for, Message, SendMode,
+    SendParams,
+};
+pub use matcher::{Matcher, MatchSelector};
+pub use state::{RankCtx, Progressable, Status};

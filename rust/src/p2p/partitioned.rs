@@ -1,0 +1,288 @@
+//! Partitioned point-to-point communication (MPI-4.0 §4) — the 4.0
+//! headline addition. A partitioned send exposes one buffer as
+//! `partitions` independently-fillable pieces; the transfer may begin once
+//! every partition is marked ready.
+//!
+//! Implementation: partitions are staged into the send payload as they are
+//! declared ready (`pready` packs partition `i` immediately, so the user
+//! may refill their buffer); when the last partition arrives the whole
+//! message goes out as one ordinary send. The receive side posts one
+//! receive for the full buffer; `parrived` reports per-partition arrival
+//! (whole-message granularity, a legal implementation since partition
+//! arrival may be coarsened).
+
+use super::buffer::{RawBuf, RawBufMut};
+use super::engine;
+use super::state::{RankCtx, Status};
+use crate::comm::Comm;
+use crate::datatype::{pack, Datatype};
+use crate::request::Request;
+use crate::{mpi_err, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// `MPI_Psend_init` product.
+pub struct PsendRequest {
+    ctx: Rc<RankCtx>,
+    ctx_id: u32,
+    dst: i32,
+    tag: i32,
+    buf: RawBuf,
+    partitions: usize,
+    count_per_partition: usize,
+    dtype: Datatype,
+    comm_resolver: Box<dyn Fn(i32) -> Result<Option<usize>>>,
+    state: RefCell<PsendState>,
+}
+
+struct PsendState {
+    active: bool,
+    ready: Vec<bool>,
+    staged: Vec<u8>,
+    staged_parts: usize,
+    inflight: Option<Request>,
+}
+
+impl PsendRequest {
+    /// `MPI_Psend_init`: `buf` holds `partitions × count` elements.
+    pub fn init(
+        comm: &Comm,
+        buf: &[u8],
+        partitions: usize,
+        count: usize,
+        dtype: &Datatype,
+        dst: i32,
+        tag: i32,
+    ) -> Result<PsendRequest> {
+        if partitions == 0 {
+            return Err(mpi_err!(Count, "partitioned send needs at least one partition"));
+        }
+        dtype.require_committed()?;
+        let group = comm.group().clone();
+        let size = comm.size();
+        Ok(PsendRequest {
+            ctx: comm.rank_ctx().clone(),
+            ctx_id: comm.ctx_p2p(),
+            dst,
+            tag,
+            buf: RawBuf::from_slice(buf),
+            partitions,
+            count_per_partition: count,
+            dtype: dtype.clone(),
+            comm_resolver: Box::new(move |d| {
+                if d == crate::comm::PROC_NULL {
+                    return Ok(None);
+                }
+                if d < 0 || d as usize >= size {
+                    return Err(mpi_err!(Rank, "rank {d} invalid"));
+                }
+                Ok(Some(group.world_rank(d as usize)?))
+            }),
+            state: RefCell::new(PsendState {
+                active: false,
+                ready: vec![false; partitions],
+                staged: Vec::new(),
+                staged_parts: 0,
+                inflight: None,
+            }),
+        })
+    }
+
+    /// `MPI_Start`.
+    pub fn start(&self) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        if st.active {
+            return Err(mpi_err!(Request, "start on active partitioned send"));
+        }
+        st.active = true;
+        st.ready.iter_mut().for_each(|r| *r = false);
+        st.staged.clear();
+        st.staged
+            .resize(self.dtype.size() * self.count_per_partition * self.partitions, 0);
+        st.staged_parts = 0;
+        st.inflight = None;
+        Ok(())
+    }
+
+    /// `MPI_Pready`: partition `i`'s data is final; it is packed now.
+    pub fn pready(&self, i: usize) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        if !st.active {
+            return Err(mpi_err!(Request, "pready before start"));
+        }
+        if i >= self.partitions {
+            return Err(mpi_err!(Arg, "partition {i} out of range ({})", self.partitions));
+        }
+        if st.ready[i] {
+            return Err(mpi_err!(Request, "partition {i} already marked ready"));
+        }
+        st.ready[i] = true;
+        st.staged_parts += 1;
+        // Pack partition i from the user buffer.
+        let esz = self.dtype.extent() as usize;
+        let wire_sz = self.dtype.size() * self.count_per_partition;
+        let full = unsafe { self.buf.as_slice() };
+        let lo = i * self.count_per_partition * esz;
+        let hi = (lo + self.count_per_partition * esz).min(full.len());
+        let mut wire = Vec::with_capacity(wire_sz);
+        pack(self.dtype.map(), &full[lo..hi], self.count_per_partition, &mut wire)?;
+        let off = i * wire_sz;
+        st.staged[off..off + wire_sz].copy_from_slice(&wire);
+
+        if st.staged_parts == self.partitions {
+            // All ready: ship as one message.
+            let byte = Datatype::primitive(crate::datatype::Primitive::Byte);
+            match (self.comm_resolver)(self.dst)? {
+                None => {
+                    st.inflight = Some(Request::ready(self.ctx.clone(), Status::empty()));
+                }
+                Some(dst_world) => {
+                    let token = engine::start_send(
+                        &self.ctx,
+                        super::engine::SendParams {
+                            ctx_id: self.ctx_id,
+                            dst_world,
+                            tag: self.tag,
+                            buf: &st.staged,
+                            count: st.staged.len(),
+                            dtype: &byte,
+                            mode: super::engine::SendMode::Standard,
+                        },
+                    )?;
+                    st.inflight = Some(Request::from_send(self.ctx.clone(), token));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// `MPI_Pready_range`.
+    pub fn pready_range(&self, lo: usize, hi: usize) -> Result<()> {
+        for i in lo..=hi {
+            self.pready(i)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Wait` on the partitioned send; deactivates for reuse.
+    pub fn wait(&self) -> Result<Status> {
+        {
+            let st = self.state.borrow();
+            if !st.active {
+                return Err(mpi_err!(Request, "wait on inactive partitioned send"));
+            }
+            if st.staged_parts != self.partitions {
+                return Err(mpi_err!(
+                    Pending,
+                    "wait with only {}/{} partitions ready would deadlock",
+                    st.staged_parts,
+                    self.partitions
+                ));
+            }
+        }
+        let req = self.state.borrow_mut().inflight.take().expect("inflight set");
+        let s = req.wait()?;
+        self.state.borrow_mut().active = false;
+        Ok(s)
+    }
+}
+
+/// `MPI_Precv_init` product.
+pub struct PrecvRequest {
+    partitions: usize,
+    comm_ctx: Rc<RankCtx>,
+    spec: RefCell<PrecvState>,
+}
+
+struct PrecvState {
+    active: Option<Request>,
+    done: bool,
+}
+
+impl PrecvRequest {
+    #[allow(clippy::too_many_arguments)]
+    pub fn init(
+        comm: &Comm,
+        buf: &mut [u8],
+        partitions: usize,
+        count: usize,
+        dtype: &Datatype,
+        src: i32,
+        tag: i32,
+    ) -> Result<(PrecvRequest, PrecvStart)> {
+        if partitions == 0 {
+            return Err(mpi_err!(Count, "partitioned recv needs at least one partition"));
+        }
+        dtype.require_committed()?;
+        Ok((
+            PrecvRequest {
+                partitions,
+                comm_ctx: comm.rank_ctx().clone(),
+                spec: RefCell::new(PrecvState { active: None, done: false }),
+            },
+            PrecvStart {
+                buf: RawBufMut::from_slice(buf),
+                total_count: partitions * count,
+                dtype: dtype.clone(),
+                src,
+                tag,
+            },
+        ))
+    }
+
+    /// `MPI_Start`: posts the underlying receive.
+    pub fn start(&self, comm: &Comm, s: &PrecvStart) -> Result<()> {
+        let mut st = self.spec.borrow_mut();
+        if st.active.is_some() {
+            return Err(mpi_err!(Request, "start on active partitioned recv"));
+        }
+        let buf = unsafe { s.buf.as_slice_mut() };
+        let req = comm.irecv(buf, s.total_count, &s.dtype, s.src, s.tag)?;
+        st.active = Some(req);
+        st.done = false;
+        Ok(())
+    }
+
+    /// `MPI_Parrived`: has partition `i` arrived? (Whole-message
+    /// granularity: flips for all partitions at once.)
+    pub fn parrived(&self, i: usize) -> Result<bool> {
+        if i >= self.partitions {
+            return Err(mpi_err!(Arg, "partition {i} out of range"));
+        }
+        let mut st = self.spec.borrow_mut();
+        if st.done {
+            return Ok(true);
+        }
+        engine::progress(&self.comm_ctx)?;
+        if let Some(req) = &st.active {
+            if let Some(_status) = req.test()? {
+                st.done = true;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// `MPI_Wait`: completes the whole partitioned receive.
+    pub fn wait(&self) -> Result<Status> {
+        let req = {
+            let mut st = self.spec.borrow_mut();
+            st.active
+                .take()
+                .ok_or_else(|| mpi_err!(Request, "wait on inactive partitioned recv"))?
+        };
+        let s = req.wait()?;
+        self.spec.borrow_mut().done = true;
+        Ok(s)
+    }
+}
+
+/// Captured start parameters for a partitioned receive (kept separate so
+/// the request object itself stays reusable across start cycles).
+pub struct PrecvStart {
+    buf: RawBufMut,
+    total_count: usize,
+    dtype: Datatype,
+    src: i32,
+    tag: i32,
+}

@@ -1,0 +1,251 @@
+//! Per-rank runtime state (`RankCtx`) and completion bookkeeping.
+
+use super::buffer::RawBufMut;
+use super::matcher::Matcher;
+use crate::datatype::Datatype;
+use crate::group::Group;
+use crate::transport::{Fabric, Packet, VClock};
+use crate::{MpiError, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Receive-side completion record (`MPI_Status` analog). `source` and
+/// `tag` are in the matched communicator's group terms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Status {
+    pub source: i32,
+    pub tag: i32,
+    /// Wire bytes received (drives `MPI_Get_count`).
+    pub bytes: usize,
+    pub cancelled: bool,
+}
+
+impl Status {
+    /// An empty status (completed sends, PROC_NULL ops).
+    pub fn empty() -> Status {
+        Status { source: -1, tag: -1, bytes: 0, cancelled: false }
+    }
+
+    /// `MPI_Get_count`: number of whole elements received, `None` =
+    /// `MPI_UNDEFINED` (not a whole number of elements).
+    pub fn get_count(&self, dtype: &Datatype) -> Option<usize> {
+        let sz = dtype.size();
+        if sz == 0 {
+            return Some(0);
+        }
+        if self.bytes % sz == 0 {
+            Some(self.bytes / sz)
+        } else {
+            None
+        }
+    }
+}
+
+/// State of an in-flight send.
+#[derive(Debug)]
+pub enum SendState {
+    /// Rendezvous: waiting for CTS; payload parked here.
+    AwaitCts { payload: Vec<u8> },
+    /// Eager synchronous send: waiting for the receiver's match ack.
+    AwaitAck,
+    Done,
+}
+
+/// State of an in-flight receive.
+#[derive(Debug)]
+pub enum RecvProgress {
+    /// Posted (or matched an RTS and awaiting RData).
+    Pending,
+    Done(Status),
+    Failed(MpiError),
+}
+
+/// A pending receive's full record.
+#[derive(Debug)]
+pub struct RecvState {
+    pub buf: RawBufMut,
+    pub count: usize,
+    pub dtype: Datatype,
+    /// Group of the communicator, for world→group source translation.
+    pub group: Group,
+    pub progress: RecvProgress,
+}
+
+/// Buffered-send pool (`MPI_Buffer_attach`). We account capacity the way
+/// the standard requires (bsend fails with `MPI_ERR_BUFFER` when the
+/// attached buffer cannot hold the packed message + overhead).
+#[derive(Debug, Default)]
+pub struct BsendPool {
+    pub capacity: usize,
+    pub in_use: usize,
+}
+
+/// `MPI_BSEND_OVERHEAD` analog.
+pub const BSEND_OVERHEAD: usize = 64;
+
+/// Anything that makes progress when the engine turns over: nonblocking
+/// collectives, collective IO, generalized requests. `advance` must not
+/// block and must not recursively call the progress engine.
+pub trait Progressable {
+    /// Returns `Ok(true)` when complete (it is then dropped from the
+    /// progress list).
+    fn advance(&self, ctx: &Rc<RankCtx>) -> Result<bool>;
+}
+
+/// Per-rank software counters exported as tool pvars.
+#[derive(Debug, Default)]
+pub struct RankCounters {
+    pub sends_started: Cell<u64>,
+    pub recvs_posted: Cell<u64>,
+    pub messages_matched: Cell<u64>,
+    pub probes: Cell<u64>,
+    pub collectives_started: Cell<u64>,
+    pub waits: Cell<u64>,
+}
+
+/// All rank-local MPI state. Confined to the rank's own thread.
+pub struct RankCtx {
+    pub world_rank: usize,
+    pub fabric: Arc<Fabric>,
+    pub clock: VClock,
+    pub matcher: RefCell<Matcher>,
+    pub sends: RefCell<HashMap<u64, SendState>>,
+    pub recvs: RefCell<HashMap<u64, RecvState>>,
+    pub counters: RankCounters,
+    pub(crate) next_token: Cell<u64>,
+    /// Next context id this rank would propose for a new communicator.
+    pub(crate) next_ctx: Cell<u32>,
+    /// Per-collective-context operation sequence numbers (collective calls
+    /// are ordered per communicator, so these agree across ranks).
+    pub(crate) coll_seq: RefCell<HashMap<u32, u64>>,
+    pub(crate) bsend: RefCell<BsendPool>,
+    /// Matched-but-undelivered rendezvous receives: token → (src, tag).
+    pub(crate) pending_rndv: RefCell<HashMap<u64, (usize, i32)>>,
+    /// Nonblocking composite operations that need turning.
+    pub(crate) progressables: RefCell<Vec<Rc<dyn Progressable>>>,
+    /// Scratch packet vec reused across progress calls (hot-path
+    /// allocation avoidance).
+    pub(crate) scratch: RefCell<Vec<Packet>>,
+}
+
+impl RankCtx {
+    pub fn new(world_rank: usize, fabric: Arc<Fabric>) -> Rc<RankCtx> {
+        let epoch = fabric.epoch;
+        Rc::new(RankCtx {
+            world_rank,
+            fabric,
+            clock: VClock::new(epoch),
+            matcher: RefCell::new(Matcher::new()),
+            sends: RefCell::new(HashMap::new()),
+            recvs: RefCell::new(HashMap::new()),
+            counters: RankCounters::default(),
+            next_token: Cell::new(1),
+            // ctx 0/1 are MPI_COMM_WORLD's p2p/collective contexts; user
+            // communicators allocate from 16 upward (even=p2p, odd=coll).
+            next_ctx: Cell::new(16),
+            coll_seq: RefCell::new(HashMap::new()),
+            bsend: RefCell::new(BsendPool::default()),
+            pending_rndv: RefCell::new(HashMap::new()),
+            progressables: RefCell::new(Vec::new()),
+            scratch: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn fresh_token(&self) -> u64 {
+        let t = self.next_token.get();
+        self.next_token.set(t + 1);
+        t
+    }
+
+    /// Number of ranks in the world.
+    pub fn world_size(&self) -> usize {
+        self.fabric.nranks()
+    }
+
+    /// Next sequence number for a collective on context `ctx` (identical
+    /// across ranks because collective calls are ordered per communicator).
+    pub fn next_coll_seq(&self, ctx: u32) -> u64 {
+        let mut m = self.coll_seq.borrow_mut();
+        let e = m.entry(ctx).or_insert(0);
+        let v = *e;
+        *e += 1;
+        v
+    }
+
+    /// Register a nonblocking composite op for progression.
+    pub fn register_progressable(&self, p: Rc<dyn Progressable>) {
+        self.progressables.borrow_mut().push(p);
+    }
+
+    /// `MPI_Buffer_attach` / `detach`.
+    pub fn buffer_attach(&self, capacity: usize) {
+        let mut b = self.bsend.borrow_mut();
+        b.capacity = capacity;
+        b.in_use = 0;
+    }
+
+    pub fn buffer_detach(&self) -> usize {
+        let mut b = self.bsend.borrow_mut();
+        let c = b.capacity;
+        b.capacity = 0;
+        b.in_use = 0;
+        c
+    }
+}
+
+impl std::fmt::Debug for RankCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RankCtx")
+            .field("world_rank", &self.world_rank)
+            .field("world_size", &self.world_size())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{NetworkModel, NodeMap};
+
+    fn ctx() -> Rc<RankCtx> {
+        let fabric = Arc::new(Fabric::new(NodeMap::new(1, 2), NetworkModel::zero()));
+        RankCtx::new(0, fabric)
+    }
+
+    #[test]
+    fn tokens_unique() {
+        let c = ctx();
+        let a = c.fresh_token();
+        let b = c.fresh_token();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn coll_seq_per_context() {
+        let c = ctx();
+        assert_eq!(c.next_coll_seq(1), 0);
+        assert_eq!(c.next_coll_seq(1), 1);
+        assert_eq!(c.next_coll_seq(3), 0);
+        assert_eq!(c.next_coll_seq(1), 2);
+    }
+
+    #[test]
+    fn status_get_count() {
+        let s = Status { source: 0, tag: 0, bytes: 12, cancelled: false };
+        let i32t = Datatype::primitive(crate::datatype::Primitive::I32);
+        let f64t = Datatype::primitive(crate::datatype::Primitive::F64);
+        assert_eq!(s.get_count(&i32t), Some(3));
+        assert_eq!(s.get_count(&f64t), None); // 12 % 8 != 0 → MPI_UNDEFINED
+    }
+
+    #[test]
+    fn bsend_pool_attach_detach() {
+        let c = ctx();
+        c.buffer_attach(1024);
+        assert_eq!(c.bsend.borrow().capacity, 1024);
+        assert_eq!(c.buffer_detach(), 1024);
+        assert_eq!(c.bsend.borrow().capacity, 0);
+    }
+}

@@ -1,0 +1,65 @@
+//! The C-style constants (`MPI_COMM_WORLD`, `MPI_INT`, `MPI_SUM`, ...).
+
+// Return codes: MPI_SUCCESS plus the error classes (see crate::error).
+pub const MPI_SUCCESS: i32 = 0;
+
+// Communicators.
+pub const MPI_COMM_NULL: i32 = -1;
+pub const MPI_COMM_WORLD: i32 = 0;
+pub const MPI_COMM_SELF: i32 = 1;
+
+// Ranks / tags.
+pub const MPI_PROC_NULL: i32 = -1;
+pub const MPI_ANY_SOURCE: i32 = -2;
+pub const MPI_ANY_TAG: i32 = -1;
+pub const MPI_UNDEFINED: i32 = -32766;
+pub const MPI_ROOT: i32 = -3;
+
+// Predefined datatypes (fixed handles; user types start above).
+pub const MPI_DATATYPE_NULL: i32 = -1;
+pub const MPI_BYTE: i32 = 0;
+pub const MPI_CHAR: i32 = 1;
+pub const MPI_SIGNED_CHAR: i32 = 2;
+pub const MPI_UNSIGNED_CHAR: i32 = 3;
+pub const MPI_SHORT: i32 = 4;
+pub const MPI_UNSIGNED_SHORT: i32 = 5;
+pub const MPI_INT: i32 = 6;
+pub const MPI_UNSIGNED: i32 = 7;
+pub const MPI_LONG: i32 = 8;
+pub const MPI_UNSIGNED_LONG: i32 = 9;
+pub const MPI_LONG_LONG: i32 = 10;
+pub const MPI_UNSIGNED_LONG_LONG: i32 = 11;
+pub const MPI_FLOAT: i32 = 12;
+pub const MPI_DOUBLE: i32 = 13;
+pub const MPI_C_BOOL: i32 = 14;
+pub const MPI_C_FLOAT_COMPLEX: i32 = 15;
+pub const MPI_C_DOUBLE_COMPLEX: i32 = 16;
+pub const MPI_FLOAT_INT: i32 = 17;
+pub const MPI_DOUBLE_INT: i32 = 18;
+pub const MPI_LONG_INT: i32 = 19;
+pub const MPI_2INT: i32 = 20;
+pub(crate) const FIRST_USER_DATATYPE: i32 = 32;
+
+// Predefined ops.
+pub const MPI_OP_NULL: i32 = -1;
+pub const MPI_SUM: i32 = 0;
+pub const MPI_PROD: i32 = 1;
+pub const MPI_MAX: i32 = 2;
+pub const MPI_MIN: i32 = 3;
+pub const MPI_LAND: i32 = 4;
+pub const MPI_LOR: i32 = 5;
+pub const MPI_LXOR: i32 = 6;
+pub const MPI_BAND: i32 = 7;
+pub const MPI_BOR: i32 = 8;
+pub const MPI_BXOR: i32 = 9;
+pub const MPI_MAXLOC: i32 = 10;
+pub const MPI_MINLOC: i32 = 11;
+pub const MPI_REPLACE: i32 = 12;
+pub const MPI_NO_OP: i32 = 13;
+pub(crate) const FIRST_USER_OP: i32 = 16;
+
+// Requests.
+pub const MPI_REQUEST_NULL: i32 = -1;
+
+// Special buffer marker (`MPI_IN_PLACE` is a pointer in C; a flag here).
+pub const MPI_IN_PLACE: i32 = -1;

@@ -1,0 +1,1178 @@
+//! The flat function surface (`mpi_*` ↔ `MPI_*`). Everything returns an
+//! `i32` error code; results come back through out-parameters. Buffers are
+//! byte slices + count + datatype handle, the closest memory-safe spelling
+//! of `void*`-based C signatures.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::constants::*;
+use super::state::{base_typemap, err_code, with_state, MpiStatus, RawReq, STATE};
+use crate::collective;
+use crate::comm::Comm;
+use crate::datatype::{Datatype, TypeMap};
+use crate::op::{Op, UserFn};
+use crate::p2p::{RawBuf, RawBufMut, SendMode};
+use crate::request::PersistentRequest;
+use crate::{mpi_err, ErrorClass, MpiError};
+
+type R<T> = Result<T, MpiError>;
+
+fn comm_of(st: &super::state::RawState, c: i32) -> R<&Comm> {
+    st.comms.get(&c).ok_or_else(|| mpi_err!(Comm, "invalid communicator handle {c}"))
+}
+
+fn dtype_of(st: &super::state::RawState, d: i32) -> R<&Datatype> {
+    st.dtypes.get(&d).ok_or_else(|| mpi_err!(Type, "invalid datatype handle {d}"))
+}
+
+fn op_of(st: &super::state::RawState, o: i32) -> R<&Op> {
+    st.ops.get(&o).ok_or_else(|| mpi_err!(Op, "invalid op handle {o}"))
+}
+
+fn ucount(count: i32) -> R<usize> {
+    usize::try_from(count).map_err(|_| mpi_err!(Count, "negative count {count}"))
+}
+
+// ---------------- environment ----------------
+
+/// `MPI_Comm_rank`.
+pub fn mpi_comm_rank(comm: i32, rank: &mut i32) -> i32 {
+    with_state(|st| Ok(comm_of(st, comm)?.rank() as i32), |r| {
+        *rank = r;
+        MPI_SUCCESS
+    })
+}
+
+/// `MPI_Comm_size`.
+pub fn mpi_comm_size(comm: i32, size: &mut i32) -> i32 {
+    with_state(|st| Ok(comm_of(st, comm)?.size() as i32), |r| {
+        *size = r;
+        MPI_SUCCESS
+    })
+}
+
+/// `MPI_Wtime` (the calling rank's hybrid clock, seconds).
+pub fn mpi_wtime() -> f64 {
+    STATE.with(|s| {
+        s.borrow()
+            .as_ref()
+            .and_then(|st| st.comms.get(&MPI_COMM_WORLD).map(|c| c.wtime()))
+            .unwrap_or(0.0)
+    })
+}
+
+/// `MPI_Abort`.
+pub fn mpi_abort(comm: i32, code: i32) -> i32 {
+    with_state(
+        |st| {
+            comm_of(st, comm)?.rank_ctx().fabric.abort(code);
+            Ok(())
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Error_string`.
+pub fn mpi_error_string(code: i32) -> &'static str {
+    ErrorClass::from_code(code).as_str()
+}
+
+/// `MPI_Error_class`.
+pub fn mpi_error_class(code: i32, class: &mut i32) -> i32 {
+    *class = ErrorClass::from_code(code).code();
+    MPI_SUCCESS
+}
+
+/// `MPI_Get_count`.
+pub fn mpi_get_count(status: &MpiStatus, datatype: i32, count: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let d = dtype_of(st, datatype)?;
+            let sz = d.size().max(1);
+            Ok(if status.count as usize % sz == 0 { (status.count as usize / sz) as i32 } else { MPI_UNDEFINED })
+        },
+        |c| {
+            *count = c;
+            MPI_SUCCESS
+        },
+    )
+}
+
+// ---------------- communicator management ----------------
+
+/// `MPI_Comm_dup`.
+pub fn mpi_comm_dup(comm: i32, newcomm: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let dup = comm_of(st, comm)?.dup()?;
+            let h = st.next_comm;
+            st.next_comm += 1;
+            st.comms.insert(h, dup);
+            Ok(h)
+        },
+        |h| {
+            *newcomm = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Comm_split`.
+pub fn mpi_comm_split(comm: i32, color: i32, key: i32, newcomm: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let split = comm_of(st, comm)?.split(color, key)?;
+            Ok(match split {
+                None => MPI_COMM_NULL,
+                Some(c) => {
+                    let h = st.next_comm;
+                    st.next_comm += 1;
+                    st.comms.insert(h, c);
+                    h
+                }
+            })
+        },
+        |h| {
+            *newcomm = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Comm_free`.
+pub fn mpi_comm_free(comm: &mut i32) -> i32 {
+    let h = *comm;
+    if h == MPI_COMM_WORLD || h == MPI_COMM_SELF {
+        return ErrorClass::Comm.code();
+    }
+    with_state(
+        |st| {
+            st.comms
+                .remove(&h)
+                .map(|_| ())
+                .ok_or_else(|| mpi_err!(Comm, "invalid communicator handle {h}"))
+        },
+        |_| {
+            *comm = MPI_COMM_NULL;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Comm_group`.
+pub fn mpi_comm_group(comm: i32, group: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let g = comm_of(st, comm)?.group().clone();
+            let h = st.next_group;
+            st.next_group += 1;
+            st.groups.insert(h, g);
+            Ok(h)
+        },
+        |h| {
+            *group = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Group_incl`.
+pub fn mpi_group_incl(group: i32, ranks: &[i32], newgroup: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let g = st
+                .groups
+                .get(&group)
+                .ok_or_else(|| mpi_err!(Group, "invalid group handle {group}"))?;
+            let ranks: Vec<usize> = ranks.iter().map(|&r| r as usize).collect();
+            let n = g.incl(&ranks)?;
+            let h = st.next_group;
+            st.next_group += 1;
+            st.groups.insert(h, n);
+            Ok(h)
+        },
+        |h| {
+            *newgroup = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Comm_create`.
+pub fn mpi_comm_create(comm: i32, group: i32, newcomm: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let g = st
+                .groups
+                .get(&group)
+                .ok_or_else(|| mpi_err!(Group, "invalid group handle {group}"))?
+                .clone();
+            let created = comm_of(st, comm)?.create(&g)?;
+            Ok(match created {
+                None => MPI_COMM_NULL,
+                Some(c) => {
+                    let h = st.next_comm;
+                    st.next_comm += 1;
+                    st.comms.insert(h, c);
+                    h
+                }
+            })
+        },
+        |h| {
+            *newcomm = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+// ---------------- datatypes ----------------
+
+fn insert_dtype(st: &mut super::state::RawState, map: TypeMap) -> i32 {
+    let h = st.next_dtype;
+    st.next_dtype += 1;
+    st.dtypes.insert(h, Datatype::new(map));
+    h
+}
+
+/// `MPI_Type_contiguous`.
+pub fn mpi_type_contiguous(count: i32, oldtype: i32, newtype: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let c = ucount(count)?;
+            let base = base_typemap(st, oldtype)?;
+            Ok(insert_dtype(st, TypeMap::contiguous(c.max(1), &base)))
+        },
+        |h| {
+            *newtype = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Type_vector`.
+pub fn mpi_type_vector(count: i32, blocklength: i32, stride: i32, oldtype: i32, newtype: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let base = base_typemap(st, oldtype)?;
+            Ok(insert_dtype(
+                st,
+                TypeMap::vector(ucount(count)?.max(1), ucount(blocklength)?.max(1), stride as isize, &base),
+            ))
+        },
+        |h| {
+            *newtype = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Type_indexed`.
+pub fn mpi_type_indexed(blocklengths: &[i32], displs: &[i32], oldtype: i32, newtype: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            if blocklengths.len() != displs.len() {
+                return Err(mpi_err!(Arg, "blocklengths/displs length mismatch"));
+            }
+            let base = base_typemap(st, oldtype)?;
+            let blocks: Vec<(usize, isize)> = blocklengths
+                .iter()
+                .zip(displs)
+                .map(|(&b, &d)| (b as usize, d as isize))
+                .collect();
+            Ok(insert_dtype(st, TypeMap::indexed(&blocks, &base)))
+        },
+        |h| {
+            *newtype = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Type_create_struct`.
+pub fn mpi_type_create_struct(blocklengths: &[i32], displs: &[isize], types: &[i32], newtype: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            if blocklengths.len() != displs.len() || displs.len() != types.len() {
+                return Err(mpi_err!(Arg, "struct constructor array length mismatch"));
+            }
+            let fields: Vec<(isize, TypeMap, usize)> = blocklengths
+                .iter()
+                .zip(displs)
+                .zip(types)
+                .map(|((&b, &d), &t)| Ok((d, base_typemap(st, t)?, b as usize)))
+                .collect::<R<_>>()?;
+            Ok(insert_dtype(st, TypeMap::structure(&fields)))
+        },
+        |h| {
+            *newtype = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Type_create_resized`.
+pub fn mpi_type_create_resized(oldtype: i32, lb: isize, extent: isize, newtype: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let base = base_typemap(st, oldtype)?;
+            Ok(insert_dtype(st, base.resized(lb, extent)))
+        },
+        |h| {
+            *newtype = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Type_commit`.
+pub fn mpi_type_commit(datatype: &mut i32) -> i32 {
+    let h = *datatype;
+    with_state(
+        |st| {
+            st.dtypes
+                .get_mut(&h)
+                .map(|d| d.commit())
+                .ok_or_else(|| mpi_err!(Type, "invalid datatype handle {h}"))
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Type_free`.
+pub fn mpi_type_free(datatype: &mut i32) -> i32 {
+    let h = *datatype;
+    if h < FIRST_USER_DATATYPE {
+        return ErrorClass::Type.code();
+    }
+    with_state(
+        |st| {
+            st.dtypes
+                .remove(&h)
+                .map(|_| ())
+                .ok_or_else(|| mpi_err!(Type, "invalid datatype handle {h}"))
+        },
+        |_| {
+            *datatype = MPI_DATATYPE_NULL;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Type_size`.
+pub fn mpi_type_size(datatype: i32, size: &mut i32) -> i32 {
+    with_state(|st| Ok(dtype_of(st, datatype)?.size() as i32), |s| {
+        *size = s;
+        MPI_SUCCESS
+    })
+}
+
+/// `MPI_Type_get_extent`.
+pub fn mpi_type_get_extent(datatype: i32, lb: &mut isize, extent: &mut isize) -> i32 {
+    with_state(
+        |st| {
+            let d = dtype_of(st, datatype)?;
+            Ok((d.lb(), d.extent()))
+        },
+        |(l, e)| {
+            *lb = l;
+            *extent = e;
+            MPI_SUCCESS
+        },
+    )
+}
+
+// ---------------- ops ----------------
+
+/// `MPI_Op_create`.
+pub fn mpi_op_create(f: UserFn, commute: bool, op: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let h = st.next_op;
+            st.next_op += 1;
+            st.ops.insert(h, Op::user(f, commute, "user"));
+            Ok(h)
+        },
+        |h| {
+            *op = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Op_free`.
+pub fn mpi_op_free(op: &mut i32) -> i32 {
+    let h = *op;
+    if h < FIRST_USER_OP {
+        return ErrorClass::Op.code();
+    }
+    with_state(
+        |st| st.ops.remove(&h).map(|_| ()).ok_or_else(|| mpi_err!(Op, "invalid op handle {h}")),
+        |_| {
+            *op = MPI_OP_NULL;
+            MPI_SUCCESS
+        },
+    )
+}
+
+// ---------------- point-to-point ----------------
+
+fn do_send(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32, mode: SendMode) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?;
+            c.send_mode(buf, ucount(count)?, d, dest, tag, mode)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Send`.
+pub fn mpi_send(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32) -> i32 {
+    do_send(buf, count, datatype, dest, tag, comm, SendMode::Standard)
+}
+
+/// `MPI_Ssend`.
+pub fn mpi_ssend(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32) -> i32 {
+    do_send(buf, count, datatype, dest, tag, comm, SendMode::Synchronous)
+}
+
+/// `MPI_Bsend`.
+pub fn mpi_bsend(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32) -> i32 {
+    do_send(buf, count, datatype, dest, tag, comm, SendMode::Buffered)
+}
+
+/// `MPI_Rsend`.
+pub fn mpi_rsend(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32) -> i32 {
+    do_send(buf, count, datatype, dest, tag, comm, SendMode::Ready)
+}
+
+/// `MPI_Recv`.
+pub fn mpi_recv(buf: &mut [u8], count: i32, datatype: i32, source: i32, tag: i32, comm: i32, status: &mut MpiStatus) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?;
+            c.recv(buf, ucount(count)?, d, source, tag)
+        },
+        |s| {
+            *status = s.into();
+            MPI_SUCCESS
+        },
+    )
+}
+
+fn insert_request(st: &mut super::state::RawState, r: RawReq) -> i32 {
+    let h = st.next_request;
+    st.next_request += 1;
+    st.requests.insert(h, r);
+    h
+}
+
+fn do_isend(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32, request: &mut i32, mode: SendMode) -> i32 {
+    with_state(
+        |st| {
+            let req = {
+                let c = comm_of(st, comm)?;
+                let d = dtype_of(st, datatype)?;
+                c.isend_mode(buf, ucount(count)?, d, dest, tag, mode)?
+            };
+            Ok(insert_request(st, RawReq::Plain(req)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Isend`.
+pub fn mpi_isend(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32, request: &mut i32) -> i32 {
+    do_isend(buf, count, datatype, dest, tag, comm, request, SendMode::Standard)
+}
+
+/// `MPI_Issend`.
+pub fn mpi_issend(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32, request: &mut i32) -> i32 {
+    do_isend(buf, count, datatype, dest, tag, comm, request, SendMode::Synchronous)
+}
+
+/// `MPI_Irecv`.
+pub fn mpi_irecv(buf: &mut [u8], count: i32, datatype: i32, source: i32, tag: i32, comm: i32, request: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let req = {
+                let c = comm_of(st, comm)?;
+                let d = dtype_of(st, datatype)?;
+                c.irecv(buf, ucount(count)?, d, source, tag)?
+            };
+            Ok(insert_request(st, RawReq::Plain(req)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Sendrecv`.
+pub fn mpi_sendrecv(
+    sendbuf: &[u8],
+    sendcount: i32,
+    sendtype: i32,
+    dest: i32,
+    sendtag: i32,
+    recvbuf: &mut [u8],
+    recvcount: i32,
+    recvtype: i32,
+    source: i32,
+    recvtag: i32,
+    comm: i32,
+    status: &mut MpiStatus,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            c.sendrecv(
+                sendbuf,
+                ucount(sendcount)?,
+                sd,
+                dest,
+                sendtag,
+                recvbuf,
+                ucount(recvcount)?,
+                rd,
+                source,
+                recvtag,
+            )
+        },
+        |s| {
+            *status = s.into();
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Probe`.
+pub fn mpi_probe(source: i32, tag: i32, comm: i32, status: &mut MpiStatus) -> i32 {
+    with_state(|st| comm_of(st, comm)?.probe(source, tag), |s| {
+        *status = s.into();
+        MPI_SUCCESS
+    })
+}
+
+/// `MPI_Iprobe`.
+pub fn mpi_iprobe(source: i32, tag: i32, comm: i32, flag: &mut i32, status: &mut MpiStatus) -> i32 {
+    with_state(|st| comm_of(st, comm)?.iprobe(source, tag), |s| {
+        match s {
+            Some(s) => {
+                *flag = 1;
+                *status = s.into();
+            }
+            None => *flag = 0,
+        }
+        MPI_SUCCESS
+    })
+}
+
+/// `MPI_Buffer_attach` (size-only accounting; the simulated transport
+/// copies internally).
+pub fn mpi_buffer_attach(size: i32, comm_for_rank: i32) -> i32 {
+    with_state(
+        |st| {
+            comm_of(st, comm_for_rank)?.rank_ctx().buffer_attach(size.max(0) as usize);
+            Ok(())
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Buffer_detach`.
+pub fn mpi_buffer_detach(size: &mut i32, comm_for_rank: i32) -> i32 {
+    with_state(|st| Ok(comm_of(st, comm_for_rank)?.rank_ctx().buffer_detach() as i32), |s| {
+        *size = s;
+        MPI_SUCCESS
+    })
+}
+
+// ---------------- completion ----------------
+
+/// `MPI_Wait`.
+pub fn mpi_wait(request: &mut i32, status: &mut MpiStatus) -> i32 {
+    let h = *request;
+    if h == MPI_REQUEST_NULL {
+        *status = MpiStatus::default();
+        return MPI_SUCCESS;
+    }
+    with_state(
+        |st| {
+            let r = st
+                .requests
+                .get(&h)
+                .ok_or_else(|| mpi_err!(Request, "invalid request handle {h}"))?;
+            let (s, persistent) = match r {
+                RawReq::Plain(req) => {
+                    let s = req.wait()?;
+                    st.requests.remove(&h);
+                    (s, false)
+                }
+                RawReq::Persistent(p) => (p.wait()?, true), // template stays
+            };
+            Ok((s, persistent))
+        },
+        |(s, persistent)| {
+            if !persistent {
+                *request = MPI_REQUEST_NULL;
+            }
+            *status = s.into();
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Test`.
+pub fn mpi_test(request: &mut i32, flag: &mut i32, status: &mut MpiStatus) -> i32 {
+    let h = *request;
+    if h == MPI_REQUEST_NULL {
+        *flag = 1;
+        *status = MpiStatus::default();
+        return MPI_SUCCESS;
+    }
+    with_state(
+        |st| {
+            let r = st
+                .requests
+                .get(&h)
+                .ok_or_else(|| mpi_err!(Request, "invalid request handle {h}"))?;
+            let (s, persistent) = match r {
+                RawReq::Plain(req) => {
+                    let s = req.test()?;
+                    if s.is_some() {
+                        st.requests.remove(&h);
+                    }
+                    (s, false)
+                }
+                RawReq::Persistent(p) => (p.test()?, true),
+            };
+            Ok((s, persistent))
+        },
+        |(s, persistent)| {
+            match s {
+                Some(s) => {
+                    *flag = 1;
+                    if !persistent {
+                        *request = MPI_REQUEST_NULL;
+                    }
+                    *status = s.into();
+                }
+                None => *flag = 0,
+            }
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Waitall`.
+pub fn mpi_waitall(requests: &mut [i32], statuses: &mut [MpiStatus]) -> i32 {
+    for i in 0..requests.len() {
+        let mut s = MpiStatus::default();
+        let rc = mpi_wait(&mut requests[i], &mut s);
+        if rc != MPI_SUCCESS {
+            return rc;
+        }
+        if let Some(slot) = statuses.get_mut(i) {
+            *slot = s;
+        }
+    }
+    MPI_SUCCESS
+}
+
+/// `MPI_Waitany`.
+pub fn mpi_waitany(requests: &mut [i32], index: &mut i32, status: &mut MpiStatus) -> i32 {
+    if requests.iter().all(|&r| r == MPI_REQUEST_NULL) {
+        *index = MPI_UNDEFINED;
+        return MPI_SUCCESS;
+    }
+    loop {
+        for i in 0..requests.len() {
+            if requests[i] == MPI_REQUEST_NULL {
+                continue;
+            }
+            let mut flag = 0;
+            let rc = mpi_test(&mut requests[i], &mut flag, status);
+            if rc != MPI_SUCCESS {
+                return rc;
+            }
+            if flag == 1 {
+                *index = i as i32;
+                return MPI_SUCCESS;
+            }
+        }
+    }
+}
+
+// ---------------- persistent ----------------
+
+/// `MPI_Send_init`.
+pub fn mpi_send_init(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32, request: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?.clone();
+            let dst = c.resolve_dst(dest)?;
+            let p = PersistentRequest::send_init(
+                c.rank_ctx().clone(),
+                c.ctx_p2p(),
+                dst,
+                tag,
+                RawBuf::from_slice(buf),
+                ucount(count)?,
+                d,
+                SendMode::Standard,
+            );
+            Ok(insert_request(st, RawReq::Persistent(p)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Recv_init`.
+pub fn mpi_recv_init(buf: &mut [u8], count: i32, datatype: i32, source: i32, tag: i32, comm: i32, request: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?.clone();
+            let src = match c.resolve_src(source)? {
+                crate::comm::SrcSel::Any => None,
+                crate::comm::SrcSel::Rank(w) => Some(w),
+                crate::comm::SrcSel::ProcNull => {
+                    return Err(mpi_err!(Rank, "recv_init with PROC_NULL unsupported"))
+                }
+            };
+            let tag = if tag == MPI_ANY_TAG { None } else { Some(tag) };
+            let p = PersistentRequest::recv_init(
+                c.rank_ctx().clone(),
+                c.ctx_p2p(),
+                src,
+                tag,
+                RawBufMut::from_slice(buf),
+                ucount(count)?,
+                d,
+                c.group().clone(),
+            );
+            Ok(insert_request(st, RawReq::Persistent(p)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Start`.
+pub fn mpi_start(request: &mut i32) -> i32 {
+    let h = *request;
+    with_state(
+        |st| match st.requests.get(&h) {
+            Some(RawReq::Persistent(p)) => p.start(),
+            _ => Err(mpi_err!(Request, "start on non-persistent handle {h}")),
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Startall`.
+pub fn mpi_startall(requests: &mut [i32]) -> i32 {
+    for r in requests.iter_mut() {
+        let rc = mpi_start(r);
+        if rc != MPI_SUCCESS {
+            return rc;
+        }
+    }
+    MPI_SUCCESS
+}
+
+/// `MPI_Request_free` (plain requests only; must not be in use).
+pub fn mpi_request_free(request: &mut i32) -> i32 {
+    let h = *request;
+    with_state(
+        |st| {
+            st.requests
+                .remove(&h)
+                .map(|_| ())
+                .ok_or_else(|| mpi_err!(Request, "invalid request handle {h}"))
+        },
+        |_| {
+            *request = MPI_REQUEST_NULL;
+            MPI_SUCCESS
+        },
+    )
+}
+
+// ---------------- collectives ----------------
+
+/// `MPI_Barrier`.
+pub fn mpi_barrier(comm: i32) -> i32 {
+    with_state(|st| collective::barrier(comm_of(st, comm)?), |_| MPI_SUCCESS)
+}
+
+/// `MPI_Bcast`.
+pub fn mpi_bcast(buf: &mut [u8], count: i32, datatype: i32, root: i32, comm: i32) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?;
+            collective::bcast(c, buf, ucount(count)?, d, root as usize)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Reduce` (root passes a receive buffer; `None` sendbuf = IN_PLACE).
+pub fn mpi_reduce(
+    sendbuf: Option<&[u8]>,
+    recvbuf: Option<&mut [u8]>,
+    count: i32,
+    datatype: i32,
+    op: i32,
+    root: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?;
+            let o = op_of(st, op)?;
+            collective::reduce(c, sendbuf, recvbuf, ucount(count)?, d, o, root as usize)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Allreduce`.
+pub fn mpi_allreduce(sendbuf: Option<&[u8]>, recvbuf: &mut [u8], count: i32, datatype: i32, op: i32, comm: i32) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?;
+            let o = op_of(st, op)?;
+            collective::allreduce(c, sendbuf, recvbuf, ucount(count)?, d, o)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Gather`.
+pub fn mpi_gather(
+    sendbuf: &[u8],
+    sendcount: i32,
+    sendtype: i32,
+    recvbuf: Option<&mut [u8]>,
+    recvcount: i32,
+    recvtype: i32,
+    root: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            collective::gather(c, sendbuf, ucount(sendcount)?, sd, recvbuf, ucount(recvcount)?, rd, root as usize)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Gatherv` (displs in recvtype extents, per the C interface).
+pub fn mpi_gatherv(
+    sendbuf: &[u8],
+    sendcount: i32,
+    sendtype: i32,
+    recvbuf: Option<&mut [u8]>,
+    recvcounts: &[i32],
+    displs: &[i32],
+    recvtype: i32,
+    root: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            let ext = rd.extent() as usize;
+            let counts: Vec<usize> = recvcounts.iter().map(|&x| x as usize).collect();
+            let dbytes: Vec<usize> = displs.iter().map(|&x| x as usize * ext).collect();
+            collective::gatherv(c, sendbuf, ucount(sendcount)?, sd, recvbuf, &counts, &dbytes, rd, root as usize)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Scatter`.
+pub fn mpi_scatter(
+    sendbuf: Option<&[u8]>,
+    sendcount: i32,
+    sendtype: i32,
+    recvbuf: &mut [u8],
+    recvcount: i32,
+    recvtype: i32,
+    root: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            collective::scatter(c, sendbuf, ucount(sendcount)?, sd, recvbuf, ucount(recvcount)?, rd, root as usize)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Scatterv`.
+pub fn mpi_scatterv(
+    sendbuf: Option<&[u8]>,
+    sendcounts: &[i32],
+    displs: &[i32],
+    sendtype: i32,
+    recvbuf: &mut [u8],
+    recvcount: i32,
+    recvtype: i32,
+    root: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            let ext = sd.extent() as usize;
+            let counts: Vec<usize> = sendcounts.iter().map(|&x| x as usize).collect();
+            let dbytes: Vec<usize> = displs.iter().map(|&x| x as usize * ext).collect();
+            collective::scatterv(c, sendbuf, &counts, &dbytes, sd, recvbuf, ucount(recvcount)?, rd, root as usize)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Allgather`.
+pub fn mpi_allgather(
+    sendbuf: Option<&[u8]>,
+    sendcount: i32,
+    sendtype: i32,
+    recvbuf: &mut [u8],
+    recvcount: i32,
+    recvtype: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            collective::allgather(c, sendbuf, ucount(sendcount)?, sd, recvbuf, ucount(recvcount)?, rd)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Allgatherv`.
+pub fn mpi_allgatherv(
+    sendbuf: Option<&[u8]>,
+    sendcount: i32,
+    sendtype: i32,
+    recvbuf: &mut [u8],
+    recvcounts: &[i32],
+    displs: &[i32],
+    recvtype: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            let ext = rd.extent() as usize;
+            let counts: Vec<usize> = recvcounts.iter().map(|&x| x as usize).collect();
+            let dbytes: Vec<usize> = displs.iter().map(|&x| x as usize * ext).collect();
+            collective::allgatherv(c, sendbuf, ucount(sendcount)?, sd, recvbuf, &counts, &dbytes, rd)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Alltoall`.
+pub fn mpi_alltoall(
+    sendbuf: &[u8],
+    sendcount: i32,
+    sendtype: i32,
+    recvbuf: &mut [u8],
+    recvcount: i32,
+    recvtype: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            collective::alltoall(c, sendbuf, ucount(sendcount)?, sd, recvbuf, ucount(recvcount)?, rd)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Alltoallv`.
+pub fn mpi_alltoallv(
+    sendbuf: &[u8],
+    sendcounts: &[i32],
+    sdispls: &[i32],
+    sendtype: i32,
+    recvbuf: &mut [u8],
+    recvcounts: &[i32],
+    rdispls: &[i32],
+    recvtype: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let sd = dtype_of(st, sendtype)?;
+            let rd = dtype_of(st, recvtype)?;
+            let sext = sd.extent() as usize;
+            let rext = rd.extent() as usize;
+            let sc: Vec<usize> = sendcounts.iter().map(|&x| x as usize).collect();
+            let sdb: Vec<usize> = sdispls.iter().map(|&x| x as usize * sext).collect();
+            let rc: Vec<usize> = recvcounts.iter().map(|&x| x as usize).collect();
+            let rdb: Vec<usize> = rdispls.iter().map(|&x| x as usize * rext).collect();
+            collective::alltoallv(c, sendbuf, &sc, &sdb, sd, recvbuf, &rc, &rdb, rd)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Reduce_scatter`.
+pub fn mpi_reduce_scatter(
+    sendbuf: Option<&[u8]>,
+    recvbuf: &mut [u8],
+    recvcounts: &[i32],
+    datatype: i32,
+    op: i32,
+    comm: i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?;
+            let o = op_of(st, op)?;
+            let counts: Vec<usize> = recvcounts.iter().map(|&x| x as usize).collect();
+            collective::reduce_scatter(c, sendbuf, recvbuf, &counts, d, o)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Scan`.
+pub fn mpi_scan(sendbuf: Option<&[u8]>, recvbuf: &mut [u8], count: i32, datatype: i32, op: i32, comm: i32) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?;
+            let o = op_of(st, op)?;
+            collective::scan(c, sendbuf, recvbuf, ucount(count)?, d, o)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Exscan`.
+pub fn mpi_exscan(sendbuf: Option<&[u8]>, recvbuf: &mut [u8], count: i32, datatype: i32, op: i32, comm: i32) -> i32 {
+    with_state(
+        |st| {
+            let c = comm_of(st, comm)?;
+            let d = dtype_of(st, datatype)?;
+            let o = op_of(st, op)?;
+            collective::exscan(c, sendbuf, recvbuf, ucount(count)?, d, o)
+        },
+        |_| MPI_SUCCESS,
+    )
+}
+
+/// `MPI_Ibarrier`.
+pub fn mpi_ibarrier(comm: i32, request: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let req = collective::ibarrier(comm_of(st, comm)?)?;
+            Ok(insert_request(st, RawReq::Plain(req)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Ibcast`.
+pub fn mpi_ibcast(buf: &mut [u8], count: i32, datatype: i32, root: i32, comm: i32, request: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let req = {
+                let c = comm_of(st, comm)?;
+                let d = dtype_of(st, datatype)?;
+                collective::ibcast(c, buf, ucount(count)?, d, root as usize)?
+            };
+            Ok(insert_request(st, RawReq::Plain(req)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Iallreduce`.
+pub fn mpi_iallreduce(
+    sendbuf: Option<&[u8]>,
+    recvbuf: &mut [u8],
+    count: i32,
+    datatype: i32,
+    op: i32,
+    comm: i32,
+    request: &mut i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let req = {
+                let c = comm_of(st, comm)?;
+                let d = dtype_of(st, datatype)?;
+                let o = op_of(st, op)?;
+                collective::iallreduce(c, sendbuf, recvbuf, ucount(count)?, d, o)?
+            };
+            Ok(insert_request(st, RawReq::Plain(req)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+// Re-export for user-op signatures.
+pub use crate::op::UserFn as MpiUserFn;
+
+#[allow(unused_imports)]
+use super::state::RawState;
+
+// Silence the unused warning for err_code when panic-on-error is off and
+// all paths go through with_state.
+#[allow(dead_code)]
+fn _touch(e: MpiError) -> i32 {
+    err_code(e)
+}

@@ -1,0 +1,19 @@
+//! The **baseline interface**: a deliberately C-shaped flat API over
+//! integer handles, mirroring what "using the raw MPI C interface" costs a
+//! C++ (here: Rust) program — no RAII, manual datatype construction and
+//! commit, integer error codes, out-parameters, explicit request arrays.
+//!
+//! This is the `C` side of the paper's Figure 1 comparison; the adapted
+//! mpiBench drives the same operations through [`crate::modern`] to
+//! measure the ergonomic layer's overhead.
+//!
+//! Handle tables are rank-thread-local (each simulated rank is a thread),
+//! exactly as MPI handles are process-local.
+
+pub mod constants;
+pub mod funcs;
+pub mod state;
+
+pub use constants::*;
+pub use funcs::*;
+pub use state::{init, finalize, is_initialized, MpiStatus};

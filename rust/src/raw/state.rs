@@ -1,0 +1,185 @@
+//! Rank-thread-local handle tables (MPI handles are process-local opaque
+//! integers; our "process" is the rank thread).
+
+use super::constants::*;
+use crate::comm::Comm;
+use crate::datatype::{Datatype, Primitive, TypeMap};
+use crate::op::{pair_type, Op};
+use crate::request::{PersistentRequest, Request};
+use crate::{ErrorClass, MpiError};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// `MPI_Status` with the C field layout.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[repr(C)]
+pub struct MpiStatus {
+    pub mpi_source: i32,
+    pub mpi_tag: i32,
+    pub mpi_error: i32,
+    /// Received byte count (drives `MPI_Get_count`).
+    pub count: i32,
+}
+
+impl From<crate::p2p::Status> for MpiStatus {
+    fn from(s: crate::p2p::Status) -> MpiStatus {
+        MpiStatus { mpi_source: s.source, mpi_tag: s.tag, mpi_error: MPI_SUCCESS, count: s.bytes as i32 }
+    }
+}
+
+pub(super) enum RawReq {
+    Plain(Request),
+    Persistent(PersistentRequest),
+}
+
+pub(super) struct RawState {
+    pub comms: HashMap<i32, Comm>,
+    pub next_comm: i32,
+    pub dtypes: HashMap<i32, Datatype>,
+    pub next_dtype: i32,
+    pub ops: HashMap<i32, Op>,
+    pub next_op: i32,
+    pub requests: HashMap<i32, RawReq>,
+    pub next_request: i32,
+    /// Attached bsend buffer size (the raw layer owns the accounting call).
+    pub groups: HashMap<i32, crate::group::Group>,
+    pub next_group: i32,
+}
+
+thread_local! {
+    pub(super) static STATE: RefCell<Option<RawState>> = const { RefCell::new(None) };
+}
+
+fn predefined_dtypes() -> HashMap<i32, Datatype> {
+    use Primitive::*;
+    let mut m = HashMap::new();
+    let mut put = |h: i32, p: Primitive| {
+        m.insert(h, Datatype::primitive(p));
+    };
+    put(MPI_BYTE, Byte);
+    put(MPI_CHAR, I8);
+    put(MPI_SIGNED_CHAR, I8);
+    put(MPI_UNSIGNED_CHAR, U8);
+    put(MPI_SHORT, I16);
+    put(MPI_UNSIGNED_SHORT, U16);
+    put(MPI_INT, I32);
+    put(MPI_UNSIGNED, U32);
+    put(MPI_LONG, I64);
+    put(MPI_UNSIGNED_LONG, U64);
+    put(MPI_LONG_LONG, I64);
+    put(MPI_UNSIGNED_LONG_LONG, U64);
+    put(MPI_FLOAT, F32);
+    put(MPI_DOUBLE, F64);
+    put(MPI_C_BOOL, Bool);
+    put(MPI_C_FLOAT_COMPLEX, C32);
+    put(MPI_C_DOUBLE_COMPLEX, C64);
+    let mut put_pair = |h: i32, p: Primitive| {
+        let mut d = Datatype::new(pair_type(p));
+        d.commit();
+        m.insert(h, d);
+    };
+    put_pair(MPI_FLOAT_INT, F32);
+    put_pair(MPI_DOUBLE_INT, F64);
+    put_pair(MPI_LONG_INT, I64);
+    put_pair(MPI_2INT, I32);
+    m
+}
+
+fn predefined_ops() -> HashMap<i32, Op> {
+    let mut m = HashMap::new();
+    m.insert(MPI_SUM, Op::SUM);
+    m.insert(MPI_PROD, Op::PROD);
+    m.insert(MPI_MAX, Op::MAX);
+    m.insert(MPI_MIN, Op::MIN);
+    m.insert(MPI_LAND, Op::LAND);
+    m.insert(MPI_LOR, Op::LOR);
+    m.insert(MPI_LXOR, Op::LXOR);
+    m.insert(MPI_BAND, Op::BAND);
+    m.insert(MPI_BOR, Op::BOR);
+    m.insert(MPI_BXOR, Op::BXOR);
+    m.insert(MPI_MAXLOC, Op::MAXLOC);
+    m.insert(MPI_MINLOC, Op::MINLOC);
+    m.insert(MPI_REPLACE, Op::REPLACE);
+    m.insert(MPI_NO_OP, Op::NO_OP);
+    m
+}
+
+/// `MPI_Init` analog: binds the raw layer to this rank's world
+/// communicator. Must be called on the rank thread before any `mpi_*`
+/// function.
+pub fn init(world: &Comm) -> i32 {
+    STATE.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.is_some() {
+            return ErrorClass::Other.code();
+        }
+        let ctx = world.rank_ctx().clone();
+        let mut comms = HashMap::new();
+        comms.insert(MPI_COMM_WORLD, Comm::world(ctx.clone()));
+        comms.insert(MPI_COMM_SELF, Comm::self_comm(ctx));
+        *s = Some(RawState {
+            comms,
+            next_comm: 2,
+            dtypes: predefined_dtypes(),
+            next_dtype: FIRST_USER_DATATYPE,
+            ops: predefined_ops(),
+            next_op: FIRST_USER_OP,
+            requests: HashMap::new(),
+            next_request: 0,
+            groups: HashMap::new(),
+            next_group: 0,
+        });
+        MPI_SUCCESS
+    })
+}
+
+/// `MPI_Finalize` analog.
+pub fn finalize() -> i32 {
+    STATE.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.is_none() {
+            return ErrorClass::Other.code();
+        }
+        *s = None;
+        MPI_SUCCESS
+    })
+}
+
+/// `MPI_Initialized`.
+pub fn is_initialized() -> bool {
+    STATE.with(|s| s.borrow().is_some())
+}
+
+/// Convert a library error to a C return code, honoring the
+/// `panic-on-error` feature (the paper's compile-time exception switch).
+pub(super) fn err_code(e: MpiError) -> i32 {
+    #[cfg(feature = "panic-on-error")]
+    {
+        panic!("MPI error (panic-on-error enabled): {e}");
+    }
+    #[cfg(not(feature = "panic-on-error"))]
+    {
+        e.code()
+    }
+}
+
+/// Run `f` with the raw state; uninitialized → MPI_ERR_OTHER.
+pub(super) fn with_state<R>(f: impl FnOnce(&mut RawState) -> Result<R, MpiError>, out: impl FnOnce(R) -> i32) -> i32 {
+    STATE.with(|s| {
+        let mut s = s.borrow_mut();
+        match s.as_mut() {
+            None => ErrorClass::Other.code(),
+            Some(st) => match f(st) {
+                Ok(r) => out(r),
+                Err(e) => err_code(e),
+            },
+        }
+    })
+}
+
+pub(super) fn base_typemap(st: &RawState, handle: i32) -> Result<TypeMap, MpiError> {
+    st.dtypes
+        .get(&handle)
+        .map(|d| d.map().clone())
+        .ok_or_else(|| crate::mpi_err!(Type, "invalid datatype handle {handle}"))
+}

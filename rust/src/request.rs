@@ -1,0 +1,366 @@
+//! Request objects and the completion family (MPI-4.0 §3.7):
+//! test/wait/{all,any,some}, persistent requests, generalized requests.
+//!
+//! A [`Request`] becomes the *null request* after it completes (its status
+//! has been taken), mirroring `MPI_REQUEST_NULL` semantics: completed
+//! entries in `wait_all`/`wait_any` arrays are skipped.
+
+use crate::datatype::Datatype;
+use crate::group::Group;
+use crate::p2p::{self, engine, RankCtx, RawBuf, RawBufMut, SendMode, Status};
+use crate::{mpi_err, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Completion source for composite operations (nonblocking collectives,
+/// collective IO, generalized requests). The operation itself progresses
+/// via [`p2p::Progressable`]; this trait only reports/extracts completion.
+pub trait CustomRequest {
+    fn done(&self) -> bool;
+    /// Take the final status; called exactly once, after `done()`.
+    fn take_status(&self) -> Result<Status>;
+}
+
+enum ReqKind {
+    Send(u64),
+    Recv(u64),
+    Ready(Status),
+    Custom(Rc<dyn CustomRequest>),
+    Null,
+}
+
+/// An `MPI_Request`.
+pub struct Request {
+    ctx: Rc<RankCtx>,
+    kind: RefCell<ReqKind>,
+}
+
+impl Request {
+    pub fn from_send(ctx: Rc<RankCtx>, token: Option<u64>) -> Request {
+        let kind = match token {
+            Some(t) => ReqKind::Send(t),
+            None => ReqKind::Ready(Status::empty()),
+        };
+        Request { ctx, kind: RefCell::new(kind) }
+    }
+
+    pub fn from_recv(ctx: Rc<RankCtx>, token: u64) -> Request {
+        Request { ctx, kind: RefCell::new(ReqKind::Recv(token)) }
+    }
+
+    /// Completed-at-creation (PROC_NULL ops, zero-size fast paths).
+    pub fn ready(ctx: Rc<RankCtx>, status: Status) -> Request {
+        Request { ctx, kind: RefCell::new(ReqKind::Ready(status)) }
+    }
+
+    pub fn custom(ctx: Rc<RankCtx>, c: Rc<dyn CustomRequest>) -> Request {
+        Request { ctx, kind: RefCell::new(ReqKind::Custom(c)) }
+    }
+
+    /// `MPI_REQUEST_NULL`.
+    pub fn null(ctx: Rc<RankCtx>) -> Request {
+        Request { ctx, kind: RefCell::new(ReqKind::Null) }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(*self.kind.borrow(), ReqKind::Null)
+    }
+
+    pub fn rank_ctx(&self) -> &Rc<RankCtx> {
+        &self.ctx
+    }
+
+    /// Non-consuming readiness check (no progress driven).
+    fn ready_now(&self) -> bool {
+        match &*self.kind.borrow() {
+            ReqKind::Send(t) => engine::send_done(&self.ctx, *t),
+            ReqKind::Recv(t) => engine::recv_done(&self.ctx, *t),
+            ReqKind::Ready(_) => true,
+            ReqKind::Custom(c) => c.done(),
+            ReqKind::Null => true,
+        }
+    }
+
+    /// Consume the completion, transitioning to the null request.
+    fn consume(&self) -> Result<Status> {
+        let kind = std::mem::replace(&mut *self.kind.borrow_mut(), ReqKind::Null);
+        match kind {
+            ReqKind::Send(t) => {
+                engine::take_send_done(&self.ctx, t);
+                Ok(Status::empty())
+            }
+            ReqKind::Recv(t) => engine::take_recv_result(&self.ctx, t)
+                .ok_or_else(|| mpi_err!(Intern, "consume of incomplete recv"))?,
+            ReqKind::Ready(s) => Ok(s),
+            ReqKind::Custom(c) => c.take_status(),
+            ReqKind::Null => Ok(Status::empty()),
+        }
+    }
+
+    /// Non-consuming, non-progressing readiness check (used by composite
+    /// waiters like `when_any` that must not steal completions).
+    pub fn test_ready_nonconsuming(&self) -> bool {
+        self.ready_now()
+    }
+
+    /// `MPI_Test`: drives progress once; returns the status if complete.
+    pub fn test(&self) -> Result<Option<Status>> {
+        if self.is_null() {
+            return Ok(Some(Status::empty()));
+        }
+        engine::progress(&self.ctx)?;
+        if self.ready_now() {
+            Ok(Some(self.consume()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// `MPI_Wait`.
+    pub fn wait(&self) -> Result<Status> {
+        if self.is_null() {
+            return Ok(Status::empty());
+        }
+        engine::wait_for(&self.ctx, || self.ready_now())?;
+        self.consume()
+    }
+}
+
+impl std::fmt::Debug for Request {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let k = match &*self.kind.borrow() {
+            ReqKind::Send(t) => format!("send#{t}"),
+            ReqKind::Recv(t) => format!("recv#{t}"),
+            ReqKind::Ready(_) => "ready".into(),
+            ReqKind::Custom(_) => "custom".into(),
+            ReqKind::Null => "null".into(),
+        };
+        write!(f, "Request({k})")
+    }
+}
+
+/// `MPI_Waitall`.
+pub fn wait_all(reqs: &[Request]) -> Result<Vec<Status>> {
+    if reqs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let ctx = reqs[0].ctx.clone();
+    engine::wait_for(&ctx, || reqs.iter().all(|r| r.ready_now()))?;
+    reqs.iter().map(|r| if r.is_null() { Ok(Status::empty()) } else { r.consume() }).collect()
+}
+
+/// `MPI_Waitany`: index of the completed request and its status. All-null
+/// input returns `None` (the standard's `MPI_UNDEFINED`).
+pub fn wait_any(reqs: &[Request]) -> Result<Option<(usize, Status)>> {
+    if reqs.is_empty() || reqs.iter().all(|r| r.is_null()) {
+        return Ok(None);
+    }
+    let ctx = reqs[0].ctx.clone();
+    engine::wait_for(&ctx, || reqs.iter().any(|r| !r.is_null() && r.ready_now()))?;
+    let idx = reqs.iter().position(|r| !r.is_null() && r.ready_now()).unwrap();
+    Ok(Some((idx, reqs[idx].consume()?)))
+}
+
+/// `MPI_Waitsome`: indices + statuses of everything complete once at least
+/// one is.
+pub fn wait_some(reqs: &[Request]) -> Result<Vec<(usize, Status)>> {
+    if reqs.is_empty() || reqs.iter().all(|r| r.is_null()) {
+        return Ok(Vec::new());
+    }
+    let ctx = reqs[0].ctx.clone();
+    engine::wait_for(&ctx, || reqs.iter().any(|r| !r.is_null() && r.ready_now()))?;
+    let mut out = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        if !r.is_null() && r.ready_now() {
+            out.push((i, r.consume()?));
+        }
+    }
+    Ok(out)
+}
+
+/// `MPI_Testall`.
+pub fn test_all(reqs: &[Request]) -> Result<Option<Vec<Status>>> {
+    if reqs.is_empty() {
+        return Ok(Some(Vec::new()));
+    }
+    engine::progress(&reqs[0].ctx)?;
+    if reqs.iter().all(|r| r.ready_now()) {
+        Ok(Some(
+            reqs.iter()
+                .map(|r| if r.is_null() { Ok(Status::empty()) } else { r.consume() })
+                .collect::<Result<_>>()?,
+        ))
+    } else {
+        Ok(None)
+    }
+}
+
+/// `MPI_Testany`.
+pub fn test_any(reqs: &[Request]) -> Result<Option<(usize, Status)>> {
+    if reqs.is_empty() {
+        return Ok(None);
+    }
+    engine::progress(&reqs[0].ctx)?;
+    for (i, r) in reqs.iter().enumerate() {
+        if !r.is_null() && r.ready_now() {
+            return Ok(Some((i, r.consume()?)));
+        }
+    }
+    Ok(None)
+}
+
+// ---------------- persistent requests (§3.9) ----------------
+
+enum PersistentSpec {
+    Send { ctx_id: u32, dst_world: Option<usize>, tag: i32, buf: RawBuf, count: usize, dtype: Datatype, mode: SendMode },
+    Recv { ctx_id: u32, src_world: Option<usize>, tag: Option<i32>, buf: RawBufMut, count: usize, dtype: Datatype, group: Group },
+}
+
+/// `MPI_Send_init` / `MPI_Recv_init` product: a reusable operation
+/// template. `start()` activates it; completing the active request leaves
+/// the template reusable.
+pub struct PersistentRequest {
+    ctx: Rc<RankCtx>,
+    spec: PersistentSpec,
+    active: RefCell<Option<Request>>,
+}
+
+impl PersistentRequest {
+    pub fn send_init(
+        ctx: Rc<RankCtx>,
+        ctx_id: u32,
+        dst_world: Option<usize>,
+        tag: i32,
+        buf: RawBuf,
+        count: usize,
+        dtype: Datatype,
+        mode: SendMode,
+    ) -> PersistentRequest {
+        PersistentRequest {
+            ctx,
+            spec: PersistentSpec::Send { ctx_id, dst_world, tag, buf, count, dtype, mode },
+            active: RefCell::new(None),
+        }
+    }
+
+    pub fn recv_init(
+        ctx: Rc<RankCtx>,
+        ctx_id: u32,
+        src_world: Option<usize>,
+        tag: Option<i32>,
+        buf: RawBufMut,
+        count: usize,
+        dtype: Datatype,
+        group: Group,
+    ) -> PersistentRequest {
+        PersistentRequest {
+            ctx,
+            spec: PersistentSpec::Recv { ctx_id, src_world, tag, buf, count, dtype, group },
+            active: RefCell::new(None),
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active.borrow().as_ref().map(|r| !r.is_null()).unwrap_or(false)
+    }
+
+    /// `MPI_Start`.
+    pub fn start(&self) -> Result<()> {
+        if self.is_active() {
+            return Err(mpi_err!(Request, "MPI_Start on an already active persistent request"));
+        }
+        let req = match &self.spec {
+            PersistentSpec::Send { ctx_id, dst_world, tag, buf, count, dtype, mode } => {
+                match dst_world {
+                    None => Request::ready(self.ctx.clone(), Status::empty()), // PROC_NULL
+                    Some(dst) => {
+                        let token = engine::start_send(
+                            &self.ctx,
+                            p2p::SendParams {
+                                ctx_id: *ctx_id,
+                                dst_world: *dst,
+                                tag: *tag,
+                                buf: unsafe { buf.as_slice() },
+                                count: *count,
+                                dtype,
+                                mode: *mode,
+                            },
+                        )?;
+                        Request::from_send(self.ctx.clone(), token)
+                    }
+                }
+            }
+            PersistentSpec::Recv { ctx_id, src_world, tag, buf, count, dtype, group } => {
+                let token = engine::post_recv(
+                    &self.ctx,
+                    *ctx_id,
+                    *src_world,
+                    *tag,
+                    *buf,
+                    *count,
+                    dtype.clone(),
+                    group.clone(),
+                )?;
+                Request::from_recv(self.ctx.clone(), token)
+            }
+        };
+        *self.active.borrow_mut() = Some(req);
+        Ok(())
+    }
+
+    /// Wait on the active operation; the template stays reusable.
+    pub fn wait(&self) -> Result<Status> {
+        let active = self.active.borrow();
+        match &*active {
+            Some(r) => r.wait(),
+            None => Err(mpi_err!(Request, "wait on inactive persistent request")),
+        }
+    }
+
+    pub fn test(&self) -> Result<Option<Status>> {
+        let active = self.active.borrow();
+        match &*active {
+            Some(r) => r.test(),
+            None => Err(mpi_err!(Request, "test on inactive persistent request")),
+        }
+    }
+}
+
+/// `MPI_Startall`.
+pub fn start_all(reqs: &[PersistentRequest]) -> Result<()> {
+    for r in reqs {
+        r.start()?;
+    }
+    Ok(())
+}
+
+// ---------------- generalized requests (§3.8 ext) ----------------
+
+/// A generalized request's completion side, held by the operation's
+/// implementor; `complete()` marks the request done.
+#[derive(Debug, Default)]
+pub struct GrequestState {
+    done: RefCell<Option<Status>>,
+}
+
+impl GrequestState {
+    pub fn complete(&self, status: Status) {
+        *self.done.borrow_mut() = Some(status);
+    }
+}
+
+impl CustomRequest for GrequestState {
+    fn done(&self) -> bool {
+        self.done.borrow().is_some()
+    }
+
+    fn take_status(&self) -> Result<Status> {
+        self.done.borrow_mut().take().ok_or_else(|| mpi_err!(Intern, "grequest not complete"))
+    }
+}
+
+/// `MPI_Grequest_start`: returns the request and the completion handle.
+pub fn grequest_start(ctx: Rc<RankCtx>) -> (Request, Rc<GrequestState>) {
+    let st = Rc::new(GrequestState::default());
+    (Request::custom(ctx, st.clone()), st)
+}

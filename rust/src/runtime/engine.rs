@@ -1,0 +1,301 @@
+//! PJRT client + executable cache.
+
+use crate::op::{Op, OpKind, UserFn};
+use crate::{mpi_err, MpiError, Result};
+use once_cell::sync::OnceCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Elements per combine payload block — must match
+/// `python/compile/kernels/combine.py`.
+pub const BLOCK: usize = 4096;
+/// Heat tile edge (interior) — must match `python/compile/kernels/stencil.py`.
+pub const TILE: usize = 64;
+
+/// The xla crate's handles wrap C++ objects without `Send`/`Sync` markers.
+/// The PJRT CPU client is thread-safe for compilation and execution (it is
+/// designed for multi-threaded frameworks); we still serialize calls with
+/// a mutex below to stay conservative, and this wrapper only asserts
+/// transferability.
+pub struct ShareXla<T>(T);
+unsafe impl<T> Send for ShareXla<T> {}
+unsafe impl<T> Sync for ShareXla<T> {}
+
+/// A loaded artifact set bound to one PJRT CPU client.
+pub struct XlaEngine {
+    client: ShareXla<xla::PjRtClient>,
+    dir: PathBuf,
+    exes: Mutex<HashMap<String, Arc<ShareXla<xla::PjRtLoadedExecutable>>>>,
+    /// Serializes execute calls (see `ShareXla` docs).
+    exec_lock: Mutex<()>,
+}
+
+fn xerr(e: xla::Error) -> MpiError {
+    mpi_err!(Other, "xla/pjrt error: {e}")
+}
+
+/// Locate the artifacts directory: `FERROMPI_ARTIFACTS`, then
+/// `./artifacts`, then `<manifest>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("FERROMPI_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.is_dir() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Whether the AOT artifacts exist (tests skip gracefully when
+/// `make artifacts` has not run).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("combine_sum_f32.hlo.txt").is_file()
+}
+
+impl XlaEngine {
+    pub fn new(dir: &Path) -> Result<XlaEngine> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(XlaEngine {
+            client: ShareXla(client),
+            dir: dir.to_path_buf(),
+            exes: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+        })
+    }
+
+    /// Load-or-get a compiled executable by artifact name.
+    pub fn load(&self, name: &str) -> Result<Arc<ShareXla<xla::PjRtLoadedExecutable>>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.is_file() {
+            return Err(mpi_err!(
+                Other,
+                "artifact '{}' missing — run `make artifacts`",
+                path.display()
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.0.compile(&comp).map_err(xerr)?;
+        let exe = Arc::new(ShareXla(exe));
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile everything the hot paths use (keeps compilation out of
+    /// measured regions).
+    pub fn warmup(&self) -> Result<()> {
+        for op in ["sum", "prod", "max", "min"] {
+            self.load(&format!("combine_{op}_f32"))?;
+        }
+        let _ = self.load("heat_step_f32");
+        let _ = self.load("heat_step_fused_f32");
+        Ok(())
+    }
+
+    fn execute_1out(
+        &self,
+        exe: &ShareXla<xla::PjRtLoadedExecutable>,
+        args: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let _g = self.exec_lock.lock().unwrap();
+        let result = exe.0.execute::<xla::Literal>(args).map_err(xerr)?;
+        result[0][0].to_literal_sync().map_err(xerr)
+    }
+
+    /// `inout[i] = input[i] OP inout[i]` over one BLOCK of f32.
+    fn combine_block(&self, op: &str, input: &[f32], inout: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(input.len(), BLOCK);
+        debug_assert_eq!(inout.len(), BLOCK);
+        let exe = self.load(&format!("combine_{op}_f32"))?;
+        let x = xla::Literal::vec1(input);
+        let y = xla::Literal::vec1(inout);
+        let out = self.execute_1out(&exe, &[x, y])?.to_tuple1().map_err(xerr)?;
+        let v = out.to_vec::<f32>().map_err(xerr)?;
+        inout.copy_from_slice(&v);
+        Ok(())
+    }
+
+    /// Identity element used to pad the final partial block.
+    fn identity(op: &str) -> f32 {
+        match op {
+            "sum" => 0.0,
+            "prod" => 1.0,
+            "max" => f32::NEG_INFINITY,
+            "min" => f32::INFINITY,
+            _ => 0.0,
+        }
+    }
+
+    /// Arbitrary-length f32 combine: chunked into BLOCK-sized payloads,
+    /// tail padded with the op identity.
+    pub fn combine_f32(&self, op: &str, input: &[f32], inout: &mut [f32]) -> Result<()> {
+        if input.len() != inout.len() {
+            return Err(mpi_err!(Count, "combine length mismatch"));
+        }
+        let mut off = 0;
+        while off < input.len() {
+            let n = BLOCK.min(input.len() - off);
+            if n == BLOCK {
+                let (head, _) = inout.split_at_mut(off + BLOCK);
+                self.combine_block(op, &input[off..off + BLOCK], &mut head[off..])?;
+            } else {
+                let id = Self::identity(op);
+                let mut xb = vec![id; BLOCK];
+                let mut yb = vec![id; BLOCK];
+                xb[..n].copy_from_slice(&input[off..off + n]);
+                yb[..n].copy_from_slice(&inout[off..off + n]);
+                self.combine_block(op, &xb, &mut yb)?;
+                inout[off..off + n].copy_from_slice(&yb[..n]);
+            }
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// One Jacobi step: padded (TILE+2)² tile → TILE² interior.
+    pub fn heat_step(&self, padded: &[f32]) -> Result<Vec<f32>> {
+        let edge = (TILE + 2) as i64;
+        if padded.len() != (edge * edge) as usize {
+            return Err(mpi_err!(Count, "heat_step expects {} values", edge * edge));
+        }
+        let exe = self.load("heat_step_f32")?;
+        let u = xla::Literal::vec1(padded).reshape(&[edge, edge]).map_err(xerr)?;
+        let out = self.execute_1out(&exe, &[u])?.to_tuple1().map_err(xerr)?;
+        out.to_vec::<f32>().map_err(xerr)
+    }
+
+    /// Fused step: returns (updated interior, local squared residual).
+    pub fn heat_step_fused(&self, padded: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let edge = (TILE + 2) as i64;
+        if padded.len() != (edge * edge) as usize {
+            return Err(mpi_err!(Count, "heat_step expects {} values", edge * edge));
+        }
+        let exe = self.load("heat_step_fused_f32")?;
+        let u = xla::Literal::vec1(padded).reshape(&[edge, edge]).map_err(xerr)?;
+        let (new, resid) = self.execute_1out(&exe, &[u])?.to_tuple2().map_err(xerr)?;
+        let new = new.to_vec::<f32>().map_err(xerr)?;
+        let resid = resid.to_vec::<f32>().map_err(xerr)?;
+        Ok((new, resid.first().copied().unwrap_or(0.0)))
+    }
+}
+
+/// The process-global engine (compiled executables shared by all rank
+/// threads).
+pub fn engine() -> Result<&'static XlaEngine> {
+    static ENGINE: OnceCell<std::result::Result<XlaEngine, String>> = OnceCell::new();
+    let e = ENGINE.get_or_init(|| XlaEngine::new(&artifacts_dir()).map_err(|e| e.to_string()));
+    match e {
+        Ok(engine) => Ok(engine),
+        Err(msg) => Err(mpi_err!(Other, "XLA engine unavailable: {msg}")),
+    }
+}
+
+/// Build an `MPI_Op_create`-style user op that offloads the combine to the
+/// AOT/PJRT path (f32 payloads only — the artifact's dtype).
+pub fn xla_op(kind: OpKind) -> Result<Op> {
+    let name = match kind {
+        OpKind::Sum => "sum",
+        OpKind::Prod => "prod",
+        OpKind::Max => "max",
+        OpKind::Min => "min",
+        other => return Err(mpi_err!(Op, "xla_op unsupported for {}", other.name())),
+    };
+    let eng = engine()?;
+    eng.load(&format!("combine_{name}_f32"))?; // fail fast + warm cache
+    let f: UserFn = Arc::new(move |input, inout, count, map| {
+        if map.entries().iter().any(|&(p, _)| p != crate::datatype::Primitive::F32) {
+            return Err(mpi_err!(Op, "xla combine op requires f32 datatypes"));
+        }
+        let n = count * map.entries().len();
+        let xs = unsafe { std::slice::from_raw_parts(input.as_ptr() as *const f32, n) };
+        let mut ys = vec![0f32; n];
+        unsafe {
+            std::ptr::copy_nonoverlapping(inout.as_ptr() as *const f32, ys.as_mut_ptr(), n);
+        }
+        engine()?.combine_f32(name, xs, &mut ys)?;
+        unsafe {
+            std::ptr::copy_nonoverlapping(ys.as_ptr(), inout.as_mut_ptr() as *mut f32, n);
+        }
+        Ok(())
+    });
+    Ok(Op::user(f, true, "xla_combine"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skip() -> bool {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return true;
+        }
+        false
+    }
+
+    #[test]
+    fn combine_blocks_match_native() {
+        if skip() {
+            return;
+        }
+        let eng = engine().unwrap();
+        let n = BLOCK + 100; // exercises the padded tail
+        let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        let mut y: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let expect: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        eng.combine_f32("sum", &x, &mut y).unwrap();
+        assert_eq!(y, expect);
+
+        let mut y2: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+        let expect2: Vec<f32> = x.iter().zip(&y2).map(|(a, b)| a.max(*b)).collect();
+        eng.combine_f32("max", &x, &mut y2).unwrap();
+        assert_eq!(y2, expect2);
+    }
+
+    #[test]
+    fn heat_step_smooths() {
+        if skip() {
+            return;
+        }
+        let eng = engine().unwrap();
+        let edge = TILE + 2;
+        let mut u = vec![0f32; edge * edge];
+        let c = edge / 2;
+        u[c * edge + c] = 100.0;
+        let out = eng.heat_step(&u).unwrap();
+        assert_eq!(out.len(), TILE * TILE);
+        // ALPHA = 0.25 -> the spike fully diffuses (100 + 0.25*(-400) = 0)
+        // and each neighbor picks up 25.
+        let ci = (c - 1) * TILE + (c - 1); // interior index of the spike
+        assert_eq!(out[ci], 0.0);
+        assert_eq!(out[ci - 1], 25.0);
+        assert_eq!(out[ci + 1], 25.0);
+        let (out2, resid) = eng.heat_step_fused(&u).unwrap();
+        assert_eq!(out, out2);
+        assert!(resid > 0.0);
+    }
+
+    #[test]
+    fn xla_op_plugs_into_op_engine() {
+        if skip() {
+            return;
+        }
+        let op = xla_op(OpKind::Sum).unwrap();
+        assert!(op.is_commutative());
+        let map = crate::datatype::TypeMap::primitive(crate::datatype::Primitive::F32);
+        let input: Vec<u8> = [1.0f32, 2.0, 3.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut inout: Vec<u8> = [10.0f32, 20.0, 30.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        op.apply(&map, &input, &mut inout, 3).unwrap();
+        let out: Vec<f32> =
+            inout.chunks(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(out, vec![11.0, 22.0, 33.0]);
+        // dtype guard
+        let imap = crate::datatype::TypeMap::primitive(crate::datatype::Primitive::I32);
+        assert!(op.apply(&imap, &input, &mut inout, 3).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! The PJRT runtime bridge: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them from the
+//! rust hot path. Python never runs at request time.
+//!
+//! Two consumers:
+//! * the **XLA-backed reduction op** ([`xla_op`]): plugs the AOT combine
+//!   kernels into the collective engine as an `MPI_Op_create` user op
+//!   (ablation A5 compares it against the native Rust combiner);
+//! * the **heat-stencil step** for the end-to-end example
+//!   ([`XlaEngine::heat_step_fused`]).
+
+pub mod engine;
+
+pub use engine::{artifacts_available, engine, xla_op, XlaEngine, BLOCK, TILE};

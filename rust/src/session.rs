@@ -1,0 +1,106 @@
+//! Sessions (MPI-4.0 §11): the world-model alternative. A session is a
+//! rank-local handle to the runtime through which communicators are
+//! derived from named *process sets*.
+//!
+//! This implementation exposes the two standard-mandated process sets
+//! (`mpi://WORLD`, `mpi://SELF`) plus one per simulated node
+//! (`fabric://node/<n>`), and supports `group_from_pset` →
+//! `comm_create_from_group`, mirroring the standard's session flow.
+
+use crate::comm::Comm;
+use crate::group::Group;
+use crate::info::Info;
+use crate::p2p::RankCtx;
+use crate::{mpi_err, Result};
+use std::rc::Rc;
+
+/// `MPI_Session`.
+pub struct Session {
+    ctx: Rc<RankCtx>,
+    info: Info,
+}
+
+impl Session {
+    /// `MPI_Session_init`. The rank context plays the role of the process-
+    /// local runtime instance.
+    pub fn init(ctx: Rc<RankCtx>, info: Info) -> Session {
+        Session { ctx, info }
+    }
+
+    /// `MPI_Session_get_info`.
+    pub fn info(&self) -> &Info {
+        &self.info
+    }
+
+    /// `MPI_Session_get_num_psets` / `MPI_Session_get_nth_pset`.
+    pub fn pset_names(&self) -> Vec<String> {
+        let mut names = vec!["mpi://WORLD".to_string(), "mpi://SELF".to_string()];
+        for n in 0..self.ctx.fabric.nodemap.nodes {
+            names.push(format!("fabric://node/{n}"));
+        }
+        names
+    }
+
+    /// `MPI_Group_from_session_pset`.
+    pub fn group_from_pset(&self, name: &str) -> Result<Group> {
+        let world = self.ctx.world_size();
+        match name {
+            "mpi://WORLD" => Ok(Group::world(world)),
+            "mpi://SELF" => Group::new(vec![self.ctx.world_rank]),
+            other => {
+                if let Some(n) = other.strip_prefix("fabric://node/") {
+                    let node: usize = n
+                        .parse()
+                        .map_err(|_| mpi_err!(Arg, "bad pset name {other}"))?;
+                    if node >= self.ctx.fabric.nodemap.nodes {
+                        return Err(mpi_err!(Arg, "node {node} out of range"));
+                    }
+                    Group::new(
+                        (0..world)
+                            .filter(|&r| self.ctx.fabric.nodemap.node_of(r) == node)
+                            .collect(),
+                    )
+                } else {
+                    Err(mpi_err!(Arg, "unknown process set '{other}'"))
+                }
+            }
+        }
+    }
+
+    /// `MPI_Comm_create_from_group`: collective over the group members.
+    /// All members must pass the same `stringtag`; the context id is
+    /// derived from a stable hash of the tag so no parent communicator is
+    /// needed (the session model's whole point).
+    pub fn comm_create_from_group(&self, group: &Group, stringtag: &str) -> Result<Option<Comm>> {
+        let Some(my_rank) = group.rank_of(self.ctx.world_rank) else {
+            return Ok(None);
+        };
+        // FNV-1a over the tag + group members → context id in the
+        // session-reserved range (identical on every member).
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for b in stringtag.bytes() {
+            eat(b);
+        }
+        for &m in group.members() {
+            for b in (m as u64).to_le_bytes() {
+                eat(b);
+            }
+        }
+        let ctx_id = 0x4000_0000u32 | ((h as u32) & 0x3FFF_FFFE);
+        Ok(Some(Comm::from_parts(
+            self.ctx.clone(),
+            group.clone(),
+            my_rank,
+            ctx_id,
+            format!("session:{stringtag}"),
+        )))
+    }
+
+    /// `MPI_Session_finalize` (nothing to tear down in the simulation —
+    /// communicators outlive the session handle as in the standard).
+    pub fn finalize(self) {}
+}

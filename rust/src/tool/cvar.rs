@@ -1,0 +1,166 @@
+//! Control variables (`MPI_T_cvar_*`).
+
+use crate::collective::config;
+use crate::{mpi_err, Result};
+
+/// Metadata for one control variable.
+#[derive(Debug, Clone)]
+pub struct CvarInfo {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub writable: bool,
+    pub category: &'static str,
+}
+
+/// `MPI_T_cvar_get_num` / `get_info`: the registry.
+pub fn cvars() -> Vec<CvarInfo> {
+    vec![
+        CvarInfo {
+            name: "coll_bcast_algorithm",
+            description: "broadcast algorithm: binomial | linear",
+            writable: true,
+            category: "collective",
+        },
+        CvarInfo {
+            name: "coll_allreduce_algorithm",
+            description: "allreduce algorithm: recursive_doubling | ring | reduce_bcast",
+            writable: true,
+            category: "collective",
+        },
+        CvarInfo {
+            name: "netmodel_eager_threshold",
+            description: "eager/rendezvous switch in bytes for new universes",
+            writable: true,
+            category: "transport",
+        },
+        CvarInfo {
+            name: "netmodel_alpha_inter_ns",
+            description: "inter-node latency (ns) for new universes",
+            writable: true,
+            category: "transport",
+        },
+        CvarInfo {
+            name: "deadlock_timeout_s",
+            description: "progress-engine deadlock watchdog (read-only; set FERROMPI_DEADLOCK_S)",
+            writable: false,
+            category: "transport",
+        },
+    ]
+}
+
+/// `MPI_T_cvar_get_index`.
+pub fn cvar_index(name: &str) -> Option<usize> {
+    cvars().iter().position(|c| c.name == name)
+}
+
+// Default-model overrides applied by `Universe::new`.
+use std::sync::atomic::{AtomicU64, Ordering};
+static EAGER_OVERRIDE: AtomicU64 = AtomicU64::new(0);
+static ALPHA_INTER_OVERRIDE: AtomicU64 = AtomicU64::new(0);
+
+/// Apply cvar overrides to a freshly built model.
+pub fn apply_model_overrides(model: &mut crate::transport::NetworkModel) {
+    let e = EAGER_OVERRIDE.load(Ordering::Relaxed);
+    if e > 0 {
+        model.eager_threshold = e as usize;
+    }
+    let a = ALPHA_INTER_OVERRIDE.load(Ordering::Relaxed);
+    if a > 0 {
+        model.alpha_inter_ns = a as f64;
+    }
+}
+
+/// `MPI_T_cvar_read`.
+pub fn cvar_read(name: &str) -> Result<String> {
+    match name {
+        "coll_bcast_algorithm" => Ok(match config::bcast_alg() {
+            config::BcastAlg::Binomial => "binomial".into(),
+            config::BcastAlg::Linear => "linear".into(),
+        }),
+        "coll_allreduce_algorithm" => Ok(match config::allreduce_alg() {
+            config::AllreduceAlg::RecursiveDoubling => "recursive_doubling".into(),
+            config::AllreduceAlg::Ring => "ring".into(),
+            config::AllreduceAlg::ReduceBcast => "reduce_bcast".into(),
+        }),
+        "netmodel_eager_threshold" => {
+            let v = EAGER_OVERRIDE.load(Ordering::Relaxed);
+            Ok(if v == 0 {
+                crate::transport::NetworkModel::omnipath().eager_threshold.to_string()
+            } else {
+                v.to_string()
+            })
+        }
+        "netmodel_alpha_inter_ns" => {
+            let v = ALPHA_INTER_OVERRIDE.load(Ordering::Relaxed);
+            Ok(if v == 0 {
+                crate::transport::NetworkModel::omnipath().alpha_inter_ns.to_string()
+            } else {
+                v.to_string()
+            })
+        }
+        "deadlock_timeout_s" => Ok(std::env::var("FERROMPI_DEADLOCK_S").unwrap_or_else(|_| "60".into())),
+        other => Err(mpi_err!(Arg, "unknown cvar '{other}'")),
+    }
+}
+
+/// `MPI_T_cvar_write`.
+pub fn cvar_write(name: &str, value: &str) -> Result<()> {
+    match name {
+        "coll_bcast_algorithm" => {
+            let a = config::parse_bcast_alg(value)
+                .ok_or_else(|| mpi_err!(Arg, "bad bcast algorithm '{value}'"))?;
+            config::set_bcast_alg(a);
+            Ok(())
+        }
+        "coll_allreduce_algorithm" => {
+            let a = config::parse_allreduce_alg(value)
+                .ok_or_else(|| mpi_err!(Arg, "bad allreduce algorithm '{value}'"))?;
+            config::set_allreduce_alg(a);
+            Ok(())
+        }
+        "netmodel_eager_threshold" => {
+            let v: u64 = value.parse().map_err(|_| mpi_err!(Arg, "bad threshold '{value}'"))?;
+            EAGER_OVERRIDE.store(v, Ordering::Relaxed);
+            Ok(())
+        }
+        "netmodel_alpha_inter_ns" => {
+            let v: u64 = value.parse().map_err(|_| mpi_err!(Arg, "bad alpha '{value}'"))?;
+            ALPHA_INTER_OVERRIDE.store(v, Ordering::Relaxed);
+            Ok(())
+        }
+        "deadlock_timeout_s" => Err(mpi_err!(Arg, "cvar 'deadlock_timeout_s' is read-only")),
+        other => Err(mpi_err!(Arg, "unknown cvar '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        assert!(cvar_index("coll_bcast_algorithm").is_some());
+        assert!(cvar_index("nope").is_none());
+        assert!(cvars().len() >= 5);
+    }
+
+    #[test]
+    fn read_write_roundtrip() {
+        cvar_write("coll_bcast_algorithm", "linear").unwrap();
+        assert_eq!(cvar_read("coll_bcast_algorithm").unwrap(), "linear");
+        cvar_write("coll_bcast_algorithm", "binomial").unwrap();
+        assert_eq!(cvar_read("coll_bcast_algorithm").unwrap(), "binomial");
+        assert!(cvar_write("coll_bcast_algorithm", "wat").is_err());
+        assert!(cvar_write("deadlock_timeout_s", "1").is_err());
+        assert!(cvar_read("nope").is_err());
+    }
+
+    #[test]
+    fn model_overrides_apply() {
+        cvar_write("netmodel_eager_threshold", "1024").unwrap();
+        let mut m = crate::transport::NetworkModel::omnipath();
+        apply_model_overrides(&mut m);
+        assert_eq!(m.eager_threshold, 1024);
+        cvar_write("netmodel_eager_threshold", "0").unwrap(); // reset
+    }
+}

@@ -1,0 +1,13 @@
+//! The tool component (MPI-4.0 chapter 15, `MPI_T_*`): control variables,
+//! performance variables, categories, and pvar sessions.
+//!
+//! Control variables bind to the process-global knobs (collective
+//! algorithm selection, default network-model parameters); performance
+//! variables read the transport ([`crate::transport::FabricStats`]) and
+//! per-rank ([`crate::p2p::state::RankCounters`]) counters.
+
+pub mod cvar;
+pub mod pvar;
+
+pub use cvar::{cvar_index, cvar_read, cvar_write, cvars, CvarInfo};
+pub use pvar::{pvar_index, pvars, PvarClass, PvarInfo, PvarSession};

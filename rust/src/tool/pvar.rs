@@ -1,0 +1,125 @@
+//! Performance variables (`MPI_T_pvar_*`).
+
+use crate::comm::Comm;
+use crate::{mpi_err, Result};
+use std::sync::atomic::Ordering;
+
+/// `MPI_T_PVAR_CLASS_*`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PvarClass {
+    Counter,
+    HighWatermark,
+    Level,
+    Timer,
+}
+
+/// Metadata for one performance variable.
+#[derive(Debug, Clone)]
+pub struct PvarInfo {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub class: PvarClass,
+    pub category: &'static str,
+}
+
+/// `MPI_T_pvar_get_num` / `get_info`.
+pub fn pvars() -> Vec<PvarInfo> {
+    use PvarClass::*;
+    vec![
+        PvarInfo { name: "fabric_msgs_sent", description: "packets injected into the fabric", class: Counter, category: "transport" },
+        PvarInfo { name: "fabric_bytes_sent", description: "payload bytes injected", class: Counter, category: "transport" },
+        PvarInfo { name: "fabric_eager_sent", description: "eager-protocol messages", class: Counter, category: "transport" },
+        PvarInfo { name: "fabric_rndv_sent", description: "rendezvous-protocol packets", class: Counter, category: "transport" },
+        PvarInfo { name: "fabric_ctrl_sent", description: "control packets (CTS/acks)", class: Counter, category: "transport" },
+        PvarInfo { name: "fabric_intra_node_msgs", description: "intra-node transfers", class: Counter, category: "transport" },
+        PvarInfo { name: "fabric_inter_node_msgs", description: "inter-node transfers", class: Counter, category: "transport" },
+        PvarInfo { name: "fabric_mailbox_hwm", description: "deepest delivery queue observed", class: HighWatermark, category: "transport" },
+        PvarInfo { name: "rank_sends_started", description: "sends started by this rank", class: Counter, category: "matching" },
+        PvarInfo { name: "rank_recvs_posted", description: "receives posted by this rank", class: Counter, category: "matching" },
+        PvarInfo { name: "rank_messages_matched", description: "envelope matches completed", class: Counter, category: "matching" },
+        PvarInfo { name: "rank_match_attempts", description: "queue scans performed", class: Counter, category: "matching" },
+        PvarInfo { name: "rank_unexpected_hwm", description: "unexpected-queue high watermark", class: HighWatermark, category: "matching" },
+        PvarInfo { name: "rank_posted_hwm", description: "posted-queue high watermark", class: HighWatermark, category: "matching" },
+        PvarInfo { name: "rank_unexpected_len", description: "current unexpected-queue depth", class: Level, category: "matching" },
+        PvarInfo { name: "rank_probes", description: "probe operations", class: Counter, category: "matching" },
+        PvarInfo { name: "rank_collectives_started", description: "collective operations started", class: Counter, category: "collective" },
+        PvarInfo { name: "rank_waits", description: "blocking waits entered", class: Counter, category: "matching" },
+        PvarInfo { name: "rank_virtual_time_ns", description: "virtual (modeled network) time accumulated", class: Timer, category: "clock" },
+    ]
+}
+
+/// `MPI_T_pvar_get_index`.
+pub fn pvar_index(name: &str) -> Option<usize> {
+    pvars().iter().position(|p| p.name == name)
+}
+
+/// Distinct categories (`MPI_T_category_*`).
+pub fn categories() -> Vec<&'static str> {
+    let mut c: Vec<&'static str> = pvars().iter().map(|p| p.category).collect();
+    c.sort_unstable();
+    c.dedup();
+    c
+}
+
+/// `MPI_T_pvar_session_create`: bound to one rank's view of the job.
+pub struct PvarSession<'a> {
+    comm: &'a Comm,
+    /// Start values for reset support (`MPI_T_pvar_reset`).
+    baseline: std::collections::HashMap<&'static str, u64>,
+}
+
+impl<'a> PvarSession<'a> {
+    pub fn create(comm: &'a Comm) -> PvarSession<'a> {
+        PvarSession { comm, baseline: std::collections::HashMap::new() }
+    }
+
+    fn raw_read(&self, name: &str) -> Result<u64> {
+        let ctx = self.comm.rank_ctx();
+        let f = &ctx.fabric.stats;
+        let c = &ctx.counters;
+        let v = match name {
+            "fabric_msgs_sent" => f.msgs_sent.load(Ordering::Relaxed),
+            "fabric_bytes_sent" => f.bytes_sent.load(Ordering::Relaxed),
+            "fabric_eager_sent" => f.eager_sent.load(Ordering::Relaxed),
+            "fabric_rndv_sent" => f.rndv_sent.load(Ordering::Relaxed),
+            "fabric_ctrl_sent" => f.ctrl_sent.load(Ordering::Relaxed),
+            "fabric_intra_node_msgs" => f.intra_node_msgs.load(Ordering::Relaxed),
+            "fabric_inter_node_msgs" => f.inter_node_msgs.load(Ordering::Relaxed),
+            "fabric_mailbox_hwm" => f.mailbox_hwm.load(Ordering::Relaxed),
+            "rank_sends_started" => c.sends_started.get(),
+            "rank_recvs_posted" => c.recvs_posted.get(),
+            "rank_messages_matched" => c.messages_matched.get(),
+            "rank_match_attempts" => ctx.matcher.borrow().match_attempts,
+            "rank_unexpected_hwm" => ctx.matcher.borrow().unexpected_hwm as u64,
+            "rank_posted_hwm" => ctx.matcher.borrow().posted_hwm as u64,
+            "rank_unexpected_len" => ctx.matcher.borrow().unexpected_len() as u64,
+            "rank_probes" => c.probes.get(),
+            "rank_collectives_started" => c.collectives_started.get(),
+            "rank_waits" => c.waits.get(),
+            "rank_virtual_time_ns" => ctx.clock.virtual_ns() as u64,
+            other => return Err(mpi_err!(Arg, "unknown pvar '{other}'")),
+        };
+        Ok(v)
+    }
+
+    /// `MPI_T_pvar_read` (relative to the last reset).
+    pub fn read(&self, name: &str) -> Result<u64> {
+        let raw = self.raw_read(name)?;
+        Ok(raw.saturating_sub(self.baseline.get(name).copied().unwrap_or(0)))
+    }
+
+    /// `MPI_T_pvar_reset` (counters only; watermarks/levels are absolute).
+    pub fn reset(&mut self, name: &'static str) -> Result<()> {
+        let idx = pvar_index(name).ok_or_else(|| mpi_err!(Arg, "unknown pvar '{name}'"))?;
+        if pvars()[idx].class == PvarClass::Counter {
+            let raw = self.raw_read(name)?;
+            self.baseline.insert(name, raw);
+        }
+        Ok(())
+    }
+
+    /// Read everything (the `ferrompi pvars` CLI dump).
+    pub fn read_all(&self) -> Vec<(&'static str, u64)> {
+        pvars().iter().filter_map(|p| self.read(p.name).ok().map(|v| (p.name, v))).collect()
+    }
+}

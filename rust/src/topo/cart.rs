@@ -1,0 +1,203 @@
+//! Cartesian topologies (`MPI_Cart_*`).
+
+use crate::comm::{Comm, PROC_NULL};
+use crate::{mpi_err, Result};
+
+/// `MPI_Dims_create`: factor `nnodes` into `ndims` balanced dimensions.
+/// Zeros in `dims` are free; nonzero entries are constraints.
+pub fn dims_create(nnodes: usize, dims: &mut [usize]) -> Result<()> {
+    let fixed: usize = dims.iter().filter(|&&d| d > 0).product::<usize>().max(1);
+    if nnodes % fixed != 0 {
+        return Err(mpi_err!(Dims, "nnodes {nnodes} not divisible by fixed dims product {fixed}"));
+    }
+    let rem = nnodes / fixed;
+    let free: Vec<usize> = (0..dims.len()).filter(|&i| dims[i] == 0).collect();
+    if free.is_empty() {
+        if rem != 1 {
+            return Err(mpi_err!(Dims, "dims fully constrained but product != nnodes"));
+        }
+        return Ok(());
+    }
+    // Greedy balanced factorization: repeatedly pull the largest prime
+    // factor into the currently smallest dimension.
+    let mut vals = vec![1usize; free.len()];
+    let mut factors = Vec::new();
+    let mut n = rem;
+    let mut f = 2;
+    while f * f <= n {
+        while n % f == 0 {
+            factors.push(f);
+            n /= f;
+        }
+        f += 1;
+    }
+    if n > 1 {
+        factors.push(n);
+    }
+    factors.sort_unstable_by(|a, b| b.cmp(a));
+    for f in factors {
+        let i = (0..vals.len()).min_by_key(|&i| vals[i]).unwrap();
+        vals[i] *= f;
+    }
+    vals.sort_unstable_by(|a, b| b.cmp(a)); // larger dims first, like MPICH
+    for (slot, v) in free.iter().zip(vals) {
+        dims[*slot] = v;
+    }
+    Ok(())
+}
+
+/// A communicator with cartesian topology attached.
+pub struct CartComm {
+    comm: Comm,
+    dims: Vec<usize>,
+    periods: Vec<bool>,
+}
+
+impl CartComm {
+    /// `MPI_Cart_create`. Ranks beyond the grid get `None`
+    /// (`MPI_COMM_NULL`). `reorder` is accepted but this implementation
+    /// keeps the identity mapping (legal: reordering is advisory).
+    pub fn create(comm: &Comm, dims: &[usize], periods: &[bool], _reorder: bool) -> Result<Option<CartComm>> {
+        if dims.is_empty() || dims.len() != periods.len() {
+            return Err(mpi_err!(Dims, "dims/periods must be nonempty and equal length"));
+        }
+        let total: usize = dims.iter().product();
+        if total > comm.size() {
+            return Err(mpi_err!(Topology, "grid of {total} exceeds communicator size {}", comm.size()));
+        }
+        let color = if comm.rank() < total { 0 } else { -1 };
+        let sub = comm.split(color, comm.rank() as i32)?;
+        Ok(sub.map(|comm| CartComm { comm, dims: dims.to_vec(), periods: periods.to_vec() }))
+    }
+
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    /// `MPI_Cartdim_get`.
+    pub fn ndims(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// `MPI_Cart_get`.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn periods(&self) -> &[bool] {
+        &self.periods
+    }
+
+    /// `MPI_Cart_coords` (row-major).
+    pub fn coords(&self, rank: usize) -> Result<Vec<usize>> {
+        if rank >= self.comm.size() {
+            return Err(mpi_err!(Rank, "rank {rank} outside cart comm"));
+        }
+        let mut c = vec![0usize; self.dims.len()];
+        let mut rem = rank;
+        for d in (0..self.dims.len()).rev() {
+            c[d] = rem % self.dims[d];
+            rem /= self.dims[d];
+        }
+        Ok(c)
+    }
+
+    /// `MPI_Cart_rank` (periodic wrap where allowed).
+    pub fn rank_of(&self, coords: &[i64]) -> Result<usize> {
+        if coords.len() != self.dims.len() {
+            return Err(mpi_err!(Dims, "coordinate dimensionality mismatch"));
+        }
+        let mut rank = 0usize;
+        for d in 0..self.dims.len() {
+            let n = self.dims[d] as i64;
+            let c = if self.periods[d] {
+                coords[d].rem_euclid(n)
+            } else {
+                if coords[d] < 0 || coords[d] >= n {
+                    return Err(mpi_err!(Rank, "coordinate {} out of non-periodic dim {d}", coords[d]));
+                }
+                coords[d]
+            };
+            rank = rank * self.dims[d] + c as usize;
+        }
+        Ok(rank)
+    }
+
+    /// `MPI_Cart_shift`: (source, dest) for a displacement along `dim`;
+    /// `PROC_NULL` at non-periodic edges.
+    pub fn shift(&self, dim: usize, disp: i64) -> Result<(i32, i32)> {
+        let my = self.coords(self.comm.rank())?;
+        let mut up = my.iter().map(|&c| c as i64).collect::<Vec<_>>();
+        let mut down = up.clone();
+        up[dim] += disp;
+        down[dim] -= disp;
+        let dest = self.rank_of(&up).map(|r| r as i32).unwrap_or(PROC_NULL);
+        let source = self.rank_of(&down).map(|r| r as i32).unwrap_or(PROC_NULL);
+        Ok((source, dest))
+    }
+
+    /// `MPI_Cart_sub`: keep the dimensions flagged true; one subgrid
+    /// communicator per combination of the dropped coordinates.
+    pub fn sub(&self, remain: &[bool]) -> Result<CartComm> {
+        if remain.len() != self.dims.len() {
+            return Err(mpi_err!(Dims, "remain_dims length mismatch"));
+        }
+        let my = self.coords(self.comm.rank())?;
+        // Color = dropped coordinates flattened; key = kept coords
+        // flattened (preserves row-major order inside the subgrid).
+        let mut color = 0i32;
+        let mut key = 0i32;
+        for d in 0..self.dims.len() {
+            if remain[d] {
+                key = key * self.dims[d] as i32 + my[d] as i32;
+            } else {
+                color = color * self.dims[d] as i32 + my[d] as i32;
+            }
+        }
+        let sub = self
+            .comm
+            .split(color, key)?
+            .ok_or_else(|| mpi_err!(Intern, "cart_sub split yielded null"))?;
+        let dims: Vec<usize> =
+            (0..self.dims.len()).filter(|&d| remain[d]).map(|d| self.dims[d]).collect();
+        let periods: Vec<bool> =
+            (0..self.dims.len()).filter(|&d| remain[d]).map(|d| self.periods[d]).collect();
+        Ok(CartComm { comm: sub, dims, periods })
+    }
+
+    /// Neighbor list in dimension order (-d, +d for each d): what the
+    /// cartesian neighborhood collectives iterate (`MPI_Neighbor_*`).
+    pub fn neighbors(&self) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(2 * self.dims.len());
+        for d in 0..self.dims.len() {
+            let (src, dst) = self.shift(d, 1)?;
+            out.push(src); // -d neighbor
+            out.push(dst); // +d neighbor
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_create_balances() {
+        let mut d = vec![0, 0];
+        dims_create(12, &mut d).unwrap();
+        assert_eq!(d.iter().product::<usize>(), 12);
+        assert_eq!(d, vec![4, 3]);
+
+        let mut d = vec![0, 0, 0];
+        dims_create(8, &mut d).unwrap();
+        assert_eq!(d, vec![2, 2, 2]);
+
+        let mut d = vec![3, 0];
+        dims_create(12, &mut d).unwrap();
+        assert_eq!(d, vec![3, 4]);
+
+        let mut d = vec![5, 0];
+        assert!(dims_create(12, &mut d).is_err());
+    }
+}

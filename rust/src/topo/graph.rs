@@ -1,0 +1,95 @@
+//! Graph and distributed-graph topologies (`MPI_Graph_*`,
+//! `MPI_Dist_graph_*`).
+
+use crate::comm::Comm;
+use crate::{mpi_err, Result};
+
+/// Classic graph topology: full adjacency replicated on every rank
+/// (`MPI_Graph_create` with `index`/`edges` arrays).
+pub struct GraphComm {
+    comm: Comm,
+    /// CSR-style: `index[i]` = end of rank i's neighbor list in `edges`.
+    index: Vec<usize>,
+    edges: Vec<usize>,
+}
+
+impl GraphComm {
+    pub fn create(comm: &Comm, index: &[usize], edges: &[usize], _reorder: bool) -> Result<Option<GraphComm>> {
+        let nnodes = index.len();
+        if nnodes == 0 || nnodes > comm.size() {
+            return Err(mpi_err!(Topology, "graph nnodes {nnodes} invalid for size {}", comm.size()));
+        }
+        if index.windows(2).any(|w| w[1] < w[0]) || *index.last().unwrap() != edges.len() {
+            return Err(mpi_err!(Arg, "graph index array malformed"));
+        }
+        if edges.iter().any(|&e| e >= nnodes) {
+            return Err(mpi_err!(Rank, "graph edge endpoint out of range"));
+        }
+        let color = if comm.rank() < nnodes { 0 } else { -1 };
+        let sub = comm.split(color, comm.rank() as i32)?;
+        Ok(sub.map(|comm| GraphComm { comm, index: index.to_vec(), edges: edges.to_vec() }))
+    }
+
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    /// `MPI_Graphdims_get`.
+    pub fn counts(&self) -> (usize, usize) {
+        (self.index.len(), self.edges.len())
+    }
+
+    /// `MPI_Graph_neighbors_count` / `MPI_Graph_neighbors`.
+    pub fn neighbors_of(&self, rank: usize) -> Result<&[usize]> {
+        if rank >= self.index.len() {
+            return Err(mpi_err!(Rank, "rank {rank} outside graph"));
+        }
+        let lo = if rank == 0 { 0 } else { self.index[rank - 1] };
+        Ok(&self.edges[lo..self.index[rank]])
+    }
+
+    pub fn neighbors(&self) -> Result<&[usize]> {
+        self.neighbors_of(self.comm.rank())
+    }
+}
+
+/// Distributed graph (`MPI_Dist_graph_create_adjacent`): each rank knows
+/// only its own in/out neighbor lists.
+pub struct DistGraphComm {
+    comm: Comm,
+    sources: Vec<usize>,
+    destinations: Vec<usize>,
+}
+
+impl DistGraphComm {
+    pub fn create_adjacent(
+        comm: &Comm,
+        sources: &[usize],
+        destinations: &[usize],
+        _reorder: bool,
+    ) -> Result<DistGraphComm> {
+        for &r in sources.iter().chain(destinations) {
+            if r >= comm.size() {
+                return Err(mpi_err!(Rank, "neighbor {r} outside communicator"));
+            }
+        }
+        Ok(DistGraphComm {
+            comm: comm.dup()?,
+            sources: sources.to_vec(),
+            destinations: destinations.to_vec(),
+        })
+    }
+
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    /// `MPI_Dist_graph_neighbors_count` / `_neighbors`.
+    pub fn sources(&self) -> &[usize] {
+        &self.sources
+    }
+
+    pub fn destinations(&self) -> &[usize] {
+        &self.destinations
+    }
+}

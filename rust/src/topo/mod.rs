@@ -1,0 +1,9 @@
+//! Process topologies (MPI-4.0 §8): cartesian grids, graphs, distributed
+//! graphs, and the neighborhood collectives over them.
+
+pub mod cart;
+pub mod graph;
+pub mod neighborhood;
+
+pub use cart::{dims_create, CartComm};
+pub use graph::{DistGraphComm, GraphComm};

@@ -1,0 +1,146 @@
+//! Neighborhood collectives (MPI-4.0 §8.9): allgather/alltoall over the
+//! topology's neighbor lists, expressed directly on nonblocking p2p (each
+//! is one shot of isends+irecvs with a reserved tag).
+
+use crate::comm::{Comm, PROC_NULL};
+use crate::datatype::Datatype;
+use crate::request::wait_all;
+use crate::Result;
+
+const NEIGHBOR_TAG: i32 = crate::comm::TAG_UB - 3;
+
+/// Generic engine: send `sbuf` to every destination, receive one block per
+/// source into `rbuf` (block i ← sources[i]).
+pub fn neighbor_allgather_lists(
+    comm: &Comm,
+    sources: &[i32],
+    destinations: &[i32],
+    sbuf: &[u8],
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcount: usize,
+    rdtype: &Datatype,
+) -> Result<()> {
+    let block = rcount * rdtype.extent() as usize;
+    let mut reqs = Vec::with_capacity(sources.len() + destinations.len());
+    // Receives first (block per source, in list order).
+    let mut rest = rbuf;
+    for &src in sources {
+        let (head, tail) = rest.split_at_mut(block.min(rest.len()));
+        rest = tail;
+        if src == PROC_NULL {
+            continue;
+        }
+        reqs.push(comm.irecv(head, rcount, rdtype, src, NEIGHBOR_TAG)?);
+    }
+    for &dst in destinations {
+        if dst == PROC_NULL {
+            continue;
+        }
+        reqs.push(comm.isend(sbuf, scount, sdtype, dst, NEIGHBOR_TAG)?);
+    }
+    wait_all(&reqs)?;
+    Ok(())
+}
+
+/// Generic engine: distinct block per destination (alltoall flavor).
+#[allow(clippy::too_many_arguments)]
+pub fn neighbor_alltoall_lists(
+    comm: &Comm,
+    sources: &[i32],
+    destinations: &[i32],
+    sbuf: &[u8],
+    scount: usize,
+    sdtype: &Datatype,
+    rbuf: &mut [u8],
+    rcount: usize,
+    rdtype: &Datatype,
+) -> Result<()> {
+    let sblock = scount * sdtype.extent() as usize;
+    let rblock = rcount * rdtype.extent() as usize;
+    let mut reqs = Vec::with_capacity(sources.len() + destinations.len());
+    let mut rest = rbuf;
+    for &src in sources {
+        let (head, tail) = rest.split_at_mut(rblock.min(rest.len()));
+        rest = tail;
+        if src == PROC_NULL {
+            continue;
+        }
+        reqs.push(comm.irecv(head, rcount, rdtype, src, NEIGHBOR_TAG)?);
+    }
+    for (i, &dst) in destinations.iter().enumerate() {
+        if dst == PROC_NULL {
+            continue;
+        }
+        let lo = i * sblock;
+        reqs.push(comm.isend(&sbuf[lo..lo + sblock], scount, sdtype, dst, NEIGHBOR_TAG)?);
+    }
+    wait_all(&reqs)?;
+    Ok(())
+}
+
+impl super::CartComm {
+    /// `MPI_Neighbor_allgather` on a cartesian grid: one block per
+    /// neighbor in (-d, +d) dimension order; PROC_NULL edges leave their
+    /// block untouched.
+    pub fn neighbor_allgather(
+        &self,
+        sbuf: &[u8],
+        scount: usize,
+        sdtype: &Datatype,
+        rbuf: &mut [u8],
+        rcount: usize,
+        rdtype: &Datatype,
+    ) -> Result<()> {
+        let n = self.neighbors()?;
+        neighbor_allgather_lists(self.comm(), &n, &n, sbuf, scount, sdtype, rbuf, rcount, rdtype)
+    }
+
+    /// `MPI_Neighbor_alltoall` on a cartesian grid (the halo-exchange
+    /// primitive: block i of the send buffer goes to neighbor i).
+    pub fn neighbor_alltoall(
+        &self,
+        sbuf: &[u8],
+        scount: usize,
+        sdtype: &Datatype,
+        rbuf: &mut [u8],
+        rcount: usize,
+        rdtype: &Datatype,
+    ) -> Result<()> {
+        let n = self.neighbors()?;
+        neighbor_alltoall_lists(self.comm(), &n, &n, sbuf, scount, sdtype, rbuf, rcount, rdtype)
+    }
+}
+
+impl super::DistGraphComm {
+    /// `MPI_Neighbor_allgather` over explicit adjacency.
+    pub fn neighbor_allgather(
+        &self,
+        sbuf: &[u8],
+        scount: usize,
+        sdtype: &Datatype,
+        rbuf: &mut [u8],
+        rcount: usize,
+        rdtype: &Datatype,
+    ) -> Result<()> {
+        let src: Vec<i32> = self.sources().iter().map(|&r| r as i32).collect();
+        let dst: Vec<i32> = self.destinations().iter().map(|&r| r as i32).collect();
+        neighbor_allgather_lists(self.comm(), &src, &dst, sbuf, scount, sdtype, rbuf, rcount, rdtype)
+    }
+
+    /// `MPI_Neighbor_alltoall` over explicit adjacency.
+    pub fn neighbor_alltoall(
+        &self,
+        sbuf: &[u8],
+        scount: usize,
+        sdtype: &Datatype,
+        rbuf: &mut [u8],
+        rcount: usize,
+        rdtype: &Datatype,
+    ) -> Result<()> {
+        let src: Vec<i32> = self.sources().iter().map(|&r| r as i32).collect();
+        let dst: Vec<i32> = self.destinations().iter().map(|&r| r as i32).collect();
+        neighbor_alltoall_lists(self.comm(), &src, &dst, sbuf, scount, sdtype, rbuf, rcount, rdtype)
+    }
+}

@@ -1,0 +1,205 @@
+//! The fabric: mailboxes + cost model + counters, shared by all ranks of a
+//! simulated job. One `Arc<Fabric>` exists per [`crate::universe::Universe`].
+
+use super::mailbox::Mailbox;
+use super::netmodel::NetworkModel;
+use super::nodemap::NodeMap;
+use super::packet::{Packet, PacketKind};
+use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Transport counters, exported as performance variables by the tool
+/// (`MPI_T`) component. All monotonically increasing unless noted.
+#[derive(Debug, Default)]
+pub struct FabricStats {
+    pub msgs_sent: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub eager_sent: AtomicU64,
+    pub rndv_sent: AtomicU64,
+    pub ctrl_sent: AtomicU64,
+    pub intra_node_msgs: AtomicU64,
+    pub inter_node_msgs: AtomicU64,
+    /// High-watermark of any mailbox depth observed at delivery.
+    pub mailbox_hwm: AtomicU64,
+}
+
+impl FabricStats {
+    fn record(&self, kind: &PacketKind, same_node: bool, depth: usize) {
+        self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(kind.payload_len() as u64, Ordering::Relaxed);
+        match kind {
+            PacketKind::Eager { .. } => self.eager_sent.fetch_add(1, Ordering::Relaxed),
+            PacketKind::Rts { .. } | PacketKind::RData { .. } => {
+                self.rndv_sent.fetch_add(1, Ordering::Relaxed)
+            }
+            _ => self.ctrl_sent.fetch_add(1, Ordering::Relaxed),
+        };
+        if same_node {
+            self.intra_node_msgs.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.inter_node_msgs.fetch_add(1, Ordering::Relaxed);
+        }
+        self.mailbox_hwm.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+}
+
+/// The shared interconnect of one simulated job.
+#[derive(Debug)]
+pub struct Fabric {
+    pub nodemap: NodeMap,
+    pub model: NetworkModel,
+    pub stats: FabricStats,
+    /// Wall epoch shared by every rank's hybrid clock.
+    pub epoch: Instant,
+    mailboxes: Vec<Mailbox>,
+    aborted: AtomicBool,
+    abort_code: AtomicI32,
+    /// Cross-rank shared-object registry (RMA window segments, shared
+    /// files): rank 0 of the creating communicator publishes under an
+    /// agreed key; peers fetch after a barrier.
+    registry: std::sync::Mutex<std::collections::HashMap<u64, std::sync::Arc<dyn std::any::Any + Send + Sync>>>,
+    /// The simulated parallel filesystem: path → (bytes, shared file
+    /// pointer). Shared by every rank of the job (MPI-IO chapter 14).
+    pub files: std::sync::Mutex<std::collections::HashMap<String, std::sync::Arc<FileNode>>>,
+}
+
+/// One file in the simulated filesystem.
+#[derive(Debug, Default)]
+pub struct FileNode {
+    pub data: std::sync::Mutex<Vec<u8>>,
+    /// The MPI-IO *shared* file pointer (bytes within the view's logical
+    /// space; the io layer interprets it).
+    pub shared_ptr: std::sync::Mutex<u64>,
+    /// Open handle count (drives FILE_IN_USE / delete semantics).
+    pub open_count: std::sync::atomic::AtomicU32,
+}
+
+impl Fabric {
+    pub fn new(nodemap: NodeMap, model: NetworkModel) -> Fabric {
+        let n = nodemap.nranks();
+        Fabric {
+            nodemap,
+            model,
+            stats: FabricStats::default(),
+            epoch: Instant::now(),
+            mailboxes: (0..n).map(|_| Mailbox::new()).collect(),
+            aborted: AtomicBool::new(false),
+            abort_code: AtomicI32::new(0),
+            registry: std::sync::Mutex::new(std::collections::HashMap::new()),
+            files: std::sync::Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Publish a shared object under `key` (see `registry` docs).
+    pub fn publish(&self, key: u64, obj: std::sync::Arc<dyn std::any::Any + Send + Sync>) {
+        self.registry.lock().unwrap().insert(key, obj);
+    }
+
+    /// Fetch a published shared object.
+    pub fn fetch(&self, key: u64) -> Option<std::sync::Arc<dyn std::any::Any + Send + Sync>> {
+        self.registry.lock().unwrap().get(&key).cloned()
+    }
+
+    /// Remove a published object (collective teardown).
+    pub fn unpublish(&self, key: u64) {
+        self.registry.lock().unwrap().remove(&key);
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    pub fn mailbox(&self, rank: usize) -> &Mailbox {
+        &self.mailboxes[rank]
+    }
+
+    /// Transmit `kind` from `from` to `to`. `now_vt` is the sender's hybrid
+    /// clock reading; the packet becomes observable at
+    /// `now_vt + α + β·payload`. Returns the departure time so the sender
+    /// can charge itself injection cost if desired.
+    pub fn send(&self, from: usize, to: usize, now_vt: f64, kind: PacketKind) -> f64 {
+        let same = self.nodemap.same_node(from, to);
+        let cost = self.model.cost_ns(kind.payload_len(), same);
+        let depart_vt = now_vt + cost;
+        self.stats.record(&kind, same, self.mailboxes[to].len() + 1);
+        self.mailboxes[to].push(Packet { src: from, depart_vt, kind });
+        depart_vt
+    }
+
+    /// `MPI_Abort` analog: mark the job failed so every rank's next
+    /// progress loop panics out (joined as an error by the universe).
+    pub fn abort(&self, code: i32) {
+        self.abort_code.store(code, Ordering::SeqCst);
+        self.aborted.store(true, Ordering::SeqCst);
+        // Wake everyone so blocked ranks notice.
+        for mb in &self.mailboxes {
+            mb.push(Packet {
+                src: usize::MAX,
+                depart_vt: 0.0,
+                kind: PacketKind::SsendAck { token: u64::MAX },
+            });
+        }
+    }
+
+    pub fn check_abort(&self) {
+        if self.aborted.load(Ordering::SeqCst) {
+            panic!("MPI_Abort called with code {}", self.abort_code.load(Ordering::SeqCst));
+        }
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> Fabric {
+        Fabric::new(NodeMap::new(2, 2), NetworkModel::omnipath())
+    }
+
+    #[test]
+    fn send_charges_alpha_beta() {
+        let f = fabric();
+        let now = 1_000.0;
+        // ranks 0,1 on node 0; rank 2 on node 1.
+        let d_intra =
+            f.send(0, 1, now, PacketKind::Eager { ctx: 0, tag: 0, data: vec![0; 100], sync_token: None });
+        let d_inter =
+            f.send(0, 2, now, PacketKind::Eager { ctx: 0, tag: 0, data: vec![0; 100], sync_token: None });
+        let m = NetworkModel::omnipath();
+        assert!((d_intra - (now + m.cost_ns(100, true))).abs() < 1e-9);
+        assert!((d_inter - (now + m.cost_ns(100, false))).abs() < 1e-9);
+        assert!(d_inter > d_intra);
+        assert_eq!(f.mailbox(1).len(), 1);
+        assert_eq!(f.mailbox(2).len(), 1);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let f = fabric();
+        f.send(0, 1, 0.0, PacketKind::Eager { ctx: 0, tag: 0, data: vec![0; 10], sync_token: None });
+        f.send(0, 2, 0.0, PacketKind::Rts { ctx: 0, tag: 0, nbytes: 1 << 20, token: 1, sync_token: None });
+        f.send(2, 0, 0.0, PacketKind::Cts { token: 1, recv_token: 9 });
+        assert_eq!(f.stats.msgs_sent.load(Ordering::Relaxed), 3);
+        assert_eq!(f.stats.bytes_sent.load(Ordering::Relaxed), 10);
+        assert_eq!(f.stats.eager_sent.load(Ordering::Relaxed), 1);
+        assert_eq!(f.stats.rndv_sent.load(Ordering::Relaxed), 1);
+        assert_eq!(f.stats.ctrl_sent.load(Ordering::Relaxed), 1);
+        assert_eq!(f.stats.intra_node_msgs.load(Ordering::Relaxed), 1);
+        assert_eq!(f.stats.inter_node_msgs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn abort_flags_all_ranks() {
+        let f = fabric();
+        assert!(!f.is_aborted());
+        f.abort(3);
+        assert!(f.is_aborted());
+        for r in 0..f.nranks() {
+            assert!(!f.mailbox(r).is_empty());
+        }
+    }
+}

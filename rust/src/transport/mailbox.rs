@@ -1,0 +1,114 @@
+//! Per-rank delivery queue: a Mutex-protected FIFO with a Condvar for
+//! blocking waits. FIFO order per sender is what gives the matching engine
+//! the standard's non-overtaking guarantee.
+
+use super::packet::Packet;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct Mailbox {
+    q: Mutex<VecDeque<Packet>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    pub fn new() -> Mailbox {
+        Mailbox::default()
+    }
+
+    /// Deliver a packet (called from any rank thread).
+    pub fn push(&self, pkt: Packet) {
+        let mut q = self.q.lock().unwrap();
+        q.push_back(pkt);
+        drop(q);
+        self.cv.notify_one();
+    }
+
+    /// Take everything currently queued (non-blocking). Appends to `out`
+    /// to let the caller reuse its scratch vector.
+    pub fn drain_into(&self, out: &mut Vec<Packet>) {
+        let mut q = self.q.lock().unwrap();
+        out.extend(q.drain(..));
+    }
+
+    /// Block until at least one packet is queued or `timeout` elapses,
+    /// then take everything. Returns the number of packets taken.
+    pub fn wait_drain_into(&self, out: &mut Vec<Packet>, timeout: Duration) -> usize {
+        let mut q = self.q.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _res) = self.cv.wait_timeout_while(q, timeout, |q| q.is_empty()).unwrap();
+            q = guard;
+        }
+        let n = q.len();
+        out.extend(q.drain(..));
+        n
+    }
+
+    /// Number of queued packets (tool pvar: receive-queue depth).
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::packet::PacketKind;
+    use super::*;
+    use std::sync::Arc;
+
+    fn pkt(src: usize, tag: i32) -> Packet {
+        Packet {
+            src,
+            depart_vt: 0.0,
+            kind: PacketKind::Eager { ctx: 0, tag, data: vec![], sync_token: None },
+        }
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mb = Mailbox::new();
+        for i in 0..5 {
+            mb.push(pkt(0, i));
+        }
+        let mut out = Vec::new();
+        mb.drain_into(&mut out);
+        let tags: Vec<i32> = out
+            .iter()
+            .map(|p| match &p.kind {
+                PacketKind::Eager { tag, .. } => *tag,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(tags, vec![0, 1, 2, 3, 4]);
+        assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn wait_drain_times_out_when_empty() {
+        let mb = Mailbox::new();
+        let mut out = Vec::new();
+        let n = mb.wait_drain_into(&mut out, Duration::from_millis(5));
+        assert_eq!(n, 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn wait_drain_wakes_on_push() {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            mb2.push(pkt(1, 42));
+        });
+        let mut out = Vec::new();
+        let n = mb.wait_drain_into(&mut out, Duration::from_secs(5));
+        assert_eq!(n, 1);
+        t.join().unwrap();
+    }
+}

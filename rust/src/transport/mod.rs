@@ -1,0 +1,34 @@
+//! The simulated interconnect ("the cluster").
+//!
+//! The paper ran on CLAIX-2018: 2×24-core Skylake nodes on an Omni-Path
+//! RDMA fabric, with node counts 1–16. This module replaces that testbed:
+//!
+//! * [`nodemap`] — places ranks onto simulated nodes (block distribution,
+//!   `ppn` ranks per node), so intra- vs inter-node transfers differ.
+//! * [`netmodel`] — the α–β (latency/bandwidth) cost model with separate
+//!   intra-node (shared-memory-class) and inter-node (Omni-Path-class)
+//!   parameters, plus the eager/rendezvous protocol threshold.
+//! * [`clock`] — per-rank *hybrid Lamport clocks*: real wall time (the
+//!   software path length whose overhead the paper measures) plus a
+//!   monotone virtual offset advanced by message causality. This machine
+//!   has a single CPU core, so physically sleeping/spinning for network
+//!   delays would measure the OS scheduler, not the network; virtual time
+//!   keeps the model deterministic under oversubscription.
+//! * [`packet`] / [`mailbox`] — the wire format and per-rank delivery
+//!   queues (Mutex + Condvar).
+//! * [`fabric`] — ties the above together and keeps transport-level
+//!   counters exported through the tool (`MPI_T`) interface.
+
+pub mod clock;
+pub mod fabric;
+pub mod mailbox;
+pub mod netmodel;
+pub mod nodemap;
+pub mod packet;
+
+pub use clock::VClock;
+pub use fabric::{Fabric, FabricStats};
+pub use mailbox::Mailbox;
+pub use netmodel::NetworkModel;
+pub use nodemap::NodeMap;
+pub use packet::{Packet, PacketKind};

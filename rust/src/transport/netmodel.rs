@@ -1,0 +1,108 @@
+//! The α–β network cost model.
+//!
+//! A transfer of `n` bytes costs `α + β·n` virtual nanoseconds, with
+//! separate (α, β) for intra-node (shared-memory-class) and inter-node
+//! (Omni-Path-class) paths. The defaults are calibrated to the paper's
+//! testbed class: Omni-Path 100 Gb/s ≈ 12.3 GB/s payload bandwidth with
+//! ~1.5 µs MPI-level latency; intra-node shared memory ≈ 40 GB/s with
+//! ~0.3 µs latency.
+//!
+//! The eager/rendezvous threshold is part of the model because it changes
+//! the number of wire crossings (rendezvous = RTS + CTS + DATA), which is
+//! what produces the visible protocol "knee" in message-length sweeps.
+
+/// Cost parameters. All tunable through the tool interface (cvars).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Intra-node latency per message, ns.
+    pub alpha_intra_ns: f64,
+    /// Intra-node cost per byte, ns/B.
+    pub beta_intra_ns_per_b: f64,
+    /// Inter-node latency per message, ns.
+    pub alpha_inter_ns: f64,
+    /// Inter-node cost per byte, ns/B.
+    pub beta_inter_ns_per_b: f64,
+    /// Messages with payload ≤ this go eagerly; larger ones use the
+    /// RTS/CTS rendezvous protocol.
+    pub eager_threshold: usize,
+}
+
+impl NetworkModel {
+    /// Omni-Path-class defaults (the paper's CLAIX-2018 interconnect).
+    pub fn omnipath() -> NetworkModel {
+        NetworkModel {
+            alpha_intra_ns: 300.0,
+            beta_intra_ns_per_b: 1.0 / 40.0, // 40 GB/s
+            alpha_inter_ns: 1_500.0,
+            beta_inter_ns_per_b: 1.0 / 12.3, // 12.3 GB/s
+            eager_threshold: 64 * 1024,
+        }
+    }
+
+    /// Zero-cost model: virtual time never advances ahead of wall time.
+    /// Used by correctness tests so they exercise pure software paths.
+    pub fn zero() -> NetworkModel {
+        NetworkModel {
+            alpha_intra_ns: 0.0,
+            beta_intra_ns_per_b: 0.0,
+            alpha_inter_ns: 0.0,
+            beta_inter_ns_per_b: 0.0,
+            eager_threshold: 64 * 1024,
+        }
+    }
+
+    /// Cost in virtual ns of moving `bytes` between `from`-side and
+    /// `to`-side of the fabric.
+    #[inline]
+    pub fn cost_ns(&self, bytes: usize, same_node: bool) -> f64 {
+        if same_node {
+            self.alpha_intra_ns + self.beta_intra_ns_per_b * bytes as f64
+        } else {
+            self.alpha_inter_ns + self.beta_inter_ns_per_b * bytes as f64
+        }
+    }
+
+    /// Whether a payload of `bytes` is sent eagerly.
+    #[inline]
+    pub fn is_eager(&self, bytes: usize) -> bool {
+        bytes <= self.eager_threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inter_node_costs_more() {
+        let m = NetworkModel::omnipath();
+        for bytes in [0usize, 64, 4096, 1 << 17] {
+            assert!(m.cost_ns(bytes, false) > m.cost_ns(bytes, true), "bytes={bytes}");
+        }
+    }
+
+    #[test]
+    fn alpha_dominates_small_beta_dominates_large() {
+        let m = NetworkModel::omnipath();
+        // Small message: cost ≈ alpha.
+        let small = m.cost_ns(8, false);
+        assert!((small - m.alpha_inter_ns) / m.alpha_inter_ns < 0.01);
+        // Large message: cost dominated by beta term.
+        let large = m.cost_ns(1 << 20, false);
+        assert!(large > 10.0 * m.alpha_inter_ns);
+    }
+
+    #[test]
+    fn eager_threshold_respected() {
+        let m = NetworkModel::omnipath();
+        assert!(m.is_eager(64 * 1024));
+        assert!(!m.is_eager(64 * 1024 + 1));
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        let m = NetworkModel::zero();
+        assert_eq!(m.cost_ns(1 << 20, false), 0.0);
+        assert_eq!(m.cost_ns(0, true), 0.0);
+    }
+}

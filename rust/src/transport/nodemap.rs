@@ -1,0 +1,65 @@
+//! Rank → node placement for the simulated cluster.
+
+/// Block placement of `nranks` onto `nodes` nodes with `ppn` ranks per
+/// node (the common `--ntasks-per-node` launcher layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeMap {
+    pub nodes: usize,
+    pub ppn: usize,
+}
+
+impl NodeMap {
+    pub fn new(nodes: usize, ppn: usize) -> NodeMap {
+        assert!(nodes > 0 && ppn > 0, "need at least one node and one rank per node");
+        NodeMap { nodes, ppn }
+    }
+
+    /// Total ranks in the job.
+    pub fn nranks(&self) -> usize {
+        self.nodes * self.ppn
+    }
+
+    /// Which node a (world) rank lives on.
+    pub fn node_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.nranks());
+        rank / self.ppn
+    }
+
+    /// Whether two ranks share a node (→ intra-node transfer cost).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_placement() {
+        let m = NodeMap::new(4, 3);
+        assert_eq!(m.nranks(), 12);
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(2), 0);
+        assert_eq!(m.node_of(3), 1);
+        assert_eq!(m.node_of(11), 3);
+        assert!(m.same_node(0, 2));
+        assert!(!m.same_node(2, 3));
+    }
+
+    #[test]
+    fn single_node_everything_intra() {
+        let m = NodeMap::new(1, 8);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert!(m.same_node(a, b));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_nodes_rejected() {
+        NodeMap::new(0, 2);
+    }
+}

@@ -1,0 +1,85 @@
+//! Wire format of the simulated fabric.
+//!
+//! Three protocols cross the wire, mirroring a real MPI transport:
+//!
+//! * **Eager** — payload inline, one crossing. Used for payloads up to the
+//!   eager threshold and for all internal control messages (collective
+//!   steps, barrier tokens, IO coordination).
+//! * **Rendezvous** — RTS (header only) → CTS (from the matching receiver)
+//!   → RData (payload to the already-matched receive). Three crossings;
+//!   the payload stays at the sender until the receive buffer is known.
+//! * **SsendAck** — completes a synchronous-mode send when its message has
+//!   been matched, regardless of protocol.
+
+/// A packet in flight.
+#[derive(Debug)]
+pub struct Packet {
+    /// World rank of the sender.
+    pub src: usize,
+    /// Hybrid time (ns) at which the packet becomes observable at the
+    /// destination; the receiver's clock advances to this on processing.
+    pub depart_vt: f64,
+    pub kind: PacketKind,
+}
+
+/// Packet payloads.
+#[derive(Debug)]
+pub enum PacketKind {
+    /// Eager message: `data` is the packed payload.
+    Eager {
+        /// Communicator context id (p2p or collective context).
+        ctx: u32,
+        tag: i32,
+        data: Vec<u8>,
+        /// For synchronous-mode sends: token the receiver must ack.
+        sync_token: Option<u64>,
+    },
+    /// Rendezvous request-to-send (header only).
+    Rts { ctx: u32, tag: i32, nbytes: usize, token: u64, sync_token: Option<u64> },
+    /// Clear-to-send: receiver matched RTS `token`; ship payload to
+    /// `recv_token`.
+    Cts { token: u64, recv_token: u64 },
+    /// Rendezvous payload for the posted receive `recv_token`.
+    RData { recv_token: u64, data: Vec<u8> },
+    /// The message carrying `token` (a synchronous send) was matched.
+    SsendAck { token: u64 },
+}
+
+impl PacketKind {
+    /// Payload size used for cost accounting (headers are charged as α).
+    pub fn payload_len(&self) -> usize {
+        match self {
+            PacketKind::Eager { data, .. } | PacketKind::RData { data, .. } => data.len(),
+            _ => 0,
+        }
+    }
+
+    /// Short label for tracing / pvar classification.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PacketKind::Eager { .. } => "eager",
+            PacketKind::Rts { .. } => "rts",
+            PacketKind::Cts { .. } => "cts",
+            PacketKind::RData { .. } => "rdata",
+            PacketKind::SsendAck { .. } => "ssend_ack",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_len_per_kind() {
+        let e = PacketKind::Eager { ctx: 0, tag: 1, data: vec![0; 10], sync_token: None };
+        assert_eq!(e.payload_len(), 10);
+        assert_eq!(e.label(), "eager");
+        let r = PacketKind::Rts { ctx: 0, tag: 1, nbytes: 1 << 20, token: 7, sync_token: None };
+        assert_eq!(r.payload_len(), 0);
+        let d = PacketKind::RData { recv_token: 3, data: vec![0; 5] };
+        assert_eq!(d.payload_len(), 5);
+        assert_eq!(PacketKind::Cts { token: 1, recv_token: 2 }.payload_len(), 0);
+        assert_eq!(PacketKind::SsendAck { token: 1 }.payload_len(), 0);
+    }
+}

@@ -1,0 +1,151 @@
+//! The job launcher: spawns one OS thread per simulated rank, builds
+//! `MPI_COMM_WORLD`, runs an SPMD closure on every rank and joins.
+//!
+//! A [`Universe`] describes a *cluster shape* (nodes × ranks-per-node and a
+//! network model); every [`Universe::run`] is one job on a fresh fabric.
+
+use crate::comm::Comm;
+use crate::p2p::RankCtx;
+use crate::transport::{Fabric, NetworkModel, NodeMap};
+use std::sync::Arc;
+
+/// A simulated cluster allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct Universe {
+    pub nodemap: NodeMap,
+    pub model: NetworkModel,
+}
+
+impl Universe {
+    /// `nodes` × `ppn` ranks on the Omni-Path-class model (the paper's
+    /// CLAIX-2018 shape), with any MPI_T cvar overrides applied.
+    pub fn new(nodes: usize, ppn: usize) -> Universe {
+        let mut model = NetworkModel::omnipath();
+        crate::tool::cvar::apply_model_overrides(&mut model);
+        Universe { nodemap: NodeMap::new(nodes, ppn), model }
+    }
+
+    /// Custom network model.
+    pub fn with_model(nodes: usize, ppn: usize, model: NetworkModel) -> Universe {
+        Universe { nodemap: NodeMap::new(nodes, ppn), model }
+    }
+
+    /// Single-node job with the zero-cost model: what correctness tests
+    /// use (no virtual-time effects, pure software paths).
+    pub fn test(nranks: usize) -> Universe {
+        Universe { nodemap: NodeMap::new(1, nranks), model: NetworkModel::zero() }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nodemap.nranks()
+    }
+
+    /// Run one SPMD job: `f` executes on every rank with its
+    /// `MPI_COMM_WORLD`; returns the per-rank results in rank order.
+    /// A panic on any rank is propagated (after all threads are joined).
+    pub fn run<T: Send>(&self, f: impl Fn(&Comm) -> T + Send + Sync) -> Vec<T> {
+        let n = self.nranks();
+        let fabric = Arc::new(Fabric::new(self.nodemap, self.model));
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let fabric = fabric.clone();
+                    let f = &f;
+                    s.spawn(move || {
+                        let ctx = RankCtx::new(r, fabric);
+                        let comm = Comm::world(ctx);
+                        f(&comm)
+                    })
+                })
+                .collect();
+            let mut results = Vec::with_capacity(n);
+            let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+            for h in handles {
+                match h.join() {
+                    Ok(v) => results.push(v),
+                    Err(e) => {
+                        if panic.is_none() {
+                            panic = Some(e);
+                        }
+                    }
+                }
+            }
+            if let Some(p) = panic {
+                std::panic::resume_unwind(p);
+            }
+            results
+        })
+    }
+
+    /// Run and also return the fabric statistics of the job (used by tool
+    /// tests and the benchmark reports).
+    pub fn run_with_stats<T: Send>(
+        &self,
+        f: impl Fn(&Comm) -> T + Send + Sync,
+    ) -> (Vec<T>, Arc<Fabric>) {
+        let n = self.nranks();
+        let fabric = Arc::new(Fabric::new(self.nodemap, self.model));
+        let out = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let fabric = fabric.clone();
+                    let f = &f;
+                    s.spawn(move || {
+                        let ctx = RankCtx::new(r, fabric);
+                        let comm = Comm::world(ctx);
+                        f(&comm)
+                    })
+                })
+                .collect();
+            let mut results = Vec::with_capacity(n);
+            let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+            for h in handles {
+                match h.join() {
+                    Ok(v) => results.push(v),
+                    Err(e) => {
+                        if panic.is_none() {
+                            panic = Some(e);
+                        }
+                    }
+                }
+            }
+            if let Some(p) = panic {
+                std::panic::resume_unwind(p);
+            }
+            results
+        });
+        (out, fabric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_identity() {
+        let u = Universe::test(4);
+        let ranks = u.run(|comm| (comm.rank(), comm.size()));
+        assert_eq!(ranks, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn fresh_fabric_per_run() {
+        let u = Universe::test(2);
+        for _ in 0..3 {
+            let sums = u.run(|comm| comm.rank());
+            assert_eq!(sums, vec![0, 1]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rank boom")]
+    fn rank_panic_propagates() {
+        let u = Universe::test(2);
+        u.run(|comm| {
+            if comm.rank() == 1 {
+                panic!("rank boom");
+            }
+        });
+    }
+}

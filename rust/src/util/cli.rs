@@ -1,0 +1,158 @@
+//! A minimal command-line argument parser (no `clap` in this offline
+//! environment). Supports subcommands, `--flag`, `--key value`,
+//! `--key=value` and positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for help generation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments: flags, key→value options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program/subcommand name) against a spec.
+    /// Unknown `--options` are errors so typos fail loudly.
+    pub fn parse(raw: &[String], spec: &[OptSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let s = spec
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}"))?;
+                if s.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?
+                            .clone(),
+                    };
+                    out.options.insert(key, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    out.flags.push(key);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        for s in spec {
+            if let (true, Some(d)) = (s.takes_value, s.default) {
+                out.options.entry(s.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self.get(name).ok_or_else(|| format!("missing --{name}"))?;
+        v.parse::<T>().map_err(|e| format!("--{name}={v}: {e}"))
+    }
+
+    /// Parse a comma-separated list of T, e.g. `--nodes 1,2,4,8,16`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self.get(name).ok_or_else(|| format!("missing --{name}"))?;
+        v.split(',')
+            .map(|s| s.trim().parse::<T>().map_err(|e| format!("--{name}: '{s}': {e}")))
+            .collect()
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn help(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in spec {
+        let val = if o.takes_value { " <value>" } else { "" };
+        let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  --{}{}\n      {}{}\n", o.name, val, o.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "nodes", takes_value: true, default: Some("4"), help: "node count" },
+            OptSpec { name: "verbose", takes_value: false, default: None, help: "chatty" },
+            OptSpec { name: "out", takes_value: true, default: None, help: "output path" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_equals() {
+        let a = Args::parse(&sv(&["--nodes", "8", "--out=x.csv", "pos1"]), &spec()).unwrap();
+        assert_eq!(a.get("nodes"), Some("8"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &spec()).unwrap();
+        assert_eq!(a.get_parsed::<u32>("nodes").unwrap(), 4);
+        assert_eq!(a.get("out"), None);
+    }
+
+    #[test]
+    fn flags_and_unknown() {
+        let a = Args::parse(&sv(&["--verbose"]), &spec()).unwrap();
+        assert!(a.flag("verbose"));
+        assert!(Args::parse(&sv(&["--nope"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--out"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = Args::parse(&sv(&["--nodes", "1,2,4"]), &spec()).unwrap();
+        assert_eq!(a.get_list::<usize>("nodes").unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = help("bench", "run benchmarks", &spec());
+        assert!(h.contains("--nodes"));
+        assert!(h.contains("default: 4"));
+    }
+}

@@ -1,0 +1,137 @@
+//! A small benchmarking harness (no `criterion` in this offline
+//! environment). `cargo bench` targets use `harness = false` and drive this
+//! directly. It performs warmup, calibrates an iteration count to a target
+//! sample time, collects per-sample means and reports summary statistics.
+
+use super::stats::{self, Summary};
+use super::timing::{fmt_ns, Stopwatch};
+
+/// One benchmark's collected result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Mean ns/iter per sample.
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_ns)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_s: f64,
+    pub sample_s: f64,
+    pub samples: usize,
+    /// Cap on iterations per sample (for expensive bodies).
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_s: 0.2, sample_s: 0.05, samples: 12, max_iters: 1 << 24 }
+    }
+}
+
+/// Quick config for CI-sized runs (used by `cargo bench` targets so the
+/// whole suite stays under a couple of minutes).
+pub fn quick() -> BenchConfig {
+    BenchConfig { warmup_s: 0.05, sample_s: 0.02, samples: 6, max_iters: 1 << 22 }
+}
+
+/// A named collection of benchmarks that prints criterion-like lines.
+pub struct Bench {
+    cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(cfg: BenchConfig) -> Self {
+        Bench { cfg, results: Vec::new() }
+    }
+
+    /// Benchmark a closure. The closure's return value is black-boxed to
+    /// keep the optimizer honest.
+    pub fn run<T>(&mut self, name: &str, mut body: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + calibration: find iters such that one sample ≈ sample_s.
+        let sw = Stopwatch::start();
+        let mut iters: u64 = 1;
+        let mut elapsed;
+        loop {
+            let s = Stopwatch::start();
+            for _ in 0..iters {
+                std::hint::black_box(body());
+            }
+            elapsed = s.elapsed_s();
+            if sw.elapsed_s() >= self.cfg.warmup_s && elapsed >= self.cfg.sample_s / 2.0 {
+                break;
+            }
+            if elapsed < self.cfg.sample_s / 2.0 && iters < self.cfg.max_iters {
+                let growth = if elapsed <= 0.0 {
+                    8.0
+                } else {
+                    (self.cfg.sample_s / elapsed).clamp(1.5, 8.0)
+                };
+                iters = ((iters as f64 * growth) as u64).min(self.cfg.max_iters);
+            }
+        }
+        // Measurement.
+        let mut samples = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let s = Stopwatch::start();
+            for _ in 0..iters {
+                std::hint::black_box(body());
+            }
+            samples.push(s.elapsed_ns() as f64 / iters as f64);
+        }
+        let res = BenchResult { name: name.to_string(), samples_ns: samples, iters_per_sample: iters };
+        let sum = res.summary();
+        println!(
+            "bench {:<56} {:>12}/iter  (±{:>10}, n={}, iters={})",
+            res.name,
+            fmt_ns(sum.mean),
+            fmt_ns(sum.stddev),
+            sum.n,
+            res.iters_per_sample
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Ratio of two named results' means (for overhead reporting).
+    pub fn ratio(&self, num: &str, den: &str) -> Option<f64> {
+        let n = self.results.iter().find(|r| r.name == num)?.mean_ns();
+        let d = self.results.iter().find(|r| r.name == den)?.mean_ns();
+        Some(n / d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_orders_costs() {
+        let mut b = Bench::new(BenchConfig {
+            warmup_s: 0.01,
+            sample_s: 0.005,
+            samples: 4,
+            max_iters: 1 << 20,
+        });
+        b.run("cheap", || 1u64 + 1);
+        b.run("expensive", || (0..2000u64).map(std::hint::black_box).sum::<u64>());
+        let cheap = b.results[0].mean_ns();
+        let exp = b.results[1].mean_ns();
+        assert!(exp > cheap * 5.0, "cheap={cheap} expensive={exp}");
+        let r = b.ratio("expensive", "cheap").unwrap();
+        assert!(r > 5.0);
+    }
+}

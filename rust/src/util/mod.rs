@@ -1,0 +1,11 @@
+//! Support utilities built in-repo (this environment has no network access,
+//! so `rand`, `clap`, `criterion` and `proptest` are replaced by the small
+//! purpose-built implementations below — see DESIGN.md §8).
+
+pub mod rng;
+pub mod stats;
+pub mod timing;
+pub mod cli;
+pub mod prop;
+pub mod microbench;
+pub mod table;

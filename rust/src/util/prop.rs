@@ -1,0 +1,158 @@
+//! A tiny property-based testing harness (no `proptest` in this offline
+//! environment). Runs a property over many seeded random cases and, on
+//! failure, performs greedy input shrinking via user-provided simplifiers.
+//!
+//! Used by the integration tests for datatype pack/unpack roundtrips, group
+//! algebra, matching-order invariants and collective-vs-oracle checks.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xFE44_0401, max_shrink_steps: 256 }
+    }
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`. On the first
+/// failing input, greedily shrink with `shrink` (which yields candidate
+/// simplifications) and panic with the minimal failing case.
+pub fn check<T, G, P, S>(cfg: Config, mut gen: G, mut prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    if steps >= cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {}):\n  input (shrunk): {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check_no_shrink<T, G, P>(cfg: Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(cfg, gen, prop, |_| Vec::new());
+}
+
+/// Standard shrinker for vectors: try removing halves, single elements, and
+/// simplifying elements to a "smaller" value.
+pub fn shrink_vec<T: Clone>(xs: &[T], simplify_elem: impl Fn(&T) -> Option<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(xs[..n / 2].to_vec());
+    out.push(xs[n / 2..].to_vec());
+    if n <= 16 {
+        for i in 0..n {
+            let mut v = xs.to_vec();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..n {
+            if let Some(s) = simplify_elem(&xs[i]) {
+                let mut v = xs.to_vec();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+    }
+    out
+}
+
+/// Standard shrinker for unsigned sizes: 0, halves, decrement.
+pub fn shrink_usize(x: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > 0 {
+        out.push(0);
+        out.push(x / 2);
+        out.push(x - 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check_no_shrink(
+            Config { cases: 64, ..Default::default() },
+            |r| r.range(0, 100),
+            |&x| if x < 100 { Ok(()) } else { Err("out of range".into()) },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        // Property: all vectors have length < 10. Generator produces
+        // length 0..32; the shrinker should find something close to len 10.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config { cases: 200, seed: 11, max_shrink_steps: 500 },
+                |r| {
+                    let n = r.range(0, 32);
+                    (0..n).map(|i| i as u32).collect::<Vec<u32>>()
+                },
+                |v| if v.len() < 10 { Ok(()) } else { Err(format!("len {}", v.len())) },
+                |v| shrink_vec(v, |_| None),
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // The shrunk failing input should be exactly length 10 (minimal).
+        assert!(msg.contains("len 10"), "shrinking did not minimize: {msg}");
+    }
+
+    #[test]
+    fn shrink_usize_monotone() {
+        for x in [1usize, 2, 17, 1024] {
+            for s in shrink_usize(x) {
+                assert!(s < x);
+            }
+        }
+        assert!(shrink_usize(0).is_empty());
+    }
+}

@@ -1,0 +1,109 @@
+//! CSV and aligned-markdown table writers for benchmark reports
+//! (the Figure 1 regeneration emits both).
+
+use std::io::Write;
+use std::path::Path;
+
+/// An in-memory table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Render as CSV (RFC-4180-ish; quotes fields containing separators).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let esc = |f: &str| {
+            if f.contains(',') || f.contains('"') || f.contains('\n') {
+                format!("\"{}\"", f.replace('"', "\"\""))
+            } else {
+                f.to_string()
+            }
+        };
+        s.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.iter().map(|f| esc(f)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Render as an aligned GitHub-flavored markdown table.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, f) in r.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        let mut s = fmt_row(&self.header);
+        s.push('|');
+        for w in &widths {
+            s.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&fmt_row(r));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["x,y".into(), "pla\"in".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n\"x,y\",\"pla\"\"in\"\n");
+    }
+
+    #[test]
+    fn markdown_aligns() {
+        let mut t = Table::new(&["op", "ns"]);
+        t.push(vec!["barrier".into(), "120".into()]);
+        t.push(vec!["bcast".into(), "7".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| op      | ns  |"), "{md}");
+        assert!(md.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut t = Table::new(&["a"]);
+        t.push(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,103 @@
+//! Wall-clock helpers (`MPI_Wtime` analog) and a simulated-time clock used
+//! by the fabric's network model.
+//!
+//! The fabric charges α–β costs in *virtual* nanoseconds accumulated per
+//! rank (see [`crate::transport::netmodel`]); real wall time is used for the
+//! measurement loops themselves, exactly like mpiBench's `MPI_Wtime` deltas.
+
+use std::time::Instant;
+
+/// Process-global epoch so `wtime()` is comparable across rank threads.
+static EPOCH: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+
+/// `MPI_Wtime` analog: seconds since a process-global epoch.
+pub fn wtime() -> f64 {
+    EPOCH.elapsed().as_secs_f64()
+}
+
+/// `MPI_Wtick` analog: the resolution of `wtime` (Instant is nanosecond
+/// resolution on Linux).
+pub fn wtick() -> f64 {
+    1e-9
+}
+
+/// A simple stopwatch for benchmark loops.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Format a nanosecond quantity human-readably (for reports).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Format a byte count with binary prefixes (for message-length axes).
+pub fn fmt_bytes(b: usize) -> String {
+    if b < 1024 {
+        format!("{b} B")
+    } else if b < 1024 * 1024 {
+        format!("{} KiB", b / 1024)
+    } else {
+        format!("{} MiB", b / (1024 * 1024))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wtime_monotonic() {
+        let a = wtime();
+        let b = wtime();
+        assert!(b >= a);
+        assert!(wtick() > 0.0);
+    }
+
+    #[test]
+    fn stopwatch_measures() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+        assert!(sw.elapsed_ns() >= 4_000_000);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(512.0), "512 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 us");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3 MiB");
+    }
+}

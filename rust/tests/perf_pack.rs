@@ -1,0 +1,26 @@
+// one-off micro measurement for EXPERIMENTS.md §Perf
+use ferrompi::datatype::{pack, pack_into, pack_size, Primitive, TypeMap};
+use ferrompi::util::microbench::{quick, Bench};
+
+#[test]
+fn perf_pack_vs_pack_into() {
+    let map = TypeMap::primitive(Primitive::F32);
+    for count in [4096usize, 131072] {
+        let src = vec![1u8; count * 4];
+        let mut b = Bench::new(quick());
+        b.run(&format!("pack (alloc+copy) {count} f32"), || {
+            let mut out = Vec::with_capacity(pack_size(&map, count));
+            pack(&map, &src, count, &mut out).unwrap();
+            out.len()
+        });
+        let mut arena = vec![0u8; count * 4];
+        b.run(&format!("pack_into (in-place) {count} f32"), || {
+            pack_into(&map, &src, count, &mut arena).unwrap();
+            arena[0]
+        });
+        let r = b
+            .ratio(&format!("pack_into (in-place) {count} f32"), &format!("pack (alloc+copy) {count} f32"))
+            .unwrap();
+        println!("pack_into/pack at {count}: {r:.3}");
+    }
+}

@@ -1,0 +1,509 @@
+//! Integration tests: one-sided, IO, tool, topologies, sessions,
+//! partitioned p2p, failure injection, and the XLA-offloaded reduction.
+
+use ferrompi::collective;
+use ferrompi::comm::ANY_TAG;
+use ferrompi::datatype::{Datatype, Primitive, TypeMap};
+use ferrompi::error::ErrorHandler;
+use ferrompi::io::{AccessMode, File};
+use ferrompi::modern::{Communicator, LockType, ReduceOp, RmaWindow};
+use ferrompi::op::{Op, OpKind};
+use ferrompi::p2p::partitioned::{PrecvRequest, PsendRequest};
+use ferrompi::session::Session;
+use ferrompi::tool;
+use ferrompi::topo::{dims_create, CartComm, DistGraphComm, GraphComm};
+use ferrompi::universe::Universe;
+use ferrompi::ErrorClass;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn i32t() -> Datatype {
+    Datatype::primitive(Primitive::I32)
+}
+
+fn as_b(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn as_bm(v: &mut [i32]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4) }
+}
+
+// ---------------- one-sided ----------------
+
+#[test]
+fn rma_put_get_accumulate_fence() {
+    Universe::test(4).run(|world| {
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, 8).unwrap();
+        let r = world.rank();
+        win.fence().unwrap();
+        // Everyone puts its rank into slot r of rank 0.
+        win.put(&(r as i64 * 10), 0, r).unwrap();
+        win.fence().unwrap();
+        if r == 0 {
+            let local = win.with_local(|m| m.to_vec());
+            assert_eq!(&local[..4], &[0, 10, 20, 30]);
+        }
+        // Accumulate into a shared slot under exclusive locks.
+        win.lock(LockType::Exclusive, 0).unwrap();
+        win.accumulate(&1i64, 0, 7, ReduceOp::Sum).unwrap();
+        win.unlock(0).unwrap();
+        win.fence().unwrap();
+        assert_eq!(win.get(0, 7).unwrap(), 4);
+        // fetch_and_op returns old values — everyone gets a distinct one.
+        let old = win.fetch_and_op(1, 0, 6, ReduceOp::Sum).unwrap();
+        assert!((0..4).contains(&old));
+        win.fence().unwrap();
+        assert_eq!(win.get(0, 6).unwrap(), 4);
+        // compare_and_swap: only one rank wins the 0 → rank+100 race.
+        let seen = win.compare_and_swap(r as i64 + 100, 0, 0, 5).unwrap();
+        win.fence().unwrap();
+        let final_v = win.get(0, 5).unwrap();
+        assert!(final_v >= 100);
+        let _ = seen;
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn rma_pscw_sync() {
+    Universe::test(2).run(|world| {
+        let win: RmaWindow<i32> = RmaWindow::allocate(world, 4).unwrap();
+        let r = world.rank();
+        if r == 1 {
+            win.native().post(&[0]).unwrap();
+            win.native().wait(&[0]).unwrap();
+            assert_eq!(win.with_local(|m| m[2]), 99);
+        } else {
+            win.native().start(&[1]).unwrap();
+            win.put(&99i32, 1, 2).unwrap();
+            win.native().complete(&[1]).unwrap();
+        }
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn rma_out_of_range_rejected() {
+    Universe::test(2).run(|world| {
+        let win: RmaWindow<i32> = RmaWindow::allocate(world, 2).unwrap();
+        let e = win.put(&1i32, (world.rank() + 1) % 2, 5).unwrap_err();
+        assert_eq!(e.class, ErrorClass::RmaRange);
+        win.free().unwrap();
+    });
+}
+
+// ---------------- IO ----------------
+
+#[test]
+fn file_open_modes_and_errors() {
+    Universe::test(2).run(|world| {
+        // Open nonexistent without CREATE → NoSuchFile on all ranks.
+        let e = File::open(world, "nope.dat", AccessMode::read()).unwrap_err();
+        assert_eq!(e.class, ErrorClass::NoSuchFile);
+        // Create, write, close.
+        let f = File::open(world, "t.dat", AccessMode::read_write()).unwrap();
+        let byte = Datatype::primitive(Primitive::Byte);
+        if world.rank() == 0 {
+            f.write_at(0, b"hello", 5, &byte).unwrap();
+        }
+        f.sync().unwrap();
+        assert_eq!(f.size().unwrap(), 5);
+        // RDONLY write rejected.
+        let e = {
+            let g = File::open(world, "t.dat", AccessMode::read()).unwrap();
+            let err = g.write_at(0, b"x", 1, &byte).unwrap_err();
+            g.close().unwrap();
+            err
+        };
+        assert_eq!(e.class, ErrorClass::Amode);
+        // EXCL on existing → FileExists.
+        let e = File::open(world, "t.dat", AccessMode::write().with_excl()).unwrap_err();
+        assert_eq!(e.class, ErrorClass::FileExists);
+        // Delete while open → FileInUse.
+        let e = File::delete(world, "t.dat").unwrap_err();
+        assert_eq!(e.class, ErrorClass::FileInUse);
+        f.close().unwrap();
+        collective::barrier(world).unwrap();
+        if world.rank() == 0 {
+            File::delete(world, "t.dat").unwrap();
+        }
+    });
+}
+
+#[test]
+fn file_individual_and_shared_pointers() {
+    Universe::test(2).run(|world| {
+        let f = File::open(world, "ptr.dat", AccessMode::read_write().with_delete_on_close()).unwrap();
+        let i32d = i32t();
+        if world.rank() == 0 {
+            // Individual pointer advances in etypes.
+            f.write(as_b(&[1, 2]), 2, &i32d).unwrap();
+            assert_eq!(f.position(), 8); // default etype = byte
+            f.write(as_b(&[3]), 1, &i32d).unwrap();
+        }
+        f.sync().unwrap();
+        if world.rank() == 1 {
+            let mut buf = [0i32; 3];
+            f.read_at(0, as_bm(&mut buf), 3, &i32d).unwrap();
+            assert_eq!(buf, [1, 2, 3]);
+            // Short read past EOF.
+            let mut big = [0i32; 10];
+            let n = f.read_at(0, as_bm(&mut big), 10, &i32d).unwrap();
+            assert_eq!(n, 3);
+        }
+        f.sync().unwrap();
+        // Shared pointer (fresh file — the shared pointer is independent
+        // of individual pointers and starts at 0): each write lands at a
+        // distinct offset.
+        let byte = Datatype::primitive(Primitive::Byte);
+        let g = File::open(world, "shared.dat", AccessMode::read_write().with_delete_on_close())
+            .unwrap();
+        let tagmsg = [world.rank() as u8 + 65u8]; // 'A' or 'B'
+        g.write_shared(&tagmsg, 1, &byte).unwrap();
+        g.sync().unwrap();
+        if world.rank() == 0 {
+            let mut buf = [0u8; 2];
+            g.read_at(0, &mut buf, 2, &byte).unwrap();
+            let mut got = buf.to_vec();
+            got.sort_unstable();
+            assert_eq!(got, vec![65, 66]);
+        }
+        g.close().unwrap();
+        f.close().unwrap();
+        // delete_on_close removed it.
+        let e = File::open(world, "ptr.dat", AccessMode::read()).unwrap_err();
+        assert_eq!(e.class, ErrorClass::NoSuchFile);
+    });
+}
+
+#[test]
+fn file_nonblocking_and_set_size() {
+    Universe::test(2).run(|world| {
+        let f = File::open(world, "nb.dat", AccessMode::read_write().with_delete_on_close()).unwrap();
+        let i32d = i32t();
+        if world.rank() == 0 {
+            let req = f.iwrite_at(0, as_b(&[5, 6, 7]), 3, &i32d).unwrap();
+            let st = req.wait().unwrap();
+            assert_eq!(st.bytes, 12);
+        }
+        f.sync().unwrap();
+        let mut out = [0i32; 3];
+        let req = f.iread_at(0, as_bm(&mut out), 3, &i32d).unwrap();
+        req.wait().unwrap();
+        assert_eq!(out, [5, 6, 7]);
+        f.set_size(4).unwrap();
+        assert_eq!(f.size().unwrap(), 4);
+        f.preallocate(100).unwrap();
+        assert_eq!(f.size().unwrap(), 100);
+        f.close().unwrap();
+    });
+}
+
+// ---------------- tool ----------------
+
+#[test]
+fn pvars_observe_traffic() {
+    Universe::test(2).run(|world| {
+        let comm = Communicator::world(world);
+        let mut session = tool::PvarSession::create(world);
+        session.reset("rank_sends_started").unwrap();
+        let before = session.read("rank_sends_started").unwrap();
+        assert_eq!(before, 0);
+        if comm.rank() == 0 {
+            comm.send(&1i32, 1).unwrap();
+            comm.send(&2i32, 1).unwrap();
+        } else {
+            let _ = comm.receive::<i32>(ferrompi::modern::Source::Rank(0)).unwrap();
+            let _ = comm.receive::<i32>(ferrompi::modern::Source::Rank(0)).unwrap();
+        }
+        comm.barrier().unwrap();
+        if comm.rank() == 0 {
+            assert!(session.read("rank_sends_started").unwrap() >= 2);
+        } else {
+            assert!(session.read("rank_recvs_posted").unwrap() >= 2);
+            assert!(session.read("rank_messages_matched").unwrap() >= 2);
+        }
+        assert!(session.read("fabric_msgs_sent").unwrap() > 0);
+        assert!(session.read("nonexistent_pvar").is_err());
+    });
+}
+
+#[test]
+fn cvar_algorithm_switch_affects_collectives() {
+    use ferrompi::collective::config;
+    // Results must agree across algorithms (correctness under retune).
+    for alg in ["recursive_doubling", "ring", "reduce_bcast"] {
+        tool::cvar_write("coll_allreduce_algorithm", alg).unwrap();
+        let sums = Universe::test(5).run(|comm| {
+            let t = i32t();
+            let mine = [(comm.rank() as i32 + 1) * 3];
+            let mut out = [0i32];
+            collective::allreduce(comm, Some(as_b(&mine)), as_bm(&mut out), 1, &t, &Op::SUM)
+                .unwrap();
+            out[0]
+        });
+        assert!(sums.iter().all(|&s| s == 45), "alg {alg}: {sums:?}");
+    }
+    tool::cvar_write("coll_allreduce_algorithm", "recursive_doubling").unwrap();
+    assert_eq!(config::allreduce_alg(), config::AllreduceAlg::RecursiveDoubling);
+}
+
+// ---------------- topologies & sessions ----------------
+
+#[test]
+fn cart_shift_sub_and_halo() {
+    Universe::test(6).run(|world| {
+        let mut dims = vec![0usize; 2];
+        dims_create(6, &mut dims).unwrap();
+        assert_eq!(dims, vec![3, 2]);
+        let cart = CartComm::create(world, &dims, &[true, false], false).unwrap().unwrap();
+        let me = cart.comm().rank();
+        let coords = cart.coords(me).unwrap();
+        // Periodic dim 0 wraps; non-periodic dim 1 hits PROC_NULL at edges.
+        let (src0, dst0) = cart.shift(0, 1).unwrap();
+        assert!(src0 >= 0 && dst0 >= 0);
+        let (_src1, dst1) = cart.shift(1, 1).unwrap();
+        if coords[1] == dims[1] - 1 {
+            assert_eq!(dst1, ferrompi::comm::PROC_NULL);
+        } else {
+            assert!(dst1 >= 0);
+        }
+        // Row sub-communicators.
+        let row = cart.sub(&[false, true]).unwrap();
+        assert_eq!(row.comm().size(), dims[1]);
+        assert_eq!(row.coords(row.comm().rank()).unwrap()[0], coords[1]);
+        // Neighbor alltoall: send my rank to each neighbor, receive theirs.
+        let n = cart.neighbors().unwrap();
+        let sendblocks: Vec<i32> = n.iter().map(|_| me as i32).collect();
+        let mut recvblocks = vec![-1i32; n.len()];
+        cart.neighbor_alltoall(
+            as_b(&sendblocks),
+            1,
+            &i32t(),
+            as_bm(&mut recvblocks),
+            1,
+            &i32t(),
+        )
+        .unwrap();
+        for (i, &nb) in n.iter().enumerate() {
+            if nb >= 0 {
+                assert_eq!(recvblocks[i], nb, "neighbor {i} of rank {me}");
+            } else {
+                assert_eq!(recvblocks[i], -1);
+            }
+        }
+    });
+}
+
+#[test]
+fn graph_and_dist_graph() {
+    Universe::test(3).run(|world| {
+        // Triangle graph: 0-1, 1-2, 2-0.
+        let index = [2, 4, 6];
+        let edges = [1, 2, 0, 2, 0, 1];
+        let g = GraphComm::create(world, &index, &edges, false).unwrap().unwrap();
+        assert_eq!(g.counts(), (3, 6));
+        let me = g.comm().rank();
+        let nbrs = g.neighbors().unwrap();
+        assert_eq!(nbrs.len(), 2);
+        assert!(!nbrs.contains(&me));
+
+        let dg = DistGraphComm::create_adjacent(world, &[(me + 2) % 3], &[(me + 1) % 3], false)
+            .unwrap();
+        let mine = [me as i32 * 7];
+        let mut got = [-1i32];
+        dg.neighbor_allgather(as_b(&mine), 1, &i32t(), as_bm(&mut got), 1, &i32t()).unwrap();
+        assert_eq!(got[0], (((me + 2) % 3) * 7) as i32);
+    });
+}
+
+#[test]
+fn sessions_and_psets() {
+    Universe::with_model(2, 2, ferrompi::transport::NetworkModel::zero()).run(|world| {
+        let session = Session::init(world.rank_ctx().clone(), ferrompi::info::Info::new());
+        let names = session.pset_names();
+        assert!(names.contains(&"mpi://WORLD".to_string()));
+        assert!(names.contains(&"fabric://node/1".to_string()));
+        let wg = session.group_from_pset("mpi://WORLD").unwrap();
+        assert_eq!(wg.size(), 4);
+        let ng = session.group_from_pset("fabric://node/0").unwrap();
+        assert_eq!(ng.size(), 2);
+        assert!(session.group_from_pset("bogus").is_err());
+        // Build a communicator from the node pset and do a collective.
+        let me_node = world.rank_ctx().fabric.nodemap.node_of(world.rank());
+        let g = session.group_from_pset(&format!("fabric://node/{me_node}")).unwrap();
+        let nc = session.comm_create_from_group(&g, "test:node").unwrap().unwrap();
+        let t = i32t();
+        let mine = [world.rank() as i32];
+        let mut out = [0i32];
+        collective::allreduce(&nc, Some(as_b(&mine)), as_bm(&mut out), 1, &t, &Op::SUM).unwrap();
+        let expect: i32 = (0..4).filter(|r| r / 2 == me_node as i32).sum();
+        assert_eq!(out[0], expect);
+    });
+}
+
+// ---------------- partitioned p2p (MPI 4.0) ----------------
+
+#[test]
+fn partitioned_send_recv() {
+    Universe::test(2).run(|world| {
+        let t = i32t();
+        const PARTS: usize = 4;
+        const PER: usize = 8;
+        if world.rank() == 0 {
+            let data: Vec<i32> = (0..(PARTS * PER) as i32).collect();
+            let ps = PsendRequest::init(world, as_b(&data), PARTS, PER, &t, 1, 3).unwrap();
+            ps.start().unwrap();
+            // Partitions become ready out of order.
+            ps.pready(2).unwrap();
+            ps.pready(0).unwrap();
+            assert!(ps.pready(0).is_err(), "double pready rejected");
+            // Waiting before all partitions ready is a caught error.
+            assert_eq!(ps.wait().unwrap_err().class, ErrorClass::Pending);
+            ps.pready_range(1, 1).unwrap();
+            ps.pready(3).unwrap();
+            ps.wait().unwrap();
+            // Reusable: second round.
+            ps.start().unwrap();
+            ps.pready_range(0, PARTS - 1).unwrap();
+            ps.wait().unwrap();
+        } else {
+            let mut buf = vec![0i32; PARTS * PER];
+            let (pr, spec) = PrecvRequest::init(world, as_bm(&mut buf), PARTS, PER, &t, 0, 3).unwrap();
+            pr.start(world, &spec).unwrap();
+            while !pr.parrived(1).unwrap() {
+                std::hint::spin_loop();
+            }
+            pr.wait().unwrap();
+            assert_eq!(buf[31], 31);
+            // Round two.
+            pr.start(world, &spec).unwrap();
+            pr.wait().unwrap();
+        }
+    });
+}
+
+// ---------------- failure injection ----------------
+
+#[test]
+fn truncation_and_argument_errors() {
+    Universe::test(2).run(|world| {
+        let t = i32t();
+        if world.rank() == 0 {
+            let data = [1i32; 8];
+            world.send(as_b(&data), 8, &t, 1, 0).unwrap();
+            // tag out of range
+            let e = world.send(as_b(&data), 8, &t, 1, -5).unwrap_err();
+            assert_eq!(e.class, ErrorClass::Tag);
+            // rank out of range
+            let e = world.send(as_b(&data), 8, &t, 9, 0).unwrap_err();
+            assert_eq!(e.class, ErrorClass::Rank);
+        } else {
+            // Receive capacity 4 < message 8 → truncation error.
+            let mut small = [0i32; 4];
+            let e = world.recv(as_bm(&mut small), 4, &t, 0, 0).unwrap_err();
+            assert_eq!(e.class, ErrorClass::Truncate);
+        }
+    });
+}
+
+#[test]
+fn uncommitted_datatype_rejected() {
+    Universe::test(1).run(|world| {
+        let uncommitted = Datatype::new(TypeMap::contiguous(2, &TypeMap::primitive(Primitive::I32)));
+        let data = [0i32; 2];
+        let e = world.send(as_b(&data), 1, &uncommitted, 0, 0).unwrap_err();
+        assert_eq!(e.class, ErrorClass::Type);
+    });
+}
+
+#[test]
+fn bsend_requires_buffer() {
+    Universe::test(2).run(|world| {
+        let t = i32t();
+        let data = [7i32; 4];
+        if world.rank() == 0 {
+            // No buffer attached → MPI_ERR_BUFFER.
+            let e = world
+                .send_mode(as_b(&data), 4, &t, 1, 0, ferrompi::p2p::SendMode::Buffered)
+                .unwrap_err();
+            assert_eq!(e.class, ErrorClass::Buffer);
+            // Attach and retry.
+            world.rank_ctx().buffer_attach(1024);
+            world.send_mode(as_b(&data), 4, &t, 1, 0, ferrompi::p2p::SendMode::Buffered).unwrap();
+            assert_eq!(world.rank_ctx().buffer_detach(), 1024);
+        } else {
+            let mut buf = [0i32; 4];
+            world.recv(as_bm(&mut buf), 4, &t, 0, 0).unwrap();
+            assert_eq!(buf, [7; 4]);
+        }
+    });
+}
+
+#[test]
+fn custom_errhandler_invoked() {
+    Universe::test(1).run(|world| {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h2 = hits.clone();
+        world.set_errhandler(ErrorHandler::Custom(Arc::new(move |_e| {
+            h2.fetch_add(1, Ordering::SeqCst);
+        })));
+        let t = i32t();
+        let r = world.handle(world.send(&[0u8; 4], 1, &t, 42, 0));
+        assert!(r.is_err());
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    });
+}
+
+#[test]
+fn probe_any_tag_and_cancelled_recv() {
+    Universe::test(2).run(|world| {
+        let t = i32t();
+        if world.rank() == 0 {
+            // Nothing pending → immediate probe empty.
+            assert!(world.iprobe(1, ANY_TAG).unwrap().is_none());
+            world.send(as_b(&[5]), 1, &t, 1, 9).unwrap();
+        } else {
+            let st = world.probe(0, ANY_TAG).unwrap();
+            assert_eq!(st.tag, 9);
+            let mut v = [0i32];
+            world.recv(as_bm(&mut v), 1, &t, 0, 9).unwrap();
+            assert_eq!(v[0], 5);
+        }
+    });
+}
+
+// ---------------- XLA-offloaded reduction over the full stack ----------------
+
+#[test]
+fn xla_combine_allreduce_matches_native() {
+    if !ferrompi::runtime::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Warm the engine outside rank threads.
+    ferrompi::runtime::engine().unwrap().warmup().unwrap();
+    let f32t = Datatype::primitive(Primitive::F32);
+    for count in [1usize, 100, 5000] {
+        let native = Universe::test(4).run(move |comm| {
+            let mine: Vec<f32> = (0..count).map(|i| (comm.rank() + 1) as f32 * (i as f32 + 0.5)).collect();
+            let mut out = vec![0f32; count];
+            let sb = unsafe { std::slice::from_raw_parts(mine.as_ptr() as *const u8, count * 4) };
+            let rb = unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, count * 4) };
+            collective::allreduce(comm, Some(sb), rb, count, &Datatype::primitive(Primitive::F32), &Op::SUM).unwrap();
+            out
+        });
+        let xla = Universe::test(4).run(move |comm| {
+            let op = ferrompi::runtime::xla_op(OpKind::Sum).unwrap();
+            let mine: Vec<f32> = (0..count).map(|i| (comm.rank() + 1) as f32 * (i as f32 + 0.5)).collect();
+            let mut out = vec![0f32; count];
+            let sb = unsafe { std::slice::from_raw_parts(mine.as_ptr() as *const u8, count * 4) };
+            let rb = unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, count * 4) };
+            collective::allreduce(comm, Some(sb), rb, count, &Datatype::primitive(Primitive::F32), &op).unwrap();
+            out
+        });
+        assert_eq!(native, xla, "count {count}");
+    }
+    let _ = f32t;
+}

@@ -1,0 +1,268 @@
+//! Smoke tests for the substrate: p2p + collectives across simulated ranks.
+
+use ferrompi::collective;
+use ferrompi::datatype::{Datatype, Primitive};
+use ferrompi::op::Op;
+use ferrompi::universe::Universe;
+
+fn i32t() -> Datatype {
+    Datatype::primitive(Primitive::I32)
+}
+
+fn as_bytes(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn as_bytes_mut(v: &mut [i32]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4) }
+}
+
+#[test]
+fn ping_pong() {
+    Universe::test(2).run(|comm| {
+        let t = i32t();
+        if comm.rank() == 0 {
+            let data = [41i32, 42, 43];
+            comm.send(as_bytes(&data), 3, &t, 1, 7).unwrap();
+            let mut back = [0i32; 3];
+            let st = comm.recv(as_bytes_mut(&mut back), 3, &t, 1, 8).unwrap();
+            assert_eq!(back, [42, 43, 44]);
+            assert_eq!(st.source, 1);
+            assert_eq!(st.tag, 8);
+            assert_eq!(st.get_count(&t), Some(3));
+        } else {
+            let mut data = [0i32; 3];
+            comm.recv(as_bytes_mut(&mut data), 3, &t, 0, 7).unwrap();
+            for d in &mut data {
+                *d += 1;
+            }
+            comm.send(as_bytes(&data), 3, &t, 0, 8).unwrap();
+        }
+    });
+}
+
+#[test]
+fn rendezvous_large_message() {
+    // > 64 KiB payload forces the RTS/CTS path.
+    Universe::test(2).run(|comm| {
+        let t = i32t();
+        let n = 40_000usize;
+        if comm.rank() == 0 {
+            let data: Vec<i32> = (0..n as i32).collect();
+            comm.send(as_bytes(&data), n, &t, 1, 0).unwrap();
+        } else {
+            let mut data = vec![0i32; n];
+            let st = comm.recv(as_bytes_mut(&mut data), n, &t, 0, 0).unwrap();
+            assert_eq!(st.bytes, n * 4);
+            assert_eq!(data[0], 0);
+            assert_eq!(data[n - 1], n as i32 - 1);
+        }
+    });
+}
+
+#[test]
+fn barrier_and_bcast() {
+    for p in [1, 2, 3, 4, 7, 8] {
+        Universe::test(p).run(|comm| {
+            collective::barrier(comm).unwrap();
+            let t = i32t();
+            let mut data = if comm.rank() == 2 % p { vec![9i32, 8, 7] } else { vec![0; 3] };
+            collective::bcast(comm, as_bytes_mut(&mut data), 3, &t, 2 % p).unwrap();
+            assert_eq!(data, vec![9, 8, 7], "p={p} rank={}", comm.rank());
+        });
+    }
+}
+
+#[test]
+fn allreduce_sum_all_sizes() {
+    for p in [1, 2, 3, 5, 8] {
+        Universe::test(p).run(move |comm| {
+            let t = i32t();
+            let n = 10;
+            let mine: Vec<i32> = (0..n).map(|i| (comm.rank() as i32 + 1) * (i + 1)).collect();
+            let mut out = vec![0i32; n as usize];
+            collective::allreduce(comm, Some(as_bytes(&mine)), as_bytes_mut(&mut out), n as usize, &t, &Op::SUM)
+                .unwrap();
+            let total: i32 = (1..=p as i32).sum();
+            let expect: Vec<i32> = (0..n).map(|i| total * (i + 1)).collect();
+            assert_eq!(out, expect, "p={p} rank={}", comm.rank());
+        });
+    }
+}
+
+#[test]
+fn reduce_gather_scatter_allgather_alltoall() {
+    let p = 4;
+    Universe::test(p).run(move |comm| {
+        let t = i32t();
+        let r = comm.rank() as i32;
+
+        // reduce MAX to root 1
+        let mine = [r * 10, r];
+        let mut out = [0i32; 2];
+        let rbuf = if comm.rank() == 1 { Some(as_bytes_mut(&mut out)) } else { None };
+        collective::reduce(comm, Some(as_bytes(&mine)), rbuf, 2, &t, &Op::MAX, 1).unwrap();
+        if comm.rank() == 1 {
+            assert_eq!(out, [30, 3]);
+        }
+
+        // gather to root 0
+        let mine = [r, r + 100];
+        let mut all = vec![0i32; 2 * p];
+        let rbuf = if comm.rank() == 0 { Some(as_bytes_mut(&mut all)) } else { None };
+        collective::gather(comm, as_bytes(&mine), 2, &t, rbuf, 2, &t, 0).unwrap();
+        if comm.rank() == 0 {
+            assert_eq!(all, vec![0, 100, 1, 101, 2, 102, 3, 103]);
+        }
+
+        // scatter from root 3
+        let src: Vec<i32> = (0..p as i32 * 2).collect();
+        let sbuf = if comm.rank() == 3 { Some(as_bytes(&src)) } else { None };
+        let mut mine2 = [0i32; 2];
+        collective::scatter(comm, sbuf, 2, &t, as_bytes_mut(&mut mine2), 2, &t, 3).unwrap();
+        assert_eq!(mine2, [r * 2, r * 2 + 1]);
+
+        // allgather
+        let mine3 = [r * 7];
+        let mut all3 = vec![0i32; p];
+        collective::allgather(comm, Some(as_bytes(&mine3)), 1, &t, as_bytes_mut(&mut all3), 1, &t)
+            .unwrap();
+        assert_eq!(all3, vec![0, 7, 14, 21]);
+
+        // alltoall: element j of my send block goes to rank j.
+        let send: Vec<i32> = (0..p as i32).map(|j| r * 100 + j).collect();
+        let mut recv = vec![0i32; p];
+        collective::alltoall(comm, as_bytes(&send), 1, &t, as_bytes_mut(&mut recv), 1, &t).unwrap();
+        let expect: Vec<i32> = (0..p as i32).map(|j| j * 100 + r).collect();
+        assert_eq!(recv, expect);
+    });
+}
+
+#[test]
+fn scan_and_exscan() {
+    let p = 5;
+    Universe::test(p).run(move |comm| {
+        let t = i32t();
+        let r = comm.rank() as i32;
+        let mine = [r + 1];
+        let mut out = [0i32];
+        collective::scan(comm, Some(as_bytes(&mine)), as_bytes_mut(&mut out), 1, &t, &Op::SUM).unwrap();
+        let expect: i32 = (1..=r + 1).sum();
+        assert_eq!(out[0], expect, "scan rank {r}");
+
+        let mut out2 = [-1i32];
+        collective::exscan(comm, Some(as_bytes(&mine)), as_bytes_mut(&mut out2), 1, &t, &Op::SUM)
+            .unwrap();
+        if r == 0 {
+            assert_eq!(out2[0], -1); // undefined → untouched
+        } else {
+            assert_eq!(out2[0], (1..=r).sum::<i32>(), "exscan rank {r}");
+        }
+    });
+}
+
+#[test]
+fn reduce_scatter_block_works() {
+    let p = 3;
+    Universe::test(p).run(move |comm| {
+        let t = i32t();
+        let r = comm.rank() as i32;
+        // Each rank contributes [r, r, r, r, r, r] (2 elements per rank).
+        let mine: Vec<i32> = vec![r + 1; 2 * p];
+        let mut out = [0i32; 2];
+        collective::reduce_scatter_block(comm, Some(as_bytes(&mine)), as_bytes_mut(&mut out), 2, &t, &Op::SUM)
+            .unwrap();
+        assert_eq!(out, [6, 6]);
+    });
+}
+
+#[test]
+fn nonblocking_collectives_and_requests() {
+    let p = 4;
+    Universe::test(p).run(move |comm| {
+        let t = i32t();
+        let mut data = if comm.rank() == 0 { vec![5i32] } else { vec![0i32] };
+        let req = collective::ibcast(comm, as_bytes_mut(&mut data), 1, &t, 0).unwrap();
+        req.wait().unwrap();
+        assert_eq!(data, vec![5]);
+
+        // ibarrier + isend/irecv mixed wait_all.
+        let b = collective::ibarrier(comm).unwrap();
+        b.wait().unwrap();
+
+        let next = ((comm.rank() + 1) % p) as i32;
+        let prev = ((comm.rank() + p - 1) % p) as i32;
+        let payload = [comm.rank() as i32];
+        let mut incoming = [0i32];
+        let r1 = comm.irecv(as_bytes_mut(&mut incoming), 1, &t, prev, 3).unwrap();
+        let s1 = comm.isend(as_bytes(&payload), 1, &t, next, 3).unwrap();
+        let sts = ferrompi::request::wait_all(&[r1, s1]).unwrap();
+        assert_eq!(incoming[0], prev);
+        assert_eq!(sts[0].source, prev);
+    });
+}
+
+#[test]
+fn comm_dup_split_create() {
+    let p = 6;
+    Universe::test(p).run(move |comm| {
+        let d = comm.dup().unwrap();
+        assert_eq!(d.rank(), comm.rank());
+        assert_eq!(d.size(), p);
+
+        // Split into even/odd.
+        let color = (comm.rank() % 2) as i32;
+        let sub = comm.split(color, comm.rank() as i32).unwrap().unwrap();
+        assert_eq!(sub.size(), 3);
+        assert_eq!(sub.rank(), comm.rank() / 2);
+        // Collective on the subcommunicator.
+        let t = i32t();
+        let mine = [comm.rank() as i32];
+        let mut sum = [0i32];
+        collective::allreduce(&sub, Some(as_bytes(&mine)), as_bytes_mut(&mut sum), 1, &t, &Op::SUM)
+            .unwrap();
+        let expect: i32 = (0..p as i32).filter(|r| r % 2 == color).sum();
+        assert_eq!(sum[0], expect);
+
+        // comm_create of the first half.
+        let g = comm.group().incl(&[0, 1, 2]).unwrap();
+        let created = comm.create(&g).unwrap();
+        if comm.rank() < 3 {
+            let c = created.unwrap();
+            assert_eq!(c.size(), 3);
+            assert_eq!(c.rank(), comm.rank());
+        } else {
+            assert!(created.is_none());
+        }
+    });
+}
+
+#[test]
+fn sendrecv_and_probe() {
+    Universe::test(3).run(|comm| {
+        let t = i32t();
+        let r = comm.rank();
+        let next = ((r + 1) % 3) as i32;
+        let prev = ((r + 2) % 3) as i32;
+        let mine = [r as i32 * 11];
+        let mut got = [0i32];
+        let st = comm
+            .sendrecv(as_bytes(&mine), 1, &t, next, 1, as_bytes_mut(&mut got), 1, &t, prev, 1)
+            .unwrap();
+        assert_eq!(got[0], ((r + 2) % 3) as i32 * 11);
+        assert_eq!(st.source, prev);
+
+        // probe: rank 0 sends to 1 with a surprise tag; 1 probes.
+        if r == 0 {
+            let data = [123i32, 456];
+            comm.send(as_bytes(&data), 2, &t, 1, 77).unwrap();
+        } else if r == 1 {
+            let st = comm.probe(0, ferrompi::comm::ANY_TAG).unwrap();
+            assert_eq!(st.tag, 77);
+            assert_eq!(st.get_count(&t), Some(2));
+            let mut buf = vec![0i32; st.get_count(&t).unwrap()];
+            comm.recv(as_bytes_mut(&mut buf), 2, &t, 0, 77).unwrap();
+            assert_eq!(buf, vec![123, 456]);
+        }
+    });
+}

@@ -1,0 +1,352 @@
+//! Integration tests for the two interfaces the paper compares: the raw
+//! C-shaped baseline and the modern layer (Listing 1 + Listing 2).
+
+use ferrompi::modern::{self, Communicator, Complex, DataType, MpiFuture, ReduceOp, Source, Tag};
+use ferrompi::raw;
+use ferrompi::universe::Universe;
+use ferrompi_derive::DataType;
+
+// ---------------- Listing 1: automatic datatype generation ----------------
+
+/// The paper's Listing 1 example: a user-defined aggregate used in
+/// communication without explicitly creating an MPI datatype.
+#[derive(Debug, Clone, Copy, PartialEq, Default, DataType)]
+struct Particle {
+    position: [f32; 3],
+    velocity: [f32; 3],
+    mass: f32,
+    id: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Default, DataType)]
+struct Nested {
+    p: Particle,
+    flag: bool,
+    pair: (i32, f64),
+    c: Complex<f64>,
+}
+
+#[test]
+fn derive_typemap_matches_layout() {
+    let t = Particle::typemap();
+    // Wire size: 3*4 + 3*4 + 4 + 8 = 36 (padding stays off the wire).
+    assert_eq!(t.size(), 36);
+    assert_eq!(t.extent() as usize, std::mem::size_of::<Particle>());
+    let n = Nested::typemap();
+    assert_eq!(n.size(), 36 + 1 + 12 + 16);
+    assert_eq!(n.extent() as usize, std::mem::size_of::<Nested>());
+}
+
+#[test]
+fn listing1_user_type_broadcast() {
+    Universe::test(3).run(|world| {
+        let comm = Communicator::world(world);
+        let mut data = if comm.rank() == 0 {
+            Particle { position: [1.0, 2.0, 3.0], velocity: [4.0, 5.0, 6.0], mass: 0.5, id: 42 }
+        } else {
+            Particle::default()
+        };
+        // Listing 1: communicator.broadcast(data) — no datatype in sight.
+        comm.broadcast(&mut data, 0).unwrap();
+        assert_eq!(data.id, 42);
+        assert_eq!(data.position, [1.0, 2.0, 3.0]);
+        assert_eq!(data.mass, 0.5);
+    });
+}
+
+#[test]
+fn user_type_send_receive_including_padding() {
+    Universe::test(2).run(|world| {
+        let comm = Communicator::world(world);
+        if comm.rank() == 0 {
+            let batch = [
+                Nested {
+                    p: Particle { position: [1.0; 3], velocity: [2.0; 3], mass: 1.0, id: 1 },
+                    flag: true,
+                    pair: (7, 2.5),
+                    c: Complex::new(1.0, -1.0),
+                },
+                Nested::default(),
+            ];
+            comm.send(&batch[..], 1).unwrap();
+        } else {
+            let mut batch = [Nested::default(); 2];
+            let st = comm.receive_into(&mut batch[..], Source::Rank(0), Tag::Any).unwrap();
+            assert!(batch[0].flag);
+            assert_eq!(batch[0].pair, (7, 2.5));
+            assert_eq!(batch[0].c, Complex::new(1.0, -1.0));
+            assert_eq!(batch[0].p.id, 1);
+            assert_eq!(batch[1], Nested::default());
+            assert_eq!(st.source, 0);
+        }
+    });
+}
+
+// ---------------- Listing 2: futures with continuations ----------------
+
+#[test]
+fn listing2_chained_immediate_broadcasts() {
+    // The paper's Listing 2, verbatim in semantics: three chained
+    // broadcasts, each rank increments when it is the next root;
+    // data == 3 in all ranks at the end.
+    let results = Universe::test(3).run(|world| {
+        let comm = Communicator::world(world);
+        let mut data: i32 = 0;
+        if comm.rank() == 0 {
+            data = 1;
+        }
+        let comm2 = Communicator::world(world);
+        let comm3 = Communicator::world(world);
+        let out = comm
+            .immediate_broadcast(data, 0)
+            .then(move |f| {
+                let mut v = f.get().unwrap();
+                if comm2.rank() == 1 {
+                    v += 1;
+                }
+                comm2.immediate_broadcast(v, 1)
+            })
+            .then(move |f| {
+                let mut v = f.get().unwrap();
+                if comm3.rank() == 2 {
+                    v += 1;
+                }
+                comm3.immediate_broadcast(v, 2)
+            })
+            .get()
+            .unwrap();
+        out
+    });
+    assert_eq!(results, vec![3, 3, 3]); // data == 3 in all ranks.
+}
+
+#[test]
+fn when_all_and_when_any_forward_to_wait_family() {
+    Universe::test(4).run(|world| {
+        let comm = Communicator::world(world);
+        let r = comm.rank();
+        let p = comm.size();
+        // Fork: send to every other rank; join with when_all on receives.
+        let mut sends = Vec::new();
+        for dst in 0..p {
+            if dst != r {
+                sends.push(comm.immediate_send(&(r as i32), dst, 5).unwrap());
+            }
+        }
+        let recvs: Vec<MpiFuture<(i32, ferrompi::p2p::Status)>> = (0..p)
+            .filter(|&s| s != r)
+            .map(|s| comm.immediate_receive::<i32>(Source::Rank(s), Tag::Value(5)).unwrap())
+            .collect();
+        let all = modern::when_all(recvs).get().unwrap();
+        let mut got: Vec<i32> = all.iter().map(|(v, _)| *v).collect();
+        got.sort_unstable();
+        let expect: Vec<i32> = (0..p as i32).filter(|&x| x != r as i32).collect();
+        assert_eq!(got, expect);
+        modern::when_all(sends).get().unwrap();
+
+        // when_any: two receives; one completes first, the loser is still
+        // waitable through the returned futures (when_any_result shape).
+        comm.barrier().unwrap();
+        if r == 0 {
+            comm.send(&123i32, 1).unwrap();
+        } else if r == 1 {
+            let f1 = comm.immediate_receive::<i32>(Source::Rank(0), Tag::Any).unwrap();
+            let f2 = comm.immediate_receive::<i32>(Source::Rank(2), Tag::Any).unwrap();
+            let result = modern::when_any(vec![f1, f2]).get().unwrap();
+            let idx = result.index;
+            let (winner, losers) = result.take_winner();
+            let v = winner.unwrap().0;
+            assert!(matches!((idx, v), (0, 123) | (1, 456)), "idx={idx} v={v}");
+            assert_eq!(losers.len(), 1);
+            let expect_other = if idx == 0 { 456 } else { 123 };
+            for loser in losers {
+                assert_eq!(loser.get().unwrap().0, expect_other);
+            }
+        } else if r == 2 {
+            comm.send(&456i32, 1).unwrap();
+        }
+        comm.barrier().unwrap();
+    });
+}
+
+#[test]
+fn immediate_all_reduce_future() {
+    Universe::test(4).run(|world| {
+        let comm = Communicator::world(world);
+        let sum = comm.immediate_all_reduce(comm.rank() as i64 + 1, ReduceOp::Sum).get().unwrap();
+        assert_eq!(sum, 10);
+        let max = comm.all_reduce(comm.rank() as i32, ReduceOp::Max).unwrap();
+        assert_eq!(max, 3);
+    });
+}
+
+#[test]
+fn modern_collectives_roundtrip() {
+    Universe::test(4).run(|world| {
+        let comm = Communicator::world(world);
+        let r = comm.rank();
+        let all = comm.all_gather(r as u32 * 3).unwrap();
+        assert_eq!(all, vec![0, 3, 6, 9]);
+        let gathered = comm.gather((r as i32, r as f64), 2).unwrap();
+        if r == 2 {
+            let g = gathered.unwrap();
+            assert_eq!(g[3], (3, 3.0));
+        } else {
+            assert!(gathered.is_none());
+        }
+        let mine = comm.scatter(if r == 0 { Some(&[10i32, 20, 30, 40][..]) } else { None }, 0).unwrap();
+        assert_eq!(mine, (r as i32 + 1) * 10);
+        let transposed = comm.all_to_all(&[(r * 10) as i32, (r * 10 + 1) as i32, (r * 10 + 2) as i32, (r * 10 + 3) as i32]).unwrap();
+        let expect: Vec<i32> = (0..4).map(|s| (s * 10 + r) as i32).collect();
+        assert_eq!(transposed, expect);
+        let prefix = comm.scan(1u64, ReduceOp::Sum).unwrap();
+        assert_eq!(prefix, r as u64 + 1);
+    });
+}
+
+#[test]
+fn receive_vec_sized_by_probe() {
+    Universe::test(2).run(|world| {
+        let comm = Communicator::world(world);
+        if comm.rank() == 0 {
+            let data: Vec<f64> = (0..17).map(|i| i as f64).collect();
+            comm.send_tagged(&data[..], 1, 3).unwrap();
+        } else {
+            let (v, st) = comm.receive_vec::<f64>(Source::Any, Tag::Value(3)).unwrap();
+            assert_eq!(v.len(), 17);
+            assert_eq!(v[16], 16.0);
+            assert_eq!(st.source, 0);
+        }
+    });
+}
+
+// ---------------- raw interface ----------------
+
+#[test]
+fn raw_c_style_ping_pong_and_collectives() {
+    Universe::test(4).run(|world| {
+        assert_eq!(raw::init(world), raw::MPI_SUCCESS);
+        let mut rank = -1;
+        let mut size = -1;
+        raw::mpi_comm_rank(raw::MPI_COMM_WORLD, &mut rank);
+        raw::mpi_comm_size(raw::MPI_COMM_WORLD, &mut size);
+        assert_eq!(rank as usize, world.rank());
+        assert_eq!(size, 4);
+
+        // Ping-pong 0 <-> 1 with explicit handles & statuses.
+        if rank == 0 {
+            let data = [7i32, 8, 9];
+            let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, 12) };
+            assert_eq!(raw::mpi_send(bytes, 3, raw::MPI_INT, 1, 42, raw::MPI_COMM_WORLD), 0);
+        } else if rank == 1 {
+            let mut data = [0i32; 3];
+            let bytes = unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, 12) };
+            let mut st = raw::MpiStatus::default();
+            assert_eq!(
+                raw::mpi_recv(bytes, 3, raw::MPI_INT, raw::MPI_ANY_SOURCE, raw::MPI_ANY_TAG, raw::MPI_COMM_WORLD, &mut st),
+                0
+            );
+            assert_eq!(data, [7, 8, 9]);
+            assert_eq!(st.mpi_source, 0);
+            assert_eq!(st.mpi_tag, 42);
+            let mut count = 0;
+            raw::mpi_get_count(&st, raw::MPI_INT, &mut count);
+            assert_eq!(count, 3);
+        }
+
+        // Manual datatype construction + commit (what the modern layer
+        // derives automatically).
+        let mut pair = raw::MPI_DATATYPE_NULL;
+        raw::mpi_type_contiguous(2, raw::MPI_DOUBLE, &mut pair);
+        assert_eq!(raw::mpi_type_commit(&mut pair), 0);
+        let mut sz = 0;
+        raw::mpi_type_size(pair, &mut sz);
+        assert_eq!(sz, 16);
+
+        // allreduce through handles.
+        let mine = [(rank as f64) + 1.0, 2.0 * (rank as f64)];
+        let mut out = [0f64; 2];
+        let sb = unsafe { std::slice::from_raw_parts(mine.as_ptr() as *const u8, 16) };
+        let rb = unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, 16) };
+        assert_eq!(raw::mpi_allreduce(Some(sb), rb, 1, pair, raw::MPI_SUM, raw::MPI_COMM_WORLD), 0);
+        assert_eq!(out, [10.0, 12.0]);
+        raw::mpi_type_free(&mut pair);
+        assert_eq!(pair, raw::MPI_DATATYPE_NULL);
+
+        // isend/irecv + waitall ring.
+        let next = ((rank + 1) % size + size) % size;
+        let prev = ((rank - 1) % size + size) % size;
+        let payload = [rank];
+        let mut incoming = [-1i32];
+        let pb = unsafe { std::slice::from_raw_parts(payload.as_ptr() as *const u8, 4) };
+        let ib = unsafe { std::slice::from_raw_parts_mut(incoming.as_mut_ptr() as *mut u8, 4) };
+        let mut reqs = [raw::MPI_REQUEST_NULL; 2];
+        raw::mpi_irecv(ib, 1, raw::MPI_INT, prev, 1, raw::MPI_COMM_WORLD, &mut reqs[0]);
+        raw::mpi_isend(pb, 1, raw::MPI_INT, next, 1, raw::MPI_COMM_WORLD, &mut reqs[1]);
+        let mut sts = [raw::MpiStatus::default(); 2];
+        assert_eq!(raw::mpi_waitall(&mut reqs, &mut sts), 0);
+        assert_eq!(incoming[0], prev);
+        assert_eq!(reqs, [raw::MPI_REQUEST_NULL; 2]);
+
+        raw::mpi_barrier(raw::MPI_COMM_WORLD);
+        assert!(raw::mpi_wtime() >= 0.0);
+        assert_eq!(raw::finalize(), 0);
+    });
+}
+
+#[test]
+fn raw_error_codes_not_exceptions() {
+    Universe::test(1).run(|world| {
+        raw::init(world);
+        // Invalid rank → MPI_ERR_RANK code (6), not a panic.
+        let data = [0u8; 4];
+        let rc = raw::mpi_send(&data, 1, raw::MPI_INT, 99, 0, raw::MPI_COMM_WORLD);
+        assert_eq!(rc, ferrompi::ErrorClass::Rank.code());
+        // Invalid handle → MPI_ERR_TYPE.
+        let rc = raw::mpi_send(&data, 1, 9999, 0, 0, raw::MPI_COMM_WORLD);
+        assert_eq!(rc, ferrompi::ErrorClass::Type.code());
+        let mut st = raw::MpiStatus::default();
+        let rc = raw::mpi_recv(&mut [0u8; 4], 1, raw::MPI_INT, 5, 0, raw::MPI_COMM_WORLD, &mut st);
+        assert_eq!(rc, ferrompi::ErrorClass::Rank.code());
+        // error_string coverage.
+        assert!(raw::mpi_error_string(ferrompi::ErrorClass::Rank.code()).contains("rank"));
+        raw::finalize();
+    });
+}
+
+#[test]
+fn raw_persistent_requests() {
+    Universe::test(2).run(|world| {
+        raw::init(world);
+        let mut rank = -1;
+        raw::mpi_comm_rank(raw::MPI_COMM_WORLD, &mut rank);
+        let iters = 5;
+        if rank == 0 {
+            let mut data = [0i32];
+            let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, 4) };
+            let mut req = raw::MPI_REQUEST_NULL;
+            raw::mpi_send_init(bytes, 1, raw::MPI_INT, 1, 0, raw::MPI_COMM_WORLD, &mut req);
+            for i in 0..iters {
+                data[0] = i;
+                raw::mpi_start(&mut req);
+                let mut st = raw::MpiStatus::default();
+                assert_eq!(raw::mpi_wait(&mut req, &mut st), 0);
+                assert_ne!(req, raw::MPI_REQUEST_NULL, "persistent template survives wait");
+            }
+            raw::mpi_request_free(&mut req);
+        } else {
+            let mut data = [0i32];
+            let bytes = unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, 4) };
+            let mut req = raw::MPI_REQUEST_NULL;
+            raw::mpi_recv_init(bytes, 1, raw::MPI_INT, 0, 0, raw::MPI_COMM_WORLD, &mut req);
+            for i in 0..iters {
+                raw::mpi_start(&mut req);
+                let mut st = raw::MpiStatus::default();
+                raw::mpi_wait(&mut req, &mut st);
+                assert_eq!(data[0], i);
+            }
+            raw::mpi_request_free(&mut req);
+        }
+        raw::finalize();
+    });
+}

@@ -1,0 +1,267 @@
+//! Property-based tests (own harness, see `util::prop`) over the
+//! substrate's core invariants.
+
+use ferrompi::collective;
+use ferrompi::datatype::{pack, unpack, Datatype, Primitive, TypeMap};
+use ferrompi::group::Group;
+use ferrompi::op::Op;
+use ferrompi::universe::Universe;
+use ferrompi::util::prop::{check_no_shrink, Config};
+use ferrompi::util::rng::Rng;
+
+fn i32s(b: &[u8]) -> Vec<i32> {
+    b.chunks(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn bytes(v: &[i32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+/// Random derived typemap generator (nested constructors up to depth 2).
+fn random_typemap(rng: &mut Rng, depth: usize) -> TypeMap {
+    let prim = *rng.choose(&[Primitive::I32, Primitive::U8, Primitive::F64, Primitive::I16]);
+    let base = if depth > 0 && rng.bool() {
+        random_typemap(rng, depth - 1)
+    } else {
+        TypeMap::primitive(prim)
+    };
+    match rng.range(0, 4) {
+        0 => TypeMap::contiguous(rng.range(1, 4), &base),
+        1 => {
+            let bl = rng.range(1, 3);
+            let stride = bl as isize + rng.range(0, 3) as isize;
+            TypeMap::vector(rng.range(1, 3), bl, stride, &base)
+        }
+        2 => TypeMap::indexed(&[(rng.range(1, 3), 0), (1, rng.range(3, 6) as isize)], &base),
+        _ => TypeMap::structure(&[
+            (0, base.clone(), 1),
+            (base.true_extent().max(1) + rng.range(0, 8) as isize, TypeMap::primitive(prim), 1),
+        ]),
+    }
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip_random_types() {
+    check_no_shrink(
+        Config { cases: 200, seed: 0xDA7A, ..Default::default() },
+        |rng| {
+            let map = random_typemap(rng, 2);
+            let count = rng.range(1, 5);
+            (map, count, rng.next_u64())
+        },
+        |(map, count, seed)| {
+            let mut rng = Rng::new(*seed);
+            // Memory region big enough for count elements.
+            let span = ((*count as isize - 1) * map.extent() + map.true_ub()).max(1) as usize;
+            let lb_off = (-map.true_lb()).max(0) as usize;
+            let total = span + lb_off;
+            let mut src = vec![0u8; total];
+            rng.fill_bytes(&mut src);
+            // Roundtrip: pack from src, unpack into zeroed dst, repack.
+            // The wire images must be identical (pack ∘ unpack = id on
+            // wire data), even though padding bytes differ.
+            if map.true_lb() < 0 {
+                return Ok(()); // negative lb needs offset bases; covered in unit tests
+            }
+            let mut wire = Vec::new();
+            pack(map, &src, *count, &mut wire).map_err(|e| e.to_string())?;
+            let mut dst = vec![0u8; total];
+            unpack(map, &wire, &mut dst, *count).map_err(|e| e.to_string())?;
+            let mut wire2 = Vec::new();
+            pack(map, &dst, *count, &mut wire2).map_err(|e| e.to_string())?;
+            if wire != wire2 {
+                return Err(format!("wire mismatch for {map:?} count {count}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_group_set_algebra() {
+    check_no_shrink(
+        Config { cases: 150, seed: 7, ..Default::default() },
+        |rng| {
+            let n = rng.range(1, 12);
+            let world = Group::world(n);
+            let pick = |rng: &mut Rng| {
+                let mut v: Vec<usize> = (0..n).filter(|_| rng.bool()).collect();
+                rng.shuffle(&mut v);
+                v
+            };
+            (world.incl(&pick(rng)).unwrap(), world.incl(&pick(rng)).unwrap())
+        },
+        |(a, b)| {
+            let u = a.union(b);
+            let i = a.intersection(b);
+            let d = a.difference(b);
+            // |A ∪ B| = |A| + |B| - |A ∩ B|
+            if u.size() != a.size() + b.size() - i.size() {
+                return Err("inclusion-exclusion violated".into());
+            }
+            // A \ B and A ∩ B partition A.
+            if d.size() + i.size() != a.size() {
+                return Err("difference/intersection don't partition".into());
+            }
+            // Every member of the intersection is in both.
+            for &m in i.members() {
+                if a.rank_of(m).is_none() || b.rank_of(m).is_none() {
+                    return Err("intersection member missing".into());
+                }
+            }
+            // Union preserves A's order as a prefix.
+            if u.members()[..a.size()] != *a.members() {
+                return Err("union does not start with A".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_p2p_non_overtaking() {
+    // Same (src, dst, tag, comm): messages must be received in send order,
+    // for any interleaving of eager/rendezvous sizes.
+    check_no_shrink(
+        Config { cases: 12, seed: 99, ..Default::default() },
+        |rng| {
+            let n = rng.range(2, 8);
+            (0..n).map(|_| if rng.bool() { 8usize } else { 70_000 }).collect::<Vec<usize>>()
+        },
+        |sizes| {
+            let sizes = sizes.clone();
+            let ok = Universe::test(2).run(move |comm| {
+                let byte = Datatype::primitive(Primitive::Byte);
+                if comm.rank() == 0 {
+                    for (i, &sz) in sizes.iter().enumerate() {
+                        let payload = vec![i as u8; sz];
+                        comm.send(&payload, sz, &byte, 1, 5).unwrap();
+                    }
+                    true
+                } else {
+                    for (i, &sz) in sizes.iter().enumerate() {
+                        let mut buf = vec![0u8; sz];
+                        let st = comm.recv(&mut buf, sz, &byte, 0, 5).unwrap();
+                        if st.bytes != sz || buf[0] != i as u8 {
+                            return false;
+                        }
+                    }
+                    true
+                }
+            });
+            if ok.iter().all(|&b| b) {
+                Ok(())
+            } else {
+                Err("messages overtook".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_allreduce_matches_oracle() {
+    // Random p, random op, random counts: allreduce result equals the
+    // sequentially computed oracle on every rank.
+    check_no_shrink(
+        Config { cases: 12, seed: 0xA11, ..Default::default() },
+        |rng| {
+            let p = rng.range(1, 7);
+            let count = rng.range(1, 40);
+            let op_idx = rng.range(0, 4);
+            let data: Vec<Vec<i32>> = (0..p)
+                .map(|_| (0..count).map(|_| rng.range(0, 1000) as i32 - 500).collect())
+                .collect();
+            (p, count, op_idx, data)
+        },
+        |(p, count, op_idx, data)| {
+            let op = [Op::SUM, Op::PROD, Op::MAX, Op::MIN][*op_idx].clone();
+            // Oracle.
+            let mut oracle = data[0].clone();
+            for r in 1..*p {
+                for (o, v) in oracle.iter_mut().zip(&data[r]) {
+                    *o = match op_idx {
+                        0 => o.wrapping_add(*v),
+                        1 => o.wrapping_mul(*v),
+                        2 => (*o).max(*v),
+                        _ => (*o).min(*v),
+                    };
+                }
+            }
+            let data = data.clone();
+            let count = *count;
+            let results = Universe::test(*p).run(move |comm| {
+                let t = Datatype::primitive(Primitive::I32);
+                let mine = bytes(&data[comm.rank()]);
+                let mut out = vec![0u8; count * 4];
+                collective::allreduce(comm, Some(&mine), &mut out, count, &t, &op).unwrap();
+                i32s(&out)
+            });
+            for (r, got) in results.iter().enumerate() {
+                if got != &oracle {
+                    return Err(format!("rank {r}: {got:?} != oracle {oracle:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scan_prefix_property() {
+    check_no_shrink(
+        Config { cases: 10, seed: 31, ..Default::default() },
+        |rng| {
+            let p = rng.range(2, 7);
+            let vals: Vec<i32> = (0..p).map(|_| rng.range(0, 100) as i32).collect();
+            (p, vals)
+        },
+        |(p, vals)| {
+            let oracle_vals = vals.clone();
+            let vals = vals.clone();
+            let results = Universe::test(*p).run(move |comm| {
+                let t = Datatype::primitive(Primitive::I32);
+                let mine = bytes(&[vals[comm.rank()]]);
+                let mut out = vec![0u8; 4];
+                collective::scan(comm, Some(&mine), &mut out, 1, &t, &Op::SUM).unwrap();
+                i32s(&out)[0]
+            });
+            let mut prefix = 0;
+            for (r, got) in results.iter().enumerate() {
+                prefix += oracle_vals[r];
+                if *got != prefix {
+                    return Err(format!("rank {r}: scan {got} != prefix {prefix}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cart_coords_bijection() {
+    check_no_shrink(
+        Config { cases: 60, seed: 3, ..Default::default() },
+        |rng| {
+            let dims: Vec<usize> = (0..rng.range(1, 4)).map(|_| rng.range(1, 5)).collect();
+            (dims.clone(), rng.next_u64())
+        },
+        |(dims, _)| {
+            let total: usize = dims.iter().product();
+            let dims = dims.clone();
+            let ok = Universe::test(total).run(move |comm| {
+                let periods = vec![true; dims.len()];
+                let cart =
+                    ferrompi::topo::CartComm::create(comm, &dims, &periods, false).unwrap().unwrap();
+                let me = cart.comm().rank();
+                let c = cart.coords(me).unwrap();
+                let back = cart.rank_of(&c.iter().map(|&x| x as i64).collect::<Vec<_>>()).unwrap();
+                back == me
+            });
+            if ok.iter().all(|&b| b) {
+                Ok(())
+            } else {
+                Err("coords/rank_of not a bijection".into())
+            }
+        },
+    );
+}
