@@ -2,8 +2,12 @@
 //! exercising every layer of the stack at once:
 //!
 //! * L3: the MPI substrate — cartesian topology, halo exchange via the
-//!   modern interface's immediate operations, global residual via
-//!   allreduce (optionally through the XLA-offloaded combine op);
+//!   modern interface's **persistent pipelines** (the whole per-iteration
+//!   task graph — pack boundaries → `MPI_Startall` → wait → write ghost
+//!   cells → stencil step — is described *once* before the loop and
+//!   re-fired every step with no per-iteration buffer, datatype-handle or
+//!   continuation allocation), global residual via allreduce (optionally
+//!   through the XLA-offloaded combine op);
 //! * L2/L1: the interior update runs the AOT-compiled Pallas stencil
 //!   kernel (`heat_step_fused_f32.hlo.txt`) through PJRT.
 //!
@@ -14,16 +18,19 @@
 //!
 //! Run: `make artifacts && cargo run --release --example heat_stencil`
 
-use ferrompi::modern::{Communicator, ReduceOp};
+use ferrompi::modern::{Communicator, MpiFuture, Pipeline, ReduceOp, Source, Tag};
 use ferrompi::op::OpKind;
 use ferrompi::runtime;
 use ferrompi::topo::CartComm;
 use ferrompi::universe::Universe;
+use std::cell::RefCell;
+use std::rc::Rc;
 
 const TILE: usize = 64; // must match runtime::TILE
 const EDGE: usize = TILE + 2;
 const STEPS: usize = 300;
 const REPORT_EVERY: usize = 50;
+const HALO_TAG: i32 = 10;
 
 fn main() {
     if !runtime::artifacts_available() {
@@ -55,6 +62,7 @@ fn main() {
                 }
             }
         }
+        let grid = Rc::new(RefCell::new(u));
 
         let (nsrc_s, _) = cart.shift(0, 1).unwrap(); // row-1 neighbor (north)
         let (_, nsth_d) = cart.shift(0, 1).unwrap(); // row+1 neighbor (south)
@@ -62,87 +70,111 @@ fn main() {
         let south = nsth_d;
         let (west, east) = cart.shift(1, 1).unwrap();
 
+        // ---- build the per-step halo pipeline ONCE ----
+        // Each present neighbor contributes a persistent send (our
+        // boundary line) and a persistent receive (their ghost line);
+        // PROC_NULL edges simply contribute nothing (fixed 0 boundary).
+        // `boundary(i)` indexes the cell we send, `ghost(i)` the halo cell
+        // we fill from the received line.
+        type Idx = fn(usize) -> usize;
+        let sides: [(i32, Idx, Idx); 4] = [
+            (north, |i| EDGE + 1 + i, |i| 1 + i),
+            (south, |i| TILE * EDGE + 1 + i, |i| (TILE + 1) * EDGE + 1 + i),
+            (west, |i| (1 + i) * EDGE + 1, |i| (1 + i) * EDGE),
+            (east, |i| (1 + i) * EDGE + TILE, |i| (1 + i) * EDGE + TILE + 1),
+        ];
+
+        let mut legs: Vec<Pipeline<ferrompi::p2p::Status>> = Vec::new();
+        let mut unpacks: Vec<(ferrompi::modern::PersistentRecv<f32>, Idx)> = Vec::new();
+        let mut packs: Vec<(ferrompi::modern::PersistentSend<f32>, Idx)> = Vec::new();
+        for (nb, boundary, ghost) in sides {
+            if nb < 0 {
+                continue; // physical boundary: halo stays 0
+            }
+            let nb = nb as usize;
+            let send = comm.persistent_send::<f32>(TILE, nb, HALO_TAG).unwrap();
+            let recv = comm
+                .persistent_receive::<f32>(TILE, Source::Rank(nb), Tag::Value(HALO_TAG))
+                .unwrap();
+            legs.push(recv.pipeline());
+            legs.push(send.pipeline());
+            packs.push((send, boundary));
+            unpacks.push((recv, ghost));
+        }
+
         let eng = runtime::engine().unwrap();
+        let g_pack = grid.clone();
+        let g_unpack = grid.clone();
+        let step_pipe: Pipeline<f32> = Pipeline::join(legs)
+            // Runs at every `start()`, before MPI_Startall: copy the
+            // current boundary lines into the registered send buffers.
+            .on_start(move || {
+                let g = g_pack.borrow();
+                for (send, boundary) in &packs {
+                    let mut b = send.buffer_mut();
+                    for (i, slot) in b.iter_mut().enumerate() {
+                        *slot = g[boundary(i)];
+                    }
+                }
+                Ok(())
+            })
+            // Runs after every completion: write ghost cells, then the
+            // AOT Pallas stencil step; yields the local residual.
+            .then(move |f| {
+                if let Err(e) = f.get() {
+                    return MpiFuture::err(e);
+                }
+                let mut g = g_unpack.borrow_mut();
+                for (recv, ghost) in &unpacks {
+                    let line = recv.buffer();
+                    for (i, v) in line.iter().enumerate() {
+                        g[ghost(i)] = *v;
+                    }
+                }
+                let (new_interior, local_resid) = match eng.heat_step_fused(&g[..]) {
+                    Ok(v) => v,
+                    Err(e) => return MpiFuture::err(e),
+                };
+                for y in 0..TILE {
+                    let src = &new_interior[y * TILE..(y + 1) * TILE];
+                    g[(y + 1) * EDGE + 1..(y + 1) * EDGE + 1 + TILE].copy_from_slice(src);
+                }
+                MpiFuture::ready(local_resid)
+            });
+
+        // Persistent residual reduction (modern path); the XLA combine op
+        // keeps using the one-shot substrate collective.
+        let resid_sum = comm.persistent_all_reduce::<f32>(1, ReduceOp::Sum).unwrap();
+        let resid_op = resid_sum.op();
         let xla_sum = runtime::xla_op(OpKind::Sum).ok();
+
         let mut curve = Vec::new();
-
         for step in 0..STEPS {
-            // ---- halo exchange (immediate ops + waitall via when_all) ----
-            let row_n: Vec<f32> = (1..=TILE).map(|x| u[EDGE + x]).collect(); // my top row
-            let row_s: Vec<f32> = (1..=TILE).map(|x| u[TILE * EDGE + x]).collect();
-            let col_w: Vec<f32> = (1..=TILE).map(|y| u[y * EDGE + 1]).collect();
-            let col_e: Vec<f32> = (1..=TILE).map(|y| u[y * EDGE + TILE]).collect();
-
-            let mut reqs = Vec::new();
-            let mut gn = vec![0f32; TILE];
-            let mut gs = vec![0f32; TILE];
-            let mut gw = vec![0f32; TILE];
-            let mut ge = vec![0f32; TILE];
-            let c = cart.comm();
-            let dt = <f32 as ferrompi::modern::DataType>::datatype();
-            let tag = 10 + (step % 2) as i32;
-            let as_b = |v: &[f32]| unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            };
-            let as_bm = |v: &mut [f32]| unsafe {
-                std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4)
-            };
-            reqs.push(c.irecv(as_bm(&mut gn), TILE, &dt, north, tag).unwrap());
-            reqs.push(c.irecv(as_bm(&mut gs), TILE, &dt, south, tag).unwrap());
-            reqs.push(c.irecv(as_bm(&mut gw), TILE, &dt, west, tag).unwrap());
-            reqs.push(c.irecv(as_bm(&mut ge), TILE, &dt, east, tag).unwrap());
-            reqs.push(c.isend(as_b(&row_n), TILE, &dt, north, tag).unwrap());
-            reqs.push(c.isend(as_b(&row_s), TILE, &dt, south, tag).unwrap());
-            reqs.push(c.isend(as_b(&col_w), TILE, &dt, west, tag).unwrap());
-            reqs.push(c.isend(as_b(&col_e), TILE, &dt, east, tag).unwrap());
-            ferrompi::request::wait_all(&reqs).unwrap();
-
-            // Write halos (PROC_NULL edges leave the fixed 0 boundary).
-            if north >= 0 {
-                for x in 1..=TILE {
-                    u[x] = gn[x - 1];
-                }
-            }
-            if south >= 0 {
-                for x in 1..=TILE {
-                    u[(TILE + 1) * EDGE + x] = gs[x - 1];
-                }
-            }
-            if west >= 0 {
-                for y in 1..=TILE {
-                    u[y * EDGE] = gw[y - 1];
-                }
-            }
-            if east >= 0 {
-                for y in 1..=TILE {
-                    u[y * EDGE + TILE + 1] = ge[y - 1];
-                }
-            }
-
-            // ---- interior update on the AOT Pallas kernel ----
-            let (new_interior, local_resid) = eng.heat_step_fused(&u).unwrap();
-            for y in 0..TILE {
-                let src = &new_interior[y * TILE..(y + 1) * TILE];
-                u[(y + 1) * EDGE + 1..(y + 1) * EDGE + 1 + TILE].copy_from_slice(src);
-            }
+            // ---- fire one iteration of the described-once task graph ----
+            let local_resid = step_pipe.run().unwrap();
 
             // ---- global residual (XLA combine op when available) ----
             if step % REPORT_EVERY == 0 || step + 1 == STEPS {
                 let global = match &xla_sum {
                     Some(op) => {
                         let mut out = [0f32];
-                        ferrompi::collective::allreduce(
-                            c,
-                            Some(as_b(&[local_resid])),
-                            as_bm(&mut out),
-                            1,
-                            &dt,
-                            op,
-                        )
-                        .unwrap();
+                        let inb = [local_resid];
+                        let as_b = unsafe {
+                            std::slice::from_raw_parts(inb.as_ptr() as *const u8, 4)
+                        };
+                        let as_bm = unsafe {
+                            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, 4)
+                        };
+                        let dt = <f32 as ferrompi::modern::DataType>::datatype();
+                        ferrompi::collective::allreduce(cart.comm(), Some(as_b), as_bm, 1, &dt, op)
+                            .unwrap();
                         out[0]
                     }
-                    None => comm.all_reduce(local_resid, ReduceOp::Sum).unwrap(),
+                    None => {
+                        resid_sum.write(&[local_resid]);
+                        resid_op.start().unwrap().get().unwrap();
+                        resid_sum.output()[0]
+                    }
                 };
                 if me == 0 {
                     curve.push((step, global.sqrt()));
@@ -164,7 +196,7 @@ fn main() {
     }
     let wall = t_total.elapsed().as_secs_f64();
     println!(
-        "total {:.2}s wall, {:.2} ms/step ({} PJRT stencil executions + halo exchanges)",
+        "total {:.2}s wall, {:.2} ms/step ({} PJRT stencil executions + persistent halo pipelines)",
         wall,
         wall * 1e3 / STEPS as f64,
         STEPS * 16

@@ -1,0 +1,7 @@
+"""Make the `compile` package importable when pytest is invoked from the
+repository root (CI runs `python -m pytest python/tests`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

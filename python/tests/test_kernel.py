@@ -7,7 +7,9 @@ denormal-ish magnitudes, infs and ties.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax.numpy as jnp
 

@@ -1,9 +1,12 @@
 //! A2 — futures-vs-raw-wait overhead: the same nonblocking ping-pong
-//! through (a) raw isend/irecv + wait handles, (b) modern requests, and
-//! (c) modern futures with a `.then` continuation — measuring what the
-//! paper's future abstraction costs on top of the request layer.
+//! through (a) raw isend/irecv + wait handles, (b) modern requests,
+//! (c) modern futures with a `.then` continuation, and (d) a *persistent
+//! pipeline* built once and re-fired per iteration — measuring what the
+//! paper's future abstraction costs on top of the request layer, and what
+//! the persistent template saves versus re-describing the operation every
+//! time (paper §IV extended to persistent operations).
 
-use ferrompi::modern::{Communicator, Source, Tag};
+use ferrompi::modern::{Communicator, Pipeline, Source, Tag};
 use ferrompi::raw;
 use ferrompi::universe::Universe;
 use ferrompi::util::stats::mean;
@@ -76,6 +79,28 @@ fn main() {
         }
     });
 
-    println!("\nratios: requests/raw = {:.3}, futures/raw = {:.3}, futures/requests = {:.3}",
-        req_t / raw_t, fut_t / raw_t, fut_t / req_t);
+    let pers_t = bench_job("modern: persistent pipeline (built once)", |world, iters| {
+        let comm = Communicator::world(world);
+        let peer = 1 - comm.rank();
+        // Build phase — not on the timed path conceptually, but cheap and
+        // amortized over every warmup+timed iteration anyway.
+        let send = comm.persistent_send::<i32>(1, peer, 0).unwrap();
+        let recv = comm.persistent_receive::<i32>(1, Source::Rank(peer), Tag::Value(0)).unwrap();
+        send.write(&[1]);
+        let pipe = Pipeline::join(vec![recv.pipeline(), send.pipeline()]);
+        for _ in 0..iters {
+            // One MPI_Startall + completion chain; no buffer, datatype or
+            // continuation allocation per iteration.
+            pipe.run().unwrap();
+        }
+    });
+
+    println!(
+        "\nratios: requests/raw = {:.3}, futures/raw = {:.3}, futures/requests = {:.3}, persistent/raw = {:.3}, persistent/futures = {:.3}",
+        req_t / raw_t,
+        fut_t / raw_t,
+        fut_t / req_t,
+        pers_t / raw_t,
+        pers_t / fut_t
+    );
 }

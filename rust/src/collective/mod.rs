@@ -7,9 +7,11 @@
 
 pub mod builders;
 pub mod config;
+pub mod persistent;
 pub mod schedule;
 
 pub use config::{AllreduceAlg, BcastAlg};
+pub use persistent::PersistentColl;
 
 use crate::comm::Comm;
 use crate::datatype::Datatype;
@@ -57,6 +59,13 @@ pub fn ibarrier(comm: &Comm) -> Result<Request> {
     Ok(run_nonblocking(state(comm, &d, None, builders::barrier(comm), "ibarrier")))
 }
 
+/// `MPI_Barrier_init` (MPI-4.0 §6.13): build the dissemination schedule
+/// once; each `start()` re-runs it with no allocation.
+pub fn barrier_init(comm: &Comm) -> Result<PersistentColl> {
+    let d = byte();
+    Ok(PersistentColl::new(state(comm, &d, None, builders::barrier(comm), "barrier")))
+}
+
 // ---------------- bcast ----------------
 
 /// `MPI_Bcast`.
@@ -71,6 +80,16 @@ pub fn ibcast(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root:
     dtype.require_committed()?;
     let sched = builders::bcast(comm, buf, count, dtype, root, config::bcast_alg());
     Ok(run_nonblocking(state(comm, dtype, None, sched, "ibcast")))
+}
+
+/// `MPI_Bcast_init`. The schedule captures `buf` by raw pointer: the
+/// caller keeps the buffer alive and stable for the template's lifetime
+/// (the standard's persistent-buffer contract) and refills it between
+/// `start()`s; root re-packs, non-roots re-unpack on every execution.
+pub fn bcast_init(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Result<PersistentColl> {
+    dtype.require_committed()?;
+    let sched = builders::bcast(comm, buf, count, dtype, root, config::bcast_alg());
+    Ok(PersistentColl::new(state(comm, dtype, None, sched, "bcast")))
 }
 
 // ---------------- reduce / allreduce ----------------
@@ -132,6 +151,23 @@ pub fn iallreduce(
     dtype.require_committed()?;
     let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, config::allreduce_alg());
     Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "iallreduce")))
+}
+
+/// `MPI_Allreduce_init`. Buffer contract as in [`bcast_init`]: both
+/// buffers are captured by pointer for the template's lifetime; every
+/// `start()` re-packs `sbuf` (or `rbuf` for IN_PLACE) and re-unpacks the
+/// result into `rbuf`.
+pub fn allreduce_init(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+) -> Result<PersistentColl> {
+    dtype.require_committed()?;
+    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, config::allreduce_alg());
+    Ok(PersistentColl::new(state(comm, dtype, Some(op.clone()), sched, "allreduce")))
 }
 
 // ---------------- gather / scatter ----------------

@@ -1,0 +1,155 @@
+//! Persistent collective operations (MPI-4.0 §6.13): `MPI_Barrier_init`,
+//! `MPI_Bcast_init`, `MPI_Allreduce_init` and friends produce a reusable
+//! operation *template* that is `start()`-ed once per iteration.
+//!
+//! The template is a [`CollState`] whose round-based [`Schedule`] is built
+//! exactly once: arena, wire-format layout, peer/tag assignments and
+//! datatype handles are all fixed at init time. A restart merely rewinds
+//! the round counter and re-zeroes the (already allocated) arena, so the
+//! per-iteration cost is the communication itself — the "zero-overhead
+//! reusable operation template" the modern layer's pipelines build on.
+//!
+//! Init calls are collective and must be issued in the same order on every
+//! rank of the communicator (they consume one collective sequence number,
+//! which pins the template's tag block), exactly like the standard's
+//! persistent-collective init semantics. Matching across iterations is
+//! safe with a fixed tag block because the fabric preserves per-sender
+//! FIFO ordering (non-overtaking), so iteration `i`'s transfers match
+//! before iteration `i+1`'s.
+
+use super::schedule::CollState;
+use crate::p2p::{engine, Status};
+use crate::{mpi_err, Result};
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// A persistent collective operation template.
+///
+/// Lifecycle: inactive → [`start`](PersistentColl::start) → active →
+/// [`wait`](PersistentColl::wait)/[`test`](PersistentColl::test) success →
+/// inactive again, restartable. Starting an active template or completing
+/// an inactive one is a `Request`-class error, mirroring `MPI_Start`
+/// rules.
+pub struct PersistentColl {
+    state: Rc<CollState>,
+    active: Cell<bool>,
+    /// Set when an *engine* error (not an operation-level error) escaped
+    /// a wait/test: the execution state is unknown, so the template
+    /// refuses restarts with a clear error instead of wedging on
+    /// "already active".
+    poisoned: Cell<bool>,
+}
+
+impl PersistentColl {
+    pub(crate) fn new(state: Rc<CollState>) -> PersistentColl {
+        PersistentColl { state, active: Cell::new(false), poisoned: Cell::new(false) }
+    }
+
+    /// Diagnostic label ("barrier", "bcast", "allreduce", ...).
+    pub fn name(&self) -> &'static str {
+        self.state.name
+    }
+
+    /// Started and not yet completed by `wait`/`test`.
+    pub fn is_active(&self) -> bool {
+        self.active.get()
+    }
+
+    /// `MPI_Start`: activate the template for one more execution. No
+    /// allocation happens here — the schedule, arena and datatype handles
+    /// are reused as-is.
+    pub fn start(&self) -> Result<()> {
+        if self.poisoned.get() {
+            return Err(mpi_err!(
+                Request,
+                "persistent {} unusable after an engine error",
+                self.state.name
+            ));
+        }
+        if self.active.get() {
+            return Err(mpi_err!(
+                Request,
+                "MPI_Start on an already active persistent {}",
+                self.state.name
+            ));
+        }
+        self.state.reset();
+        self.state.register_in_engine();
+        self.active.set(true);
+        let ctx = self.state.rank_ctx().clone();
+        // One engine turn so local-only schedules complete inline (and the
+        // first round's transfers are posted before the caller blocks).
+        // An engine error here leaves the execution state unknown, same
+        // as in wait/test: poison the template.
+        if let Err(e) = engine::progress(&ctx) {
+            self.poisoned.set(true);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Wait for the active execution; the template stays reusable. An
+    /// operation-level error (stored by the schedule) completes the
+    /// execution and still allows a restart; an error from the engine
+    /// itself leaves the execution state unknown and poisons the
+    /// template.
+    pub fn wait(&self) -> Result<Status> {
+        if !self.active.get() {
+            return Err(mpi_err!(Request, "wait on inactive persistent {}", self.state.name));
+        }
+        let ctx = self.state.rank_ctx().clone();
+        if let Err(e) = engine::wait_for(&ctx, || self.state.finished()) {
+            self.poisoned.set(true);
+            return Err(e);
+        }
+        self.active.set(false);
+        self.state.take_result().map(|()| Status::empty())
+    }
+
+    /// Nonblocking completion check (`MPI_Test` on the active execution).
+    pub fn test(&self) -> Result<Option<Status>> {
+        if !self.active.get() {
+            return Err(mpi_err!(Request, "test on inactive persistent {}", self.state.name));
+        }
+        let ctx = self.state.rank_ctx().clone();
+        if let Err(e) = engine::progress(&ctx) {
+            self.poisoned.set(true);
+            return Err(e);
+        }
+        if self.state.finished() {
+            self.active.set(false);
+            self.state.take_result().map(|()| Some(Status::empty()))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+impl Drop for PersistentColl {
+    /// Dropping an active template blocks until the in-flight execution
+    /// completes: the schedule holds raw pointers into caller-owned
+    /// buffers, so letting the engine keep turning it after those buffers
+    /// die would be unsound. (Matches `MPI_Request_free` on an active
+    /// persistent request, which also defers destruction to completion.)
+    fn drop(&mut self) {
+        // While unwinding, skip the blocking wait: a never-completing peer
+        // would trip the deadlock watchdog *inside* drop and abort the
+        // process, masking the original panic. The engine only progresses
+        // on this (dying) thread, so the captured buffers are not touched
+        // again either way.
+        if self.active.get() && !std::thread::panicking() {
+            let ctx = self.state.rank_ctx().clone();
+            let _ = engine::wait_for(&ctx, || self.state.finished());
+            let _ = self.state.take_result();
+        }
+    }
+}
+
+impl std::fmt::Debug for PersistentColl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PersistentColl")
+            .field("name", &self.state.name)
+            .field("active", &self.active.get())
+            .finish()
+    }
+}

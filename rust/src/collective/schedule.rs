@@ -144,6 +144,11 @@ pub struct CollState {
     outstanding_recvs: RefCell<Vec<u64>>,
     done: Cell<bool>,
     error: RefCell<Option<MpiError>>,
+    /// Whether this state is currently registered with the progress
+    /// engine (kept accurate by [`CollState::register_in_engine`] and the
+    /// engine-driven `advance`, so a persistent restart never
+    /// double-registers).
+    in_engine: Cell<bool>,
     /// Label for diagnostics ("bcast", "allreduce", ...).
     pub name: &'static str,
 }
@@ -179,8 +184,46 @@ impl CollState {
             outstanding_recvs: RefCell::new(Vec::new()),
             done: Cell::new(false),
             error: RefCell::new(None),
+            in_engine: Cell::new(false),
             name,
         })
+    }
+
+    pub(crate) fn rank_ctx(&self) -> &Rc<RankCtx> {
+        &self.ctx
+    }
+
+    /// Rewind a completed schedule so it can run again (the persistent
+    /// collective restart, MPI-4.0 §6.13). The arena is kept — same
+    /// allocation, re-zeroed — and the schedule, datatype handle and tag
+    /// base are untouched, so a restart allocates nothing.
+    ///
+    /// Caller contract: only when the previous run finished (successfully
+    /// or with an error) or the state was never started. A successful run
+    /// leaves no outstanding transfers; a run that *errored* mid-schedule
+    /// may — its still-posted receives are cancelled here (they share the
+    /// restart's tags and would otherwise steal its messages), its send
+    /// tokens drained best-effort.
+    pub(crate) fn reset(&self) {
+        for t in self.outstanding_recvs.borrow_mut().drain(..) {
+            let _ = engine::cancel_recv(&self.ctx, t);
+            let _ = engine::take_recv_result(&self.ctx, t);
+        }
+        for t in self.outstanding_sends.borrow_mut().drain(..) {
+            let _ = engine::take_send_done(&self.ctx, t);
+        }
+        self.round.set(0);
+        self.done.set(false);
+        *self.error.borrow_mut() = None;
+        self.arena.borrow_mut().fill(0);
+    }
+
+    /// Register with the progress engine unless already registered.
+    pub(crate) fn register_in_engine(self: &Rc<Self>) {
+        if !self.in_engine.get() {
+            self.in_engine.set(true);
+            self.ctx.register_progressable(self.clone());
+        }
     }
 
     fn tag(&self, off: u8) -> i32 {
@@ -348,12 +391,19 @@ fn split_ranges<'a>(
 impl Progressable for CollState {
     fn advance(&self, _ctx: &Rc<RankCtx>) -> Result<bool> {
         if self.finished() {
+            self.in_engine.set(false);
             return Ok(true);
         }
         match self.turn() {
-            Ok(done) => Ok(done),
+            Ok(done) => {
+                if done {
+                    self.in_engine.set(false);
+                }
+                Ok(done)
+            }
             Err(e) => {
                 *self.error.borrow_mut() = Some(e);
+                self.in_engine.set(false);
                 Ok(true) // finished (with error); surfaced at take_result
             }
         }
@@ -373,7 +423,7 @@ impl CustomRequest for CollState {
 /// Run a schedule to completion (the blocking collective entry).
 pub fn run_blocking(state: Rc<CollState>) -> Result<()> {
     let ctx = state.ctx.clone();
-    ctx.register_progressable(state.clone());
+    state.register_in_engine();
     engine::wait_for(&ctx, || state.finished())?;
     state.take_result()
 }
@@ -381,7 +431,7 @@ pub fn run_blocking(state: Rc<CollState>) -> Result<()> {
 /// Wrap a schedule as a nonblocking request.
 pub fn run_nonblocking(state: Rc<CollState>) -> crate::request::Request {
     let ctx = state.ctx.clone();
-    ctx.register_progressable(state.clone());
+    state.register_in_engine();
     // Kick it once so single-round local-only schedules complete inline.
     let _ = state.advance(&ctx);
     crate::request::Request::custom(ctx, state)

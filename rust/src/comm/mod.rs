@@ -13,8 +13,8 @@ pub mod create;
 use crate::datatype::Datatype;
 use crate::error::ErrorHandler;
 use crate::group::{Comparison, Group};
-use crate::p2p::{self, engine, RankCtx, RawBufMut, SendMode, Status};
-use crate::request::Request;
+use crate::p2p::{self, engine, RankCtx, RawBuf, RawBufMut, SendMode, Status};
+use crate::request::{PersistentRequest, Request};
 use crate::{mpi_err, Result};
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -301,6 +301,63 @@ impl Comm {
             self.group.clone(),
         )?;
         Ok(Request::from_recv(self.ctx.clone(), token))
+    }
+
+    // ---- persistent point-to-point (§3.9) ----
+
+    /// `MPI_Send_init` (and siblings by mode): a reusable send template.
+    /// The buffer is captured by pointer for the template's lifetime; its
+    /// contents are re-packed at every `start()`, so the caller refills it
+    /// between iterations.
+    pub fn send_init_mode(
+        &self,
+        buf: &[u8],
+        count: usize,
+        dtype: &Datatype,
+        dst: i32,
+        tag: i32,
+        mode: SendMode,
+    ) -> Result<PersistentRequest> {
+        self.check_send_tag(tag)?;
+        let dst_world = self.resolve_dst(dst)?;
+        Ok(PersistentRequest::send_init(
+            self.ctx.clone(),
+            self.ctx_p2p,
+            dst_world,
+            tag,
+            RawBuf::from_slice(buf),
+            count,
+            dtype.clone(),
+            mode,
+        ))
+    }
+
+    pub fn send_init(&self, buf: &[u8], count: usize, dtype: &Datatype, dst: i32, tag: i32) -> Result<PersistentRequest> {
+        self.send_init_mode(buf, count, dtype, dst, tag, SendMode::Standard)
+    }
+
+    /// `MPI_Recv_init`: a reusable receive template. The buffer is
+    /// captured until the template is dropped; each completed `start()`
+    /// leaves the received payload in it.
+    pub fn recv_init(&self, buf: &mut [u8], count: usize, dtype: &Datatype, src: i32, tag: i32) -> Result<PersistentRequest> {
+        let tag_sel = self.resolve_recv_tag(tag)?;
+        let src_world = match self.resolve_src(src)? {
+            SrcSel::ProcNull => {
+                return Err(mpi_err!(Rank, "recv_init with MPI_PROC_NULL source unsupported"))
+            }
+            SrcSel::Any => None,
+            SrcSel::Rank(w) => Some(w),
+        };
+        Ok(PersistentRequest::recv_init(
+            self.ctx.clone(),
+            self.ctx_p2p,
+            src_world,
+            tag_sel,
+            RawBufMut::from_slice(buf),
+            count,
+            dtype.clone(),
+            self.group.clone(),
+        ))
     }
 
     /// `MPI_Sendrecv`.

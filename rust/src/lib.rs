@@ -19,6 +19,43 @@
 //! Plus the three-layer compute bridge ([`runtime`]: AOT HLO artifacts
 //! executed via PJRT) and the evaluation harness
 //! ([`coordinator`]: the mpiBench port regenerating Figure 1).
+//!
+//! ## Persistent pipelines
+//!
+//! The paper maps *immediate and persistent* operations to futures. The
+//! persistent half lives in [`modern::pipeline`]: `persistent_*` methods
+//! on [`modern::Communicator`] build a reusable operation template
+//! (`MPI_Send_init`, `MPI_Bcast_init`, `MPI_Allreduce_init`, …) whose
+//! buffers, datatype handles and continuation chain are allocated once;
+//! each `start()` (`MPI_Start`/`MPI_Startall`) re-fires the template and
+//! yields a fresh [`modern::MpiFuture`] with no per-iteration allocation:
+//!
+//! ```
+//! use ferrompi::modern::{Communicator, ReduceOp};
+//! use ferrompi::universe::Universe;
+//!
+//! let sums = Universe::test(2).run(|world| {
+//!     let comm = Communicator::world(world);
+//!     // Built once: a persistent allreduce template (MPI_Allreduce_init).
+//!     let sum = comm.persistent_all_reduce::<i64>(1, ReduceOp::Sum).unwrap();
+//!     let op = sum.op();
+//!     let mut out = Vec::new();
+//!     for it in 0..3i64 {
+//!         sum.write(&[comm.rank() as i64 + it]); // refill the registered buffer
+//!         op.start().unwrap().get().unwrap();    // MPI_Start → fresh future
+//!         out.push(sum.output()[0]);             // (0+it) + (1+it) = 1 + 2·it
+//!     }
+//!     out
+//! });
+//! assert_eq!(sums, vec![vec![1, 3, 5], vec![1, 3, 5]]);
+//! ```
+//!
+//! Whole per-iteration task graphs — several templates joined with
+//! [`modern::Pipeline::all`]/[`modern::Pipeline::join`], continuations
+//! attached to the *template* with [`modern::Pipeline::then`], pre-start
+//! packing hooks via [`modern::Pipeline::on_start`] — are described once
+//! and re-fired in a loop; see `examples/heat_stencil.rs` for a halo
+//! exchange written this way.
 
 // Allow `::ferrompi::...` paths (emitted by the derive macro) to resolve
 // inside this crate's own tests.

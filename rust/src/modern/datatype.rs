@@ -8,10 +8,9 @@
 //! user aggregates — Listing 1 of the paper.
 
 use crate::datatype::{Datatype, Primitive, TypeMap};
-use once_cell::sync::Lazy;
 use std::any::TypeId;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 /// A type with a compile-time-known MPI typemap.
 ///
@@ -26,8 +25,8 @@ pub unsafe trait DataType: Copy + 'static {
     /// `TypeId`, so the typemap is built once — the compile-time
     /// generation of the paper, amortized).
     fn datatype() -> Datatype {
-        static CACHE: Lazy<Mutex<HashMap<TypeId, Datatype>>> = Lazy::new(|| Mutex::new(HashMap::new()));
-        let mut cache = CACHE.lock().unwrap();
+        static CACHE: OnceLock<Mutex<HashMap<TypeId, Datatype>>> = OnceLock::new();
+        let mut cache = CACHE.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
         cache
             .entry(TypeId::of::<Self>())
             .or_insert_with(|| {

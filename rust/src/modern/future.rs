@@ -12,6 +12,7 @@
 use crate::p2p::Status;
 use crate::request::{self, Request};
 use crate::{mpi_err, Result};
+use std::rc::Rc;
 
 enum Inner<T> {
     /// Backed directly by an MPI request; `extract` turns the completed
@@ -19,6 +20,11 @@ enum Inner<T> {
     Pending { req: Request, extract: Box<dyn FnOnce(Status) -> Result<T>> },
     /// A continuation chain not yet driven.
     Deferred(Box<dyn FnOnce() -> Result<T>>),
+    /// A *shared* drive thunk, owned by a restartable pipeline template
+    /// ([`super::pipeline::Pipeline`]). Each `start()` hands out a future
+    /// holding another `Rc` clone of the same thunk, so re-firing a
+    /// pipeline allocates nothing.
+    Shared(Rc<dyn Fn() -> Result<T>>),
     Ready(Result<T>),
     Consumed,
 }
@@ -47,6 +53,18 @@ impl<T: 'static> MpiFuture<T> {
         MpiFuture { inner: Inner::Deferred(Box::new(f)) }
     }
 
+    /// A future backed by a shared, re-runnable drive thunk (the pipeline
+    /// restart path — see [`super::pipeline`]). Allocation-free per call:
+    /// only the `Rc` refcount moves.
+    pub(crate) fn from_shared(f: Rc<dyn Fn() -> Result<T>>) -> MpiFuture<T> {
+        MpiFuture { inner: Inner::Shared(f) }
+    }
+
+    /// Wrap an already-computed result (ready or errored).
+    pub fn from_result(r: Result<T>) -> MpiFuture<T> {
+        MpiFuture { inner: Inner::Ready(r) }
+    }
+
     /// `future::get()`: drive to completion and take the value.
     pub fn get(mut self) -> Result<T> {
         self.resolve()
@@ -59,6 +77,7 @@ impl<T: 'static> MpiFuture<T> {
                 extract(status)
             }
             Inner::Deferred(f) => f(),
+            Inner::Shared(f) => f(),
             Inner::Ready(v) => v,
             Inner::Consumed => Err(mpi_err!(Request, "future already consumed")),
         }
@@ -84,7 +103,10 @@ impl<T: 'static> MpiFuture<T> {
                 }
             },
             other => {
-                let ready = !matches!(other, Inner::Deferred(_));
+                // Deferred/Shared chains are not observable without driving
+                // them; a Consumed future no longer has a value to be ready
+                // *with* (it reports false, not true — `.get()` would fail).
+                let ready = matches!(other, Inner::Ready(_));
                 self.inner = other;
                 ready
             }
@@ -132,6 +154,7 @@ pub fn when_all<T: 'static>(futures: Vec<MpiFuture<T>>) -> MpiFuture<Vec<T>> {
                     slots.push(None);
                 }
                 Inner::Deferred(f) => slots.push(Some(f())),
+                Inner::Shared(f) => slots.push(Some(f())),
                 Inner::Ready(v) => slots.push(Some(v)),
                 Inner::Consumed => slots.push(Some(Err(mpi_err!(Request, "consumed future")))),
             }
@@ -163,7 +186,14 @@ impl<T: 'static> WhenAnyResult<T> {
 /// `mpi::when_any`: completes when one does; request-backed members are
 /// forwarded to `MPI_Waitany`. The un-completed futures survive in the
 /// result.
+///
+/// An empty future set is reported as an `Arg`-class error immediately
+/// (there is nothing that could ever complete), not deferred to resolve
+/// time.
 pub fn when_any<T: 'static>(futures: Vec<MpiFuture<T>>) -> MpiFuture<WhenAnyResult<T>> {
+    if futures.is_empty() {
+        return MpiFuture::err(mpi_err!(Arg, "when_any of an empty future set"));
+    }
     MpiFuture::deferred(move || {
         // Any already-ready member wins immediately.
         if let Some(i) = futures.iter().position(|f| matches!(f.inner, Inner::Ready(_))) {
@@ -201,16 +231,21 @@ pub fn when_any<T: 'static>(futures: Vec<MpiFuture<T>>) -> MpiFuture<WhenAnyResu
             }
             return Ok(WhenAnyResult { index: i, futures });
         }
-        // Only deferred chains left: drive the first.
-        match futures.iter().position(|f| matches!(f.inner, Inner::Deferred(_))) {
+        // Only deferred/shared chains left: drive the first.
+        match futures
+            .iter()
+            .position(|f| matches!(f.inner, Inner::Deferred(_) | Inner::Shared(_)))
+        {
             Some(i) => {
                 let fut = &mut futures[i];
-                if let Inner::Deferred(f) = std::mem::replace(&mut fut.inner, Inner::Consumed) {
-                    fut.inner = Inner::Ready(f());
+                match std::mem::replace(&mut fut.inner, Inner::Consumed) {
+                    Inner::Deferred(f) => fut.inner = Inner::Ready(f()),
+                    Inner::Shared(f) => fut.inner = Inner::Ready(f()),
+                    _ => unreachable!("position matched a deferred/shared future"),
                 }
                 Ok(WhenAnyResult { index: i, futures })
             }
-            None => Err(mpi_err!(Request, "when_any of empty future set")),
+            None => Err(mpi_err!(Arg, "when_any of only consumed futures")),
         }
     })
 }

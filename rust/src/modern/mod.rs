@@ -9,6 +9,7 @@
 //! | `mpi::compliant` concept               | the [`datatype::DataType`] trait          |
 //! | requests → futures, `.then()` chains   | [`future::MpiFuture`], `.then()`/`.map()` |
 //! | `mpi::when_all` / `when_any`           | [`future::when_all`] / [`future::when_any`] (forwarding to waitall/waitany) |
+//! | persistent ops → restartable futures   | [`pipeline::Pipeline`] / [`pipeline::PersistentOp`]: `persistent_*` templates built once, `MPI_Start(all)`-ed per iteration, `.then()` chains attached to the template |
 //! | scoped enums                           | [`enums`]                                 |
 //! | `std::optional` returns                | `Option` (e.g. [`Communicator::immediate_probe`]) |
 //! | exceptions w/ error codes              | `Result<T, MpiError>`; `panic-on-error` feature |
@@ -19,12 +20,17 @@ pub mod datatype;
 pub mod enums;
 pub mod file;
 pub mod future;
+pub mod pipeline;
 pub mod window;
 
 pub use communicator::{Communicator, Source, Tag, DEFAULT_TAG};
 pub use datatype::{Buffer, BufferMut, Complex, DataType};
 pub use enums::*;
 pub use future::{when_all, when_any, MpiFuture, WhenAnyResult};
+pub use pipeline::{
+    start_all, PersistentAllReduce, PersistentBarrier, PersistentBroadcast, PersistentOp,
+    PersistentRecv, PersistentSend, Pipeline, Restartable,
+};
 pub use window::RmaWindow;
 
 // Re-export the derive macro so `use ferrompi::modern::DataType` +

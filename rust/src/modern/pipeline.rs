@@ -1,0 +1,687 @@
+//! **Persistent operations as restartable future pipelines.**
+//!
+//! The paper maps *immediate and persistent* operations to futures; this
+//! module supplies the persistent half for the modern interface. A
+//! [`Pipeline<T>`] is an asynchronous task graph *described once* —
+//! persistent operation templates plus a `.then()` continuation chain —
+//! and re-fired every iteration:
+//!
+//! ```text
+//! build (once):   leaves = persistent_* templates   ─┐
+//!                 pipeline = Pipeline::all(...)      │ allocates
+//!                     .then(|..| ...)                ─┘
+//! iterate (hot):  pipeline.start()? -> MpiFuture<T>  — allocation-free
+//!                 future.get()?                      — waits + runs chain
+//! ```
+//!
+//! `start()` maps to `MPI_Start`/`MPI_Startall` over every template in the
+//! graph; buffers, datatype handles, collective schedules and the
+//! continuation closures are all created at build time and reused, so the
+//! per-iteration software cost is bounded by the request layer's (see
+//! `bench_futures`).
+//!
+//! Leaves own their message buffers (`Rc`-shared, stable addresses): the
+//! caller refills a send buffer via [`PersistentSend::buffer_mut`] before
+//! each `start()` — or from an [`Pipeline::on_start`] hook so the packing
+//! too is part of the described-once graph — and reads receive buffers
+//! after completion, typically from a continuation holding a clone of the
+//! leaf handle.
+//!
+//! Dropping any leaf or pipeline whose operation is still in flight
+//! blocks until completion (the buffers it owns are registered with the
+//! engine; see `PersistentRequest`/`PersistentColl` drop semantics).
+
+use super::communicator::Communicator;
+use super::datatype::DataType;
+use super::enums::ReduceOp;
+use super::future::MpiFuture;
+use crate::collective::{self, PersistentColl};
+use crate::comm::Comm;
+use crate::op::Op;
+use crate::p2p::Status;
+use crate::request::PersistentRequest;
+use crate::Result;
+use std::cell::{Ref, RefCell, RefMut};
+use std::rc::Rc;
+
+/// A restartable operation template: the object-safe core shared by
+/// persistent point-to-point requests and persistent collectives.
+/// `start` activates one more execution (`MPI_Start`), `complete` blocks
+/// for it and leaves the template reusable.
+pub trait Restartable {
+    fn start(&self) -> Result<()>;
+    fn is_active(&self) -> bool;
+    fn complete(&self) -> Result<Status>;
+}
+
+impl Restartable for PersistentRequest {
+    fn start(&self) -> Result<()> {
+        PersistentRequest::start(self)
+    }
+
+    fn is_active(&self) -> bool {
+        PersistentRequest::is_active(self)
+    }
+
+    fn complete(&self) -> Result<Status> {
+        PersistentRequest::wait(self)
+    }
+}
+
+impl Restartable for PersistentColl {
+    fn start(&self) -> Result<()> {
+        PersistentColl::start(self)
+    }
+
+    fn is_active(&self) -> bool {
+        PersistentColl::is_active(self)
+    }
+
+    fn complete(&self) -> Result<Status> {
+        PersistentColl::wait(self)
+    }
+}
+
+/// `MPI_Startall` over any mix of templates (p2p and collective): start
+/// every one, first error wins. Like the standard's `MPI_Startall`, no
+/// template may already be active.
+pub fn start_all(ops: &[&dyn Restartable]) -> Result<()> {
+    for op in ops {
+        op.start()?;
+    }
+    Ok(())
+}
+
+// ---------------- buffers ----------------
+
+/// An `Rc`-shared, fixed-address element buffer. The boxed slice is never
+/// reallocated, so raw pointers registered with the engine at init time
+/// stay valid for the buffer's lifetime.
+type SharedBuf<T> = Rc<RefCell<Box<[T]>>>;
+
+fn shared_buf<T: DataType + Default>(count: usize) -> SharedBuf<T> {
+    Rc::new(RefCell::new(vec![T::default(); count].into_boxed_slice()))
+}
+
+/// Byte view of a shared buffer's (stable) allocation. Lifetime-erased on
+/// purpose: the template captures the pointer, the leaf's `Rc` keeps the
+/// allocation alive at least as long as the template.
+fn bytes_of<T: DataType>(buf: &SharedBuf<T>) -> &'static [u8] {
+    let b = buf.borrow();
+    let s: &[T] = &b;
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
+}
+
+#[allow(clippy::mut_from_ref)]
+fn bytes_of_mut<T: DataType>(buf: &SharedBuf<T>) -> &'static mut [u8] {
+    let mut b = buf.borrow_mut();
+    let s: &mut [T] = &mut b;
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u8, std::mem::size_of_val(s)) }
+}
+
+// ---------------- typed single-op facade ----------------
+
+/// A single restartable operation bound to a typed completion value — the
+/// paper's "persistent operations are mapped to futures": `start()` yields
+/// a fresh [`MpiFuture<T>`] per iteration with no allocation.
+pub struct PersistentOp<T> {
+    template: Rc<dyn Restartable>,
+    complete: Rc<dyn Fn() -> Result<T>>,
+}
+
+impl<T> Clone for PersistentOp<T> {
+    fn clone(&self) -> Self {
+        PersistentOp { template: self.template.clone(), complete: self.complete.clone() }
+    }
+}
+
+impl<T: 'static> PersistentOp<T> {
+    fn new(template: Rc<dyn Restartable>, complete: Rc<dyn Fn() -> Result<T>>) -> PersistentOp<T> {
+        PersistentOp { template, complete }
+    }
+
+    /// `MPI_Start`: activate one more execution and hand back its future.
+    pub fn start(&self) -> Result<MpiFuture<T>> {
+        self.template.start()?;
+        Ok(MpiFuture::from_shared(self.complete.clone()))
+    }
+
+    /// Drive the active execution to completion through the op handle —
+    /// the rescue path when the future from [`start`](PersistentOp::start)
+    /// was dropped unresolved (otherwise the template would stay active
+    /// until the leaf's blocking `Drop`).
+    pub fn complete(&self) -> Result<T> {
+        (self.complete)()
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.template.is_active()
+    }
+
+    /// Lift into a chainable [`Pipeline`].
+    pub fn pipeline(&self) -> Pipeline<T> {
+        Pipeline {
+            on_start: Vec::new(),
+            templates: vec![self.template.clone()],
+            drive: self.complete.clone(),
+        }
+    }
+}
+
+// ---------------- the pipeline ----------------
+
+/// A restartable asynchronous task graph: persistent templates plus a
+/// continuation chain, built once and re-fired with [`Pipeline::start`].
+pub struct Pipeline<T> {
+    /// Hooks run at every `start()` before the templates are activated
+    /// (e.g. packing fresh data into registered send buffers).
+    on_start: Vec<Rc<dyn Fn() -> Result<()>>>,
+    /// Every template in the graph, started together (`MPI_Startall`).
+    templates: Vec<Rc<dyn Restartable>>,
+    /// Completion + continuation chain (shared, re-runnable).
+    drive: Rc<dyn Fn() -> Result<T>>,
+}
+
+impl<T> Clone for Pipeline<T> {
+    fn clone(&self) -> Self {
+        Pipeline {
+            on_start: self.on_start.clone(),
+            templates: self.templates.clone(),
+            drive: self.drive.clone(),
+        }
+    }
+}
+
+impl<T: 'static> Pipeline<T> {
+    /// Fire one iteration: run the `on_start` hooks, `MPI_Startall` every
+    /// template, and hand back the iteration's future. Allocation-free
+    /// (the future shares the pipeline's drive chain).
+    ///
+    /// Starting a pipeline whose previous iteration has not been driven
+    /// to completion is a `Request`-class error from the first still
+    /// active template. If a later template fails to start, the ones
+    /// already started are driven to completion (results discarded)
+    /// before the error returns, so the graph is not left half-active
+    /// and wedged.
+    pub fn start(&self) -> Result<MpiFuture<T>> {
+        for hook in &self.on_start {
+            hook()?;
+        }
+        for (i, t) in self.templates.iter().enumerate() {
+            if let Err(e) = t.start() {
+                for started in &self.templates[..i] {
+                    let _ = started.complete();
+                }
+                return Err(e);
+            }
+        }
+        Ok(MpiFuture::from_shared(self.drive.clone()))
+    }
+
+    /// `start()` + `get()`: one synchronous iteration.
+    pub fn run(&self) -> Result<T> {
+        self.start()?.get()
+    }
+
+    /// Any template of the graph active (started, not yet completed)?
+    pub fn is_active(&self) -> bool {
+        self.templates.iter().any(|t| t.is_active())
+    }
+
+    /// Number of persistent templates in the graph.
+    pub fn len(&self) -> usize {
+        self.templates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.templates.is_empty()
+    }
+
+    /// Register a hook run at every `start()` *before* the templates are
+    /// activated — the place to pack fresh data into registered send
+    /// buffers so the packing is part of the described-once graph.
+    pub fn on_start(mut self, f: impl Fn() -> Result<()> + 'static) -> Pipeline<T> {
+        self.on_start.push(Rc::new(f));
+        self
+    }
+
+    /// Attach a continuation to the *template*: every future the pipeline
+    /// fires runs it after the templates complete. The closure receives
+    /// the completed iteration as a ready future (call `.get()` on it
+    /// without blocking, exactly like [`MpiFuture::then`]) and may return
+    /// any future — including one from immediate operations — whose value
+    /// becomes the iteration's result.
+    pub fn then<U: 'static>(
+        self,
+        f: impl Fn(MpiFuture<T>) -> MpiFuture<U> + 'static,
+    ) -> Pipeline<U> {
+        let drive = self.drive;
+        Pipeline {
+            on_start: self.on_start,
+            templates: self.templates,
+            drive: Rc::new(move || f(MpiFuture::from_result(drive())).get()),
+        }
+    }
+
+    /// Value-level continuation (the non-future-returning `.then`).
+    pub fn map<U: 'static>(self, f: impl Fn(Result<T>) -> Result<U> + 'static) -> Pipeline<U> {
+        let drive = self.drive;
+        Pipeline {
+            on_start: self.on_start,
+            templates: self.templates,
+            drive: Rc::new(move || f(drive())),
+        }
+    }
+
+    /// Join pipelines into one graph (`when_all` on templates): one
+    /// `start()` fires every member (`MPI_Startall`), the result collects
+    /// every member's value in order.
+    pub fn all(pipes: Vec<Pipeline<T>>) -> Pipeline<Vec<T>> {
+        let (on_start, templates, drives) = Self::merge(pipes);
+        Pipeline {
+            on_start,
+            templates,
+            drive: Rc::new(move || drives.iter().map(|d| d()).collect()),
+        }
+    }
+
+    /// [`Pipeline::all`] without collecting the member values — the
+    /// allocation-free join for hot loops that only need completion.
+    pub fn join(pipes: Vec<Pipeline<T>>) -> Pipeline<()> {
+        let (on_start, templates, drives) = Self::merge(pipes);
+        Pipeline {
+            on_start,
+            templates,
+            drive: Rc::new(move || {
+                for d in &drives {
+                    d()?;
+                }
+                Ok(())
+            }),
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn merge(
+        pipes: Vec<Pipeline<T>>,
+    ) -> (Vec<Rc<dyn Fn() -> Result<()>>>, Vec<Rc<dyn Restartable>>, Vec<Rc<dyn Fn() -> Result<T>>>) {
+        let mut on_start = Vec::new();
+        let mut templates = Vec::new();
+        let mut drives = Vec::new();
+        for p in pipes {
+            on_start.extend(p.on_start);
+            templates.extend(p.templates);
+            drives.push(p.drive);
+        }
+        (on_start, templates, drives)
+    }
+}
+
+/// The shared `op()` body of every leaf: completion yields the operation
+/// [`Status`]; `keep` pins the leaf's buffer handles so the drive chain
+/// can outlive the leaf itself.
+fn status_op(template: Rc<dyn Restartable>, keep: impl Clone + 'static) -> PersistentOp<Status> {
+    let t = template.clone();
+    PersistentOp::new(
+        template,
+        Rc::new(move || {
+            let _ = &keep;
+            t.complete()
+        }),
+    )
+}
+
+// ---------------- persistent point-to-point leaves ----------------
+
+/// `MPI_Send_init` leaf: a registered send buffer plus the reusable send
+/// template. Refill the buffer ([`buffer_mut`](PersistentSend::buffer_mut)
+/// or [`write`](PersistentSend::write)) before each start; the payload is
+/// re-packed at start time.
+///
+/// Clones share the same template and buffer (cheap handles for moving
+/// into continuations).
+pub struct PersistentSend<T: DataType> {
+    template: Rc<PersistentRequest>,
+    buf: SharedBuf<T>,
+}
+
+impl<T: DataType> Clone for PersistentSend<T> {
+    fn clone(&self) -> Self {
+        PersistentSend { template: self.template.clone(), buf: self.buf.clone() }
+    }
+}
+
+impl<T: DataType + Default> PersistentSend<T> {
+    pub(crate) fn init(comm: &Comm, count: usize, dst: i32, tag: i32) -> Result<PersistentSend<T>> {
+        let buf = shared_buf::<T>(count);
+        let template = comm.send_init(bytes_of(&buf), count, &T::datatype(), dst, tag)?;
+        Ok(PersistentSend { template: Rc::new(template), buf })
+    }
+}
+
+impl<T: DataType> PersistentSend<T> {
+    pub fn buffer(&self) -> Ref<'_, [T]> {
+        Ref::map(self.buf.borrow(), |b| &**b)
+    }
+
+    pub fn buffer_mut(&self) -> RefMut<'_, [T]> {
+        RefMut::map(self.buf.borrow_mut(), |b| &mut **b)
+    }
+
+    /// Copy a fresh payload into the registered buffer (lengths must
+    /// match).
+    pub fn write(&self, src: &[T]) {
+        self.buffer_mut().copy_from_slice(src);
+    }
+
+    /// The typed single-op view (`start()` → future of the send status).
+    pub fn op(&self) -> PersistentOp<Status> {
+        status_op(self.template.clone(), self.buf.clone())
+    }
+
+    pub fn pipeline(&self) -> Pipeline<Status> {
+        self.op().pipeline()
+    }
+}
+
+impl<T: DataType> Restartable for PersistentSend<T> {
+    fn start(&self) -> Result<()> {
+        self.template.start()
+    }
+
+    fn is_active(&self) -> bool {
+        self.template.is_active()
+    }
+
+    fn complete(&self) -> Result<Status> {
+        self.template.wait()
+    }
+}
+
+/// `MPI_Recv_init` leaf: a registered receive buffer plus the reusable
+/// receive template. Each completed start leaves the payload in
+/// [`buffer`](PersistentRecv::buffer); read it from a continuation holding
+/// a clone of this handle.
+pub struct PersistentRecv<T: DataType> {
+    template: Rc<PersistentRequest>,
+    buf: SharedBuf<T>,
+}
+
+impl<T: DataType> Clone for PersistentRecv<T> {
+    fn clone(&self) -> Self {
+        PersistentRecv { template: self.template.clone(), buf: self.buf.clone() }
+    }
+}
+
+impl<T: DataType + Default> PersistentRecv<T> {
+    pub(crate) fn init(comm: &Comm, count: usize, src: i32, tag: i32) -> Result<PersistentRecv<T>> {
+        let buf = shared_buf::<T>(count);
+        let template = comm.recv_init(bytes_of_mut(&buf), count, &T::datatype(), src, tag)?;
+        Ok(PersistentRecv { template: Rc::new(template), buf })
+    }
+}
+
+impl<T: DataType> PersistentRecv<T> {
+    pub fn buffer(&self) -> Ref<'_, [T]> {
+        Ref::map(self.buf.borrow(), |b| &**b)
+    }
+
+    /// Copy the received payload out (convenience; allocation-free reads
+    /// go through [`buffer`](PersistentRecv::buffer)).
+    pub fn read(&self, dst: &mut [T]) {
+        dst.copy_from_slice(&self.buffer());
+    }
+
+    pub fn op(&self) -> PersistentOp<Status> {
+        status_op(self.template.clone(), self.buf.clone())
+    }
+
+    pub fn pipeline(&self) -> Pipeline<Status> {
+        self.op().pipeline()
+    }
+}
+
+impl<T: DataType> Restartable for PersistentRecv<T> {
+    fn start(&self) -> Result<()> {
+        self.template.start()
+    }
+
+    fn is_active(&self) -> bool {
+        self.template.is_active()
+    }
+
+    fn complete(&self) -> Result<Status> {
+        self.template.wait()
+    }
+}
+
+// ---------------- persistent collective leaves ----------------
+
+/// `MPI_Bcast_init` leaf. The root refills
+/// [`buffer_mut`](PersistentBroadcast::buffer_mut) before each start;
+/// every rank reads the broadcast payload from
+/// [`buffer`](PersistentBroadcast::buffer) after completion.
+pub struct PersistentBroadcast<T: DataType> {
+    template: Rc<PersistentColl>,
+    buf: SharedBuf<T>,
+    root: usize,
+}
+
+impl<T: DataType> Clone for PersistentBroadcast<T> {
+    fn clone(&self) -> Self {
+        PersistentBroadcast { template: self.template.clone(), buf: self.buf.clone(), root: self.root }
+    }
+}
+
+impl<T: DataType + Default> PersistentBroadcast<T> {
+    pub(crate) fn init(comm: &Comm, count: usize, root: usize) -> Result<PersistentBroadcast<T>> {
+        let buf = shared_buf::<T>(count);
+        let template = collective::bcast_init(comm, bytes_of_mut(&buf), count, &T::datatype(), root)?;
+        Ok(PersistentBroadcast { template: Rc::new(template), buf, root })
+    }
+}
+
+impl<T: DataType> PersistentBroadcast<T> {
+    pub fn root(&self) -> usize {
+        self.root
+    }
+
+    pub fn buffer(&self) -> Ref<'_, [T]> {
+        Ref::map(self.buf.borrow(), |b| &**b)
+    }
+
+    pub fn buffer_mut(&self) -> RefMut<'_, [T]> {
+        RefMut::map(self.buf.borrow_mut(), |b| &mut **b)
+    }
+
+    pub fn write(&self, src: &[T]) {
+        self.buffer_mut().copy_from_slice(src);
+    }
+
+    pub fn op(&self) -> PersistentOp<Status> {
+        status_op(self.template.clone(), self.buf.clone())
+    }
+
+    pub fn pipeline(&self) -> Pipeline<Status> {
+        self.op().pipeline()
+    }
+}
+
+impl<T: DataType> Restartable for PersistentBroadcast<T> {
+    fn start(&self) -> Result<()> {
+        self.template.start()
+    }
+
+    fn is_active(&self) -> bool {
+        self.template.is_active()
+    }
+
+    fn complete(&self) -> Result<Status> {
+        self.template.wait()
+    }
+}
+
+/// `MPI_Allreduce_init` leaf: registered input and output buffers plus
+/// the reusable reduction schedule. Refill
+/// [`input_mut`](PersistentAllReduce::input_mut) before each start; read
+/// [`output`](PersistentAllReduce::output) after completion.
+pub struct PersistentAllReduce<T: DataType> {
+    template: Rc<PersistentColl>,
+    input: SharedBuf<T>,
+    output: SharedBuf<T>,
+}
+
+impl<T: DataType> Clone for PersistentAllReduce<T> {
+    fn clone(&self) -> Self {
+        PersistentAllReduce {
+            template: self.template.clone(),
+            input: self.input.clone(),
+            output: self.output.clone(),
+        }
+    }
+}
+
+impl<T: DataType + Default> PersistentAllReduce<T> {
+    pub(crate) fn init(comm: &Comm, count: usize, op: ReduceOp) -> Result<PersistentAllReduce<T>> {
+        let input = shared_buf::<T>(count);
+        let output = shared_buf::<T>(count);
+        let o: Op = op.into();
+        let template = collective::allreduce_init(
+            comm,
+            Some(bytes_of(&input)),
+            bytes_of_mut(&output),
+            count,
+            &T::datatype(),
+            &o,
+        )?;
+        Ok(PersistentAllReduce { template: Rc::new(template), input, output })
+    }
+}
+
+impl<T: DataType> PersistentAllReduce<T> {
+    pub fn input_mut(&self) -> RefMut<'_, [T]> {
+        RefMut::map(self.input.borrow_mut(), |b| &mut **b)
+    }
+
+    /// Set this rank's contribution (lengths must match).
+    pub fn write(&self, src: &[T]) {
+        self.input_mut().copy_from_slice(src);
+    }
+
+    pub fn output(&self) -> Ref<'_, [T]> {
+        Ref::map(self.output.borrow(), |b| &**b)
+    }
+
+    pub fn op(&self) -> PersistentOp<Status> {
+        status_op(self.template.clone(), (self.input.clone(), self.output.clone()))
+    }
+
+    pub fn pipeline(&self) -> Pipeline<Status> {
+        self.op().pipeline()
+    }
+}
+
+impl<T: DataType> Restartable for PersistentAllReduce<T> {
+    fn start(&self) -> Result<()> {
+        self.template.start()
+    }
+
+    fn is_active(&self) -> bool {
+        self.template.is_active()
+    }
+
+    fn complete(&self) -> Result<Status> {
+        self.template.wait()
+    }
+}
+
+/// `MPI_Barrier_init` leaf.
+#[derive(Clone)]
+pub struct PersistentBarrier {
+    template: Rc<PersistentColl>,
+}
+
+impl PersistentBarrier {
+    pub(crate) fn init(comm: &Comm) -> Result<PersistentBarrier> {
+        Ok(PersistentBarrier { template: Rc::new(collective::barrier_init(comm)?) })
+    }
+
+    pub fn op(&self) -> PersistentOp<Status> {
+        status_op(self.template.clone(), ())
+    }
+
+    pub fn pipeline(&self) -> Pipeline<Status> {
+        self.op().pipeline()
+    }
+}
+
+impl Restartable for PersistentBarrier {
+    fn start(&self) -> Result<()> {
+        self.template.start()
+    }
+
+    fn is_active(&self) -> bool {
+        self.template.is_active()
+    }
+
+    fn complete(&self) -> Result<Status> {
+        self.template.wait()
+    }
+}
+
+// ---------------- Communicator surface ----------------
+
+impl Communicator {
+    /// `MPI_Send_init`: a restartable send of `count` elements to `dst`.
+    /// Refill the leaf's buffer before each start.
+    pub fn persistent_send<T: DataType + Default>(
+        &self,
+        count: usize,
+        dst: usize,
+        tag: i32,
+    ) -> Result<PersistentSend<T>> {
+        PersistentSend::init(self.native(), count, dst as i32, tag)
+    }
+
+    /// `MPI_Recv_init`: a restartable receive of `count` elements.
+    pub fn persistent_receive<T: DataType + Default>(
+        &self,
+        count: usize,
+        src: super::communicator::Source,
+        tag: super::communicator::Tag,
+    ) -> Result<PersistentRecv<T>> {
+        let s = match src {
+            super::communicator::Source::Rank(r) => r as i32,
+            super::communicator::Source::Any => crate::comm::ANY_SOURCE,
+        };
+        let t = match tag {
+            super::communicator::Tag::Value(v) => v,
+            super::communicator::Tag::Any => crate::comm::ANY_TAG,
+        };
+        PersistentRecv::init(self.native(), count, s, t)
+    }
+
+    /// `MPI_Bcast_init` (collective: call in the same order on every
+    /// rank).
+    pub fn persistent_broadcast<T: DataType + Default>(
+        &self,
+        count: usize,
+        root: usize,
+    ) -> Result<PersistentBroadcast<T>> {
+        PersistentBroadcast::init(self.native(), count, root)
+    }
+
+    /// `MPI_Allreduce_init` (collective).
+    pub fn persistent_all_reduce<T: DataType + Default>(
+        &self,
+        count: usize,
+        op: ReduceOp,
+    ) -> Result<PersistentAllReduce<T>> {
+        PersistentAllReduce::init(self.native(), count, op)
+    }
+
+    /// `MPI_Barrier_init` (collective).
+    pub fn persistent_barrier(&self) -> Result<PersistentBarrier> {
+        PersistentBarrier::init(self.native())
+    }
+}

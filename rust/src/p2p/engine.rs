@@ -346,14 +346,14 @@ pub fn progress(ctx: &Rc<RankCtx>) -> Result<()> {
 /// Deadline for declaring a deadlock (overridable for tests via
 /// `FERROMPI_DEADLOCK_S`).
 fn deadlock_limit() -> Duration {
-    static LIMIT: once_cell::sync::Lazy<Duration> = once_cell::sync::Lazy::new(|| {
+    static LIMIT: std::sync::OnceLock<Duration> = std::sync::OnceLock::new();
+    *LIMIT.get_or_init(|| {
         let s = std::env::var("FERROMPI_DEADLOCK_S")
             .ok()
             .and_then(|v| v.parse::<u64>().ok())
             .unwrap_or(60);
         Duration::from_secs(s)
-    });
-    *LIMIT
+    })
 }
 
 /// Drive the engine until `done()` — the blocking wait primitive under

@@ -11,8 +11,7 @@ use crate::collective;
 use crate::comm::Comm;
 use crate::datatype::{Datatype, TypeMap};
 use crate::op::{Op, UserFn};
-use crate::p2p::{RawBuf, RawBufMut, SendMode};
-use crate::request::PersistentRequest;
+use crate::p2p::SendMode;
 use crate::{mpi_err, ErrorClass, MpiError};
 
 type R<T> = Result<T, MpiError>;
@@ -618,6 +617,7 @@ pub fn mpi_wait(request: &mut i32, status: &mut MpiStatus) -> i32 {
                     (s, false)
                 }
                 RawReq::Persistent(p) => (p.wait()?, true), // template stays
+                RawReq::PersistentColl(p) => (p.wait()?, true),
             };
             Ok((s, persistent))
         },
@@ -654,6 +654,7 @@ pub fn mpi_test(request: &mut i32, flag: &mut i32, status: &mut MpiStatus) -> i3
                     (s, false)
                 }
                 RawReq::Persistent(p) => (p.test()?, true),
+                RawReq::PersistentColl(p) => (p.test()?, true),
             };
             Ok((s, persistent))
         },
@@ -718,19 +719,11 @@ pub fn mpi_waitany(requests: &mut [i32], index: &mut i32, status: &mut MpiStatus
 pub fn mpi_send_init(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32, comm: i32, request: &mut i32) -> i32 {
     with_state(
         |st| {
-            let c = comm_of(st, comm)?;
-            let d = dtype_of(st, datatype)?.clone();
-            let dst = c.resolve_dst(dest)?;
-            let p = PersistentRequest::send_init(
-                c.rank_ctx().clone(),
-                c.ctx_p2p(),
-                dst,
-                tag,
-                RawBuf::from_slice(buf),
-                ucount(count)?,
-                d,
-                SendMode::Standard,
-            );
+            let p = {
+                let c = comm_of(st, comm)?;
+                let d = dtype_of(st, datatype)?;
+                c.send_init(buf, ucount(count)?, d, dest, tag)?
+            };
             Ok(insert_request(st, RawReq::Persistent(p)))
         },
         |h| {
@@ -744,26 +737,11 @@ pub fn mpi_send_init(buf: &[u8], count: i32, datatype: i32, dest: i32, tag: i32,
 pub fn mpi_recv_init(buf: &mut [u8], count: i32, datatype: i32, source: i32, tag: i32, comm: i32, request: &mut i32) -> i32 {
     with_state(
         |st| {
-            let c = comm_of(st, comm)?;
-            let d = dtype_of(st, datatype)?.clone();
-            let src = match c.resolve_src(source)? {
-                crate::comm::SrcSel::Any => None,
-                crate::comm::SrcSel::Rank(w) => Some(w),
-                crate::comm::SrcSel::ProcNull => {
-                    return Err(mpi_err!(Rank, "recv_init with PROC_NULL unsupported"))
-                }
+            let p = {
+                let c = comm_of(st, comm)?;
+                let d = dtype_of(st, datatype)?;
+                c.recv_init(buf, ucount(count)?, d, source, tag)?
             };
-            let tag = if tag == MPI_ANY_TAG { None } else { Some(tag) };
-            let p = PersistentRequest::recv_init(
-                c.rank_ctx().clone(),
-                c.ctx_p2p(),
-                src,
-                tag,
-                RawBufMut::from_slice(buf),
-                ucount(count)?,
-                d,
-                c.group().clone(),
-            );
             Ok(insert_request(st, RawReq::Persistent(p)))
         },
         |h| {
@@ -779,6 +757,7 @@ pub fn mpi_start(request: &mut i32) -> i32 {
     with_state(
         |st| match st.requests.get(&h) {
             Some(RawReq::Persistent(p)) => p.start(),
+            Some(RawReq::PersistentColl(p)) => p.start(),
             _ => Err(mpi_err!(Request, "start on non-persistent handle {h}")),
         },
         |_| MPI_SUCCESS,
@@ -794,6 +773,67 @@ pub fn mpi_startall(requests: &mut [i32]) -> i32 {
         }
     }
     MPI_SUCCESS
+}
+
+/// `MPI_Barrier_init` (MPI-4.0 §6.13). Collective: must be called in the
+/// same order on every rank of `comm`.
+pub fn mpi_barrier_init(comm: i32, request: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let p = collective::barrier_init(comm_of(st, comm)?)?;
+            Ok(insert_request(st, RawReq::PersistentColl(p)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Bcast_init`. The buffer is captured for the template's lifetime
+/// (standard persistent-buffer contract); refill it between starts.
+pub fn mpi_bcast_init(buf: &mut [u8], count: i32, datatype: i32, root: i32, comm: i32, request: &mut i32) -> i32 {
+    with_state(
+        |st| {
+            let p = {
+                let c = comm_of(st, comm)?;
+                let d = dtype_of(st, datatype)?;
+                collective::bcast_init(c, buf, ucount(count)?, d, root as usize)?
+            };
+            Ok(insert_request(st, RawReq::PersistentColl(p)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
+}
+
+/// `MPI_Allreduce_init` (`None` sendbuf = IN_PLACE).
+pub fn mpi_allreduce_init(
+    sendbuf: Option<&[u8]>,
+    recvbuf: &mut [u8],
+    count: i32,
+    datatype: i32,
+    op: i32,
+    comm: i32,
+    request: &mut i32,
+) -> i32 {
+    with_state(
+        |st| {
+            let p = {
+                let c = comm_of(st, comm)?;
+                let d = dtype_of(st, datatype)?;
+                let o = op_of(st, op)?;
+                collective::allreduce_init(c, sendbuf, recvbuf, ucount(count)?, d, o)?
+            };
+            Ok(insert_request(st, RawReq::PersistentColl(p)))
+        },
+        |h| {
+            *request = h;
+            MPI_SUCCESS
+        },
+    )
 }
 
 /// `MPI_Request_free` (plain requests only; must not be in use).

@@ -30,6 +30,8 @@ impl From<crate::p2p::Status> for MpiStatus {
 pub(super) enum RawReq {
     Plain(Request),
     Persistent(PersistentRequest),
+    /// Persistent collective template (MPI-4.0 §6.13 `MPI_*_init`).
+    PersistentColl(crate::collective::PersistentColl),
 }
 
 pub(super) struct RawState {

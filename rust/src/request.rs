@@ -309,19 +309,43 @@ impl PersistentRequest {
     }
 
     /// Wait on the active operation; the template stays reusable.
+    /// Inactive templates (never started, or already completed) are a
+    /// `Request`-class error, matching the persistent-collective side —
+    /// a silent `Ok` here would mask double-complete bugs.
     pub fn wait(&self) -> Result<Status> {
+        if !self.is_active() {
+            return Err(mpi_err!(Request, "wait on inactive persistent request"));
+        }
         let active = self.active.borrow();
         match &*active {
             Some(r) => r.wait(),
-            None => Err(mpi_err!(Request, "wait on inactive persistent request")),
+            None => unreachable!("is_active implies an active request"),
         }
     }
 
     pub fn test(&self) -> Result<Option<Status>> {
+        if !self.is_active() {
+            return Err(mpi_err!(Request, "test on inactive persistent request"));
+        }
         let active = self.active.borrow();
         match &*active {
             Some(r) => r.test(),
-            None => Err(mpi_err!(Request, "test on inactive persistent request")),
+            None => unreachable!("is_active implies an active request"),
+        }
+    }
+}
+
+impl Drop for PersistentRequest {
+    /// Dropping an active template blocks until the in-flight operation
+    /// completes: an active receive holds a raw pointer into the
+    /// registered buffer, so the engine must not keep delivering into it
+    /// after the template (and possibly the buffer) is gone. Skipped
+    /// while unwinding — the watchdog panicking inside drop would abort
+    /// and mask the original error, and the engine only runs on this
+    /// (dying) thread anyway.
+    fn drop(&mut self) {
+        if self.is_active() && !std::thread::panicking() {
+            let _ = self.wait();
         }
     }
 }

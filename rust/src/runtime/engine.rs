@@ -2,7 +2,6 @@
 
 use crate::op::{Op, OpKind, UserFn};
 use crate::{mpi_err, MpiError, Result};
-use once_cell::sync::OnceCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
@@ -187,7 +186,7 @@ impl XlaEngine {
 /// The process-global engine (compiled executables shared by all rank
 /// threads).
 pub fn engine() -> Result<&'static XlaEngine> {
-    static ENGINE: OnceCell<std::result::Result<XlaEngine, String>> = OnceCell::new();
+    static ENGINE: std::sync::OnceLock<std::result::Result<XlaEngine, String>> = std::sync::OnceLock::new();
     let e = ENGINE.get_or_init(|| XlaEngine::new(&artifacts_dir()).map_err(|e| e.to_string()));
     match e {
         Ok(engine) => Ok(engine),

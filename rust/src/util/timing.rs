@@ -8,11 +8,11 @@
 use std::time::Instant;
 
 /// Process-global epoch so `wtime()` is comparable across rank threads.
-static EPOCH: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 /// `MPI_Wtime` analog: seconds since a process-global epoch.
 pub fn wtime() -> f64 {
-    EPOCH.elapsed().as_secs_f64()
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// `MPI_Wtick` analog: the resolution of `wtime` (Instant is nanosecond

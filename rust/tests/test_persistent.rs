@@ -1,0 +1,329 @@
+//! Persistent-operation lifecycle tests (MPI-4.0 §3.9 p2p templates,
+//! §6.13 persistent collectives, and the modern layer's restartable
+//! future pipelines): start → complete → restart reuses the same request
+//! slot and buffers, double-`start` is a typed error, and dropping an
+//! active template is safe.
+
+use ferrompi::modern::{
+    start_all, when_any, Communicator, MpiFuture, Pipeline, Restartable, Source, Tag,
+};
+use ferrompi::universe::Universe;
+use ferrompi::util::prop::{check_no_shrink, Config};
+use ferrompi::{raw, ErrorClass};
+
+// ---------------- property: restart reuses the template ----------------
+
+/// Core lifecycle property over random payload sizes and restart counts:
+/// one persistent send/recv pair per rank, started N times, must deliver
+/// N distinct payloads through the *same* registered buffers (observed by
+/// pointer identity across iterations — nothing is reallocated).
+#[test]
+fn prop_persistent_p2p_restart_reuses_slot() {
+    let cfg = Config { cases: 24, ..Config::default() };
+    check_no_shrink(
+        cfg,
+        |rng| (rng.range(1, 64), rng.range(1, 8)),
+        |&(count, iters)| {
+            let oks = Universe::test(2).run(move |world| {
+                let comm = Communicator::world(world);
+                let peer = 1 - comm.rank();
+                let me = comm.rank() as i64;
+                let send = comm.persistent_send::<i64>(count, peer, 3).unwrap();
+                let recv = comm
+                    .persistent_receive::<i64>(count, Source::Rank(peer), Tag::Value(3))
+                    .unwrap();
+                let send_ptr = send.buffer().as_ptr();
+                let recv_ptr = recv.buffer().as_ptr();
+                for it in 0..iters as i64 {
+                    {
+                        let mut b = send.buffer_mut();
+                        for (j, slot) in b.iter_mut().enumerate() {
+                            *slot = me * 1_000_000 + it * 1_000 + j as i64;
+                        }
+                    }
+                    start_all(&[&send as &dyn Restartable, &recv]).unwrap();
+                    send.complete().unwrap();
+                    recv.complete().unwrap();
+                    let got = recv.buffer();
+                    let want_rank = 1 - me;
+                    for (j, v) in got.iter().enumerate() {
+                        let want = want_rank * 1_000_000 + it * 1_000 + j as i64;
+                        if *v != want {
+                            return Err(format!("iter {it} elem {j}: got {v}, want {want}"));
+                        }
+                    }
+                    // Same slots every iteration: nothing was reallocated.
+                    if send.buffer().as_ptr() != send_ptr || recv.buffer().as_ptr() != recv_ptr {
+                        return Err("registered buffer moved across restarts".into());
+                    }
+                }
+                Ok::<(), String>(())
+            });
+            for r in oks {
+                r?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------- double start is a typed error ----------------
+
+#[test]
+fn double_start_errors_p2p_and_collective() {
+    Universe::test(2).run(|world| {
+        let comm = Communicator::world(world);
+        let peer = 1 - comm.rank();
+
+        // p2p template: second start while active must fail.
+        let send = comm.persistent_send::<i32>(1, peer, 5).unwrap();
+        let recv = comm.persistent_receive::<i32>(1, Source::Rank(peer), Tag::Value(5)).unwrap();
+        recv.start().unwrap();
+        let e = recv.start().unwrap_err();
+        assert_eq!(e.class, ErrorClass::Request, "double-start recv: {e}");
+        send.start().unwrap();
+        send.complete().unwrap();
+        recv.complete().unwrap();
+        // After completion the template is inactive and restartable.
+        assert!(!recv.is_active());
+
+        // Persistent collective: same rule.
+        let bar = comm.persistent_barrier().unwrap();
+        bar.start().unwrap();
+        let e = bar.start().unwrap_err();
+        assert_eq!(e.class, ErrorClass::Request, "double-start barrier: {e}");
+        bar.complete().unwrap();
+
+        // Completing an inactive template is also a Request-class error.
+        let e = bar.complete().unwrap_err();
+        assert_eq!(e.class, ErrorClass::Request, "wait-inactive: {e}");
+    });
+}
+
+#[test]
+fn pipeline_double_start_errors() {
+    Universe::test(2).run(|world| {
+        let comm = Communicator::world(world);
+        let peer = 1 - comm.rank();
+        let send = comm.persistent_send::<i32>(1, peer, 6).unwrap();
+        let recv = comm.persistent_receive::<i32>(1, Source::Rank(peer), Tag::Value(6)).unwrap();
+        send.write(&[7]);
+        let pipe = Pipeline::join(vec![recv.pipeline(), send.pipeline()]);
+        let fut = pipe.start().unwrap();
+        assert!(pipe.is_active());
+        let e = pipe.start().unwrap_err();
+        assert_eq!(e.class, ErrorClass::Request, "double-start pipeline: {e}");
+        fut.get().unwrap();
+        assert!(!pipe.is_active());
+        // And restartable afterwards.
+        pipe.run().unwrap();
+    });
+}
+
+// ---------------- drop-while-active is safe ----------------
+
+#[test]
+fn drop_while_active_completes_first() {
+    Universe::test(2).run(|world| {
+        let comm = Communicator::world(world);
+        let peer = 1 - comm.rank();
+
+        {
+            let send = comm.persistent_send::<u64>(8, peer, 9).unwrap();
+            let recv = comm.persistent_receive::<u64>(8, Source::Rank(peer), Tag::Value(9)).unwrap();
+            send.write(&[1, 2, 3, 4, 5, 6, 7, 8]);
+            start_all(&[&send as &dyn Restartable, &recv]).unwrap();
+            // Dropped while (possibly) still in flight: Drop must block
+            // until delivery so the registered buffers cannot dangle.
+        }
+
+        // The fabric is still consistent: a fresh exchange works.
+        let (v, _) = comm.send_receive(comm.rank() as u32, peer, Source::Rank(peer)).unwrap();
+        assert_eq!(v as usize, peer);
+        comm.barrier().unwrap();
+
+        // Same for an active persistent collective template.
+        {
+            let bcast = comm.persistent_broadcast::<i32>(4, 0).unwrap();
+            if comm.rank() == 0 {
+                bcast.write(&[9, 9, 9, 9]);
+            }
+            bcast.start().unwrap();
+        }
+        comm.barrier().unwrap();
+    });
+}
+
+// ---------------- persistent collectives restart correctly ----------------
+
+#[test]
+fn persistent_collectives_restart_with_fresh_values() {
+    let results = Universe::test(4).run(|world| {
+        let comm = Communicator::world(world);
+        let r = comm.rank() as i64;
+
+        let bcast = comm.persistent_broadcast::<i64>(2, 1).unwrap();
+        let sum = comm.persistent_all_reduce::<i64>(1, ferrompi::modern::ReduceOp::Sum).unwrap();
+        let mut seen = Vec::new();
+        for it in 0..5i64 {
+            if comm.rank() == 1 {
+                bcast.write(&[100 * it, 100 * it + 1]);
+            }
+            bcast.start().unwrap();
+            bcast.complete().unwrap();
+            assert_eq!(&*bcast.buffer(), &[100 * it, 100 * it + 1]);
+
+            sum.write(&[r + it]);
+            sum.start().unwrap();
+            sum.complete().unwrap();
+            // Σ (rank + it) over 4 ranks = 6 + 4*it.
+            assert_eq!(sum.output()[0], 6 + 4 * it);
+            seen.push(sum.output()[0]);
+        }
+        seen
+    });
+    for vals in results {
+        assert_eq!(vals, vec![6, 10, 14, 18, 22]);
+    }
+}
+
+// ---------------- pipeline chains re-fire identically ----------------
+
+#[test]
+fn pipeline_then_chain_refires_each_iteration() {
+    let rounds = Universe::test(3).run(|world| {
+        let comm = Communicator::world(world);
+        let me = comm.rank();
+        let b0 = comm.persistent_broadcast::<i32>(1, 0).unwrap();
+        let b0_read = b0.clone();
+        let chain: Pipeline<i32> = b0
+            .pipeline()
+            .then(move |f| {
+                if let Err(e) = f.get() {
+                    return MpiFuture::err(e);
+                }
+                MpiFuture::ready(b0_read.buffer()[0] * 2)
+            })
+            .map(|r| r.map(|v| v + 1));
+        let mut out = Vec::new();
+        for it in 0..4 {
+            if me == 0 {
+                b0.write(&[10 * it]);
+            }
+            out.push(chain.run().unwrap());
+        }
+        out
+    });
+    for vals in rounds {
+        assert_eq!(vals, vec![1, 21, 41, 61]);
+    }
+}
+
+// ---------------- raw layer: handle (slot) reuse across restarts ----------------
+
+#[test]
+fn raw_persistent_handles_survive_completion() {
+    Universe::test(2).run(|world| {
+        raw::init(world);
+        let mut rank = -1;
+        raw::mpi_comm_rank(raw::MPI_COMM_WORLD, &mut rank);
+        let peer = 1 - rank;
+
+        let payload = [42i64, 43];
+        let mut incoming = [0i64; 2];
+        let pb = unsafe { std::slice::from_raw_parts(payload.as_ptr() as *const u8, 16) };
+        let ib = unsafe { std::slice::from_raw_parts_mut(incoming.as_mut_ptr() as *mut u8, 16) };
+
+        let mut sreq = raw::MPI_REQUEST_NULL;
+        let mut rreq = raw::MPI_REQUEST_NULL;
+        assert_eq!(raw::mpi_send_init(pb, 2, raw::MPI_LONG, peer, 4, raw::MPI_COMM_WORLD, &mut sreq), raw::MPI_SUCCESS);
+        assert_eq!(raw::mpi_recv_init(ib, 2, raw::MPI_LONG, peer, 4, raw::MPI_COMM_WORLD, &mut rreq), raw::MPI_SUCCESS);
+        let (s0, r0) = (sreq, rreq);
+
+        for _ in 0..3 {
+            let mut reqs = [rreq, sreq];
+            assert_eq!(raw::mpi_startall(&mut reqs), raw::MPI_SUCCESS);
+            let mut sts = [raw::MpiStatus::default(); 2];
+            assert_eq!(raw::mpi_waitall(&mut reqs, &mut sts), raw::MPI_SUCCESS);
+            // Persistent handles are NOT nulled by completion: the slot is
+            // the template and survives for the next start.
+            assert_eq!(reqs, [r0, s0]);
+            assert_eq!(incoming, [42, 43]);
+            incoming = [0; 2];
+        }
+
+        // Persistent collectives through the raw layer.
+        let mut val = [rank as f64 + 1.0];
+        let vb = unsafe { std::slice::from_raw_parts_mut(val.as_mut_ptr() as *mut u8, 8) };
+        let mut breq = raw::MPI_REQUEST_NULL;
+        assert_eq!(raw::mpi_bcast_init(vb, 1, raw::MPI_DOUBLE, 0, raw::MPI_COMM_WORLD, &mut breq), raw::MPI_SUCCESS);
+        for _ in 0..2 {
+            let mut st = raw::MpiStatus::default();
+            assert_eq!(raw::mpi_start(&mut breq), raw::MPI_SUCCESS);
+            assert_eq!(raw::mpi_wait(&mut breq, &mut st), raw::MPI_SUCCESS);
+            assert_ne!(breq, raw::MPI_REQUEST_NULL);
+            assert_eq!(val[0], 1.0); // root 0's value everywhere
+        }
+
+        let mut acc_in = [rank as i32];
+        let mut acc_out = [0i32];
+        let aib = unsafe { std::slice::from_raw_parts(acc_in.as_ptr() as *const u8, 4) };
+        let aob = unsafe { std::slice::from_raw_parts_mut(acc_out.as_mut_ptr() as *mut u8, 4) };
+        let mut areq = raw::MPI_REQUEST_NULL;
+        assert_eq!(
+            raw::mpi_allreduce_init(Some(aib), aob, 1, raw::MPI_INT, raw::MPI_SUM, raw::MPI_COMM_WORLD, &mut areq),
+            raw::MPI_SUCCESS
+        );
+        for it in 0..3 {
+            acc_in[0] = rank + it;
+            let mut st = raw::MpiStatus::default();
+            assert_eq!(raw::mpi_start(&mut areq), raw::MPI_SUCCESS);
+            assert_eq!(raw::mpi_wait(&mut areq, &mut st), raw::MPI_SUCCESS);
+            assert_eq!(acc_out[0], 1 + 2 * it); // (0+it) + (1+it)
+        }
+
+        // Double start through the raw layer is an error code, not a hang.
+        assert_eq!(raw::mpi_start(&mut areq), raw::MPI_SUCCESS);
+        assert_ne!(raw::mpi_start(&mut areq), raw::MPI_SUCCESS);
+        let mut st = raw::MpiStatus::default();
+        assert_eq!(raw::mpi_wait(&mut areq, &mut st), raw::MPI_SUCCESS);
+
+        raw::finalize();
+    });
+}
+
+// ---------------- future-layer satellite fixes ----------------
+
+#[test]
+fn when_any_empty_set_is_typed_arg_error() {
+    let e = when_any(Vec::<MpiFuture<i32>>::new()).get().unwrap_err();
+    assert_eq!(e.class, ErrorClass::Arg, "{e}");
+}
+
+#[test]
+fn is_ready_false_after_consumed() {
+    // Build a no-op waker (Waker::noop is unstable pre-1.85).
+    fn noop_waker() -> std::task::Waker {
+        use std::task::{RawWaker, RawWakerVTable, Waker};
+        fn clone(_: *const ()) -> RawWaker {
+            RawWaker::new(std::ptr::null(), &VTABLE)
+        }
+        fn noop(_: *const ()) {}
+        static VTABLE: RawWakerVTable = RawWakerVTable::new(clone, noop, noop, noop);
+        unsafe { Waker::from_raw(RawWaker::new(std::ptr::null(), &VTABLE)) }
+    }
+
+    use std::future::Future;
+
+    let mut f = MpiFuture::ready(7i32);
+    assert!(f.is_ready());
+
+    // Polling a ready future yields its value and leaves it Consumed …
+    let waker = noop_waker();
+    let mut cx = std::task::Context::from_waker(&waker);
+    let polled = std::pin::Pin::new(&mut f).poll(&mut cx);
+    assert!(matches!(polled, std::task::Poll::Ready(Ok(7))));
+
+    // … and a consumed future has no value to be ready *with*.
+    assert!(!f.is_ready());
+}
