@@ -1,21 +1,38 @@
 //! A1 — per-operation interface overhead decomposition: raw vs modern,
 //! per op, at fixed shape (the paper reports only the geomean; this shows
 //! where any overhead would live).
+//!
+//! Besides the human-readable table, writes the machine-readable
+//! `BENCH_interface_overhead.json` at the repo root (op, shape, raw and
+//! modern mean+stddev, modern/raw ratio) — the perf-trajectory seed and
+//! the CI bench-smoke artifact — and reports allocation counts so the
+//! overhead numbers demonstrably measure the interface, not the
+//! allocator. Set `FERROMPI_BENCH_QUICK=1` for a seconds-scale shape.
 
-use ferrompi::coordinator::{run_mpibench, Interface, MpiBenchConfig, ALL_OPS};
+use ferrompi::coordinator::{
+    run_mpibench, write_overhead_json, Interface, MpiBenchConfig, ALL_OPS,
+};
+use ferrompi::util::alloc_count;
 use ferrompi::util::table::Table;
 
+#[global_allocator]
+static ALLOC: alloc_count::CountingAlloc = alloc_count::CountingAlloc;
+
 fn main() {
+    let quick = std::env::var("FERROMPI_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let cfg = MpiBenchConfig {
         msg_lens: vec![1024],
         node_counts: vec![2],
         ppn: 2,
-        reps: 5,
-        iters: 10,
+        reps: if quick { 2 } else { 5 },
+        iters: if quick { 3 } else { 10 },
         interfaces: vec![Interface::Raw, Interface::Modern],
         ops: ALL_OPS.to_vec(),
     };
+    let allocs_before = alloc_count::allocations();
     let rows = run_mpibench(&cfg, |m| eprintln!("{m}"));
+    let allocs = alloc_count::allocations() - allocs_before;
+
     let mut t = Table::new(&["op", "raw (us)", "modern (us)", "modern/raw"]);
     for op in ALL_OPS {
         let get = |iface| {
@@ -34,4 +51,24 @@ fn main() {
     }
     println!("\nA1 — per-op interface overhead (1 KiB, 2 nodes × 2 ppn):\n");
     println!("{}", t.to_markdown());
+    // Per (op, msg, node count, interface): 2 warmup ops + reps timed
+    // loops of `iters` ops each (see coordinator::mpibench::measure_job).
+    let total_ops: usize = cfg.ops.len()
+        * cfg.msg_lens.len()
+        * cfg.node_counts.len()
+        * cfg.interfaces.len()
+        * (cfg.reps * cfg.iters + 2);
+    println!(
+        "allocator: {allocs} allocations across the sweep (~{:.0} per collective op incl. warmup)",
+        allocs as f64 / total_ops as f64
+    );
+
+    // Repo root = parent of the rust/ crate (CWD under `cargo bench` is
+    // wherever cargo was invoked, so anchor on the manifest instead).
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate has a parent dir")
+        .join("BENCH_interface_overhead.json");
+    write_overhead_json(&rows, &path).expect("write bench JSON");
+    println!("wrote {}", path.display());
 }

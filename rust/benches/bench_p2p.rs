@@ -1,25 +1,40 @@
 //! Transport microbenchmarks: eager vs rendezvous ping-pong latency,
-//! intra- vs inter-node, and matching-engine behaviour under unexpected-
-//! message floods (the substrate's hot paths, used by the §Perf log).
+//! intra- vs inter-node, matching-engine behaviour under unexpected-
+//! message floods, and — since the zero-copy refactor — allocation and
+//! payload-copy counts on the message path (the substrate's hot paths,
+//! used by the §Perf log).
 
 use ferrompi::datatype::{Datatype, Primitive};
 use ferrompi::universe::Universe;
+use ferrompi::util::alloc_count;
 use ferrompi::util::stats::mean;
 use ferrompi::util::table::Table;
 
+#[global_allocator]
+static ALLOC: alloc_count::CountingAlloc = alloc_count::CountingAlloc;
+
 const ITERS: usize = 500;
 
-fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> f64 {
-    let times = Universe::new(nodes, ppn).run(move |comm| {
+/// One-way latency plus steady-state allocation count per iteration
+/// (measured on rank 0 across the timed loop, after warmup has populated
+/// the wire-buffer pool) and the job's pool counters.
+struct PingPong {
+    one_way_s: f64,
+    allocs_per_iter: f64,
+    pool: ferrompi::transport::PoolStats,
+}
+
+fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> PingPong {
+    let (times, fabric) = Universe::new(nodes, ppn).run_with_stats(move |comm| {
         let t = Datatype::primitive(Primitive::Byte);
         let payload = vec![1u8; bytes];
         let mut buf = vec![0u8; bytes];
         let me = comm.rank();
         let peer = if me == 0 { (comm.size() - 1) as i32 } else { 0 };
         if me != 0 && me != comm.size() - 1 {
-            return f64::NAN;
+            return (f64::NAN, f64::NAN);
         }
-        // warmup
+        // warmup (also fills the buffer pool: the timed loop recycles)
         for _ in 0..10 {
             if me == 0 {
                 comm.send(&payload, bytes, &t, peer, 0).unwrap();
@@ -29,6 +44,7 @@ fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> f64 {
                 comm.send(&payload, bytes, &t, peer, 0).unwrap();
             }
         }
+        let allocs0 = alloc_count::allocations();
         let t0 = comm.wtime();
         for _ in 0..ITERS {
             if me == 0 {
@@ -39,9 +55,23 @@ fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> f64 {
                 comm.send(&payload, bytes, &t, peer, 0).unwrap();
             }
         }
-        (comm.wtime() - t0) / ITERS as f64 / 2.0 // one-way
+        let dt = (comm.wtime() - t0) / ITERS as f64 / 2.0; // one-way
+        let allocs = (alloc_count::allocations() - allocs0) as f64 / ITERS as f64;
+        (dt, allocs)
     });
-    mean(&times.into_iter().filter(|t| !t.is_nan()).collect::<Vec<_>>())
+    let mut lat = Vec::new();
+    // Both endpoint ranks count the whole process's allocations, so take
+    // the first endpoint's reading rather than summing.
+    let mut allocs = f64::NAN;
+    for (t, a) in times {
+        if !t.is_nan() {
+            lat.push(t);
+            if allocs.is_nan() {
+                allocs = a;
+            }
+        }
+    }
+    PingPong { one_way_s: mean(&lat), allocs_per_iter: allocs, pool: fabric.pool.stats() }
 }
 
 fn unexpected_flood(depth: usize) -> f64 {
@@ -73,18 +103,37 @@ fn unexpected_flood(depth: usize) -> f64 {
 }
 
 fn main() {
-    println!("\np2p — one-way latency (us), eager (≤64 KiB) vs rendezvous (>64 KiB):\n");
-    let mut t = Table::new(&["bytes", "intra-node", "inter-node"]);
+    println!("\np2p — one-way latency (us), eager (≤64 KiB) vs rendezvous (>64 KiB),");
+    println!("with per-iteration allocation count and pool/copy telemetry");
+    println!("(i/e = the separate intra-node and inter-node jobs' fabrics):\n");
+    let mut t = Table::new(&[
+        "bytes",
+        "intra-node (us)",
+        "inter-node (us)",
+        "allocs/iter i/e",
+        "pool recycled i/e",
+        "pool allocated i/e",
+        "bytes CPU-copied i/e",
+    ]);
     for bytes in [8usize, 1024, 65536, 65537, 262144] {
         let intra = pingpong(1, 2, bytes);
         let inter = pingpong(2, 1, bytes);
         t.push(vec![
             bytes.to_string(),
-            format!("{:.2}", intra * 1e6),
-            format!("{:.2}", inter * 1e6),
+            format!("{:.2}", intra.one_way_s * 1e6),
+            format!("{:.2}", inter.one_way_s * 1e6),
+            format!("{:.1}/{:.1}", intra.allocs_per_iter, inter.allocs_per_iter),
+            format!("{}/{}", intra.pool.recycled, inter.pool.recycled),
+            format!("{}/{}", intra.pool.allocated, inter.pool.allocated),
+            format!("{}/{}", intra.pool.copied_bytes, inter.pool.copied_bytes),
         ]);
     }
     println!("{}", t.to_markdown());
+    println!(
+        "(contiguous payloads keep `bytes CPU-copied` at 0 — the zero-copy \
+         fast path; `pool allocated` stays flat while `pool recycled` grows \
+         with iterations.)"
+    );
 
     println!("\nmatching engine — unexpected-queue scan cost (ns per recv, reverse order):\n");
     let mut t = Table::new(&["queue depth", "ns/recv"]);

@@ -8,8 +8,11 @@
 //! nonblocking ones wrap it in a request and the progress engine turns it.
 //!
 //! Wire data lives in a per-operation *arena* (allocated once, never
-//! reallocated, so raw-pointer ranges into it stay valid). All arena data
-//! is in packed wire format; `PackUser`/`UnpackUser` convert at the edges.
+//! reallocated, so raw-pointer ranges into it stay valid). The arena is
+//! checked out of the fabric's wire-buffer pool and recycled when the
+//! operation drops, so steady-state collective traffic allocates nothing.
+//! All arena data is in packed wire format; `PackUser`/`UnpackUser`
+//! convert at the edges.
 
 use crate::datatype::{pack_into, unpack, Datatype};
 use crate::group::Group;
@@ -149,6 +152,11 @@ pub struct CollState {
     /// engine-driven `advance`, so a persistent restart never
     /// double-registers).
     in_engine: Cell<bool>,
+    /// Set when a reset found a receive it could not cancel (already
+    /// matched an RTS: RData inbound targeting raw pointers into the
+    /// arena). A tainted arena is never recycled into the pool — see
+    /// [`CollState`]'s `Drop`.
+    tainted: Cell<bool>,
     /// Label for diagnostics ("bcast", "allreduce", ...).
     pub name: &'static str,
 }
@@ -169,7 +177,8 @@ impl CollState {
         let seq = ctx.next_coll_seq(ctx_coll);
         ctx.counters.collectives_started.set(ctx.counters.collectives_started.get() + 1);
         let base_tag = ((seq as i64 * TAG_SPACE) % (crate::comm::TAG_UB as i64)) as i32;
-        let arena = vec![0u8; schedule.arena_size];
+        let mut arena = ctx.fabric.pool.take_vec(schedule.arena_size);
+        arena.resize(schedule.arena_size, 0);
         Rc::new(CollState {
             ctx,
             ctx_coll,
@@ -185,6 +194,7 @@ impl CollState {
             done: Cell::new(false),
             error: RefCell::new(None),
             in_engine: Cell::new(false),
+            tainted: Cell::new(false),
             name,
         })
     }
@@ -204,13 +214,32 @@ impl CollState {
     /// may — its still-posted receives are cancelled here (they share the
     /// restart's tags and would otherwise steal its messages), its send
     /// tokens drained best-effort.
-    pub(crate) fn reset(&self) {
+    /// Drain outstanding transfers (error-path cleanup shared by `reset`
+    /// and `Drop`): cancellable receives are cancelled and consumed, send
+    /// tokens drained best-effort. Returns `false` if a receive had
+    /// already matched an RTS and could not be cancelled — its RData is
+    /// inbound, addressed to raw pointers into this arena.
+    fn drain_outstanding(&self) -> bool {
+        let mut clean = true;
         for t in self.outstanding_recvs.borrow_mut().drain(..) {
-            let _ = engine::cancel_recv(&self.ctx, t);
-            let _ = engine::take_recv_result(&self.ctx, t);
+            match engine::cancel_recv(&self.ctx, t) {
+                Ok(true) => {
+                    let _ = engine::take_recv_result(&self.ctx, t);
+                }
+                _ => clean = false,
+            }
         }
         for t in self.outstanding_sends.borrow_mut().drain(..) {
             let _ = engine::take_send_done(&self.ctx, t);
+        }
+        clean
+    }
+
+    pub(crate) fn reset(&self) {
+        if !self.drain_outstanding() {
+            // Remember the inbound RData so the arena is leaked, not
+            // recycled, when this state drops.
+            self.tainted.set(true);
         }
         self.round.set(0);
         self.done.set(false);
@@ -259,6 +288,10 @@ impl CollState {
                         count: from.len,
                         dtype: &byte,
                         mode: SendMode::Standard,
+                        // Later rounds may rewrite this arena range before
+                        // a rendezvous CTS arrives, so the payload must be
+                        // staged (into a pooled buffer) at post time.
+                        staging: p2p::RndvStaging::Staged,
                     },
                 )?;
                 drop(arena);
@@ -292,6 +325,7 @@ impl CollState {
                 }
                 let mut arena = self.arena.borrow_mut();
                 arena.copy_within(from.off..from.off + from.len, to.off);
+                self.ctx.fabric.pool.count_copied(from.len);
             }
             Step::Reduce { from, into, count } => {
                 let op = self
@@ -308,11 +342,16 @@ impl CollState {
                 // alloc+copy per pack step — see EXPERIMENTS.md §Perf).
                 let mut arena = self.arena.borrow_mut();
                 pack_into(dtype.map(), unsafe { src.as_slice() }, *count, &mut arena[to.off..to.off + to.len])?;
+                // user→arena→wire is a two-hop path: the arena hop is a
+                // CPU staging copy even for contiguous layouts (only the
+                // arena→wire move models DMA injection).
+                self.ctx.fabric.pool.count_copied(to.len);
             }
             Step::UnpackUser { from, dst, count, dtype } => {
                 let arena = self.arena.borrow();
                 let wire = &arena[from.off..from.off + from.len];
                 unpack(dtype.map(), wire, unsafe { dst.as_slice_mut() }, *count)?;
+                self.ctx.fabric.pool.count_copied(from.len);
             }
         }
         Ok(())
@@ -367,6 +406,25 @@ impl CollState {
                 self.exec_step(step)?;
             }
             self.round.set(r + 1);
+        }
+    }
+}
+
+impl Drop for CollState {
+    /// Recycle the arena into the fabric's buffer pool. If an errored run
+    /// left transfers outstanding, cancel what can be cancelled first; a
+    /// receive that already matched an RTS has RData inbound targeting
+    /// raw pointers into this arena, so in that case the arena is
+    /// intentionally leaked — a late delivery then lands in
+    /// dead-but-still-allocated memory instead of a recycled live buffer
+    /// (or freed memory, which is what dropping the `Vec` risked before).
+    fn drop(&mut self) {
+        let clean = self.drain_outstanding() && !self.tainted.get();
+        let arena = std::mem::take(&mut *self.arena.borrow_mut());
+        if clean {
+            self.ctx.fabric.pool.give(arena);
+        } else {
+            std::mem::forget(arena);
         }
     }
 }

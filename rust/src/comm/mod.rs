@@ -236,10 +236,27 @@ impl Comm {
         let Some(dst_world) = self.resolve_dst(dst)? else { return Ok(()) };
         let token = engine::start_send(
             &self.ctx,
-            p2p::SendParams { ctx_id: self.ctx_p2p, dst_world, tag, buf, count, dtype, mode },
+            p2p::SendParams {
+                ctx_id: self.ctx_p2p,
+                dst_world,
+                tag,
+                buf,
+                count,
+                dtype,
+                mode,
+                // Blocking: this call waits for completion below, so the
+                // buffer outlives any CTS-time packing — the zero-copy
+                // deferred path is sound.
+                staging: p2p::RndvStaging::Deferred,
+            },
         )?;
         if let Some(t) = token {
-            engine::wait_for(&self.ctx, || engine::send_done(&self.ctx, t))?;
+            if let Err(e) = engine::wait_for(&self.ctx, || engine::send_done(&self.ctx, t)) {
+                // The buffer borrow ends when we return: stage the payload
+                // while it is still live so a late CTS stays sound.
+                engine::detach_deferred_send(&self.ctx, t);
+                return Err(e);
+            }
             engine::take_send_done(&self.ctx, t);
         }
         Ok(())
@@ -257,8 +274,13 @@ impl Comm {
 
     // ---- immediate point-to-point ----
 
-    /// `MPI_Isend` (and siblings by mode). The payload is packed before
-    /// return, so the buffer is immediately reusable.
+    /// `MPI_Isend` (and siblings by mode). The payload is packed (into a
+    /// pooled wire buffer) before return, so the buffer is immediately
+    /// reusable — a quality-of-implementation guarantee stronger than the
+    /// standard, kept here because the returned [`Request`] does not
+    /// borrow `buf` and may be dropped without completing. The zero-copy
+    /// deferred path is reserved for sends whose buffer lifetime is
+    /// structurally guaranteed (blocking, persistent, partitioned).
     pub fn isend_mode(&self, buf: &[u8], count: usize, dtype: &Datatype, dst: i32, tag: i32, mode: SendMode) -> Result<Request> {
         self.check_send_tag(tag)?;
         let Some(dst_world) = self.resolve_dst(dst)? else {
@@ -266,7 +288,16 @@ impl Comm {
         };
         let token = engine::start_send(
             &self.ctx,
-            p2p::SendParams { ctx_id: self.ctx_p2p, dst_world, tag, buf, count, dtype, mode },
+            p2p::SendParams {
+                ctx_id: self.ctx_p2p,
+                dst_world,
+                tag,
+                buf,
+                count,
+                dtype,
+                mode,
+                staging: p2p::RndvStaging::Staged,
+            },
         )?;
         Ok(Request::from_send(self.ctx.clone(), token))
     }

@@ -6,4 +6,6 @@ pub mod mpibench;
 pub mod report;
 
 pub use mpibench::{BenchOp, Interface, MpiBenchConfig, MpiBenchRow, run_mpibench, ALL_OPS};
-pub use report::{figure1_cells, figure1_report, Figure1Cell, Figure1Report};
+pub use report::{
+    figure1_cells, figure1_report, overhead_json, write_overhead_json, Figure1Cell, Figure1Report,
+};

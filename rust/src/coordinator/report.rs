@@ -1,5 +1,5 @@
 //! Report generation: per-op tables, the Figure 1 geomean series, CSV
-//! export, and the modern/raw overhead summary.
+//! export, machine-readable JSON, and the modern/raw overhead summary.
 
 use super::mpibench::{Interface, MpiBenchRow};
 use crate::util::stats::geomean;
@@ -113,6 +113,66 @@ pub fn figure1_report(rows: &[MpiBenchRow]) -> Figure1Report {
     Figure1Report { rows_csv, figure1_csv, markdown: md, overall_overhead: overall }
 }
 
+// ---------------- machine-readable output ----------------
+
+/// A finite f64 as a JSON number (e-notation), non-finite as `null`.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Serialize measured rows as a JSON document pairing the raw and modern
+/// interface per (op, nodes, message length), with the modern/raw ratio.
+/// Hand-rolled (no serde in this offline environment); stable key order
+/// so diffs across bench runs are meaningful.
+pub fn overhead_json(rows: &[MpiBenchRow]) -> String {
+    let keys: BTreeSet<(&'static str, usize, usize, usize)> =
+        rows.iter().map(|r| (r.op.label(), r.nodes, r.ranks, r.msg_len)).collect();
+    let mut entries = Vec::new();
+    for (op, nodes, ranks, msg) in keys {
+        let find = |iface| {
+            rows.iter().find(|r| {
+                r.interface == iface
+                    && r.op.label() == op
+                    && r.nodes == nodes
+                    && r.ranks == ranks
+                    && r.msg_len == msg
+            })
+        };
+        let side = |r: Option<&MpiBenchRow>| match r {
+            Some(r) => format!(
+                "{{\"mean_s\": {}, \"stddev_s\": {}}}",
+                json_num(r.mean_s),
+                json_num(r.stddev_s)
+            ),
+            None => "null".into(),
+        };
+        let (raw, modern) = (find(Interface::Raw), find(Interface::Modern));
+        let ratio = match (raw, modern) {
+            (Some(r), Some(m)) => json_num(m.mean_s / r.mean_s),
+            _ => "null".into(),
+        };
+        entries.push(format!(
+            "    {{\"op\": \"{op}\", \"nodes\": {nodes}, \"ranks\": {ranks}, \
+             \"msg_bytes\": {msg}, \"raw\": {}, \"modern\": {}, \"modern_over_raw\": {ratio}}}",
+            side(raw),
+            side(modern),
+        ));
+    }
+    format!(
+        "{{\n  \"benchmark\": \"interface_overhead\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    )
+}
+
+/// Write [`overhead_json`] to `path` (the bench-smoke artifact).
+pub fn write_overhead_json(rows: &[MpiBenchRow], path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, overhead_json(rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::mpibench::BenchOp;
@@ -147,5 +207,30 @@ mod tests {
         assert!(report.markdown.contains("modern/raw"));
         assert!(report.rows_csv.contains("Bcast"));
         assert!(report.figure1_csv.contains("geomean_us"));
+    }
+
+    #[test]
+    fn overhead_json_pairs_interfaces() {
+        let rows = vec![
+            row(Interface::Raw, BenchOp::Bcast, 1, 8, 1e-6),
+            row(Interface::Modern, BenchOp::Bcast, 1, 8, 2e-6),
+            row(Interface::Raw, BenchOp::Barrier, 1, 8, 4e-6),
+        ];
+        let j = overhead_json(&rows);
+        assert!(j.contains("\"op\": \"Bcast\""));
+        assert!(j.contains("\"modern_over_raw\": 2e0"));
+        // Barrier has no modern measurement: explicit null, not omitted.
+        assert!(j.contains("\"modern\": null"));
+        assert!(j.contains("\"benchmark\": \"interface_overhead\""));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn json_num_guards_nonfinite() {
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(1.5), "1.5e0");
     }
 }

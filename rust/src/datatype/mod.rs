@@ -16,7 +16,7 @@
 pub mod pack;
 pub mod typemap;
 
-pub use pack::{copy, pack, pack_into, pack_size, unpack};
+pub use pack::{copy, pack, pack_into, pack_size, unpack, validate_send_span};
 pub use typemap::{Primitive, TypeMap};
 
 use std::sync::Arc;

@@ -27,7 +27,30 @@ fn check_span(map: &TypeMap, len: usize, count: usize, what: &str) -> Result<()>
     Ok(())
 }
 
-/// Pack `count` elements from `src` into `out` (appending).
+/// Validate that `count` elements of `map` fit in a `len`-byte send
+/// buffer — the post-time check for sends whose packing is deferred
+/// (zero-copy rendezvous: the payload is packed only when the CTS
+/// arrives, so span errors must be caught up front).
+pub fn validate_send_span(map: &TypeMap, len: usize, count: usize) -> Result<()> {
+    check_span(map, len, count, "send")
+}
+
+/// Walk the typed layout: invoke `f(byte_offset, byte_len)` for every
+/// primitive segment of `count` elements, in wire order. The shared core
+/// of the gather (pack) and scatter (unpack) loops.
+#[inline]
+fn for_each_segment(map: &TypeMap, count: usize, mut f: impl FnMut(usize, usize)) {
+    for i in 0..count as isize {
+        let origin = i * map.extent();
+        for &(p, d) in map.entries() {
+            f((origin + d) as usize, p.size());
+        }
+    }
+}
+
+/// Pack `count` elements from `src` into `out` (appending). The
+/// contiguous fast path is a single slice append — when `out` is a pooled
+/// wire buffer this is the whole send-side cost of the zero-copy path.
 pub fn pack(map: &TypeMap, src: &[u8], count: usize, out: &mut Vec<u8>) -> Result<()> {
     check_span(map, src.len(), count, "send")?;
     if count == 0 {
@@ -38,19 +61,14 @@ pub fn pack(map: &TypeMap, src: &[u8], count: usize, out: &mut Vec<u8>) -> Resul
         return Ok(());
     }
     out.reserve(map.size() * count);
-    for i in 0..count as isize {
-        let origin = i * map.extent();
-        for &(p, d) in map.entries() {
-            let off = (origin + d) as usize;
-            out.extend_from_slice(&src[off..off + p.size()]);
-        }
-    }
+    for_each_segment(map, count, |off, sz| out.extend_from_slice(&src[off..off + sz]));
     Ok(())
 }
 
-/// Pack directly into a preallocated wire buffer (hot-path variant used
-/// by the collective schedule engine: avoids the intermediate `Vec` of
-/// [`pack`]). `out` must be exactly `pack_size(map, count)` long.
+/// Pack directly into a preallocated, borrowed wire destination (the
+/// hot-path variant used by the collective schedule arena and the
+/// partitioned-send staging buffer: no intermediate `Vec`). `out` must be
+/// exactly `pack_size(map, count)` long.
 pub fn pack_into(map: &TypeMap, src: &[u8], count: usize, out: &mut [u8]) -> Result<()> {
     let need = pack_size(map, count);
     if out.len() != need {
@@ -65,15 +83,10 @@ pub fn pack_into(map: &TypeMap, src: &[u8], count: usize, out: &mut [u8]) -> Res
         return Ok(());
     }
     let mut w = 0usize;
-    for i in 0..count as isize {
-        let origin = i * map.extent();
-        for &(p, d) in map.entries() {
-            let off = (origin + d) as usize;
-            let s = p.size();
-            out[w..w + s].copy_from_slice(&src[off..off + s]);
-            w += s;
-        }
-    }
+    for_each_segment(map, count, |off, sz| {
+        out[w..w + sz].copy_from_slice(&src[off..off + sz]);
+        w += sz;
+    });
     Ok(())
 }
 
@@ -99,14 +112,10 @@ pub fn unpack(map: &TypeMap, wire: &[u8], dst: &mut [u8], count: usize) -> Resul
         return Ok(need);
     }
     let mut w = 0usize;
-    for i in 0..count as isize {
-        let origin = i * map.extent();
-        for &(p, d) in map.entries() {
-            let off = (origin + d) as usize;
-            dst[off..off + p.size()].copy_from_slice(&wire[w..w + p.size()]);
-            w += p.size();
-        }
-    }
+    for_each_segment(map, count, |off, sz| {
+        dst[off..off + sz].copy_from_slice(&wire[w..w + sz]);
+        w += sz;
+    });
     Ok(w)
 }
 

@@ -90,6 +90,14 @@ impl Communicator {
         self.inner.wtime()
     }
 
+    /// Counters of the fabric's wire-buffer pool: allocation, recycling
+    /// and CPU-copy telemetry for the zero-copy message path (see
+    /// [`crate::transport::wire`]). Benches use this to assert that
+    /// steady-state traffic neither allocates nor copies payload bytes.
+    pub fn pool_stats(&self) -> crate::transport::PoolStats {
+        self.inner.rank_ctx().fabric.pool.stats()
+    }
+
     /// `MPI_Comm_dup` — the one copy the paper allows (managed).
     pub fn dup(&self) -> Result<Communicator> {
         Ok(Communicator { inner: self.inner.dup()? })

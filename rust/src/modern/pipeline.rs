@@ -20,6 +20,13 @@
 //! per-iteration software cost is bounded by the request layer's (see
 //! `bench_futures`).
 //!
+//! Wire buffers follow the same discipline: each `start()` packs into a
+//! buffer checked out of the fabric's pool, and completion (the future
+//! resolving, which drops the delivered packet's last [`WireBytes`] view)
+//! hands it back — so a steady-state iteration of a pipeline allocates
+//! nothing anywhere on the message path. `Communicator::pool_stats`
+//! exposes the counters that prove it.
+//!
 //! Leaves own their message buffers (`Rc`-shared, stable addresses): the
 //! caller refills a send buffer via [`PersistentSend::buffer_mut`] before
 //! each `start()` — or from an [`Pipeline::on_start`] hook so the packing
@@ -40,7 +47,7 @@ use crate::comm::Comm;
 use crate::op::Op;
 use crate::p2p::Status;
 use crate::request::PersistentRequest;
-use crate::Result;
+use crate::{mpi_err, Result};
 use std::cell::{Ref, RefCell, RefMut};
 use std::rc::Rc;
 
@@ -198,12 +205,20 @@ impl<T: 'static> Pipeline<T> {
     /// (the future shares the pipeline's drive chain).
     ///
     /// Starting a pipeline whose previous iteration has not been driven
-    /// to completion is a `Request`-class error from the first still
-    /// active template. If a later template fails to start, the ones
-    /// already started are driven to completion (results discarded)
-    /// before the error returns, so the graph is not left half-active
-    /// and wedged.
+    /// to completion is a `Request`-class error, raised *before* the
+    /// `on_start` hooks run — the hooks rewrite registered send buffers,
+    /// which must not happen while an in-flight iteration (possibly a
+    /// deferred-rendezvous send that packs only at CTS time) still reads
+    /// them. If a later template fails to start, the ones already
+    /// started are driven to completion (results discarded) before the
+    /// error returns, so the graph is not left half-active and wedged.
     pub fn start(&self) -> Result<MpiFuture<T>> {
+        if self.is_active() {
+            return Err(mpi_err!(
+                Request,
+                "pipeline started while a previous iteration is still active"
+            ));
+        }
         for hook in &self.on_start {
             hook()?;
         }

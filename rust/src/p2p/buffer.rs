@@ -7,8 +7,10 @@
 //! only called by the owning rank's own progress engine (single-threaded
 //! access by construction).
 
-/// Borrowed send buffer (const). Only used transiently during posting —
-/// send payloads are packed immediately, so no send holds one across calls.
+/// Borrowed send buffer (const). Eager sends pack immediately and drop
+/// it; rendezvous sends with deferred staging park it until the CTS
+/// arrives, relying on the MPI contract that the send buffer stays live
+/// and untouched until the operation completes.
 #[derive(Debug, Clone, Copy)]
 pub struct RawBuf {
     ptr: *const u8,

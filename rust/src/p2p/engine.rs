@@ -2,21 +2,32 @@
 //! waits, probe and matched-probe.
 //!
 //! Design notes:
-//! * Send payloads are **packed at post time**, so a send buffer is never
-//!   captured across calls (isend buffers are immediately reusable — a
-//!   quality-of-implementation guarantee stronger than the standard).
+//! * **Eager** send payloads are packed at post time into pooled wire
+//!   buffers ([`crate::transport::BufferPool`]) and shared, not copied,
+//!   all the way to the receiver's unpack. Contiguous typemaps pack with
+//!   a single slice append that models NIC DMA injection — the zero-copy
+//!   fast path; only non-contiguous staging charges the fabric's
+//!   `wire_bytes_copied` counter.
+//! * **Rendezvous** sends with [`RndvStaging::Deferred`] pack nothing at
+//!   post time: the buffer address is parked and packing happens when the
+//!   CTS arrives. Only senders whose buffer provably outlives the
+//!   operation use it — blocking sends (the call waits), persistent
+//!   templates (blocking `Drop`) and partitioned sends (blocking `Drop`).
+//!   Everything else — plain `isend` (its `Request` may be dropped
+//!   without completing) and the collective arena (rewritten by later
+//!   rounds) — uses [`RndvStaging::Staged`].
 //! * All receive-buffer writes happen on the owning rank's thread inside
 //!   [`progress`] / [`wait_for`].
 //! * `advance` of registered [`Progressable`]s (nonblocking collectives,
 //!   collective IO) runs at the end of every progress turn; they must not
 //!   re-enter the engine.
 
-use super::buffer::RawBufMut;
+use super::buffer::{RawBuf, RawBufMut};
 use super::matcher::{MatchSelector, PostedRecv, UnexpectedBody, UnexpectedMsg};
 use super::state::{RankCtx, RecvProgress, RecvState, SendState, Status, BSEND_OVERHEAD};
-use crate::datatype::{pack, pack_size, unpack, Datatype};
+use crate::datatype::{pack, pack_size, unpack, validate_send_span, Datatype, TypeMap};
 use crate::group::Group;
-use crate::transport::{Packet, PacketKind};
+use crate::transport::{Packet, PacketKind, PoolHandle, WireBytes};
 use crate::{mpi_err, Result};
 use std::rc::Rc;
 use std::time::Duration;
@@ -33,6 +44,20 @@ pub enum SendMode {
     Ready,
 }
 
+/// How a rendezvous-size send treats its payload between post and CTS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RndvStaging {
+    /// Capture only the buffer address; pack when the CTS arrives (the
+    /// zero-copy path). The caller must *structurally guarantee* the
+    /// buffer stays live and untouched until the send completes (e.g. by
+    /// blocking in the same call, or by blocking in `Drop`).
+    Deferred,
+    /// Pack at post time into a pooled wire buffer and park the packed
+    /// bytes. For senders that cannot guarantee the source past the post
+    /// call (droppable immediate requests, collective arena rounds).
+    Staged,
+}
+
 /// Everything a send needs. `dst_world` is a world rank (comm layers
 /// translate); `ctx_id` selects the communicator context.
 pub struct SendParams<'a> {
@@ -43,6 +68,7 @@ pub struct SendParams<'a> {
     pub count: usize,
     pub dtype: &'a Datatype,
     pub mode: SendMode,
+    pub staging: RndvStaging,
 }
 
 /// Start a send. Returns `None` if it completed locally (eager standard /
@@ -51,20 +77,19 @@ pub struct SendParams<'a> {
 pub fn start_send(ctx: &RankCtx, p: SendParams<'_>) -> Result<Option<u64>> {
     p.dtype.require_committed()?;
     ctx.counters.sends_started.set(ctx.counters.sends_started.get() + 1);
-    let mut wire = Vec::new();
-    pack(p.dtype.map(), p.buf, p.count, &mut wire)?;
+    let map = p.dtype.map();
+    let nbytes = pack_size(map, p.count);
 
-    let eager = ctx.fabric.model.is_eager(wire.len())
-        || matches!(p.mode, SendMode::Buffered | SendMode::Ready);
+    let eager =
+        ctx.fabric.model.is_eager(nbytes) || matches!(p.mode, SendMode::Buffered | SendMode::Ready);
 
     if matches!(p.mode, SendMode::Buffered) {
         let pool = ctx.bsend.borrow_mut();
-        let need = wire.len() + BSEND_OVERHEAD;
+        let need = nbytes + BSEND_OVERHEAD;
         if pool.in_use + need > pool.capacity {
             return Err(mpi_err!(
                 Buffer,
-                "bsend of {} bytes exceeds attached buffer ({} of {} in use)",
-                wire.len(),
+                "bsend of {nbytes} bytes exceeds attached buffer ({} of {} in use)",
                 pool.in_use,
                 pool.capacity
             ));
@@ -75,6 +100,7 @@ pub fn start_send(ctx: &RankCtx, p: SendParams<'_>) -> Result<Option<u64>> {
 
     let now = ctx.clock.now_ns();
     if eager {
+        let wire = pack_wire(ctx, map, p.buf, p.count)?;
         let sync_token = if matches!(p.mode, SendMode::Synchronous) {
             Some(ctx.fresh_token())
         } else {
@@ -93,12 +119,26 @@ pub fn start_send(ctx: &RankCtx, p: SendParams<'_>) -> Result<Option<u64>> {
             Ok(None)
         }
     } else {
-        // Rendezvous: park the payload, ship the header. Completion is at
-        // CTS (which implies the receive matched, so this also covers the
-        // synchronous-mode contract).
+        // Rendezvous: ship the header, park the payload (or just its
+        // address). Completion is at CTS (which implies the receive
+        // matched, so this also covers the synchronous-mode contract).
         let token = ctx.fresh_token();
-        let nbytes = wire.len();
-        ctx.sends.borrow_mut().insert(token, SendState::AwaitCts { payload: wire });
+        let state = match p.staging {
+            RndvStaging::Staged => {
+                SendState::AwaitCts { staged: pack_wire(ctx, map, p.buf, p.count)? }
+            }
+            RndvStaging::Deferred => {
+                // Packing happens at CTS; surface span errors now, while
+                // the caller can still handle them.
+                validate_send_span(map, p.buf.len(), p.count)?;
+                SendState::AwaitCtsDeferred {
+                    buf: RawBuf::from_slice(p.buf),
+                    count: p.count,
+                    dtype: p.dtype.clone(),
+                }
+            }
+        };
+        ctx.sends.borrow_mut().insert(token, state);
         ctx.fabric.send(
             ctx.world_rank,
             p.dst_world,
@@ -107,6 +147,53 @@ pub fn start_send(ctx: &RankCtx, p: SendParams<'_>) -> Result<Option<u64>> {
         );
         Ok(Some(token))
     }
+}
+
+/// Detach a deferred rendezvous send from its caller-owned buffer: if the
+/// send is still awaiting CTS with packing deferred, pack *now* — while
+/// the buffer is provably still live — and park the staged bytes instead.
+/// Error-path cleanup: callers that can no longer guarantee the buffer
+/// past the current call (a blocking wait that returned an error, a
+/// template drop whose rescue wait failed) must call this before letting
+/// the buffer go, or a late CTS would pack from freed memory. No-op for
+/// any other send state.
+pub fn detach_deferred_send(ctx: &RankCtx, token: u64) {
+    let state = ctx.sends.borrow_mut().remove(&token);
+    match state {
+        Some(SendState::AwaitCtsDeferred { buf, count, dtype }) => {
+            let staged = pack_wire(ctx, dtype.map(), unsafe { buf.as_slice() }, count)
+                .unwrap_or_else(|_| WireBytes::empty());
+            ctx.sends.borrow_mut().insert(token, SendState::AwaitCts { staged });
+        }
+        Some(other) => {
+            ctx.sends.borrow_mut().insert(token, other);
+        }
+        None => {}
+    }
+}
+
+/// Error-path cleanup for a receive whose buffer can no longer be
+/// guaranteed: cancel it if still posted, then unconditionally drop its
+/// engine state so a late delivery fails loudly (`Intern` error at the
+/// RData/eager handler) instead of writing through the dangling buffer
+/// pointer.
+pub fn abandon_recv(ctx: &RankCtx, token: u64) {
+    let _ = cancel_recv(ctx, token);
+    ctx.recvs.borrow_mut().remove(&token);
+    ctx.pending_rndv.borrow_mut().remove(&token);
+}
+
+/// Pack `count` elements into a pooled wire buffer and freeze it for
+/// sharing. Contiguous layouts are a single slice append (DMA-modeled
+/// injection, not charged); non-contiguous staging charges the fabric's
+/// `wire_bytes_copied` counter.
+fn pack_wire(ctx: &RankCtx, map: &TypeMap, src: &[u8], count: usize) -> Result<WireBytes> {
+    let mut wire = ctx.fabric.pool.take(pack_size(map, count));
+    pack(map, src, count, &mut wire)?;
+    if !map.is_contiguous() {
+        ctx.fabric.pool.count_copied(wire.len());
+    }
+    Ok(wire.freeze())
 }
 
 /// Post a receive. `src_world`/`tag` of `None` are the wildcards. Returns
@@ -171,8 +258,18 @@ fn match_arrived(ctx: &RankCtx, recv_token: u64, msg: UnexpectedMsg) -> Result<(
     }
 }
 
-/// Unpack wire bytes into the receive's buffer and complete it.
-fn deliver_payload(ctx: &RankCtx, recv_token: u64, src_world: usize, tag: i32, data: &[u8]) -> Result<()> {
+/// Unpack wire bytes into the receive's buffer and complete it. Reads
+/// directly from the shared packet view — the payload is not duplicated
+/// between arrival and unpack. The contiguous unpack is the DMA-modeled
+/// single copy into the user buffer; non-contiguous scatter charges
+/// `wire_bytes_copied`.
+fn deliver_payload(
+    ctx: &RankCtx,
+    recv_token: u64,
+    src_world: usize,
+    tag: i32,
+    data: &WireBytes,
+) -> Result<()> {
     let mut recvs = ctx.recvs.borrow_mut();
     let rs = recvs
         .get_mut(&recv_token)
@@ -191,6 +288,9 @@ fn deliver_payload(ctx: &RankCtx, recv_token: u64, src_world: usize, tag: i32, d
     let whole = if elem == 0 { 0 } else { data.len() / elem };
     let buf = unsafe { rs.buf.as_slice_mut() };
     let result = unpack(rs.dtype.map(), data, buf, whole).and_then(|used| {
+        if !rs.dtype.map().is_contiguous() {
+            ctx.fabric.pool.count_copied(used);
+        }
         // Partial trailing element: only well-defined for contiguous
         // layouts (bytes land in order); for noncontiguous layouts the
         // remainder is dropped and the status still reports actual bytes.
@@ -269,23 +369,27 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
             }
         }
         PacketKind::Cts { token, recv_token } => {
-            let payload = {
-                let mut sends = ctx.sends.borrow_mut();
-                match sends.remove(&token) {
-                    Some(SendState::AwaitCts { payload }) => {
-                        sends.insert(token, SendState::Done);
-                        payload
-                    }
-                    other => {
-                        return Err(mpi_err!(
-                            Intern,
-                            "CTS for send token {token} in state {other:?}"
-                        ))
-                    }
+            let state = ctx.sends.borrow_mut().remove(&token);
+            let data = match state {
+                // Staged: the packed bytes were parked at post; ship the
+                // same shared buffer — no copy, no allocation.
+                Some(SendState::AwaitCts { staged }) => staged,
+                // Deferred: the zero-copy path packs here, straight from
+                // the (contract-protected) user buffer into a pooled wire
+                // buffer. The span was validated at post time.
+                Some(SendState::AwaitCtsDeferred { buf, count, dtype }) => {
+                    pack_wire(ctx, dtype.map(), unsafe { buf.as_slice() }, count)?
+                }
+                other => {
+                    return Err(mpi_err!(
+                        Intern,
+                        "CTS for send token {token} in state {other:?}"
+                    ))
                 }
             };
+            ctx.sends.borrow_mut().insert(token, SendState::Done);
             let now = ctx.clock.now_ns();
-            ctx.fabric.send(ctx.world_rank, pkt.src, now, PacketKind::RData { recv_token, data: payload });
+            ctx.fabric.send(ctx.world_rank, pkt.src, now, PacketKind::RData { recv_token, data });
             Ok(())
         }
         PacketKind::RData { recv_token, data } => {

@@ -4,6 +4,7 @@
 //! communicator, tag) match in send order — falls out of FIFO mailboxes plus
 //! FIFO scanning of both queues here.
 
+use crate::transport::WireBytes;
 use std::collections::VecDeque;
 
 /// What a receive is willing to match. `None` = wildcard
@@ -44,8 +45,10 @@ pub struct UnexpectedMsg {
 
 #[derive(Debug)]
 pub enum UnexpectedBody {
-    /// Eager payload (wire bytes) and optional synchronous-send token.
-    Eager { data: Vec<u8>, sync_token: Option<u64> },
+    /// Eager payload: a shared *view* of the sender's pooled wire buffer
+    /// (queueing an unexpected message clones an `Arc`, never the bytes)
+    /// and the optional synchronous-send token.
+    Eager { data: WireBytes, sync_token: Option<u64> },
     /// Rendezvous header: payload still at the sender.
     Rts { nbytes: usize, token: u64, sync_token: Option<u64> },
 }
@@ -142,7 +145,7 @@ mod tests {
             src,
             tag,
             depart_vt: 0.0,
-            body: UnexpectedBody::Eager { data: vec![], sync_token: None },
+            body: UnexpectedBody::Eager { data: WireBytes::empty(), sync_token: None },
         }
     }
 
@@ -199,6 +202,36 @@ mod tests {
         assert!(m.cancel_posted(42));
         assert!(!m.cancel_posted(42));
         assert!(m.take_posted(0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn unexpected_bodies_are_views_in_fifo_order() {
+        // Four queued messages share ONE backing buffer (views, not
+        // clones) and still come out in arrival order.
+        let backing = WireBytes::from_vec((0u8..32).collect());
+        let mut m = Matcher::new();
+        for i in 0..4 {
+            m.push_unexpected(UnexpectedMsg {
+                ctx: 0,
+                src: 1,
+                tag: 7,
+                depart_vt: i as f64,
+                body: UnexpectedBody::Eager { data: backing.slice(i * 8, 8), sync_token: None },
+            });
+        }
+        assert_eq!(backing.ref_count(), 5, "queued bodies must share, not clone");
+        let sel = MatchSelector { ctx: 0, src: Some(1), tag: Some(7) };
+        for i in 0..4u8 {
+            let msg = m.take_unexpected(&sel).expect("message queued");
+            match msg.body {
+                UnexpectedBody::Eager { data, .. } => {
+                    assert_eq!(data[0], i * 8, "FIFO order violated");
+                    assert_eq!(data.len(), 8);
+                }
+                UnexpectedBody::Rts { .. } => unreachable!(),
+            }
+        }
+        assert_eq!(backing.ref_count(), 1);
     }
 
     #[test]

@@ -18,9 +18,9 @@ pub mod state;
 
 pub use buffer::{RawBuf, RawBufMut};
 pub use engine::{
-    cancel_recv, improbe, iprobe, mprobe, mrecv, post_recv, probe, progress, recv_done,
-    send_done, start_send, take_recv_result, take_send_done, wait_for, Message, SendMode,
-    SendParams,
+    abandon_recv, cancel_recv, detach_deferred_send, improbe, iprobe, mprobe, mrecv, post_recv,
+    probe, progress, recv_done, send_done, start_send, take_recv_result, take_send_done,
+    wait_for, Message, RndvStaging, SendMode, SendParams,
 };
 pub use matcher::{Matcher, MatchSelector};
 pub use state::{RankCtx, Progressable, Status};

@@ -15,7 +15,7 @@ use super::buffer::{RawBuf, RawBufMut};
 use super::engine;
 use super::state::{RankCtx, Status};
 use crate::comm::Comm;
-use crate::datatype::{pack, Datatype};
+use crate::datatype::{pack_into, Datatype};
 use crate::request::Request;
 use crate::{mpi_err, Result};
 use std::cell::RefCell;
@@ -118,16 +118,24 @@ impl PsendRequest {
         }
         st.ready[i] = true;
         st.staged_parts += 1;
-        // Pack partition i from the user buffer.
+        // Pack partition i from the user buffer straight into its slot of
+        // the staging buffer (no intermediate allocation or copy).
         let esz = self.dtype.extent() as usize;
         let wire_sz = self.dtype.size() * self.count_per_partition;
         let full = unsafe { self.buf.as_slice() };
         let lo = i * self.count_per_partition * esz;
         let hi = (lo + self.count_per_partition * esz).min(full.len());
-        let mut wire = Vec::with_capacity(wire_sz);
-        pack(self.dtype.map(), &full[lo..hi], self.count_per_partition, &mut wire)?;
         let off = i * wire_sz;
-        st.staged[off..off + wire_sz].copy_from_slice(&wire);
+        pack_into(
+            self.dtype.map(),
+            &full[lo..hi],
+            self.count_per_partition,
+            &mut st.staged[off..off + wire_sz],
+        )?;
+        // Two-hop path: this staging memcpy is a CPU copy regardless of
+        // contiguity (the later staged→wire move is the DMA-modeled one),
+        // so it always charges the copy counter.
+        self.ctx.fabric.pool.count_copied(wire_sz);
 
         if st.staged_parts == self.partitions {
             // All ready: ship as one message.
@@ -147,6 +155,11 @@ impl PsendRequest {
                             count: st.staged.len(),
                             dtype: &byte,
                             mode: super::engine::SendMode::Standard,
+                            // The staging buffer is stable until `wait`
+                            // deactivates this request, and wait only
+                            // returns once the send completed (i.e. after
+                            // any CTS-time packing read it).
+                            staging: super::engine::RndvStaging::Deferred,
                         },
                     )?;
                     st.inflight = Some(Request::from_send(self.ctx.clone(), token));
@@ -181,9 +194,35 @@ impl PsendRequest {
             }
         }
         let req = self.state.borrow_mut().inflight.take().expect("inflight set");
-        let s = req.wait()?;
+        let s = match req.wait() {
+            Ok(s) => s,
+            Err(e) => {
+                // The staging buffer may be freed before a late CTS: park
+                // the payload as staged bytes while it is still live.
+                req.detach_buffers();
+                self.state.borrow_mut().active = false;
+                return Err(e);
+            }
+        };
         self.state.borrow_mut().active = false;
         Ok(s)
+    }
+}
+
+impl Drop for PsendRequest {
+    /// The in-flight send may hold only the *address* of the staging
+    /// buffer (deferred rendezvous packing), so the buffer must outlive
+    /// the transfer: block for completion before the staging buffer is
+    /// freed. Skipped while unwinding, like `PersistentRequest`.
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            return;
+        }
+        if let Some(req) = self.state.borrow_mut().inflight.take() {
+            if req.wait().is_err() {
+                req.detach_buffers();
+            }
+        }
     }
 }
 
@@ -274,6 +313,26 @@ impl PrecvRequest {
         let s = req.wait()?;
         self.spec.borrow_mut().done = true;
         Ok(s)
+    }
+}
+
+impl Drop for PrecvRequest {
+    /// A posted partitioned receive writes through a raw pointer into the
+    /// user's buffer (captured at init); dropping the request while it is
+    /// active must block for completion so the engine never delivers into
+    /// freed memory — the same lifetime discipline as `PsendRequest` and
+    /// `PersistentRequest`. Skipped while unwinding.
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            return;
+        }
+        if let Some(req) = self.spec.borrow_mut().active.take() {
+            if req.wait().is_err() {
+                // Rescue wait failed: drop the engine's pointer into the
+                // user buffer before the buffer itself dies.
+                req.detach_buffers();
+            }
+        }
     }
 }
 

@@ -1,10 +1,10 @@
 //! Per-rank runtime state (`RankCtx`) and completion bookkeeping.
 
-use super::buffer::RawBufMut;
+use super::buffer::{RawBuf, RawBufMut};
 use super::matcher::Matcher;
 use crate::datatype::Datatype;
 use crate::group::Group;
-use crate::transport::{Fabric, Packet, VClock};
+use crate::transport::{Fabric, Packet, VClock, WireBytes};
 use crate::{MpiError, Result};
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -46,8 +46,15 @@ impl Status {
 /// State of an in-flight send.
 #[derive(Debug)]
 pub enum SendState {
-    /// Rendezvous: waiting for CTS; payload parked here.
-    AwaitCts { payload: Vec<u8> },
+    /// Rendezvous, staged: payload packed at post time into a pooled wire
+    /// buffer and parked here until the CTS (internal senders whose source
+    /// range is mutable before completion, e.g. the collective arena).
+    AwaitCts { staged: WireBytes },
+    /// Rendezvous, zero-copy: packing is deferred until the CTS arrives —
+    /// only the user buffer's address is parked. Sound because the MPI
+    /// contract forbids touching a send buffer before the operation
+    /// completes, and completion is at CTS processing (after packing).
+    AwaitCtsDeferred { buf: RawBuf, count: usize, dtype: Datatype },
     /// Eager synchronous send: waiting for the receiver's match ack.
     AwaitAck,
     Done,

@@ -124,6 +124,21 @@ impl Request {
         engine::wait_for(&self.ctx, || self.ready_now())?;
         self.consume()
     }
+
+    /// Error-path cleanup when the caller can no longer guarantee the
+    /// operation's buffer: a send whose rendezvous packing was deferred
+    /// is staged while the buffer is still live
+    /// ([`engine::detach_deferred_send`]); a still-registered receive is
+    /// abandoned ([`engine::abandon_recv`]) so a late delivery fails
+    /// instead of writing through a dangling pointer. Call before letting
+    /// the buffer of an incomplete operation go. No-op otherwise.
+    pub fn detach_buffers(&self) {
+        match &*self.kind.borrow() {
+            ReqKind::Send(t) => engine::detach_deferred_send(&self.ctx, *t),
+            ReqKind::Recv(t) => engine::abandon_recv(&self.ctx, *t),
+            _ => {}
+        }
+    }
 }
 
 impl std::fmt::Debug for Request {
@@ -284,6 +299,10 @@ impl PersistentRequest {
                                 count: *count,
                                 dtype,
                                 mode: *mode,
+                                // The registered buffer outlives the
+                                // template and stays untouched while
+                                // active: safe to pack at CTS time.
+                                staging: p2p::RndvStaging::Deferred,
                             },
                         )?;
                         Request::from_send(self.ctx.clone(), token)
@@ -344,8 +363,13 @@ impl Drop for PersistentRequest {
     /// and mask the original error, and the engine only runs on this
     /// (dying) thread anyway.
     fn drop(&mut self) {
-        if self.is_active() && !std::thread::panicking() {
-            let _ = self.wait();
+        if self.is_active() && !std::thread::panicking() && self.wait().is_err() {
+            // The registered buffer dies with this template; if the
+            // rescue wait failed, stage a still-parked deferred payload /
+            // abandon a still-registered receive while the buffer lives.
+            if let Some(req) = &*self.active.borrow() {
+                req.detach_buffers();
+            }
         }
     }
 }

@@ -29,7 +29,7 @@ pub fn cvars() -> Vec<CvarInfo> {
         },
         CvarInfo {
             name: "netmodel_eager_threshold",
-            description: "eager/rendezvous switch in bytes for new universes",
+            description: "eager/rendezvous switch in bytes for new universes (cvar write wins over the FERROMPI_EAGER_LIMIT env override)",
             writable: true,
             category: "transport",
         },
@@ -58,12 +58,24 @@ use std::sync::atomic::{AtomicU64, Ordering};
 static EAGER_OVERRIDE: AtomicU64 = AtomicU64::new(0);
 static ALPHA_INTER_OVERRIDE: AtomicU64 = AtomicU64::new(0);
 
-/// Apply cvar overrides to a freshly built model.
+/// Resolve the effective eager/rendezvous threshold: a written cvar wins,
+/// then the `FERROMPI_EAGER_LIMIT` environment override (benches use it
+/// to sweep both protocols without touching the tool interface), then the
+/// model default.
+fn resolve_eager_threshold(cvar: u64, env: Option<&str>, default: usize) -> usize {
+    if cvar > 0 {
+        return cvar as usize;
+    }
+    env.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(default)
+}
+
+/// Apply cvar/env overrides to a freshly built model.
 pub fn apply_model_overrides(model: &mut crate::transport::NetworkModel) {
     let e = EAGER_OVERRIDE.load(Ordering::Relaxed);
-    if e > 0 {
-        model.eager_threshold = e as usize;
-    }
+    let env = std::env::var("FERROMPI_EAGER_LIMIT").ok();
+    model.eager_threshold = resolve_eager_threshold(e, env.as_deref(), model.eager_threshold);
     let a = ALPHA_INTER_OVERRIDE.load(Ordering::Relaxed);
     if a > 0 {
         model.alpha_inter_ns = a as f64;
@@ -84,11 +96,13 @@ pub fn cvar_read(name: &str) -> Result<String> {
         }),
         "netmodel_eager_threshold" => {
             let v = EAGER_OVERRIDE.load(Ordering::Relaxed);
-            Ok(if v == 0 {
-                crate::transport::NetworkModel::omnipath().eager_threshold.to_string()
-            } else {
-                v.to_string()
-            })
+            let env = std::env::var("FERROMPI_EAGER_LIMIT").ok();
+            Ok(resolve_eager_threshold(
+                v,
+                env.as_deref(),
+                crate::transport::NetworkModel::omnipath().eager_threshold,
+            )
+            .to_string())
         }
         "netmodel_alpha_inter_ns" => {
             let v = ALPHA_INTER_OVERRIDE.load(Ordering::Relaxed);
@@ -162,5 +176,16 @@ mod tests {
         apply_model_overrides(&mut m);
         assert_eq!(m.eager_threshold, 1024);
         cvar_write("netmodel_eager_threshold", "0").unwrap(); // reset
+    }
+
+    #[test]
+    fn eager_threshold_precedence() {
+        // cvar > env > default; malformed / zero values fall through.
+        assert_eq!(resolve_eager_threshold(1024, Some("2048"), 65536), 1024);
+        assert_eq!(resolve_eager_threshold(0, Some("2048"), 65536), 2048);
+        assert_eq!(resolve_eager_threshold(0, Some(" 512 "), 65536), 512);
+        assert_eq!(resolve_eager_threshold(0, Some("0"), 65536), 65536);
+        assert_eq!(resolve_eager_threshold(0, Some("wat"), 65536), 65536);
+        assert_eq!(resolve_eager_threshold(0, None, 65536), 65536);
     }
 }

@@ -34,6 +34,9 @@ pub fn pvars() -> Vec<PvarInfo> {
         PvarInfo { name: "fabric_intra_node_msgs", description: "intra-node transfers", class: Counter, category: "transport" },
         PvarInfo { name: "fabric_inter_node_msgs", description: "inter-node transfers", class: Counter, category: "transport" },
         PvarInfo { name: "fabric_mailbox_hwm", description: "deepest delivery queue observed", class: HighWatermark, category: "transport" },
+        PvarInfo { name: "wire_bytes_copied", description: "payload bytes CPU-copied on the wire path (non-contiguous staging, partitioned/arena two-hop staging, arena shuffles); the contiguous eager fast path counts zero", class: Counter, category: "transport" },
+        PvarInfo { name: "pool_recycled", description: "wire buffers reused from the fabric's buffer pool", class: Counter, category: "transport" },
+        PvarInfo { name: "pool_allocated", description: "fresh wire-buffer allocations (buffer-pool misses)", class: Counter, category: "transport" },
         PvarInfo { name: "rank_sends_started", description: "sends started by this rank", class: Counter, category: "matching" },
         PvarInfo { name: "rank_recvs_posted", description: "receives posted by this rank", class: Counter, category: "matching" },
         PvarInfo { name: "rank_messages_matched", description: "envelope matches completed", class: Counter, category: "matching" },
@@ -86,6 +89,9 @@ impl<'a> PvarSession<'a> {
             "fabric_intra_node_msgs" => f.intra_node_msgs.load(Ordering::Relaxed),
             "fabric_inter_node_msgs" => f.inter_node_msgs.load(Ordering::Relaxed),
             "fabric_mailbox_hwm" => f.mailbox_hwm.load(Ordering::Relaxed),
+            "wire_bytes_copied" => ctx.fabric.pool.copied_bytes.load(Ordering::Relaxed),
+            "pool_recycled" => ctx.fabric.pool.recycled.load(Ordering::Relaxed),
+            "pool_allocated" => ctx.fabric.pool.allocated.load(Ordering::Relaxed),
             "rank_sends_started" => c.sends_started.get(),
             "rank_recvs_posted" => c.recvs_posted.get(),
             "rank_messages_matched" => c.messages_matched.get(),

@@ -5,7 +5,9 @@ use super::mailbox::Mailbox;
 use super::netmodel::NetworkModel;
 use super::nodemap::NodeMap;
 use super::packet::{Packet, PacketKind};
+use super::wire::BufferPool;
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Transport counters, exported as performance variables by the tool
@@ -49,6 +51,9 @@ pub struct Fabric {
     pub nodemap: NodeMap,
     pub model: NetworkModel,
     pub stats: FabricStats,
+    /// The job's wire-buffer pool: every payload that crosses this fabric
+    /// is packed into (and recycled through) these buffers.
+    pub pool: Arc<BufferPool>,
     /// Wall epoch shared by every rank's hybrid clock.
     pub epoch: Instant,
     mailboxes: Vec<Mailbox>,
@@ -81,6 +86,7 @@ impl Fabric {
             nodemap,
             model,
             stats: FabricStats::default(),
+            pool: Arc::new(BufferPool::new()),
             epoch: Instant::now(),
             mailboxes: (0..n).map(|_| Mailbox::new()).collect(),
             aborted: AtomicBool::new(false),
@@ -165,10 +171,11 @@ mod tests {
         let f = fabric();
         let now = 1_000.0;
         // ranks 0,1 on node 0; rank 2 on node 1.
+        let payload = || super::super::wire::WireBytes::from_vec(vec![0; 100]);
         let d_intra =
-            f.send(0, 1, now, PacketKind::Eager { ctx: 0, tag: 0, data: vec![0; 100], sync_token: None });
+            f.send(0, 1, now, PacketKind::Eager { ctx: 0, tag: 0, data: payload(), sync_token: None });
         let d_inter =
-            f.send(0, 2, now, PacketKind::Eager { ctx: 0, tag: 0, data: vec![0; 100], sync_token: None });
+            f.send(0, 2, now, PacketKind::Eager { ctx: 0, tag: 0, data: payload(), sync_token: None });
         let m = NetworkModel::omnipath();
         assert!((d_intra - (now + m.cost_ns(100, true))).abs() < 1e-9);
         assert!((d_inter - (now + m.cost_ns(100, false))).abs() < 1e-9);
@@ -180,7 +187,8 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let f = fabric();
-        f.send(0, 1, 0.0, PacketKind::Eager { ctx: 0, tag: 0, data: vec![0; 10], sync_token: None });
+        let data = super::super::wire::WireBytes::from_vec(vec![0; 10]);
+        f.send(0, 1, 0.0, PacketKind::Eager { ctx: 0, tag: 0, data, sync_token: None });
         f.send(0, 2, 0.0, PacketKind::Rts { ctx: 0, tag: 0, nbytes: 1 << 20, token: 1, sync_token: None });
         f.send(2, 0, 0.0, PacketKind::Cts { token: 1, recv_token: 9 });
         assert_eq!(f.stats.msgs_sent.load(Ordering::Relaxed), 3);

@@ -66,7 +66,12 @@ mod tests {
         Packet {
             src,
             depart_vt: 0.0,
-            kind: PacketKind::Eager { ctx: 0, tag, data: vec![], sync_token: None },
+            kind: PacketKind::Eager {
+                ctx: 0,
+                tag,
+                data: super::super::wire::WireBytes::empty(),
+                sync_token: None,
+            },
         }
     }
 

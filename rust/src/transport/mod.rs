@@ -16,6 +16,9 @@
 //!   keeps the model deterministic under oversubscription.
 //! * [`packet`] / [`mailbox`] — the wire format and per-rank delivery
 //!   queues (Mutex + Condvar).
+//! * [`wire`] — shared, pooled wire bytes: payloads are `Arc`-backed
+//!   views recycled through a per-fabric buffer pool, so the steady-state
+//!   message path neither allocates nor duplicates payload bytes.
 //! * [`fabric`] — ties the above together and keeps transport-level
 //!   counters exported through the tool (`MPI_T`) interface.
 
@@ -25,6 +28,7 @@ pub mod mailbox;
 pub mod netmodel;
 pub mod nodemap;
 pub mod packet;
+pub mod wire;
 
 pub use clock::VClock;
 pub use fabric::{Fabric, FabricStats};
@@ -32,3 +36,4 @@ pub use mailbox::Mailbox;
 pub use netmodel::NetworkModel;
 pub use nodemap::NodeMap;
 pub use packet::{Packet, PacketKind};
+pub use wire::{BufferPool, PoolHandle, PoolStats, WireBytes, WireVec};

@@ -10,6 +10,12 @@
 //!   the payload stays at the sender until the receive buffer is known.
 //! * **SsendAck** — completes a synchronous-mode send when its message has
 //!   been matched, regardless of protocol.
+//!
+//! Payloads are [`WireBytes`]: `Arc`-backed views into pooled wire
+//! buffers, so queueing, matching and delivery share one allocation
+//! instead of copying or reallocating per message.
+
+use super::wire::WireBytes;
 
 /// A packet in flight.
 #[derive(Debug)]
@@ -25,12 +31,13 @@ pub struct Packet {
 /// Packet payloads.
 #[derive(Debug)]
 pub enum PacketKind {
-    /// Eager message: `data` is the packed payload.
+    /// Eager message: `data` is the packed payload (a shared view into a
+    /// pooled wire buffer).
     Eager {
         /// Communicator context id (p2p or collective context).
         ctx: u32,
         tag: i32,
-        data: Vec<u8>,
+        data: WireBytes,
         /// For synchronous-mode sends: token the receiver must ack.
         sync_token: Option<u64>,
     },
@@ -40,7 +47,7 @@ pub enum PacketKind {
     /// `recv_token`.
     Cts { token: u64, recv_token: u64 },
     /// Rendezvous payload for the posted receive `recv_token`.
-    RData { recv_token: u64, data: Vec<u8> },
+    RData { recv_token: u64, data: WireBytes },
     /// The message carrying `token` (a synchronous send) was matched.
     SsendAck { token: u64 },
 }
@@ -72,12 +79,17 @@ mod tests {
 
     #[test]
     fn payload_len_per_kind() {
-        let e = PacketKind::Eager { ctx: 0, tag: 1, data: vec![0; 10], sync_token: None };
+        let e = PacketKind::Eager {
+            ctx: 0,
+            tag: 1,
+            data: WireBytes::from_vec(vec![0; 10]),
+            sync_token: None,
+        };
         assert_eq!(e.payload_len(), 10);
         assert_eq!(e.label(), "eager");
         let r = PacketKind::Rts { ctx: 0, tag: 1, nbytes: 1 << 20, token: 7, sync_token: None };
         assert_eq!(r.payload_len(), 0);
-        let d = PacketKind::RData { recv_token: 3, data: vec![0; 5] };
+        let d = PacketKind::RData { recv_token: 3, data: WireBytes::from_vec(vec![0; 5]) };
         assert_eq!(d.payload_len(), 5);
         assert_eq!(PacketKind::Cts { token: 1, recv_token: 2 }.payload_len(), 0);
         assert_eq!(PacketKind::SsendAck { token: 1 }.payload_len(), 0);

@@ -1,0 +1,372 @@
+//! Shared, pooled wire bytes — the zero-copy payload representation of
+//! the message path.
+//!
+//! Two pieces:
+//!
+//! * [`WireBytes`] — an `Arc`-backed, immutable byte buffer with
+//!   offset/len *views* (`Bytes`-style). Cloning or slicing shares the
+//!   allocation; nothing on the transport or matching path ever duplicates
+//!   payload bytes. When the last view drops, the underlying buffer
+//!   returns to its pool.
+//! * [`BufferPool`] — a per-fabric freelist of wire buffers. Steady-state
+//!   traffic recycles buffers instead of allocating per message, which is
+//!   what lets the mpibench overhead numbers measure the *interface*
+//!   rather than the allocator.
+//!
+//! Copy accounting: the pool's `copied_bytes` counter (exported as the
+//! `wire_bytes_copied` pvar) counts payload bytes the *CPU* copies on the
+//! message path — non-contiguous pack/unpack staging, two-hop stagings
+//! (partitioned `pready` into its staging buffer, collective user↔arena
+//! conversion), arena shuffles, copy-out fallbacks. The single memcpy
+//! that moves a *contiguous* user buffer straight into (or out of) a wire
+//! buffer models NIC DMA injection on an RDMA fabric and is deliberately
+//! **not** counted: on the contiguous eager fast path the interface layer
+//! touches zero payload bytes, and a test asserts the counter stays at
+//! zero there.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Buffers larger than this are not retained by the pool (a single huge
+/// rendezvous transfer must not pin megabytes forever).
+const MAX_POOLED_CAPACITY: usize = 4 << 20;
+/// Maximum number of idle buffers kept per pool.
+const MAX_POOLED_BUFFERS: usize = 64;
+
+/// Snapshot of a pool's counters (tool layer, benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Fresh heap allocations (pool misses).
+    pub allocated: u64,
+    /// Buffers handed back out of the freelist (pool hits).
+    pub recycled: u64,
+    /// Payload bytes CPU-copied on the message path (see module docs).
+    pub copied_bytes: u64,
+    /// Idle buffers currently shelved.
+    pub pooled: usize,
+}
+
+/// A per-fabric freelist of wire buffers.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    shelves: Mutex<Vec<Vec<u8>>>,
+    pub allocated: AtomicU64,
+    pub recycled: AtomicU64,
+    pub copied_bytes: AtomicU64,
+}
+
+/// Checkout surface on the *shared* pool handle: the returned buffer
+/// carries a `Weak` back-pointer so it can find its way home, which needs
+/// the `Arc` itself — hence a trait on `Arc<BufferPool>` rather than an
+/// inherent method.
+pub trait PoolHandle {
+    /// Take an empty buffer with at least `capacity` bytes of room,
+    /// recycling a shelved one when possible. The returned [`WireVec`]
+    /// goes back to this pool on drop, or graduates into a shared
+    /// [`WireBytes`] via [`WireVec::freeze`].
+    fn take(&self, capacity: usize) -> WireVec;
+}
+
+impl PoolHandle for Arc<BufferPool> {
+    fn take(&self, capacity: usize) -> WireVec {
+        WireVec { data: self.take_vec(capacity), pool: Arc::downgrade(self) }
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// The raw-`Vec` variant for long-lived mutable buffers (collective
+    /// arenas): pair with [`BufferPool::give`].
+    pub fn take_vec(&self, capacity: usize) -> Vec<u8> {
+        if capacity == 0 {
+            // Zero-payload messages (barrier tokens, empty sends) neither
+            // allocate nor recycle; keep the counters about real buffers.
+            return Vec::new();
+        }
+        let mut shelves = self.shelves.lock().unwrap();
+        // Best fit (smallest sufficient capacity): an any-fit pick would
+        // let tiny requests steal the big recycled buffers and force the
+        // large-message steady state to reallocate every iteration.
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in shelves.iter().enumerate() {
+            let cap = b.capacity();
+            if cap < capacity {
+                continue;
+            }
+            match best {
+                Some((_, c)) if c <= cap => {}
+                _ => best = Some((i, cap)),
+            }
+        }
+        let reused = best.map(|(i, _)| shelves.swap_remove(i));
+        drop(shelves);
+        match reused {
+            Some(b) => {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            // No shelved buffer fits: a genuine miss. Leave the (smaller)
+            // shelved buffers alone — growing one via `reserve` would be
+            // a fresh heap allocation the counters never saw.
+            None => {
+                self.allocated.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(capacity)
+            }
+        }
+    }
+
+    /// Return a buffer to the freelist (cleared; dropped on overflow or
+    /// when oversized).
+    pub fn give(&self, mut v: Vec<u8>) {
+        if v.capacity() == 0 || v.capacity() > MAX_POOLED_CAPACITY {
+            return;
+        }
+        v.clear();
+        let mut shelves = self.shelves.lock().unwrap();
+        if shelves.len() < MAX_POOLED_BUFFERS {
+            shelves.push(v);
+        }
+    }
+
+    /// Record `bytes` payload bytes CPU-copied on the message path.
+    pub fn count_copied(&self, bytes: usize) {
+        self.copied_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            allocated: self.allocated.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            copied_bytes: self.copied_bytes.load(Ordering::Relaxed),
+            pooled: self.shelves.lock().unwrap().len(),
+        }
+    }
+}
+
+/// A mutable wire buffer checked out of a [`BufferPool`]: the packing
+/// destination of the send path. Derefs to `Vec<u8>` so `pack` can append
+/// into it directly. Dropping an unfrozen `WireVec` returns the buffer to
+/// its pool.
+#[derive(Debug)]
+pub struct WireVec {
+    data: Vec<u8>,
+    pool: Weak<BufferPool>,
+}
+
+impl WireVec {
+    /// Seal the packed bytes into an immutable, shareable [`WireBytes`].
+    /// The allocation still returns to the pool — when the last view of
+    /// the frozen bytes drops.
+    pub fn freeze(mut self) -> WireBytes {
+        let data = std::mem::take(&mut self.data);
+        let pool = std::mem::replace(&mut self.pool, Weak::new());
+        let len = data.len();
+        WireBytes { chunk: Arc::new(PoolChunk { data, pool }), off: 0, len }
+    }
+}
+
+impl std::ops::Deref for WireVec {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for WireVec {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.data
+    }
+}
+
+impl Drop for WireVec {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            pool.give(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+/// The refcounted backing of one wire buffer; returns the allocation to
+/// its pool when the last [`WireBytes`] view drops.
+struct PoolChunk {
+    data: Vec<u8>,
+    pool: Weak<BufferPool>,
+}
+
+impl Drop for PoolChunk {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            pool.give(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+/// Immutable shared wire bytes: an `Arc`-backed slice with an offset/len
+/// view. Clones and sub-slices share the same allocation — the payload is
+/// never duplicated as it moves packet → matcher → unpack.
+#[derive(Clone)]
+pub struct WireBytes {
+    chunk: Arc<PoolChunk>,
+    off: usize,
+    len: usize,
+}
+
+impl WireBytes {
+    /// Wrap an owned `Vec` (unpooled: the allocation is freed, not
+    /// recycled, when the last view drops). Tests and cold paths.
+    pub fn from_vec(v: Vec<u8>) -> WireBytes {
+        let len = v.len();
+        WireBytes { chunk: Arc::new(PoolChunk { data: v, pool: Weak::new() }), off: 0, len }
+    }
+
+    pub fn empty() -> WireBytes {
+        WireBytes::from_vec(Vec::new())
+    }
+
+    /// A sub-view sharing this allocation. Panics if out of range.
+    pub fn slice(&self, off: usize, len: usize) -> WireBytes {
+        assert!(
+            off.checked_add(len).map(|end| end <= self.len).unwrap_or(false),
+            "WireBytes::slice [{off}, {off}+{len}) out of view of length {}",
+            self.len
+        );
+        WireBytes { chunk: self.chunk.clone(), off: self.off + off, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.chunk.data[self.off..self.off + self.len]
+    }
+
+    /// How many views share the backing allocation (tests / diagnostics).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.chunk)
+    }
+
+    /// Copy the view out into an owned `Vec` — the *only* duplicating
+    /// accessor; callers with pool access should charge
+    /// [`BufferPool::count_copied`].
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl std::ops::Deref for WireBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for WireBytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for WireBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WireBytes")
+            .field("len", &self.len)
+            .field("off", &self.off)
+            .field("refs", &Arc::strong_count(&self.chunk))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_share_allocation() {
+        let w = WireBytes::from_vec((0u8..32).collect());
+        let a = w.slice(0, 8);
+        let b = w.slice(8, 24);
+        assert_eq!(w.ref_count(), 3);
+        assert_eq!(&a[..], &(0u8..8).collect::<Vec<_>>()[..]);
+        assert_eq!(b[0], 8);
+        assert_eq!(b.len(), 24);
+        let c = b.slice(16, 8);
+        assert_eq!(c[0], 24);
+        drop((a, b, c));
+        assert_eq!(w.ref_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of view")]
+    fn slice_bounds_checked() {
+        WireBytes::from_vec(vec![0; 4]).slice(2, 3);
+    }
+
+    #[test]
+    fn pool_recycles_buffers() {
+        let pool = Arc::new(BufferPool::new());
+        let mut v = pool.take(128);
+        v.extend_from_slice(&[1, 2, 3]);
+        let frozen = v.freeze();
+        assert_eq!(pool.stats().allocated, 1);
+        assert_eq!(pool.stats().pooled, 0);
+        drop(frozen); // last view → back to the shelf
+        assert_eq!(pool.stats().pooled, 1);
+        let v2 = pool.take(64);
+        assert_eq!(pool.stats().recycled, 1);
+        assert_eq!(pool.stats().allocated, 1, "steady state allocates nothing");
+        assert!(v2.capacity() >= 64);
+        assert!(v2.is_empty());
+    }
+
+    #[test]
+    fn shared_views_defer_recycling() {
+        let pool = Arc::new(BufferPool::new());
+        let w = {
+            let mut v = pool.take(16);
+            v.extend_from_slice(&[9; 16]);
+            v.freeze()
+        };
+        let view = w.slice(4, 4);
+        drop(w);
+        // A live view still pins the buffer.
+        assert_eq!(pool.stats().pooled, 0);
+        assert_eq!(view[0], 9);
+        drop(view);
+        assert_eq!(pool.stats().pooled, 1);
+    }
+
+    #[test]
+    fn unfrozen_wirevec_returns_on_drop() {
+        let pool = Arc::new(BufferPool::new());
+        {
+            let mut v = pool.take(32);
+            v.push(1);
+        }
+        assert_eq!(pool.stats().pooled, 1);
+    }
+
+    #[test]
+    fn oversized_buffers_not_retained() {
+        let pool = Arc::new(BufferPool::new());
+        pool.give(Vec::with_capacity(MAX_POOLED_CAPACITY + 1));
+        assert_eq!(pool.stats().pooled, 0);
+        pool.give(Vec::new()); // zero-capacity: nothing to recycle
+        assert_eq!(pool.stats().pooled, 0);
+    }
+
+    #[test]
+    fn copy_counter_accumulates() {
+        let pool = BufferPool::new();
+        pool.count_copied(10);
+        pool.count_copied(5);
+        assert_eq!(pool.stats().copied_bytes, 15);
+    }
+}

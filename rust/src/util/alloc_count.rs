@@ -1,0 +1,52 @@
+//! A counting global allocator for the benches: wraps the system
+//! allocator and tallies every allocation (count and bytes), so a bench
+//! can assert "the steady-state message path allocates nothing" instead
+//! of inferring it from timings.
+//!
+//! Usage (in a bench binary):
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: ferrompi::util::alloc_count::CountingAlloc =
+//!     ferrompi::util::alloc_count::CountingAlloc;
+//! ```
+//!
+//! Counters are process-global and monotone; measure deltas around the
+//! region of interest. `realloc` counts as one allocation (it may move).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// The counting wrapper around [`System`].
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocations since process start (monotone).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested since process start (monotone; not live bytes).
+pub fn allocated_bytes() -> u64 {
+    ALLOCATED_BYTES.load(Ordering::Relaxed)
+}

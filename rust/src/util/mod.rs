@@ -2,6 +2,7 @@
 //! so `rand`, `clap`, `criterion` and `proptest` are replaced by the small
 //! purpose-built implementations below — see DESIGN.md §8).
 
+pub mod alloc_count;
 pub mod rng;
 pub mod stats;
 pub mod timing;

@@ -1,0 +1,256 @@
+//! The zero-copy message path, end to end: property tests for
+//! pack/unpack roundtrips over non-contiguous typemaps through the
+//! borrowed-destination API, the `wire_bytes_copied` pvar asserting zero
+//! payload copies on the contiguous eager fast path, FIFO order of
+//! matcher unexpected bodies held as shared views, deferred rendezvous
+//! packing, and steady-state buffer-pool recycling.
+
+use ferrompi::comm::Comm;
+use ferrompi::datatype::{pack, pack_into, pack_size, unpack, Datatype, Primitive, TypeMap};
+use ferrompi::tool::pvar::PvarSession;
+use ferrompi::transport::NetworkModel;
+use ferrompi::universe::Universe;
+use ferrompi::util::prop::{check_no_shrink, Config};
+use ferrompi::util::rng::Rng;
+
+fn bytes(v: &[i32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn i32s(b: &[u8]) -> Vec<i32> {
+    b.chunks(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// A random *non-contiguous* typemap with non-negative lower bound:
+/// vector, indexed, struct or resized — the four shapes named by the
+/// satellite task.
+fn random_noncontiguous(rng: &mut Rng) -> TypeMap {
+    let prim = *rng.choose(&[Primitive::I32, Primitive::U8, Primitive::F64, Primitive::I16]);
+    let base = TypeMap::primitive(prim);
+    match rng.range(0, 4) {
+        0 => {
+            // Strided vector with a real gap.
+            let bl = rng.range(1, 3);
+            TypeMap::vector(rng.range(2, 4), bl, (bl + rng.range(1, 3)) as isize, &base)
+        }
+        1 => {
+            // Indexed blocks with a hole between them.
+            let first = rng.range(1, 3);
+            TypeMap::indexed(
+                &[(first, 0), (rng.range(1, 3), (first + rng.range(1, 4)) as isize)],
+                &base,
+            )
+        }
+        2 => {
+            // Struct with trailing padding (classic repr(C) shape).
+            let second_off = base.true_extent() + rng.range(1, 8) as isize;
+            TypeMap::structure(&[
+                (0, base.clone(), 1),
+                (second_off, TypeMap::primitive(Primitive::U8), 1),
+            ])
+        }
+        _ => {
+            // Resized: extent padded past the data, so count > 1 strides
+            // over a gap.
+            let pad = rng.range(1, 9) as isize;
+            base.resized(0, base.true_extent() + pad)
+        }
+    }
+}
+
+/// Memory span (bytes) needed for `count` elements of `map` (lb ≥ 0).
+fn span_of(map: &TypeMap, count: usize) -> usize {
+    (((count as isize - 1) * map.extent() + map.true_ub()).max(map.true_ub())).max(1) as usize
+}
+
+#[test]
+fn prop_roundtrip_noncontiguous_borrowed_destinations() {
+    check_no_shrink(
+        Config { cases: 250, seed: 0x31BE, ..Default::default() },
+        |rng| {
+            let map = random_noncontiguous(rng);
+            let count = rng.range(1, 5);
+            (map, count, rng.next_u64())
+        },
+        |(map, count, seed)| {
+            let mut rng = Rng::new(*seed);
+            let total = span_of(map, *count);
+            let mut src = vec![0u8; total];
+            rng.fill_bytes(&mut src);
+            if map.is_contiguous() {
+                return Err(format!("generator produced a contiguous map: {map:?}"));
+            }
+            // Appending pack and borrowed-destination pack must agree.
+            let mut wire = Vec::new();
+            pack(map, &src, *count, &mut wire).map_err(|e| e.to_string())?;
+            let mut wire_into = vec![0u8; pack_size(map, *count)];
+            pack_into(map, &src, *count, &mut wire_into).map_err(|e| e.to_string())?;
+            if wire != wire_into {
+                return Err(format!("pack vs pack_into disagree for {map:?}"));
+            }
+            // Unpack into a borrowed destination, repack: wire image is a
+            // fixed point (pack ∘ unpack = id on wire data).
+            let mut dst = vec![0u8; total];
+            let used = unpack(map, &wire, &mut dst, *count).map_err(|e| e.to_string())?;
+            if used != wire.len() {
+                return Err(format!("unpack consumed {used} of {} bytes", wire.len()));
+            }
+            let mut wire2 = Vec::new();
+            pack(map, &dst, *count, &mut wire2).map_err(|e| e.to_string())?;
+            if wire != wire2 {
+                return Err(format!("roundtrip wire mismatch for {map:?} count {count}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance check: a contiguous eager send/recv performs zero
+/// payload copies, asserted through the `wire_bytes_copied` pvar, while
+/// the pool recycles buffers instead of allocating per message.
+#[test]
+fn contiguous_eager_path_is_zero_copy_and_recycles() {
+    const ROUNDS: usize = 8;
+    let u = Universe::test(2);
+    let (_, fabric) = u.run_with_stats(|comm: &Comm| {
+        let t = Datatype::primitive(Primitive::I32);
+        let payload: Vec<i32> = (0..256).collect();
+        let wire = bytes(&payload);
+        let mut buf = vec![0u8; wire.len()];
+        let peer = 1 - comm.rank() as i32;
+        for _ in 0..ROUNDS {
+            if comm.rank() == 0 {
+                comm.send(&wire, 256, &t, peer, 3).unwrap();
+                comm.recv(&mut buf, 256, &t, peer, 3).unwrap();
+            } else {
+                comm.recv(&mut buf, 256, &t, peer, 3).unwrap();
+                comm.send(&wire, 256, &t, peer, 3).unwrap();
+            }
+            assert_eq!(i32s(&buf), payload);
+        }
+        let session = PvarSession::create(comm);
+        assert_eq!(
+            session.read("wire_bytes_copied").unwrap(),
+            0,
+            "contiguous eager traffic must not CPU-copy payload bytes"
+        );
+        assert!(session.read("pool_recycled").unwrap() > 0, "steady state must recycle");
+    });
+    let stats = fabric.pool.stats();
+    assert_eq!(stats.copied_bytes, 0);
+    // 2 ranks × 8 rounds = 16 packed payloads; at most a handful of real
+    // allocations before the pool reaches steady state.
+    assert!(stats.recycled >= 8, "expected recycling, got {stats:?}");
+    assert!(stats.allocated <= 8, "per-message allocation regressed: {stats:?}");
+}
+
+#[test]
+fn noncontiguous_send_charges_the_copy_counter() {
+    let u = Universe::test(2);
+    let (_, fabric) = u.run_with_stats(|comm: &Comm| {
+        // Column of a 3×4 row-major i32 matrix.
+        let mut col = Datatype::new(TypeMap::vector(3, 1, 4, &TypeMap::primitive(Primitive::I32)));
+        col.commit();
+        let contig = Datatype::primitive(Primitive::I32);
+        if comm.rank() == 0 {
+            let m: Vec<i32> = (0..12).collect();
+            comm.send(&bytes(&m), 1, &col, 1, 0).unwrap();
+        } else {
+            let mut buf = vec![0u8; 12];
+            comm.recv(&mut buf, 3, &contig, 0, 0).unwrap();
+            assert_eq!(i32s(&buf), vec![0, 4, 8]);
+        }
+    });
+    // The sender's gather staged 12 wire bytes; the receiver's unpack was
+    // contiguous (uncounted).
+    assert_eq!(fabric.pool.stats().copied_bytes, 12);
+}
+
+/// Rendezvous with a tiny eager limit: packing is deferred until CTS and
+/// the contiguous path still copies nothing.
+#[test]
+fn rendezvous_defers_packing_and_stays_zero_copy() {
+    let mut model = NetworkModel::zero();
+    model.eager_threshold = 16;
+    let u = Universe::with_model(1, 2, model);
+    let (_, fabric) = u.run_with_stats(|comm: &Comm| {
+        let t = Datatype::primitive(Primitive::U8);
+        if comm.rank() == 0 {
+            let payload: Vec<u8> = (0..=255).cycle().take(4096).collect();
+            comm.send(&payload, 4096, &t, 1, 9).unwrap();
+        } else {
+            let mut buf = vec![0u8; 4096];
+            let st = comm.recv(&mut buf, 4096, &t, 0, 9).unwrap();
+            assert_eq!(st.bytes, 4096);
+            assert!(buf.iter().enumerate().all(|(i, &b)| b == (i % 256) as u8));
+        }
+    });
+    assert!(
+        fabric.stats.rndv_sent.load(std::sync::atomic::Ordering::Relaxed) >= 2,
+        "expected RTS + RData over the rendezvous protocol"
+    );
+    assert_eq!(fabric.pool.stats().copied_bytes, 0);
+}
+
+/// Messages arriving before their receives queue as shared views and
+/// still match in FIFO order (the non-overtaking rule).
+#[test]
+fn unexpected_bodies_match_fifo_end_to_end() {
+    const N: usize = 5;
+    let u = Universe::test(2);
+    u.run(|comm: &Comm| {
+        let t = Datatype::primitive(Primitive::U8);
+        if comm.rank() == 0 {
+            for i in 0..N {
+                let payload = [i as u8; 8];
+                comm.send(&payload, 8, &t, 1, 7).unwrap();
+            }
+        } else {
+            // Let every message land in the unexpected queue first.
+            while comm.rank_ctx().matcher.borrow().unexpected_len() < N {
+                ferrompi::p2p::progress(comm.rank_ctx()).unwrap();
+            }
+            for i in 0..N {
+                let mut buf = [0u8; 8];
+                comm.recv(&mut buf, 8, &t, 0, 7).unwrap();
+                assert_eq!(buf, [i as u8; 8], "unexpected-queue FIFO order violated");
+            }
+        }
+    });
+}
+
+/// After warmup, a ping-pong loop takes every wire buffer from the pool:
+/// the allocation counter stays flat across hundreds of messages.
+#[test]
+fn steady_state_pool_allocations_stay_flat() {
+    let u = Universe::test(2);
+    let (counts, fabric) = u.run_with_stats(|comm: &Comm| {
+        let t = Datatype::primitive(Primitive::U8);
+        let payload = [7u8; 64];
+        let mut buf = [0u8; 64];
+        let peer = 1 - comm.rank() as i32;
+        let mut round = |me: usize| {
+            if me == 0 {
+                comm.send(&payload, 64, &t, peer, 0).unwrap();
+                comm.recv(&mut buf, 64, &t, peer, 0).unwrap();
+            } else {
+                comm.recv(&mut buf, 64, &t, peer, 0).unwrap();
+                comm.send(&payload, 64, &t, peer, 0).unwrap();
+            }
+        };
+        for _ in 0..4 {
+            round(comm.rank());
+        }
+        // Both ranks are quiesced here (each round is a full round trip).
+        let baseline = comm.rank_ctx().fabric.pool.stats().allocated;
+        for _ in 0..50 {
+            round(comm.rank());
+        }
+        let after = comm.rank_ctx().fabric.pool.stats().allocated;
+        (baseline, after)
+    });
+    for (baseline, after) in counts {
+        assert_eq!(baseline, after, "pool missed in steady state: {:?}", fabric.pool.stats());
+    }
+    assert!(fabric.pool.stats().recycled >= 100, "{:?}", fabric.pool.stats());
+}
