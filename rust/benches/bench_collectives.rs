@@ -1,7 +1,9 @@
-//! A4 — collective algorithm ablation: allreduce
-//! (recursive-doubling / ring / reduce+bcast) and bcast (binomial /
-//! linear) across message sizes; shows the crossovers the algorithm
-//! registry exists for.
+//! A4 — collective algorithm ablation: allreduce (recursive-doubling /
+//! ring / reduce+bcast / hier / auto) and bcast (binomial / linear /
+//! hier / auto) across message sizes; shows the crossovers the tuned
+//! selection layer (`collective::tuned`) exists for, and what `auto`
+//! actually picks at each size. Reshape with `FERROMPI_NODES` /
+//! `FERROMPI_PPN`.
 
 use ferrompi::collective::config::{self, AllreduceAlg, BcastAlg};
 use ferrompi::datatype::{Datatype, Primitive};
@@ -30,7 +32,7 @@ fn time_allreduce(nodes: usize, ppn: usize, count: usize, alg: AllreduceAlg) -> 
         }
         (comm.wtime() - t0) / REPS as f64
     });
-    config::set_allreduce_alg(AllreduceAlg::RecursiveDoubling);
+    config::set_allreduce_alg(AllreduceAlg::Auto);
     mean(&times)
 }
 
@@ -49,34 +51,50 @@ fn time_bcast(nodes: usize, ppn: usize, bytes: usize, alg: BcastAlg) -> f64 {
         }
         (comm.wtime() - t0) / REPS as f64
     });
-    config::set_bcast_alg(BcastAlg::Binomial);
+    config::set_bcast_alg(BcastAlg::Auto);
     mean(&times)
 }
 
 fn main() {
-    let (nodes, ppn) = (4, 2);
+    let u = Universe::from_env(4, 2);
+    let (nodes, ppn) = (u.nodemap.nodes, u.nodemap.ppn);
     println!("\nA4 — allreduce algorithms, {nodes} nodes × {ppn} ppn (us/op):\n");
-    let mut t = Table::new(&["f32 count", "rec-doubling", "ring", "reduce+bcast"]);
+    let mut t = Table::new(&["f32 count", "rec-doubling", "ring", "reduce+bcast", "hier", "auto"]);
     for count in [16usize, 1024, 16384, 131072] {
         let rd = time_allreduce(nodes, ppn, count, AllreduceAlg::RecursiveDoubling);
         let ring = time_allreduce(nodes, ppn, count, AllreduceAlg::Ring);
         let rb = time_allreduce(nodes, ppn, count, AllreduceAlg::ReduceBcast);
+        let hier = time_allreduce(nodes, ppn, count, AllreduceAlg::Hier);
+        let auto = time_allreduce(nodes, ppn, count, AllreduceAlg::Auto);
         t.push(vec![
             count.to_string(),
             format!("{:.1}", rd * 1e6),
             format!("{:.1}", ring * 1e6),
             format!("{:.1}", rb * 1e6),
+            format!("{:.1}", hier * 1e6),
+            format!("{:.1}", auto * 1e6),
         ]);
     }
     println!("{}", t.to_markdown());
 
     println!("\nA4 — bcast algorithms, {nodes} nodes × {ppn} ppn (us/op):\n");
-    let mut t = Table::new(&["bytes", "binomial", "linear"]);
+    let mut t = Table::new(&["bytes", "binomial", "linear", "hier", "auto"]);
     for bytes in [64usize, 4096, 262144] {
         let bin = time_bcast(nodes, ppn, bytes, BcastAlg::Binomial);
         let lin = time_bcast(nodes, ppn, bytes, BcastAlg::Linear);
-        t.push(vec![bytes.to_string(), format!("{:.1}", bin * 1e6), format!("{:.1}", lin * 1e6)]);
+        let hier = time_bcast(nodes, ppn, bytes, BcastAlg::Hier);
+        let auto = time_bcast(nodes, ppn, bytes, BcastAlg::Auto);
+        t.push(vec![
+            bytes.to_string(),
+            format!("{:.1}", bin * 1e6),
+            format!("{:.1}", lin * 1e6),
+            format!("{:.1}", hier * 1e6),
+            format!("{:.1}", auto * 1e6),
+        ]);
     }
     println!("{}", t.to_markdown());
-    println!("expected shape: rec-doubling wins small, ring wins large; binomial beats linear as p grows");
+    println!(
+        "expected shape: rec-doubling wins small, ring wins large, hier wins small multi-node; \
+         auto should track the per-row winner (binomial beats linear as p grows)"
+    );
 }

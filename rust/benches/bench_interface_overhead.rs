@@ -2,15 +2,24 @@
 //! per op, at fixed shape (the paper reports only the geomean; this shows
 //! where any overhead would live).
 //!
-//! Besides the human-readable table, writes the machine-readable
-//! `BENCH_interface_overhead.json` at the repo root (op, shape, raw and
-//! modern mean+stddev, modern/raw ratio) — the perf-trajectory seed and
-//! the CI bench-smoke artifact — and reports allocation counts so the
-//! overhead numbers demonstrably measure the interface, not the
-//! allocator. Set `FERROMPI_BENCH_QUICK=1` for a seconds-scale shape.
+//! Besides the human-readable table, writes two machine-readable JSON
+//! files at the repo root (both CI bench-smoke artifacts):
+//!
+//! * `BENCH_interface_overhead.json` — op, shape, raw and modern
+//!   mean+stddev, modern/raw ratio (the perf-trajectory seed);
+//! * `BENCH_tuned_collectives.json` — the flat-vs-hier-vs-auto
+//!   trajectory: allreduce/bcast across multi-node shapes per algorithm,
+//!   with modeled time and the per-op inter-node message split (the
+//!   number hierarchical algorithms exist to shrink).
+//!
+//! Also reports allocation counts so the overhead numbers demonstrably
+//! measure the interface, not the allocator. Set `FERROMPI_BENCH_QUICK=1`
+//! for a seconds-scale shape; `FERROMPI_NODES`/`FERROMPI_PPN` reshape the
+//! cluster without recompiling.
 
 use ferrompi::coordinator::{
-    run_mpibench, write_overhead_json, Interface, MpiBenchConfig, ALL_OPS,
+    run_algsweep, run_mpibench, write_overhead_json, write_tuned_json, Interface, MpiBenchConfig,
+    ALL_OPS,
 };
 use ferrompi::util::alloc_count;
 use ferrompi::util::table::Table;
@@ -20,10 +29,11 @@ static ALLOC: alloc_count::CountingAlloc = alloc_count::CountingAlloc;
 
 fn main() {
     let quick = std::env::var("FERROMPI_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let ppn = ferrompi::universe::Universe::from_env(2, 2).nodemap.ppn;
     let cfg = MpiBenchConfig {
         msg_lens: vec![1024],
-        node_counts: vec![2],
-        ppn: 2,
+        node_counts: if quick { vec![2] } else { vec![2, 4] },
+        ppn,
         reps: if quick { 2 } else { 5 },
         iters: if quick { 3 } else { 10 },
         interfaces: vec![Interface::Raw, Interface::Modern],
@@ -49,7 +59,7 @@ fn main() {
             format!("{:.3}", modern / raw),
         ]);
     }
-    println!("\nA1 — per-op interface overhead (1 KiB, 2 nodes × 2 ppn):\n");
+    println!("\nA1 — per-op interface overhead (1 KiB, 2 nodes × {ppn} ppn):\n");
     println!("{}", t.to_markdown());
     // Per (op, msg, node count, interface): 2 warmup ops + reps timed
     // loops of `iters` ops each (see coordinator::mpibench::measure_job).
@@ -63,12 +73,38 @@ fn main() {
         allocs as f64 / total_ops as f64
     );
 
+    // The tuned-collective trajectory: flat vs hier vs auto over
+    // multi-node shapes, with the per-op inter-node message split.
+    let shapes: &[(usize, usize)] =
+        if quick { &[(4, 2)] } else { &[(2, 2), (4, 2), (4, 4)] };
+    let msg_lens: &[usize] = if quick { &[1024] } else { &[64, 1024, 1 << 17] };
+    let sweep = run_algsweep(shapes, msg_lens, if quick { 3 } else { 10 }, |m| eprintln!("{m}"));
+    let mut t = Table::new(&["op", "alg", "resolved", "nodes×ppn", "msg B", "us/op", "inter msgs/op", "msgs/op"]);
+    for r in &sweep {
+        t.push(vec![
+            r.op.into(),
+            r.alg.into(),
+            r.resolved.into(),
+            format!("{}x{}", r.nodes, r.ppn),
+            r.msg_len.to_string(),
+            format!("{:.1}", r.time_s * 1e6),
+            format!("{:.1}", r.inter_msgs_per_op),
+            format!("{:.1}", r.total_msgs_per_op),
+        ]);
+    }
+    println!("\nA1b — tuned collectives, flat vs hier vs auto:\n");
+    println!("{}", t.to_markdown());
+
     // Repo root = parent of the rust/ crate (CWD under `cargo bench` is
     // wherever cargo was invoked, so anchor on the manifest instead).
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("crate has a parent dir")
-        .join("BENCH_interface_overhead.json");
+        .to_path_buf();
+    let path = root.join("BENCH_interface_overhead.json");
     write_overhead_json(&rows, &path).expect("write bench JSON");
+    println!("wrote {}", path.display());
+    let path = root.join("BENCH_tuned_collectives.json");
+    write_tuned_json(&sweep, &path).expect("write tuned JSON");
     println!("wrote {}", path.display());
 }

@@ -9,19 +9,20 @@
 //!   in builder order.
 //! * All arena contents are packed wire bytes.
 
-use super::config::{AllreduceAlg, BcastAlg};
+use super::config::{AllgathervAlg, AllreduceAlg, AlltoallvAlg, BcastAlg, ReduceAlg};
 use super::schedule::{ArenaRange, SchedBuilder, Schedule};
+use super::tuned;
 use crate::comm::Comm;
 use crate::datatype::Datatype;
 use crate::op::Op;
 use crate::p2p::{RawBuf, RawBufMut};
 use crate::Result;
 
-fn w(comm: &Comm, group_rank: usize) -> usize {
+pub(crate) fn w(comm: &Comm, group_rank: usize) -> usize {
     comm.group().world_rank(group_rank).expect("builder rank in range")
 }
 
-fn ceil_log2(p: usize) -> usize {
+pub(crate) fn ceil_log2(p: usize) -> usize {
     (usize::BITS - (p - 1).leading_zeros()) as usize
 }
 
@@ -61,8 +62,13 @@ pub fn barrier(comm: &Comm) -> Schedule {
 
 pub fn bcast(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize, alg: BcastAlg) -> Schedule {
     match alg {
+        BcastAlg::Auto => {
+            let resolved = tuned::resolve_bcast(comm, dtype.size() * count, alg);
+            bcast(comm, buf, count, dtype, root, resolved)
+        }
         BcastAlg::Binomial => bcast_binomial(comm, buf, count, dtype, root),
         BcastAlg::Linear => bcast_linear(comm, buf, count, dtype, root),
+        BcastAlg::Hier => tuned::bcast_hier(comm, buf, count, dtype, root),
     }
 }
 
@@ -119,8 +125,9 @@ fn bcast_linear(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, roo
 
 // ---------------- reduce ----------------
 
-/// Binomial-tree reduce for commutative ops; ordered linear gather-fold
-/// for non-commutative ones.
+/// Reduce dispatch. Non-commutative ops are always routed to the ordered
+/// linear fold by [`tuned::resolve_reduce`]; the `alg` handed in here is
+/// expected to be pre-resolved (an `Auto` is resolved again, defensively).
 #[allow(clippy::too_many_arguments)]
 pub fn reduce(
     comm: &Comm,
@@ -130,16 +137,19 @@ pub fn reduce(
     dtype: &Datatype,
     op: &Op,
     root: usize,
+    alg: ReduceAlg,
 ) -> Result<Schedule> {
-    if op.is_commutative() {
-        Ok(reduce_binomial(comm, sbuf, rbuf, count, dtype, root))
-    } else {
-        Ok(reduce_linear_ordered(comm, sbuf, rbuf, count, dtype, root))
-    }
+    let alg = tuned::resolve_reduce(comm, dtype.size() * count, op.is_commutative(), alg);
+    Ok(match alg {
+        ReduceAlg::Auto => unreachable!("resolve_reduce returns a concrete algorithm"),
+        ReduceAlg::Binomial => reduce_binomial(comm, sbuf, rbuf, count, dtype, root),
+        ReduceAlg::Linear => reduce_linear_ordered(comm, sbuf, rbuf, count, dtype, root),
+        ReduceAlg::Hier => tuned::reduce_hier(comm, sbuf, rbuf, count, dtype, root),
+    })
 }
 
 /// `sbuf = None` means MPI_IN_PLACE at the root (contribution is in rbuf).
-fn pack_contribution(
+pub(crate) fn pack_contribution(
     sb: &mut SchedBuilder,
     sbuf: Option<&[u8]>,
     rbuf: &Option<&mut [u8]>,
@@ -248,15 +258,80 @@ pub fn allreduce(
     op: &Op,
     alg: AllreduceAlg,
 ) -> Schedule {
-    if !op.is_commutative() || matches!(alg, AllreduceAlg::ReduceBcast) {
-        return allreduce_reduce_bcast(comm, sbuf, rbuf, count, dtype);
-    }
+    let alg = tuned::resolve_allreduce(comm, dtype.size() * count, op.is_commutative(), alg);
     match alg {
+        AllreduceAlg::Auto => unreachable!("resolve_allreduce returns a concrete algorithm"),
         AllreduceAlg::RecursiveDoubling => {
             allreduce_recursive_doubling(comm, sbuf, rbuf, count, dtype)
         }
         AllreduceAlg::Ring => allreduce_ring(comm, sbuf, rbuf, count, dtype),
-        AllreduceAlg::ReduceBcast => unreachable!(),
+        AllreduceAlg::ReduceBcast => allreduce_reduce_bcast(comm, sbuf, rbuf, count, dtype),
+        AllreduceAlg::Hier => tuned::allreduce_hier(comm, sbuf, rbuf, count, dtype),
+    }
+}
+
+/// Recursive-doubling allreduce rounds over an arbitrary member list
+/// (group ranks), with the standard non-power-of-two pre/post phase.
+/// `me` is this rank's index into `members`; `acc` holds the local
+/// contribution on entry and the full reduction on exit (for every
+/// member — non-members must not call this). Shared by the flat
+/// algorithm (`members = 0..p`) and the hierarchical one (`members =
+/// node leaders`).
+pub(crate) fn recursive_doubling_core(
+    sb: &mut SchedBuilder,
+    comm: &Comm,
+    members: &[usize],
+    me: usize,
+    acc: ArenaRange,
+    tmp: ArenaRange,
+    count: usize,
+) {
+    let p = members.len();
+    if p <= 1 {
+        return;
+    }
+    let p2 = if p.is_power_of_two() { p } else { 1 << (ceil_log2(p) - 1) };
+    let rem = p - p2;
+    // Pre-phase: fold odd members of the first 2*rem into their even peers.
+    let newrank: isize = if me < 2 * rem {
+        if me % 2 == 1 {
+            sb.send(w(comm, members[me - 1]), acc);
+            sb.barrier_round();
+            -1
+        } else {
+            sb.recv(w(comm, members[me + 1]), tmp);
+            sb.barrier_round();
+            sb.reduce(tmp, acc, count);
+            sb.barrier_round();
+            (me / 2) as isize
+        }
+    } else {
+        (me - rem) as isize
+    };
+
+    if newrank >= 0 {
+        let nr = newrank as usize;
+        let real = |x: usize| if x < rem { x * 2 } else { x + rem };
+        let mut m = 1usize;
+        while m < p2 {
+            let partner = members[real(nr ^ m)];
+            sb.send(w(comm, partner), acc);
+            sb.recv(w(comm, partner), tmp);
+            sb.barrier_round();
+            sb.reduce(tmp, acc, count);
+            sb.barrier_round();
+            m <<= 1;
+        }
+    }
+
+    // Post-phase: evens hand the result back to their odd peers.
+    if me < 2 * rem {
+        if me % 2 == 0 {
+            sb.send(w(comm, members[me + 1]), acc);
+        } else {
+            sb.recv(w(comm, members[me - 1]), acc);
+        }
+        sb.barrier_round();
     }
 }
 
@@ -273,59 +348,13 @@ fn allreduce_recursive_doubling(
     let mut sb = SchedBuilder::new();
     let acc = sb.alloc(n);
     let tmp = sb.alloc(n);
-    {
-        let rb: Option<&mut [u8]> = None;
-        match sbuf {
-            Some(s) => sb.pack_user(s, count, dtype, acc),
-            None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), count, dtype, acc),
-        }
-        let _ = rb;
+    match sbuf {
+        Some(s) => sb.pack_user(s, count, dtype, acc),
+        None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), count, dtype, acc),
     }
     sb.barrier_round();
-
-    let p2 = if p.is_power_of_two() { p } else { 1 << (ceil_log2(p) - 1) };
-    let rem = p - p2;
-    // Pre-phase: fold odd ranks of the first 2*rem into their even peers.
-    let newrank: isize = if r < 2 * rem {
-        if r % 2 == 1 {
-            sb.send(w(comm, r - 1), acc);
-            sb.barrier_round();
-            -1
-        } else {
-            sb.recv(w(comm, r + 1), tmp);
-            sb.barrier_round();
-            sb.reduce(tmp, acc, count);
-            sb.barrier_round();
-            (r / 2) as isize
-        }
-    } else {
-        (r - rem) as isize
-    };
-
-    if newrank >= 0 {
-        let nr = newrank as usize;
-        let real = |x: usize| if x < rem { x * 2 } else { x + rem };
-        let mut m = 1usize;
-        while m < p2 {
-            let partner = real(nr ^ m);
-            sb.send(w(comm, partner), acc);
-            sb.recv(w(comm, partner), tmp);
-            sb.barrier_round();
-            sb.reduce(tmp, acc, count);
-            sb.barrier_round();
-            m <<= 1;
-        }
-    }
-
-    // Post-phase: evens hand the result back to their odd peers.
-    if r < 2 * rem {
-        if r % 2 == 0 {
-            sb.send(w(comm, r + 1), acc);
-        } else {
-            sb.recv(w(comm, r - 1), acc);
-        }
-        sb.barrier_round();
-    }
+    let members: Vec<usize> = (0..p).collect();
+    recursive_doubling_core(&mut sb, comm, &members, r, acc, tmp, count);
     sb.unpack_user(acc, rbuf, count, dtype);
     sb.finish()
 }
@@ -540,8 +569,10 @@ pub fn scatterv(
 
 // ---------------- allgather / alltoall ----------------
 
-/// Ring allgather with per-rank counts (`MPI_Allgatherv`; `MPI_Allgather`
-/// passes uniform counts).
+/// Allgather with per-rank counts (`MPI_Allgatherv`; `MPI_Allgather`
+/// passes uniform counts). Dispatches on the selected algorithm: a
+/// pipelined neighbor ring, or a single spread round where every pair
+/// exchanges blocks directly.
 #[allow(clippy::too_many_arguments)]
 pub fn allgatherv(
     comm: &Comm,
@@ -552,8 +583,18 @@ pub fn allgatherv(
     rcounts: &[usize],
     rdispls_bytes: &[usize],
     rdtype: &Datatype,
+    alg: AllgathervAlg,
 ) -> Schedule {
     let (r, p) = (comm.rank(), comm.size());
+    // Normally pre-resolved by the caller; resolve here only for a
+    // direct builder invocation with the knob still on `Auto`.
+    let alg = match alg {
+        AllgathervAlg::Auto => {
+            let block = rdtype.size() * rcounts.iter().copied().max().unwrap_or(0);
+            tuned::resolve_allgatherv(comm, block, AllgathervAlg::Auto)
+        }
+        other => other,
+    };
     let mut sb = SchedBuilder::new();
     let slots: Vec<ArenaRange> = (0..p).map(|i| sb.alloc(rdtype.size() * rcounts[i])).collect();
     match sbuf {
@@ -565,14 +606,32 @@ pub fn allgatherv(
     }
     sb.barrier_round();
     if p > 1 {
-        let right = w(comm, (r + 1) % p);
-        let left = w(comm, (r + p - 1) % p);
-        for t in 0..p - 1 {
-            let send_slot = (r + p - t) % p;
-            let recv_slot = (r + p - t - 1) % p;
-            sb.send(right, slots[send_slot]);
-            sb.recv(left, slots[recv_slot]);
-            sb.barrier_round();
+        match alg {
+            AllgathervAlg::Spread => {
+                // One round: own block to every peer, every peer's block in.
+                for i in 0..p {
+                    if i != r {
+                        sb.send(w(comm, i), slots[r]);
+                    }
+                }
+                for i in 0..p {
+                    if i != r {
+                        sb.recv(w(comm, i), slots[i]);
+                    }
+                }
+                sb.barrier_round();
+            }
+            _ => {
+                let right = w(comm, (r + 1) % p);
+                let left = w(comm, (r + p - 1) % p);
+                for t in 0..p - 1 {
+                    let send_slot = (r + p - t) % p;
+                    let recv_slot = (r + p - t - 1) % p;
+                    sb.send(right, slots[send_slot]);
+                    sb.recv(left, slots[recv_slot]);
+                    sb.barrier_round();
+                }
+            }
         }
     }
     for i in 0..p {
@@ -591,9 +650,11 @@ fn slot_span(dtype: &Datatype, count: usize) -> usize {
     }
 }
 
-/// Rotation alltoall with per-pair counts and byte displacements
-/// (`MPI_Alltoallv`; `MPI_Alltoall` passes uniform). One send+recv per
-/// round, p-1 rounds.
+/// Alltoall with per-pair counts and byte displacements
+/// (`MPI_Alltoallv`; `MPI_Alltoall` passes uniform). Dispatches on the
+/// selected algorithm: the rotation (pairwise) schedule — one send+recv
+/// per round, `p-1` rounds — or a single spread round posting every
+/// transfer at once.
 #[allow(clippy::too_many_arguments)]
 pub fn alltoallv(
     comm: &Comm,
@@ -605,8 +666,19 @@ pub fn alltoallv(
     rcounts: &[usize],
     rdispls_bytes: &[usize],
     rdtype: &Datatype,
+    alg: AlltoallvAlg,
 ) -> Schedule {
     let (r, p) = (comm.rank(), comm.size());
+    // Normally pre-resolved by the caller; resolve here only for a
+    // direct builder invocation with the knob still on `Auto`.
+    let alg = match alg {
+        AlltoallvAlg::Auto => {
+            let sblock = scounts.iter().copied().max().unwrap_or(0) * sdtype.size();
+            let rblock = rcounts.iter().copied().max().unwrap_or(0) * rdtype.size();
+            tuned::resolve_alltoallv(comm, sblock.max(rblock), AlltoallvAlg::Auto)
+        }
+        other => other,
+    };
     let mut sb = SchedBuilder::new();
     let sslots: Vec<ArenaRange> = (0..p).map(|i| sb.alloc(sdtype.size() * scounts[i])).collect();
     let rslots: Vec<ArenaRange> = (0..p).map(|i| sb.alloc(rdtype.size() * rcounts[i])).collect();
@@ -620,12 +692,27 @@ pub fn alltoallv(
         sb.copy(sslots[r], rslots[r]);
     }
     sb.barrier_round();
-    for t in 1..p {
-        let dst = (r + t) % p;
-        let src = (r + p - t) % p;
-        sb.send(w(comm, dst), sslots[dst]);
-        sb.recv(w(comm, src), rslots[src]);
-        sb.barrier_round();
+    match alg {
+        AlltoallvAlg::Spread => {
+            for t in 1..p {
+                let dst = (r + t) % p;
+                sb.send(w(comm, dst), sslots[dst]);
+            }
+            for t in 1..p {
+                let src = (r + p - t) % p;
+                sb.recv(w(comm, src), rslots[src]);
+            }
+            sb.barrier_round();
+        }
+        _ => {
+            for t in 1..p {
+                let dst = (r + t) % p;
+                let src = (r + p - t) % p;
+                sb.send(w(comm, dst), sslots[dst]);
+                sb.recv(w(comm, src), rslots[src]);
+                sb.barrier_round();
+            }
+        }
     }
     for i in 0..p {
         let need = slot_span(rdtype, rcounts[i]);

@@ -1,85 +1,274 @@
-//! Collective algorithm selection knobs. These are process-global control
-//! variables, surfaced through the tool (`MPI_T`) interface as cvars and
-//! swept by the A4 ablation benchmark.
+//! Collective algorithm selection knobs.
+//!
+//! One process-global knob per tunable collective, each surfaced three
+//! ways with a fixed precedence (first hit wins):
+//!
+//! 1. an `MPI_T` **cvar write** (`coll_*_algorithm`, see
+//!    [`crate::tool::cvar`]) — or the equivalent programmatic `set_*`,
+//! 2. a `FERROMPI_COLL_*` **environment override** (read once, cached),
+//! 3. the built-in default, [`Auto`](BcastAlg::Auto).
+//!
+//! `Auto` is not an algorithm: it is resolved to a concrete variant at
+//! schedule-build time by the decision tables in
+//! [`tuned`](super::tuned), keyed on message size, communicator size,
+//! node topology and the eager threshold. Persistent collectives resolve
+//! `Auto` exactly once, at init — the template then replays the captured
+//! algorithm no matter how the knobs move afterwards.
 
+use crate::{mpi_err, Result};
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Broadcast algorithm (cvar `coll_bcast_algorithm`, env
+/// `FERROMPI_COLL_BCAST`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BcastAlg {
-    Binomial = 0,
-    Linear = 1,
+    /// Pick per call from the decision table.
+    Auto,
+    /// Binomial tree: `ceil(log2 p)` rounds, latency-optimal.
+    Binomial,
+    /// Root sends to everyone (the ablation baseline; `O(p)` at the root).
+    Linear,
+    /// Node-aware: binomial over node leaders, then intra-node fan-out.
+    Hier,
 }
 
+/// Allreduce algorithm (cvar `coll_allreduce_algorithm`, env
+/// `FERROMPI_COLL_ALLREDUCE`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AllreduceAlg {
-    RecursiveDoubling = 0,
-    Ring = 1,
-    ReduceBcast = 2,
+    /// Pick per call from the decision table.
+    Auto,
+    /// Recursive doubling: `ceil(log2 p)` full-vector exchanges.
+    RecursiveDoubling,
+    /// Reduce-scatter + allgather rings: bandwidth-optimal for large
+    /// vectors.
+    Ring,
+    /// Ordered reduce to rank 0 + broadcast: the only order-exact choice
+    /// for non-commutative ops (forced for those regardless of the knob).
+    ReduceBcast,
+    /// Node-aware: intra-node fold to leaders, recursive doubling across
+    /// leaders, intra-node fan-out.
+    Hier,
 }
 
-static BCAST_ALG: AtomicU8 = AtomicU8::new(0);
-static ALLREDUCE_ALG: AtomicU8 = AtomicU8::new(0);
+/// Reduce algorithm (cvar `coll_reduce_algorithm`, env
+/// `FERROMPI_COLL_REDUCE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceAlg {
+    /// Pick per call from the decision table.
+    Auto,
+    /// Binomial reduction tree toward the root.
+    Binomial,
+    /// Ordered linear gather-fold at the root (forced for non-commutative
+    /// ops regardless of the knob).
+    Linear,
+    /// Node-aware: intra-node fold to leaders, binomial across leaders.
+    Hier,
+}
 
-pub fn bcast_alg() -> BcastAlg {
-    match BCAST_ALG.load(Ordering::Relaxed) {
-        1 => BcastAlg::Linear,
-        _ => BcastAlg::Binomial,
+/// Allgather(v) algorithm (cvar `coll_allgatherv_algorithm`, env
+/// `FERROMPI_COLL_ALLGATHERV`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllgathervAlg {
+    /// Pick per call from the decision table.
+    Auto,
+    /// Neighbor ring, `p-1` pipelined rounds: bounded in-flight data.
+    Ring,
+    /// Every pair exchanges directly in a single round: one latency for
+    /// small blocks.
+    Spread,
+}
+
+/// Alltoall(v) algorithm (cvar `coll_alltoallv_algorithm`, env
+/// `FERROMPI_COLL_ALLTOALLV`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlltoallvAlg {
+    /// Pick per call from the decision table.
+    Auto,
+    /// Rotation schedule: one send+recv per round, `p-1` rounds.
+    Pairwise,
+    /// Post every send and receive in a single round.
+    Spread,
+}
+
+const UNSET: u8 = u8::MAX;
+const NO_ENV: u8 = u8::MAX - 1;
+
+/// Storage for one knob: the cvar cell (written value wins), plus a
+/// lazily resolved, cached env override. Values are indices into the
+/// enum's `VALUES` table; `UNSET`/`NO_ENV` are sentinels.
+struct Knob {
+    cell: AtomicU8,
+    env_cell: AtomicU8,
+    env: &'static str,
+}
+
+impl Knob {
+    const fn new(env: &'static str) -> Knob {
+        Knob { cell: AtomicU8::new(UNSET), env_cell: AtomicU8::new(UNSET), env }
+    }
+
+    fn get<T: Copy>(&self, values: &'static [(&'static str, T)], default: T) -> T {
+        let v = self.cell.load(Ordering::Relaxed);
+        if (v as usize) < values.len() {
+            return values[v as usize].1;
+        }
+        let mut e = self.env_cell.load(Ordering::Relaxed);
+        if e == UNSET {
+            e = match std::env::var(self.env) {
+                Ok(s) => resolve_env_index(values, &s),
+                Err(_) => NO_ENV,
+            };
+            self.env_cell.store(e, Ordering::Relaxed);
+        }
+        if (e as usize) < values.len() {
+            values[e as usize].1
+        } else {
+            default
+        }
+    }
+
+    fn set<T: Copy + PartialEq>(&self, values: &'static [(&'static str, T)], v: T) {
+        let idx = values.iter().position(|(_, x)| *x == v).expect("variant in VALUES table");
+        self.cell.store(idx as u8, Ordering::Relaxed);
     }
 }
 
-pub fn set_bcast_alg(a: BcastAlg) {
-    BCAST_ALG.store(a as u8, Ordering::Relaxed);
+/// Pure env-value resolver (unit-testable without touching the process
+/// environment): the trimmed value must match a table spelling exactly;
+/// anything else falls through to the default.
+fn resolve_env_index<T>(values: &[(&'static str, T)], s: &str) -> u8 {
+    let t = s.trim();
+    values.iter().position(|(n, _)| *n == t).map(|i| i as u8).unwrap_or(NO_ENV)
 }
 
-pub fn allreduce_alg() -> AllreduceAlg {
-    match ALLREDUCE_ALG.load(Ordering::Relaxed) {
-        1 => AllreduceAlg::Ring,
-        2 => AllreduceAlg::ReduceBcast,
-        _ => AllreduceAlg::RecursiveDoubling,
-    }
+/// Shared parser: exact spelling from the `VALUES` table, or an `Arg`
+/// error that lists every valid value (the cvar writer sees this).
+fn parse_from<T: Copy>(
+    values: &'static [(&'static str, T)],
+    what: &str,
+    s: &str,
+) -> Result<T> {
+    values.iter().find(|(n, _)| *n == s).map(|(_, v)| *v).ok_or_else(|| {
+        let valid: Vec<&str> = values.iter().map(|(n, _)| *n).collect();
+        mpi_err!(Arg, "unknown {what} algorithm '{s}' (valid: {})", valid.join(" | "))
+    })
 }
 
-pub fn set_allreduce_alg(a: AllreduceAlg) {
-    ALLREDUCE_ALG.store(a as u8, Ordering::Relaxed);
+macro_rules! knob {
+    ($enum:ident, $what:literal, $static:ident, $get:ident, $set:ident, $parse:ident,
+     $env:literal, [ $(($name:literal, $var:ident)),+ $(,)? ]) => {
+        impl $enum {
+            /// cvar/env spelling ↔ variant table.
+            pub const VALUES: &'static [(&'static str, $enum)] = &[ $( ($name, $enum::$var) ),+ ];
+
+            /// The cvar/env spelling of this variant.
+            pub fn label(self) -> &'static str {
+                Self::VALUES.iter().find(|(_, v)| *v == self).map(|(n, _)| *n).unwrap()
+            }
+        }
+
+        static $static: Knob = Knob::new($env);
+
+        #[doc = concat!(
+            "Current knob value: a written cvar wins, then the `",
+            $env,
+            "` environment override, then `Auto`."
+        )]
+        pub fn $get() -> $enum {
+            $static.get($enum::VALUES, $enum::Auto)
+        }
+
+        /// Programmatic knob write (what a cvar write lands on).
+        pub fn $set(a: $enum) {
+            $static.set($enum::VALUES, a);
+        }
+
+        /// Parse a cvar value; the error lists the valid spellings.
+        pub fn $parse(s: &str) -> Result<$enum> {
+            parse_from($enum::VALUES, $what, s)
+        }
+    };
 }
 
-/// Parse from a cvar string value.
-pub fn parse_bcast_alg(s: &str) -> Option<BcastAlg> {
-    match s {
-        "binomial" => Some(BcastAlg::Binomial),
-        "linear" => Some(BcastAlg::Linear),
-        _ => None,
-    }
-}
+knob!(BcastAlg, "bcast", BCAST, bcast_alg, set_bcast_alg, parse_bcast_alg,
+    "FERROMPI_COLL_BCAST",
+    [("auto", Auto), ("binomial", Binomial), ("linear", Linear), ("hier", Hier)]);
 
-pub fn parse_allreduce_alg(s: &str) -> Option<AllreduceAlg> {
-    match s {
-        "recursive_doubling" => Some(AllreduceAlg::RecursiveDoubling),
-        "ring" => Some(AllreduceAlg::Ring),
-        "reduce_bcast" => Some(AllreduceAlg::ReduceBcast),
-        _ => None,
-    }
-}
+knob!(AllreduceAlg, "allreduce", ALLREDUCE, allreduce_alg, set_allreduce_alg, parse_allreduce_alg,
+    "FERROMPI_COLL_ALLREDUCE",
+    [("auto", Auto), ("recursive_doubling", RecursiveDoubling), ("ring", Ring),
+     ("reduce_bcast", ReduceBcast), ("hier", Hier)]);
+
+knob!(ReduceAlg, "reduce", REDUCE, reduce_alg, set_reduce_alg, parse_reduce_alg,
+    "FERROMPI_COLL_REDUCE",
+    [("auto", Auto), ("binomial", Binomial), ("linear", Linear), ("hier", Hier)]);
+
+knob!(AllgathervAlg, "allgatherv", ALLGATHERV, allgatherv_alg, set_allgatherv_alg, parse_allgatherv_alg,
+    "FERROMPI_COLL_ALLGATHERV",
+    [("auto", Auto), ("ring", Ring), ("spread", Spread)]);
+
+knob!(AlltoallvAlg, "alltoallv", ALLTOALLV, alltoallv_alg, set_alltoallv_alg, parse_alltoallv_alg,
+    "FERROMPI_COLL_ALLTOALLV",
+    [("auto", Auto), ("pairwise", Pairwise), ("spread", Spread)]);
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    // The setters are macro-generated identically for every knob, so one
+    // knob covers them; sticking to allreduce avoids racing the cvar-layer
+    // roundtrip test (same process, other knobs) under the parallel test
+    // runner.
     #[test]
     fn roundtrip_settings() {
-        set_bcast_alg(BcastAlg::Linear);
-        assert_eq!(bcast_alg(), BcastAlg::Linear);
-        set_bcast_alg(BcastAlg::Binomial);
-        assert_eq!(bcast_alg(), BcastAlg::Binomial);
         set_allreduce_alg(AllreduceAlg::Ring);
         assert_eq!(allreduce_alg(), AllreduceAlg::Ring);
-        set_allreduce_alg(AllreduceAlg::RecursiveDoubling);
+        set_allreduce_alg(AllreduceAlg::Hier);
+        assert_eq!(allreduce_alg(), AllreduceAlg::Hier);
+        set_allreduce_alg(AllreduceAlg::Auto);
+        assert_eq!(allreduce_alg(), AllreduceAlg::Auto);
     }
 
     #[test]
-    fn parsing() {
-        assert_eq!(parse_bcast_alg("linear"), Some(BcastAlg::Linear));
-        assert_eq!(parse_allreduce_alg("ring"), Some(AllreduceAlg::Ring));
-        assert_eq!(parse_allreduce_alg("nope"), None);
+    fn parsing_accepts_every_spelling() {
+        assert_eq!(parse_bcast_alg("linear").unwrap(), BcastAlg::Linear);
+        assert_eq!(parse_bcast_alg("hier").unwrap(), BcastAlg::Hier);
+        assert_eq!(parse_allreduce_alg("ring").unwrap(), AllreduceAlg::Ring);
+        assert_eq!(parse_allreduce_alg("auto").unwrap(), AllreduceAlg::Auto);
+        assert_eq!(parse_reduce_alg("binomial").unwrap(), ReduceAlg::Binomial);
+        assert_eq!(parse_allgatherv_alg("spread").unwrap(), AllgathervAlg::Spread);
+        assert_eq!(parse_alltoallv_alg("pairwise").unwrap(), AlltoallvAlg::Pairwise);
+    }
+
+    #[test]
+    fn parse_error_lists_valid_values() {
+        let err = parse_allreduce_alg("nope").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("nope"), "{msg}");
+        for valid in ["auto", "recursive_doubling", "ring", "reduce_bcast", "hier"] {
+            assert!(msg.contains(valid), "missing '{valid}' in: {msg}");
+        }
+        assert!(parse_bcast_alg("Binomial").is_err(), "spellings are case-sensitive");
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for (name, v) in BcastAlg::VALUES {
+            assert_eq!(v.label(), *name);
+            assert_eq!(parse_bcast_alg(name).unwrap(), *v);
+        }
+        for (name, v) in AllreduceAlg::VALUES {
+            assert_eq!(parse_allreduce_alg(name).unwrap(), *v);
+        }
+    }
+
+    #[test]
+    fn env_resolver_is_exact_and_trimmed() {
+        assert_eq!(resolve_env_index(BcastAlg::VALUES, "hier"), 3);
+        assert_eq!(resolve_env_index(BcastAlg::VALUES, " binomial "), 1);
+        assert_eq!(resolve_env_index(BcastAlg::VALUES, "HIER"), NO_ENV);
+        assert_eq!(resolve_env_index(BcastAlg::VALUES, ""), NO_ENV);
+        assert_eq!(resolve_env_index(BcastAlg::VALUES, "wat"), NO_ENV);
     }
 }

@@ -4,13 +4,23 @@
 //! expressed as round-based schedules over the p2p engine (see
 //! [`schedule`]), so the `i*` variants are the same code wrapped in a
 //! request.
+//!
+//! Algorithm choice is a first-class tuning surface: the entry points
+//! below resolve the process-global knobs in [`config`] — `auto` by
+//! default — through the topology-aware decision tables in [`tuned`]
+//! *before* building the schedule, so every caller (blocking,
+//! nonblocking, persistent, and the modern futures/pipelines on top)
+//! gets a size- and shape-appropriate algorithm without asking.
+//! Persistent templates therefore capture the resolved algorithm at
+//! init time; [`PersistentColl::algorithm`] reports it.
 
 pub mod builders;
 pub mod config;
 pub mod persistent;
 pub mod schedule;
+pub mod tuned;
 
-pub use config::{AllreduceAlg, BcastAlg};
+pub use config::{AllgathervAlg, AllreduceAlg, AlltoallvAlg, BcastAlg, ReduceAlg};
 pub use persistent::PersistentColl;
 
 use crate::comm::Comm;
@@ -21,7 +31,14 @@ use crate::Result;
 use schedule::{run_blocking, run_nonblocking, CollState, Schedule};
 use std::rc::Rc;
 
-fn state(comm: &Comm, dtype: &Datatype, op: Option<Op>, sched: Schedule, name: &'static str) -> Rc<CollState> {
+fn state(
+    comm: &Comm,
+    dtype: &Datatype,
+    op: Option<Op>,
+    sched: Schedule,
+    name: &'static str,
+    alg: &'static str,
+) -> Rc<CollState> {
     CollState::new(
         comm.rank_ctx().clone(),
         comm.ctx_coll(),
@@ -30,6 +47,7 @@ fn state(comm: &Comm, dtype: &Datatype, op: Option<Op>, sched: Schedule, name: &
         op,
         sched,
         name,
+        alg,
     )
 }
 
@@ -50,20 +68,20 @@ fn uniform(comm: &Comm, count: usize, dtype: &Datatype) -> (Vec<usize>, Vec<usiz
 /// `MPI_Barrier`.
 pub fn barrier(comm: &Comm) -> Result<()> {
     let d = byte();
-    run_blocking(state(comm, &d, None, builders::barrier(comm), "barrier"))
+    run_blocking(state(comm, &d, None, builders::barrier(comm), "barrier", "dissemination"))
 }
 
 /// `MPI_Ibarrier`.
 pub fn ibarrier(comm: &Comm) -> Result<Request> {
     let d = byte();
-    Ok(run_nonblocking(state(comm, &d, None, builders::barrier(comm), "ibarrier")))
+    Ok(run_nonblocking(state(comm, &d, None, builders::barrier(comm), "ibarrier", "dissemination")))
 }
 
 /// `MPI_Barrier_init` (MPI-4.0 §6.13): build the dissemination schedule
 /// once; each `start()` re-runs it with no allocation.
 pub fn barrier_init(comm: &Comm) -> Result<PersistentColl> {
     let d = byte();
-    Ok(PersistentColl::new(state(comm, &d, None, builders::barrier(comm), "barrier")))
+    Ok(PersistentColl::new(state(comm, &d, None, builders::barrier(comm), "barrier", "dissemination")))
 }
 
 // ---------------- bcast ----------------
@@ -71,15 +89,17 @@ pub fn barrier_init(comm: &Comm) -> Result<PersistentColl> {
 /// `MPI_Bcast`.
 pub fn bcast(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Result<()> {
     dtype.require_committed()?;
-    let sched = builders::bcast(comm, buf, count, dtype, root, config::bcast_alg());
-    run_blocking(state(comm, dtype, None, sched, "bcast"))
+    let alg = tuned::resolve_bcast(comm, dtype.size() * count, config::bcast_alg());
+    let sched = builders::bcast(comm, buf, count, dtype, root, alg);
+    run_blocking(state(comm, dtype, None, sched, "bcast", alg.label()))
 }
 
 /// `MPI_Ibcast`.
 pub fn ibcast(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Result<Request> {
     dtype.require_committed()?;
-    let sched = builders::bcast(comm, buf, count, dtype, root, config::bcast_alg());
-    Ok(run_nonblocking(state(comm, dtype, None, sched, "ibcast")))
+    let alg = tuned::resolve_bcast(comm, dtype.size() * count, config::bcast_alg());
+    let sched = builders::bcast(comm, buf, count, dtype, root, alg);
+    Ok(run_nonblocking(state(comm, dtype, None, sched, "ibcast", alg.label())))
 }
 
 /// `MPI_Bcast_init`. The schedule captures `buf` by raw pointer: the
@@ -88,8 +108,9 @@ pub fn ibcast(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root:
 /// `start()`s; root re-packs, non-roots re-unpack on every execution.
 pub fn bcast_init(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Result<PersistentColl> {
     dtype.require_committed()?;
-    let sched = builders::bcast(comm, buf, count, dtype, root, config::bcast_alg());
-    Ok(PersistentColl::new(state(comm, dtype, None, sched, "bcast")))
+    let alg = tuned::resolve_bcast(comm, dtype.size() * count, config::bcast_alg());
+    let sched = builders::bcast(comm, buf, count, dtype, root, alg);
+    Ok(PersistentColl::new(state(comm, dtype, None, sched, "bcast", alg.label())))
 }
 
 // ---------------- reduce / allreduce ----------------
@@ -106,8 +127,10 @@ pub fn reduce(
     root: usize,
 ) -> Result<()> {
     dtype.require_committed()?;
-    let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root)?;
-    run_blocking(state(comm, dtype, Some(op.clone()), sched, "reduce"))
+    let bytes = dtype.size() * count;
+    let alg = tuned::resolve_reduce(comm, bytes, op.is_commutative(), config::reduce_alg());
+    let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root, alg)?;
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "reduce", alg.label()))
 }
 
 /// `MPI_Ireduce`.
@@ -121,8 +144,10 @@ pub fn ireduce(
     root: usize,
 ) -> Result<Request> {
     dtype.require_committed()?;
-    let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root)?;
-    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "ireduce")))
+    let bytes = dtype.size() * count;
+    let alg = tuned::resolve_reduce(comm, bytes, op.is_commutative(), config::reduce_alg());
+    let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root, alg)?;
+    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "ireduce", alg.label())))
 }
 
 /// `MPI_Allreduce`. `sbuf = None` is `MPI_IN_PLACE`.
@@ -135,8 +160,10 @@ pub fn allreduce(
     op: &Op,
 ) -> Result<()> {
     dtype.require_committed()?;
-    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, config::allreduce_alg());
-    run_blocking(state(comm, dtype, Some(op.clone()), sched, "allreduce"))
+    let bytes = dtype.size() * count;
+    let alg = tuned::resolve_allreduce(comm, bytes, op.is_commutative(), config::allreduce_alg());
+    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "allreduce", alg.label()))
 }
 
 /// `MPI_Iallreduce`.
@@ -149,8 +176,10 @@ pub fn iallreduce(
     op: &Op,
 ) -> Result<Request> {
     dtype.require_committed()?;
-    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, config::allreduce_alg());
-    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "iallreduce")))
+    let bytes = dtype.size() * count;
+    let alg = tuned::resolve_allreduce(comm, bytes, op.is_commutative(), config::allreduce_alg());
+    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
+    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "iallreduce", alg.label())))
 }
 
 /// `MPI_Allreduce_init`. Buffer contract as in [`bcast_init`]: both
@@ -166,8 +195,10 @@ pub fn allreduce_init(
     op: &Op,
 ) -> Result<PersistentColl> {
     dtype.require_committed()?;
-    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, config::allreduce_alg());
-    Ok(PersistentColl::new(state(comm, dtype, Some(op.clone()), sched, "allreduce")))
+    let bytes = dtype.size() * count;
+    let alg = tuned::resolve_allreduce(comm, bytes, op.is_commutative(), config::allreduce_alg());
+    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
+    Ok(PersistentColl::new(state(comm, dtype, Some(op.clone()), sched, "allreduce", alg.label())))
 }
 
 // ---------------- gather / scatter ----------------
@@ -205,7 +236,7 @@ pub fn gatherv(
     sdtype.require_committed()?;
     let sched =
         builders::gatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype, root);
-    run_blocking(state(comm, sdtype, None, sched, "gatherv"))
+    run_blocking(state(comm, sdtype, None, sched, "gatherv", "linear"))
 }
 
 /// `MPI_Igatherv`.
@@ -224,7 +255,7 @@ pub fn igatherv(
     sdtype.require_committed()?;
     let sched =
         builders::gatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype, root);
-    Ok(run_nonblocking(state(comm, sdtype, None, sched, "igatherv")))
+    Ok(run_nonblocking(state(comm, sdtype, None, sched, "igatherv", "linear")))
 }
 
 /// `MPI_Scatter` (uniform counts).
@@ -260,7 +291,7 @@ pub fn scatterv(
     rdtype.require_committed()?;
     let sched =
         builders::scatterv(comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcount, rdtype, root);
-    run_blocking(state(comm, rdtype, None, sched, "scatterv"))
+    run_blocking(state(comm, rdtype, None, sched, "scatterv", "linear"))
 }
 
 /// `MPI_Iscatterv`.
@@ -279,7 +310,7 @@ pub fn iscatterv(
     rdtype.require_committed()?;
     let sched =
         builders::scatterv(comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcount, rdtype, root);
-    Ok(run_nonblocking(state(comm, rdtype, None, sched, "iscatterv")))
+    Ok(run_nonblocking(state(comm, rdtype, None, sched, "iscatterv", "linear")))
 }
 
 // ---------------- allgather / alltoall ----------------
@@ -313,9 +344,11 @@ pub fn allgatherv(
     rdtype: &Datatype,
 ) -> Result<()> {
     rdtype.require_committed()?;
+    let block = rdtype.size() * rcounts.iter().copied().max().unwrap_or(0);
+    let alg = tuned::resolve_allgatherv(comm, block, config::allgatherv_alg());
     let sched =
-        builders::allgatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype);
-    run_blocking(state(comm, rdtype, None, sched, "allgatherv"))
+        builders::allgatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype, alg);
+    run_blocking(state(comm, rdtype, None, sched, "allgatherv", alg.label()))
 }
 
 /// `MPI_Iallgatherv`.
@@ -331,9 +364,11 @@ pub fn iallgatherv(
     rdtype: &Datatype,
 ) -> Result<Request> {
     rdtype.require_committed()?;
+    let block = rdtype.size() * rcounts.iter().copied().max().unwrap_or(0);
+    let alg = tuned::resolve_allgatherv(comm, block, config::allgatherv_alg());
     let sched =
-        builders::allgatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype);
-    Ok(run_nonblocking(state(comm, rdtype, None, sched, "iallgatherv")))
+        builders::allgatherv(comm, sbuf, scount, sdtype, rbuf, rcounts, rdispls_bytes, rdtype, alg);
+    Ok(run_nonblocking(state(comm, rdtype, None, sched, "iallgatherv", alg.label())))
 }
 
 /// `MPI_Alltoall` (uniform counts).
@@ -367,10 +402,13 @@ pub fn alltoallv(
     rdtype: &Datatype,
 ) -> Result<()> {
     rdtype.require_committed()?;
+    let block = (scounts.iter().copied().max().unwrap_or(0) * sdtype.size())
+        .max(rcounts.iter().copied().max().unwrap_or(0) * rdtype.size());
+    let alg = tuned::resolve_alltoallv(comm, block, config::alltoallv_alg());
     let sched = builders::alltoallv(
-        comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcounts, rdispls_bytes, rdtype,
+        comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcounts, rdispls_bytes, rdtype, alg,
     );
-    run_blocking(state(comm, rdtype, None, sched, "alltoallv"))
+    run_blocking(state(comm, rdtype, None, sched, "alltoallv", alg.label()))
 }
 
 /// `MPI_Ialltoallv`.
@@ -387,10 +425,13 @@ pub fn ialltoallv(
     rdtype: &Datatype,
 ) -> Result<Request> {
     rdtype.require_committed()?;
+    let block = (scounts.iter().copied().max().unwrap_or(0) * sdtype.size())
+        .max(rcounts.iter().copied().max().unwrap_or(0) * rdtype.size());
+    let alg = tuned::resolve_alltoallv(comm, block, config::alltoallv_alg());
     let sched = builders::alltoallv(
-        comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcounts, rdispls_bytes, rdtype,
+        comm, sbuf, scounts, sdispls_bytes, sdtype, rbuf, rcounts, rdispls_bytes, rdtype, alg,
     );
-    Ok(run_nonblocking(state(comm, rdtype, None, sched, "ialltoallv")))
+    Ok(run_nonblocking(state(comm, rdtype, None, sched, "ialltoallv", alg.label())))
 }
 
 /// `MPI_Alltoallw` (per-pair datatypes, byte displacements).
@@ -412,7 +453,7 @@ pub fn alltoallw(
     let sched = builders::alltoallw(
         comm, sbuf, scounts, sdispls_bytes, sdtypes, rbuf, rcounts, rdispls_bytes, rdtypes,
     );
-    run_blocking(state(comm, &byte(), None, sched, "alltoallw"))
+    run_blocking(state(comm, &byte(), None, sched, "alltoallw", "pairwise"))
 }
 
 // ---------------- scan / exscan / reduce_scatter ----------------
@@ -428,7 +469,7 @@ pub fn scan(
 ) -> Result<()> {
     dtype.require_committed()?;
     let sched = builders::scan(comm, sbuf, rbuf, count, dtype, false);
-    run_blocking(state(comm, dtype, Some(op.clone()), sched, "scan"))
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "scan", "doubling"))
 }
 
 /// `MPI_Exscan` (exclusive prefix; rank 0's output is undefined).
@@ -442,7 +483,7 @@ pub fn exscan(
 ) -> Result<()> {
     dtype.require_committed()?;
     let sched = builders::scan(comm, sbuf, rbuf, count, dtype, true);
-    run_blocking(state(comm, dtype, Some(op.clone()), sched, "exscan"))
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "exscan", "doubling"))
 }
 
 /// `MPI_Iscan`.
@@ -456,7 +497,7 @@ pub fn iscan(
 ) -> Result<Request> {
     dtype.require_committed()?;
     let sched = builders::scan(comm, sbuf, rbuf, count, dtype, false);
-    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "iscan")))
+    Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "iscan", "doubling")))
 }
 
 /// `MPI_Reduce_scatter` (per-rank result counts).
@@ -470,7 +511,7 @@ pub fn reduce_scatter(
 ) -> Result<()> {
     dtype.require_committed()?;
     let sched = builders::reduce_scatter(comm, sbuf, rbuf, rcounts, dtype, op)?;
-    run_blocking(state(comm, dtype, Some(op.clone()), sched, "reduce_scatter"))
+    run_blocking(state(comm, dtype, Some(op.clone()), sched, "reduce_scatter", "reduce+scatterv"))
 }
 
 /// `MPI_Reduce_scatter_block` (uniform count per rank).

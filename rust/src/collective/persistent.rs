@@ -9,6 +9,13 @@
 //! per-iteration cost is the communication itself — the "zero-overhead
 //! reusable operation template" the modern layer's pipelines build on.
 //!
+//! Because the schedule is built at init, the algorithm knobs in
+//! [`config`](super::config) — including `auto`, resolved through the
+//! [`tuned`](super::tuned) decision tables — are consulted exactly once:
+//! the template *captures* the resolved algorithm
+//! ([`PersistentColl::algorithm`]) and replays it on every restart, no
+//! matter how the knobs move in between.
+//!
 //! Init calls are collective and must be issued in the same order on every
 //! rank of the communicator (they consume one collective sequence number,
 //! which pins the template's tag block), exactly like the standard's
@@ -48,6 +55,13 @@ impl PersistentColl {
     /// Diagnostic label ("barrier", "bcast", "allreduce", ...).
     pub fn name(&self) -> &'static str {
         self.state.name
+    }
+
+    /// The concrete algorithm captured at init time ("binomial", "ring",
+    /// "hier", ...). An `auto` knob is resolved when the template is
+    /// built; later knob writes do not change what a restart runs.
+    pub fn algorithm(&self) -> &'static str {
+        self.state.alg
     }
 
     /// Started and not yet completed by `wait`/`test`.

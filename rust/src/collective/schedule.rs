@@ -154,11 +154,16 @@ pub struct CollState {
     in_engine: Cell<bool>,
     /// Set when a reset found a receive it could not cancel (already
     /// matched an RTS: RData inbound targeting raw pointers into the
-    /// arena). A tainted arena is never recycled into the pool — see
-    /// [`CollState`]'s `Drop`.
+    /// arena). A tainted arena is never reused: a restart (`reset`)
+    /// swaps in a fresh one and `Drop` leaks rather than recycles it.
     tainted: Cell<bool>,
     /// Label for diagnostics ("bcast", "allreduce", ...).
     pub name: &'static str,
+    /// The concrete algorithm this schedule was built with ("binomial",
+    /// "ring", "hier", ...): `Auto` knobs are resolved *before* the
+    /// schedule exists, so this is fixed for the state's lifetime — the
+    /// capture persistent collectives replay across restarts.
+    pub alg: &'static str,
 }
 
 /// How many distinct tag offsets a round may use.
@@ -173,6 +178,7 @@ impl CollState {
         op: Option<Op>,
         schedule: Schedule,
         name: &'static str,
+        alg: &'static str,
     ) -> Rc<CollState> {
         let seq = ctx.next_coll_seq(ctx_coll);
         ctx.counters.collectives_started.set(ctx.counters.collectives_started.get() + 1);
@@ -196,6 +202,7 @@ impl CollState {
             in_engine: Cell::new(false),
             tainted: Cell::new(false),
             name,
+            alg,
         })
     }
 
@@ -203,17 +210,6 @@ impl CollState {
         &self.ctx
     }
 
-    /// Rewind a completed schedule so it can run again (the persistent
-    /// collective restart, MPI-4.0 §6.13). The arena is kept — same
-    /// allocation, re-zeroed — and the schedule, datatype handle and tag
-    /// base are untouched, so a restart allocates nothing.
-    ///
-    /// Caller contract: only when the previous run finished (successfully
-    /// or with an error) or the state was never started. A successful run
-    /// leaves no outstanding transfers; a run that *errored* mid-schedule
-    /// may — its still-posted receives are cancelled here (they share the
-    /// restart's tags and would otherwise steal its messages), its send
-    /// tokens drained best-effort.
     /// Drain outstanding transfers (error-path cleanup shared by `reset`
     /// and `Drop`): cancellable receives are cancelled and consumed, send
     /// tokens drained best-effort. Returns `false` if a receive had
@@ -235,11 +231,32 @@ impl CollState {
         clean
     }
 
+    /// Rewind a completed schedule so it can run again (the persistent
+    /// collective restart, MPI-4.0 §6.13). On the happy path the arena is
+    /// kept — same allocation, re-zeroed — and the schedule, datatype
+    /// handle and tag base are untouched, so a restart allocates nothing.
+    ///
+    /// Caller contract: only when the previous run finished (successfully
+    /// or with an error) or the state was never started. A successful run
+    /// leaves no outstanding transfers; a run that *errored* mid-schedule
+    /// may — its still-posted receives are cancelled here (they share the
+    /// restart's tags and would otherwise steal its messages), its send
+    /// tokens drained best-effort. A receive that cannot be cancelled has
+    /// rendezvous data inbound into the arena, so that arena is retired
+    /// (leaked) and the restart gets a fresh one — never a corruptible or
+    /// recycled buffer.
     pub(crate) fn reset(&self) {
-        if !self.drain_outstanding() {
-            // Remember the inbound RData so the arena is leaked, not
-            // recycled, when this state drops.
-            self.tainted.set(true);
+        if !self.drain_outstanding() || self.tainted.get() {
+            // A receive already matched an RTS: its RData is inbound,
+            // addressed to raw pointers into the *current* arena. Retire
+            // that allocation (leaked, never recycled — the late delivery
+            // lands in dead-but-still-allocated memory) and run the
+            // restart in a fresh arena so it cannot be corrupted.
+            let mut fresh = self.ctx.fabric.pool.take_vec(self.schedule.arena_size);
+            fresh.resize(self.schedule.arena_size, 0);
+            let old = std::mem::replace(&mut *self.arena.borrow_mut(), fresh);
+            std::mem::forget(old);
+            self.tainted.set(false);
         }
         self.round.set(0);
         self.done.set(false);

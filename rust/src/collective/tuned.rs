@@ -1,0 +1,656 @@
+//! Topology-aware tuned collective selection.
+//!
+//! Production MPIs beat naive bindings not by shaving call overhead but
+//! by picking the *right algorithm* per message size and machine shape.
+//! This module is that tuning surface, in two halves:
+//!
+//! 1. **Decision tables** — pure functions (`decide_*`) that map
+//!    `(communicator size, nodes spanned, max ranks-per-node, message
+//!    bytes)` to a concrete algorithm. Candidates are costed with the
+//!    fabric's α–β model ([`NetworkModel::protocol_cost_ns`], which
+//!    includes the rendezvous RTS/CTS surcharge above the eager
+//!    threshold) and the cheapest wins; ties break toward the first,
+//!    latency-safe candidate. Known-pathological choices are never on
+//!    the candidate list: a flat linear bcast at `p > 2`, the ordered
+//!    reduce+bcast composition for commutative allreduces, hierarchical
+//!    variants on a single node.
+//! 2. **Hierarchical (node-aware) schedules** — `bcast`, `allreduce` and
+//!    `reduce` variants that split a communicator via the fabric's
+//!    [`NodeMap`](crate::transport::NodeMap) into per-node rank sets with
+//!    one *leader* each: payloads cross the (expensive) inter-node fabric
+//!    only between leaders, while everything else rides intra-node links.
+//!    The schedules reuse the ordinary round/arena machinery in
+//!    [`schedule`](super::schedule), so they pool wire buffers, run
+//!    blocking or nonblocking, and persist (`*_init`) like every other
+//!    collective.
+//!
+//! [`resolve_bcast`] and friends glue the two halves to the knobs in
+//! [`config`](super::config): an explicit knob value passes through
+//! (after correctness fix-ups — non-commutative reductions always take
+//! the order-exact path), `Auto` consults the decision table. Resolution
+//! happens at *schedule build time*, which is why persistent collectives
+//! capture the algorithm at init and replay it regardless of later knob
+//! writes.
+//!
+//! Correctness note: the hierarchical reductions fold contributions in
+//! node order rather than rank order, so they are only selected (and only
+//! valid) for commutative operations. For integer ops the result is
+//! byte-identical to the flat algorithms — pinned by
+//! `tests/test_tuned.rs` across 1×N, N×1, uneven and single-rank-node
+//! shapes.
+
+use super::builders::{ceil_log2, pack_contribution, recursive_doubling_core, subbuf, w};
+use super::config::{AllgathervAlg, AllreduceAlg, AlltoallvAlg, BcastAlg, ReduceAlg};
+use super::schedule::{ArenaRange, SchedBuilder, Schedule};
+use crate::comm::Comm;
+use crate::datatype::Datatype;
+use crate::transport::NetworkModel;
+use std::collections::BTreeMap;
+
+// ---------------- topology summary ----------------
+
+/// How a communicator's ranks sit on the simulated cluster — the shape
+/// key of every decision table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommTopo {
+    /// Communicator size.
+    pub p: usize,
+    /// Distinct nodes the group spans.
+    pub nodes: usize,
+    /// Largest number of group ranks on any single node.
+    pub max_ppn: usize,
+}
+
+/// Derive the topology summary for `comm` from the fabric's `NodeMap`.
+/// Sub-communicators may populate nodes unevenly (or leave some with a
+/// single, leader-only rank); this summary reflects the group, not the
+/// world. The `O(p)` walk runs once per communicator — the result is
+/// memoized on the `Comm` (its group and node map are immutable), so the
+/// per-call cost of an `auto` knob is a cache read.
+pub fn comm_topo(comm: &Comm) -> CommTopo {
+    if let Some((nodes, max_ppn)) = comm.topo_cache.get() {
+        return CommTopo { p: comm.size(), nodes, max_ppn };
+    }
+    let map = &comm.rank_ctx().fabric.nodemap;
+    let mut per_node: BTreeMap<usize, usize> = BTreeMap::new();
+    for i in 0..comm.size() {
+        *per_node.entry(map.node_of(w(comm, i))).or_insert(0) += 1;
+    }
+    let topo = CommTopo {
+        p: comm.size(),
+        nodes: per_node.len(),
+        max_ppn: per_node.values().copied().max().unwrap_or(1),
+    };
+    comm.topo_cache.set(Some((topo.nodes, topo.max_ppn)));
+    topo
+}
+
+fn model(comm: &Comm) -> NetworkModel {
+    comm.rank_ctx().fabric.model
+}
+
+// ---------------- cost estimates ----------------
+
+/// Critical-path estimate of one candidate bcast algorithm, in modeled ns.
+/// Coarse by design: round count × per-round message cost, charging the
+/// worst-case (inter-node) link whenever the communicator spans nodes.
+fn est_bcast(alg: BcastAlg, t: CommTopo, bytes: usize, m: &NetworkModel) -> f64 {
+    let single = t.nodes == 1;
+    match alg {
+        BcastAlg::Binomial => ceil_log2(t.p.max(2)) as f64 * m.protocol_cost_ns(bytes, single),
+        BcastAlg::Linear => (t.p - 1) as f64 * m.protocol_cost_ns(bytes, single),
+        BcastAlg::Hier => {
+            let inter = if t.nodes > 1 { ceil_log2(t.nodes) } else { 0 };
+            inter as f64 * m.protocol_cost_ns(bytes, false)
+                + (t.max_ppn - 1) as f64 * m.protocol_cost_ns(bytes, true)
+        }
+        BcastAlg::Auto => f64::INFINITY,
+    }
+}
+
+/// Critical-path estimate of one candidate allreduce algorithm.
+fn est_allreduce(alg: AllreduceAlg, t: CommTopo, bytes: usize, m: &NetworkModel) -> f64 {
+    let single = t.nodes == 1;
+    match alg {
+        AllreduceAlg::RecursiveDoubling => {
+            ceil_log2(t.p.max(2)) as f64 * m.protocol_cost_ns(bytes, single)
+        }
+        AllreduceAlg::Ring => {
+            let chunk = bytes.div_ceil(t.p.max(1));
+            (2 * (t.p - 1)) as f64 * m.protocol_cost_ns(chunk, single)
+        }
+        AllreduceAlg::ReduceBcast => {
+            ((t.p - 1) + ceil_log2(t.p.max(2))) as f64 * m.protocol_cost_ns(bytes, single)
+        }
+        AllreduceAlg::Hier => {
+            let inter = if t.nodes > 1 { ceil_log2(t.nodes) } else { 0 };
+            inter as f64 * m.protocol_cost_ns(bytes, false)
+                + (2 * (t.max_ppn - 1)) as f64 * m.protocol_cost_ns(bytes, true)
+        }
+        AllreduceAlg::Auto => f64::INFINITY,
+    }
+}
+
+/// Critical-path estimate of one candidate reduce algorithm.
+fn est_reduce(alg: ReduceAlg, t: CommTopo, bytes: usize, m: &NetworkModel) -> f64 {
+    let single = t.nodes == 1;
+    match alg {
+        ReduceAlg::Binomial => ceil_log2(t.p.max(2)) as f64 * m.protocol_cost_ns(bytes, single),
+        ReduceAlg::Linear => (t.p - 1) as f64 * m.protocol_cost_ns(bytes, single),
+        ReduceAlg::Hier => {
+            let inter = if t.nodes > 1 { ceil_log2(t.nodes) } else { 0 };
+            inter as f64 * m.protocol_cost_ns(bytes, false)
+                + (t.max_ppn - 1) as f64 * m.protocol_cost_ns(bytes, true)
+        }
+        ReduceAlg::Auto => f64::INFINITY,
+    }
+}
+
+// ---------------- decision tables ----------------
+
+fn argmin<T: Copy>(candidates: &[(T, f64)]) -> T {
+    let mut best = candidates[0];
+    for &c in &candidates[1..] {
+        if c.1 < best.1 {
+            best = c;
+        }
+    }
+    best.0
+}
+
+/// Auto table for bcast. Candidates: binomial always; hierarchical when
+/// the communicator spans several nodes *and* some node holds more than
+/// one rank (otherwise it degenerates to binomial-over-everyone). Linear
+/// is never auto-selected — at `p > 2` it serializes `p-1` sends at the
+/// root, and at `p ≤ 2` it ties binomial.
+pub fn decide_bcast(t: CommTopo, bytes: usize, m: &NetworkModel) -> BcastAlg {
+    if t.p <= 1 {
+        return BcastAlg::Binomial;
+    }
+    let mut cand = vec![(BcastAlg::Binomial, est_bcast(BcastAlg::Binomial, t, bytes, m))];
+    if t.nodes > 1 && t.max_ppn > 1 {
+        cand.push((BcastAlg::Hier, est_bcast(BcastAlg::Hier, t, bytes, m)));
+    }
+    argmin(&cand)
+}
+
+/// Auto table for (commutative) allreduce. Candidates: recursive
+/// doubling always; ring at `p > 2` (bandwidth regime); hierarchical on
+/// genuinely hierarchical shapes. The ordered reduce+bcast composition
+/// is never auto-selected for commutative ops — it exists for
+/// correctness on non-commutative ones (see [`resolve_allreduce`]).
+pub fn decide_allreduce(t: CommTopo, bytes: usize, m: &NetworkModel) -> AllreduceAlg {
+    if t.p <= 1 {
+        return AllreduceAlg::RecursiveDoubling;
+    }
+    let mut cand = vec![(
+        AllreduceAlg::RecursiveDoubling,
+        est_allreduce(AllreduceAlg::RecursiveDoubling, t, bytes, m),
+    )];
+    if t.p > 2 {
+        cand.push((AllreduceAlg::Ring, est_allreduce(AllreduceAlg::Ring, t, bytes, m)));
+    }
+    if t.nodes > 1 && t.max_ppn > 1 {
+        cand.push((AllreduceAlg::Hier, est_allreduce(AllreduceAlg::Hier, t, bytes, m)));
+    }
+    argmin(&cand)
+}
+
+/// Auto table for (commutative) reduce: binomial vs hierarchical. The
+/// ordered linear fold is never auto-selected — it is the forced,
+/// order-exact path for non-commutative ops (see [`resolve_reduce`]).
+pub fn decide_reduce(t: CommTopo, bytes: usize, m: &NetworkModel) -> ReduceAlg {
+    if t.p <= 1 {
+        return ReduceAlg::Binomial;
+    }
+    let mut cand = vec![(ReduceAlg::Binomial, est_reduce(ReduceAlg::Binomial, t, bytes, m))];
+    if t.nodes > 1 && t.max_ppn > 1 {
+        cand.push((ReduceAlg::Hier, est_reduce(ReduceAlg::Hier, t, bytes, m)));
+    }
+    argmin(&cand)
+}
+
+/// Auto table for allgather(v), keyed on the largest per-rank block:
+/// eager-sized blocks take the single spread round (one latency instead
+/// of `p-1`), rendezvous-sized blocks take the pipelined ring, which
+/// bounds in-flight data to one block per link.
+pub fn decide_allgatherv(p: usize, block_bytes: usize, m: &NetworkModel) -> AllgathervAlg {
+    if p <= 2 || m.is_eager(block_bytes) {
+        AllgathervAlg::Spread
+    } else {
+        AllgathervAlg::Ring
+    }
+}
+
+/// Auto table for alltoall(v), same reasoning as [`decide_allgatherv`]
+/// with the rotation (pairwise) schedule as the rendezvous-regime choice.
+pub fn decide_alltoallv(p: usize, block_bytes: usize, m: &NetworkModel) -> AlltoallvAlg {
+    if p <= 2 || m.is_eager(block_bytes) {
+        AlltoallvAlg::Spread
+    } else {
+        AlltoallvAlg::Pairwise
+    }
+}
+
+// ---------------- knob → concrete resolution ----------------
+
+/// Resolve the bcast knob to a concrete algorithm for a `bytes`-sized
+/// payload on `comm`.
+pub fn resolve_bcast(comm: &Comm, bytes: usize, knob: BcastAlg) -> BcastAlg {
+    match knob {
+        BcastAlg::Auto => decide_bcast(comm_topo(comm), bytes, &model(comm)),
+        other => other,
+    }
+}
+
+/// Resolve the allreduce knob. Non-commutative ops are *always* routed to
+/// the ordered reduce+bcast composition, whatever the knob says — every
+/// other algorithm reassociates/commutes the fold.
+pub fn resolve_allreduce(
+    comm: &Comm,
+    bytes: usize,
+    commutative: bool,
+    knob: AllreduceAlg,
+) -> AllreduceAlg {
+    if !commutative {
+        return AllreduceAlg::ReduceBcast;
+    }
+    match knob {
+        AllreduceAlg::Auto => decide_allreduce(comm_topo(comm), bytes, &model(comm)),
+        other => other,
+    }
+}
+
+/// Resolve the reduce knob. Non-commutative ops always take the ordered
+/// linear fold (rank order is the only order the standard permits).
+pub fn resolve_reduce(comm: &Comm, bytes: usize, commutative: bool, knob: ReduceAlg) -> ReduceAlg {
+    if !commutative {
+        return ReduceAlg::Linear;
+    }
+    match knob {
+        ReduceAlg::Auto => decide_reduce(comm_topo(comm), bytes, &model(comm)),
+        other => other,
+    }
+}
+
+/// Resolve the allgatherv knob (`block_bytes` = largest per-rank block).
+pub fn resolve_allgatherv(comm: &Comm, block_bytes: usize, knob: AllgathervAlg) -> AllgathervAlg {
+    match knob {
+        AllgathervAlg::Auto => decide_allgatherv(comm.size(), block_bytes, &model(comm)),
+        other => other,
+    }
+}
+
+/// Resolve the alltoallv knob (`block_bytes` = largest per-pair block).
+pub fn resolve_alltoallv(comm: &Comm, block_bytes: usize, knob: AlltoallvAlg) -> AlltoallvAlg {
+    match knob {
+        AlltoallvAlg::Auto => decide_alltoallv(comm.size(), block_bytes, &model(comm)),
+        other => other,
+    }
+}
+
+/// What the current knobs resolve to for a `bytes`-sized payload on a
+/// communicator — the introspection surface behind
+/// [`Communicator::algorithm_selection`](crate::modern::Communicator::algorithm_selection).
+/// Reductions are resolved for the commutative case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Selection {
+    pub bcast: BcastAlg,
+    pub allreduce: AllreduceAlg,
+    pub reduce: ReduceAlg,
+    pub allgatherv: AllgathervAlg,
+    pub alltoallv: AlltoallvAlg,
+}
+
+/// Resolve every knob for `bytes` on `comm` (see [`Selection`]).
+pub fn selection_for(comm: &Comm, bytes: usize) -> Selection {
+    use super::config;
+    Selection {
+        bcast: resolve_bcast(comm, bytes, config::bcast_alg()),
+        allreduce: resolve_allreduce(comm, bytes, true, config::allreduce_alg()),
+        reduce: resolve_reduce(comm, bytes, true, config::reduce_alg()),
+        allgatherv: resolve_allgatherv(comm, bytes, config::allgatherv_alg()),
+        alltoallv: resolve_alltoallv(comm, bytes, config::alltoallv_alg()),
+    }
+}
+
+// ---------------- hierarchical schedules ----------------
+
+/// Per-node leader decomposition of a communicator. All ranks are
+/// *group* ranks; `leaders` is ordered by node id, so every rank derives
+/// the identical structure.
+struct HierLayout {
+    /// One leader per represented node, in node-id order.
+    leaders: Vec<usize>,
+    /// Group ranks on this rank's node (ascending; includes the leader).
+    local: Vec<usize>,
+    /// This rank's node leader.
+    my_leader: usize,
+    /// Index of this rank's node in `leaders`.
+    my_leader_idx: usize,
+    /// Index of the root's node in `leaders` (0 when rootless).
+    root_leader_idx: usize,
+}
+
+impl HierLayout {
+    fn is_leader(&self, r: usize) -> bool {
+        self.my_leader == r
+    }
+
+    /// Group ranks sharing this rank's node, excluding `r` itself.
+    fn local_peers(&self, r: usize) -> Vec<usize> {
+        self.local.iter().copied().filter(|&x| x != r).collect()
+    }
+}
+
+/// Build the leader decomposition. With a root, the root is its own
+/// node's leader (so rooted trees start and end at the root without an
+/// extra hop); other nodes elect their lowest group rank. Nodes holding a
+/// single rank are led by that rank — the intra-node phases degenerate to
+/// no-ops there.
+fn hier_layout(comm: &Comm, root: Option<usize>) -> HierLayout {
+    let map = &comm.rank_ctx().fabric.nodemap;
+    let mut nodes: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for i in 0..comm.size() {
+        nodes.entry(map.node_of(w(comm, i))).or_default().push(i);
+    }
+    let r = comm.rank();
+    let my_node = map.node_of(w(comm, r));
+    let root_node = root.map(|rt| map.node_of(w(comm, rt)));
+    let mut lay = HierLayout {
+        leaders: Vec::with_capacity(nodes.len()),
+        local: Vec::new(),
+        my_leader: r,
+        my_leader_idx: 0,
+        root_leader_idx: 0,
+    };
+    for (idx, (node, ranks)) in nodes.iter().enumerate() {
+        let leader = match root {
+            Some(rt) if Some(*node) == root_node => rt,
+            _ => ranks[0],
+        };
+        lay.leaders.push(leader);
+        if *node == my_node {
+            lay.my_leader = leader;
+            lay.my_leader_idx = idx;
+            lay.local = ranks.clone();
+        }
+        if Some(*node) == root_node {
+            lay.root_leader_idx = idx;
+        }
+    }
+    lay
+}
+
+/// Node-aware broadcast: binomial tree over node leaders (rooted at the
+/// root, which leads its own node), then a leader → local-ranks fan-out
+/// over intra-node links. Inter-node traffic is `O(log nodes)` messages
+/// instead of the flat tree's worst-case `O(log p)`.
+pub fn bcast_hier(comm: &Comm, buf: &mut [u8], count: usize, dtype: &Datatype, root: usize) -> Schedule {
+    let r = comm.rank();
+    let n = dtype.size() * count;
+    let lay = hier_layout(comm, Some(root));
+    let mut sb = SchedBuilder::new();
+    let data = sb.alloc(n);
+    if r == root {
+        sb.pack_user(buf, count, dtype, data);
+        sb.barrier_round();
+    }
+    if lay.is_leader(r) {
+        // Inter-node binomial over leaders, root's node first.
+        let l = lay.leaders.len();
+        let vr = (lay.my_leader_idx + l - lay.root_leader_idx) % l;
+        for t in 0..ceil_log2(l.max(2)) {
+            let m = 1usize << t;
+            if m > vr && vr + m < l {
+                let peer = lay.leaders[(vr + m + lay.root_leader_idx) % l];
+                sb.send(w(comm, peer), data);
+                sb.barrier_round();
+            } else if (m..2 * m).contains(&vr) {
+                let peer = lay.leaders[(vr - m + lay.root_leader_idx) % l];
+                sb.recv(w(comm, peer), data);
+                sb.barrier_round();
+            }
+        }
+        // Intra-node fan-out.
+        for peer in lay.local_peers(r) {
+            sb.send(w(comm, peer), data);
+        }
+        sb.barrier_round();
+    } else {
+        sb.recv(w(comm, lay.my_leader), data);
+        sb.barrier_round();
+    }
+    if r != root {
+        sb.unpack_user(data, buf, count, dtype);
+    }
+    sb.finish()
+}
+
+/// Node-aware allreduce (commutative ops only — see the module docs):
+/// local ranks fold into their node leader, leaders run recursive
+/// doubling across nodes, leaders fan the result back out. The full
+/// vector crosses inter-node links `O(log nodes)` times per leader
+/// instead of riding every round of a flat exchange.
+pub fn allreduce_hier(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+) -> Schedule {
+    let r = comm.rank();
+    let n = dtype.size() * count;
+    let lay = hier_layout(comm, None);
+    let mut sb = SchedBuilder::new();
+    let acc = sb.alloc(n);
+    let tmp = sb.alloc(n);
+    match sbuf {
+        Some(s) => sb.pack_user(s, count, dtype, acc),
+        None => sb.pack_user_raw(subbuf(rbuf, 0, rbuf.len()), count, dtype, acc),
+    }
+    sb.barrier_round();
+    if lay.is_leader(r) {
+        let peers = lay.local_peers(r);
+        if !peers.is_empty() {
+            // Gather local contributions in parallel, fold serially.
+            let slots: Vec<ArenaRange> = peers.iter().map(|_| sb.alloc(n)).collect();
+            for (i, &peer) in peers.iter().enumerate() {
+                sb.recv(w(comm, peer), slots[i]);
+            }
+            sb.barrier_round();
+            for &slot in &slots {
+                sb.reduce(slot, acc, count);
+            }
+            sb.barrier_round();
+        }
+        recursive_doubling_core(&mut sb, comm, &lay.leaders, lay.my_leader_idx, acc, tmp, count);
+        for &peer in &peers {
+            sb.send(w(comm, peer), acc);
+        }
+        sb.barrier_round();
+    } else {
+        sb.send(w(comm, lay.my_leader), acc);
+        sb.barrier_round();
+        sb.recv(w(comm, lay.my_leader), acc);
+        sb.barrier_round();
+    }
+    sb.unpack_user(acc, rbuf, count, dtype);
+    sb.finish()
+}
+
+/// Node-aware reduce (commutative ops only): local ranks fold into their
+/// node leader, leaders run a binomial reduction toward the root (which
+/// leads its own node, so the result lands without an extra hop).
+pub fn reduce_hier(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    mut rbuf: Option<&mut [u8]>,
+    count: usize,
+    dtype: &Datatype,
+    root: usize,
+) -> Schedule {
+    let r = comm.rank();
+    let n = dtype.size() * count;
+    let lay = hier_layout(comm, Some(root));
+    let mut sb = SchedBuilder::new();
+    let acc = sb.alloc(n);
+    let tmp = sb.alloc(n);
+    pack_contribution(&mut sb, sbuf, &rbuf, count, dtype, acc);
+    sb.barrier_round();
+    if lay.is_leader(r) {
+        let peers = lay.local_peers(r);
+        if !peers.is_empty() {
+            let slots: Vec<ArenaRange> = peers.iter().map(|_| sb.alloc(n)).collect();
+            for (i, &peer) in peers.iter().enumerate() {
+                sb.recv(w(comm, peer), slots[i]);
+            }
+            sb.barrier_round();
+            for &slot in &slots {
+                sb.reduce(slot, acc, count);
+            }
+            sb.barrier_round();
+        }
+        // Binomial over leaders toward the root's node.
+        let l = lay.leaders.len();
+        let vr = (lay.my_leader_idx + l - lay.root_leader_idx) % l;
+        let mut m = 1usize;
+        while m < l {
+            if vr & m != 0 {
+                let peer = lay.leaders[(vr - m + lay.root_leader_idx) % l];
+                sb.send(w(comm, peer), acc);
+                sb.barrier_round();
+                break;
+            } else if vr + m < l {
+                let peer = lay.leaders[(vr + m + lay.root_leader_idx) % l];
+                sb.recv(w(comm, peer), tmp);
+                sb.barrier_round();
+                sb.reduce(tmp, acc, count);
+                sb.barrier_round();
+            }
+            m <<= 1;
+        }
+        if r == root {
+            let rb = rbuf.as_mut().expect("root must supply a receive buffer");
+            sb.unpack_user(acc, rb, count, dtype);
+        }
+    } else {
+        sb.send(w(comm, lay.my_leader), acc);
+        sb.barrier_round();
+    }
+    sb.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn omnipath() -> NetworkModel {
+        NetworkModel::omnipath()
+    }
+
+    fn topo(p: usize, nodes: usize, max_ppn: usize) -> CommTopo {
+        CommTopo { p, nodes, max_ppn }
+    }
+
+    #[test]
+    fn allreduce_table_boundaries() {
+        let m = omnipath();
+        // Multi-node, small payload: hierarchical wins (fewer inter hops).
+        assert_eq!(decide_allreduce(topo(8, 4, 2), 64, &m), AllreduceAlg::Hier);
+        // Multi-node, huge payload: ring's chunking wins on bandwidth.
+        assert_eq!(decide_allreduce(topo(8, 4, 2), 4 << 20, &m), AllreduceAlg::Ring);
+        // Single node, small: recursive doubling (hier not a candidate).
+        assert_eq!(decide_allreduce(topo(8, 1, 8), 64, &m), AllreduceAlg::RecursiveDoubling);
+        // Single node, large: ring.
+        assert_eq!(decide_allreduce(topo(8, 1, 8), 1 << 20, &m), AllreduceAlg::Ring);
+        // Degenerate communicators stay latency-safe.
+        assert_eq!(decide_allreduce(topo(1, 1, 1), 1 << 20, &m), AllreduceAlg::RecursiveDoubling);
+        assert_eq!(decide_allreduce(topo(2, 2, 1), 64, &m), AllreduceAlg::RecursiveDoubling);
+    }
+
+    #[test]
+    fn bcast_table_boundaries() {
+        let m = omnipath();
+        assert_eq!(decide_bcast(topo(8, 4, 2), 1024, &m), BcastAlg::Hier);
+        assert_eq!(decide_bcast(topo(8, 1, 8), 1024, &m), BcastAlg::Binomial);
+        // One rank per node: hier degenerates, binomial is kept.
+        assert_eq!(decide_bcast(topo(4, 4, 1), 1024, &m), BcastAlg::Binomial);
+        assert_eq!(decide_bcast(topo(2, 1, 2), 64, &m), BcastAlg::Binomial);
+        assert_eq!(decide_bcast(topo(1, 1, 1), 0, &m), BcastAlg::Binomial);
+    }
+
+    #[test]
+    fn reduce_table_boundaries() {
+        let m = omnipath();
+        assert_eq!(decide_reduce(topo(8, 4, 2), 64, &m), ReduceAlg::Hier);
+        assert_eq!(decide_reduce(topo(8, 1, 8), 64, &m), ReduceAlg::Binomial);
+        assert_eq!(decide_reduce(topo(4, 4, 1), 1 << 16, &m), ReduceAlg::Binomial);
+    }
+
+    #[test]
+    fn v_collectives_switch_at_the_eager_threshold() {
+        let m = omnipath();
+        let at = m.eager_threshold;
+        assert_eq!(decide_allgatherv(8, at, &m), AllgathervAlg::Spread);
+        assert_eq!(decide_allgatherv(8, at + 1, &m), AllgathervAlg::Ring);
+        assert_eq!(decide_alltoallv(8, at, &m), AlltoallvAlg::Spread);
+        assert_eq!(decide_alltoallv(8, at + 1, &m), AlltoallvAlg::Pairwise);
+        // Tiny communicators always spread: a ring/rotation buys nothing.
+        assert_eq!(decide_allgatherv(2, at + 1, &m), AllgathervAlg::Spread);
+        assert_eq!(decide_alltoallv(2, at + 1, &m), AlltoallvAlg::Spread);
+    }
+
+    /// The acceptance sweep: across shapes and sizes (including both
+    /// sides of the eager threshold) auto never lands on a pathological
+    /// choice.
+    #[test]
+    fn auto_is_never_pathological() {
+        let m = omnipath();
+        let e = m.eager_threshold;
+        let shapes = [
+            topo(1, 1, 1),
+            topo(2, 1, 2),
+            topo(2, 2, 1),
+            topo(4, 2, 2),
+            topo(8, 4, 2),
+            topo(8, 1, 8),
+            topo(8, 8, 1),
+            topo(12, 4, 3),
+            topo(5, 2, 3), // uneven ppn
+            topo(32, 16, 2),
+        ];
+        let sizes = [0usize, 1, 64, e - 1, e, e + 1, 1 << 20, 16 << 20];
+        for t in shapes {
+            for &bytes in &sizes {
+                let b = decide_bcast(t, bytes, &m);
+                assert_ne!(b, BcastAlg::Auto);
+                assert_ne!(b, BcastAlg::Linear, "linear bcast at {t:?}/{bytes}");
+                if t.nodes == 1 || t.max_ppn == 1 {
+                    assert_ne!(b, BcastAlg::Hier, "degenerate hier bcast at {t:?}/{bytes}");
+                }
+                let a = decide_allreduce(t, bytes, &m);
+                assert_ne!(a, AllreduceAlg::Auto);
+                assert_ne!(a, AllreduceAlg::ReduceBcast, "ordered fold at {t:?}/{bytes}");
+                if t.nodes == 1 || t.max_ppn == 1 {
+                    assert_ne!(a, AllreduceAlg::Hier);
+                }
+                let r = decide_reduce(t, bytes, &m);
+                assert_ne!(r, ReduceAlg::Auto);
+                assert_ne!(r, ReduceAlg::Linear, "linear reduce at {t:?}/{bytes}");
+                if t.nodes == 1 || t.max_ppn == 1 {
+                    assert_ne!(r, ReduceAlg::Hier);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_cost_model_stays_latency_safe() {
+        // With a free network every candidate ties; the tie-break must
+        // stay on the first (latency-safe) candidate, deterministically.
+        let m = NetworkModel::zero();
+        assert_eq!(decide_allreduce(topo(8, 4, 2), 1 << 20, &m), AllreduceAlg::RecursiveDoubling);
+        assert_eq!(decide_bcast(topo(8, 4, 2), 1 << 20, &m), BcastAlg::Binomial);
+    }
+}

@@ -16,7 +16,7 @@ use crate::group::{Comparison, Group};
 use crate::p2p::{self, engine, RankCtx, RawBuf, RawBufMut, SendMode, Status};
 use crate::request::{PersistentRequest, Request};
 use crate::{mpi_err, Result};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 /// `MPI_PROC_NULL`: sends/receives to it complete immediately.
@@ -39,6 +39,11 @@ pub struct Comm {
     errhandler: RefCell<ErrorHandler>,
     attrs: RefCell<attr::AttrMap>,
     name: RefCell<String>,
+    /// Memoized (nodes spanned, max ranks per node) placement summary,
+    /// filled on first use by the tuned collective layer — the group and
+    /// node map never change for a live communicator, and collectives
+    /// consult this on every `auto`-knob call.
+    pub(crate) topo_cache: Cell<Option<(usize, usize)>>,
 }
 
 impl Comm {
@@ -55,6 +60,7 @@ impl Comm {
             errhandler: RefCell::new(ErrorHandler::ErrorsAreFatal),
             attrs: RefCell::new(attr::AttrMap::default()),
             name: RefCell::new("MPI_COMM_WORLD".to_string()),
+            topo_cache: Cell::new(None),
         }
     }
 
@@ -70,6 +76,7 @@ impl Comm {
             errhandler: RefCell::new(ErrorHandler::ErrorsAreFatal),
             attrs: RefCell::new(attr::AttrMap::default()),
             name: RefCell::new("MPI_COMM_SELF".to_string()),
+            topo_cache: Cell::new(None),
         }
     }
 
@@ -85,6 +92,7 @@ impl Comm {
             errhandler: RefCell::new(ErrorHandler::ErrorsAreFatal),
             attrs: RefCell::new(attr::AttrMap::default()),
             name: RefCell::new(name),
+            topo_cache: Cell::new(None),
         }
     }
 
@@ -102,6 +110,8 @@ impl Comm {
             errhandler: RefCell::new(self.errhandler()),
             attrs: RefCell::new(self.attrs.borrow().dup()),
             name: RefCell::new(self.name()),
+            // Same group on the same fabric: the placement summary carries over.
+            topo_cache: Cell::new(self.topo_cache.get()),
         }
     }
 

@@ -5,7 +5,11 @@
 pub mod mpibench;
 pub mod report;
 
-pub use mpibench::{BenchOp, Interface, MpiBenchConfig, MpiBenchRow, run_mpibench, ALL_OPS};
+pub use mpibench::{
+    run_algsweep, run_mpibench, AlgSweepRow, BenchOp, Interface, MpiBenchConfig, MpiBenchRow,
+    ALL_OPS,
+};
 pub use report::{
-    figure1_cells, figure1_report, overhead_json, write_overhead_json, Figure1Cell, Figure1Report,
+    figure1_cells, figure1_report, overhead_json, tuned_json, write_overhead_json,
+    write_tuned_json, Figure1Cell, Figure1Report,
 };

@@ -527,6 +527,144 @@ fn measure_job(
     Ok(rows)
 }
 
+// ---------------- tuned-collective algorithm sweep ----------------
+
+/// One cell of the flat-vs-hier-vs-auto trajectory: a collective at a
+/// cluster shape under one algorithm knob, with modeled time and the
+/// fabric's message split (total and inter-node, per operation). The
+/// inter-node column is the point of hierarchical algorithms — it is what
+/// the BENCH json tracks across PRs.
+#[derive(Debug, Clone)]
+pub struct AlgSweepRow {
+    /// "Allreduce" or "Bcast".
+    pub op: &'static str,
+    /// The knob label driven during the run ("ring", "hier", "auto", ...).
+    pub alg: &'static str,
+    /// What the knob resolved to at this size/shape (equals `alg` unless
+    /// `alg` is "auto").
+    pub resolved: &'static str,
+    pub nodes: usize,
+    pub ppn: usize,
+    pub msg_len: usize,
+    /// Slowest rank's mean modeled seconds per operation.
+    pub time_s: f64,
+    /// Fabric messages per operation that crossed nodes.
+    pub inter_msgs_per_op: f64,
+    /// All fabric messages per operation (incl. control packets).
+    pub total_msgs_per_op: f64,
+}
+
+/// Run one sweep cell: a fresh job at `nodes`×`ppn` whose closure times
+/// `reps` operations and reports (per-rank mean seconds, resolved-alg
+/// label); the fabric counters are divided by `reps`, so the message
+/// columns are per-op exact (the closure must produce no other traffic).
+fn algsweep_cell(
+    op: &'static str,
+    alg: &'static str,
+    nodes: usize,
+    ppn: usize,
+    msg: usize,
+    reps: usize,
+    run: impl Fn(&Comm) -> (f64, &'static str) + Send + Sync,
+) -> AlgSweepRow {
+    use std::sync::atomic::Ordering;
+    let (times, fabric) = Universe::new(nodes, ppn).run_with_stats(run);
+    AlgSweepRow {
+        op,
+        alg,
+        resolved: times[0].1,
+        nodes,
+        ppn,
+        msg_len: msg,
+        time_s: times.iter().map(|(t, _)| *t).fold(0.0f64, f64::max),
+        inter_msgs_per_op: fabric.stats.inter_node_msgs.load(Ordering::Relaxed) as f64
+            / reps as f64,
+        total_msgs_per_op: fabric.stats.msgs_sent.load(Ordering::Relaxed) as f64 / reps as f64,
+    }
+}
+
+/// Sweep allreduce {recursive_doubling, ring, hier, auto} and bcast
+/// {binomial, hier, auto} over multi-node shapes. Knobs are restored to
+/// `auto` afterwards.
+pub fn run_algsweep(
+    shapes: &[(usize, usize)],
+    msg_lens: &[usize],
+    reps: usize,
+    mut progress: impl FnMut(&str),
+) -> Vec<AlgSweepRow> {
+    use crate::collective::config::{self, AllreduceAlg, BcastAlg};
+    let mut rows = Vec::new();
+    for &(nodes, ppn) in shapes {
+        for &msg in msg_lens {
+            let count = (msg / 4).max(1); // f32 elements
+            for alg in [
+                AllreduceAlg::RecursiveDoubling,
+                AllreduceAlg::Ring,
+                AllreduceAlg::Hier,
+                AllreduceAlg::Auto,
+            ] {
+                progress(&format!(
+                    "algsweep: Allreduce alg={} nodes={nodes} ppn={ppn} msg={msg}",
+                    alg.label()
+                ));
+                config::set_allreduce_alg(alg);
+                rows.push(algsweep_cell(
+                    "Allreduce",
+                    alg.label(),
+                    nodes,
+                    ppn,
+                    msg,
+                    reps,
+                    move |comm| {
+                        let t =
+                            crate::datatype::Datatype::primitive(crate::datatype::Primitive::F32);
+                        let mine = vec![1.0f32; count];
+                        let mut out = vec![0.0f32; count];
+                        let sb = f32s_as_bytes(&mine);
+                        let rb = f32s_as_bytes_mut(&mut out);
+                        let resolved =
+                            crate::collective::tuned::selection_for(comm, count * 4).allreduce;
+                        let t0 = comm.wtime();
+                        for _ in 0..reps {
+                            crate::collective::allreduce(
+                                comm,
+                                Some(sb),
+                                rb,
+                                count,
+                                &t,
+                                &crate::op::Op::SUM,
+                            )
+                            .expect("algsweep allreduce");
+                        }
+                        ((comm.wtime() - t0) / reps as f64, resolved.label())
+                    },
+                ));
+            }
+            config::set_allreduce_alg(AllreduceAlg::Auto);
+            for alg in [BcastAlg::Binomial, BcastAlg::Hier, BcastAlg::Auto] {
+                progress(&format!(
+                    "algsweep: Bcast alg={} nodes={nodes} ppn={ppn} msg={msg}",
+                    alg.label()
+                ));
+                config::set_bcast_alg(alg);
+                rows.push(algsweep_cell("Bcast", alg.label(), nodes, ppn, msg, reps, move |comm| {
+                    let t = crate::datatype::Datatype::primitive(crate::datatype::Primitive::Byte);
+                    let mut buf = vec![1u8; msg.max(1)];
+                    let n = buf.len();
+                    let resolved = crate::collective::tuned::selection_for(comm, n).bcast;
+                    let t0 = comm.wtime();
+                    for _ in 0..reps {
+                        crate::collective::bcast(comm, &mut buf, n, &t, 0).expect("algsweep bcast");
+                    }
+                    ((comm.wtime() - t0) / reps as f64, resolved.label())
+                }));
+            }
+            config::set_bcast_alg(BcastAlg::Auto);
+        }
+    }
+    rows
+}
+
 /// Run the full sweep: one simulated job per (interface, node count).
 pub fn run_mpibench(cfg: &MpiBenchConfig, mut progress: impl FnMut(&str)) -> Vec<MpiBenchRow> {
     let mut all = Vec::new();

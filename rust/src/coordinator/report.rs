@@ -173,6 +173,44 @@ pub fn write_overhead_json(rows: &[MpiBenchRow], path: &std::path::Path) -> std:
     std::fs::write(path, overhead_json(rows))
 }
 
+/// Serialize an algorithm-sweep (flat vs hier vs auto) as JSON: one entry
+/// per (op, shape, message length, algorithm) with modeled time and the
+/// per-op message split. Row order is preserved from the sweep (already
+/// deterministic), so diffs across bench runs are meaningful.
+pub fn tuned_json(rows: &[super::mpibench::AlgSweepRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"op\": \"{}\", \"alg\": \"{}\", \"resolved\": \"{}\", \
+                 \"nodes\": {}, \"ppn\": {}, \"msg_bytes\": {}, \"time_s\": {}, \
+                 \"inter_msgs_per_op\": {}, \"total_msgs_per_op\": {}}}",
+                r.op,
+                r.alg,
+                r.resolved,
+                r.nodes,
+                r.ppn,
+                r.msg_len,
+                json_num(r.time_s),
+                json_num(r.inter_msgs_per_op),
+                json_num(r.total_msgs_per_op),
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"benchmark\": \"tuned_collectives\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    )
+}
+
+/// Write [`tuned_json`] to `path` (the second bench-smoke artifact).
+pub fn write_tuned_json(
+    rows: &[super::mpibench::AlgSweepRow],
+    path: &std::path::Path,
+) -> std::io::Result<()> {
+    std::fs::write(path, tuned_json(rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::mpibench::BenchOp;
@@ -232,5 +270,26 @@ mod tests {
         assert_eq!(json_num(f64::NAN), "null");
         assert_eq!(json_num(f64::INFINITY), "null");
         assert_eq!(json_num(1.5), "1.5e0");
+    }
+
+    #[test]
+    fn tuned_json_is_well_formed() {
+        let rows = vec![super::super::mpibench::AlgSweepRow {
+            op: "Allreduce",
+            alg: "auto",
+            resolved: "hier",
+            nodes: 4,
+            ppn: 2,
+            msg_len: 1024,
+            time_s: 1e-6,
+            inter_msgs_per_op: 8.0,
+            total_msgs_per_op: 20.0,
+        }];
+        let j = tuned_json(&rows);
+        assert!(j.contains("\"benchmark\": \"tuned_collectives\""));
+        assert!(j.contains("\"resolved\": \"hier\""));
+        assert!(j.contains("\"inter_msgs_per_op\": 8e0"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 }

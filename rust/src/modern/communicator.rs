@@ -98,6 +98,17 @@ impl Communicator {
         self.inner.rank_ctx().fabric.pool.stats()
     }
 
+    /// What the tuned collective layer would run for a `bytes`-sized
+    /// payload on this communicator, under the current knobs (see
+    /// [`crate::collective::tuned`]). Every collective issued through
+    /// this wrapper — blocking, future-returning, or persistent — goes
+    /// through that resolution, so `auto` knobs give futures and
+    /// pipelines topology-tuned schedules with no extra code. Useful for
+    /// benches and diagnostics: ask before you time.
+    pub fn algorithm_selection(&self, bytes: usize) -> crate::collective::tuned::Selection {
+        crate::collective::tuned::selection_for(&self.inner, bytes)
+    }
+
     /// `MPI_Comm_dup` — the one copy the paper allows (managed).
     pub fn dup(&self) -> Result<Communicator> {
         Ok(Communicator { inner: self.inner.dup()? })

@@ -1,4 +1,8 @@
-//! Typed RAII wrapper over the IO component (`mpi::io` analog).
+//! Typed RAII wrapper over the IO component (`mpi::io` analog): a
+//! [`TypedFile<T>`] is a file of `T` records — the etype defaults to `T`
+//! (the paper's "meaningful defaults"), reads/writes take typed slices,
+//! and the handle closes collectively on drop. The untyped substrate
+//! lives in [`crate::io`].
 
 use super::datatype::{Buffer, BufferMut, DataType};
 use crate::comm::Comm;

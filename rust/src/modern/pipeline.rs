@@ -501,6 +501,12 @@ impl<T: DataType> PersistentBroadcast<T> {
         self.root
     }
 
+    /// The concrete broadcast algorithm captured at init (an `auto` knob
+    /// is resolved once, when the template is built).
+    pub fn algorithm(&self) -> &'static str {
+        self.template.algorithm()
+    }
+
     pub fn buffer(&self) -> Ref<'_, [T]> {
         Ref::map(self.buf.borrow(), |b| &**b)
     }
@@ -574,6 +580,12 @@ impl<T: DataType + Default> PersistentAllReduce<T> {
 }
 
 impl<T: DataType> PersistentAllReduce<T> {
+    /// The concrete allreduce algorithm captured at init (an `auto` knob
+    /// is resolved once, when the template is built).
+    pub fn algorithm(&self) -> &'static str {
+        self.template.algorithm()
+    }
+
     pub fn input_mut(&self) -> RefMut<'_, [T]> {
         RefMut::map(self.input.borrow_mut(), |b| &mut **b)
     }

@@ -1,4 +1,8 @@
-//! Typed RAII wrapper over one-sided windows.
+//! Typed RAII wrapper over one-sided windows: an [`RmaWindow<T>`]
+//! exposes put/get/accumulate/fetch-and-op/compare-and-swap over `T`
+//! elements with scoped lock types and fence epochs, freeing the window
+//! collectively on drop. The untyped substrate lives in
+//! [`crate::onesided`].
 
 use super::datatype::{Buffer, BufferMut, DataType};
 use super::enums::ReduceOp;

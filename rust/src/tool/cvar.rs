@@ -17,13 +17,31 @@ pub fn cvars() -> Vec<CvarInfo> {
     vec![
         CvarInfo {
             name: "coll_bcast_algorithm",
-            description: "broadcast algorithm: binomial | linear",
+            description: "broadcast algorithm: auto | binomial | linear | hier (env FERROMPI_COLL_BCAST; a cvar write wins)",
             writable: true,
             category: "collective",
         },
         CvarInfo {
             name: "coll_allreduce_algorithm",
-            description: "allreduce algorithm: recursive_doubling | ring | reduce_bcast",
+            description: "allreduce algorithm: auto | recursive_doubling | ring | reduce_bcast | hier (env FERROMPI_COLL_ALLREDUCE)",
+            writable: true,
+            category: "collective",
+        },
+        CvarInfo {
+            name: "coll_reduce_algorithm",
+            description: "reduce algorithm: auto | binomial | linear | hier (env FERROMPI_COLL_REDUCE)",
+            writable: true,
+            category: "collective",
+        },
+        CvarInfo {
+            name: "coll_allgatherv_algorithm",
+            description: "allgather(v) algorithm: auto | ring | spread (env FERROMPI_COLL_ALLGATHERV)",
+            writable: true,
+            category: "collective",
+        },
+        CvarInfo {
+            name: "coll_alltoallv_algorithm",
+            description: "alltoall(v) algorithm: auto | pairwise | spread (env FERROMPI_COLL_ALLTOALLV)",
             writable: true,
             category: "collective",
         },
@@ -85,15 +103,11 @@ pub fn apply_model_overrides(model: &mut crate::transport::NetworkModel) {
 /// `MPI_T_cvar_read`.
 pub fn cvar_read(name: &str) -> Result<String> {
     match name {
-        "coll_bcast_algorithm" => Ok(match config::bcast_alg() {
-            config::BcastAlg::Binomial => "binomial".into(),
-            config::BcastAlg::Linear => "linear".into(),
-        }),
-        "coll_allreduce_algorithm" => Ok(match config::allreduce_alg() {
-            config::AllreduceAlg::RecursiveDoubling => "recursive_doubling".into(),
-            config::AllreduceAlg::Ring => "ring".into(),
-            config::AllreduceAlg::ReduceBcast => "reduce_bcast".into(),
-        }),
+        "coll_bcast_algorithm" => Ok(config::bcast_alg().label().into()),
+        "coll_allreduce_algorithm" => Ok(config::allreduce_alg().label().into()),
+        "coll_reduce_algorithm" => Ok(config::reduce_alg().label().into()),
+        "coll_allgatherv_algorithm" => Ok(config::allgatherv_alg().label().into()),
+        "coll_alltoallv_algorithm" => Ok(config::alltoallv_alg().label().into()),
         "netmodel_eager_threshold" => {
             let v = EAGER_OVERRIDE.load(Ordering::Relaxed);
             let env = std::env::var("FERROMPI_EAGER_LIMIT").ok();
@@ -120,16 +134,26 @@ pub fn cvar_read(name: &str) -> Result<String> {
 /// `MPI_T_cvar_write`.
 pub fn cvar_write(name: &str, value: &str) -> Result<()> {
     match name {
+        // The parsers reject unknown values with an error that lists every
+        // valid spelling — surfaced to the cvar writer as-is.
         "coll_bcast_algorithm" => {
-            let a = config::parse_bcast_alg(value)
-                .ok_or_else(|| mpi_err!(Arg, "bad bcast algorithm '{value}'"))?;
-            config::set_bcast_alg(a);
+            config::set_bcast_alg(config::parse_bcast_alg(value)?);
             Ok(())
         }
         "coll_allreduce_algorithm" => {
-            let a = config::parse_allreduce_alg(value)
-                .ok_or_else(|| mpi_err!(Arg, "bad allreduce algorithm '{value}'"))?;
-            config::set_allreduce_alg(a);
+            config::set_allreduce_alg(config::parse_allreduce_alg(value)?);
+            Ok(())
+        }
+        "coll_reduce_algorithm" => {
+            config::set_reduce_alg(config::parse_reduce_alg(value)?);
+            Ok(())
+        }
+        "coll_allgatherv_algorithm" => {
+            config::set_allgatherv_alg(config::parse_allgatherv_alg(value)?);
+            Ok(())
+        }
+        "coll_alltoallv_algorithm" => {
+            config::set_alltoallv_alg(config::parse_alltoallv_alg(value)?);
             Ok(())
         }
         "netmodel_eager_threshold" => {
@@ -154,19 +178,42 @@ mod tests {
     #[test]
     fn registry_lookup() {
         assert!(cvar_index("coll_bcast_algorithm").is_some());
+        assert!(cvar_index("coll_reduce_algorithm").is_some());
+        assert!(cvar_index("coll_allgatherv_algorithm").is_some());
+        assert!(cvar_index("coll_alltoallv_algorithm").is_some());
         assert!(cvar_index("nope").is_none());
-        assert!(cvars().len() >= 5);
+        assert!(cvars().len() >= 8);
     }
 
     #[test]
     fn read_write_roundtrip() {
         cvar_write("coll_bcast_algorithm", "linear").unwrap();
         assert_eq!(cvar_read("coll_bcast_algorithm").unwrap(), "linear");
-        cvar_write("coll_bcast_algorithm", "binomial").unwrap();
-        assert_eq!(cvar_read("coll_bcast_algorithm").unwrap(), "binomial");
+        cvar_write("coll_bcast_algorithm", "hier").unwrap();
+        assert_eq!(cvar_read("coll_bcast_algorithm").unwrap(), "hier");
+        cvar_write("coll_bcast_algorithm", "auto").unwrap();
+        assert_eq!(cvar_read("coll_bcast_algorithm").unwrap(), "auto");
+        cvar_write("coll_reduce_algorithm", "binomial").unwrap();
+        assert_eq!(cvar_read("coll_reduce_algorithm").unwrap(), "binomial");
+        cvar_write("coll_reduce_algorithm", "auto").unwrap();
+        cvar_write("coll_allgatherv_algorithm", "spread").unwrap();
+        assert_eq!(cvar_read("coll_allgatherv_algorithm").unwrap(), "spread");
+        cvar_write("coll_allgatherv_algorithm", "auto").unwrap();
+        cvar_write("coll_alltoallv_algorithm", "pairwise").unwrap();
+        assert_eq!(cvar_read("coll_alltoallv_algorithm").unwrap(), "pairwise");
+        cvar_write("coll_alltoallv_algorithm", "auto").unwrap();
         assert!(cvar_write("coll_bcast_algorithm", "wat").is_err());
         assert!(cvar_write("deadlock_timeout_s", "1").is_err());
         assert!(cvar_read("nope").is_err());
+    }
+
+    #[test]
+    fn bad_algorithm_error_names_the_valid_values() {
+        let err = cvar_write("coll_bcast_algorithm", "wat").unwrap_err();
+        let msg = format!("{err}");
+        for valid in ["auto", "binomial", "linear", "hier"] {
+            assert!(msg.contains(valid), "missing '{valid}' in: {msg}");
+        }
     }
 
     #[test]

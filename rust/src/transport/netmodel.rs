@@ -67,6 +67,19 @@ impl NetworkModel {
     pub fn is_eager(&self, bytes: usize) -> bool {
         bytes <= self.eager_threshold
     }
+
+    /// [`cost_ns`](NetworkModel::cost_ns) plus the protocol surcharge: a
+    /// rendezvous payload pays the RTS/CTS control round-trip (two extra
+    /// latencies) before DATA moves. This is the per-message cost the
+    /// tuned-collective decision tables ([`crate::collective::tuned`])
+    /// compare, and it is what moves their crossover points when the
+    /// eager threshold moves.
+    #[inline]
+    pub fn protocol_cost_ns(&self, bytes: usize, same_node: bool) -> f64 {
+        let alpha = if same_node { self.alpha_intra_ns } else { self.alpha_inter_ns };
+        let extra = if self.is_eager(bytes) { 0.0 } else { 2.0 * alpha };
+        self.cost_ns(bytes, same_node) + extra
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +110,19 @@ mod tests {
         let m = NetworkModel::omnipath();
         assert!(m.is_eager(64 * 1024));
         assert!(!m.is_eager(64 * 1024 + 1));
+    }
+
+    #[test]
+    fn protocol_surcharge_kicks_in_past_the_threshold() {
+        let m = NetworkModel::omnipath();
+        let at = m.eager_threshold;
+        // Eager side: no surcharge.
+        assert_eq!(m.protocol_cost_ns(at, false), m.cost_ns(at, false));
+        // Rendezvous side: exactly the RTS/CTS round-trip on top.
+        let over = m.protocol_cost_ns(at + 1, false) - m.cost_ns(at + 1, false);
+        assert!((over - 2.0 * m.alpha_inter_ns).abs() < 1e-9);
+        let over_intra = m.protocol_cost_ns(at + 1, true) - m.cost_ns(at + 1, true);
+        assert!((over_intra - 2.0 * m.alpha_intra_ns).abs() < 1e-9);
     }
 
     #[test]

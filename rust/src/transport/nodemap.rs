@@ -1,4 +1,19 @@
 //! Rank → node placement for the simulated cluster.
+//!
+//! The map is the topology ground truth consumed by two layers:
+//!
+//! * the [`Fabric`](super::fabric::Fabric) charges intra- vs inter-node
+//!   transfer costs (and splits the `intra_node_msgs`/`inter_node_msgs`
+//!   pvars) based on [`NodeMap::same_node`];
+//! * the tuned collective layer ([`crate::collective::tuned`]) derives a
+//!   per-communicator topology summary from it — how many nodes a group
+//!   spans and the largest per-node rank count — to drive hierarchical
+//!   (leader-based) algorithm selection and construction.
+//!
+//! Placement is the block `--ntasks-per-node` layout: ranks
+//! `[k·ppn, (k+1)·ppn)` live on node `k`. Sub-communicators may cover an
+//! arbitrary subset of ranks, so per-node populations seen by a
+//! communicator can be uneven even though the world map is uniform.
 
 /// Block placement of `nranks` onto `nodes` nodes with `ppn` ranks per
 /// node (the common `--ntasks-per-node` launcher layout).

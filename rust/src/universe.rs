@@ -30,6 +30,18 @@ impl Universe {
         Universe { nodemap: NodeMap::new(nodes, ppn), model }
     }
 
+    /// Like [`Universe::new`], but the cluster shape can be overridden
+    /// from the environment: `FERROMPI_NODES` / `FERROMPI_PPN` (positive
+    /// integers; malformed or missing values fall back to the given
+    /// defaults). Benches and examples use this so a sweep can be
+    /// re-shaped without recompiling.
+    pub fn from_env(default_nodes: usize, default_ppn: usize) -> Universe {
+        let nodes = std::env::var("FERROMPI_NODES").ok();
+        let ppn = std::env::var("FERROMPI_PPN").ok();
+        let (n, p) = resolve_shape(nodes.as_deref(), ppn.as_deref(), default_nodes, default_ppn);
+        Universe::new(n, p)
+    }
+
     /// Single-node job with the zero-cost model: what correctness tests
     /// use (no virtual-time effects, pure software paths).
     pub fn test(nranks: usize) -> Universe {
@@ -118,9 +130,33 @@ impl Universe {
     }
 }
 
+/// Pure shape resolver behind [`Universe::from_env`] (unit-tested without
+/// touching the process environment): each dimension independently takes
+/// the env value when it parses to a positive integer, else the default.
+fn resolve_shape(
+    nodes: Option<&str>,
+    ppn: Option<&str>,
+    default_nodes: usize,
+    default_ppn: usize,
+) -> (usize, usize) {
+    let dim = |v: Option<&str>, d: usize| {
+        v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0).unwrap_or(d)
+    };
+    (dim(nodes, default_nodes), dim(ppn, default_ppn))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shape_resolver_precedence() {
+        assert_eq!(resolve_shape(None, None, 4, 2), (4, 2));
+        assert_eq!(resolve_shape(Some("8"), None, 4, 2), (8, 2));
+        assert_eq!(resolve_shape(Some(" 8 "), Some("3"), 4, 2), (8, 3));
+        assert_eq!(resolve_shape(Some("0"), Some("-1"), 4, 2), (4, 2));
+        assert_eq!(resolve_shape(Some("wat"), Some("1"), 4, 2), (4, 1));
+    }
 
     #[test]
     fn world_identity() {

@@ -233,7 +233,7 @@ fn pvars_observe_traffic() {
 fn cvar_algorithm_switch_affects_collectives() {
     use ferrompi::collective::config;
     // Results must agree across algorithms (correctness under retune).
-    for alg in ["recursive_doubling", "ring", "reduce_bcast"] {
+    for alg in ["recursive_doubling", "ring", "reduce_bcast", "hier", "auto"] {
         tool::cvar_write("coll_allreduce_algorithm", alg).unwrap();
         let sums = Universe::test(5).run(|comm| {
             let t = i32t();
@@ -245,8 +245,8 @@ fn cvar_algorithm_switch_affects_collectives() {
         });
         assert!(sums.iter().all(|&s| s == 45), "alg {alg}: {sums:?}");
     }
-    tool::cvar_write("coll_allreduce_algorithm", "recursive_doubling").unwrap();
-    assert_eq!(config::allreduce_alg(), config::AllreduceAlg::RecursiveDoubling);
+    tool::cvar_write("coll_allreduce_algorithm", "auto").unwrap();
+    assert_eq!(config::allreduce_alg(), config::AllreduceAlg::Auto);
 }
 
 // ---------------- topologies & sessions ----------------

@@ -1,0 +1,418 @@
+//! Tuned-collective integration tests: hierarchical algorithms across
+//! node shapes (byte-identical vs the flat algorithms), end-to-end auto
+//! selection (including the inter-node message savings the hierarchy
+//! exists for), spread vs ring/pairwise v-collectives, and
+//! resolved-algorithm capture in persistent templates.
+
+use ferrompi::collective::{
+    self,
+    config::{self, AllgathervAlg, AllreduceAlg, AlltoallvAlg, BcastAlg, ReduceAlg},
+};
+use ferrompi::datatype::{Datatype, Primitive};
+use ferrompi::modern::Communicator;
+use ferrompi::op::Op;
+use ferrompi::transport::NetworkModel;
+use ferrompi::universe::Universe;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+
+/// The algorithm knobs are process-global; tests that write them run
+/// under this lock so the parallel test runner cannot interleave them.
+static KNOBS: Mutex<()> = Mutex::new(());
+
+fn knob_guard() -> std::sync::MutexGuard<'static, ()> {
+    KNOBS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn i64t() -> Datatype {
+    Datatype::primitive(Primitive::I64)
+}
+
+fn i32t() -> Datatype {
+    Datatype::primitive(Primitive::I32)
+}
+
+fn as_b64(v: &[i64]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8) }
+}
+
+fn as_bm64(v: &mut [i64]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 8) }
+}
+
+fn as_b32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn as_bm32(v: &mut [i32]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4) }
+}
+
+/// Node shapes the hierarchy must survive: flat single node, one rank per
+/// node (leader-only nodes), even multi-node, and taller-than-wide.
+const SHAPES: &[(usize, usize)] = &[(1, 5), (5, 1), (2, 3), (3, 2), (4, 2)];
+
+/// Distinct per-rank i64 payload — integer sums are order-independent, so
+/// hier and flat must agree to the byte.
+fn contribution(rank: usize, count: usize) -> Vec<i64> {
+    (0..count).map(|k| (rank as i64 + 1) * 1_000 + k as i64).collect()
+}
+
+fn run_allreduce(nodes: usize, ppn: usize, count: usize, alg: AllreduceAlg) -> Vec<Vec<i64>> {
+    config::set_allreduce_alg(alg);
+    let out = Universe::with_model(nodes, ppn, NetworkModel::zero()).run(move |comm| {
+        let mine = contribution(comm.rank(), count);
+        let mut out = vec![0i64; count];
+        collective::allreduce(comm, Some(as_b64(&mine)), as_bm64(&mut out), count, &i64t(), &Op::SUM)
+            .unwrap();
+        out
+    });
+    config::set_allreduce_alg(AllreduceAlg::Auto);
+    out
+}
+
+#[test]
+fn hier_allreduce_is_byte_identical_to_flat_across_shapes() {
+    let _g = knob_guard();
+    for &(nodes, ppn) in SHAPES {
+        let p = nodes * ppn;
+        let count = 17usize;
+        let expected: Vec<i64> = (0..count)
+            .map(|k| (0..p).map(|r| (r as i64 + 1) * 1_000 + k as i64).sum())
+            .collect();
+        let flat = run_allreduce(nodes, ppn, count, AllreduceAlg::RecursiveDoubling);
+        let hier = run_allreduce(nodes, ppn, count, AllreduceAlg::Hier);
+        let ring = run_allreduce(nodes, ppn, count, AllreduceAlg::Ring);
+        for r in 0..p {
+            assert_eq!(flat[r], expected, "flat rd at {nodes}x{ppn} rank {r}");
+            assert_eq!(hier[r], expected, "hier at {nodes}x{ppn} rank {r}");
+            assert_eq!(ring[r], expected, "ring at {nodes}x{ppn} rank {r}");
+        }
+    }
+}
+
+#[test]
+fn hier_bcast_is_byte_identical_to_flat_across_shapes_and_roots() {
+    let _g = knob_guard();
+    for &(nodes, ppn) in SHAPES {
+        let p = nodes * ppn;
+        for root in [0, p / 2, p - 1] {
+            let payload: Vec<i64> = (0..23).map(|k| (root as i64) * 777 + k).collect();
+            for alg in [BcastAlg::Binomial, BcastAlg::Hier] {
+                config::set_bcast_alg(alg);
+                let expect = payload.clone();
+                let got = Universe::with_model(nodes, ppn, NetworkModel::zero()).run(move |comm| {
+                    let mut buf = if comm.rank() == root {
+                        expect.clone()
+                    } else {
+                        vec![0i64; expect.len()]
+                    };
+                    let n = buf.len();
+                    collective::bcast(comm, as_bm64(&mut buf), n, &i64t(), root).unwrap();
+                    buf
+                });
+                config::set_bcast_alg(BcastAlg::Auto);
+                for r in 0..p {
+                    assert_eq!(
+                        got[r], payload,
+                        "bcast {alg:?} at {nodes}x{ppn} root {root} rank {r}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hier_reduce_is_byte_identical_to_flat_across_shapes_and_roots() {
+    let _g = knob_guard();
+    for &(nodes, ppn) in SHAPES {
+        let p = nodes * ppn;
+        let count = 9usize;
+        let expected: Vec<i64> = (0..count)
+            .map(|k| (0..p).map(|r| (r as i64 + 1) * 1_000 + k as i64).sum())
+            .collect();
+        for root in [0, p - 1] {
+            for alg in [ReduceAlg::Binomial, ReduceAlg::Hier] {
+                config::set_reduce_alg(alg);
+                let got = Universe::with_model(nodes, ppn, NetworkModel::zero()).run(move |comm| {
+                    let mine = contribution(comm.rank(), count);
+                    if comm.rank() == root {
+                        let mut out = vec![0i64; count];
+                        collective::reduce(
+                            comm,
+                            Some(as_b64(&mine)),
+                            Some(as_bm64(&mut out)),
+                            count,
+                            &i64t(),
+                            &Op::SUM,
+                            root,
+                        )
+                        .unwrap();
+                        Some(out)
+                    } else {
+                        collective::reduce(comm, Some(as_b64(&mine)), None, count, &i64t(), &Op::SUM, root)
+                            .unwrap();
+                        None
+                    }
+                });
+                config::set_reduce_alg(ReduceAlg::Auto);
+                for (r, res) in got.iter().enumerate() {
+                    if r == root {
+                        assert_eq!(
+                            res.as_ref().unwrap(),
+                            &expected,
+                            "reduce {alg:?} at {nodes}x{ppn} root {root}"
+                        );
+                    } else {
+                        assert!(res.is_none());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sub-communicators present the hierarchy with uneven per-node rank
+/// counts and leaderless (single-rank) nodes; results must still match
+/// the flat algorithms byte for byte.
+#[test]
+fn hier_collectives_on_uneven_subgroups() {
+    let _g = knob_guard();
+    // World 2×3; drop rank 5 → node0 {0,1,2}, node1 {3,4} (uneven), and
+    // drop 1,2,4,5 → node0 {0}, node1 {3} (single-rank nodes).
+    for (excluded, label) in [(vec![5usize], "uneven"), (vec![1, 2, 5], "single-rank node")] {
+        for alg in [AllreduceAlg::RecursiveDoubling, AllreduceAlg::Hier] {
+            config::set_allreduce_alg(alg);
+            let excl = excluded.clone();
+            let got = Universe::with_model(2, 3, NetworkModel::zero()).run(move |world| {
+                let color = if excl.contains(&world.rank()) { -1 } else { 0 };
+                let sub = world.split(color, 0).unwrap();
+                let sub = match sub {
+                    Some(s) => s,
+                    None => return None,
+                };
+                let count = 11usize;
+                let mine = contribution(sub.rank(), count);
+                let mut out = vec![0i64; count];
+                collective::allreduce(
+                    &sub,
+                    Some(as_b64(&mine)),
+                    as_bm64(&mut out),
+                    count,
+                    &i64t(),
+                    &Op::SUM,
+                )
+                .unwrap();
+                Some((sub.size(), out))
+            });
+            config::set_allreduce_alg(AllreduceAlg::Auto);
+            let members: Vec<_> = got.iter().flatten().collect();
+            assert_eq!(members.len(), 6 - excluded.len());
+            let p = members[0].0;
+            let expected: Vec<i64> = (0..11)
+                .map(|k| (0..p).map(|r| (r as i64 + 1) * 1_000 + k as i64).sum())
+                .collect();
+            for (size, out) in &members {
+                assert_eq!(*size, p);
+                assert_eq!(out, &expected, "{label} subgroup, {alg:?}");
+            }
+        }
+    }
+}
+
+/// The acceptance check: at a multi-node shape the hierarchical allreduce
+/// crosses nodes far less than the flat ring, and `auto` (the default)
+/// actually takes that path end-to-end for a small payload.
+#[test]
+fn hier_and_auto_allreduce_save_inter_node_messages() {
+    let _g = knob_guard();
+    let count = 16usize; // 64 B — eager, small-message regime
+    let expected: Vec<i64> = (0..count)
+        .map(|k| (0..8).map(|r| (r as i64 + 1) * 1_000 + k as i64).sum())
+        .collect();
+    let mut inter = std::collections::HashMap::new();
+    for alg in [AllreduceAlg::Ring, AllreduceAlg::Hier, AllreduceAlg::Auto] {
+        config::set_allreduce_alg(alg);
+        let exp = expected.clone();
+        let (_, fabric) = Universe::new(4, 2).run_with_stats(move |comm| {
+            let mine = contribution(comm.rank(), count);
+            let mut out = vec![0i64; count];
+            collective::allreduce(comm, Some(as_b64(&mine)), as_bm64(&mut out), count, &i64t(), &Op::SUM)
+                .unwrap();
+            assert_eq!(out, exp);
+        });
+        config::set_allreduce_alg(AllreduceAlg::Auto);
+        inter.insert(alg.label(), fabric.stats.inter_node_msgs.load(Ordering::Relaxed));
+    }
+    // Ring at 4×2: every rank sends 2(p-1) = 14 messages to its right
+    // neighbor and 4 of the 8 directed ring edges cross nodes → 56.
+    assert_eq!(inter["ring"], 56, "flat ring inter-node messages");
+    // Hier: only the 4 leaders talk across nodes, 2 recursive-doubling
+    // rounds each → 8.
+    assert_eq!(inter["hier"], 8, "hierarchical inter-node messages");
+    // Auto resolves to hier here (small payload, multi-node shape).
+    assert_eq!(inter["auto"], inter["hier"], "auto should take the hierarchical path");
+    assert!(inter["hier"] < inter["ring"]);
+}
+
+#[test]
+fn spread_v_collectives_match_the_default_algorithms() {
+    let _g = knob_guard();
+    // Uneven allgatherv: rank i contributes i+1 i32s.
+    let p = 4usize;
+    let counts: Vec<usize> = (0..p).map(|i| i + 1).collect();
+    let displs: Vec<usize> = {
+        let mut d = vec![0usize];
+        for i in 0..p - 1 {
+            d.push(d[i] + counts[i] * 4);
+        }
+        d
+    };
+    let total: usize = counts.iter().sum();
+    let expected: Vec<i32> = (0..p).flat_map(|i| vec![i as i32 * 10; i + 1]).collect();
+    for alg in [AllgathervAlg::Ring, AllgathervAlg::Spread] {
+        config::set_allgatherv_alg(alg);
+        let (counts2, displs2, exp) = (counts.clone(), displs.clone(), expected.clone());
+        Universe::test(p).run(move |comm| {
+            let r = comm.rank();
+            let mine = vec![r as i32 * 10; counts2[r]];
+            let mut out = vec![0i32; total];
+            collective::allgatherv(
+                comm,
+                Some(as_b32(&mine)),
+                counts2[r],
+                &i32t(),
+                as_bm32(&mut out),
+                &counts2,
+                &displs2,
+                &i32t(),
+            )
+            .unwrap();
+            assert_eq!(out, exp, "allgatherv {alg:?}");
+        });
+    }
+    config::set_allgatherv_alg(AllgathervAlg::Auto);
+
+    // Alltoall: element j of rank i's vector goes to rank j.
+    for alg in [AlltoallvAlg::Pairwise, AlltoallvAlg::Spread] {
+        config::set_alltoallv_alg(alg);
+        Universe::test(p).run(move |comm| {
+            let r = comm.rank();
+            let mine: Vec<i32> = (0..p).map(|j| (r * 100 + j) as i32).collect();
+            let mut out = vec![0i32; p];
+            collective::alltoall(comm, as_b32(&mine), 1, &i32t(), as_bm32(&mut out), 1, &i32t())
+                .unwrap();
+            let expect: Vec<i32> = (0..p).map(|i| (i * 100 + r) as i32).collect();
+            assert_eq!(out, expect, "alltoall {alg:?}");
+        });
+    }
+    config::set_alltoallv_alg(AlltoallvAlg::Auto);
+}
+
+/// Persistent templates resolve the knob once, at init: later knob writes
+/// change neither the captured algorithm nor the replayed schedule.
+#[test]
+fn persistent_allreduce_captures_resolved_algorithm_at_init() {
+    let _g = knob_guard();
+    config::set_allreduce_alg(AllreduceAlg::Ring);
+    Universe::test(4).run(|comm| {
+        let count = 8usize;
+        let mine = contribution(comm.rank(), count);
+        let mut out = vec![0i64; count];
+        let template = collective::allreduce_init(
+            comm,
+            Some(as_b64(&mine)),
+            as_bm64(&mut out),
+            count,
+            &i64t(),
+            &Op::SUM,
+        )
+        .unwrap();
+        assert_eq!(template.algorithm(), "ring");
+        // Every rank moves the knob after init — the template must not care.
+        config::set_allreduce_alg(AllreduceAlg::RecursiveDoubling);
+        for _ in 0..2 {
+            template.start().unwrap();
+            template.wait().unwrap();
+            let expected: Vec<i64> = (0..count)
+                .map(|k| (0..4).map(|r| (r as i64 + 1) * 1_000 + k as i64).sum())
+                .collect();
+            assert_eq!(out, expected);
+            assert_eq!(template.algorithm(), "ring", "capture survives knob writes and restarts");
+        }
+    });
+    config::set_allreduce_alg(AllreduceAlg::Auto);
+}
+
+/// An `auto` template also captures its *resolved* algorithm, never the
+/// literal "auto".
+#[test]
+fn persistent_auto_captures_a_concrete_algorithm() {
+    let _g = knob_guard();
+    config::set_allreduce_alg(AllreduceAlg::Auto);
+    Universe::test(4).run(|comm| {
+        let count = 4usize;
+        let mine = contribution(comm.rank(), count);
+        let mut out = vec![0i64; count];
+        let template = collective::allreduce_init(
+            comm,
+            Some(as_b64(&mine)),
+            as_bm64(&mut out),
+            count,
+            &i64t(),
+            &Op::SUM,
+        )
+        .unwrap();
+        assert_ne!(template.algorithm(), "auto");
+        template.start().unwrap();
+        template.wait().unwrap();
+    });
+}
+
+/// The modern wrapper's introspection reports what auto resolves to —
+/// always a concrete algorithm, hierarchical on a hierarchical shape.
+#[test]
+fn modern_selection_introspection() {
+    let _g = knob_guard();
+    config::set_allreduce_alg(AllreduceAlg::Auto);
+    config::set_bcast_alg(BcastAlg::Auto);
+    Universe::new(4, 2).run(|world| {
+        let comm = Communicator::world(world);
+        let small = comm.algorithm_selection(64);
+        assert_eq!(small.allreduce, AllreduceAlg::Hier);
+        assert_eq!(small.bcast, BcastAlg::Hier);
+        let large = comm.algorithm_selection(4 << 20);
+        assert_eq!(large.allreduce, AllreduceAlg::Ring);
+        for sel in [small, large] {
+            assert_ne!(sel.reduce, ReduceAlg::Auto);
+            assert_ne!(sel.allgatherv, AllgathervAlg::Auto);
+            assert_ne!(sel.alltoallv, AlltoallvAlg::Auto);
+        }
+    });
+}
+
+/// Non-commutative operations must never take a reassociating path, even
+/// when the knob explicitly asks for one.
+#[test]
+fn non_commutative_ops_override_the_knob() {
+    let _g = knob_guard();
+    config::set_allreduce_alg(AllreduceAlg::Hier);
+    // 2×2 so a hierarchical choice would otherwise be plausible.
+    Universe::with_model(2, 2, NetworkModel::zero()).run(|comm| {
+        // Left-projection is non-commutative: the result must be rank 0's
+        // vector, which only the ordered fold guarantees.
+        let f: ferrompi::op::UserFn =
+            std::sync::Arc::new(|input: &[u8], inout: &mut [u8], count: usize, _map| {
+                let need = count * 8;
+                inout[..need].copy_from_slice(&input[..need]);
+                Ok(())
+            });
+        let op = Op::user(f, false, "left_projection");
+        let mine = contribution(comm.rank(), 5);
+        let mut out = vec![0i64; 5];
+        collective::allreduce(comm, Some(as_b64(&mine)), as_bm64(&mut out), 5, &i64t(), &op).unwrap();
+        assert_eq!(out, contribution(0, 5));
+    });
+    config::set_allreduce_alg(AllreduceAlg::Auto);
+}
