@@ -17,8 +17,11 @@
 //!    `Option`/`Result` returns and defaults.
 //!
 //! Plus the three-layer compute bridge ([`runtime`]: AOT HLO artifacts
-//! executed via PJRT) and the evaluation harness
-//! ([`coordinator`]: the mpiBench port regenerating Figure 1).
+//! executed via PJRT), the evaluation harness
+//! ([`coordinator`]: the mpiBench port regenerating Figure 1), and the
+//! deterministic chaos harness ([`sim`]: seeded schedule perturbation,
+//! quiescence auditing and randomized differential testing — see
+//! `docs/TESTING.md`).
 //!
 //! ## Persistent pipelines
 //!
@@ -64,6 +67,7 @@ extern crate self as ferrompi;
 pub mod util;
 pub mod error;
 pub mod info;
+pub mod sim;
 pub mod transport;
 pub mod datatype;
 pub mod op;

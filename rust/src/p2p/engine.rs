@@ -233,6 +233,14 @@ pub fn post_recv(
 fn match_arrived(ctx: &RankCtx, recv_token: u64, msg: UnexpectedMsg) -> Result<()> {
     ctx.counters.messages_matched.set(ctx.counters.messages_matched.get() + 1);
     ctx.clock.advance_to(msg.depart_vt);
+    if ctx.fabric.trace.enabled() {
+        ctx.fabric.trace.record(
+            ctx.world_rank,
+            ctx.clock.now_ns(),
+            "match",
+            format!("src r{} tag {} ctx {} {}B", msg.src, msg.tag, msg.ctx, msg.nbytes()),
+        );
+    }
     match msg.body {
         UnexpectedBody::Eager { data, sync_token } => {
             if let Some(tok) = sync_token {
@@ -441,8 +449,10 @@ fn advance_progressables(ctx: &Rc<RankCtx>) -> Result<()> {
 }
 
 /// One non-blocking engine turn: drain the mailbox, handle packets, turn
-/// registered composite operations.
+/// registered composite operations. In chaos mode the turn may first
+/// yield the thread (scheduling jitter — free when chaos is off).
 pub fn progress(ctx: &Rc<RankCtx>) -> Result<()> {
+    ctx.fabric.chaos_tick(ctx.world_rank);
     process_mailbox(ctx)?;
     advance_progressables(ctx)
 }
@@ -483,6 +493,8 @@ pub fn wait_for(ctx: &Rc<RankCtx>, mut done: impl FnMut() -> bool) -> Result<()>
                 ctx.recvs.borrow().len()
             );
         }
+        // (Chaos yield jitter is injected once per turn, inside
+        // `progress` at the top of the loop.)
         let mut pkts = ctx.scratch.take();
         pkts.clear();
         ctx.fabric

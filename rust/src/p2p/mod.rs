@@ -23,4 +23,4 @@ pub use engine::{
     wait_for, Message, RndvStaging, SendMode, SendParams,
 };
 pub use matcher::{Matcher, MatchSelector};
-pub use state::{RankCtx, Progressable, Status};
+pub use state::{RankCtx, Progressable, RecvProgress, RecvState, SendState, Status};

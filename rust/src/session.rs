@@ -77,20 +77,12 @@ impl Session {
         };
         // FNV-1a over the tag + group members → context id in the
         // session-reserved range (identical on every member).
-        let mut h: u64 = 0xcbf29ce484222325;
-        let mut eat = |b: u8| {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        };
-        for b in stringtag.bytes() {
-            eat(b);
-        }
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.eat_bytes(stringtag.as_bytes());
         for &m in group.members() {
-            for b in (m as u64).to_le_bytes() {
-                eat(b);
-            }
+            h.eat_bytes(&(m as u64).to_le_bytes());
         }
-        let ctx_id = 0x4000_0000u32 | ((h as u32) & 0x3FFF_FFFE);
+        let ctx_id = 0x4000_0000u32 | ((h.finish() as u32) & 0x3FFF_FFFE);
         Ok(Some(Comm::from_parts(
             self.ctx.clone(),
             group.clone(),

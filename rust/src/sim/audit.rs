@@ -1,0 +1,196 @@
+//! Quiescence auditing: turn "should be drained by now" comments into
+//! checked end-of-job invariants.
+//!
+//! A correct MPI program that runs to completion leaves the runtime
+//! *quiescent*: every mailbox empty, the matcher's posted and unexpected
+//! queues drained, no rendezvous transfer half-finished, every request in
+//! a terminal state, the buffered-send pool unreserved, and every wire
+//! buffer handed back to the fabric's pool. Any residue is either a
+//! program bug (a send nobody received, a receive nobody completed) or a
+//! stack bug (a leak on some rarely-taken path) — exactly the class of
+//! defect review passes previously hunted by inspection.
+//!
+//! Two audit points:
+//! * [`audit_rank`] — on each rank's own thread, after its SPMD closure
+//!   returns (the rank-local state dies with the thread, so this is the
+//!   last moment it is visible).
+//! * [`audit_fabric`] — on the launcher thread after every rank joined:
+//!   the fabric-global view (late packets, pool balance).
+//!
+//! [`Universe::run`](crate::Universe::run) invokes both when auditing is
+//! on: explicitly via `.audited(true)`, via `FERROMPI_AUDIT=1`, or by
+//! default whenever the job runs in chaos mode.
+
+use crate::p2p::{engine, RankCtx, RecvProgress, RecvState, SendState};
+use crate::transport::Fabric;
+use std::rc::Rc;
+
+/// Audit one rank's runtime state at the end of its SPMD closure.
+/// Returns human-readable violations (empty = quiescent).
+pub fn audit_rank(ctx: &Rc<RankCtx>) -> Vec<String> {
+    let mut v = Vec::new();
+    // One final progress turn: anything already delivered but not yet
+    // folded into rank state (finished progressables, fresh packets)
+    // becomes visible to the checks below instead of hiding in a queue.
+    if let Err(e) = engine::progress(ctx) {
+        v.push(format!("final progress turn failed: {e}"));
+    }
+    let r = ctx.world_rank;
+    let depth = ctx.fabric.mailbox(r).len();
+    if depth > 0 {
+        v.push(format!("mailbox still holds {depth} undelivered packet(s)"));
+    }
+    {
+        let m = ctx.matcher.borrow();
+        if m.posted_len() > 0 {
+            v.push(format!("{} posted receive(s) never matched", m.posted_len()));
+        }
+        if m.unexpected_len() > 0 {
+            v.push(format!("{} unexpected message(s) never received", m.unexpected_len()));
+        }
+    }
+    for (tok, s) in ctx.sends.borrow().iter() {
+        if !matches!(s, SendState::Done) {
+            v.push(format!("send token {tok} not terminal: {s:?}"));
+        }
+    }
+    for (tok, RecvState { progress, .. }) in ctx.recvs.borrow().iter() {
+        if matches!(progress, RecvProgress::Pending) {
+            v.push(format!("receive token {tok} still pending"));
+        }
+    }
+    let rndv = ctx.pending_rndv.borrow().len();
+    if rndv > 0 {
+        v.push(format!("{rndv} rendezvous transfer(s) matched but undelivered"));
+    }
+    let in_use = ctx.bsend.borrow().in_use;
+    if in_use > 0 {
+        v.push(format!("{in_use} byte(s) still reserved in the bsend pool"));
+    }
+    let live = ctx.progressables.borrow().len();
+    if live > 0 {
+        v.push(format!("{live} composite operation(s) still progressing"));
+    }
+    v
+}
+
+/// Audit the fabric-global view after all ranks joined.
+pub fn audit_fabric(fabric: &Fabric) -> Vec<String> {
+    let mut v = Vec::new();
+    for r in 0..fabric.nranks() {
+        let depth = fabric.mailbox(r).len();
+        if depth > 0 {
+            v.push(format!("rank {r} mailbox holds {depth} packet(s) after job end"));
+        }
+    }
+    let ps = fabric.pool.stats();
+    match ps.outstanding {
+        0 => {}
+        n if n > 0 => v.push(format!(
+            "{n} wire buffer(s) never returned to the pool (allocated={}, recycled={})",
+            ps.allocated, ps.recycled
+        )),
+        n => v.push(format!(
+            "pool balance negative ({n}): a buffer was given back more than once \
+             (allocated={}, recycled={})",
+            ps.allocated, ps.recycled
+        )),
+    }
+    v
+}
+
+/// Format an audit failure: violations, the replay line when the job ran
+/// under chaos, and the merged trace dump.
+pub fn report(rank: Option<usize>, violations: &[String], fabric: &Fabric) -> String {
+    let whose = match rank {
+        Some(r) => format!("rank {r}"),
+        None => "fabric".to_string(),
+    };
+    let mut out = format!("quiescence audit failed ({whose}):\n");
+    for v in violations {
+        out.push_str(&format!("  - {v}\n"));
+    }
+    let trace = fabric.trace_report();
+    if !trace.is_empty() {
+        out.push_str(&trace);
+    }
+    out
+}
+
+/// Panic with the formatted report if the rank is not quiescent.
+pub fn enforce_rank(ctx: &Rc<RankCtx>) {
+    let v = audit_rank(ctx);
+    if !v.is_empty() {
+        panic!("{}", report(Some(ctx.world_rank), &v, &ctx.fabric));
+    }
+}
+
+/// Panic with the formatted report if the fabric is not quiescent.
+pub fn enforce_fabric(fabric: &Fabric) {
+    let v = audit_fabric(fabric);
+    if !v.is_empty() {
+        panic!("{}", report(None, &v, fabric));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{NetworkModel, NodeMap, PoolHandle};
+    use std::sync::Arc;
+
+    fn ctx() -> Rc<RankCtx> {
+        let fabric = Arc::new(Fabric::new(NodeMap::new(1, 2), NetworkModel::zero()));
+        RankCtx::new(0, fabric)
+    }
+
+    #[test]
+    fn fresh_rank_is_quiescent() {
+        let c = ctx();
+        assert!(audit_rank(&c).is_empty());
+        assert!(audit_fabric(&c.fabric).is_empty());
+    }
+
+    #[test]
+    fn leaked_wire_buffer_is_flagged() {
+        let c = ctx();
+        let held = c.fabric.pool.take(64).freeze();
+        let v = audit_fabric(&c.fabric);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("never returned"), "{v:?}");
+        let r = report(None, &v, &c.fabric);
+        assert!(r.contains("quiescence audit failed (fabric)"));
+        drop(held);
+        assert!(audit_fabric(&c.fabric).is_empty());
+    }
+
+    #[test]
+    fn reserved_bsend_bytes_are_flagged() {
+        let c = ctx();
+        c.buffer_attach(1024);
+        c.bsend.borrow_mut().in_use = 100;
+        let v = audit_rank(&c);
+        assert!(v.iter().any(|s| s.contains("bsend")), "{v:?}");
+    }
+
+    #[test]
+    fn unreceived_message_is_flagged_on_the_receiver() {
+        // Rank 1 sends rank 0 an eager message nobody ever receives: after
+        // rank 0's final progress turn it sits in the unexpected queue.
+        let fabric = Arc::new(Fabric::new(NodeMap::new(1, 2), NetworkModel::zero()));
+        let c0 = RankCtx::new(0, fabric.clone());
+        fabric.send(
+            1,
+            0,
+            0.0,
+            crate::transport::PacketKind::Eager {
+                ctx: 0,
+                tag: 7,
+                data: crate::transport::WireBytes::from_vec(vec![1, 2, 3]),
+                sync_token: None,
+            },
+        );
+        let v = audit_rank(&c0);
+        assert!(v.iter().any(|s| s.contains("unexpected")), "{v:?}");
+    }
+}

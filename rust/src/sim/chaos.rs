@@ -1,0 +1,401 @@
+//! Seeded schedule perturbation ("chaos mode").
+//!
+//! The thread-per-rank fabric normally delivers packets in whatever order
+//! the OS scheduler produces — one lucky interleaving per run. Chaos mode
+//! turns owning the network into systematic coverage: a [`ChaosConfig`]
+//! (one `u64` seed) drives bounded perturbations that stay **within legal
+//! MPI semantics**, so any observable difference in program results under
+//! chaos is a bug in the stack, never an artifact of the injector:
+//!
+//! * **Extra delivery latency** — per-packet virtual-time delay added on
+//!   top of the α–β model cost. Legal: MPI makes no timing promises.
+//! * **Cross-sender mailbox reordering** — an arriving packet may be
+//!   inserted ahead of queued packets *from other senders* (never ahead
+//!   of an earlier packet from its own sender, which would break the
+//!   standard's non-overtaking guarantee). See
+//!   [`Mailbox::push_reordered`](crate::transport::Mailbox::push_reordered).
+//! * **Scheduling jitter** — randomized `yield_now` calls in the progress
+//!   loop, shaking up which rank the OS runs next.
+//! * **Eager-limit randomization** — each job picks its eager/rendezvous
+//!   threshold from a seed-derived sweep (0, 1, boundary, huge), so the
+//!   same program exercises both protocols and their crossover.
+//! * **Pool pressure** — the fabric's [`BufferPool`] shelves are shrunk
+//!   so the no-fit / fresh-allocation / drop-instead-of-shelve paths run
+//!   constantly instead of only in the first iterations.
+//!
+//! Activation: [`Universe`](crate::Universe) builders
+//! (`.with_chaos`/`.chaotic(seed)`), the `FERROMPI_CHAOS_SEED` environment
+//! variable, or the `chaos_*` cvar group (a cvar write wins over the
+//! environment, mirroring `netmodel_eager_threshold`). Perturbation draws
+//! come from one seeded [`Rng`] stream **per rank** (split off the seed),
+//! so each rank's decision sequence is a pure function of (chaos seed,
+//! rank) — replaying a (chaos seed, program seed) pair reproduces the
+//! same per-rank schedule pressure; the failure report of the
+//! differential harness prints both.
+//!
+//! [`BufferPool`]: crate::transport::BufferPool
+
+use crate::util::rng::{parse_seed, Rng};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shelf limits used for the pool-pressure mode (compare the defaults of
+/// 64 buffers / 4 MiB): at most two idle buffers, nothing above 2 KiB.
+pub const PRESSURE_POOL_BUFFERS: usize = 2;
+pub const PRESSURE_POOL_CAPACITY: usize = 2048;
+
+/// The seeded perturbation plan of one job. Plain data (`Copy`) so it
+/// rides inside [`crate::Universe`]; the runtime state (RNG stream,
+/// perturbation counters) lives in [`ChaosState`] on the fabric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    /// The seed everything below was derived from (printed by failure
+    /// reports; replay with `FERROMPI_CHAOS_SEED=<seed>`).
+    pub seed: u64,
+    /// Upper bound of the per-packet extra delivery latency (uniform in
+    /// `[0, max_delay_ns)`; 0 disables the perturbation).
+    pub max_delay_ns: f64,
+    /// Probability that an arriving packet is inserted at a random legal
+    /// mailbox position instead of the tail.
+    pub reorder_prob: f64,
+    /// Probability of a `yield_now` per progress-loop turn.
+    pub yield_prob: f64,
+    /// Randomize the job's eager/rendezvous threshold from the seed.
+    pub eager_sweep: bool,
+    /// Run the job on a shrunken buffer pool (see `PRESSURE_POOL_*`).
+    pub pool_pressure: bool,
+}
+
+impl ChaosConfig {
+    /// Derive a full perturbation plan from one seed: intensities are
+    /// picked from the seed so a seed matrix sweeps the perturbation
+    /// space, not just the RNG stream. Any cvar-written intensity
+    /// overrides the derived one.
+    pub fn from_seed(seed: u64) -> ChaosConfig {
+        let mut r = Rng::new(seed ^ 0xC4A0_5EED);
+        let cfg = ChaosConfig {
+            seed,
+            max_delay_ns: *r.choose(&[0.0, 500.0, 5_000.0, 50_000.0]),
+            reorder_prob: 0.25 + 0.5 * r.f64(),
+            yield_prob: 0.02 + 0.12 * r.f64(),
+            eager_sweep: true,
+            pool_pressure: r.bool(),
+        };
+        apply_overrides(cfg)
+    }
+
+    /// The chaos plan the environment asks for, if any: a written
+    /// `chaos_seed` cvar wins (0 = explicitly off), then the
+    /// `FERROMPI_CHAOS_SEED` environment variable (0 = off). `None` means
+    /// a faithful, unperturbed fabric.
+    ///
+    /// Environment-sourced chaos is **schedule-only**: delivery delays,
+    /// reordering and yield jitter, but no eager-limit randomization and
+    /// no pool pressure. A process-wide soak runs over tests that
+    /// legitimately pin the eager threshold (`Universe::with_model`) or
+    /// assert pool telemetry; flipping those knobs under them would turn
+    /// the soak's "any failure is a stack bug" contract into false
+    /// positives. The protocol and pool axes are exercised where they
+    /// are sound — by the differential harness's explicit
+    /// [`from_seed`](ChaosConfig::from_seed) configs.
+    pub fn from_env() -> Option<ChaosConfig> {
+        let cvar = read_cvar_seed();
+        let env = std::env::var("FERROMPI_CHAOS_SEED").ok();
+        resolve_seed(cvar, env.as_deref()).map(|s| {
+            let mut cfg = ChaosConfig::from_seed(s);
+            cfg.eager_sweep = false;
+            cfg.pool_pressure = false;
+            cfg
+        })
+    }
+
+    /// The eager/rendezvous threshold this job runs with: a seed-derived
+    /// pick from a sweep that brackets the protocol knee (everything
+    /// rendezvous, everything eager, and the boundary), or the model
+    /// default. Results must be byte-identical across all of them.
+    pub fn pick_eager_threshold(&self, model_default: usize) -> usize {
+        if !self.eager_sweep {
+            return model_default;
+        }
+        let mut r = Rng::new(self.seed ^ 0xEA6E_4113);
+        *r.choose(&[0, 1, 64, 4096, model_default.saturating_sub(1), model_default, 1 << 22])
+    }
+}
+
+/// Pure seed resolution (unit-tested without touching process state):
+/// cvar write > environment > off. A value of 0 on either source means
+/// "explicitly disabled" and stops the search.
+fn resolve_seed(cvar: Option<u64>, env: Option<&str>) -> Option<u64> {
+    match cvar {
+        Some(0) => None,
+        Some(s) => Some(s),
+        None => env.and_then(parse_seed).filter(|&s| s != 0),
+    }
+}
+
+// ---- cvar cells (`chaos_*` group, see `crate::tool::cvar`) ----
+
+const UNSET: u64 = u64::MAX;
+
+static SEED_CVAR: AtomicU64 = AtomicU64::new(UNSET);
+static DELAY_CVAR: AtomicU64 = AtomicU64::new(UNSET);
+/// Probabilities are stored as permille (0..=1000) to stay in atomics.
+static REORDER_CVAR: AtomicU64 = AtomicU64::new(UNSET);
+static YIELD_CVAR: AtomicU64 = AtomicU64::new(UNSET);
+
+fn read_cvar_seed() -> Option<u64> {
+    match SEED_CVAR.load(Ordering::Relaxed) {
+        UNSET => None,
+        v => Some(v),
+    }
+}
+
+/// Serializes unit tests that mutate the process-global chaos cvars
+/// (this module's and the tool layer's) under the parallel test runner.
+#[cfg(test)]
+pub(crate) static CVAR_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Per-packet delay bound ceiling (1000 s): keeps a fat-fingered cvar
+/// write from wedging jobs into the deadlock watchdog, and keeps the
+/// `UNSET` sentinel unreachable through the write path.
+const MAX_DELAY_NS: u64 = 1_000_000_000_000;
+
+/// `chaos_seed` cvar write (u64; 0 disables chaos even if the env asks).
+/// `u64::MAX` is the internal "unset" sentinel and clamps to `MAX - 1`
+/// so an explicit write can never be silently read back as unset.
+pub fn write_seed_cvar(v: u64) {
+    SEED_CVAR.store(v.min(UNSET - 1), Ordering::Relaxed);
+}
+
+/// Reset `chaos_seed` to unset (defer to the environment again).
+pub fn reset_seed_cvar() {
+    SEED_CVAR.store(UNSET, Ordering::Relaxed);
+}
+
+/// `chaos_delay_ns` cvar write: fixes the per-packet delay bound.
+pub fn write_delay_cvar(ns: u64) {
+    DELAY_CVAR.store(ns.min(MAX_DELAY_NS), Ordering::Relaxed);
+}
+
+/// `chaos_reorder_permille` cvar write (clamped to 1000).
+pub fn write_reorder_cvar(permille: u64) {
+    REORDER_CVAR.store(permille.min(1000), Ordering::Relaxed);
+}
+
+/// `chaos_yield_permille` cvar write (clamped to 1000).
+pub fn write_yield_cvar(permille: u64) {
+    YIELD_CVAR.store(permille.min(1000), Ordering::Relaxed);
+}
+
+/// Reset one intensity override back to "derived from the seed" — the
+/// `auto` spelling of the `chaos_delay_ns` / `chaos_*_permille` cvars.
+pub fn reset_delay_cvar() {
+    DELAY_CVAR.store(UNSET, Ordering::Relaxed);
+}
+
+pub fn reset_reorder_cvar() {
+    REORDER_CVAR.store(UNSET, Ordering::Relaxed);
+}
+
+pub fn reset_yield_cvar() {
+    YIELD_CVAR.store(UNSET, Ordering::Relaxed);
+}
+
+/// Raw intensity-override reads for the cvar layer (`None` = auto). The
+/// cvar read surfaces a latched override even while chaos is inactive,
+/// so writes always round-trip instead of silently waiting for the next
+/// seed.
+pub fn delay_override() -> Option<u64> {
+    match DELAY_CVAR.load(Ordering::Relaxed) {
+        UNSET => None,
+        v => Some(v),
+    }
+}
+
+pub fn reorder_override() -> Option<u64> {
+    match REORDER_CVAR.load(Ordering::Relaxed) {
+        UNSET => None,
+        v => Some(v),
+    }
+}
+
+pub fn yield_override() -> Option<u64> {
+    match YIELD_CVAR.load(Ordering::Relaxed) {
+        UNSET => None,
+        v => Some(v),
+    }
+}
+
+/// Current resolved seed for `chaos_seed` reads (0 = chaos off).
+pub fn effective_seed() -> u64 {
+    ChaosConfig::from_env().map(|c| c.seed).unwrap_or(0)
+}
+
+fn apply_overrides(mut cfg: ChaosConfig) -> ChaosConfig {
+    match DELAY_CVAR.load(Ordering::Relaxed) {
+        UNSET => {}
+        ns => cfg.max_delay_ns = ns as f64,
+    }
+    match REORDER_CVAR.load(Ordering::Relaxed) {
+        UNSET => {}
+        pm => cfg.reorder_prob = pm as f64 / 1000.0,
+    }
+    match YIELD_CVAR.load(Ordering::Relaxed) {
+        UNSET => {}
+        pm => cfg.yield_prob = pm as f64 / 1000.0,
+    }
+    cfg
+}
+
+/// Runtime side of a fabric's chaos mode: one perturbation RNG stream
+/// **per rank** ([`Rng::split`] off the seed, indexed by the acting
+/// rank), plus counters proving the perturbations actually fired
+/// (exported as the `chaos_*` pvars).
+///
+/// Per-rank streams make each rank's *own* decision sequence a pure
+/// function of (seed, rank, its n-th action) — so replaying a seed
+/// reproduces the same per-rank schedule pressure regardless of how the
+/// OS interleaves the other ranks. (Cross-rank interleaving itself is
+/// still OS-dependent; the invariants the harness checks must hold
+/// under every legal schedule, see `docs/TESTING.md`.)
+#[derive(Debug)]
+pub struct ChaosState {
+    pub cfg: ChaosConfig,
+    rngs: Vec<Mutex<Rng>>,
+    pub delays: AtomicU64,
+    pub reorders: AtomicU64,
+    pub yields: AtomicU64,
+}
+
+impl ChaosState {
+    pub fn new(cfg: ChaosConfig, nranks: usize) -> ChaosState {
+        let mut master = Rng::new(cfg.seed);
+        ChaosState {
+            cfg,
+            rngs: (0..nranks).map(|_| Mutex::new(master.split())).collect(),
+            delays: AtomicU64::new(0),
+            reorders: AtomicU64::new(0),
+            yields: AtomicU64::new(0),
+        }
+    }
+
+    /// Run a closure with `rank`'s perturbation stream (uncontended: a
+    /// rank only ever draws from its own).
+    pub fn with_rng<T>(&self, rank: usize, f: impl FnOnce(&mut Rng) -> T) -> T {
+        f(&mut self.rngs[rank].lock().unwrap())
+    }
+
+    /// Extra delivery latency for `rank`'s next packet (counts when
+    /// nonzero).
+    pub fn extra_delay_ns(&self, rank: usize) -> f64 {
+        if self.cfg.max_delay_ns <= 0.0 {
+            return 0.0;
+        }
+        let d = self.with_rng(rank, |r| r.f64()) * self.cfg.max_delay_ns;
+        if d > 0.0 {
+            self.delays.fetch_add(1, Ordering::Relaxed);
+        }
+        d
+    }
+
+    /// Should `rank`'s next packet take a random legal mailbox slot?
+    pub fn roll_reorder(&self, rank: usize) -> bool {
+        self.cfg.reorder_prob > 0.0 && self.with_rng(rank, |r| r.f64()) < self.cfg.reorder_prob
+    }
+
+    /// One progress-loop turn on `rank`: maybe yield its thread. Returns
+    /// whether a yield happened (for tests).
+    pub fn maybe_yield(&self, rank: usize) -> bool {
+        if self.cfg.yield_prob > 0.0 && self.with_rng(rank, |r| r.f64()) < self.cfg.yield_prob {
+            self.yields.fetch_add(1, Ordering::Relaxed);
+            std::thread::yield_now();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_resolution_precedence() {
+        // cvar write wins; 0 disables at either level.
+        assert_eq!(resolve_seed(Some(7), Some("9")), Some(7));
+        assert_eq!(resolve_seed(Some(0), Some("9")), None);
+        assert_eq!(resolve_seed(None, Some("9")), Some(9));
+        assert_eq!(resolve_seed(None, Some("0x10")), Some(16));
+        assert_eq!(resolve_seed(None, Some("0")), None);
+        assert_eq!(resolve_seed(None, Some("wat")), None);
+        assert_eq!(resolve_seed(None, None), None);
+    }
+
+    #[test]
+    fn config_is_deterministic_per_seed() {
+        // Compare only the fields the cvar overrides can't touch: another
+        // test in this binary may legitimately write `chaos_*` cvars
+        // while this one runs.
+        let (a, b) = (ChaosConfig::from_seed(42), ChaosConfig::from_seed(42));
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.pool_pressure, b.pool_pressure);
+        assert_eq!(a.eager_sweep, b.eager_sweep);
+        let c = ChaosConfig::from_seed(5);
+        assert_eq!(c.pick_eager_threshold(65536), c.pick_eager_threshold(65536));
+    }
+
+    #[test]
+    fn env_sourced_chaos_is_schedule_only() {
+        let _g = CVAR_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // A process-wide soak must not flip knobs that tests legitimately
+        // pin (eager thresholds, pool telemetry); explicit from_seed
+        // configs keep all axes.
+        write_seed_cvar(123);
+        let cfg = ChaosConfig::from_env().expect("cvar seed set");
+        reset_seed_cvar();
+        assert_eq!(cfg.seed, 123);
+        assert!(!cfg.eager_sweep);
+        assert!(!cfg.pool_pressure);
+        assert_eq!(cfg.pick_eager_threshold(65536), 65536);
+    }
+
+    #[test]
+    fn probabilities_stay_in_range_across_seeds() {
+        for seed in 0..64 {
+            let c = ChaosConfig::from_seed(seed);
+            assert!((0.0..=1.0).contains(&c.reorder_prob), "{c:?}");
+            assert!((0.0..=1.0).contains(&c.yield_prob), "{c:?}");
+            assert!(c.max_delay_ns >= 0.0);
+        }
+    }
+
+    #[test]
+    fn state_counts_perturbations() {
+        let mut cfg = ChaosConfig::from_seed(3);
+        cfg.max_delay_ns = 1000.0;
+        cfg.reorder_prob = 1.0;
+        cfg.yield_prob = 1.0;
+        let st = ChaosState::new(cfg, 2);
+        let d = st.extra_delay_ns(0);
+        assert!((0.0..1000.0).contains(&d));
+        assert!(st.roll_reorder(1));
+        assert!(st.maybe_yield(0));
+        assert_eq!(st.yields.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn per_rank_streams_are_deterministic_and_independent() {
+        let cfg = ChaosConfig::from_seed(9);
+        let a = ChaosState::new(cfg, 3);
+        let b = ChaosState::new(cfg, 3);
+        // Same seed → same per-rank decision sequences, regardless of
+        // what the *other* ranks drew in the meantime.
+        a.with_rng(2, |r| r.next_u64()); // unrelated rank draws first on `a` only
+        for _ in 0..16 {
+            let x = a.with_rng(1, |r| r.next_u64());
+            let y = b.with_rng(1, |r| r.next_u64());
+            assert_eq!(x, y);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! The deterministic chaos harness: seeded schedule perturbation,
+//! quiescence auditing, event tracing and randomized differential
+//! testing.
+//!
+//! The simulator owns its network — so instead of hoping the OS scheduler
+//! happens to produce an adversarial interleaving, this subsystem
+//! *manufactures* them, reproducibly:
+//!
+//! * [`chaos`] — [`ChaosConfig`](chaos::ChaosConfig): seeded, bounded
+//!   perturbations that stay within legal MPI semantics (delivery delay,
+//!   cross-sender reordering, yield jitter, eager-limit randomization,
+//!   buffer-pool pressure). Plumbed from [`crate::Universe`] into the
+//!   [`Fabric`](crate::transport::Fabric).
+//! * [`audit`] — end-of-job quiescence invariants: queues drained,
+//!   requests terminal, wire buffers returned. "Leaks rather than
+//!   recycles" edge cases stop being trusted comments and become checks.
+//! * [`trace`] — bounded per-rank event rings merged into the failure
+//!   report, so any red run is replayable from its output.
+//! * [`proggen`] — random communication programs
+//!   ([`Program`](proggen::Program)) executed differentially: unperturbed
+//!   baseline vs. a chaos-seed matrix, asserting byte-identical per-rank
+//!   results and clean audits everywhere.
+
+pub mod audit;
+pub mod chaos;
+pub mod proggen;
+pub mod trace;
+
+pub use chaos::ChaosConfig;
+pub use proggen::Program;

@@ -1,0 +1,821 @@
+//! Random communication-program generation and the differential harness.
+//!
+//! A [`Program`] is a seeded recipe for an SPMD communication DAG: phases
+//! of immediate/blocking/persistent point-to-point traffic (with optional
+//! `ANY_SOURCE`/`ANY_TAG` receives), collectives over the world or split
+//! subcommunicators, and modern-layer future chains. Every payload and
+//! reduction operand is derived from the program seed, so each rank can
+//! verify everything it receives against a locally computed oracle — a
+//! mismatch panics with the phase, rank and seed that reproduce it.
+//!
+//! The **differential harness** ([`run_differential`] /
+//! [`assert_differential`]) executes one program first on a faithful
+//! fabric and then under a matrix of chaos seeds
+//! ([`ChaosConfig`](crate::sim::chaos::ChaosConfig)), asserting the
+//! per-rank result digests are byte-identical and every run passes its
+//! quiescence audit. Because chaos perturbations stay within legal MPI
+//! semantics, *any* divergence is a stack bug; the failure report prints
+//! the chaos seed, the full program recipe and the merged event trace —
+//! everything needed to replay the run.
+//!
+//! Determinism notes: programs are written so their results do not depend
+//! on the schedule. Wildcard receives are only generated where MPI itself
+//! guarantees a deterministic outcome *as a multiset* — the harness
+//! canonicalizes the received (source, tag, payload) records by sorting
+//! before digesting, and `ANY_TAG` phases are followed by a barrier so a
+//! faster rank's next-phase traffic cannot race into an open wildcard.
+
+use super::chaos::ChaosConfig;
+use crate::collective;
+use crate::comm::{Comm, ANY_SOURCE, ANY_TAG};
+use crate::datatype::{Datatype, Primitive};
+use crate::op::Op;
+use crate::request::{wait_all, Request};
+use crate::universe::Universe;
+use crate::util::hash::fnv1a;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// One point-to-point transfer of a phase. Ranks and tags are in
+/// world-communicator terms; `tag` is an offset onto the phase's tag base.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: usize,
+    pub dst: usize,
+    pub tag: i32,
+    pub len: usize,
+}
+
+/// Collectives the generator draws from (all exact in integer arithmetic,
+/// so results are schedule- and algorithm-independent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollOp {
+    Bcast,
+    Allreduce,
+    Reduce,
+    Allgather,
+    Alltoall,
+    Scan,
+}
+
+/// One phase of a program. Every message sent in a phase is received in
+/// the same phase, and each rank completes all its phase operations
+/// before moving on — the structural property that keeps wildcard
+/// matching confined (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Phase {
+    /// `MPI_Barrier` over the world.
+    Barrier,
+    /// Nonblocking transfers: every receiver posts its `irecv`s, then its
+    /// `isend`s, then waits for everything. With `wildcard_src` /
+    /// `wildcard_tag` the receives use `ANY_SOURCE` / `ANY_TAG` and the
+    /// received records are canonicalized by sorting.
+    Immediate { transfers: Vec<Transfer>, wildcard_src: bool, wildcard_tag: bool },
+    /// Disjoint blocking `send`/`recv` pairs (each rank plays at most one
+    /// role, so blocking rendezvous cannot deadlock).
+    BlockingPairs { transfers: Vec<Transfer> },
+    /// Blocking `sendrecv` around the world ring.
+    Ring { len: usize },
+    /// Persistent send/recv templates around the ring, restarted
+    /// `rounds` times with refilled buffers.
+    Persistent { len: usize, rounds: usize },
+    /// A collective, over the world or (when `split`) a parity-split
+    /// subcommunicator created and dropped inside the phase.
+    Collective { op: CollOp, split: bool, len: usize, count: usize },
+    /// Modern-layer futures: `immediate_all_reduce` with a `.map` chain.
+    ModernAllReduce,
+}
+
+/// A generated SPMD program: the recipe the differential harness replays.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub seed: u64,
+    pub nranks: usize,
+    pub phases: Vec<Phase>,
+}
+
+/// Message sizes the generator mixes: eager, around the default
+/// eager/rendezvous boundary, and firmly rendezvous.
+const LENS: &[usize] = &[1, 3, 64, 1024, 65_535, 65_536, 65_537, 100_000];
+
+fn pick_len(r: &mut Rng) -> usize {
+    *r.choose(LENS)
+}
+
+impl Program {
+    /// Generate a random program for `nranks` ranks (≥ 2) from a seed.
+    pub fn generate(seed: u64, nranks: usize) -> Program {
+        assert!(nranks >= 2, "programs need at least two ranks");
+        let mut r = Rng::new(seed);
+        let target = r.range(5, 10);
+        let mut phases = Vec::new();
+        while phases.len() < target {
+            match r.range(0, 12) {
+                0..=2 => phases.push(gen_immediate(&mut r, nranks, false, false)),
+                3 => phases.push(gen_immediate(&mut r, nranks, true, false)),
+                4 => {
+                    let wsrc = r.bool();
+                    phases.push(gen_immediate(&mut r, nranks, wsrc, true));
+                    // ANY_TAG must not stay open into the next phase.
+                    phases.push(Phase::Barrier);
+                }
+                5 => phases.push(gen_pairs(&mut r, nranks)),
+                6 => phases.push(Phase::Ring { len: pick_len(&mut r) }),
+                7 => phases.push(Phase::Persistent {
+                    len: pick_len(&mut r),
+                    rounds: r.range(2, 5),
+                }),
+                8..=10 => {
+                    let op = *r.choose(&[
+                        CollOp::Bcast,
+                        CollOp::Allreduce,
+                        CollOp::Reduce,
+                        CollOp::Allgather,
+                        CollOp::Alltoall,
+                        CollOp::Scan,
+                    ]);
+                    phases.push(Phase::Collective {
+                        op,
+                        split: r.bool(),
+                        len: pick_len(&mut r).min(4096),
+                        count: r.range(1, 8),
+                    });
+                }
+                _ => phases.push(Phase::ModernAllReduce),
+            }
+        }
+        Program { seed, nranks, phases }
+    }
+
+    /// A handcrafted program touching every feature class the acceptance
+    /// matrix requires — blocking, immediate and persistent p2p, wildcard
+    /// source and tag receives, world and split collectives, and the
+    /// modern futures layer — so coverage never depends on generator luck.
+    pub fn showcase(nranks: usize) -> Program {
+        assert!(nranks >= 2);
+        let pair = |src: usize, dst: usize, tag: i32, len: usize| Transfer { src, dst, tag, len };
+        let all_to_zero: Vec<Transfer> =
+            (1..nranks).map(|s| pair(s, 0, (s % 3) as i32, LENS[s % LENS.len()])).collect();
+        let mut ring_shift: Vec<Transfer> =
+            (0..nranks).map(|s| pair(s, (s + 1) % nranks, 0, 1024)).collect();
+        // Two same-(src,dst,tag) messages of different sizes: exercises
+        // the non-overtaking guarantee under reordering.
+        ring_shift.push(pair(0, 1, 0, 65_537));
+        Program {
+            seed: 0x5404_CA5E,
+            nranks,
+            phases: vec![
+                Phase::Immediate {
+                    transfers: ring_shift,
+                    wildcard_src: false,
+                    wildcard_tag: false,
+                },
+                Phase::Immediate {
+                    transfers: all_to_zero.clone(),
+                    wildcard_src: true,
+                    wildcard_tag: false,
+                },
+                Phase::Immediate { transfers: all_to_zero, wildcard_src: true, wildcard_tag: true },
+                Phase::Barrier,
+                Phase::BlockingPairs {
+                    transfers: (0..nranks / 2)
+                        .map(|i| pair(2 * i, 2 * i + 1, 1, 70_000))
+                        .collect(),
+                },
+                Phase::Ring { len: 4096 },
+                Phase::Persistent { len: 512, rounds: 3 },
+                Phase::Collective { op: CollOp::Allreduce, split: false, len: 0, count: 5 },
+                Phase::Collective { op: CollOp::Bcast, split: true, len: 2048, count: 1 },
+                Phase::Collective { op: CollOp::Alltoall, split: false, len: 256, count: 1 },
+                Phase::Collective { op: CollOp::Scan, split: false, len: 0, count: 3 },
+                Phase::ModernAllReduce,
+            ],
+        }
+    }
+
+    /// The human-readable recipe printed by every failure report —
+    /// sufficient, with the chaos seed, to replay the run.
+    pub fn recipe(&self) -> String {
+        let mut s = format!(
+            "program seed {:#x} · {} ranks · {} phases\n",
+            self.seed,
+            self.nranks,
+            self.phases.len()
+        );
+        for (i, p) in self.phases.iter().enumerate() {
+            s.push_str(&format!("  [{i:>2}] {p:?}\n"));
+        }
+        s
+    }
+
+    /// Execute on a universe; returns per-rank result digests.
+    pub fn run(&self, u: &Universe) -> Vec<Vec<u64>> {
+        assert_eq!(u.nranks(), self.nranks, "universe shape must match the program");
+        u.run(|comm| exec(self, comm))
+    }
+
+    /// Like [`Program::run`], but keeps the fabric for trace extraction.
+    pub fn run_with_fabric(&self, u: &Universe) -> (Vec<Vec<u64>>, Arc<crate::transport::Fabric>) {
+        assert_eq!(u.nranks(), self.nranks, "universe shape must match the program");
+        u.run_with_stats(|comm| exec(self, comm))
+    }
+}
+
+// ---------------- derived data ----------------
+
+/// Mix a seed with context indices into a child seed.
+fn derive(seed: u64, mix: &[u64]) -> u64 {
+    let mut h = seed ^ 0x0100_0193_8465_72D1;
+    for &m in mix {
+        h = (h ^ m.wrapping_add(0x9E37_79B9_7F4A_7C15))
+            .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= h >> 29;
+    }
+    h
+}
+
+/// Deterministic payload bytes for (program, context) — the sender fills
+/// with this, the receiver verifies against it.
+fn pbytes(seed: u64, mix: &[u64], len: usize) -> Vec<u8> {
+    let mut v = vec![0u8; len];
+    Rng::new(derive(seed, mix)).fill_bytes(&mut v);
+    v
+}
+
+/// Deterministic i64 reduction operand in [-1000, 1000].
+fn cval(seed: u64, mix: &[u64]) -> i64 {
+    Rng::new(derive(seed, mix)).below(2001) as i64 - 1000
+}
+
+fn i64s_to_bytes(v: &[i64]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_i64s(b: &[u8]) -> Vec<i64> {
+    b.chunks(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Tag base of a phase: phase-unique so a specific-tag receive can never
+/// match another phase's traffic.
+fn tag_base(pi: usize) -> i32 {
+    8 + (pi as i32) * 8
+}
+
+// ---------------- generation helpers ----------------
+
+fn gen_immediate(r: &mut Rng, nranks: usize, wildcard_src: bool, wildcard_tag: bool) -> Phase {
+    let k = r.range(1, 1 + 2 * nranks);
+    let transfers = (0..k)
+        .map(|_| {
+            let src = r.range(0, nranks);
+            let dst = (src + r.range(1, nranks)) % nranks;
+            Transfer { src, dst, tag: r.range(0, 4) as i32, len: pick_len(r) }
+        })
+        .collect();
+    Phase::Immediate { transfers, wildcard_src, wildcard_tag }
+}
+
+fn gen_pairs(r: &mut Rng, nranks: usize) -> Phase {
+    let mut order: Vec<usize> = (0..nranks).collect();
+    r.shuffle(&mut order);
+    let transfers = order
+        .chunks_exact(2)
+        .map(|c| Transfer { src: c[0], dst: c[1], tag: r.range(0, 4) as i32, len: pick_len(r) })
+        .collect();
+    Phase::BlockingPairs { transfers }
+}
+
+// ---------------- execution ----------------
+
+/// Run the program on this rank; the returned digest is what the
+/// differential harness compares across runs.
+fn exec(p: &Program, comm: &Comm) -> Vec<u64> {
+    let me = comm.rank();
+    let seed = p.seed;
+    let byte = Datatype::primitive(Primitive::Byte);
+    let i64t = Datatype::primitive(Primitive::I64);
+    let mut digest: Vec<u64> = Vec::new();
+    for (pi, phase) in p.phases.iter().enumerate() {
+        match phase {
+            Phase::Barrier => {
+                collective::barrier(comm).unwrap_or_else(|e| panic!("phase {pi} barrier: {e}"));
+            }
+            Phase::Immediate { transfers, wildcard_src, wildcard_tag } => {
+                exec_immediate(
+                    comm, seed, pi, transfers, *wildcard_src, *wildcard_tag, &byte, &mut digest,
+                );
+            }
+            Phase::BlockingPairs { transfers } => {
+                let base = tag_base(pi);
+                for (ti, t) in transfers.iter().enumerate() {
+                    if t.src == me {
+                        let payload = pbytes(seed, &[pi as u64, ti as u64], t.len);
+                        comm.send(&payload, t.len, &byte, t.dst as i32, base + t.tag)
+                            .unwrap_or_else(|e| panic!("phase {pi} blocking send: {e}"));
+                    } else if t.dst == me {
+                        let mut buf = vec![0u8; t.len];
+                        let st = comm
+                            .recv(&mut buf, t.len, &byte, t.src as i32, base + t.tag)
+                            .unwrap_or_else(|e| panic!("phase {pi} blocking recv: {e}"));
+                        let want = pbytes(seed, &[pi as u64, ti as u64], t.len);
+                        assert!(
+                            st.bytes == t.len && buf == want,
+                            "phase {pi} rank {me}: blocking pair payload corrupt (seed {seed:#x})"
+                        );
+                        digest.push(fnv1a(&buf));
+                    }
+                }
+            }
+            Phase::Ring { len } => {
+                let pn = comm.size();
+                let right = ((me + 1) % pn) as i32;
+                let left = (me + pn - 1) % pn;
+                let payload = pbytes(seed, &[pi as u64, me as u64], *len);
+                let mut buf = vec![0u8; *len];
+                let st = comm
+                    .sendrecv(
+                        &payload,
+                        *len,
+                        &byte,
+                        right,
+                        tag_base(pi),
+                        &mut buf,
+                        *len,
+                        &byte,
+                        left as i32,
+                        tag_base(pi),
+                    )
+                    .unwrap_or_else(|e| panic!("phase {pi} sendrecv: {e}"));
+                let want = pbytes(seed, &[pi as u64, left as u64], *len);
+                assert!(
+                    st.bytes == *len && buf == want,
+                    "phase {pi} rank {me}: ring payload corrupt (seed {seed:#x})"
+                );
+                digest.push(fnv1a(&buf));
+            }
+            Phase::Persistent { len, rounds } => {
+                let pn = comm.size();
+                let right = ((me + 1) % pn) as i32;
+                let left = (me + pn - 1) % pn;
+                let tag = tag_base(pi);
+                let mut sbuf = vec![0u8; *len];
+                let mut rbuf = vec![0u8; *len];
+                let stpl = comm
+                    .send_init(&sbuf, *len, &byte, right, tag)
+                    .unwrap_or_else(|e| panic!("phase {pi} send_init: {e}"));
+                let rtpl = comm
+                    .recv_init(&mut rbuf, *len, &byte, left as i32, tag)
+                    .unwrap_or_else(|e| panic!("phase {pi} recv_init: {e}"));
+                for round in 0..*rounds {
+                    let fill = pbytes(seed, &[pi as u64, me as u64, round as u64], *len);
+                    sbuf.copy_from_slice(&fill);
+                    rtpl.start().unwrap_or_else(|e| panic!("phase {pi} recv start: {e}"));
+                    stpl.start().unwrap_or_else(|e| panic!("phase {pi} send start: {e}"));
+                    let st = rtpl.wait().unwrap_or_else(|e| panic!("phase {pi} recv wait: {e}"));
+                    stpl.wait().unwrap_or_else(|e| panic!("phase {pi} send wait: {e}"));
+                    let want = pbytes(seed, &[pi as u64, left as u64, round as u64], *len);
+                    assert!(
+                        st.bytes == *len && rbuf == want,
+                        "phase {pi} rank {me} round {round}: persistent payload corrupt \
+                         (seed {seed:#x})"
+                    );
+                    digest.push(fnv1a(&rbuf));
+                }
+            }
+            Phase::Collective { op, split, len, count } => {
+                let sub = if *split {
+                    Some(
+                        comm.split((me % 2) as i32, me as i32)
+                            .unwrap_or_else(|e| panic!("phase {pi} split: {e}"))
+                            .expect("non-negative color yields a communicator"),
+                    )
+                } else {
+                    None
+                };
+                let c = sub.as_ref().unwrap_or(comm);
+                exec_collective(c, seed, pi, *op, *len, *count, &byte, &i64t, &mut digest);
+            }
+            Phase::ModernAllReduce => {
+                let m = crate::modern::Communicator::world(comm);
+                let wr = comm.rank_ctx().world_rank as u64;
+                let mine = cval(seed, &[pi as u64, wr]);
+                let fut = m.immediate_all_reduce::<i64>(mine, crate::modern::ReduceOp::Sum);
+                let doubled = fut.map(|r| r.map(|x| x * 2));
+                let got =
+                    doubled.get().unwrap_or_else(|e| panic!("phase {pi} modern allreduce: {e}"));
+                let want: i64 =
+                    2 * (0..p.nranks).map(|r| cval(seed, &[pi as u64, r as u64])).sum::<i64>();
+                assert_eq!(
+                    got, want,
+                    "phase {pi} rank {me}: modern allreduce mismatch (seed {seed:#x})"
+                );
+                digest.push(got as u64);
+            }
+        }
+        digest.push(0xFACE_0000 ^ pi as u64); // phase separator
+    }
+    digest
+}
+
+#[allow(clippy::too_many_arguments)]
+fn exec_immediate(
+    comm: &Comm,
+    seed: u64,
+    pi: usize,
+    transfers: &[Transfer],
+    wildcard_src: bool,
+    wildcard_tag: bool,
+    byte: &Datatype,
+    digest: &mut Vec<u64>,
+) {
+    let me = comm.rank();
+    let base = tag_base(pi);
+    let wildcard = wildcard_src || wildcard_tag;
+    let expected: Vec<(usize, Transfer)> = transfers
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.dst == me)
+        .map(|(ti, t)| (ti, *t))
+        .collect();
+    let max_len = expected.iter().map(|(_, t)| t.len).max().unwrap_or(0);
+    let mut rbufs: Vec<Vec<u8>> = expected
+        .iter()
+        .map(|(_, t)| vec![0u8; if wildcard { max_len } else { t.len }])
+        .collect();
+    let mut reqs: Vec<Request> = Vec::with_capacity(expected.len() + transfers.len());
+    for (i, (_, t)) in expected.iter().enumerate() {
+        let src = if wildcard_src { ANY_SOURCE } else { t.src as i32 };
+        let tag = if wildcard_tag { ANY_TAG } else { base + t.tag };
+        let count = rbufs[i].len();
+        let buf: &mut [u8] = &mut rbufs[i];
+        reqs.push(
+            comm.irecv(buf, count, byte, src, tag)
+                .unwrap_or_else(|e| panic!("phase {pi} irecv: {e}")),
+        );
+    }
+    let nrecv = reqs.len();
+    for (ti, t) in transfers.iter().enumerate() {
+        if t.src == me {
+            let payload = pbytes(seed, &[pi as u64, ti as u64], t.len);
+            reqs.push(
+                comm.isend(&payload, t.len, byte, t.dst as i32, base + t.tag)
+                    .unwrap_or_else(|e| panic!("phase {pi} isend: {e}")),
+            );
+        }
+    }
+    let stats = wait_all(&reqs).unwrap_or_else(|e| panic!("phase {pi} waitall: {e}"));
+    if wildcard {
+        // Canonicalize: the multiset of received (source, tag, payload)
+        // records is schedule-independent even though their assignment to
+        // individual receives is not.
+        let mut got: Vec<(i32, i32, usize, u64)> = (0..nrecv)
+            .map(|i| {
+                let st = &stats[i];
+                (st.source, st.tag, st.bytes, fnv1a(&rbufs[i][..st.bytes]))
+            })
+            .collect();
+        let mut want: Vec<(i32, i32, usize, u64)> = expected
+            .iter()
+            .map(|(ti, t)| {
+                (
+                    t.src as i32,
+                    base + t.tag,
+                    t.len,
+                    fnv1a(&pbytes(seed, &[pi as u64, *ti as u64], t.len)),
+                )
+            })
+            .collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(
+            got, want,
+            "phase {pi} rank {me}: wildcard receive multiset mismatch (seed {seed:#x})"
+        );
+        for rec in &got {
+            digest.push(rec.0 as u64 ^ ((rec.1 as u64) << 16) ^ ((rec.2 as u64) << 32));
+            digest.push(rec.3);
+        }
+    } else {
+        // Specific receives: non-overtaking pins the i-th posted receive
+        // per (source, tag) to the i-th send — contents must match the
+        // exact transfer, in order.
+        for (i, (ti, t)) in expected.iter().enumerate() {
+            let st = &stats[i];
+            let want = pbytes(seed, &[pi as u64, *ti as u64], t.len);
+            assert!(
+                st.source == t.src as i32
+                    && st.tag == base + t.tag
+                    && st.bytes == t.len
+                    && rbufs[i] == want,
+                "phase {pi} rank {me}: transfer #{ti} {t:?} violated ordering or payload \
+                 (got source {} tag {} bytes {}, seed {seed:#x})",
+                st.source,
+                st.tag,
+                st.bytes
+            );
+            digest.push(fnv1a(&rbufs[i]));
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn exec_collective(
+    c: &Comm,
+    seed: u64,
+    pi: usize,
+    op: CollOp,
+    len: usize,
+    count: usize,
+    byte: &Datatype,
+    i64t: &Datatype,
+    digest: &mut Vec<u64>,
+) {
+    let members: Vec<usize> = c.group().members().to_vec();
+    let my_wr = c.rank_ctx().world_rank;
+    let grp_rank = c.rank();
+    let pn = c.size();
+    let len = len.max(1);
+    match op {
+        CollOp::Bcast => {
+            let root = pi % pn;
+            let mut buf = if grp_rank == root {
+                pbytes(seed, &[pi as u64, 0xB0], len)
+            } else {
+                vec![0u8; len]
+            };
+            collective::bcast(c, &mut buf, len, byte, root)
+                .unwrap_or_else(|e| panic!("phase {pi} bcast: {e}"));
+            let want = pbytes(seed, &[pi as u64, 0xB0], len);
+            assert_eq!(buf, want, "phase {pi} rank {my_wr}: bcast corrupt (seed {seed:#x})");
+            digest.push(fnv1a(&buf));
+        }
+        CollOp::Allreduce | CollOp::Reduce => {
+            let vals: Vec<i64> =
+                (0..count).map(|k| cval(seed, &[pi as u64, k as u64, my_wr as u64])).collect();
+            let sbuf = i64s_to_bytes(&vals);
+            let oracle: Vec<i64> = (0..count)
+                .map(|k| {
+                    members
+                        .iter()
+                        .map(|&wr| cval(seed, &[pi as u64, k as u64, wr as u64]))
+                        .sum::<i64>()
+                })
+                .collect();
+            if matches!(op, CollOp::Allreduce) {
+                let mut rbuf = vec![0u8; count * 8];
+                collective::allreduce(c, Some(&sbuf), &mut rbuf, count, i64t, &Op::SUM)
+                    .unwrap_or_else(|e| panic!("phase {pi} allreduce: {e}"));
+                let got = bytes_to_i64s(&rbuf);
+                assert_eq!(got, oracle, "phase {pi} rank {my_wr}: allreduce (seed {seed:#x})");
+                digest.push(fnv1a(&rbuf));
+            } else {
+                let root = pi % pn;
+                let mut rbuf = vec![0u8; count * 8];
+                let rb = if grp_rank == root { Some(&mut rbuf[..]) } else { None };
+                collective::reduce(c, Some(&sbuf), rb, count, i64t, &Op::SUM, root)
+                    .unwrap_or_else(|e| panic!("phase {pi} reduce: {e}"));
+                if grp_rank == root {
+                    let got = bytes_to_i64s(&rbuf);
+                    assert_eq!(got, oracle, "phase {pi} rank {my_wr}: reduce (seed {seed:#x})");
+                    digest.push(fnv1a(&rbuf));
+                }
+            }
+        }
+        CollOp::Allgather => {
+            let mine = pbytes(seed, &[pi as u64, my_wr as u64], len);
+            let mut rbuf = vec![0u8; len * pn];
+            collective::allgather(c, Some(&mine), len, byte, &mut rbuf, len, byte)
+                .unwrap_or_else(|e| panic!("phase {pi} allgather: {e}"));
+            for (j, &wr) in members.iter().enumerate() {
+                let want = pbytes(seed, &[pi as u64, wr as u64], len);
+                assert_eq!(
+                    &rbuf[j * len..(j + 1) * len],
+                    &want[..],
+                    "phase {pi} rank {my_wr}: allgather block {j} (seed {seed:#x})"
+                );
+            }
+            digest.push(fnv1a(&rbuf));
+        }
+        CollOp::Alltoall => {
+            let mut sbuf = Vec::with_capacity(len * pn);
+            for &dst_wr in &members {
+                sbuf.extend_from_slice(&pbytes(
+                    seed,
+                    &[pi as u64, my_wr as u64, dst_wr as u64],
+                    len,
+                ));
+            }
+            let mut rbuf = vec![0u8; len * pn];
+            collective::alltoall(c, &sbuf, len, byte, &mut rbuf, len, byte)
+                .unwrap_or_else(|e| panic!("phase {pi} alltoall: {e}"));
+            for (j, &src_wr) in members.iter().enumerate() {
+                let want = pbytes(seed, &[pi as u64, src_wr as u64, my_wr as u64], len);
+                assert_eq!(
+                    &rbuf[j * len..(j + 1) * len],
+                    &want[..],
+                    "phase {pi} rank {my_wr}: alltoall block {j} (seed {seed:#x})"
+                );
+            }
+            digest.push(fnv1a(&rbuf));
+        }
+        CollOp::Scan => {
+            let vals: Vec<i64> =
+                (0..count).map(|k| cval(seed, &[pi as u64, k as u64, my_wr as u64])).collect();
+            let sbuf = i64s_to_bytes(&vals);
+            let mut rbuf = vec![0u8; count * 8];
+            collective::scan(c, Some(&sbuf), &mut rbuf, count, i64t, &Op::SUM)
+                .unwrap_or_else(|e| panic!("phase {pi} scan: {e}"));
+            let got = bytes_to_i64s(&rbuf);
+            let oracle: Vec<i64> = (0..count)
+                .map(|k| {
+                    members[..=grp_rank]
+                        .iter()
+                        .map(|&wr| cval(seed, &[pi as u64, k as u64, wr as u64]))
+                        .sum::<i64>()
+                })
+                .collect();
+            assert_eq!(got, oracle, "phase {pi} rank {my_wr}: scan (seed {seed:#x})");
+            digest.push(fnv1a(&rbuf));
+        }
+    }
+}
+
+// ---------------- the differential harness ----------------
+
+/// Execute once, converting any rank panic (including a failed quiescence
+/// audit) into an error string.
+fn run_once(
+    program: &Program,
+    u: &Universe,
+) -> Result<(Vec<Vec<u64>>, Arc<crate::transport::Fabric>), String> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| program.run_with_fabric(u)))
+        .map_err(|e| panic_text(e.as_ref()))
+}
+
+fn panic_text(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The replayable failure report: chaos seed, program recipe, detail and
+/// (when available) the merged event trace.
+pub fn failure_report(
+    program: &Program,
+    chaos_seed: Option<u64>,
+    detail: &str,
+    trace: &str,
+) -> String {
+    let chaos_line = match chaos_seed {
+        Some(s) => format!("chaos seed {s} — replay with FERROMPI_CHAOS_SEED={s}\n"),
+        None => "unperturbed baseline run\n".to_string(),
+    };
+    let mut out = format!(
+        "chaos differential failure\n{chaos_line}{}\n{detail}\n",
+        program.recipe()
+    );
+    if !trace.is_empty() {
+        out.push_str(trace);
+    }
+    out
+}
+
+/// First differing rank between two digest sets, as a detail line.
+pub fn first_divergence(baseline: &[Vec<u64>], got: &[Vec<u64>]) -> String {
+    for (r, (b, g)) in baseline.iter().zip(got.iter()).enumerate() {
+        if b != g {
+            let at = b
+                .iter()
+                .zip(g.iter())
+                .position(|(x, y)| x != y)
+                .unwrap_or(b.len().min(g.len()));
+            return format!(
+                "rank {r} diverged at digest entry {at} (baseline {} entries, perturbed {})",
+                b.len(),
+                g.len()
+            );
+        }
+    }
+    "rank digest sets differ in length".to_string()
+}
+
+/// Run `program` unperturbed, then under each chaos seed; all runs are
+/// quiescence-audited and their per-rank digests must be byte-identical.
+pub fn run_differential(program: &Program, chaos_seeds: &[u64]) -> Result<(), String> {
+    let base_u = Universe::test(program.nranks).calm().audited(true);
+    let (baseline, _) =
+        run_once(program, &base_u).map_err(|m| failure_report(program, None, &m, ""))?;
+    for &cs in chaos_seeds {
+        let u = Universe::test(program.nranks)
+            .with_chaos(ChaosConfig::from_seed(cs))
+            .audited(true);
+        let (got, fabric) =
+            run_once(program, &u).map_err(|m| failure_report(program, Some(cs), &m, ""))?;
+        if got != baseline {
+            return Err(failure_report(
+                program,
+                Some(cs),
+                &first_divergence(&baseline, &got),
+                &fabric.trace_report(),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// [`run_differential`], panicking with the full report on failure; the
+/// report is also written to `target/chaos-dumps/` so CI can upload it.
+pub fn assert_differential(program: &Program, chaos_seeds: &[u64]) {
+    if let Err(report) = run_differential(program, chaos_seeds) {
+        let loc = write_dump(&format!("prog_{:x}.log", program.seed), &report)
+            .map(|p| format!("\n(report written to {})", p.display()))
+            .unwrap_or_default();
+        panic!("{report}{loc}");
+    }
+}
+
+/// Best-effort failure-dump file for CI artifact upload.
+pub fn write_dump(name: &str, contents: &str) -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new("target").join("chaos-dumps");
+    std::fs::create_dir_all(&dir).ok()?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents).ok()?;
+    Some(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_and_shaped() {
+        let a = Program::generate(0xFEED, 4);
+        let b = Program::generate(0xFEED, 4);
+        assert_eq!(a, b);
+        assert!(a.phases.len() >= 5);
+        let c = Program::generate(0xBEEF, 4);
+        assert_ne!(a.phases, c.phases);
+        // Transfers stay inside the rank space and never self-send.
+        for p in &a.phases {
+            if let Phase::Immediate { transfers, .. } | Phase::BlockingPairs { transfers } = p {
+                for t in transfers {
+                    assert!(t.src < 4 && t.dst < 4 && t.src != t.dst, "{t:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn any_tag_phases_are_fenced_by_a_barrier() {
+        for seed in 0..40 {
+            let p = Program::generate(seed, 3);
+            for (i, ph) in p.phases.iter().enumerate() {
+                if let Phase::Immediate { wildcard_tag: true, .. } = ph {
+                    assert_eq!(
+                        p.phases.get(i + 1),
+                        Some(&Phase::Barrier),
+                        "seed {seed}: ANY_TAG phase {i} not fenced"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recipe_names_seed_and_phases() {
+        let p = Program::generate(0xABC, 2);
+        let r = p.recipe();
+        assert!(r.contains("0xabc"));
+        assert!(r.contains("[ 0]"));
+    }
+
+    #[test]
+    fn failure_report_is_replayable() {
+        let p = Program::showcase(2);
+        let report = failure_report(&p, Some(41), "rank 1 diverged at digest entry 3", "");
+        assert!(report.contains("FERROMPI_CHAOS_SEED=41"));
+        assert!(report.contains(&format!("{:#x}", p.seed)));
+        assert!(report.contains("Persistent"));
+        assert!(report.contains("diverged"));
+    }
+
+    #[test]
+    fn showcase_runs_clean_on_a_faithful_fabric() {
+        let p = Program::showcase(4);
+        let u = Universe::test(4).calm().audited(true);
+        let d = p.run(&u);
+        assert_eq!(d.len(), 4);
+        // Deterministic digests across identical runs.
+        assert_eq!(d, p.run(&u));
+    }
+
+    #[test]
+    fn tiny_differential_passes() {
+        let p = Program::generate(7, 2);
+        assert_differential(&p, &[1]);
+    }
+}

@@ -63,6 +63,30 @@ pub fn cvars() -> Vec<CvarInfo> {
             writable: false,
             category: "transport",
         },
+        CvarInfo {
+            name: "chaos_seed",
+            description: "schedule-perturbation seed for new universes; 0 disables chaos, 'auto' defers to the FERROMPI_CHAOS_SEED env override again (a written cvar wins)",
+            writable: true,
+            category: "chaos",
+        },
+        CvarInfo {
+            name: "chaos_delay_ns",
+            description: "per-packet extra delivery latency bound in ns; 'auto' = derived from the seed",
+            writable: true,
+            category: "chaos",
+        },
+        CvarInfo {
+            name: "chaos_reorder_permille",
+            description: "probability (‰) of cross-sender mailbox reordering per packet; 'auto' = derived from the seed",
+            writable: true,
+            category: "chaos",
+        },
+        CvarInfo {
+            name: "chaos_yield_permille",
+            description: "probability (‰) of a scheduling yield per progress-loop turn; 'auto' = derived from the seed",
+            writable: true,
+            category: "chaos",
+        },
     ]
 }
 
@@ -127,7 +151,35 @@ pub fn cvar_read(name: &str) -> Result<String> {
             })
         }
         "deadlock_timeout_s" => Ok(std::env::var("FERROMPI_DEADLOCK_S").unwrap_or_else(|_| "60".into())),
+        "chaos_seed" => Ok(crate::sim::chaos::effective_seed().to_string()),
+        "chaos_delay_ns" => Ok(chaos_intensity(crate::sim::chaos::delay_override(), |c| {
+            format!("{:.0}", c.max_delay_ns)
+        })),
+        "chaos_reorder_permille" => {
+            Ok(chaos_intensity(crate::sim::chaos::reorder_override(), |c| {
+                format!("{:.0}", c.reorder_prob * 1000.0)
+            }))
+        }
+        "chaos_yield_permille" => Ok(chaos_intensity(crate::sim::chaos::yield_override(), |c| {
+            format!("{:.0}", c.yield_prob * 1000.0)
+        })),
         other => Err(mpi_err!(Arg, "unknown cvar '{other}'")),
+    }
+}
+
+/// Read one chaos intensity: a latched override always round-trips (even
+/// while chaos is inactive); otherwise the seed-derived value of the
+/// active plan, or "off" when chaos is not active.
+fn chaos_intensity(
+    overridden: Option<u64>,
+    f: impl Fn(&crate::sim::chaos::ChaosConfig) -> String,
+) -> String {
+    if let Some(v) = overridden {
+        return v.to_string();
+    }
+    match crate::sim::chaos::ChaosConfig::from_env() {
+        Some(c) => f(&c),
+        None => "off".to_string(),
     }
 }
 
@@ -167,6 +219,47 @@ pub fn cvar_write(name: &str, value: &str) -> Result<()> {
             Ok(())
         }
         "deadlock_timeout_s" => Err(mpi_err!(Arg, "cvar 'deadlock_timeout_s' is read-only")),
+        // The chaos cvars all accept "auto": back to unset (seed-derived
+        // intensities; the seed defers to the environment again).
+        "chaos_seed" => {
+            if value == "auto" {
+                crate::sim::chaos::reset_seed_cvar();
+                return Ok(());
+            }
+            // Same spellings as FERROMPI_CHAOS_SEED: decimal or 0x hex
+            // (failure reports print program seeds in hex).
+            let v = crate::util::rng::parse_seed(value)
+                .ok_or_else(|| mpi_err!(Arg, "bad chaos seed '{value}' (u64, 0x hex, 0 = off, or 'auto')"))?;
+            crate::sim::chaos::write_seed_cvar(v);
+            Ok(())
+        }
+        "chaos_delay_ns" => {
+            if value == "auto" {
+                crate::sim::chaos::reset_delay_cvar();
+                return Ok(());
+            }
+            let v: u64 = value.parse().map_err(|_| mpi_err!(Arg, "bad delay '{value}' (ns or 'auto')"))?;
+            crate::sim::chaos::write_delay_cvar(v);
+            Ok(())
+        }
+        "chaos_reorder_permille" => {
+            if value == "auto" {
+                crate::sim::chaos::reset_reorder_cvar();
+                return Ok(());
+            }
+            let v: u64 = value.parse().map_err(|_| mpi_err!(Arg, "bad permille '{value}' (0-1000 or 'auto')"))?;
+            crate::sim::chaos::write_reorder_cvar(v);
+            Ok(())
+        }
+        "chaos_yield_permille" => {
+            if value == "auto" {
+                crate::sim::chaos::reset_yield_cvar();
+                return Ok(());
+            }
+            let v: u64 = value.parse().map_err(|_| mpi_err!(Arg, "bad permille '{value}' (0-1000 or 'auto')"))?;
+            crate::sim::chaos::write_yield_cvar(v);
+            Ok(())
+        }
         other => Err(mpi_err!(Arg, "unknown cvar '{other}'")),
     }
 }
@@ -213,6 +306,46 @@ mod tests {
         let msg = format!("{err}");
         for valid in ["auto", "binomial", "linear", "hier"] {
             assert!(msg.contains(valid), "missing '{valid}' in: {msg}");
+        }
+    }
+
+    #[test]
+    fn chaos_cvar_group_roundtrips() {
+        // This test mutates process-global chaos state; other universes
+        // constructed while it runs would pick the written plan up (still
+        // correct — env/cvar chaos is schedule-only — but noisy), so the
+        // writes are serialized against the sim::chaos unit tests and
+        // restored to "auto" before returning.
+        let _g = crate::sim::chaos::CVAR_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(cvar_index("chaos_seed").is_some());
+        cvar_write("chaos_seed", "77").unwrap();
+        assert_eq!(cvar_read("chaos_seed").unwrap(), "77");
+        // Hex accepted, matching the env spelling (reports print hex).
+        cvar_write("chaos_seed", "0x4D").unwrap();
+        assert_eq!(cvar_read("chaos_seed").unwrap(), "77");
+        // Intensity overrides land in the resolved plan.
+        cvar_write("chaos_delay_ns", "250").unwrap();
+        cvar_write("chaos_reorder_permille", "5").unwrap();
+        cvar_write("chaos_yield_permille", "5").unwrap();
+        assert_eq!(cvar_read("chaos_delay_ns").unwrap(), "250");
+        assert_eq!(cvar_read("chaos_reorder_permille").unwrap(), "5");
+        assert_eq!(cvar_read("chaos_yield_permille").unwrap(), "5");
+        assert!(cvar_write("chaos_seed", "wat").is_err());
+        assert!(cvar_write("chaos_delay_ns", "wat").is_err());
+        // A written 0 means "explicitly off" (wins over the environment);
+        // a latched intensity override still round-trips while off.
+        cvar_write("chaos_seed", "0").unwrap();
+        assert_eq!(cvar_read("chaos_seed").unwrap(), "0");
+        assert_eq!(cvar_read("chaos_delay_ns").unwrap(), "250");
+        // "auto" restores the unset state on every chaos cvar.
+        for name in
+            ["chaos_seed", "chaos_delay_ns", "chaos_reorder_permille", "chaos_yield_permille"]
+        {
+            cvar_write(name, "auto").unwrap();
+        }
+        if std::env::var("FERROMPI_CHAOS_SEED").is_err() {
+            assert_eq!(cvar_read("chaos_seed").unwrap(), "0", "env unset → chaos off");
+            assert_eq!(cvar_read("chaos_delay_ns").unwrap(), "off");
         }
     }
 

@@ -37,6 +37,10 @@ pub fn pvars() -> Vec<PvarInfo> {
         PvarInfo { name: "wire_bytes_copied", description: "payload bytes CPU-copied on the wire path (non-contiguous staging, partitioned/arena two-hop staging, arena shuffles); the contiguous eager fast path counts zero", class: Counter, category: "transport" },
         PvarInfo { name: "pool_recycled", description: "wire buffers reused from the fabric's buffer pool", class: Counter, category: "transport" },
         PvarInfo { name: "pool_allocated", description: "fresh wire-buffer allocations (buffer-pool misses)", class: Counter, category: "transport" },
+        PvarInfo { name: "pool_outstanding", description: "absolute take/give imbalance of the wire-buffer pool (0 at quiescence; any residue — leak or double-give — reads nonzero)", class: Level, category: "transport" },
+        PvarInfo { name: "chaos_delays", description: "packets given extra delivery latency by the chaos injector", class: Counter, category: "chaos" },
+        PvarInfo { name: "chaos_reorders", description: "packets that overtook another sender's queued packet under chaos", class: Counter, category: "chaos" },
+        PvarInfo { name: "chaos_yields", description: "scheduling yields injected into the progress loop under chaos", class: Counter, category: "chaos" },
         PvarInfo { name: "rank_sends_started", description: "sends started by this rank", class: Counter, category: "matching" },
         PvarInfo { name: "rank_recvs_posted", description: "receives posted by this rank", class: Counter, category: "matching" },
         PvarInfo { name: "rank_messages_matched", description: "envelope matches completed", class: Counter, category: "matching" },
@@ -92,6 +96,18 @@ impl<'a> PvarSession<'a> {
             "wire_bytes_copied" => ctx.fabric.pool.copied_bytes.load(Ordering::Relaxed),
             "pool_recycled" => ctx.fabric.pool.recycled.load(Ordering::Relaxed),
             "pool_allocated" => ctx.fabric.pool.allocated.load(Ordering::Relaxed),
+            // Absolute imbalance: a negative balance (give without take)
+            // is just as much a bug as a leak and must not read as 0.
+            "pool_outstanding" => ctx.fabric.pool.stats().outstanding.unsigned_abs(),
+            "chaos_delays" => {
+                ctx.fabric.chaos.as_ref().map_or(0, |c| c.delays.load(Ordering::Relaxed))
+            }
+            "chaos_reorders" => {
+                ctx.fabric.chaos.as_ref().map_or(0, |c| c.reorders.load(Ordering::Relaxed))
+            }
+            "chaos_yields" => {
+                ctx.fabric.chaos.as_ref().map_or(0, |c| c.yields.load(Ordering::Relaxed))
+            }
             "rank_sends_started" => c.sends_started.get(),
             "rank_recvs_posted" => c.recvs_posted.get(),
             "rank_messages_matched" => c.messages_matched.get(),

@@ -6,6 +6,8 @@ use super::netmodel::NetworkModel;
 use super::nodemap::NodeMap;
 use super::packet::{Packet, PacketKind};
 use super::wire::BufferPool;
+use crate::sim::chaos::{self, ChaosConfig, ChaosState};
+use crate::sim::trace::TraceBook;
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -66,6 +68,12 @@ pub struct Fabric {
     /// The simulated parallel filesystem: path → (bytes, shared file
     /// pointer). Shared by every rank of the job (MPI-IO chapter 14).
     pub files: std::sync::Mutex<std::collections::HashMap<String, std::sync::Arc<FileNode>>>,
+    /// Seeded schedule perturbation, when this job runs in chaos mode
+    /// (see [`crate::sim::chaos`]). `None` = faithful fabric.
+    pub chaos: Option<ChaosState>,
+    /// Per-rank event rings, recording while chaos is active; dumped into
+    /// failure reports so a red run is replayable.
+    pub trace: TraceBook,
 }
 
 /// One file in the simulated filesystem.
@@ -81,18 +89,33 @@ pub struct FileNode {
 
 impl Fabric {
     pub fn new(nodemap: NodeMap, model: NetworkModel) -> Fabric {
+        Fabric::with_chaos(nodemap, model, None)
+    }
+
+    /// A fabric with an optional seeded perturbation plan. Chaos turns on
+    /// tracing and (in pool-pressure mode) shrinks the wire-buffer pool.
+    pub fn with_chaos(nodemap: NodeMap, model: NetworkModel, chaos: Option<ChaosConfig>) -> Fabric {
         let n = nodemap.nranks();
+        let pool = match chaos {
+            Some(c) if c.pool_pressure => Arc::new(BufferPool::with_limits(
+                chaos::PRESSURE_POOL_BUFFERS,
+                chaos::PRESSURE_POOL_CAPACITY,
+            )),
+            _ => Arc::new(BufferPool::new()),
+        };
         Fabric {
             nodemap,
             model,
             stats: FabricStats::default(),
-            pool: Arc::new(BufferPool::new()),
+            pool,
             epoch: Instant::now(),
             mailboxes: (0..n).map(|_| Mailbox::new()).collect(),
             aborted: AtomicBool::new(false),
             abort_code: AtomicI32::new(0),
             registry: std::sync::Mutex::new(std::collections::HashMap::new()),
             files: std::sync::Mutex::new(std::collections::HashMap::new()),
+            trace: TraceBook::new(n, chaos.is_some()),
+            chaos: chaos.map(|c| ChaosState::new(c, n)),
         }
     }
 
@@ -123,13 +146,68 @@ impl Fabric {
     /// clock reading; the packet becomes observable at
     /// `now_vt + α + β·payload`. Returns the departure time so the sender
     /// can charge itself injection cost if desired.
+    ///
+    /// In chaos mode the packet may additionally be delayed (extra
+    /// virtual latency) and delivered out of order relative to *other*
+    /// senders' queued packets (never its own — per-sender FIFO is the
+    /// non-overtaking substrate and is preserved unconditionally).
     pub fn send(&self, from: usize, to: usize, now_vt: f64, kind: PacketKind) -> f64 {
         let same = self.nodemap.same_node(from, to);
-        let cost = self.model.cost_ns(kind.payload_len(), same);
+        let mut cost = self.model.cost_ns(kind.payload_len(), same);
+        if let Some(ch) = &self.chaos {
+            cost += ch.extra_delay_ns(from);
+        }
         let depart_vt = now_vt + cost;
         self.stats.record(&kind, same, self.mailboxes[to].len() + 1);
-        self.mailboxes[to].push(Packet { src: from, depart_vt, kind });
+        if self.trace.enabled() {
+            self.trace.record(
+                from,
+                now_vt,
+                "send",
+                format!("{} -> r{to} {}B arr={depart_vt:.0}", kind.label(), kind.payload_len()),
+            );
+        }
+        let pkt = Packet { src: from, depart_vt, kind };
+        match &self.chaos {
+            Some(ch) if ch.roll_reorder(from) => {
+                let overtook = ch.with_rng(from, |r| self.mailboxes[to].push_reordered(pkt, r));
+                if overtook {
+                    ch.reorders.fetch_add(1, Ordering::Relaxed);
+                    self.trace.record(from, now_vt, "reorder", format!("packet to r{to} overtook"));
+                }
+            }
+            _ => self.mailboxes[to].push(pkt),
+        }
         depart_vt
+    }
+
+    /// One progress-loop turn's worth of scheduling jitter: in chaos mode
+    /// `rank` may yield its timeslice. Free when chaos is off.
+    #[inline]
+    pub fn chaos_tick(&self, rank: usize) {
+        if let Some(ch) = &self.chaos {
+            ch.maybe_yield(rank);
+        }
+    }
+
+    /// The failure-report header + merged trace dump: what a red chaos
+    /// run prints so the schedule pressure is replayable.
+    pub fn trace_report(&self) -> String {
+        let mut out = String::new();
+        if let Some(ch) = &self.chaos {
+            out.push_str(&format!(
+                "chaos seed {} (replay: FERROMPI_CHAOS_SEED={}): {:?}\n\
+                 perturbations fired: delays={} reorders={} yields={}\n",
+                ch.cfg.seed,
+                ch.cfg.seed,
+                ch.cfg,
+                ch.delays.load(Ordering::Relaxed),
+                ch.reorders.load(Ordering::Relaxed),
+                ch.yields.load(Ordering::Relaxed),
+            ));
+        }
+        out.push_str(&self.trace.dump());
+        out
     }
 
     /// `MPI_Abort` analog: mark the job failed so every rank's next
@@ -198,6 +276,52 @@ mod tests {
         assert_eq!(f.stats.ctrl_sent.load(Ordering::Relaxed), 1);
         assert_eq!(f.stats.intra_node_msgs.load(Ordering::Relaxed), 1);
         assert_eq!(f.stats.inter_node_msgs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn chaos_fabric_perturbs_but_delivers_everything() {
+        let mut cfg = ChaosConfig::from_seed(11);
+        cfg.max_delay_ns = 10_000.0;
+        cfg.reorder_prob = 1.0;
+        cfg.pool_pressure = false;
+        let f = Fabric::with_chaos(NodeMap::new(1, 3), NetworkModel::zero(), Some(cfg));
+        let payload = |i: u8| super::super::wire::WireBytes::from_vec(vec![i; 16]);
+        for i in 0..10u8 {
+            let from = (i % 2) as usize;
+            let kind = PacketKind::Eager { ctx: 0, tag: i as i32, data: payload(i), sync_token: None };
+            let d = f.send(from, 2, 100.0, kind);
+            // Delay only ever adds latency on top of the model cost.
+            assert!(d >= 100.0);
+        }
+        assert_eq!(f.mailbox(2).len(), 10, "chaos must never drop packets");
+        // Per-sender FIFO survives forced reordering.
+        let mut out = Vec::new();
+        f.mailbox(2).drain_into(&mut out);
+        for src in [0usize, 1] {
+            let tags: Vec<i32> = out
+                .iter()
+                .filter(|p| p.src == src)
+                .map(|p| match &p.kind {
+                    PacketKind::Eager { tag, .. } => *tag,
+                    _ => unreachable!(),
+                })
+                .collect();
+            let mut sorted = tags.clone();
+            sorted.sort_unstable();
+            assert_eq!(tags, sorted);
+        }
+        assert!(f.trace.enabled());
+        assert!(!f.trace.is_empty());
+        assert!(f.trace_report().contains("FERROMPI_CHAOS_SEED=11"));
+    }
+
+    #[test]
+    fn plain_fabric_has_no_chaos_or_trace() {
+        let f = fabric();
+        assert!(f.chaos.is_none());
+        assert!(!f.trace.enabled());
+        f.chaos_tick(0); // no-op, must not panic
+        assert_eq!(f.trace_report(), "");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! the standard's non-overtaking guarantee.
 
 use super::packet::Packet;
+use crate::util::rng::Rng;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
@@ -24,6 +25,24 @@ impl Mailbox {
         q.push_back(pkt);
         drop(q);
         self.cv.notify_one();
+    }
+
+    /// Chaos-mode delivery: insert the packet at a random **legal**
+    /// position instead of the tail. Legal means never ahead of an
+    /// earlier packet from the same sender — per-sender FIFO is what the
+    /// matching engine's non-overtaking guarantee rests on — while
+    /// packets from *different* senders may arrive in any relative order
+    /// (exactly the freedom a real interconnect has). Returns whether the
+    /// packet actually overtook anything.
+    pub fn push_reordered(&self, pkt: Packet, rng: &mut Rng) -> bool {
+        let mut q = self.q.lock().unwrap();
+        let floor = q.iter().rposition(|p| p.src == pkt.src).map(|i| i + 1).unwrap_or(0);
+        let pos = rng.range(floor, q.len() + 1);
+        let overtook = pos < q.len();
+        q.insert(pos, pkt);
+        drop(q);
+        self.cv.notify_one();
+        overtook
     }
 
     /// Take everything currently queued (non-blocking). Appends to `out`
@@ -92,6 +111,37 @@ mod tests {
             .collect();
         assert_eq!(tags, vec![0, 1, 2, 3, 4]);
         assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn reordered_push_preserves_per_sender_fifo() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xBEEF);
+        for _trial in 0..50 {
+            let mb = Mailbox::new();
+            // Two senders, three tagged packets each, delivered with
+            // forced random placement.
+            for i in 0..3 {
+                mb.push_reordered(pkt(0, i), &mut rng);
+                mb.push_reordered(pkt(1, 100 + i), &mut rng);
+            }
+            let mut out = Vec::new();
+            mb.drain_into(&mut out);
+            assert_eq!(out.len(), 6);
+            for src in [0usize, 1] {
+                let tags: Vec<i32> = out
+                    .iter()
+                    .filter(|p| p.src == src)
+                    .map(|p| match &p.kind {
+                        PacketKind::Eager { tag, .. } => *tag,
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                let mut sorted = tags.clone();
+                sorted.sort_unstable();
+                assert_eq!(tags, sorted, "per-sender FIFO violated for src {src}");
+            }
+        }
     }
 
     #[test]

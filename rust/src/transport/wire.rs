@@ -24,7 +24,7 @@
 //! touches zero payload bytes, and a test asserts the counter stays at
 //! zero there.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
 /// Buffers larger than this are not retained by the pool (a single huge
@@ -44,15 +44,32 @@ pub struct PoolStats {
     pub copied_bytes: u64,
     /// Idle buffers currently shelved.
     pub pooled: usize,
+    /// Buffers checked out and not yet handed back. Zero at job end in a
+    /// quiescent run; a positive residue is a wire-buffer leak (the
+    /// quiescence audit flags it).
+    pub outstanding: i64,
 }
 
 /// A per-fabric freelist of wire buffers.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct BufferPool {
     shelves: Mutex<Vec<Vec<u8>>>,
+    /// Shelf limits. The defaults fit steady-state traffic; the chaos
+    /// layer's *pool-pressure* mode shrinks them so the no-fit /
+    /// fresh-allocation and drop-instead-of-shelve paths run constantly.
+    max_buffers: usize,
+    max_capacity: usize,
     pub allocated: AtomicU64,
     pub recycled: AtomicU64,
     pub copied_bytes: AtomicU64,
+    /// take − give balance (see [`PoolStats::outstanding`]).
+    outstanding: AtomicI64,
+}
+
+impl Default for BufferPool {
+    fn default() -> BufferPool {
+        BufferPool::with_limits(MAX_POOLED_BUFFERS, MAX_POOLED_CAPACITY)
+    }
 }
 
 /// Checkout surface on the *shared* pool handle: the returned buffer
@@ -78,6 +95,21 @@ impl BufferPool {
         BufferPool::default()
     }
 
+    /// A pool with custom shelf limits: at most `max_buffers` idle buffers
+    /// retained, none larger than `max_capacity` bytes. Chaos pool-pressure
+    /// mode uses tiny limits to keep the allocation paths hot.
+    pub fn with_limits(max_buffers: usize, max_capacity: usize) -> BufferPool {
+        BufferPool {
+            shelves: Mutex::new(Vec::new()),
+            max_buffers,
+            max_capacity,
+            allocated: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+            copied_bytes: AtomicU64::new(0),
+            outstanding: AtomicI64::new(0),
+        }
+    }
+
     /// The raw-`Vec` variant for long-lived mutable buffers (collective
     /// arenas): pair with [`BufferPool::give`].
     pub fn take_vec(&self, capacity: usize) -> Vec<u8> {
@@ -86,6 +118,7 @@ impl BufferPool {
             // allocate nor recycle; keep the counters about real buffers.
             return Vec::new();
         }
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
         let mut shelves = self.shelves.lock().unwrap();
         // Best fit (smallest sufficient capacity): an any-fit pick would
         // let tiny requests steal the big recycled buffers and force the
@@ -119,14 +152,18 @@ impl BufferPool {
     }
 
     /// Return a buffer to the freelist (cleared; dropped on overflow or
-    /// when oversized).
+    /// when oversized — either way it counts as handed back).
     pub fn give(&self, mut v: Vec<u8>) {
-        if v.capacity() == 0 || v.capacity() > MAX_POOLED_CAPACITY {
+        if v.capacity() == 0 {
+            return;
+        }
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        if v.capacity() > self.max_capacity {
             return;
         }
         v.clear();
         let mut shelves = self.shelves.lock().unwrap();
-        if shelves.len() < MAX_POOLED_BUFFERS {
+        if shelves.len() < self.max_buffers {
             shelves.push(v);
         }
     }
@@ -142,6 +179,7 @@ impl BufferPool {
             recycled: self.recycled.load(Ordering::Relaxed),
             copied_bytes: self.copied_bytes.load(Ordering::Relaxed),
             pooled: self.shelves.lock().unwrap().len(),
+            outstanding: self.outstanding.load(Ordering::Relaxed),
         }
     }
 }
@@ -360,6 +398,44 @@ mod tests {
         assert_eq!(pool.stats().pooled, 0);
         pool.give(Vec::new()); // zero-capacity: nothing to recycle
         assert_eq!(pool.stats().pooled, 0);
+    }
+
+    #[test]
+    fn outstanding_tracks_take_give_balance() {
+        let pool = Arc::new(BufferPool::new());
+        let a = pool.take(64);
+        let b = pool.take(64).freeze();
+        assert_eq!(pool.stats().outstanding, 2);
+        drop(a); // unfrozen WireVec → give
+        assert_eq!(pool.stats().outstanding, 1);
+        drop(b); // last WireBytes view → give
+        assert_eq!(pool.stats().outstanding, 0);
+        // Zero-capacity checkouts are not counted on either side.
+        let z = pool.take(0);
+        assert_eq!(pool.stats().outstanding, 0);
+        drop(z);
+        assert_eq!(pool.stats().outstanding, 0);
+    }
+
+    #[test]
+    fn pressure_limits_shrink_the_shelf() {
+        // max 1 shelved buffer, none larger than 128 bytes.
+        let pool = Arc::new(BufferPool::with_limits(1, 128));
+        pool.give(pool.take_vec(64));
+        pool.give(pool.take_vec(64));
+        assert_eq!(pool.stats().pooled, 1, "second give exceeds max_buffers");
+        // An over-limit buffer is dropped, not shelved — but still counted
+        // as handed back.
+        let big = pool.take_vec(256);
+        pool.give(big);
+        assert_eq!(pool.stats().pooled, 1);
+        assert_eq!(pool.stats().outstanding, 0);
+        // With the shelf capped at a too-small buffer, a big request is a
+        // forced miss.
+        let before = pool.stats().allocated;
+        let v = pool.take_vec(512);
+        assert_eq!(pool.stats().allocated, before + 1);
+        pool.give(v);
     }
 
     #[test]

@@ -3,9 +3,26 @@
 //!
 //! A [`Universe`] describes a *cluster shape* (nodes × ranks-per-node and a
 //! network model); every [`Universe::run`] is one job on a fresh fabric.
+//!
+//! Two testing facilities ride on the launcher (see [`crate::sim`]):
+//!
+//! * **Chaos mode** — a seeded [`ChaosConfig`] perturbs the job's
+//!   schedule within legal MPI semantics (delivery delays, cross-sender
+//!   reordering, yield jitter, eager-limit randomization, pool pressure).
+//!   Enabled per-universe with [`Universe::with_chaos`] /
+//!   [`Universe::chaotic`], or globally via `FERROMPI_CHAOS_SEED` / the
+//!   `chaos_*` cvars (every constructor consults
+//!   [`ChaosConfig::from_env`]).
+//! * **Quiescence auditing** — after each rank's closure returns (and
+//!   again after the join), the runtime state is checked for residue:
+//!   undrained queues, non-terminal requests, leaked wire buffers. On by
+//!   default for chaos jobs, or via `FERROMPI_AUDIT=1` /
+//!   [`Universe::audited`].
 
 use crate::comm::Comm;
 use crate::p2p::RankCtx;
+use crate::sim::audit;
+use crate::sim::chaos::ChaosConfig;
 use crate::transport::{Fabric, NetworkModel, NodeMap};
 use std::sync::Arc;
 
@@ -14,6 +31,12 @@ use std::sync::Arc;
 pub struct Universe {
     pub nodemap: NodeMap,
     pub model: NetworkModel,
+    /// Seeded schedule perturbation for every job this universe runs
+    /// (`None` = faithful fabric).
+    pub chaos: Option<ChaosConfig>,
+    /// Quiescence-audit override: `Some(on)` forces it, `None` defers to
+    /// `FERROMPI_AUDIT` and then to "on iff chaos".
+    pub audit: Option<bool>,
 }
 
 impl Universe {
@@ -22,12 +45,22 @@ impl Universe {
     pub fn new(nodes: usize, ppn: usize) -> Universe {
         let mut model = NetworkModel::omnipath();
         crate::tool::cvar::apply_model_overrides(&mut model);
-        Universe { nodemap: NodeMap::new(nodes, ppn), model }
+        Universe {
+            nodemap: NodeMap::new(nodes, ppn),
+            model,
+            chaos: ChaosConfig::from_env(),
+            audit: None,
+        }
     }
 
     /// Custom network model.
     pub fn with_model(nodes: usize, ppn: usize, model: NetworkModel) -> Universe {
-        Universe { nodemap: NodeMap::new(nodes, ppn), model }
+        Universe {
+            nodemap: NodeMap::new(nodes, ppn),
+            model,
+            chaos: ChaosConfig::from_env(),
+            audit: None,
+        }
     }
 
     /// Like [`Universe::new`], but the cluster shape can be overridden
@@ -43,9 +76,45 @@ impl Universe {
     }
 
     /// Single-node job with the zero-cost model: what correctness tests
-    /// use (no virtual-time effects, pure software paths).
+    /// use (no virtual-time effects, pure software paths). Still picks up
+    /// a `FERROMPI_CHAOS_SEED` from the environment, so the whole test
+    /// suite can be soaked under (schedule-only) chaos without edits.
     pub fn test(nranks: usize) -> Universe {
-        Universe { nodemap: NodeMap::new(1, nranks), model: NetworkModel::zero() }
+        Universe {
+            nodemap: NodeMap::new(1, nranks),
+            model: NetworkModel::zero(),
+            chaos: ChaosConfig::from_env(),
+            audit: None,
+        }
+    }
+
+    /// This universe with a full chaos plan.
+    pub fn with_chaos(mut self, cfg: ChaosConfig) -> Universe {
+        self.chaos = Some(cfg);
+        self
+    }
+
+    /// This universe perturbed by the plan derived from `seed`
+    /// ([`ChaosConfig::from_seed`]).
+    pub fn chaotic(self, seed: u64) -> Universe {
+        self.with_chaos(ChaosConfig::from_seed(seed))
+    }
+
+    /// This universe with chaos disabled (the differential harness's
+    /// baseline, immune to a process-global `FERROMPI_CHAOS_SEED`).
+    pub fn calm(mut self) -> Universe {
+        self.chaos = None;
+        self
+    }
+
+    /// Force the end-of-job quiescence audit on or off.
+    pub fn audited(mut self, on: bool) -> Universe {
+        self.audit = Some(on);
+        self
+    }
+
+    fn audit_on(&self) -> bool {
+        self.audit.unwrap_or_else(|| env_audit().unwrap_or(self.chaos.is_some()))
     }
 
     pub fn nranks(&self) -> usize {
@@ -56,37 +125,7 @@ impl Universe {
     /// `MPI_COMM_WORLD`; returns the per-rank results in rank order.
     /// A panic on any rank is propagated (after all threads are joined).
     pub fn run<T: Send>(&self, f: impl Fn(&Comm) -> T + Send + Sync) -> Vec<T> {
-        let n = self.nranks();
-        let fabric = Arc::new(Fabric::new(self.nodemap, self.model));
-        std::thread::scope(|s| {
-            let handles: Vec<_> = (0..n)
-                .map(|r| {
-                    let fabric = fabric.clone();
-                    let f = &f;
-                    s.spawn(move || {
-                        let ctx = RankCtx::new(r, fabric);
-                        let comm = Comm::world(ctx);
-                        f(&comm)
-                    })
-                })
-                .collect();
-            let mut results = Vec::with_capacity(n);
-            let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
-            for h in handles {
-                match h.join() {
-                    Ok(v) => results.push(v),
-                    Err(e) => {
-                        if panic.is_none() {
-                            panic = Some(e);
-                        }
-                    }
-                }
-            }
-            if let Some(p) = panic {
-                std::panic::resume_unwind(p);
-            }
-            results
-        })
+        self.run_inner(f).0
     }
 
     /// Run and also return the fabric statistics of the job (used by tool
@@ -95,8 +134,19 @@ impl Universe {
         &self,
         f: impl Fn(&Comm) -> T + Send + Sync,
     ) -> (Vec<T>, Arc<Fabric>) {
+        self.run_inner(f)
+    }
+
+    fn run_inner<T: Send>(&self, f: impl Fn(&Comm) -> T + Send + Sync) -> (Vec<T>, Arc<Fabric>) {
         let n = self.nranks();
-        let fabric = Arc::new(Fabric::new(self.nodemap, self.model));
+        let mut model = self.model;
+        if let Some(ch) = &self.chaos {
+            // One of the chaos axes: each job draws its eager/rendezvous
+            // threshold from a seed-derived sweep.
+            model.eager_threshold = ch.pick_eager_threshold(model.eager_threshold);
+        }
+        let audit = self.audit_on();
+        let fabric = Arc::new(Fabric::with_chaos(self.nodemap, model, self.chaos));
         let out = std::thread::scope(|s| {
             let handles: Vec<_> = (0..n)
                 .map(|r| {
@@ -104,8 +154,15 @@ impl Universe {
                     let f = &f;
                     s.spawn(move || {
                         let ctx = RankCtx::new(r, fabric);
-                        let comm = Comm::world(ctx);
-                        f(&comm)
+                        let comm = Comm::world(ctx.clone());
+                        let out = f(&comm);
+                        drop(comm);
+                        if audit {
+                            // Rank-local state dies with this thread: this
+                            // is the last moment it can be checked.
+                            audit::enforce_rank(&ctx);
+                        }
+                        out
                     })
                 })
                 .collect();
@@ -122,11 +179,41 @@ impl Universe {
                 }
             }
             if let Some(p) = panic {
+                // A red chaos run dumps its schedule-pressure trace before
+                // unwinding, so the failure is replayable from the output —
+                // unless the panic message already embeds it (quiescence
+                // audit reports do), which would print the ring twice.
+                let already_dumped = p
+                    .downcast_ref::<String>()
+                    .is_some_and(|m| m.contains("FERROMPI_CHAOS_SEED="));
+                if fabric.trace.enabled() && !already_dumped {
+                    eprintln!("{}", fabric.trace_report());
+                }
                 std::panic::resume_unwind(p);
             }
             results
         });
+        if audit {
+            audit::enforce_fabric(&fabric);
+        }
         (out, fabric)
+    }
+}
+
+/// `FERROMPI_AUDIT` as a tri-state: unset/unrecognized → `None`.
+fn env_audit() -> Option<bool> {
+    match std::env::var("FERROMPI_AUDIT") {
+        Ok(v) => parse_audit(&v),
+        Err(_) => None,
+    }
+}
+
+/// Pure parser behind [`env_audit`] (unit-tested without process state).
+fn parse_audit(v: &str) -> Option<bool> {
+    match v.trim() {
+        "1" | "on" | "true" => Some(true),
+        "0" | "off" | "false" => Some(false),
+        _ => None,
     }
 }
 
@@ -159,6 +246,17 @@ mod tests {
     }
 
     #[test]
+    fn audit_parser_tristate() {
+        assert_eq!(parse_audit("1"), Some(true));
+        assert_eq!(parse_audit(" on "), Some(true));
+        assert_eq!(parse_audit("true"), Some(true));
+        assert_eq!(parse_audit("0"), Some(false));
+        assert_eq!(parse_audit("off"), Some(false));
+        assert_eq!(parse_audit("wat"), None);
+        assert_eq!(parse_audit(""), None);
+    }
+
+    #[test]
     fn world_identity() {
         let u = Universe::test(4);
         let ranks = u.run(|comm| (comm.rank(), comm.size()));
@@ -182,6 +280,40 @@ mod tests {
             if comm.rank() == 1 {
                 panic!("rank boom");
             }
+        });
+    }
+
+    #[test]
+    fn chaos_builders_compose() {
+        let u = Universe::test(2).chaotic(42);
+        assert_eq!(u.chaos.map(|c| c.seed), Some(42));
+        assert!(u.audit_on(), "chaos implies auditing by default");
+        let calm = u.calm();
+        assert!(calm.chaos.is_none());
+        assert!(calm.audited(true).audit_on());
+        assert!(!u.audited(false).audit_on(), "explicit override wins");
+    }
+
+    #[test]
+    fn chaotic_run_produces_correct_results_and_audits_clean() {
+        // A perturbed fabric must not change observable results.
+        let u = Universe::test(3).chaotic(0xD15EA5E).audited(true);
+        let ranks = u.run(|comm| (comm.rank(), comm.size()));
+        assert_eq!(ranks, vec![(0, 3), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "quiescence audit failed")]
+    fn audit_flags_an_unreceived_message() {
+        let u = Universe::test(2).audited(true);
+        u.run(|comm| {
+            let byte = crate::datatype::Datatype::primitive(crate::datatype::Primitive::Byte);
+            if comm.rank() == 0 {
+                // Fire-and-forget eager send nobody receives: quiescence
+                // audit on rank 1 must flag the unexpected-queue residue.
+                comm.send(&[1u8, 2, 3], 3, &byte, 1, 9).unwrap();
+            }
+            crate::collective::barrier(comm).unwrap();
         });
     }
 }

@@ -3,6 +3,7 @@
 //! purpose-built implementations below — see DESIGN.md §8).
 
 pub mod alloc_count;
+pub mod hash;
 pub mod rng;
 pub mod stats;
 pub mod timing;

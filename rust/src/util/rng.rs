@@ -1,12 +1,34 @@
 //! xoshiro256** — a small, fast, high-quality PRNG (Blackman & Vigna).
-//! Used by the property-test harness, workload generators and the fabric's
-//! jitter model. Deterministic given a seed, which keeps every test and
-//! benchmark reproducible.
+//!
+//! This is the **single seeded randomness source** of the whole stack: the
+//! property-test harness ([`super::prop`]), the chaos fault injector
+//! ([`crate::sim::chaos`]), the random program generator
+//! ([`crate::sim::proggen`]) and workload generators all derive their
+//! streams from here, so every test failure can print the seed that
+//! reproduces it. Independent streams are carved out of one seed with
+//! [`Rng::split`] (decorrelated child generators) rather than ad-hoc seed
+//! arithmetic; seeds come in from the environment through [`env_seed`].
 
 /// xoshiro256** state.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
+}
+
+/// Parse a seed string: decimal, or hex with an `0x` prefix.
+pub fn parse_seed(s: &str) -> Option<u64> {
+    let t = s.trim();
+    match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        Some(h) => u64::from_str_radix(h, 16).ok(),
+        None => t.parse().ok(),
+    }
+}
+
+/// Read a seed from the environment variable `var` (decimal or `0x` hex),
+/// falling back to `default` when unset or malformed. Tests use this so a
+/// failing run can be replayed with `VAR=<seed printed in the failure>`.
+pub fn env_seed(var: &str, default: u64) -> u64 {
+    std::env::var(var).ok().and_then(|v| parse_seed(&v)).unwrap_or(default)
 }
 
 impl Rng {
@@ -98,6 +120,15 @@ impl Rng {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.range(0, xs.len())]
     }
+
+    /// Split off an independent child generator. The child is seeded from
+    /// the parent's output run back through SplitMix64 (see [`Rng::new`]),
+    /// so parent and child streams are decorrelated; the parent advances
+    /// by one draw. This is how one top-level seed fans out into per-rank
+    /// chaos streams, per-phase payload streams, etc.
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0x6C62_272E_07BB_0142)
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +180,31 @@ mod tests {
         let mut buf = [0u8; 13];
         r.fill_bytes(&mut buf);
         assert!(buf.iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let mut ca = a.split();
+        let mut cb = b.split();
+        // Same parent seed → same child stream.
+        for _ in 0..32 {
+            assert_eq!(ca.next_u64(), cb.next_u64());
+        }
+        // Child and (advanced) parent streams differ.
+        let same = (0..64).filter(|_| a.next_u64() == ca.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn seed_parsing_accepts_decimal_and_hex() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed(" 42 "), Some(42));
+        assert_eq!(parse_seed("0xDEAD"), Some(0xDEAD));
+        assert_eq!(parse_seed("0Xff"), Some(255));
+        assert_eq!(parse_seed("wat"), None);
+        assert_eq!(parse_seed(""), None);
     }
 
     #[test]

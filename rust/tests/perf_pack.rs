@@ -1,26 +1,102 @@
-// one-off micro measurement for EXPERIMENTS.md §Perf
-use ferrompi::datatype::{pack, pack_into, pack_size, Primitive, TypeMap};
+//! Pack/unpack performance regression guard.
+//!
+//! Uses the in-tree microbench harness (`util::microbench`) with
+//! deliberately generous thresholds: the goal is to catch order-of-
+//! magnitude regressions (an accidental per-element allocation, a lost
+//! memcpy fast path) without flaking on loaded CI runners. Absolute
+//! numbers are printed for EXPERIMENTS.md §Perf; only ratios and very
+//! loose floors are asserted.
+
+use ferrompi::datatype::{pack, pack_into, pack_size, unpack, Primitive, TypeMap};
 use ferrompi::util::microbench::{quick, Bench};
 
+/// Contiguous packing must behave like memcpy: both `pack` (append) and
+/// `pack_into` (in-place) within a generous factor of a plain slice copy.
 #[test]
-fn perf_pack_vs_pack_into() {
+fn perf_contiguous_pack_tracks_memcpy() {
     let map = TypeMap::primitive(Primitive::F32);
-    for count in [4096usize, 131072] {
+    for count in [4096usize, 131_072] {
+        let bytes = count * 4;
+        let src = vec![1u8; bytes];
+        let mut b = Bench::new(quick());
+        let mut dst = vec![0u8; bytes];
+        b.run(&format!("memcpy {count} f32"), || {
+            dst.copy_from_slice(&src);
+            dst[0]
+        });
+        let mut arena = vec![0u8; bytes];
+        b.run(&format!("pack_into {count} f32"), || {
+            pack_into(&map, &src, count, &mut arena).unwrap();
+            arena[0]
+        });
+        b.run(&format!("pack {count} f32"), || {
+            let mut out = Vec::with_capacity(pack_size(&map, count));
+            pack(&map, &src, count, &mut out).unwrap();
+            out.len()
+        });
+        // Generous: the contiguous fast path is a single memcpy, so even
+        // 8× covers allocator noise on a busy runner; a lost fast path
+        // (per-element loop) would be 50-100×.
+        let r_into =
+            b.ratio(&format!("pack_into {count} f32"), &format!("memcpy {count} f32")).unwrap();
+        assert!(r_into < 8.0, "pack_into/memcpy at {count}: {r_into:.2} (fast path lost?)");
+        let r_pack =
+            b.ratio(&format!("pack {count} f32"), &format!("memcpy {count} f32")).unwrap();
+        assert!(r_pack < 25.0, "pack/memcpy at {count}: {r_pack:.2}");
+        println!("pack_into/memcpy at {count}: {r_into:.3}; pack/memcpy: {r_pack:.3}");
+    }
+}
+
+/// In-place packing must never regress meaningfully below the
+/// alloc-and-copy path it was introduced to beat (EXPERIMENTS.md §Perf).
+#[test]
+fn perf_pack_into_not_slower_than_pack() {
+    let map = TypeMap::primitive(Primitive::F32);
+    for count in [4096usize, 131_072] {
         let src = vec![1u8; count * 4];
         let mut b = Bench::new(quick());
-        b.run(&format!("pack (alloc+copy) {count} f32"), || {
+        b.run("pack (alloc+copy)", || {
             let mut out = Vec::with_capacity(pack_size(&map, count));
             pack(&map, &src, count, &mut out).unwrap();
             out.len()
         });
         let mut arena = vec![0u8; count * 4];
-        b.run(&format!("pack_into (in-place) {count} f32"), || {
+        b.run("pack_into (in-place)", || {
             pack_into(&map, &src, count, &mut arena).unwrap();
             arena[0]
         });
-        let r = b
-            .ratio(&format!("pack_into (in-place) {count} f32"), &format!("pack (alloc+copy) {count} f32"))
-            .unwrap();
+        let r = b.ratio("pack_into (in-place)", "pack (alloc+copy)").unwrap();
         println!("pack_into/pack at {count}: {r:.3}");
+        // Equality is fine (the allocator may be cheap); 2× slower is not.
+        assert!(r < 2.0, "pack_into regressed vs pack at {count}: {r:.2}");
     }
+}
+
+/// Strided (vector-typemap) pack/unpack roundtrip throughput floor: the
+/// gather loop touches every block once; anything below ~50 MB/s on this
+/// small a working set means an accidental quadratic or per-block
+/// allocation crept in.
+#[test]
+fn perf_strided_roundtrip_floor() {
+    // 8192 blocks of 16 bytes with a 32-byte stride: 128 KiB of payload.
+    let base = TypeMap::primitive(Primitive::U8);
+    let map = TypeMap::vector(8192, 16, 32, &base);
+    let span = map.true_extent().max(1) as usize;
+    let src = vec![7u8; span];
+    let wire_len = pack_size(&map, 1);
+    let mut b = Bench::new(quick());
+    let mut wire = Vec::with_capacity(wire_len);
+    let mut dst = vec![0u8; span];
+    let res = b.run("strided pack+unpack 128KiB", || {
+        wire.clear();
+        pack(&map, &src, 1, &mut wire).unwrap();
+        unpack(&map, &wire, &mut dst, 1).unwrap();
+        dst[0]
+    });
+    let mb_per_s = (2.0 * wire_len as f64) / res.mean_ns() * 1e9 / 1e6;
+    println!("strided roundtrip: {mb_per_s:.0} MB/s");
+    assert!(
+        mb_per_s > 50.0,
+        "strided pack+unpack throughput collapsed: {mb_per_s:.1} MB/s"
+    );
 }

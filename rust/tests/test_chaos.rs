@@ -1,0 +1,347 @@
+//! The chaos suite: seeded schedule perturbation, quiescence auditing and
+//! randomized differential testing (see `docs/TESTING.md`).
+//!
+//! Every test here pins its chaos seeds, so a red run prints everything
+//! needed to replay it: the chaos seed (`FERROMPI_CHAOS_SEED=<seed>`), the
+//! program recipe, and the merged per-rank event trace.
+
+use ferrompi::comm::ANY_SOURCE;
+use ferrompi::datatype::{Datatype, Primitive};
+use ferrompi::modern::{Communicator, ReduceOp};
+use ferrompi::request::wait_all;
+use ferrompi::sim::chaos::ChaosConfig;
+use ferrompi::sim::proggen::{
+    assert_differential, failure_report, first_divergence, Program,
+};
+use ferrompi::transport::NetworkModel;
+use ferrompi::universe::Universe;
+use ferrompi::util::rng::env_seed;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+
+/// The default PR-gate seed matrix (the soak sweep below is env-gated).
+const CHAOS_SEEDS: &[u64] = &[0xC0FFEE, 1, 2, 3];
+
+/// Algorithm knobs are process-global; knob-writing tests serialize here.
+static KNOBS: Mutex<()> = Mutex::new(());
+
+fn knob_guard() -> std::sync::MutexGuard<'static, ()> {
+    KNOBS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------- the differential suite ----------------
+
+/// The acceptance matrix: a handcrafted program covering blocking,
+/// immediate and persistent p2p, wildcard-source and wildcard-tag
+/// receives, world and split collectives and the modern futures layer —
+/// byte-identical across every chaos seed, audits clean everywhere.
+#[test]
+fn differential_showcase_over_seed_matrix() {
+    assert_differential(&Program::showcase(4), CHAOS_SEEDS);
+}
+
+/// Generated programs: random communication DAGs, same contract. The
+/// program seed is env-overridable for replay (`FERROMPI_PROG_SEED`).
+#[test]
+fn differential_generated_programs() {
+    let base = env_seed("FERROMPI_PROG_SEED", 0x9106_0551);
+    for (i, &nranks) in [2usize, 3, 5].iter().enumerate() {
+        let program = Program::generate(base.wrapping_add(i as u64), nranks);
+        assert_differential(&program, CHAOS_SEEDS);
+    }
+}
+
+/// Long sweep, kept out of the default path: `FERROMPI_CHAOS_SOAK=1
+/// cargo test --test test_chaos -- --ignored soak` (CI runs it on
+/// workflow dispatch). 64 chaos seeds across a spread of programs.
+#[test]
+#[ignore = "env-gated soak; run with FERROMPI_CHAOS_SOAK=1"]
+fn soak_differential_sweep() {
+    if std::env::var("FERROMPI_CHAOS_SOAK").is_err() {
+        eprintln!("FERROMPI_CHAOS_SOAK not set; skipping");
+        return;
+    }
+    let chaos_seeds: Vec<u64> = (0..64u64).map(|i| 0x50AC_0000 + i).collect();
+    let base = env_seed("FERROMPI_PROG_SEED", 0xDEC0_DE);
+    assert_differential(&Program::showcase(4), &chaos_seeds);
+    for i in 0..6u64 {
+        let nranks = 2 + (i as usize % 4);
+        let program = Program::generate(base.wrapping_add(i), nranks);
+        assert_differential(&program, &chaos_seeds);
+    }
+}
+
+// ---------------- wildcard races ----------------
+
+/// `ANY_SOURCE` under forced reordering: three senders blast same-tag
+/// message sequences at rank 0. Whatever order the perturbed fabric
+/// produces, (a) the received multiset matches, and (b) each sender's own
+/// sequence matches in send order — the non-overtaking guarantee the
+/// mailbox reorder is explicitly forbidden from breaking.
+#[test]
+fn wildcard_receive_non_overtaking_under_reorder() {
+    let byte = Datatype::primitive(Primitive::Byte);
+    for &seed in CHAOS_SEEDS {
+        let mut cfg = ChaosConfig::from_seed(seed);
+        cfg.reorder_prob = 0.9; // make the race pressure unconditional
+        let u = Universe::test(4).with_chaos(cfg).audited(true);
+        let per_sender = 8usize;
+        let results = u.run(|comm| {
+            let me = comm.rank();
+            let senders = comm.size() - 1;
+            if me == 0 {
+                let total = senders * per_sender;
+                let mut bufs: Vec<[u8; 2]> = vec![[0; 2]; total];
+                let mut reqs = Vec::with_capacity(total);
+                for b in bufs.iter_mut() {
+                    reqs.push(comm.irecv(b, 2, &byte, ANY_SOURCE, 5).unwrap());
+                }
+                let stats = wait_all(&reqs).unwrap();
+                // Per-sender sequence numbers must arrive in send order.
+                let mut last: Vec<i64> = vec![-1; comm.size()];
+                for (st, b) in stats.iter().zip(&bufs) {
+                    assert_eq!(st.source as u8, b[0], "payload/status disagree");
+                    let (src, seq) = (b[0] as usize, b[1] as i64);
+                    assert!(
+                        seq > last[src],
+                        "messages from rank {src} overtook: {seq} after {}",
+                        last[src]
+                    );
+                    last[src] = seq;
+                }
+                last.iter().skip(1).all(|&l| l == per_sender as i64 - 1)
+            } else {
+                for seq in 0..per_sender {
+                    let msg = [me as u8, seq as u8];
+                    comm.send(&msg, 2, &byte, 0, 5).unwrap();
+                }
+                true
+            }
+        });
+        assert!(results.iter().all(|&ok| ok), "chaos seed {seed}");
+    }
+}
+
+// ---------------- persistent pipelines under chaos ----------------
+
+/// The lib-doc persistent pipeline (template built once, restarted every
+/// iteration) must survive restart-under-chaos with per-iteration results
+/// intact, across the seed matrix.
+#[test]
+fn persistent_pipeline_restart_under_chaos() {
+    for &seed in CHAOS_SEEDS {
+        let u = Universe::test(3).chaotic(seed).audited(true);
+        let sums = u.run(|world| {
+            let comm = Communicator::world(world);
+            let sum = comm.persistent_all_reduce::<i64>(1, ReduceOp::Sum).unwrap();
+            let op = sum.op();
+            let mut out = Vec::new();
+            for it in 0..8i64 {
+                sum.write(&[comm.rank() as i64 + it]);
+                op.start().unwrap().get().unwrap();
+                out.push(sum.output()[0]);
+            }
+            out
+        });
+        let want: Vec<i64> = (0..8).map(|it| 3 + 3 * it).collect(); // 0+1+2 + 3·it
+        for (r, got) in sums.iter().enumerate() {
+            assert_eq!(got, &want, "rank {r} under chaos seed {seed}");
+        }
+    }
+}
+
+/// Substrate-level persistent send/recv ring restarted under chaos: the
+/// registered buffers are refilled between starts, and every round's
+/// delivery must match despite reordering and delays.
+#[test]
+fn persistent_p2p_ring_restart_under_chaos() {
+    let byte = Datatype::primitive(Primitive::Byte);
+    for &seed in CHAOS_SEEDS {
+        let u = Universe::test(4).chaotic(seed).audited(true);
+        let ok = u.run(|comm| {
+            let p = comm.size();
+            let me = comm.rank();
+            let right = ((me + 1) % p) as i32;
+            let left = (me + p - 1) % p;
+            let mut sbuf = [0u8; 64];
+            let mut rbuf = [0u8; 64];
+            let stpl = comm.send_init(&sbuf, 64, &byte, right, 3).unwrap();
+            let rtpl = comm.recv_init(&mut rbuf, 64, &byte, left as i32, 3).unwrap();
+            for round in 0..6u8 {
+                sbuf.fill(me as u8 ^ round.wrapping_mul(31));
+                rtpl.start().unwrap();
+                stpl.start().unwrap();
+                rtpl.wait().unwrap();
+                stpl.wait().unwrap();
+                let want = left as u8 ^ round.wrapping_mul(31);
+                if rbuf.iter().any(|&b| b != want) {
+                    return false;
+                }
+            }
+            true
+        });
+        assert!(ok.iter().all(|&b| b), "chaos seed {seed}");
+    }
+}
+
+// ---------------- eager/rendezvous equivalence ----------------
+
+/// The same program across an eager-limit sweep — everything rendezvous,
+/// everything eager, and the boundary±1 — must produce byte-identical
+/// digests and clean quiescence audits on every setting.
+#[test]
+fn eager_limit_sweep_is_byte_identical() {
+    let program = Program::showcase(3);
+    let baseline = {
+        let u = Universe::test(3).calm().audited(true);
+        program.run(&u)
+    };
+    let default_limit = NetworkModel::zero().eager_threshold;
+    for limit in [0, 1, default_limit - 1, default_limit, default_limit + 1, 1 << 22] {
+        let mut model = NetworkModel::zero();
+        model.eager_threshold = limit;
+        let u = Universe::with_model(1, 3, model).calm().audited(true);
+        let got = program.run(&u);
+        assert_eq!(
+            got,
+            baseline,
+            "eager limit {limit}: {}",
+            first_divergence(&baseline, &got)
+        );
+    }
+}
+
+// ---------------- collective algorithm variants ----------------
+
+/// ≥ 3 allreduce variants (plus bcast and allgatherv variants) under the
+/// chaos matrix: the tuned algorithm knob must never change results.
+#[test]
+fn collective_algorithm_variants_byte_identical_under_chaos() {
+    use ferrompi::collective::config;
+    let _g = knob_guard();
+    let program = Program {
+        seed: 0xA16_0B75,
+        nranks: 4,
+        phases: vec![
+            ferrompi::sim::proggen::Phase::Collective {
+                op: ferrompi::sim::proggen::CollOp::Allreduce,
+                split: false,
+                len: 0,
+                count: 6,
+            },
+            ferrompi::sim::proggen::Phase::Collective {
+                op: ferrompi::sim::proggen::CollOp::Bcast,
+                split: true,
+                len: 1024,
+                count: 1,
+            },
+            ferrompi::sim::proggen::Phase::Collective {
+                op: ferrompi::sim::proggen::CollOp::Allgather,
+                split: false,
+                len: 512,
+                count: 1,
+            },
+        ],
+    };
+    let reset = || {
+        config::set_allreduce_alg(config::AllreduceAlg::Auto);
+        config::set_bcast_alg(config::BcastAlg::Auto);
+        config::set_allgatherv_alg(config::AllgathervAlg::Auto);
+    };
+    let baseline = {
+        reset();
+        let u = Universe::test(4).calm().audited(true);
+        program.run(&u)
+    };
+    use config::{AllgathervAlg as Ag, AllreduceAlg as Ar, BcastAlg as Bc};
+    let variants: &[(Ar, Bc, Ag)] = &[
+        (Ar::RecursiveDoubling, Bc::Binomial, Ag::Ring),
+        (Ar::Ring, Bc::Linear, Ag::Spread),
+        (Ar::ReduceBcast, Bc::Binomial, Ag::Spread),
+    ];
+    for &(ar, bc, ag) in variants {
+        config::set_allreduce_alg(ar);
+        config::set_bcast_alg(bc);
+        config::set_allgatherv_alg(ag);
+        for &seed in CHAOS_SEEDS {
+            let u = Universe::test(4).chaotic(seed).audited(true);
+            let got = program.run(&u);
+            assert_eq!(
+                got,
+                baseline,
+                "algs ({ar:?}, {bc:?}, {ag:?}) chaos seed {seed}: {}",
+                first_divergence(&baseline, &got)
+            );
+        }
+    }
+    reset();
+}
+
+// ---------------- the injector itself ----------------
+
+/// Chaos must actually fire: under forced intensities the perturbation
+/// counters (exported as `chaos_*` pvars) and the trace ring fill up.
+#[test]
+fn perturbations_fire_and_are_traced() {
+    let mut cfg = ChaosConfig::from_seed(99);
+    cfg.max_delay_ns = 5_000.0;
+    cfg.reorder_prob = 0.8;
+    cfg.yield_prob = 0.2;
+    cfg.pool_pressure = true;
+    let program = Program::showcase(3);
+    let u = Universe::test(3).with_chaos(cfg).audited(true);
+    let (_digests, fabric) = program.run_with_fabric(&u);
+    let ch = fabric.chaos.as_ref().expect("chaotic fabric");
+    assert!(ch.delays.load(Ordering::Relaxed) > 0, "no delays injected");
+    assert!(ch.reorders.load(Ordering::Relaxed) > 0, "no reorders injected");
+    assert!(ch.yields.load(Ordering::Relaxed) > 0, "no yields injected");
+    assert!(!fabric.trace.is_empty(), "trace ring stayed empty");
+    let report = fabric.trace_report();
+    assert!(report.contains("FERROMPI_CHAOS_SEED=99"));
+    assert!(report.contains("send"));
+    // Pool pressure keeps the allocation path hot: quiescence still holds
+    // (audited above), but the shrunken shelf forces fresh allocations.
+    assert!(fabric.pool.stats().allocated > 0);
+}
+
+// ---------------- forced failure: the report is replayable ----------------
+
+/// An intentionally broken comparison must produce a report carrying the
+/// chaos seed and the full program recipe — enough to replay the run.
+#[test]
+fn failure_report_contains_seed_recipe_and_divergence() {
+    let program = Program::showcase(2);
+    let baseline = vec![vec![1u64, 2, 3], vec![4, 5, 6]];
+    let mut corrupted = baseline.clone();
+    corrupted[1][2] ^= 0xBAD;
+    let report = failure_report(
+        &program,
+        Some(424242),
+        &first_divergence(&baseline, &corrupted),
+        "--- trace (example) ---",
+    );
+    for needle in [
+        "FERROMPI_CHAOS_SEED=424242",
+        "program seed",
+        "Persistent",          // the recipe lists every phase
+        "ModernAllReduce",
+        "rank 1 diverged at digest entry 2",
+        "--- trace (example) ---",
+    ] {
+        assert!(report.contains(needle), "report missing {needle:?}:\n{report}");
+    }
+}
+
+/// The `#[should_panic]` shape of the same demonstration: a broken digest
+/// check panics with the replay line in the message.
+#[test]
+#[should_panic(expected = "FERROMPI_CHAOS_SEED=66")]
+fn forced_failure_panics_with_the_replay_line() {
+    let program = Program::showcase(2);
+    let baseline = vec![vec![0u64]];
+    let corrupted = vec![vec![1u64]];
+    panic!(
+        "{}",
+        failure_report(&program, Some(66), &first_divergence(&baseline, &corrupted), "")
+    );
+}

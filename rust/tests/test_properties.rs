@@ -1,5 +1,10 @@
 //! Property-based tests (own harness, see `util::prop`) over the
 //! substrate's core invariants.
+//!
+//! All randomness flows from `util::rng` seeds; every property's seed is
+//! overridable with `FERROMPI_PROP_SEED` (decimal or `0x` hex) and is
+//! printed by the harness on failure, so any red run replays with
+//! `FERROMPI_PROP_SEED=<seed> cargo test --test test_properties`.
 
 use ferrompi::collective;
 use ferrompi::datatype::{pack, unpack, Datatype, Primitive, TypeMap};
@@ -7,7 +12,13 @@ use ferrompi::group::Group;
 use ferrompi::op::Op;
 use ferrompi::universe::Universe;
 use ferrompi::util::prop::{check_no_shrink, Config};
-use ferrompi::util::rng::Rng;
+use ferrompi::util::rng::{env_seed, Rng};
+
+/// Per-property default seeds, overridable from the environment so a
+/// failure seed can be pinned without editing the test.
+fn seed(default: u64) -> u64 {
+    env_seed("FERROMPI_PROP_SEED", default)
+}
 
 fn i32s(b: &[u8]) -> Vec<i32> {
     b.chunks(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
@@ -43,7 +54,7 @@ fn random_typemap(rng: &mut Rng, depth: usize) -> TypeMap {
 #[test]
 fn prop_pack_unpack_roundtrip_random_types() {
     check_no_shrink(
-        Config { cases: 200, seed: 0xDA7A, ..Default::default() },
+        Config { cases: 200, seed: seed(0xDA7A), ..Default::default() },
         |rng| {
             let map = random_typemap(rng, 2);
             let count = rng.range(1, 5);
@@ -80,7 +91,7 @@ fn prop_pack_unpack_roundtrip_random_types() {
 #[test]
 fn prop_group_set_algebra() {
     check_no_shrink(
-        Config { cases: 150, seed: 7, ..Default::default() },
+        Config { cases: 150, seed: seed(7), ..Default::default() },
         |rng| {
             let n = rng.range(1, 12);
             let world = Group::world(n);
@@ -123,7 +134,7 @@ fn prop_p2p_non_overtaking() {
     // Same (src, dst, tag, comm): messages must be received in send order,
     // for any interleaving of eager/rendezvous sizes.
     check_no_shrink(
-        Config { cases: 12, seed: 99, ..Default::default() },
+        Config { cases: 12, seed: seed(99), ..Default::default() },
         |rng| {
             let n = rng.range(2, 8);
             (0..n).map(|_| if rng.bool() { 8usize } else { 70_000 }).collect::<Vec<usize>>()
@@ -163,7 +174,7 @@ fn prop_allreduce_matches_oracle() {
     // Random p, random op, random counts: allreduce result equals the
     // sequentially computed oracle on every rank.
     check_no_shrink(
-        Config { cases: 12, seed: 0xA11, ..Default::default() },
+        Config { cases: 12, seed: seed(0xA11), ..Default::default() },
         |rng| {
             let p = rng.range(1, 7);
             let count = rng.range(1, 40);
@@ -209,7 +220,7 @@ fn prop_allreduce_matches_oracle() {
 #[test]
 fn prop_scan_prefix_property() {
     check_no_shrink(
-        Config { cases: 10, seed: 31, ..Default::default() },
+        Config { cases: 10, seed: seed(31), ..Default::default() },
         |rng| {
             let p = rng.range(2, 7);
             let vals: Vec<i32> = (0..p).map(|_| rng.range(0, 100) as i32).collect();
@@ -240,7 +251,7 @@ fn prop_scan_prefix_property() {
 #[test]
 fn prop_cart_coords_bijection() {
     check_no_shrink(
-        Config { cases: 60, seed: 3, ..Default::default() },
+        Config { cases: 60, seed: seed(3), ..Default::default() },
         |rng| {
             let dims: Vec<usize> = (0..rng.range(1, 4)).map(|_| rng.range(1, 5)).collect();
             (dims.clone(), rng.next_u64())
