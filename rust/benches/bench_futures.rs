@@ -95,12 +95,36 @@ fn main() {
         }
     });
 
+    let rma_t = bench_job("modern: async RMA put→get future chain", |world, iters| {
+        use ferrompi::modern::RmaWindow;
+        let win: RmaWindow<i32> = RmaWindow::allocate(world, 1).unwrap();
+        win.fence().unwrap();
+        let peer = 1 - world.rank();
+        for i in 0..iters {
+            // One remote write + readback, sequenced as a future chain —
+            // two Rma packets + two acks on pooled buffers, no rendezvous.
+            let put = win.put_async(&(i as i32), peer, 0);
+            let get = win.get_async(peer, 0);
+            let v = put
+                .then(move |p| {
+                    p.get().unwrap();
+                    get
+                })
+                .get()
+                .unwrap();
+            std::hint::black_box(v);
+        }
+        win.fence().unwrap();
+        win.free().unwrap();
+    });
+
     println!(
-        "\nratios: requests/raw = {:.3}, futures/raw = {:.3}, futures/requests = {:.3}, persistent/raw = {:.3}, persistent/futures = {:.3}",
+        "\nratios: requests/raw = {:.3}, futures/raw = {:.3}, futures/requests = {:.3}, persistent/raw = {:.3}, persistent/futures = {:.3}, rma-chain/raw = {:.3}",
         req_t / raw_t,
         fut_t / raw_t,
         fut_t / req_t,
         pers_t / raw_t,
-        pers_t / fut_t
+        pers_t / fut_t,
+        rma_t / raw_t
     );
 }

@@ -127,6 +127,7 @@ pub fn reduce(
     root: usize,
 ) -> Result<()> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let bytes = dtype.size() * count;
     let alg = tuned::resolve_reduce(comm, bytes, op.is_commutative(), config::reduce_alg());
     let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root, alg)?;
@@ -144,6 +145,7 @@ pub fn ireduce(
     root: usize,
 ) -> Result<Request> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let bytes = dtype.size() * count;
     let alg = tuned::resolve_reduce(comm, bytes, op.is_commutative(), config::reduce_alg());
     let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root, alg)?;
@@ -160,6 +162,7 @@ pub fn allreduce(
     op: &Op,
 ) -> Result<()> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let bytes = dtype.size() * count;
     let alg = tuned::resolve_allreduce(comm, bytes, op.is_commutative(), config::allreduce_alg());
     let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
@@ -176,6 +179,7 @@ pub fn iallreduce(
     op: &Op,
 ) -> Result<Request> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let bytes = dtype.size() * count;
     let alg = tuned::resolve_allreduce(comm, bytes, op.is_commutative(), config::allreduce_alg());
     let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
@@ -195,6 +199,7 @@ pub fn allreduce_init(
     op: &Op,
 ) -> Result<PersistentColl> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let bytes = dtype.size() * count;
     let alg = tuned::resolve_allreduce(comm, bytes, op.is_commutative(), config::allreduce_alg());
     let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
@@ -468,6 +473,7 @@ pub fn scan(
     op: &Op,
 ) -> Result<()> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let sched = builders::scan(comm, sbuf, rbuf, count, dtype, false);
     run_blocking(state(comm, dtype, Some(op.clone()), sched, "scan", "doubling"))
 }
@@ -482,6 +488,7 @@ pub fn exscan(
     op: &Op,
 ) -> Result<()> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let sched = builders::scan(comm, sbuf, rbuf, count, dtype, true);
     run_blocking(state(comm, dtype, Some(op.clone()), sched, "exscan", "doubling"))
 }
@@ -496,6 +503,7 @@ pub fn iscan(
     op: &Op,
 ) -> Result<Request> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let sched = builders::scan(comm, sbuf, rbuf, count, dtype, false);
     Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "iscan", "doubling")))
 }
@@ -510,6 +518,7 @@ pub fn reduce_scatter(
     op: &Op,
 ) -> Result<()> {
     dtype.require_committed()?;
+    op.require_reduction()?;
     let sched = builders::reduce_scatter(comm, sbuf, rbuf, rcounts, dtype, op)?;
     run_blocking(state(comm, dtype, Some(op.clone()), sched, "reduce_scatter", "reduce+scatterv"))
 }

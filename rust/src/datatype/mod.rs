@@ -54,6 +54,13 @@ impl Datatype {
         &self.map
     }
 
+    /// The shared typemap handle itself — what RMA accumulate packets
+    /// carry across rank threads so the target can apply the op without
+    /// re-deriving the layout.
+    pub fn shared_map(&self) -> Arc<TypeMap> {
+        self.map.clone()
+    }
+
     /// Number of wire bytes one element packs to (`MPI_Type_size`).
     pub fn size(&self) -> usize {
         self.map.size()

@@ -27,6 +27,12 @@ pub enum ReduceOp {
     BitAnd,
     BitOr,
     BitXor,
+    /// `MPI_REPLACE` — RMA accumulate only (a put with accumulate's
+    /// atomicity and ordering guarantees).
+    Replace,
+    /// `MPI_NO_OP` — RMA accumulate only (an atomic read when used with
+    /// fetch-and-op / get-accumulate).
+    NoOp,
 }
 
 impl From<ReduceOp> for Op {
@@ -42,6 +48,8 @@ impl From<ReduceOp> for Op {
             ReduceOp::BitAnd => Op::BAND,
             ReduceOp::BitOr => Op::BOR,
             ReduceOp::BitXor => Op::BXOR,
+            ReduceOp::Replace => Op::REPLACE,
+            ReduceOp::NoOp => Op::NO_OP,
         }
     }
 }

@@ -10,6 +10,7 @@
 //! | requests → futures, `.then()` chains   | [`future::MpiFuture`], `.then()`/`.map()` |
 //! | `mpi::when_all` / `when_any`           | [`future::when_all`] / [`future::when_any`] (forwarding to waitall/waitany) |
 //! | persistent ops → restartable futures   | [`pipeline::Pipeline`] / [`pipeline::PersistentOp`]: `persistent_*` templates built once, `MPI_Start(all)`-ed per iteration, `.then()` chains attached to the template |
+//! | one-sided ops → futures, RAII epochs   | [`window::RmaWindow`] `*_async` methods; [`window::FenceEpoch`] / [`window::LockEpoch`] guards whose close flushes outstanding futures |
 //! | scoped enums                           | [`enums`]                                 |
 //! | `std::optional` returns                | `Option` (e.g. [`Communicator::immediate_probe`]) |
 //! | exceptions w/ error codes              | `Result<T, MpiError>`; `panic-on-error` feature |
@@ -31,7 +32,7 @@ pub use pipeline::{
     start_all, PersistentAllReduce, PersistentBarrier, PersistentBroadcast, PersistentOp,
     PersistentRecv, PersistentSend, Pipeline, Restartable,
 };
-pub use window::RmaWindow;
+pub use window::{FenceEpoch, LockEpoch, RmaWindow};
 
 // Re-export the derive macro so `use ferrompi::modern::DataType` +
 // `#[derive(DataType)]` work together (Listing 1 ergonomics).

@@ -1,15 +1,61 @@
-//! Typed RAII wrapper over one-sided windows: an [`RmaWindow<T>`]
-//! exposes put/get/accumulate/fetch-and-op/compare-and-swap over `T`
-//! elements with scoped lock types and fence epochs, freeing the window
-//! collectively on drop. The untyped substrate lives in
-//! [`crate::onesided`].
+//! Typed RAII one-sided communication: [`RmaWindow<T>`] exposes
+//! put/get/accumulate/fetch-and-op/compare-and-swap over `T` elements,
+//! synchronously *and* as futures that chain with the rest of the modern
+//! layer, plus scoped epoch guards. The untyped request-based substrate
+//! lives in [`crate::onesided`].
+//!
+//! # Async RMA as futures
+//!
+//! The `*_async` methods return [`MpiFuture`]s backed by real RMA
+//! requests: they compose with `.then()`/`.map()`, join under
+//! [`when_all`](super::future::when_all)/`when_any`, and resolve on
+//! `.get()` exactly like immediate sends and receives — the paper's
+//! "operations map to futures" story extended to chapter 12. A put/get
+//! payload rides a pooled wire buffer end to end (zero CPU copies for
+//! contiguous types); completion means *remote* completion (the target
+//! applied the op and acked).
+//!
+//! # Epoch guards
+//!
+//! [`FenceEpoch`] and [`LockEpoch`] are RAII epochs: closing (or
+//! dropping) one first **flushes every outstanding async op** on the
+//! window, then issues the closing synchronization — so a future you have
+//! not resolved yet is still guaranteed remotely complete when the epoch
+//! closes, and resolving it afterwards cannot block.
+//!
+//! ```
+//! use ferrompi::modern::{when_all, ReduceOp, RmaWindow};
+//! use ferrompi::universe::Universe;
+//!
+//! let totals = Universe::test(2).run(|world| {
+//!     let win: RmaWindow<i64> = RmaWindow::allocate(world, 1).unwrap();
+//!     {
+//!         let epoch = win.fence_epoch().unwrap();
+//!         // Every rank bumps rank 0's counter — three async ops chained
+//!         // into one join; the epoch close flushes whatever is left.
+//!         let incs: Vec<_> =
+//!             (0..3).map(|_| win.accumulate_async(&1i64, 0, 0, ReduceOp::Sum)).collect();
+//!         when_all(incs).get().unwrap();
+//!         epoch.close().unwrap();
+//!     }
+//!     let total = win.get(0, 0).unwrap();
+//!     win.free().unwrap();
+//!     total
+//! });
+//! assert_eq!(totals, vec![6, 6]);
+//! ```
 
 use super::datatype::{Buffer, BufferMut, DataType};
 use super::enums::ReduceOp;
+use super::future::MpiFuture;
 use crate::comm::Comm;
-use crate::onesided::{LockType, Window};
+use crate::datatype::Datatype;
+use crate::onesided::window::unpack_charged;
+use crate::onesided::{LockType, RmaOp, Window};
 use crate::op::Op;
+use crate::transport::BufferPool;
 use crate::Result;
+use std::sync::Arc;
 
 /// A window of `T` elements per rank. Managed: dropping after
 /// [`RmaWindow::free`] is the intended flow; `free` is collective like
@@ -17,6 +63,27 @@ use crate::Result;
 pub struct RmaWindow<T: DataType> {
     win: Window,
     _marker: std::marker::PhantomData<T>,
+}
+
+/// Wrap a started RMA op into a future: the request drives completion,
+/// the extractor turns the target's response bytes into the value.
+fn rma_future<U: 'static>(
+    op: RmaOp,
+    extract: impl FnOnce(crate::transport::WireBytes) -> Result<U> + 'static,
+) -> MpiFuture<U> {
+    let req = op.request();
+    MpiFuture::from_request(req, move |_st| extract(op.take_payload()))
+}
+
+/// Unpack a single `T` out of a get-class response.
+fn unpack_one<T: DataType + Default>(
+    pool: &Arc<BufferPool>,
+    dt: &Datatype,
+    bytes: &[u8],
+) -> Result<T> {
+    let mut v = T::default();
+    unpack_charged(pool, dt, bytes, BufferMut::as_raw_bytes_mut(&mut v), 1)?;
+    Ok(v)
 }
 
 impl<T: DataType + Default> RmaWindow<T> {
@@ -31,7 +98,17 @@ impl<T: DataType + Default> RmaWindow<T> {
         &self.win
     }
 
+    /// The fabric's wire-buffer pool (for the async extractors' copy
+    /// accounting).
+    fn pool(&self) -> Arc<BufferPool> {
+        self.win.comm().rank_ctx().fabric.pool.clone()
+    }
+
+    // ---- blocking operations ----
+
     /// Typed put of a single value or container at element `disp`.
+    /// Blocks until remotely complete; [`RmaWindow::put_async`] is the
+    /// nonblocking form.
     pub fn put<B: Buffer<Elem = T> + ?Sized>(&self, data: &B, target: usize, disp: usize) -> Result<()> {
         self.win.put(data.as_raw_bytes(), data.count(), &T::datatype(), target, disp)
     }
@@ -49,7 +126,8 @@ impl<T: DataType + Default> RmaWindow<T> {
         Ok(v)
     }
 
-    /// Typed accumulate.
+    /// Typed accumulate — atomic at the target, even against concurrent
+    /// accumulates from other ranks.
     pub fn accumulate<B: Buffer<Elem = T> + ?Sized>(
         &self,
         data: &B,
@@ -61,7 +139,8 @@ impl<T: DataType + Default> RmaWindow<T> {
         self.win.accumulate(data.as_raw_bytes(), data.count(), &T::datatype(), target, disp, &o)
     }
 
-    /// Typed fetch-and-op.
+    /// Typed fetch-and-op: atomically combine `value` in and return the
+    /// previous element.
     pub fn fetch_and_op(&self, value: T, target: usize, disp: usize, op: ReduceOp) -> Result<T> {
         let mut old = T::default();
         let o: Op = op.into();
@@ -76,7 +155,8 @@ impl<T: DataType + Default> RmaWindow<T> {
         Ok(old)
     }
 
-    /// Typed compare-and-swap.
+    /// Typed compare-and-swap: writes `value` iff the target element
+    /// equals `compare`; always returns the old element.
     pub fn compare_and_swap(&self, value: T, compare: T, target: usize, disp: usize) -> Result<T> {
         let mut old = T::default();
         self.win.compare_and_swap(
@@ -90,7 +170,107 @@ impl<T: DataType + Default> RmaWindow<T> {
         Ok(old)
     }
 
-    /// Local access to this rank's segment as `&mut [T]`.
+    // ---- asynchronous operations (request-based RMA as futures) ----
+
+    /// Started put: the returned future resolves once the target applied
+    /// the bytes. The origin buffer is packed before return (pooled,
+    /// zero-copy for contiguous `T`) and immediately reusable.
+    pub fn put_async<B: Buffer<Elem = T> + ?Sized>(
+        &self,
+        data: &B,
+        target: usize,
+        disp: usize,
+    ) -> MpiFuture<()> {
+        match self.win.rput(data.as_raw_bytes(), data.count(), &T::datatype(), target, disp) {
+            Ok(op) => rma_future(op, |_| Ok(())),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Started single-element get; the future yields the target element.
+    pub fn get_async(&self, target: usize, disp: usize) -> MpiFuture<T> {
+        let dt = T::datatype();
+        let pool = self.pool();
+        match self.win.rget(1, &dt, target, disp) {
+            Ok(op) => rma_future(op, move |bytes| unpack_one(&pool, &dt, &bytes)),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Started get of `count` elements; the future yields a `Vec<T>`.
+    pub fn get_vec_async(&self, count: usize, target: usize, disp: usize) -> MpiFuture<Vec<T>> {
+        let dt = T::datatype();
+        let pool = self.pool();
+        match self.win.rget(count, &dt, target, disp) {
+            Ok(op) => rma_future(op, move |bytes| {
+                let mut out = vec![T::default(); count];
+                let buf = BufferMut::as_raw_bytes_mut(&mut out[..]);
+                unpack_charged(&pool, &dt, &bytes, buf, count)?;
+                Ok(out)
+            }),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Started accumulate; resolves on remote (atomic) application.
+    pub fn accumulate_async<B: Buffer<Elem = T> + ?Sized>(
+        &self,
+        data: &B,
+        target: usize,
+        disp: usize,
+        op: ReduceOp,
+    ) -> MpiFuture<()> {
+        let o: Op = op.into();
+        let dt = T::datatype();
+        match self.win.raccumulate(data.as_raw_bytes(), data.count(), &dt, target, disp, &o) {
+            Ok(rma) => rma_future(rma, |_| Ok(())),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Started fetch-and-op; the future yields the pre-op element.
+    pub fn fetch_and_op_async(
+        &self,
+        value: T,
+        target: usize,
+        disp: usize,
+        op: ReduceOp,
+    ) -> MpiFuture<T> {
+        let dt = T::datatype();
+        let o: Op = op.into();
+        let pool = self.pool();
+        match self.win.rget_accumulate(Buffer::as_raw_bytes(&value), 1, &dt, target, disp, &o) {
+            Ok(rma) => rma_future(rma, move |bytes| unpack_one(&pool, &dt, &bytes)),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Started compare-and-swap; the future yields the old element.
+    pub fn compare_and_swap_async(
+        &self,
+        value: T,
+        compare: T,
+        target: usize,
+        disp: usize,
+    ) -> MpiFuture<T> {
+        let dt = T::datatype();
+        let pool = self.pool();
+        match self.win.rcompare_and_swap(
+            Buffer::as_raw_bytes(&value),
+            Buffer::as_raw_bytes(&compare),
+            &dt,
+            target,
+            disp,
+        ) {
+            Ok(rma) => rma_future(rma, move |bytes| unpack_one(&pool, &dt, &bytes)),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    // ---- local access ----
+
+    /// Local access to this rank's segment as `&mut [T]`. The closure
+    /// must not make MPI calls (see [`Window::with_local`]).
     pub fn with_local<R>(&self, f: impl FnOnce(&mut [T]) -> R) -> R {
         self.win.with_local(|bytes| {
             let n = bytes.len() / std::mem::size_of::<T>();
@@ -99,14 +279,27 @@ impl<T: DataType + Default> RmaWindow<T> {
         })
     }
 
+    // ---- synchronization ----
+
+    /// `MPI_Win_fence`: flushes this rank's outstanding async ops, then
+    /// separates RMA epochs collectively (see
+    /// [`Window::fence`] for the exact guarantee).
     pub fn fence(&self) -> Result<()> {
         self.win.fence()
     }
 
+    /// Complete every outstanding async op at its target (local call).
+    pub fn flush_all(&self) -> Result<()> {
+        self.win.flush_all()
+    }
+
+    /// `MPI_Win_lock` — contended acquisition drives the progress engine
+    /// (inbound RMA keeps being served).
     pub fn lock(&self, lt: LockType, target: usize) -> Result<()> {
         self.win.lock(lt, target)
     }
 
+    /// `MPI_Win_unlock` — flushes this window's ops before releasing.
     pub fn unlock(&self, target: usize) -> Result<()> {
         self.win.unlock(target)
     }
@@ -119,8 +312,91 @@ impl<T: DataType + Default> RmaWindow<T> {
         self.win.unlock_all()
     }
 
-    /// Collective teardown.
+    /// Open a fence epoch as an RAII guard: the opening fence runs now;
+    /// [`FenceEpoch::close`] (or drop) flushes outstanding futures and
+    /// fences again.
+    pub fn fence_epoch(&self) -> Result<FenceEpoch<'_, T>> {
+        self.fence()?;
+        Ok(FenceEpoch { win: self, closed: false })
+    }
+
+    /// Open a passive-target lock epoch on `target` as an RAII guard;
+    /// closing flushes outstanding futures and unlocks.
+    pub fn lock_epoch(&self, lt: LockType, target: usize) -> Result<LockEpoch<'_, T>> {
+        self.lock(lt, target)?;
+        Ok(LockEpoch { win: self, target: Some(target), closed: false })
+    }
+
+    /// Open a shared lock epoch on every target as an RAII guard.
+    pub fn lock_all_epoch(&self) -> Result<LockEpoch<'_, T>> {
+        self.lock_all()?;
+        Ok(LockEpoch { win: self, target: None, closed: false })
+    }
+
+    /// Collective teardown. Erroneous (an `RmaSync` error) while a lock
+    /// epoch is still open.
     pub fn free(self) -> Result<()> {
         self.win.free()
+    }
+}
+
+/// An open fence epoch (`MPI_Win_fence` ... `MPI_Win_fence`). Closing —
+/// explicitly via [`FenceEpoch::close`] for error visibility, or by drop —
+/// flushes the window's outstanding async ops and fences, so every op
+/// issued inside the epoch is remotely complete when it ends.
+#[must_use = "an unclosed fence epoch closes (and blocks) at end of scope"]
+pub struct FenceEpoch<'w, T: DataType> {
+    win: &'w RmaWindow<T>,
+    closed: bool,
+}
+
+impl<T: DataType + Default> FenceEpoch<'_, T> {
+    /// Close the epoch: flush outstanding futures, then fence.
+    pub fn close(mut self) -> Result<()> {
+        self.closed = true;
+        self.win.fence()
+    }
+}
+
+impl<T: DataType> Drop for FenceEpoch<'_, T> {
+    fn drop(&mut self) {
+        if !self.closed && !std::thread::panicking() {
+            let _ = self.win.win.fence();
+        }
+    }
+}
+
+/// An open passive-target lock epoch. Closing — explicitly via
+/// [`LockEpoch::close`], or by drop — flushes the window's outstanding
+/// async ops, then unlocks, so the lock is never observable as free
+/// before the epoch's ops completed at the target.
+#[must_use = "an unclosed lock epoch unlocks (and flushes) at end of scope"]
+pub struct LockEpoch<'w, T: DataType> {
+    win: &'w RmaWindow<T>,
+    /// `None` = a `lock_all` epoch.
+    target: Option<usize>,
+    closed: bool,
+}
+
+impl<T: DataType + Default> LockEpoch<'_, T> {
+    /// Close the epoch: flush, then unlock.
+    pub fn close(mut self) -> Result<()> {
+        self.closed = true;
+        match self.target {
+            Some(t) => self.win.unlock(t),
+            None => self.win.unlock_all(),
+        }
+    }
+}
+
+impl<T: DataType> Drop for LockEpoch<'_, T> {
+    fn drop(&mut self) {
+        if self.closed || std::thread::panicking() {
+            return;
+        }
+        let _ = match self.target {
+            Some(t) => self.win.win.unlock(t),
+            None => self.win.win.unlock_all(),
+        };
     }
 }

@@ -1,14 +1,23 @@
-//! One-sided communication (MPI-4.0 §12): windows, put/get/accumulate,
-//! and the three synchronization families (fence; post-start-complete-wait;
-//! passive-target lock/unlock).
+//! One-sided communication (MPI-4.0 §12): windows, request-based
+//! put/get/accumulate, and the three synchronization families (fence;
+//! post-start-complete-wait; passive-target lock/unlock).
 //!
-//! Simulation mapping: window memory is owned by the window object and
-//! shared across rank threads behind per-rank mutexes — the moral
-//! equivalent of RDMA-exposed memory. RMA data movement charges the α–β
-//! model to the *origin's* clock (one-sided: the target's CPU is not
-//! involved), and synchronization calls ride the ordinary collective /
-//! p2p machinery, which propagates clocks causally.
+//! Simulation mapping: window memory is **rank-local** — each rank exposes
+//! its segment to its own progress engine, and remote operations travel
+//! the ordinary fabric as `Rma*` packets on pooled
+//! [`WireBytes`](crate::transport::WireBytes) buffers (no rendezvous
+//! handshake: the origin names the target address, exactly like an RDMA
+//! verb). The target's engine thread applies each op and acks it, which
+//! serializes RMA atomics for free and charges the α–β model through the
+//! packet clock causally. Only the passive-target lock table is shared
+//! across ranks (the moral equivalent of NIC-side atomics), and waiting
+//! for it drives the progress engine so lock contention cannot stall
+//! inbound traffic.
+//!
+//! Every operation is asynchronous at the substrate ([`window::RmaOp`]);
+//! blocking calls are `start + wait`. See [`window`] for the epoch
+//! invariants and `docs/RMA.md` for the full model.
 
 pub mod window;
 
-pub use window::{LockType, Window};
+pub use window::{LockType, RmaOp, Window};

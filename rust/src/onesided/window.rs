@@ -1,11 +1,91 @@
-//! RMA windows.
+//! RMA windows (`MPI_Win`) over the transport path.
+//!
+//! # Architecture
+//!
+//! A window is **rank-local exposed memory plus a shared lock table**:
+//!
+//! * Each rank owns the segment it contributed to `MPI_Win_allocate`,
+//!   registered with its [`RankCtx`] under the window id
+//!   ([`engine::register_window`]). Only the owning rank's engine thread
+//!   ever touches it — remote puts/gets/accumulates arrive as `Rma*`
+//!   packets through the fabric and are applied when the target's
+//!   progress loop runs (the passive-target progress rule of a
+//!   software-emulated RDMA stack). That single-writer discipline is what
+//!   makes accumulate / fetch-and-op / compare-and-swap atomic across
+//!   origins with no data locking at all.
+//! * The passive-target lock table ([`LockType`] state per target) is the
+//!   one genuinely shared piece, published through the fabric registry —
+//!   the moral equivalent of NIC-side atomics. Acquisition is
+//!   *progress-driven*: a rank polling for a contended lock keeps turning
+//!   its engine ([`engine::wait_for`]), so it continues to serve inbound
+//!   RMA traffic while it waits and lock cycles cannot deadlock the
+//!   fabric.
+//!
+//! # Request-based operations and completion
+//!
+//! Every data op (`rput`/`rget`/`raccumulate`/`rget_accumulate`/
+//! `rcompare_and_swap`) is asynchronous at the substrate: it packs the
+//! origin payload onto a pooled wire buffer (contiguous layouts are a
+//! single DMA-modeled append — zero CPU copies, nothing charged to
+//! `wire_bytes_copied`; non-contiguous staging is charged), injects one
+//! `Rma*` packet, and returns an [`RmaOp`] whose token completes when the
+//! target's ack/response arrives. Because the origin names the target
+//! address outright, there is no rendezvous handshake — a put is one data
+//! crossing plus an ack regardless of size.
+//!
+//! The blocking API (`put`/`get`/...) is the async API plus an immediate
+//! wait. The modern layer wraps [`RmaOp`] into an
+//! [`MpiFuture`](crate::modern::MpiFuture) via [`RmaOp::request`], so RMA
+//! chains compose with `.then()`/`when_all` like any other request.
+//!
+//! # Epoch invariants (what each sync call guarantees)
+//!
+//! * [`Window::flush`]/[`Window::flush_all`] — every op this rank issued
+//!   on the window is complete at its target (ack received) on return.
+//! * [`Window::fence`] — flush_all **then** barrier: all ops of the
+//!   closing epoch, by every rank, are applied before any rank exits.
+//! * [`Window::unlock`]/[`Window::unlock_all`] — flush first, then
+//!   release, so a lock epoch's ops are remotely complete before the lock
+//!   is observable as free.
+//! * PSCW (`post`/`start`/`complete`/`wait`) — `complete` is preceded by
+//!   a flush; per-sender FIFO delivery then orders the access epoch's
+//!   last data packet before the completion message at the target.
+//!
+//! ```
+//! use ferrompi::datatype::{Datatype, Primitive};
+//! use ferrompi::onesided::Window;
+//! use ferrompi::universe::Universe;
+//!
+//! let firsts = Universe::test(2).run(|world| {
+//!     let i64t = Datatype::primitive(Primitive::I64);
+//!     let win = Window::allocate(world, 8, 8).unwrap();
+//!     win.fence().unwrap();
+//!     // Each rank writes (rank+1) into its peer's single slot — as a
+//!     // started op whose completion is awaited explicitly.
+//!     let peer = 1 - world.rank();
+//!     let val = (world.rank() as i64 + 1).to_le_bytes();
+//!     let op = win.rput(&val, 1, &i64t, peer, 0).unwrap();
+//!     op.wait().unwrap();
+//!     win.fence().unwrap();
+//!     let got = win.with_local(|m| i64::from_le_bytes(m[..8].try_into().unwrap()));
+//!     win.free().unwrap();
+//!     got
+//! });
+//! assert_eq!(firsts, vec![2, 1]);
+//! ```
 
 use crate::collective;
 use crate::comm::Comm;
-use crate::datatype::{pack, unpack, Datatype};
+use crate::datatype::{pack_size, unpack, Datatype};
 use crate::op::Op;
+use crate::p2p::engine::{self, RmaKind};
+use crate::p2p::RankCtx;
+use crate::request::{CustomRequest, Request};
+use crate::transport::{BufferPool, PoolHandle, WireBytes};
 use crate::{mpi_err, Result};
-use std::sync::{Arc, Condvar, Mutex};
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// `MPI_LOCK_EXCLUSIVE` / `MPI_LOCK_SHARED`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,27 +101,30 @@ struct LockState {
     shared: usize,
 }
 
+/// One target's lock word — shared across rank threads like an RDMA
+/// atomic. Deliberately condvar-free: contended acquirers poll through
+/// [`engine::wait_for`] so their progress engine keeps serving inbound
+/// RMA packets while they wait (a condvar sleep here deadlocks the
+/// fabric: the holder may be waiting for *this* rank to ack a put).
 #[derive(Debug, Default)]
 struct TargetLock {
     state: Mutex<LockState>,
-    cv: Condvar,
 }
 
 impl TargetLock {
-    fn acquire(&self, lt: LockType) {
+    /// Try to take the lock; never blocks.
+    fn try_acquire(&self, lt: LockType) -> bool {
         let mut st = self.state.lock().unwrap();
-        loop {
-            match lt {
-                LockType::Exclusive if !st.exclusive && st.shared == 0 => {
-                    st.exclusive = true;
-                    return;
-                }
-                LockType::Shared if !st.exclusive => {
-                    st.shared += 1;
-                    return;
-                }
-                _ => st = self.cv.wait(st).unwrap(),
+        match lt {
+            LockType::Exclusive if !st.exclusive && st.shared == 0 => {
+                st.exclusive = true;
+                true
             }
+            LockType::Shared if !st.exclusive => {
+                st.shared += 1;
+                true
+            }
+            _ => false,
         }
     }
 
@@ -51,35 +134,138 @@ impl TargetLock {
             LockType::Exclusive => st.exclusive = false,
             LockType::Shared => st.shared = st.shared.saturating_sub(1),
         }
-        drop(st);
-        self.cv.notify_all();
     }
 }
 
-/// Shared (cross-rank) part of a window.
+/// The registry-published (cross-rank) part of a window: only the lock
+/// table — window *data* is rank-local (see module docs).
 #[derive(Debug)]
-struct WinShared {
-    segments: Vec<Mutex<Vec<u8>>>,
+struct WinMeta {
     locks: Vec<TargetLock>,
-    disp_units: Vec<usize>,
 }
 
-/// An RMA window (`MPI_Win`), created collectively. Dropping it frees the
-/// local view; the shared memory lives until the last rank drops.
+/// Origin-side completion handle of one one-sided operation. Implements
+/// [`CustomRequest`] so an RMA op *is* an `MPI_Request` to the completion
+/// family (`wait_all`, `when_all`, `MpiFuture`). The handle also keeps the
+/// window's outstanding-op list honest: consuming the completion (or
+/// dropping the last reference) deregisters the token.
+#[derive(Debug)]
+struct RmaOpHandle {
+    ctx: Rc<RankCtx>,
+    token: u64,
+    /// The owning window's outstanding-token list (flush waits on it).
+    pending: Rc<RefCell<Vec<u64>>>,
+    /// Response payload, stashed by `take_status` for the extractor.
+    payload: RefCell<Option<WireBytes>>,
+    taken: Cell<bool>,
+}
+
+impl RmaOpHandle {
+    fn deregister(&self) {
+        self.pending.borrow_mut().retain(|&t| t != self.token);
+    }
+}
+
+impl CustomRequest for RmaOpHandle {
+    fn done(&self) -> bool {
+        engine::rma_done(&self.ctx, self.token)
+    }
+
+    fn take_status(&self) -> Result<crate::p2p::Status> {
+        let data = engine::take_rma_result(&self.ctx, self.token)?;
+        self.deregister();
+        let bytes = data.len();
+        *self.payload.borrow_mut() = Some(data);
+        self.taken.set(true);
+        Ok(crate::p2p::Status { source: -1, tag: -1, bytes, cancelled: false })
+    }
+}
+
+impl Drop for RmaOpHandle {
+    /// Dropping an unconsumed op (e.g. an abandoned future) blocks until
+    /// the target's reply arrives, then discards it: the response may pin
+    /// a pooled wire buffer that must go back to the pool, and a token
+    /// left pending would trip the quiescence audit. Skipped while
+    /// unwinding (the engine only runs on this dying thread anyway).
+    fn drop(&mut self) {
+        if self.taken.get() {
+            return;
+        }
+        self.deregister();
+        if std::thread::panicking() {
+            return;
+        }
+        if engine::wait_for(&self.ctx, || engine::rma_done(&self.ctx, self.token)).is_ok() {
+            let _ = engine::take_rma_result(&self.ctx, self.token);
+        }
+    }
+}
+
+/// A started one-sided operation (the product of
+/// [`Window::rput`]-family calls): a completion token plus, for
+/// get-class ops, the response bytes.
+#[derive(Debug)]
+pub struct RmaOp {
+    handle: Rc<RmaOpHandle>,
+}
+
+impl RmaOp {
+    /// View this op as an `MPI_Request` for the completion family. Create
+    /// **one** request per op — the request consumes the completion, so a
+    /// second one would find the token already taken.
+    pub fn request(&self) -> Request {
+        Request::custom(self.handle.ctx.clone(), self.handle.clone())
+    }
+
+    /// Drive to completion, discarding any response payload (put/acc).
+    pub fn wait(self) -> Result<()> {
+        self.request().wait().map(|_| ())
+    }
+
+    /// Drive to completion and take the target's response bytes (get /
+    /// fetching-accumulate / compare-and-swap; empty for put/acc).
+    pub fn wait_bytes(self) -> Result<WireBytes> {
+        self.request().wait()?;
+        Ok(self.take_payload())
+    }
+
+    /// The stashed response after completion (empty if none). Used by the
+    /// modern layer's future extractors; meaningless before the request
+    /// produced by [`RmaOp::request`] has completed.
+    pub fn take_payload(&self) -> WireBytes {
+        self.handle.payload.borrow_mut().take().unwrap_or_else(WireBytes::empty)
+    }
+}
+
+/// An RMA window (`MPI_Win`), created collectively over a communicator
+/// (which is duplicated internally, like real implementations do, so
+/// window synchronization cannot interfere with user communication).
+///
+/// See the [module docs](self) for the architecture and the epoch
+/// invariants every synchronization method upholds.
 pub struct Window {
     comm: Comm,
+    /// Fabric-registry key of the shared lock table.
     key: u64,
-    shared: Arc<WinShared>,
+    /// Fabric-wide window id (the dup'd communicator's collective context
+    /// id — unique per job), carried in every `Rma*` packet.
+    win_id: u32,
+    meta: Arc<WinMeta>,
+    /// Per-rank segment sizes in bytes (allgathered at creation; origin-
+    /// side range checks consult this so misuse fails fast and locally).
+    sizes: Vec<usize>,
+    disp_units: Vec<usize>,
     /// Locks this rank currently holds (target → type), so unlock_all and
     /// error checking work.
-    held: std::cell::RefCell<Vec<(usize, LockType)>>,
+    held: RefCell<Vec<(usize, LockType)>>,
+    /// Tokens of this rank's outstanding ops on this window; flush and
+    /// epoch closes wait on them.
+    pending: Rc<RefCell<Vec<u64>>>,
 }
 
 impl Window {
     /// `MPI_Win_allocate`: every rank contributes `local_size` bytes with
-    /// displacement unit `disp_unit`. Collective over `comm` (which is
-    /// duplicated internally, like real implementations do, so window
-    /// traffic cannot interfere with user communication).
+    /// displacement unit `disp_unit`. Collective over `comm`.
     pub fn allocate(comm: &Comm, local_size: usize, disp_unit: usize) -> Result<Window> {
         let comm = comm.dup()?;
         let p = comm.size();
@@ -88,93 +274,256 @@ impl Window {
         let mine = [(local_size as u64).to_le_bytes(), (disp_unit as u64).to_le_bytes()].concat();
         let mut all = vec![0u8; 16 * p];
         collective::allgather(&comm, Some(&mine), 2, &u64t, &mut all, 2, &u64t)?;
-        let sizes: Vec<usize> =
-            (0..p).map(|i| u64::from_le_bytes(all[16 * i..16 * i + 8].try_into().unwrap()) as usize).collect();
+        let sizes: Vec<usize> = (0..p)
+            .map(|i| u64::from_le_bytes(all[16 * i..16 * i + 8].try_into().unwrap()) as usize)
+            .collect();
         let disp_units: Vec<usize> = (0..p)
             .map(|i| u64::from_le_bytes(all[16 * i + 8..16 * i + 16].try_into().unwrap()) as usize)
             .collect();
 
-        // Rank 0 builds the shared segments and publishes them in the
-        // fabric registry under the (unique) window-communicator context
-        // id; a barrier orders publish before fetch.
-        let fabric = comm.rank_ctx().fabric.clone();
-        let key = 0x5749_0000_0000_0000u64 | comm.ctx_coll() as u64;
+        // Expose this rank's own segment to the engine, publish the shared
+        // lock table under the (unique) window-communicator context id; a
+        // barrier orders publish before fetch and registration before any
+        // peer's first RMA packet.
+        let win_id = comm.ctx_coll();
+        let ctx = comm.rank_ctx().clone();
+        engine::register_window(&ctx, win_id, sizes[comm.rank()]);
+        let fabric = ctx.fabric.clone();
+        let key = 0x5749_0000_0000_0000u64 | win_id as u64;
         if comm.rank() == 0 {
-            let s: Arc<WinShared> = Arc::new(WinShared {
-                segments: sizes.iter().map(|&n| Mutex::new(vec![0u8; n])).collect(),
-                locks: (0..p).map(|_| TargetLock::default()).collect(),
-                disp_units,
-            });
-            fabric.publish(key, s);
+            let m: Arc<WinMeta> =
+                Arc::new(WinMeta { locks: (0..p).map(|_| TargetLock::default()).collect() });
+            fabric.publish(key, m);
         }
         collective::barrier(&comm)?;
-        let shared = fabric
+        let meta = fabric
             .fetch(key)
             .ok_or_else(|| mpi_err!(Win, "window registry entry missing"))?
-            .downcast::<WinShared>()
+            .downcast::<WinMeta>()
             .map_err(|_| mpi_err!(Intern, "window registry type mismatch"))?;
-        Ok(Window { comm, key, shared, held: std::cell::RefCell::new(Vec::new()) })
+        Ok(Window {
+            comm,
+            key,
+            win_id,
+            meta,
+            sizes,
+            disp_units,
+            held: RefCell::new(Vec::new()),
+            pending: Rc::new(RefCell::new(Vec::new())),
+        })
     }
 
     pub fn comm(&self) -> &Comm {
         &self.comm
     }
 
+    /// Segment size (bytes) rank `rank` exposed.
     pub fn size_of(&self, rank: usize) -> usize {
-        self.shared.segments[rank].lock().unwrap().len()
+        self.sizes[rank]
     }
 
     /// Read/modify this rank's local window memory
     /// (`MPI_Win_allocate` base-pointer access).
+    ///
+    /// Invariant: the closure must not make MPI calls — driving the
+    /// progress engine inside it could deliver a remote RMA op to this
+    /// same segment while it is mutably borrowed. Remote ops queued in the
+    /// mailbox are applied only by this rank's later progress calls, so
+    /// plain local access here is race-free by construction.
     pub fn with_local<T>(&self, f: impl FnOnce(&mut [u8]) -> T) -> T {
-        let mut seg = self.shared.segments[self.comm.rank()].lock().unwrap();
+        let mem = engine::window_local(self.comm.rank_ctx(), self.win_id)
+            .expect("window registered for its lifetime");
+        let mut seg = mem.seg.borrow_mut();
         f(&mut seg)
     }
 
-    fn charge(&self, bytes: usize, target: usize) {
-        let ctx = self.comm.rank_ctx();
-        let me = ctx.world_rank;
-        let tw = self.comm.group().world_rank(target).unwrap_or(me);
-        let same = ctx.fabric.nodemap.same_node(me, tw);
-        ctx.clock.charge(ctx.fabric.model.cost_ns(bytes, same));
-    }
-
-    fn byte_offset(&self, target: usize, disp: usize) -> usize {
-        disp * self.shared.disp_units[target]
-    }
-
-    /// `MPI_Put`.
-    pub fn put(&self, origin: &[u8], count: usize, dtype: &Datatype, target: usize, target_disp: usize) -> Result<()> {
-        dtype.require_committed()?;
-        let mut wire = Vec::new();
-        pack(dtype.map(), origin, count, &mut wire)?;
-        let off = self.byte_offset(target, target_disp);
-        {
-            let mut seg = self.shared.segments[target].lock().unwrap();
-            if off + wire.len() > seg.len() {
-                return Err(mpi_err!(RmaRange, "put of {} bytes at {off} exceeds window {}", wire.len(), seg.len()));
-            }
-            seg[off..off + wire.len()].copy_from_slice(&wire);
+    fn byte_span(&self, target: usize, disp: usize, nbytes: usize) -> Result<usize> {
+        if target >= self.comm.size() {
+            return Err(mpi_err!(Rank, "RMA target rank {target} out of range"));
         }
-        self.charge(wire.len(), target);
-        Ok(())
+        let off = disp
+            .checked_mul(self.disp_units[target])
+            .ok_or_else(|| mpi_err!(RmaRange, "RMA displacement {disp} overflows"))?;
+        match off.checked_add(nbytes) {
+            Some(end) if end <= self.sizes[target] => Ok(off),
+            _ => Err(mpi_err!(
+                RmaRange,
+                "RMA span of {nbytes} bytes at {off} exceeds segment of {} on rank {target}",
+                self.sizes[target]
+            )),
+        }
+    }
+
+    /// Inject one op and track its token on this window.
+    fn start_op(&self, target: usize, off: usize, kind: RmaKind) -> Result<RmaOp> {
+        let ctx = self.comm.rank_ctx().clone();
+        let dst_world = self.comm.group().world_rank(target)?;
+        let token = engine::start_rma(&ctx, dst_world, self.win_id, off, kind);
+        self.pending.borrow_mut().push(token);
+        Ok(RmaOp {
+            handle: Rc::new(RmaOpHandle {
+                ctx,
+                token,
+                pending: self.pending.clone(),
+                payload: RefCell::new(None),
+                taken: Cell::new(false),
+            }),
+        })
+    }
+
+    fn predefined(op: &Op) -> Result<crate::op::OpKind> {
+        match op {
+            Op::Predefined(k) => Ok(*k),
+            Op::User { .. } => {
+                Err(mpi_err!(Op, "RMA accumulate requires a predefined op (MPI-4.0 §12.3.4)"))
+            }
+        }
+    }
+
+    // ---- request-based (asynchronous) operations ----
+
+    /// `MPI_Rput`: started put. The origin buffer is packed onto a pooled
+    /// wire buffer before return (contiguous = one DMA-modeled append,
+    /// zero charged copies), so it is immediately reusable.
+    pub fn rput(
+        &self,
+        origin: &[u8],
+        count: usize,
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+    ) -> Result<RmaOp> {
+        dtype.require_committed()?;
+        let nbytes = pack_size(dtype.map(), count);
+        let off = self.byte_span(target, target_disp, nbytes)?;
+        let data = engine::pack_wire(self.comm.rank_ctx(), dtype.map(), origin, count)?;
+        self.start_op(target, off, RmaKind::Put { data })
+    }
+
+    /// `MPI_Rget`: started get. The response bytes arrive on a pooled wire
+    /// buffer; take them with [`RmaOp::wait_bytes`] (or let the modern
+    /// layer's future unpack them).
+    pub fn rget(
+        &self,
+        count: usize,
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+    ) -> Result<RmaOp> {
+        dtype.require_committed()?;
+        let nbytes = pack_size(dtype.map(), count);
+        let off = self.byte_span(target, target_disp, nbytes)?;
+        self.start_op(target, off, RmaKind::Get { nbytes })
+    }
+
+    /// `MPI_Raccumulate` (predefined ops + REPLACE), atomic at the target.
+    #[allow(clippy::too_many_arguments)]
+    pub fn raccumulate(
+        &self,
+        origin: &[u8],
+        count: usize,
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+        op: &Op,
+    ) -> Result<RmaOp> {
+        dtype.require_committed()?;
+        let kind = Self::predefined(op)?;
+        let nbytes = pack_size(dtype.map(), count);
+        let off = self.byte_span(target, target_disp, nbytes)?;
+        let data = engine::pack_wire(self.comm.rank_ctx(), dtype.map(), origin, count)?;
+        self.start_op(
+            target,
+            off,
+            RmaKind::Acc { data, count, map: dtype.shared_map(), op: kind, fetch: false },
+        )
+    }
+
+    /// `MPI_Rget_accumulate`: atomically fetch the old bytes, then
+    /// combine. The response carries the pre-op value.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rget_accumulate(
+        &self,
+        origin: &[u8],
+        count: usize,
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+        op: &Op,
+    ) -> Result<RmaOp> {
+        dtype.require_committed()?;
+        let kind = Self::predefined(op)?;
+        let nbytes = pack_size(dtype.map(), count);
+        let off = self.byte_span(target, target_disp, nbytes)?;
+        let data = engine::pack_wire(self.comm.rank_ctx(), dtype.map(), origin, count)?;
+        self.start_op(
+            target,
+            off,
+            RmaKind::Acc { data, count, map: dtype.shared_map(), op: kind, fetch: true },
+        )
+    }
+
+    /// Started single-element compare-and-swap; the response carries the
+    /// old target bytes.
+    pub fn rcompare_and_swap(
+        &self,
+        origin: &[u8],
+        compare: &[u8],
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+    ) -> Result<RmaOp> {
+        dtype.require_committed()?;
+        let n = dtype.size();
+        let off = self.byte_span(target, target_disp, n)?;
+        let ctx = self.comm.rank_ctx();
+        // origin ‖ compare on one pooled buffer.
+        let mut wire = ctx.fabric.pool.take(2 * n);
+        crate::datatype::pack(dtype.map(), origin, 1, &mut wire)?;
+        crate::datatype::pack(dtype.map(), compare, 1, &mut wire)?;
+        if !dtype.map().is_contiguous() {
+            ctx.fabric.pool.count_copied(wire.len());
+        }
+        self.start_op(target, off, RmaKind::Cas { data: wire.freeze() })
+    }
+
+    // ---- blocking operations (async + immediate wait) ----
+
+    /// Unpack a get-class response into the caller's typed buffer (see
+    /// [`unpack_charged`] — the one copy-accounting rule for responses).
+    fn unpack_response(
+        &self,
+        data: &WireBytes,
+        buf: &mut [u8],
+        count: usize,
+        dtype: &Datatype,
+    ) -> Result<()> {
+        unpack_charged(&self.comm.rank_ctx().fabric.pool, dtype, data, buf, count)
+    }
+
+    /// `MPI_Put` (blocking until remotely complete).
+    pub fn put(
+        &self,
+        origin: &[u8],
+        count: usize,
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+    ) -> Result<()> {
+        self.rput(origin, count, dtype, target, target_disp)?.wait()
     }
 
     /// `MPI_Get`.
-    pub fn get(&self, origin: &mut [u8], count: usize, dtype: &Datatype, target: usize, target_disp: usize) -> Result<()> {
-        dtype.require_committed()?;
-        let nbytes = dtype.size() * count;
-        let off = self.byte_offset(target, target_disp);
-        let wire = {
-            let seg = self.shared.segments[target].lock().unwrap();
-            if off + nbytes > seg.len() {
-                return Err(mpi_err!(RmaRange, "get of {nbytes} bytes at {off} exceeds window {}", seg.len()));
-            }
-            seg[off..off + nbytes].to_vec()
-        };
-        unpack(dtype.map(), &wire, origin, count)?;
-        self.charge(nbytes, target);
-        Ok(())
+    pub fn get(
+        &self,
+        origin: &mut [u8],
+        count: usize,
+        dtype: &Datatype,
+        target: usize,
+        target_disp: usize,
+    ) -> Result<()> {
+        let data = self.rget(count, dtype, target, target_disp)?.wait_bytes()?;
+        self.unpack_response(&data, origin, count, dtype)
     }
 
     /// `MPI_Accumulate` (predefined ops + REPLACE).
@@ -188,22 +537,11 @@ impl Window {
         target_disp: usize,
         op: &Op,
     ) -> Result<()> {
-        dtype.require_committed()?;
-        let mut wire = Vec::new();
-        pack(dtype.map(), origin, count, &mut wire)?;
-        let off = self.byte_offset(target, target_disp);
-        {
-            let mut seg = self.shared.segments[target].lock().unwrap();
-            if off + wire.len() > seg.len() {
-                return Err(mpi_err!(RmaRange, "accumulate exceeds window"));
-            }
-            op.apply(dtype.map(), &wire, &mut seg[off..off + wire.len()], count)?;
-        }
-        self.charge(wire.len(), target);
-        Ok(())
+        self.raccumulate(origin, count, dtype, target, target_disp, op)?.wait()
     }
 
-    /// `MPI_Get_accumulate`: fetch old value, then combine.
+    /// `MPI_Get_accumulate`: fetch old value, then combine — one atomic
+    /// step at the target.
     #[allow(clippy::too_many_arguments)]
     pub fn get_accumulate(
         &self,
@@ -215,22 +553,9 @@ impl Window {
         target_disp: usize,
         op: &Op,
     ) -> Result<()> {
-        dtype.require_committed()?;
-        let mut wire = Vec::new();
-        pack(dtype.map(), origin, count, &mut wire)?;
-        let off = self.byte_offset(target, target_disp);
-        let old = {
-            let mut seg = self.shared.segments[target].lock().unwrap();
-            if off + wire.len() > seg.len() {
-                return Err(mpi_err!(RmaRange, "get_accumulate exceeds window"));
-            }
-            let old = seg[off..off + wire.len()].to_vec();
-            op.apply(dtype.map(), &wire, &mut seg[off..off + wire.len()], count)?;
-            old
-        };
-        unpack(dtype.map(), &old, result, count)?;
-        self.charge(2 * wire.len(), target);
-        Ok(())
+        let data =
+            self.rget_accumulate(origin, count, dtype, target, target_disp, op)?.wait_bytes()?;
+        self.unpack_response(&data, result, count, dtype)
     }
 
     /// `MPI_Fetch_and_op` (single element).
@@ -257,55 +582,65 @@ impl Window {
         target: usize,
         target_disp: usize,
     ) -> Result<()> {
-        dtype.require_committed()?;
-        let n = dtype.size();
-        let off = self.byte_offset(target, target_disp);
-        let mut owire = Vec::new();
-        pack(dtype.map(), origin, 1, &mut owire)?;
-        let mut cwire = Vec::new();
-        pack(dtype.map(), compare, 1, &mut cwire)?;
-        let old = {
-            let mut seg = self.shared.segments[target].lock().unwrap();
-            if off + n > seg.len() {
-                return Err(mpi_err!(RmaRange, "compare_and_swap exceeds window"));
-            }
-            let old = seg[off..off + n].to_vec();
-            if old == cwire {
-                seg[off..off + n].copy_from_slice(&owire);
-            }
-            old
-        };
-        unpack(dtype.map(), &old, result, 1)?;
-        self.charge(2 * n, target);
-        Ok(())
+        let data =
+            self.rcompare_and_swap(origin, compare, dtype, target, target_disp)?.wait_bytes()?;
+        self.unpack_response(&data, result, 1, dtype)
     }
 
     // ---- synchronization ----
 
-    /// `MPI_Win_fence`: separates RMA epochs; collective.
+    /// `MPI_Win_flush`: every op this rank issued on the window is
+    /// complete at its target on return. (Implemented as a full
+    /// [`Window::flush_all`] — per-target would be legal but weaker.)
+    pub fn flush(&self, _target: usize) -> Result<()> {
+        self.flush_all()
+    }
+
+    /// `MPI_Win_flush_all`: wait (driving progress) until the target ack
+    /// of every outstanding op has arrived. Completion state is left for
+    /// the ops' futures — a flushed future resolves without blocking.
+    pub fn flush_all(&self) -> Result<()> {
+        let toks: Vec<u64> = self.pending.borrow().clone();
+        if toks.is_empty() {
+            return Ok(());
+        }
+        let ctx = self.comm.rank_ctx();
+        engine::wait_for(ctx, || toks.iter().all(|&t| engine::rma_done(ctx, t)))
+    }
+
+    /// `MPI_Win_fence`: closes one epoch and opens the next. Flushes this
+    /// rank's outstanding ops, then barriers — after the fence every op
+    /// of the closing epoch, by every rank, is applied at its target.
     pub fn fence(&self) -> Result<()> {
+        self.flush_all()?;
         collective::barrier(&self.comm)
     }
 
-    /// `MPI_Win_lock`.
+    /// `MPI_Win_lock`. Contended acquisition keeps driving the progress
+    /// engine, so inbound RMA traffic is served while waiting.
     pub fn lock(&self, lt: LockType, target: usize) -> Result<()> {
         if self.held.borrow().iter().any(|&(t, _)| t == target) {
             return Err(mpi_err!(RmaSync, "window already locked for target {target}"));
         }
-        self.shared.locks[target].acquire(lt);
+        let lock = &self.meta.locks[target];
+        engine::wait_for(self.comm.rank_ctx(), || lock.try_acquire(lt))?;
         self.held.borrow_mut().push((target, lt));
         Ok(())
     }
 
-    /// `MPI_Win_unlock`.
+    /// `MPI_Win_unlock`: flushes the epoch's ops, then releases — the
+    /// lock is never observable as free before its ops are remotely
+    /// complete.
     pub fn unlock(&self, target: usize) -> Result<()> {
-        let mut held = self.held.borrow_mut();
-        let idx = held
+        let idx = self
+            .held
+            .borrow()
             .iter()
             .position(|&(t, _)| t == target)
             .ok_or_else(|| mpi_err!(RmaSync, "unlock of target {target} not locked"))?;
-        let (_, lt) = held.remove(idx);
-        self.shared.locks[target].release(lt);
+        self.flush_all()?;
+        let (_, lt) = self.held.borrow_mut().remove(idx);
+        self.meta.locks[target].release(lt);
         Ok(())
     }
 
@@ -317,24 +652,22 @@ impl Window {
         Ok(())
     }
 
-    /// `MPI_Win_unlock_all`.
+    /// `MPI_Win_unlock_all` (flushes first, like [`Window::unlock`]).
     pub fn unlock_all(&self) -> Result<()> {
+        self.flush_all()?;
         let held: Vec<(usize, LockType)> = self.held.borrow_mut().drain(..).collect();
         for (t, lt) in held {
-            self.shared.locks[t].release(lt);
+            self.meta.locks[t].release(lt);
         }
-        Ok(())
-    }
-
-    /// `MPI_Win_flush`: RMA here is synchronous, so flush only charges the
-    /// bookkeeping (ordering is already guaranteed).
-    pub fn flush(&self, _target: usize) -> Result<()> {
         Ok(())
     }
 
     /// Post-start-complete-wait (PSCW) active-target sync, expressed over
     /// p2p: `post` tells each origin it may access; `start` waits for the
-    /// posts; `complete` notifies targets; `wait` collects completions.
+    /// posts; `complete` flushes then notifies targets (per-sender FIFO
+    /// orders the epoch's last data packet before the notification);
+    /// `wait` collects completions — and, by draining the mailbox to get
+    /// them, applies the epoch's ops first.
     pub fn post(&self, origins: &[usize]) -> Result<()> {
         let byte = Datatype::primitive(crate::datatype::Primitive::Byte);
         for &o in origins {
@@ -353,6 +686,7 @@ impl Window {
     }
 
     pub fn complete(&self, targets: &[usize]) -> Result<()> {
+        self.flush_all()?;
         let byte = Datatype::primitive(crate::datatype::Primitive::Byte);
         for &t in targets {
             self.comm.send(&[], 0, &byte, t as i32, PSCW_COMPLETE_TAG)?;
@@ -369,15 +703,58 @@ impl Window {
         Ok(())
     }
 
-    /// `MPI_Win_free` is collective; the registry entry is retired once
-    /// every rank has arrived.
+    /// `MPI_Win_free`: collective. Flushes, barriers so no rank can have
+    /// traffic in flight toward the window, then retires the local
+    /// segment and (on rank 0) the registry entry.
+    ///
+    /// Freeing while this rank still holds a passive-target lock is
+    /// erroneous (`RmaSync`); the teardown still completes — locks
+    /// released, segment retired — so the job stays quiescent and the
+    /// error is the only residue.
     pub fn free(self) -> Result<()> {
+        self.flush_all()?;
+        // Release any erroneously-held locks *before* the barrier: a peer
+        // spinning on one of them may be unable to reach its own free()
+        // barrier until the lock frees — releasing after would deadlock.
+        let held: Vec<(usize, LockType)> = self.held.borrow_mut().drain(..).collect();
+        for &(t, lt) in &held {
+            self.meta.locks[t].release(lt);
+        }
         collective::barrier(&self.comm)?;
+        engine::unregister_window(self.comm.rank_ctx(), self.win_id);
         if self.comm.rank() == 0 {
             self.comm.rank_ctx().fabric.unpublish(self.key);
         }
-        Ok(())
+        if held.is_empty() {
+            Ok(())
+        } else {
+            Err(mpi_err!(
+                RmaSync,
+                "MPI_Win_free with {} passive-target lock(s) still held",
+                held.len()
+            ))
+        }
     }
+}
+
+/// Unpack a get-class RMA response into a typed buffer, charging the
+/// copy counter for non-contiguous scatter exactly like the receive path
+/// does. The single accounting rule for response unpacking — shared by
+/// the blocking substrate ops and the modern layer's async extractors,
+/// so the zero-copy pvar cannot diverge between the two forms of one
+/// operation.
+pub(crate) fn unpack_charged(
+    pool: &std::sync::Arc<BufferPool>,
+    dtype: &Datatype,
+    bytes: &[u8],
+    buf: &mut [u8],
+    count: usize,
+) -> Result<()> {
+    let used = unpack(dtype.map(), bytes, buf, count)?;
+    if !dtype.map().is_contiguous() {
+        pool.count_copied(used);
+    }
+    Ok(())
 }
 
 const PSCW_POST_TAG: i32 = crate::comm::TAG_UB - 1;

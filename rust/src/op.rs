@@ -236,6 +236,22 @@ impl Op {
         Op::User { f, commutative, name }
     }
 
+    /// Reject the RMA-only ops in collective reductions: MPI-4.0 §6.9.1
+    /// restricts `MPI_REPLACE` and `MPI_NO_OP` to accumulate functions —
+    /// in a reduction tree they would silently return whichever rank's
+    /// contribution the schedule applied last (a schedule-dependent
+    /// answer), so this is an `Op`-class error instead.
+    pub fn require_reduction(&self) -> Result<()> {
+        match self {
+            Op::Predefined(OpKind::Replace | OpKind::NoOp) => Err(mpi_err!(
+                Op,
+                "{:?} is valid only in RMA accumulate, not collective reductions",
+                self
+            )),
+            _ => Ok(()),
+        }
+    }
+
     /// `MPI_Op_commutative`.
     pub fn is_commutative(&self) -> bool {
         match self {
@@ -428,6 +444,16 @@ mod tests {
         assert_eq!(from_le_i32(&b), vec![9]);
         Op::NO_OP.apply(&t, &a, &mut b, 0).unwrap();
         assert_eq!(from_le_i32(&b), vec![9]);
+    }
+
+    #[test]
+    fn rma_only_ops_rejected_in_reductions() {
+        assert!(Op::REPLACE.require_reduction().is_err());
+        assert!(Op::NO_OP.require_reduction().is_err());
+        assert!(Op::SUM.require_reduction().is_ok());
+        assert!(Op::MAXLOC.require_reduction().is_ok());
+        let f: UserFn = Arc::new(|_, _, _, _| Ok(()));
+        assert!(Op::user(f, true, "u").require_reduction().is_ok());
     }
 
     #[test]

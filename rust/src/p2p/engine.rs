@@ -21,15 +21,30 @@
 //! * `advance` of registered [`Progressable`]s (nonblocking collectives,
 //!   collective IO) runs at the end of every progress turn; they must not
 //!   re-enter the engine.
+//! * **One-sided operations** are real transport traffic, not
+//!   shared-memory shortcuts: the origin injects an `Rma*` packet
+//!   ([`start_rma`]) naming the window id and byte offset, and the
+//!   *target's* engine applies it to the exposed segment registered in
+//!   [`RankCtx::windows`](super::state::WindowMem) when its own progress
+//!   loop processes the packet — the passive-target progress rule of a
+//!   software-emulated RDMA stack. The per-rank engine thread serializes
+//!   all RMA applications on a target, which is what makes accumulate /
+//!   fetch-and-op / compare-and-swap atomic across origins. Completion
+//!   flows back as `RmaAck`/`RmaGetResp` and flips the origin's
+//!   [`RmaProgress`](super::state::RmaProgress) entry to `Done`.
 
 use super::buffer::{RawBuf, RawBufMut};
 use super::matcher::{MatchSelector, PostedRecv, UnexpectedBody, UnexpectedMsg};
-use super::state::{RankCtx, RecvProgress, RecvState, SendState, Status, BSEND_OVERHEAD};
+use super::state::{
+    RankCtx, RecvProgress, RecvState, RmaProgress, SendState, Status, WindowMem, BSEND_OVERHEAD,
+};
 use crate::datatype::{pack, pack_size, unpack, validate_send_span, Datatype, TypeMap};
 use crate::group::Group;
+use crate::op::{Op, OpKind};
 use crate::transport::{Packet, PacketKind, PoolHandle, WireBytes};
 use crate::{mpi_err, Result};
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// The four MPI send modes.
@@ -187,13 +202,132 @@ pub fn abandon_recv(ctx: &RankCtx, token: u64) {
 /// sharing. Contiguous layouts are a single slice append (DMA-modeled
 /// injection, not charged); non-contiguous staging charges the fabric's
 /// `wire_bytes_copied` counter.
-fn pack_wire(ctx: &RankCtx, map: &TypeMap, src: &[u8], count: usize) -> Result<WireBytes> {
+pub(crate) fn pack_wire(
+    ctx: &RankCtx,
+    map: &TypeMap,
+    src: &[u8],
+    count: usize,
+) -> Result<WireBytes> {
     let mut wire = ctx.fabric.pool.take(pack_size(map, count));
     pack(map, src, count, &mut wire)?;
     if !map.is_contiguous() {
         ctx.fabric.pool.count_copied(wire.len());
     }
     Ok(wire.freeze())
+}
+
+// ---------------- one-sided (RMA) ----------------
+
+/// One one-sided operation as the engine sees it: window and byte offset
+/// already resolved, payload already packed onto a pooled wire buffer.
+#[derive(Debug)]
+pub enum RmaKind {
+    /// Write `data` at the target offset.
+    Put { data: WireBytes },
+    /// Read `nbytes` from the target offset.
+    Get { nbytes: usize },
+    /// Combine `data` (`count` packed elements of `map`) with the target
+    /// bytes using the predefined `op`; `fetch` returns the pre-op bytes.
+    Acc { data: WireBytes, count: usize, map: Arc<TypeMap>, op: OpKind, fetch: bool },
+    /// Single-element compare-and-swap; `data` = origin ‖ compare bytes.
+    Cas { data: WireBytes },
+}
+
+/// Expose `size` bytes of window memory under `win` on this rank. The
+/// segment is zero-initialized (`MPI_Win_allocate` semantics).
+pub fn register_window(ctx: &RankCtx, win: u32, size: usize) {
+    ctx.windows
+        .borrow_mut()
+        .insert(win, Rc::new(WindowMem { seg: std::cell::RefCell::new(vec![0u8; size]) }));
+}
+
+/// Retire a window's local segment (`MPI_Win_free`, after the closing
+/// barrier has guaranteed no more traffic can target it).
+pub fn unregister_window(ctx: &RankCtx, win: u32) {
+    ctx.windows.borrow_mut().remove(&win);
+}
+
+/// This rank's exposed segment for `win` (owner-side `with_local` access).
+pub fn window_local(ctx: &RankCtx, win: u32) -> Option<Rc<WindowMem>> {
+    ctx.windows.borrow().get(&win).cloned()
+}
+
+/// Inject one one-sided operation toward `dst_world` and return the token
+/// its completion (the target's ack/response) will carry. Local targets go
+/// through the fabric too — one uniform path, one ordering domain.
+pub fn start_rma(ctx: &RankCtx, dst_world: usize, win: u32, off: usize, kind: RmaKind) -> u64 {
+    let token = ctx.fresh_token();
+    ctx.rma.borrow_mut().insert(token, RmaProgress::Pending);
+    let pk = match kind {
+        RmaKind::Put { data } => PacketKind::RmaPut { win, off, data, token },
+        RmaKind::Get { nbytes } => PacketKind::RmaGet { win, off, nbytes, token },
+        RmaKind::Acc { data, count, map, op, fetch } => {
+            PacketKind::RmaAcc { win, off, data, count, map, op, fetch, token }
+        }
+        RmaKind::Cas { data } => PacketKind::RmaCas { win, off, data, token },
+    };
+    let now = ctx.clock.now_ns();
+    ctx.fabric.send(ctx.world_rank, dst_world, now, pk);
+    token
+}
+
+/// Has the target completed this one-sided op? Non-consuming, drives no
+/// progress; a consumed (absent) token reads as done.
+pub fn rma_done(ctx: &RankCtx, token: u64) -> bool {
+    !matches!(ctx.rma.borrow().get(&token), Some(RmaProgress::Pending))
+}
+
+/// Take a completed one-sided op's response payload (empty for put/acc).
+pub fn take_rma_result(ctx: &RankCtx, token: u64) -> Result<WireBytes> {
+    let mut rma = ctx.rma.borrow_mut();
+    match rma.remove(&token) {
+        Some(RmaProgress::Done(data)) => Ok(data),
+        Some(p @ RmaProgress::Pending) => {
+            rma.insert(token, p);
+            Err(mpi_err!(Intern, "take of incomplete rma op {token}"))
+        }
+        None => Err(mpi_err!(Request, "unknown rma op token {token}")),
+    }
+}
+
+/// Look up a window a remote op targets, or fail loudly: an op arriving
+/// for an unregistered window means the `MPI_Win_free` protocol (flush
+/// everywhere, then barrier, then retire) was violated.
+fn rma_window(ctx: &RankCtx, win: u32) -> Result<Rc<WindowMem>> {
+    window_local(ctx, win)
+        .ok_or_else(|| mpi_err!(Win, "RMA op targets window {win:#x} not exposed on this rank"))
+}
+
+/// Bounds-check an RMA span against the exposed segment.
+fn rma_span(seg_len: usize, off: usize, nbytes: usize) -> Result<std::ops::Range<usize>> {
+    match off.checked_add(nbytes) {
+        Some(end) if end <= seg_len => Ok(off..end),
+        _ => Err(mpi_err!(
+            RmaRange,
+            "RMA span of {nbytes} bytes at offset {off} exceeds window segment of {seg_len}"
+        )),
+    }
+}
+
+/// Copy target bytes onto a pooled wire buffer — the NIC-read half of a
+/// get/fetch (DMA-modeled, so not charged to `wire_bytes_copied`).
+fn read_segment(ctx: &RankCtx, seg: &[u8], range: std::ops::Range<usize>) -> WireBytes {
+    let mut wire = ctx.fabric.pool.take(range.len());
+    wire.extend_from_slice(&seg[range]);
+    wire.freeze()
+}
+
+fn rma_reply(ctx: &RankCtx, to: usize, kind: PacketKind) {
+    let now = ctx.clock.now_ns();
+    ctx.fabric.send(ctx.world_rank, to, now, kind);
+}
+
+/// Record a target's completion reply against the origin-side token.
+fn rma_complete(ctx: &RankCtx, token: u64, data: WireBytes) -> Result<()> {
+    match ctx.rma.borrow_mut().insert(token, RmaProgress::Done(data)) {
+        Some(RmaProgress::Pending) => Ok(()),
+        _ => Err(mpi_err!(Intern, "RMA completion for token {token} not pending")),
+    }
 }
 
 /// Post a receive. `src_world`/`tag` of `None` are the wildcards. Returns
@@ -412,6 +546,61 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
             ctx.sends.borrow_mut().insert(token, SendState::Done);
             Ok(())
         }
+        // ---- one-sided ops applied on the target's own thread ----
+        PacketKind::RmaPut { win, off, data, token } => {
+            let mem = rma_window(ctx, win)?;
+            {
+                let mut seg = mem.seg.borrow_mut();
+                let range = rma_span(seg.len(), off, data.len())?;
+                // DMA-modeled NIC write into exposed memory: not charged.
+                seg[range].copy_from_slice(&data);
+            }
+            rma_reply(ctx, pkt.src, PacketKind::RmaAck { token });
+            Ok(())
+        }
+        PacketKind::RmaGet { win, off, nbytes, token } => {
+            let mem = rma_window(ctx, win)?;
+            let data = {
+                let seg = mem.seg.borrow();
+                let range = rma_span(seg.len(), off, nbytes)?;
+                read_segment(ctx, &seg, range)
+            };
+            rma_reply(ctx, pkt.src, PacketKind::RmaGetResp { token, data });
+            Ok(())
+        }
+        PacketKind::RmaAcc { win, off, data, count, map, op, fetch, token } => {
+            let mem = rma_window(ctx, win)?;
+            let old = {
+                let mut seg = mem.seg.borrow_mut();
+                let range = rma_span(seg.len(), off, data.len())?;
+                let old = fetch.then(|| read_segment(ctx, &seg, range.clone()));
+                Op::Predefined(op).apply(&map, &data, &mut seg[range], count)?;
+                old
+            };
+            match old {
+                Some(data) => rma_reply(ctx, pkt.src, PacketKind::RmaGetResp { token, data }),
+                None => rma_reply(ctx, pkt.src, PacketKind::RmaAck { token }),
+            }
+            Ok(())
+        }
+        PacketKind::RmaCas { win, off, data, token } => {
+            let n = data.len() / 2;
+            let (origin, compare) = (data.slice(0, n), data.slice(n, n));
+            let old = {
+                let mem = rma_window(ctx, win)?;
+                let mut seg = mem.seg.borrow_mut();
+                let range = rma_span(seg.len(), off, n)?;
+                let old = read_segment(ctx, &seg, range.clone());
+                if seg[range.clone()] == compare[..] {
+                    seg[range].copy_from_slice(&origin);
+                }
+                old
+            };
+            rma_reply(ctx, pkt.src, PacketKind::RmaGetResp { token, data: old });
+            Ok(())
+        }
+        PacketKind::RmaAck { token } => rma_complete(ctx, token, WireBytes::empty()),
+        PacketKind::RmaGetResp { token, data } => rma_complete(ctx, token, data),
     }
 }
 

@@ -80,6 +80,27 @@ pub struct RecvState {
     pub progress: RecvProgress,
 }
 
+/// Origin-side progress of one one-sided (RMA) operation: inserted as
+/// `Pending` when the `Rma*` packet is injected, flipped to `Done` by the
+/// target's `RmaAck`/`RmaGetResp` reply. The payload is the response data
+/// (a shared view of a pooled wire buffer; empty for put/accumulate acks).
+#[derive(Debug)]
+pub enum RmaProgress {
+    Pending,
+    Done(WireBytes),
+}
+
+/// Rank-local memory of one RMA window — the target side of one-sided
+/// operations. The exposed segment is written **only** by the owning
+/// rank's engine thread as `Rma*` packets are processed (and by the owner
+/// itself through `with_local`), which is what makes RMA atomics
+/// (accumulate, fetch-and-op, compare-and-swap) linearizable without any
+/// cross-rank locking of the data.
+#[derive(Debug)]
+pub struct WindowMem {
+    pub seg: RefCell<Vec<u8>>,
+}
+
 /// Buffered-send pool (`MPI_Buffer_attach`). We account capacity the way
 /// the standard requires (bsend fails with `MPI_ERR_BUFFER` when the
 /// attached buffer cannot hold the packed message + overhead).
@@ -130,6 +151,12 @@ pub struct RankCtx {
     pub(crate) bsend: RefCell<BsendPool>,
     /// Matched-but-undelivered rendezvous receives: token → (src, tag).
     pub(crate) pending_rndv: RefCell<HashMap<u64, (usize, i32)>>,
+    /// In-flight one-sided operations this rank originated: token →
+    /// progress (completed by the target's `RmaAck`/`RmaGetResp`).
+    pub(crate) rma: RefCell<HashMap<u64, RmaProgress>>,
+    /// RMA windows whose local segment this rank exposes: window id →
+    /// memory. Registered at `MPI_Win_allocate`, retired at `MPI_Win_free`.
+    pub(crate) windows: RefCell<HashMap<u32, Rc<WindowMem>>>,
     /// Nonblocking composite operations that need turning.
     pub(crate) progressables: RefCell<Vec<Rc<dyn Progressable>>>,
     /// Scratch packet vec reused across progress calls (hot-path
@@ -155,6 +182,8 @@ impl RankCtx {
             coll_seq: RefCell::new(HashMap::new()),
             bsend: RefCell::new(BsendPool::default()),
             pending_rndv: RefCell::new(HashMap::new()),
+            rma: RefCell::new(HashMap::new()),
+            windows: RefCell::new(HashMap::new()),
             progressables: RefCell::new(Vec::new()),
             scratch: RefCell::new(Vec::new()),
         })

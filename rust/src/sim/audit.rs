@@ -4,8 +4,11 @@
 //! A correct MPI program that runs to completion leaves the runtime
 //! *quiescent*: every mailbox empty, the matcher's posted and unexpected
 //! queues drained, no rendezvous transfer half-finished, every request in
-//! a terminal state, the buffered-send pool unreserved, and every wire
-//! buffer handed back to the fabric's pool. Any residue is either a
+//! a terminal state, no one-sided op still awaiting its target's ack, no
+//! window segment still exposed (`MPI_Win_free` ran), the buffered-send
+//! pool unreserved, and every wire buffer handed back to the fabric's
+//! pool (window get/fetch responses ride pooled buffers too, so a leaked
+//! RMA future shows up in the pool balance). Any residue is either a
 //! program bug (a send nobody received, a receive nobody completed) or a
 //! stack bug (a leak on some rarely-taken path) — exactly the class of
 //! defect review passes previously hunted by inspection.
@@ -21,7 +24,7 @@
 //! on: explicitly via `.audited(true)`, via `FERROMPI_AUDIT=1`, or by
 //! default whenever the job runs in chaos mode.
 
-use crate::p2p::{engine, RankCtx, RecvProgress, RecvState, SendState};
+use crate::p2p::{engine, RankCtx, RecvProgress, RecvState, RmaProgress, SendState};
 use crate::transport::Fabric;
 use std::rc::Rc;
 
@@ -62,6 +65,19 @@ pub fn audit_rank(ctx: &Rc<RankCtx>) -> Vec<String> {
     let rndv = ctx.pending_rndv.borrow().len();
     if rndv > 0 {
         v.push(format!("{rndv} rendezvous transfer(s) matched but undelivered"));
+    }
+    let rma_pending = ctx
+        .rma
+        .borrow()
+        .iter()
+        .filter(|(_, p)| matches!(p, RmaProgress::Pending))
+        .count();
+    if rma_pending > 0 {
+        v.push(format!("{rma_pending} one-sided op(s) still awaiting target completion"));
+    }
+    let wins = ctx.windows.borrow().len();
+    if wins > 0 {
+        v.push(format!("{wins} RMA window segment(s) still exposed (MPI_Win_free never ran)"));
     }
     let in_use = ctx.bsend.borrow().in_use;
     if in_use > 0 {
@@ -162,6 +178,21 @@ mod tests {
         assert!(r.contains("quiescence audit failed (fabric)"));
         drop(held);
         assert!(audit_fabric(&c.fabric).is_empty());
+    }
+
+    #[test]
+    fn pending_rma_and_exposed_windows_are_flagged() {
+        let c = ctx();
+        // A pending one-sided op whose target never answered.
+        c.rma.borrow_mut().insert(99, crate::p2p::RmaProgress::Pending);
+        // A window segment nobody freed.
+        engine::register_window(&c, 7, 64);
+        let v = audit_rank(&c);
+        assert!(v.iter().any(|s| s.contains("one-sided")), "{v:?}");
+        assert!(v.iter().any(|s| s.contains("window segment")), "{v:?}");
+        c.rma.borrow_mut().clear();
+        engine::unregister_window(&c, 7);
+        assert!(audit_rank(&c).is_empty());
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //!   of an earlier packet from its own sender, which would break the
 //!   standard's non-overtaking guarantee). See
 //!   [`Mailbox::push_reordered`](crate::transport::Mailbox::push_reordered).
+//!   This covers the one-sided `Rma*` packets too, and per-sender FIFO is
+//!   exactly the RMA ordering MPI grants: same-origin→same-target
+//!   accumulates stay ordered, while operations from different origins
+//!   may interleave arbitrarily (their atomicity, not their order, is
+//!   guaranteed — the target engine serializes application).
 //! * **Scheduling jitter** — randomized `yield_now` calls in the progress
 //!   loop, shaking up which rank the OS runs next.
 //! * **Eager-limit randomization** — each job picks its eager/rendezvous

@@ -3,7 +3,9 @@
 //! A [`Program`] is a seeded recipe for an SPMD communication DAG: phases
 //! of immediate/blocking/persistent point-to-point traffic (with optional
 //! `ANY_SOURCE`/`ANY_TAG` receives), collectives over the world or split
-//! subcommunicators, and modern-layer future chains. Every payload and
+//! subcommunicators, modern-layer future chains, and one-sided windows
+//! ([`Phase::Rma`]: puts, async accumulates, a fetch-and-op counter —
+//! all on the `Rma*` packet path). Every payload and
 //! reduction operand is derived from the program seed, so each rank can
 //! verify everything it receives against a locally computed oracle — a
 //! mismatch panics with the phase, rank and seed that reproduce it.
@@ -84,6 +86,14 @@ pub enum Phase {
     Collective { op: CollOp, split: bool, len: usize, count: usize },
     /// Modern-layer futures: `immediate_all_reduce` with a `.map` chain.
     ModernAllReduce,
+    /// One-sided traffic on a freshly allocated window: neighbor puts
+    /// verified by the owner after a fence, async accumulates into rank 0
+    /// joined with `when_all`, and a fetch-and-op work counter bumped
+    /// `incs` times per rank. Schedule-deterministic by construction:
+    /// sums are exact in `i64` and commutative, and every value is read
+    /// back only after a fence closed the epoch (the nondeterministic
+    /// fetch-and-op *old* values are asserted for range, not digested).
+    Rma { len: usize, incs: usize },
 }
 
 /// A generated SPMD program: the recipe the differential harness replays.
@@ -110,7 +120,7 @@ impl Program {
         let target = r.range(5, 10);
         let mut phases = Vec::new();
         while phases.len() < target {
-            match r.range(0, 12) {
+            match r.range(0, 13) {
                 0..=2 => phases.push(gen_immediate(&mut r, nranks, false, false)),
                 3 => phases.push(gen_immediate(&mut r, nranks, true, false)),
                 4 => {
@@ -141,6 +151,7 @@ impl Program {
                         count: r.range(1, 8),
                     });
                 }
+                11 => phases.push(Phase::Rma { len: r.range(1, 9), incs: r.range(1, 4) }),
                 _ => phases.push(Phase::ModernAllReduce),
             }
         }
@@ -188,6 +199,7 @@ impl Program {
                 Phase::Collective { op: CollOp::Bcast, split: true, len: 2048, count: 1 },
                 Phase::Collective { op: CollOp::Alltoall, split: false, len: 256, count: 1 },
                 Phase::Collective { op: CollOp::Scan, split: false, len: 0, count: 3 },
+                Phase::Rma { len: 4, incs: 3 },
                 Phase::ModernAllReduce,
             ],
         }
@@ -395,6 +407,9 @@ fn exec(p: &Program, comm: &Comm) -> Vec<u64> {
                 let c = sub.as_ref().unwrap_or(comm);
                 exec_collective(c, seed, pi, *op, *len, *count, &byte, &i64t, &mut digest);
             }
+            Phase::Rma { len, incs } => {
+                exec_rma(comm, seed, pi, *len, *incs, &mut digest);
+            }
             Phase::ModernAllReduce => {
                 let m = crate::modern::Communicator::world(comm);
                 let wr = comm.rank_ctx().world_rank as u64;
@@ -516,6 +531,76 @@ fn exec_immediate(
             digest.push(fnv1a(&rbufs[i]));
         }
     }
+}
+
+/// One-sided phase: window of `len` data slots + 1 counter slot per rank.
+/// Exercises blocking put, async accumulate joined with `when_all`, an
+/// async fetch-and-op counter, and fence epochs — all through the `Rma*`
+/// packet path, so chaos delay/reorder pressure lands on it like on any
+/// other traffic.
+fn exec_rma(comm: &Comm, seed: u64, pi: usize, len: usize, incs: usize, digest: &mut Vec<u64>) {
+    use crate::modern::{when_all, ReduceOp, RmaWindow};
+    let me = comm.rank();
+    let pn = comm.size();
+    let win: RmaWindow<i64> = RmaWindow::allocate(comm, len + 1)
+        .unwrap_or_else(|e| panic!("phase {pi} win allocate: {e}"));
+    let my_wr = comm.rank_ctx().world_rank as u64;
+    let right = (me + 1) % pn;
+    let left = (me + pn - 1) % pn;
+    let val_of = |wr: u64, k: usize| cval(seed, &[pi as u64, 0xA0, wr, k as u64]);
+    let vals: Vec<i64> = (0..len).map(|k| val_of(my_wr, k)).collect();
+
+    // Epoch 1: blocking put of this rank's vector into its right
+    // neighbor's data slots; the owner verifies after the fence.
+    win.fence().unwrap_or_else(|e| panic!("phase {pi} fence: {e}"));
+    win.put(&vals[..], right, 0).unwrap_or_else(|e| panic!("phase {pi} rma put: {e}"));
+    win.fence().unwrap_or_else(|e| panic!("phase {pi} fence: {e}"));
+    let left_wr = comm.group().world_rank(left).unwrap() as u64;
+    let want: Vec<i64> = (0..len).map(|k| val_of(left_wr, k)).collect();
+    let got = win.with_local(|m| m[..len].to_vec());
+    assert_eq!(got, want, "phase {pi} rank {me}: rma put payload corrupt (seed {seed:#x})");
+    digest.push(fnv1a(&i64s_to_bytes(&got)));
+
+    // Epoch 2: rank 0 zeroes its segment, then every rank accumulates its
+    // vector into rank 0's slots asynchronously and joins via when_all.
+    if me == 0 {
+        win.with_local(|m| m.fill(0));
+    }
+    win.fence().unwrap_or_else(|e| panic!("phase {pi} fence: {e}"));
+    let accs: Vec<_> =
+        (0..len).map(|k| win.accumulate_async(&vals[k], 0, k, ReduceOp::Sum)).collect();
+    when_all(accs).get().unwrap_or_else(|e| panic!("phase {pi} rma accumulate: {e}"));
+    // Counter slot: `incs` async fetch-and-ops; the old values are
+    // schedule-dependent, so only sanity-check their range.
+    let fos: Vec<_> =
+        (0..incs).map(|_| win.fetch_and_op_async(1, 0, len, ReduceOp::Sum)).collect();
+    let olds = when_all(fos).get().unwrap_or_else(|e| panic!("phase {pi} rma fetch_and_op: {e}"));
+    for old in olds {
+        assert!(
+            (0..(pn * incs) as i64).contains(&old),
+            "phase {pi} rank {me}: fetch_and_op old {old} out of range (seed {seed:#x})"
+        );
+    }
+    win.fence().unwrap_or_else(|e| panic!("phase {pi} fence: {e}"));
+    // Everyone reads rank 0's region back; sums + final counter are exact
+    // and schedule-independent.
+    let members: Vec<usize> = comm.group().members().to_vec();
+    let oracle: Vec<i64> =
+        (0..len).map(|k| members.iter().map(|&wr| val_of(wr as u64, k)).sum()).collect();
+    let sums = win
+        .get_vec_async(len, 0, 0)
+        .get()
+        .unwrap_or_else(|e| panic!("phase {pi} rma get: {e}"));
+    assert_eq!(sums, oracle, "phase {pi} rank {me}: rma accumulate sum (seed {seed:#x})");
+    let counter = win.get(0, len).unwrap_or_else(|e| panic!("phase {pi} rma counter get: {e}"));
+    assert_eq!(
+        counter,
+        (pn * incs) as i64,
+        "phase {pi} rank {me}: rma counter (seed {seed:#x})"
+    );
+    digest.push(fnv1a(&i64s_to_bytes(&sums)));
+    digest.push(counter as u64);
+    win.free().unwrap_or_else(|e| panic!("phase {pi} win free: {e}"));
 }
 
 #[allow(clippy::too_many_arguments)]

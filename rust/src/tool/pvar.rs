@@ -38,6 +38,9 @@ pub fn pvars() -> Vec<PvarInfo> {
         PvarInfo { name: "pool_recycled", description: "wire buffers reused from the fabric's buffer pool", class: Counter, category: "transport" },
         PvarInfo { name: "pool_allocated", description: "fresh wire-buffer allocations (buffer-pool misses)", class: Counter, category: "transport" },
         PvarInfo { name: "pool_outstanding", description: "absolute take/give imbalance of the wire-buffer pool (0 at quiescence; any residue — leak or double-give — reads nonzero)", class: Level, category: "transport" },
+        PvarInfo { name: "rma_puts", description: "one-sided puts injected (RmaPut packets)", class: Counter, category: "rma" },
+        PvarInfo { name: "rma_gets", description: "one-sided get requests injected (RmaGet packets)", class: Counter, category: "rma" },
+        PvarInfo { name: "rma_accs", description: "one-sided accumulates injected (RmaAcc + RmaCas packets, incl. fetch_and_op / compare_and_swap)", class: Counter, category: "rma" },
         PvarInfo { name: "chaos_delays", description: "packets given extra delivery latency by the chaos injector", class: Counter, category: "chaos" },
         PvarInfo { name: "chaos_reorders", description: "packets that overtook another sender's queued packet under chaos", class: Counter, category: "chaos" },
         PvarInfo { name: "chaos_yields", description: "scheduling yields injected into the progress loop under chaos", class: Counter, category: "chaos" },
@@ -99,6 +102,9 @@ impl<'a> PvarSession<'a> {
             // Absolute imbalance: a negative balance (give without take)
             // is just as much a bug as a leak and must not read as 0.
             "pool_outstanding" => ctx.fabric.pool.stats().outstanding.unsigned_abs(),
+            "rma_puts" => f.rma_puts.load(Ordering::Relaxed),
+            "rma_gets" => f.rma_gets.load(Ordering::Relaxed),
+            "rma_accs" => f.rma_accs.load(Ordering::Relaxed),
             "chaos_delays" => {
                 ctx.fabric.chaos.as_ref().map_or(0, |c| c.delays.load(Ordering::Relaxed))
             }

@@ -21,6 +21,12 @@ pub struct FabricStats {
     pub eager_sent: AtomicU64,
     pub rndv_sent: AtomicU64,
     pub ctrl_sent: AtomicU64,
+    /// One-sided puts injected (`RmaPut` packets).
+    pub rma_puts: AtomicU64,
+    /// One-sided get requests injected (`RmaGet` packets).
+    pub rma_gets: AtomicU64,
+    /// One-sided accumulates injected (`RmaAcc` + `RmaCas` packets).
+    pub rma_accs: AtomicU64,
     pub intra_node_msgs: AtomicU64,
     pub inter_node_msgs: AtomicU64,
     /// High-watermark of any mailbox depth observed at delivery.
@@ -36,6 +42,13 @@ impl FabricStats {
             PacketKind::Rts { .. } | PacketKind::RData { .. } => {
                 self.rndv_sent.fetch_add(1, Ordering::Relaxed)
             }
+            PacketKind::RmaPut { .. } => self.rma_puts.fetch_add(1, Ordering::Relaxed),
+            PacketKind::RmaGet { .. } => self.rma_gets.fetch_add(1, Ordering::Relaxed),
+            PacketKind::RmaAcc { .. } | PacketKind::RmaCas { .. } => {
+                self.rma_accs.fetch_add(1, Ordering::Relaxed)
+            }
+            // Acks and data responses are protocol replies (their payload
+            // bytes still land in `bytes_sent`).
             _ => self.ctrl_sent.fetch_add(1, Ordering::Relaxed),
         };
         if same_node {

@@ -11,11 +11,23 @@
 //! * **SsendAck** — completes a synchronous-mode send when its message has
 //!   been matched, regardless of protocol.
 //!
+//! One-sided (RMA) operations add a fourth family, `Rma*`: because the
+//! origin names the target address outright (window id + byte offset),
+//! there is no rendezvous handshake — a put is **one** data crossing plus
+//! an ack, a get is a request plus **one** data crossing, exactly the
+//! RDMA-verbs shape. The target's progress engine applies the operation
+//! to its exposed window segment and answers with [`PacketKind::RmaAck`]
+//! (put/accumulate) or [`PacketKind::RmaGetResp`] (get, fetching
+//! accumulate, compare-and-swap), which completes the origin's future.
+//!
 //! Payloads are [`WireBytes`]: `Arc`-backed views into pooled wire
 //! buffers, so queueing, matching and delivery share one allocation
 //! instead of copying or reallocating per message.
 
 use super::wire::WireBytes;
+use crate::datatype::TypeMap;
+use crate::op::OpKind;
+use std::sync::Arc;
 
 /// A packet in flight.
 #[derive(Debug)]
@@ -50,13 +62,49 @@ pub enum PacketKind {
     RData { recv_token: u64, data: WireBytes },
     /// The message carrying `token` (a synchronous send) was matched.
     SsendAck { token: u64 },
+    /// One-sided put: write `data` into window `win` at byte offset `off`
+    /// of the target's exposed segment. The target acks `token` once the
+    /// bytes are applied.
+    RmaPut { win: u32, off: usize, data: WireBytes, token: u64 },
+    /// One-sided get request: read `nbytes` from window `win` at byte
+    /// offset `off`; the target answers with an [`PacketKind::RmaGetResp`]
+    /// carrying `token` and the data on a pooled wire buffer.
+    RmaGet { win: u32, off: usize, nbytes: usize, token: u64 },
+    /// One-sided accumulate: combine `data` (`count` packed elements of
+    /// `map`) into the window with the predefined op `op`, atomically with
+    /// respect to every other RMA op on that target (the target's engine
+    /// thread serializes them). With `fetch`, the pre-op bytes come back
+    /// in an [`PacketKind::RmaGetResp`]; otherwise an [`PacketKind::RmaAck`].
+    RmaAcc {
+        win: u32,
+        off: usize,
+        data: WireBytes,
+        count: usize,
+        map: Arc<TypeMap>,
+        op: OpKind,
+        fetch: bool,
+        token: u64,
+    },
+    /// Compare-and-swap of a single element: `data` holds the origin value
+    /// followed by the compare value (each `data.len()/2` bytes). The old
+    /// target bytes always come back in an [`PacketKind::RmaGetResp`].
+    RmaCas { win: u32, off: usize, data: WireBytes, token: u64 },
+    /// Target-side completion ack for a put or non-fetching accumulate.
+    RmaAck { token: u64 },
+    /// Data response for get / get-accumulate / compare-and-swap.
+    RmaGetResp { token: u64, data: WireBytes },
 }
 
 impl PacketKind {
     /// Payload size used for cost accounting (headers are charged as α).
     pub fn payload_len(&self) -> usize {
         match self {
-            PacketKind::Eager { data, .. } | PacketKind::RData { data, .. } => data.len(),
+            PacketKind::Eager { data, .. }
+            | PacketKind::RData { data, .. }
+            | PacketKind::RmaPut { data, .. }
+            | PacketKind::RmaAcc { data, .. }
+            | PacketKind::RmaCas { data, .. }
+            | PacketKind::RmaGetResp { data, .. } => data.len(),
             _ => 0,
         }
     }
@@ -69,6 +117,12 @@ impl PacketKind {
             PacketKind::Cts { .. } => "cts",
             PacketKind::RData { .. } => "rdata",
             PacketKind::SsendAck { .. } => "ssend_ack",
+            PacketKind::RmaPut { .. } => "rma_put",
+            PacketKind::RmaGet { .. } => "rma_get",
+            PacketKind::RmaAcc { .. } => "rma_acc",
+            PacketKind::RmaCas { .. } => "rma_cas",
+            PacketKind::RmaAck { .. } => "rma_ack",
+            PacketKind::RmaGetResp { .. } => "rma_get_resp",
         }
     }
 }
@@ -93,5 +147,37 @@ mod tests {
         assert_eq!(d.payload_len(), 5);
         assert_eq!(PacketKind::Cts { token: 1, recv_token: 2 }.payload_len(), 0);
         assert_eq!(PacketKind::SsendAck { token: 1 }.payload_len(), 0);
+    }
+
+    #[test]
+    fn rma_kinds_payload_and_labels() {
+        let put = PacketKind::RmaPut {
+            win: 1,
+            off: 0,
+            data: WireBytes::from_vec(vec![0; 8]),
+            token: 1,
+        };
+        assert_eq!(put.payload_len(), 8);
+        assert_eq!(put.label(), "rma_put");
+        let get = PacketKind::RmaGet { win: 1, off: 0, nbytes: 64, token: 2 };
+        assert_eq!(get.payload_len(), 0, "a get request is header-only");
+        assert_eq!(get.label(), "rma_get");
+        let acc = PacketKind::RmaAcc {
+            win: 1,
+            off: 0,
+            data: WireBytes::from_vec(vec![0; 4]),
+            count: 1,
+            map: Arc::new(TypeMap::primitive(crate::datatype::Primitive::I32)),
+            op: OpKind::Sum,
+            fetch: false,
+            token: 3,
+        };
+        assert_eq!(acc.payload_len(), 4);
+        assert_eq!(acc.label(), "rma_acc");
+        assert_eq!(PacketKind::RmaAck { token: 3 }.payload_len(), 0);
+        let resp =
+            PacketKind::RmaGetResp { token: 2, data: WireBytes::from_vec(vec![0; 64]) };
+        assert_eq!(resp.payload_len(), 64);
+        assert_eq!(resp.label(), "rma_get_resp");
     }
 }

@@ -1,0 +1,413 @@
+//! One-sided communication over the transport path: put/get/accumulate
+//! roundtrips (contiguous + derived datatypes), RMA atomics across ranks,
+//! epoch misuse errors, async-RMA future chains, the zero-copy payload
+//! guarantee (asserted via pvars), and a chaos differential case.
+
+use ferrompi::comm::Comm;
+use ferrompi::datatype::{Datatype, Primitive, TypeMap};
+use ferrompi::modern::{when_all, LockType, ReduceOp, RmaWindow};
+use ferrompi::onesided::Window;
+use ferrompi::op::Op;
+use ferrompi::sim::proggen::{assert_differential, Phase, Program};
+use ferrompi::tool::pvar::PvarSession;
+use ferrompi::universe::Universe;
+use ferrompi::ErrorClass;
+
+fn as_b(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn as_bm(v: &mut [i32]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, std::mem::size_of_val(v)) }
+}
+
+// ---------------- roundtrips ----------------
+
+#[test]
+fn put_get_accumulate_roundtrip_contiguous() {
+    Universe::test(3).audited(true).run(|world| {
+        let r = world.rank();
+        let n = world.size();
+        let i32t = Datatype::primitive(Primitive::I32);
+        let win = Window::allocate(world, 16 * 4, 4).unwrap();
+        win.fence().unwrap();
+        // Everyone puts [r*100 .. r*100+3] into its right neighbor.
+        let right = (r + 1) % n;
+        let vals: Vec<i32> = (0..4).map(|k| (r * 100 + k) as i32).collect();
+        win.put(as_b(&vals), 4, &i32t, right, 0).unwrap();
+        win.fence().unwrap();
+        // The owner sees its left neighbor's data...
+        let left = (r + n - 1) % n;
+        let local = win.with_local(|m| m[..16].to_vec());
+        let want: Vec<i32> = (0..4).map(|k| (left * 100 + k) as i32).collect();
+        assert_eq!(local, as_b(&want));
+        // ...and everyone can read it back remotely too.
+        let mut back = [0i32; 4];
+        win.get(as_bm(&mut back), 4, &i32t, right, 0).unwrap();
+        assert_eq!(back.to_vec(), vals);
+        // Accumulate: everyone sums 1 into rank 0 slot 8.
+        win.accumulate(as_b(&[1i32]), 1, &i32t, 0, 8, &Op::SUM).unwrap();
+        win.fence().unwrap();
+        let mut total = [0i32];
+        win.get(as_bm(&mut total), 1, &i32t, 0, 8).unwrap();
+        assert_eq!(total[0] as usize, n);
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn derived_datatype_put_get_charges_staging() {
+    // A strided vector type: 3 blocks of 1 i32, stride 2 — wire size 12
+    // bytes out of a 24-byte span. Non-contiguous packing must be charged
+    // to `wire_bytes_copied` (it is a CPU gather, not DMA).
+    Universe::test(2).audited(true).run(|world| {
+        let mut vt = Datatype::new(TypeMap::vector(3, 1, 2, &TypeMap::primitive(Primitive::I32)));
+        vt.commit();
+        let i32t = Datatype::primitive(Primitive::I32);
+        let win = Window::allocate(world, 16 * 4, 4).unwrap();
+        let sess = PvarSession::create(world);
+        win.fence().unwrap();
+        let copied_before = sess.read("wire_bytes_copied").unwrap();
+        if world.rank() == 0 {
+            let src: Vec<i32> = (0..6).collect(); // elements 0, 2, 4 go on the wire
+            win.put(as_b(&src), 1, &vt, 1, 0).unwrap();
+            win.flush_all().unwrap();
+            assert!(
+                sess.read("wire_bytes_copied").unwrap() >= copied_before + 12,
+                "non-contiguous origin pack must be charged"
+            );
+        }
+        win.fence().unwrap();
+        if world.rank() == 1 {
+            // Target side stores packed bytes contiguously at the offset.
+            let local = win.with_local(|m| m[..12].to_vec());
+            assert_eq!(local, as_b(&[0i32, 2, 4]));
+            // A non-contiguous *receive* (unpack into a strided buffer)
+            // is charged as well.
+            let before = sess.read("wire_bytes_copied").unwrap();
+            let mut dst = [0i32; 6];
+            win.get(as_bm(&mut dst), 1, &vt, 1, 0).unwrap();
+            assert_eq!([dst[0], dst[2], dst[4]], [0, 2, 4]);
+            assert!(sess.read("wire_bytes_copied").unwrap() >= before + 12);
+        }
+        // get_accumulate with a derived type roundtrips too.
+        win.fence().unwrap();
+        if world.rank() == 0 {
+            let add: Vec<i32> = vec![10, 0, 20, 0, 30, 0];
+            let mut old = [0i32; 6];
+            win.get_accumulate(as_b(&add), as_bm(&mut old), 1, &vt, 1, 0, &Op::SUM).unwrap();
+            assert_eq!([old[0], old[2], old[4]], [0, 2, 4]);
+            let mut now = [0i32; 3];
+            win.get(as_bm(&mut now), 3, &i32t, 1, 0).unwrap();
+            assert_eq!(now, [10, 22, 34]);
+        }
+        win.free().unwrap();
+    });
+}
+
+// ---------------- the zero-copy guarantee ----------------
+
+#[test]
+fn contiguous_rma_moves_payloads_with_zero_user_data_copies() {
+    // The acceptance bar: contiguous rput/rget payloads ride pooled
+    // WireBytes end to end — no CPU copy is ever charged, the ops are
+    // counted by the rma_* pvars, and every pooled buffer goes home
+    // (audited, plus the explicit pool_outstanding read).
+    Universe::test(2).audited(true).run(|world| {
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, 1024).unwrap();
+        let sess = PvarSession::create(world);
+        win.fence().unwrap();
+        let copied0 = sess.read("wire_bytes_copied").unwrap();
+        let puts0 = sess.read("rma_puts").unwrap();
+        let gets0 = sess.read("rma_gets").unwrap();
+        let peer = 1 - world.rank();
+        let payload: Vec<i64> = (0..1024).map(|i| (i * 7) as i64).collect();
+        for _ in 0..8 {
+            win.put(&payload[..], peer, 0).unwrap();
+            win.flush_all().unwrap();
+            let mut back = vec![0i64; 1024];
+            win.get_into(&mut back[..], peer, 0).unwrap();
+            assert_eq!(back, payload);
+        }
+        assert_eq!(
+            sess.read("wire_bytes_copied").unwrap(),
+            copied0,
+            "contiguous RMA charged a CPU copy"
+        );
+        assert!(sess.read("rma_puts").unwrap() >= puts0 + 8);
+        assert!(sess.read("rma_gets").unwrap() >= gets0 + 8);
+        // Steady state recycles wire buffers rather than allocating.
+        assert!(sess.read("pool_recycled").unwrap() > 0);
+        win.fence().unwrap();
+        win.free().unwrap();
+        assert_eq!(sess.read("pool_outstanding").unwrap(), 0, "wire buffer leaked");
+    });
+}
+
+// ---------------- atomics across ranks ----------------
+
+#[test]
+fn fetch_and_op_hands_out_distinct_tickets() {
+    const PER_RANK: usize = 25;
+    Universe::test(4).audited(true).run(|world| {
+        let n = world.size();
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, 1).unwrap();
+        win.fence().unwrap();
+        // No locks, no fences between ops: atomicity comes from the
+        // target engine serializing RmaAcc packets.
+        let mine: Vec<i64> = (0..PER_RANK)
+            .map(|_| win.fetch_and_op(1, 0, 0, ReduceOp::Sum).unwrap())
+            .collect();
+        win.fence().unwrap();
+        assert_eq!(win.get(0, 0).unwrap() as usize, n * PER_RANK);
+        // Gather every rank's tickets: they must be exactly 0..n*PER_RANK,
+        // each handed out once.
+        let m = ferrompi::modern::Communicator::world(world);
+        let mut all: Vec<i64> = Vec::new();
+        for &t in &mine {
+            all.extend(m.all_gather(t).unwrap());
+        }
+        all.sort_unstable();
+        let want: Vec<i64> = (0..(n * PER_RANK) as i64).collect();
+        assert_eq!(all, want, "fetch_and_op was not atomic");
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn compare_and_swap_has_one_winner_per_round() {
+    Universe::test(4).audited(true).run(|world| {
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, 1).unwrap();
+        let m = ferrompi::modern::Communicator::world(world);
+        for round in 0..10 {
+            win.fence().unwrap();
+            if world.rank() == 0 {
+                win.with_local(|mem| mem[0] = -1);
+            }
+            win.fence().unwrap();
+            // Everyone races -1 → its own rank id.
+            let old = win.compare_and_swap(world.rank() as i64, -1, 0, 0).unwrap();
+            let won = (old == -1) as i64;
+            let winners = m.all_reduce(won, ReduceOp::Sum).unwrap();
+            assert_eq!(winners, 1, "round {round}: CAS must have exactly one winner");
+            win.fence().unwrap();
+            let v = win.get(0, 0).unwrap();
+            assert!((0..world.size() as i64).contains(&v), "round {round}: {v}");
+        }
+        win.free().unwrap();
+    });
+}
+
+// ---------------- epoch misuse ----------------
+
+#[test]
+fn epoch_misuse_is_reported() {
+    Universe::test(2).audited(true).run(|world| {
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, 4).unwrap();
+        let me = world.rank();
+        // Unlock without a lock.
+        let e = win.unlock(me).unwrap_err();
+        assert_eq!(e.class, ErrorClass::RmaSync);
+        // Double lock of the same target.
+        win.lock(LockType::Shared, me).unwrap();
+        let e = win.lock(LockType::Exclusive, me).unwrap_err();
+        assert_eq!(e.class, ErrorClass::RmaSync);
+        win.unlock(me).unwrap();
+        // Out-of-range spans fail at the origin, synchronously.
+        let e = win.put(&1i64, (me + 1) % 2, 99).unwrap_err();
+        assert_eq!(e.class, ErrorClass::RmaRange);
+        // User-defined ops are invalid for RMA accumulate.
+        let f: ferrompi::op::UserFn = std::sync::Arc::new(|_, _, _, _| Ok(()));
+        let e = win
+            .native()
+            .accumulate(
+                &[0u8; 8],
+                1,
+                &Datatype::primitive(Primitive::I64),
+                0,
+                0,
+                &Op::user(f, true, "nope"),
+            )
+            .unwrap_err();
+        assert_eq!(e.class, ErrorClass::Op);
+        // The RMA-only ops are rejected by collective reductions (they
+        // would be schedule-dependent there).
+        let mut out = [0u8; 8];
+        let e = ferrompi::collective::allreduce(
+            world,
+            Some(&[0u8; 8]),
+            &mut out,
+            1,
+            &Datatype::primitive(Primitive::I64),
+            &Op::REPLACE,
+        )
+        .unwrap_err();
+        assert_eq!(e.class, ErrorClass::Op);
+        // Freeing with a lock still held errors — but still tears down.
+        win.lock(LockType::Shared, me).unwrap();
+        let e = win.free().unwrap_err();
+        assert_eq!(e.class, ErrorClass::RmaSync);
+    });
+}
+
+// ---------------- async RMA futures ----------------
+
+#[test]
+fn async_rma_chains_with_then_and_when_all() {
+    Universe::test(3).audited(true).run(|world| {
+        let r = world.rank();
+        let n = world.size();
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, 8).unwrap();
+        win.fence().unwrap();
+        // A chain: put my rank into slot r of rank 0, read it back, double
+        // it. The get is issued after the put on the same origin→target
+        // pair, so per-sender FIFO makes the readback deterministic; the
+        // `.then` chain sequences the completions.
+        let put = win.put_async(&(r as i64), 0, r);
+        let get = win.get_async(0, r);
+        let got = put
+            .then(move |done| {
+                done.get().unwrap();
+                get
+            })
+            .map(|v| v.map(|x| 2 * x))
+            .get()
+            .unwrap();
+        assert_eq!(got, 2 * r as i64);
+        win.fence().unwrap();
+        if r == 0 {
+            let all = win.with_local(|m| m[..n].to_vec());
+            assert_eq!(all, (0..n as i64).collect::<Vec<_>>());
+        }
+        // when_all over heterogeneous async accumulates.
+        let futs: Vec<_> =
+            (0..4).map(|k| win.accumulate_async(&(k as i64), 0, 4 + k, ReduceOp::Sum)).collect();
+        when_all(futs).get().unwrap();
+        win.fence().unwrap();
+        for k in 0..4 {
+            assert_eq!(win.get(0, 4 + k).unwrap(), (n * k) as i64);
+        }
+        // is_ready polling on an RMA future behaves like any request.
+        let mut f = win.fetch_and_op_async(0, 0, 0, ReduceOp::NoOp);
+        while !f.is_ready() {}
+        assert_eq!(f.get().unwrap(), 0, "NoOp fetch returns the stored rank-0 value");
+        win.fence().unwrap();
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn epoch_guards_flush_outstanding_futures_on_close() {
+    Universe::test(2).audited(true).run(|world| {
+        let r = world.rank();
+        let peer = 1 - r;
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, 2).unwrap();
+        let epoch = win.fence_epoch().unwrap();
+        // Futures left unresolved across the close: the epoch close must
+        // flush them, so the data is visible target-side *before* they
+        // are resolved, and resolving afterwards cannot block.
+        let put = win.put_async(&(10 + r as i64), peer, 0);
+        let acc = win.accumulate_async(&1i64, peer, 1, ReduceOp::Sum);
+        epoch.close().unwrap();
+        assert_eq!(win.with_local(|m| m[0]), 10 + peer as i64);
+        assert_eq!(win.with_local(|m| m[1]), 1);
+        put.get().unwrap();
+        acc.get().unwrap();
+        // Lock epoch: guard drop unlocks and flushes.
+        {
+            let _epoch = win.lock_epoch(LockType::Exclusive, peer).unwrap();
+            drop(win.put_async(&(100 + r as i64), peer, 0));
+        }
+        // The lock is free again (an immediate re-lock succeeds) and the
+        // put is remotely complete.
+        win.lock(LockType::Exclusive, peer).unwrap();
+        assert_eq!(win.get(peer, 0).unwrap(), 100 + r as i64);
+        win.unlock(peer).unwrap();
+        win.fence().unwrap();
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn pscw_sync_over_the_transport_path() {
+    Universe::test(2).audited(true).run(|world| {
+        let win: RmaWindow<i32> = RmaWindow::allocate(world, 4).unwrap();
+        if world.rank() == 1 {
+            win.native().post(&[0]).unwrap();
+            win.native().wait(&[0]).unwrap();
+            assert_eq!(win.with_local(|m| m[2]), 99);
+        } else {
+            win.native().start(&[1]).unwrap();
+            // Async put inside the access epoch; complete() flushes it.
+            drop(win.put_async(&99i32, 1, 2));
+            win.native().complete(&[1]).unwrap();
+        }
+        win.free().unwrap();
+    });
+}
+
+// ---------------- chaos differential ----------------
+
+#[test]
+fn rma_program_is_byte_identical_under_chaos() {
+    // An RMA-heavy generated program: byte-identical digests across a
+    // chaos seed matrix (delays, cross-sender reordering, yield jitter,
+    // eager sweeps, pool pressure), every run quiescence-audited.
+    let program = Program {
+        seed: 0x1A_0C0DE,
+        nranks: 3,
+        phases: vec![
+            Phase::Rma { len: 3, incs: 2 },
+            Phase::Barrier,
+            Phase::Rma { len: 6, incs: 1 },
+            Phase::Immediate {
+                transfers: vec![
+                    ferrompi::sim::proggen::Transfer { src: 0, dst: 2, tag: 1, len: 70_000 },
+                    ferrompi::sim::proggen::Transfer { src: 1, dst: 0, tag: 0, len: 64 },
+                ],
+                wildcard_src: false,
+                wildcard_tag: false,
+            },
+            Phase::Rma { len: 1, incs: 3 },
+        ],
+    };
+    assert_differential(&program, &[3, 11, 40, 77]);
+}
+
+#[test]
+fn generated_programs_include_rma_and_stay_differential() {
+    // Generator smoke: some seed in a small range must produce an Rma
+    // phase, and a generated program containing one passes the harness.
+    let mut with_rma = None;
+    for seed in 0..60 {
+        let p = Program::generate(seed, 3);
+        if p.phases.iter().any(|ph| matches!(ph, Phase::Rma { .. })) {
+            with_rma = Some(p);
+            break;
+        }
+    }
+    let p = with_rma.expect("no seed in 0..60 generated an Rma phase");
+    assert_differential(&p, &[5, 23]);
+}
+
+// ---------------- substrate detail: used communicator isolation ----------------
+
+#[test]
+fn window_comm_is_isolated_from_user_traffic() {
+    // RMA sync (fence barriers, PSCW tags) runs on a dup'd communicator:
+    // user p2p on the parent comm with any tag cannot be matched by it.
+    Universe::test(2).audited(true).run(|world: &Comm| {
+        let win: RmaWindow<i64> = RmaWindow::allocate(world, 1).unwrap();
+        let byte = Datatype::primitive(Primitive::Byte);
+        let peer = (1 - world.rank()) as i32;
+        // Exchange user messages while a fence epoch is mid-flight.
+        win.fence().unwrap();
+        let req = world.irecv(&mut [], 0, &byte, peer, ferrompi::comm::TAG_UB - 1).unwrap();
+        world.send(&[], 0, &byte, peer, ferrompi::comm::TAG_UB - 1).unwrap();
+        win.put_async(&7i64, 1 - world.rank(), 0).get().unwrap();
+        req.wait().unwrap();
+        win.fence().unwrap();
+        assert_eq!(win.with_local(|m| m[0]), 7);
+        win.free().unwrap();
+    });
+}
