@@ -4,16 +4,22 @@
 //! payload-copy counts on the message path (the substrate's hot paths,
 //! used by the §Perf log).
 
+use ferrompi::coordinator::{write_transport_json, TransportRow};
 use ferrompi::datatype::{Datatype, Primitive};
 use ferrompi::universe::Universe;
 use ferrompi::util::alloc_count;
 use ferrompi::util::stats::mean;
 use ferrompi::util::table::Table;
+use std::sync::atomic::Ordering;
 
 #[global_allocator]
 static ALLOC: alloc_count::CountingAlloc = alloc_count::CountingAlloc;
 
 const ITERS: usize = 500;
+
+/// Message sizes for the cross-backend sweep (matches the
+/// `builtin:pingpong` worker's default list).
+const TRANSPORT_BYTES: [usize; 3] = [8, 1024, 65536];
 
 /// One-way latency plus steady-state allocation count per iteration
 /// (measured on rank 0 across the timed loop, after warmup has populated
@@ -22,6 +28,11 @@ struct PingPong {
     one_way_s: f64,
     allocs_per_iter: f64,
     pool: ferrompi::transport::PoolStats,
+    /// Backend counters (the `backend_frames_tx` / `backend_bytes_tx`
+    /// pvars) — on the in-process backend every packet counts, with zero
+    /// framing bytes beyond the payload.
+    backend_frames_tx: u64,
+    backend_bytes_tx: u64,
 }
 
 fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> PingPong {
@@ -71,7 +82,66 @@ fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> PingPong {
             }
         }
     }
-    PingPong { one_way_s: mean(&lat), allocs_per_iter: allocs, pool: fabric.pool.stats() }
+    PingPong {
+        one_way_s: mean(&lat),
+        allocs_per_iter: allocs,
+        pool: fabric.pool.stats(),
+        backend_frames_tx: fabric.stats.backend.frames_tx.load(Ordering::Relaxed),
+        backend_bytes_tx: fabric.stats.backend.bytes_tx.load(Ordering::Relaxed),
+    }
+}
+
+/// Run `ferrompi-launch -n 2 --backend <b> builtin:pingpong` and parse
+/// the `backend,bytes,one_way_s` CSV it appends. Returns `None` (with a
+/// note) when the launcher binary is unavailable (e.g. a bench run that
+/// didn't build bins) or the job fails — the sweep degrades to whatever
+/// backends it can measure rather than aborting the whole bench.
+fn launched_pingpong(backend: &'static str) -> Option<Vec<TransportRow>> {
+    let launcher = match option_env!("CARGO_BIN_EXE_ferrompi-launch") {
+        Some(p) => p,
+        None => {
+            println!("({backend}: skipped — launcher binary not built into this bench)");
+            return None;
+        }
+    };
+    let bytes_arg =
+        TRANSPORT_BYTES.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",");
+    let out = std::env::temp_dir().join(format!("ferrompi-pingpong-{}.csv", std::process::id()));
+    let _ = std::fs::remove_file(&out);
+    let status = std::process::Command::new(launcher)
+        .args(["-n", "2", "--backend", backend, "builtin:pingpong", "--out"])
+        .arg(&out)
+        .args(["--bytes", &bytes_arg, "--iters", "200"])
+        .status();
+    let rows = match status {
+        Ok(s) if s.success() => {
+            let csv = std::fs::read_to_string(&out).unwrap_or_default();
+            csv.lines()
+                .filter_map(|line| {
+                    let mut f = line.split(',');
+                    let (b, nb, s) = (f.next()?, f.next()?, f.next()?);
+                    if b != backend {
+                        return None;
+                    }
+                    Some(TransportRow {
+                        backend,
+                        bytes: nb.parse().ok()?,
+                        one_way_s: s.parse().ok()?,
+                    })
+                })
+                .collect()
+        }
+        Ok(s) => {
+            println!("({backend}: skipped — launched job exited with {s})");
+            return None;
+        }
+        Err(e) => {
+            println!("({backend}: skipped — could not spawn launcher: {e})");
+            return None;
+        }
+    };
+    let _ = std::fs::remove_file(&out);
+    Some(rows)
 }
 
 fn unexpected_flood(depth: usize) -> f64 {
@@ -114,10 +184,16 @@ fn main() {
         "pool recycled i/e",
         "pool allocated i/e",
         "bytes CPU-copied i/e",
+        "backend frames tx i/e",
+        "backend bytes tx i/e",
     ]);
+    let mut transport = Vec::new();
     for bytes in [8usize, 1024, 65536, 65537, 262144] {
         let intra = pingpong(1, 2, bytes);
         let inter = pingpong(2, 1, bytes);
+        if TRANSPORT_BYTES.contains(&bytes) {
+            transport.push(TransportRow { backend: "inproc", bytes, one_way_s: intra.one_way_s });
+        }
         t.push(vec![
             bytes.to_string(),
             format!("{:.2}", intra.one_way_s * 1e6),
@@ -126,6 +202,8 @@ fn main() {
             format!("{}/{}", intra.pool.recycled, inter.pool.recycled),
             format!("{}/{}", intra.pool.allocated, inter.pool.allocated),
             format!("{}/{}", intra.pool.copied_bytes, inter.pool.copied_bytes),
+            format!("{}/{}", intra.backend_frames_tx, inter.backend_frames_tx),
+            format!("{}/{}", intra.backend_bytes_tx, inter.backend_bytes_tx),
         ]);
     }
     println!("{}", t.to_markdown());
@@ -141,4 +219,31 @@ fn main() {
         t.push(vec![depth.to_string(), format!("{:.0}", unexpected_flood(depth) * 1e9)]);
     }
     println!("{}", t.to_markdown());
+
+    // Cross-backend sweep: the inproc rows above measured in-process;
+    // shm and socket measured by launcher-spawned 2-rank jobs on this
+    // host. Real wall-clock on real transports, so absolute numbers are
+    // machine-dependent — the artifact exists to compare the backends
+    // against each other on one machine.
+    println!("\ntransport backends — one-way latency (us), 2 ranks on this host:\n");
+    #[cfg(unix)]
+    if let Some(rows) = launched_pingpong("shm") {
+        transport.extend(rows);
+    }
+    if let Some(rows) = launched_pingpong("socket") {
+        transport.extend(rows);
+    }
+    let mut t = Table::new(&["backend", "bytes", "one-way (us)"]);
+    for r in &transport {
+        t.push(vec![r.backend.into(), r.bytes.to_string(), format!("{:.2}", r.one_way_s * 1e6)]);
+    }
+    println!("{}", t.to_markdown());
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate has a parent dir")
+        .to_path_buf();
+    let path = root.join("BENCH_transport.json");
+    write_transport_json(&transport, &path).expect("write transport JSON");
+    println!("wrote {}", path.display());
 }

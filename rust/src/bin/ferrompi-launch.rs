@@ -1,0 +1,25 @@
+//! `ferrompi-launch` — the standalone mpiexec-style launcher binary
+//! (`ferrompi launch …` is the same code behind the main CLI).
+//!
+//! The hidden `__worker` first argument dispatches the builtin workers:
+//! `builtin:` programs re-invoke *this* executable, whichever of the two
+//! entry points spawned them.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.split_first() {
+        Some((first, rest)) if first == "__worker" => match rest.split_first() {
+            Some((name, wargs)) => {
+                ferrompi::coordinator::launch::worker_main(name, &wargs.to_vec())
+            }
+            None => {
+                eprintln!("__worker needs a builtin name");
+                2
+            }
+        },
+        _ => ferrompi::coordinator::launch::cli_main(&argv),
+    };
+    ExitCode::from(code.clamp(0, 255) as u8)
+}

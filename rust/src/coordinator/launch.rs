@@ -1,0 +1,758 @@
+//! mpiexec-style multi-process launcher.
+//!
+//! `ferrompi launch -n 4 --backend socket <program> [args…]` (also
+//! installed as the `ferrompi-launch` binary) brings up N OS processes,
+//! each hosting exactly one rank over a cross-process transport backend
+//! (see `docs/TRANSPORT.md`):
+//!
+//! 1. The launcher binds a *bootstrap* TCP listener on localhost, creates
+//!    backend resources that must pre-exist (the shm segment), and spawns
+//!    the N workers with the job described in `FERROMPI_*` environment
+//!    variables.
+//! 2. Each worker binds its own fabric listener (socket backend), then
+//!    dials the bootstrap socket and sends a hello carrying its rank and
+//!    address.
+//! 3. Once all N hellos are in, the launcher broadcasts the full address
+//!    table; receipt doubles as the "everyone is alive" gate.
+//! 4. The worker's first `Universe::run` detects the launch environment
+//!    and runs the SPMD closure as its single rank (see
+//!    [`crate::universe`]); the launcher waits for all workers, killing
+//!    the job on the first failure.
+//!
+//! Programs are either a path to any binary built against this crate
+//! (its own `Universe::run` picks the job up from the environment) or a
+//! `builtin:` name — small workers compiled into `ferrompi` itself that
+//! the conformance suite and benches drive.
+
+use crate::transport::backend::{effective_backend, BackendKind};
+#[cfg(unix)]
+use crate::transport::shm::{ring_cap_from_env, ShmSegment};
+use crate::transport::socket::SocketListener;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub const ENV_RANK: &str = "FERROMPI_LAUNCH_RANK";
+pub const ENV_WORLD: &str = "FERROMPI_LAUNCH_WORLD";
+pub const ENV_BOOTSTRAP: &str = "FERROMPI_BOOTSTRAP";
+pub const ENV_SHM_PATH: &str = "FERROMPI_SHM_PATH";
+
+/// `FERROMPI_NODES × FERROMPI_PPN` must equal the launched world size —
+/// launched jobs never silently reshape (satellite of the PR 3 knob
+/// conventions; the thread-mode `Universe::from_env` fallback semantics
+/// are unchanged).
+pub fn validate_launched_shape(nodes: usize, ppn: usize, world: usize) -> Result<(), String> {
+    if nodes == 0 || ppn == 0 {
+        return Err(format!("FERROMPI_NODES ({nodes}) and FERROMPI_PPN ({ppn}) must be ≥ 1"));
+    }
+    if nodes * ppn != world {
+        return Err(format!(
+            "FERROMPI_NODES × FERROMPI_PPN = {nodes}×{ppn} = {} does not match the launched \
+             world size {world}; fix the shape or the -n count",
+            nodes * ppn
+        ));
+    }
+    Ok(())
+}
+
+/// The job description a launched worker process reads from its
+/// environment (plus the fabric listener it bound during rendezvous).
+#[derive(Debug)]
+pub struct LaunchedJob {
+    pub rank: usize,
+    pub world: usize,
+    pub nodes: usize,
+    pub ppn: usize,
+    pub backend: BackendKind,
+    /// Per-rank fabric addresses (socket backend; empty for shm).
+    pub addrs: Vec<SocketAddr>,
+    /// The shared segment path (shm backend).
+    pub shm_path: Option<PathBuf>,
+    /// The pre-bound fabric listener (socket backend). Bound *before*
+    /// the hello so the advertised address is already live.
+    pub listener: Option<SocketListener>,
+}
+
+enum LaunchState {
+    Unchecked,
+    NotLaunched,
+    Consumed,
+}
+
+static LAUNCH_STATE: Mutex<LaunchState> = Mutex::new(LaunchState::Unchecked);
+
+/// Hand the process's launched job to its first `Universe::run`, exactly
+/// once. Returns `Ok(None)` in ordinary (thread-mode) processes.
+pub fn take_launched_job() -> Result<Option<LaunchedJob>, String> {
+    let mut st = LAUNCH_STATE.lock().unwrap();
+    match *st {
+        LaunchState::NotLaunched => Ok(None),
+        LaunchState::Consumed => Err(
+            "a launched process runs exactly one job (Universe::run called twice under \
+             ferrompi-launch)"
+                .into(),
+        ),
+        LaunchState::Unchecked => match job_from_env()? {
+            None => {
+                *st = LaunchState::NotLaunched;
+                Ok(None)
+            }
+            Some(job) => {
+                *st = LaunchState::Consumed;
+                Ok(Some(job))
+            }
+        },
+    }
+}
+
+fn env_usize(key: &str) -> Result<Option<usize>, String> {
+    match std::env::var(key) {
+        Err(_) => Ok(None),
+        Ok(s) => s
+            .trim()
+            .parse::<usize>()
+            .map(Some)
+            .map_err(|_| format!("{key}: expected a non-negative integer, got '{s}'")),
+    }
+}
+
+/// Parse the launch environment; `None` when this process was not
+/// spawned by the launcher.
+fn job_from_env() -> Result<Option<LaunchedJob>, String> {
+    let rank = match env_usize(ENV_RANK)? {
+        None => return Ok(None),
+        Some(r) => r,
+    };
+    let world = env_usize(ENV_WORLD)?
+        .ok_or_else(|| format!("{ENV_RANK} is set but {ENV_WORLD} is not"))?;
+    if rank >= world || world == 0 {
+        return Err(format!("launched rank {rank} out of range for world {world}"));
+    }
+    let nodes = env_usize("FERROMPI_NODES")?.unwrap_or(1);
+    let ppn = env_usize("FERROMPI_PPN")?.unwrap_or(world);
+    validate_launched_shape(nodes, ppn, world)?;
+    let backend = effective_backend()?;
+    let bootstrap = std::env::var(ENV_BOOTSTRAP)
+        .map_err(|_| format!("{ENV_RANK} is set but {ENV_BOOTSTRAP} is not"))?;
+    match backend {
+        BackendKind::Inproc => Err(format!(
+            "launched mode requires a cross-process backend (shm | socket); \
+             FERROMPI_BACKEND=inproc runs all ranks in one process without {ENV_RANK}"
+        )),
+        BackendKind::Shm => {
+            let shm_path = std::env::var(ENV_SHM_PATH)
+                .map_err(|_| format!("shm backend needs {ENV_SHM_PATH}"))?;
+            rendezvous(&bootstrap, rank, "")?;
+            Ok(Some(LaunchedJob {
+                rank,
+                world,
+                nodes,
+                ppn,
+                backend,
+                addrs: Vec::new(),
+                shm_path: Some(PathBuf::from(shm_path)),
+                listener: None,
+            }))
+        }
+        BackendKind::Socket => {
+            let listener = SocketListener::bind()
+                .map_err(|e| format!("bind fabric listener: {e}"))?;
+            let table = rendezvous(&bootstrap, rank, &listener.addr().to_string())?;
+            let mut addrs = Vec::with_capacity(world);
+            for (r, a) in table.iter().enumerate() {
+                addrs.push(
+                    a.parse::<SocketAddr>()
+                        .map_err(|e| format!("rank {r} advertised bad address '{a}': {e}"))?,
+                );
+            }
+            if addrs.len() != world {
+                return Err(format!(
+                    "bootstrap table has {} entries for world {world}",
+                    addrs.len()
+                ));
+            }
+            Ok(Some(LaunchedJob {
+                rank,
+                world,
+                nodes,
+                ppn,
+                backend,
+                addrs,
+                shm_path: None,
+                listener: Some(listener),
+            }))
+        }
+    }
+}
+
+// ---- bootstrap wire: hello = [u32 rank][u32 len][addr utf8];
+//      table = [u32 n] + n × ([u32 len][addr utf8]) ----
+
+fn rendezvous(bootstrap: &str, rank: usize, my_addr: &str) -> Result<Vec<String>, String> {
+    let addr: SocketAddr = bootstrap
+        .parse()
+        .map_err(|e| format!("{ENV_BOOTSTRAP}='{bootstrap}' unparseable: {e}"))?;
+    let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(30))
+        .map_err(|e| format!("connect bootstrap {bootstrap}: {e}"))?;
+    let io = |e: std::io::Error| format!("bootstrap exchange: {e}");
+    let mut hello = Vec::with_capacity(8 + my_addr.len());
+    hello.extend_from_slice(&(rank as u32).to_le_bytes());
+    hello.extend_from_slice(&(my_addr.len() as u32).to_le_bytes());
+    hello.extend_from_slice(my_addr.as_bytes());
+    stream.write_all(&hello).map_err(io)?;
+    let mut nbuf = [0u8; 4];
+    stream.read_exact(&mut nbuf).map_err(io)?;
+    let n = u32::from_le_bytes(nbuf) as usize;
+    let mut table = Vec::with_capacity(n);
+    for _ in 0..n {
+        stream.read_exact(&mut nbuf).map_err(io)?;
+        let len = u32::from_le_bytes(nbuf) as usize;
+        if len > 4096 {
+            return Err(format!("bootstrap table entry of {len} bytes is implausible"));
+        }
+        let mut a = vec![0u8; len];
+        stream.read_exact(&mut a).map_err(io)?;
+        table.push(String::from_utf8(a).map_err(|e| format!("bootstrap table not utf8: {e}"))?);
+    }
+    Ok(table)
+}
+
+// ---------------- launcher side ----------------
+
+#[derive(Debug, Clone)]
+pub struct LaunchConfig {
+    /// World size (`-n`).
+    pub n: usize,
+    pub nodes: usize,
+    pub ppn: usize,
+    pub backend: BackendKind,
+    /// Program argv: a binary path, or `builtin:<name>` for the workers
+    /// compiled into `ferrompi` itself.
+    pub program: Vec<String>,
+    /// Per-ring shm capacity override (`--shm-ring`, bytes).
+    pub shm_ring: Option<usize>,
+}
+
+fn launch_timeout() -> Duration {
+    let s = std::env::var("FERROMPI_LAUNCH_TIMEOUT_S")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(120);
+    Duration::from_secs(s)
+}
+
+fn kill_all(children: &mut [(usize, Child)]) {
+    for (_, c) in children.iter_mut() {
+        let _ = c.kill();
+    }
+    for (_, c) in children.iter_mut() {
+        let _ = c.wait();
+    }
+}
+
+/// Spawn and shepherd one multi-process job. Returns the job's exit code
+/// (0 = every rank exited cleanly).
+pub fn launch(cfg: &LaunchConfig) -> Result<i32, String> {
+    if cfg.n == 0 {
+        return Err("-n must be ≥ 1".into());
+    }
+    if cfg.program.is_empty() {
+        return Err("no program given (path or builtin:<name>)".into());
+    }
+    validate_launched_shape(cfg.nodes, cfg.ppn, cfg.n)?;
+
+    // Resolve the program argv once, up front.
+    let argv = program_argv(&cfg.program)?;
+
+    if cfg.backend == BackendKind::Inproc {
+        // Degenerate launch: one process, all ranks as threads — the
+        // classic mode, driven through the same CLI for uniform sweeps.
+        let mut cmd = Command::new(&argv[0]);
+        cmd.args(&argv[1..])
+            .env("FERROMPI_BACKEND", "inproc")
+            .env("FERROMPI_NODES", cfg.nodes.to_string())
+            .env("FERROMPI_PPN", cfg.ppn.to_string())
+            .env_remove(ENV_RANK);
+        let status = cmd.status().map_err(|e| format!("spawn {}: {e}", argv[0]))?;
+        return Ok(status.code().unwrap_or(1));
+    }
+
+    // Backend resources that must pre-exist.
+    #[cfg(unix)]
+    let shm_seg = if cfg.backend == BackendKind::Shm {
+        let ring = match cfg.shm_ring {
+            Some(r) if r.is_power_of_two() && r >= 4096 => r,
+            Some(r) => {
+                return Err(format!("--shm-ring {r}: must be a power of two ≥ 4096"));
+            }
+            None => ring_cap_from_env()?,
+        };
+        let path = std::env::temp_dir()
+            .join(format!("ferrompi-shm-{}", std::process::id()));
+        Some((
+            ShmSegment::create(&path, cfg.n, ring)
+                .map_err(|e| format!("create shm segment: {e}"))?,
+            path,
+        ))
+    } else {
+        None
+    };
+    #[cfg(not(unix))]
+    if cfg.backend == BackendKind::Shm {
+        return Err("the shm backend requires a unix platform".into());
+    }
+
+    let bootstrap = TcpListener::bind(("127.0.0.1", 0))
+        .map_err(|e| format!("bind bootstrap listener: {e}"))?;
+    let bootstrap_addr = bootstrap.local_addr().map_err(|e| e.to_string())?;
+    bootstrap
+        .set_nonblocking(true)
+        .map_err(|e| format!("bootstrap nonblocking: {e}"))?;
+
+    let mut children: Vec<(usize, Child)> = Vec::with_capacity(cfg.n);
+    for rank in 0..cfg.n {
+        let mut cmd = Command::new(&argv[0]);
+        cmd.args(&argv[1..])
+            .env(ENV_RANK, rank.to_string())
+            .env(ENV_WORLD, cfg.n.to_string())
+            .env(ENV_BOOTSTRAP, bootstrap_addr.to_string())
+            .env("FERROMPI_BACKEND", cfg.backend.label())
+            .env("FERROMPI_NODES", cfg.nodes.to_string())
+            .env("FERROMPI_PPN", cfg.ppn.to_string());
+        #[cfg(unix)]
+        if let Some((seg, path)) = &shm_seg {
+            cmd.env(ENV_SHM_PATH, path.display().to_string())
+                .env("FERROMPI_SHM_RING", seg.ring_cap().to_string());
+        }
+        match cmd.spawn() {
+            Ok(c) => children.push((rank, c)),
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(format!("spawn rank {rank} ({}): {e}", argv[0]));
+            }
+        }
+    }
+
+    // Rendezvous: collect N hellos, polling for early child deaths.
+    let deadline = Instant::now() + launch_timeout();
+    let mut hellos: Vec<Option<(TcpStream, String)>> = (0..cfg.n).map(|_| None).collect();
+    let mut got = 0;
+    while got < cfg.n {
+        match bootstrap.accept() {
+            Ok((mut stream, _)) => {
+                if let Err(e) = read_hello(&mut stream, &mut hellos) {
+                    kill_all(&mut children);
+                    return Err(e);
+                }
+                got += 1;
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                for (rank, c) in children.iter_mut() {
+                    if let Ok(Some(status)) = c.try_wait() {
+                        let code = status.code().unwrap_or(1);
+                        let rank = *rank;
+                        kill_all(&mut children);
+                        return Err(format!(
+                            "rank {rank} exited with code {code} before rendezvous completed"
+                        ));
+                    }
+                }
+                if Instant::now() > deadline {
+                    kill_all(&mut children);
+                    return Err(format!(
+                        "rendezvous timed out with {got}/{} hellos (FERROMPI_LAUNCH_TIMEOUT_S)",
+                        cfg.n
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(format!("bootstrap accept: {e}"));
+            }
+        }
+    }
+
+    // Broadcast the address table: this releases every worker.
+    let mut table = Vec::new();
+    table.extend_from_slice(&(cfg.n as u32).to_le_bytes());
+    for h in &hellos {
+        let addr = &h.as_ref().unwrap().1;
+        table.extend_from_slice(&(addr.len() as u32).to_le_bytes());
+        table.extend_from_slice(addr.as_bytes());
+    }
+    for h in hellos.iter_mut() {
+        let (stream, _) = h.as_mut().unwrap();
+        stream.set_nonblocking(false).map_err(|e| e.to_string())?;
+        if let Err(e) = stream.write_all(&table) {
+            kill_all(&mut children);
+            return Err(format!("broadcast address table: {e}"));
+        }
+    }
+    drop(hellos);
+
+    // Shepherd: first nonzero exit kills the job.
+    let mut exit_code = 0;
+    let mut done = vec![false; cfg.n];
+    let mut remaining = cfg.n;
+    while remaining > 0 {
+        let mut progressed = false;
+        for (i, (rank, c)) in children.iter_mut().enumerate() {
+            if done[i] {
+                continue;
+            }
+            match c.try_wait() {
+                Ok(Some(status)) => {
+                    done[i] = true;
+                    remaining -= 1;
+                    progressed = true;
+                    let code = status.code().unwrap_or(1);
+                    if code != 0 && exit_code == 0 {
+                        exit_code = code;
+                        eprintln!(
+                            "ferrompi-launch: rank {rank} exited with code {code}; \
+                             terminating the job"
+                        );
+                        for (j, (_, other)) in children.iter_mut().enumerate() {
+                            if !done[j] {
+                                let _ = other.kill();
+                            }
+                        }
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    done[i] = true;
+                    remaining -= 1;
+                    progressed = true;
+                    if exit_code == 0 {
+                        exit_code = 1;
+                        eprintln!("ferrompi-launch: wait on rank {rank} failed: {e}");
+                    }
+                }
+            }
+        }
+        if Instant::now() > deadline && remaining > 0 {
+            eprintln!("ferrompi-launch: job timed out; killing {remaining} live rank(s)");
+            kill_all(&mut children);
+            if exit_code == 0 {
+                exit_code = 124;
+            }
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    // shm_seg drops here: the owner unlinks the segment file.
+    Ok(exit_code)
+}
+
+fn read_hello(
+    stream: &mut TcpStream,
+    hellos: &mut [Option<(TcpStream, String)>],
+) -> Result<(), String> {
+    stream
+        .set_nonblocking(false)
+        .and_then(|_| stream.set_read_timeout(Some(Duration::from_secs(10))))
+        .map_err(|e| format!("bootstrap hello: {e}"))?;
+    let io = |e: std::io::Error| format!("bootstrap hello: {e}");
+    let mut word = [0u8; 4];
+    stream.read_exact(&mut word).map_err(io)?;
+    let rank = u32::from_le_bytes(word) as usize;
+    stream.read_exact(&mut word).map_err(io)?;
+    let len = u32::from_le_bytes(word) as usize;
+    if rank >= hellos.len() || len > 4096 {
+        return Err(format!("bogus bootstrap hello (rank {rank}, addr {len} B)"));
+    }
+    let mut addr = vec![0u8; len];
+    stream.read_exact(&mut addr).map_err(io)?;
+    let addr = String::from_utf8(addr).map_err(|e| format!("hello addr not utf8: {e}"))?;
+    if hellos[rank].is_some() {
+        return Err(format!("rank {rank} sent two bootstrap hellos"));
+    }
+    hellos[rank] = Some((stream.try_clone().map_err(io)?, addr));
+    Ok(())
+}
+
+/// Resolve the program field: `builtin:<name> [args…]` re-invokes this
+/// binary's hidden `__worker` entry; anything else is a path executed
+/// verbatim.
+fn program_argv(program: &[String]) -> Result<Vec<String>, String> {
+    match program[0].strip_prefix("builtin:") {
+        None => Ok(program.to_vec()),
+        Some(name) => {
+            let exe = std::env::current_exe()
+                .map_err(|e| format!("current_exe for builtin worker: {e}"))?;
+            let mut argv = vec![exe.display().to_string(), "__worker".into(), name.into()];
+            argv.extend(program[1..].iter().cloned());
+            Ok(argv)
+        }
+    }
+}
+
+// ---------------- CLI ----------------
+
+const USAGE: &str = "\
+usage: ferrompi-launch -n <ranks> [--backend inproc|shm|socket]
+                       [--nodes N --ppn P] [--shm-ring BYTES]
+                       <program|builtin:NAME> [args…]
+
+Brings up an mpiexec-style multi-process job on a cross-process
+transport backend. <program> is any binary built on ferrompi (its
+Universe::run picks the job up from the environment). Builtins:
+  builtin:allreduce                     modern-API allreduce smoke
+  builtin:conformance --seed S --out D  proggen digests → D/rank_R.digest
+  builtin:pingpong --out F [--bytes a,b]  latency sweep → CSV at F
+";
+
+/// Parse `ferrompi-launch` arguments and run the job; returns the
+/// process exit code.
+pub fn cli_main(args: &[String]) -> i32 {
+    let mut n = None;
+    let mut nodes = None;
+    let mut ppn = None;
+    let mut backend = None;
+    let mut shm_ring = None;
+    let mut program = Vec::new();
+    let mut i = 0;
+    let parse_usize = |flag: &str, v: Option<&String>| -> Result<usize, String> {
+        v.and_then(|s| s.parse::<usize>().ok())
+            .ok_or_else(|| format!("{flag} needs a positive integer"))
+    };
+    while i < args.len() {
+        let a = &args[i];
+        let take = |i: &mut usize| {
+            *i += 1;
+            args.get(*i)
+        };
+        let r: Result<(), String> = match a.as_str() {
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return 0;
+            }
+            "-n" | "--np" => parse_usize(a, take(&mut i)).map(|v| n = Some(v)),
+            "--nodes" => parse_usize(a, take(&mut i)).map(|v| nodes = Some(v)),
+            "--ppn" => parse_usize(a, take(&mut i)).map(|v| ppn = Some(v)),
+            "--shm-ring" => parse_usize(a, take(&mut i)).map(|v| shm_ring = Some(v)),
+            "--backend" => match take(&mut i) {
+                None => Err("--backend needs a value".into()),
+                Some(v) => BackendKind::parse(v).map(|k| backend = Some(k)),
+            },
+            _ => {
+                // First non-flag token starts the program argv.
+                program.extend(args[i..].iter().cloned());
+                i = args.len();
+                Ok(())
+            }
+        };
+        if let Err(e) = r {
+            eprintln!("ferrompi-launch: {e}\n{USAGE}");
+            return 2;
+        }
+        i += 1;
+    }
+    let n = match n {
+        Some(v) if v > 0 => v,
+        _ => {
+            eprintln!("ferrompi-launch: -n <ranks> is required\n{USAGE}");
+            return 2;
+        }
+    };
+    let backend = match backend {
+        Some(b) => b,
+        None => match effective_backend() {
+            // Bare `ferrompi-launch` defaults to the socket backend: a
+            // multi-process launcher on the in-process backend is the
+            // degenerate case, not the default.
+            Ok(BackendKind::Inproc) if std::env::var("FERROMPI_BACKEND").is_err() => {
+                BackendKind::Socket
+            }
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("ferrompi-launch: {e}");
+                return 2;
+            }
+        },
+    };
+    // Shape defaults: one node holding every rank; `--nodes N` without
+    // `--ppn` divides evenly or fails validation loudly.
+    let nodes = nodes.unwrap_or(1);
+    let ppn = ppn.unwrap_or(if nodes > 0 && n % nodes == 0 { n / nodes } else { 0 });
+    let cfg = LaunchConfig { n, nodes, ppn, backend, program, shm_ring };
+    match launch(&cfg) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("ferrompi-launch: {e}");
+            1
+        }
+    }
+}
+
+// ---------------- builtin workers ----------------
+
+/// Entry point for `<exe> __worker <name> [args…]` (spawned by
+/// [`launch`] for `builtin:` programs). Returns the exit code.
+pub fn worker_main(name: &str, args: &[String]) -> i32 {
+    let run = || -> Result<(), String> {
+        match name {
+            "allreduce" => builtin_allreduce(),
+            "conformance" => builtin_conformance(args),
+            "pingpong" => builtin_pingpong(args),
+            other => Err(format!("unknown builtin worker '{other}'")),
+        }
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("ferrompi worker {name}: {e}");
+            1
+        }
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+/// The acceptance-criterion smoke: a modern-API allreduce across the
+/// launched world, verified on every rank.
+fn builtin_allreduce() -> Result<(), String> {
+    let u = crate::universe::Universe::from_env(1, 1);
+    let world = u.nranks();
+    u.run(move |comm| {
+        let m = crate::modern::Communicator::world(comm);
+        let mine = comm.rank() as i64 + 1;
+        let got = m
+            .immediate_all_reduce::<i64>(mine, crate::modern::ReduceOp::Sum)
+            .get()
+            .unwrap_or_else(|e| panic!("allreduce: {e}"));
+        let want = (world as i64) * (world as i64 + 1) / 2;
+        assert_eq!(got, want, "rank {} allreduce mismatch", comm.rank());
+        if comm.rank() == 0 {
+            println!("allreduce ok: {got} across {world} rank(s)");
+        }
+    });
+    Ok(())
+}
+
+/// Cross-backend conformance worker: run the seeded proggen program and
+/// write this process's rank digests as hex lines to `<out>/rank_R.digest`.
+fn builtin_conformance(args: &[String]) -> Result<(), String> {
+    let seed: u64 = flag_value(args, "--seed")
+        .ok_or("conformance needs --seed")?
+        .parse()
+        .map_err(|e| format!("--seed: {e}"))?;
+    let out = PathBuf::from(flag_value(args, "--out").ok_or("conformance needs --out")?);
+    let u = crate::universe::Universe::from_env(1, 2).calm();
+    let program = crate::sim::proggen::Program::generate(seed, u.nranks());
+    let digests = u.run(|comm| (comm.rank(), program.run_local(comm)));
+    std::fs::create_dir_all(&out).map_err(|e| format!("create {}: {e}", out.display()))?;
+    for (rank, digest) in digests {
+        let body: String = digest.iter().map(|d| format!("{d:016x}\n")).collect();
+        let path = out.join(format!("rank_{rank}.digest"));
+        std::fs::write(&path, body).map_err(|e| format!("write {}: {e}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Latency sweep worker for `bench_p2p`'s cross-backend comparison:
+/// rank 0 ping-pongs with the last rank and appends CSV rows
+/// `backend,bytes,one_way_s` to `--out`.
+fn builtin_pingpong(args: &[String]) -> Result<(), String> {
+    let out = PathBuf::from(flag_value(args, "--out").ok_or("pingpong needs --out")?);
+    let bytes: Vec<usize> = flag_value(args, "--bytes")
+        .unwrap_or("8,1024,65536")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|e| format!("--bytes: {e}")))
+        .collect::<Result<_, _>>()?;
+    let iters: usize = flag_value(args, "--iters").unwrap_or("200").parse().unwrap_or(200);
+    let u = crate::universe::Universe::from_env(1, 2);
+    if u.nranks() < 2 {
+        return Err("pingpong needs at least 2 ranks".into());
+    }
+    let bytes2 = bytes.clone();
+    let rows = u.run(move |comm| {
+        let me = comm.rank();
+        let peer = comm.size() - 1;
+        let byte = crate::datatype::Datatype::primitive(crate::datatype::Primitive::Byte);
+        let mut rows = Vec::new();
+        for &nb in &bytes2 {
+            let sbuf = vec![0u8; nb];
+            let mut rbuf = vec![0u8; nb];
+            crate::collective::barrier(comm).unwrap();
+            let start = Instant::now();
+            for it in 0..iters {
+                let tag = it as i32 % 1024;
+                if me == 0 {
+                    comm.send(&sbuf, nb, &byte, peer as i32, tag).unwrap();
+                    comm.recv(&mut rbuf, nb, &byte, peer as i32, tag).unwrap();
+                } else if me == peer {
+                    comm.recv(&mut rbuf, nb, &byte, 0, tag).unwrap();
+                    comm.send(&sbuf, nb, &byte, 0, tag).unwrap();
+                }
+            }
+            if me == 0 {
+                let one_way = start.elapsed().as_secs_f64() / (iters as f64 * 2.0);
+                rows.push((nb, one_way));
+            }
+            crate::collective::barrier(comm).unwrap();
+        }
+        rows
+    });
+    // In launched mode only this process's rank is in `rows`; only rank
+    // 0 produced data.
+    let backend = effective_backend().map(|b| b.label()).unwrap_or("unknown");
+    let mut csv = String::new();
+    for rankrows in rows {
+        for (nb, s) in rankrows {
+            csv.push_str(&format!("{backend},{nb},{s:.9}\n"));
+        }
+    }
+    if !csv.is_empty() {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&out)
+            .map_err(|e| format!("open {}: {e}", out.display()))?;
+        f.write_all(csv.as_bytes()).map_err(|e| format!("write {}: {e}", out.display()))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launched_shape_must_multiply_out() {
+        assert!(validate_launched_shape(1, 4, 4).is_ok());
+        assert!(validate_launched_shape(2, 2, 4).is_ok());
+        let e = validate_launched_shape(2, 3, 4).unwrap_err();
+        assert!(e.contains("2×3"), "{e}");
+        assert!(e.contains("4"), "{e}");
+        assert!(validate_launched_shape(0, 4, 0).is_err());
+    }
+
+    #[test]
+    fn builtin_programs_resolve_to_worker_argv() {
+        let argv =
+            program_argv(&["builtin:allreduce".into(), "--x".into()]).unwrap();
+        assert_eq!(&argv[1..], &["__worker", "allreduce", "--x"]);
+        let plain = program_argv(&["/bin/echo".into(), "hi".into()]).unwrap();
+        assert_eq!(plain, vec!["/bin/echo".to_string(), "hi".to_string()]);
+    }
+
+    #[test]
+    fn flag_values_parse() {
+        let args: Vec<String> =
+            ["--seed", "7", "--out", "/tmp/x"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(flag_value(&args, "--seed"), Some("7"));
+        assert_eq!(flag_value(&args, "--out"), Some("/tmp/x"));
+        assert_eq!(flag_value(&args, "--missing"), None);
+    }
+}

@@ -2,6 +2,7 @@
 //! reporting pipeline. `examples/mpibench.rs` and
 //! `rust/benches/bench_figure1.rs` drive this to regenerate Figure 1.
 
+pub mod launch;
 pub mod mpibench;
 pub mod report;
 
@@ -10,6 +11,7 @@ pub use mpibench::{
     ALL_OPS,
 };
 pub use report::{
-    figure1_cells, figure1_report, overhead_json, tuned_json, write_overhead_json,
-    write_tuned_json, Figure1Cell, Figure1Report,
+    figure1_cells, figure1_report, overhead_json, transport_json, tuned_json,
+    write_overhead_json, write_transport_json, write_tuned_json, Figure1Cell, Figure1Report,
+    TransportRow,
 };

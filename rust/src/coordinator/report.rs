@@ -211,6 +211,42 @@ pub fn write_tuned_json(
     std::fs::write(path, tuned_json(rows))
 }
 
+/// One transport-backend ping-pong measurement (the cross-backend sweep
+/// in `bench_p2p`: inproc measured in-process, shm/socket via launcher-
+/// spawned 2-rank jobs).
+#[derive(Debug, Clone)]
+pub struct TransportRow {
+    pub backend: &'static str,
+    pub bytes: usize,
+    pub one_way_s: f64,
+}
+
+/// Serialize the cross-backend sweep as JSON (the `multiproc` CI
+/// artifact). Row order is preserved from the sweep, which iterates
+/// backends then sizes deterministically.
+pub fn transport_json(rows: &[TransportRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"backend\": \"{}\", \"bytes\": {}, \"one_way_s\": {}}}",
+                r.backend,
+                r.bytes,
+                json_num(r.one_way_s),
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"benchmark\": \"transport_backends\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    )
+}
+
+/// Write [`transport_json`] to `path`.
+pub fn write_transport_json(rows: &[TransportRow], path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, transport_json(rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::mpibench::BenchOp;
@@ -270,6 +306,20 @@ mod tests {
         assert_eq!(json_num(f64::NAN), "null");
         assert_eq!(json_num(f64::INFINITY), "null");
         assert_eq!(json_num(1.5), "1.5e0");
+    }
+
+    #[test]
+    fn transport_json_is_well_formed() {
+        let rows = vec![
+            TransportRow { backend: "inproc", bytes: 8, one_way_s: 1e-6 },
+            TransportRow { backend: "socket", bytes: 1024, one_way_s: f64::NAN },
+        ];
+        let j = transport_json(&rows);
+        assert!(j.contains("\"benchmark\": \"transport_backends\""));
+        assert!(j.contains("\"backend\": \"inproc\""));
+        assert!(j.contains("\"one_way_s\": null"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 
     #[test]

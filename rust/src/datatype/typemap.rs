@@ -241,6 +241,15 @@ impl TypeMap {
         self.clone()
     }
 
+    /// Reconstruct a typemap from its wire representation: the transport
+    /// framing codec ships `entries`/`lb`/`extent` for RMA accumulate
+    /// packets that cross process boundaries. Derived quantities (size,
+    /// true bounds, contiguity) are recomputed, so a decoded map is
+    /// indistinguishable from the one the origin serialized.
+    pub fn from_wire(entries: Vec<(Primitive, isize)>, lb: isize, extent: isize) -> TypeMap {
+        TypeMap::build(entries, lb, extent)
+    }
+
     // ---- accessors ----
 
     pub fn entries(&self) -> &[(Primitive, isize)] {

@@ -100,6 +100,16 @@ impl File {
     /// `MPI_File_open` — collective over `comm`.
     pub fn open(comm: &Comm, path: &str, amode: AccessMode) -> Result<File> {
         amode.validate()?;
+        if comm.rank_ctx().fabric.is_multiprocess() {
+            // The simulated parallel filesystem lives in process memory;
+            // a launched job would give every rank a private disconnected
+            // "shared" file. Refuse cleanly instead.
+            return Err(mpi_err!(
+                Io,
+                "the simulated shared filesystem is per-process — MPI-IO is \
+                 unavailable on multi-process transport backends"
+            ));
+        }
         let comm = comm.dup()?;
         let fabric = comm.rank_ctx().fabric.clone();
         // Rank 0 performs the filesystem transaction; the outcome is

@@ -17,6 +17,26 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    // The launcher and its worker entry return raw exit codes (a
+    // failing rank's code must pass through to the shepherd).
+    match cmd {
+        "launch" => {
+            return ExitCode::from(ferrompi::coordinator::launch::cli_main(&rest).clamp(0, 255) as u8)
+        }
+        "__worker" => {
+            let (name, wargs) = match rest.split_first() {
+                Some((n, a)) => (n.as_str(), a.to_vec()),
+                None => {
+                    eprintln!("__worker needs a builtin name");
+                    return ExitCode::FAILURE;
+                }
+            };
+            return ExitCode::from(
+                ferrompi::coordinator::launch::worker_main(name, &wargs).clamp(0, 255) as u8,
+            );
+        }
+        _ => {}
+    }
     let result = match cmd {
         "bench" => cmd_bench(&rest),
         "selftest" => cmd_selftest(&rest),
@@ -42,6 +62,7 @@ fn print_usage() {
     println!(
         "ferrompi — reproduction of 'A C++20 Interface for MPI 4.0'\n\n\
          commands:\n\
+         \x20 launch     bring up an mpiexec-style multi-process job (see ferrompi launch --help)\n\
          \x20 bench      run the mpiBench sweep (Figure 1)\n\
          \x20 selftest   quick end-to-end smoke across all layers\n\
          \x20 pvars      run a small job and dump MPI_T performance variables\n\

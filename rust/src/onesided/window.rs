@@ -290,17 +290,29 @@ impl Window {
         engine::register_window(&ctx, win_id, sizes[comm.rank()]);
         let fabric = ctx.fabric.clone();
         let key = 0x5749_0000_0000_0000u64 | win_id as u64;
-        if comm.rank() == 0 {
+        let meta = if fabric.is_multiprocess() {
+            // The object registry is per-process; a launched job cannot
+            // share the lock table. Active-target sync (fence/PSCW) still
+            // works — the barrier below keeps registration ordered before
+            // any peer's first RMA packet — but passive-target locks are
+            // refused in `lock()`.
             let m: Arc<WinMeta> =
                 Arc::new(WinMeta { locks: (0..p).map(|_| TargetLock::default()).collect() });
-            fabric.publish(key, m);
-        }
-        collective::barrier(&comm)?;
-        let meta = fabric
-            .fetch(key)
-            .ok_or_else(|| mpi_err!(Win, "window registry entry missing"))?
-            .downcast::<WinMeta>()
-            .map_err(|_| mpi_err!(Intern, "window registry type mismatch"))?;
+            collective::barrier(&comm)?;
+            m
+        } else {
+            if comm.rank() == 0 {
+                let m: Arc<WinMeta> =
+                    Arc::new(WinMeta { locks: (0..p).map(|_| TargetLock::default()).collect() });
+                fabric.publish(key, m);
+            }
+            collective::barrier(&comm)?;
+            fabric
+                .fetch(key)
+                .ok_or_else(|| mpi_err!(Win, "window registry entry missing"))?
+                .downcast::<WinMeta>()
+                .map_err(|_| mpi_err!(Intern, "window registry type mismatch"))?
+        };
         Ok(Window {
             comm,
             key,
@@ -619,6 +631,13 @@ impl Window {
     /// `MPI_Win_lock`. Contended acquisition keeps driving the progress
     /// engine, so inbound RMA traffic is served while waiting.
     pub fn lock(&self, lt: LockType, target: usize) -> Result<()> {
+        if self.comm.rank_ctx().fabric.is_multiprocess() {
+            return Err(mpi_err!(
+                RmaSync,
+                "passive-target locks need a shared lock table and are unavailable on \
+                 multi-process backends — use fence or post/start/complete/wait"
+            ));
+        }
         if self.held.borrow().iter().any(|&(t, _)| t == target) {
             return Err(mpi_err!(RmaSync, "window already locked for target {target}"));
         }
@@ -722,7 +741,7 @@ impl Window {
         }
         collective::barrier(&self.comm)?;
         engine::unregister_window(self.comm.rank_ctx(), self.win_id);
-        if self.comm.rank() == 0 {
+        if self.comm.rank() == 0 && !self.comm.rank_ctx().fabric.is_multiprocess() {
             self.comm.rank_ctx().fabric.unpublish(self.key);
         }
         if held.is_empty() {

@@ -607,7 +607,7 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
 fn process_mailbox(ctx: &RankCtx) -> Result<()> {
     let mut pkts = ctx.scratch.take();
     pkts.clear();
-    ctx.fabric.mailbox(ctx.world_rank).drain_into(&mut pkts);
+    ctx.fabric.poll(ctx.world_rank, &mut pkts);
     let r = pkts.drain(..).try_for_each(|p| handle_packet(ctx, p));
     *ctx.scratch.borrow_mut() = pkts;
     r
@@ -687,8 +687,7 @@ pub fn wait_for(ctx: &Rc<RankCtx>, mut done: impl FnMut() -> bool) -> Result<()>
         let mut pkts = ctx.scratch.take();
         pkts.clear();
         ctx.fabric
-            .mailbox(ctx.world_rank)
-            .wait_drain_into(&mut pkts, Duration::from_micros(200));
+            .poll_wait(ctx.world_rank, &mut pkts, Duration::from_micros(200));
         let r = pkts.drain(..).try_for_each(|p| handle_packet(ctx, p));
         *ctx.scratch.borrow_mut() = pkts;
         r?;

@@ -39,7 +39,7 @@ pub fn audit_rank(ctx: &Rc<RankCtx>) -> Vec<String> {
         v.push(format!("final progress turn failed: {e}"));
     }
     let r = ctx.world_rank;
-    let depth = ctx.fabric.mailbox(r).len();
+    let depth = ctx.fabric.queued(r);
     if depth > 0 {
         v.push(format!("mailbox still holds {depth} undelivered packet(s)"));
     }
@@ -94,7 +94,7 @@ pub fn audit_rank(ctx: &Rc<RankCtx>) -> Vec<String> {
 pub fn audit_fabric(fabric: &Fabric) -> Vec<String> {
     let mut v = Vec::new();
     for r in 0..fabric.nranks() {
-        let depth = fabric.mailbox(r).len();
+        let depth = fabric.queued(r);
         if depth > 0 {
             v.push(format!("rank {r} mailbox holds {depth} packet(s) after job end"));
         }

@@ -226,6 +226,17 @@ impl Program {
         u.run(|comm| exec(self, comm))
     }
 
+    /// Execute on one rank of an already-live communicator. The
+    /// cross-backend conformance harness uses this from launched
+    /// (multi-process) jobs, where each process hosts a single rank:
+    /// digests are pure functions of (seed, rank, payload data), so the
+    /// same program must produce byte-identical digests on the in-process,
+    /// shm and socket backends.
+    pub fn run_local(&self, comm: &Comm) -> Vec<u64> {
+        assert_eq!(comm.size(), self.nranks, "communicator size must match the program");
+        exec(self, comm)
+    }
+
     /// Like [`Program::run`], but keeps the fabric for trace extraction.
     pub fn run_with_fabric(&self, u: &Universe) -> (Vec<Vec<u64>>, Arc<crate::transport::Fabric>) {
         assert_eq!(u.nranks(), self.nranks, "universe shape must match the program");

@@ -58,6 +58,12 @@ pub fn cvars() -> Vec<CvarInfo> {
             category: "transport",
         },
         CvarInfo {
+            name: "transport_backend",
+            description: "packet transport for new universes: inproc | shm | socket (env FERROMPI_BACKEND; a cvar write wins, 'auto' defers to the env again)",
+            writable: true,
+            category: "transport",
+        },
+        CvarInfo {
             name: "deadlock_timeout_s",
             description: "progress-engine deadlock watchdog (read-only; set FERROMPI_DEADLOCK_S)",
             writable: false,
@@ -150,6 +156,10 @@ pub fn cvar_read(name: &str) -> Result<String> {
                 v.to_string()
             })
         }
+        "transport_backend" => match crate::transport::backend::effective_backend() {
+            Ok(k) => Ok(k.label().into()),
+            Err(e) => Err(mpi_err!(Arg, "{e}")),
+        },
         "deadlock_timeout_s" => Ok(std::env::var("FERROMPI_DEADLOCK_S").unwrap_or_else(|_| "60".into())),
         "chaos_seed" => Ok(crate::sim::chaos::effective_seed().to_string()),
         "chaos_delay_ns" => Ok(chaos_intensity(crate::sim::chaos::delay_override(), |c| {
@@ -216,6 +226,18 @@ pub fn cvar_write(name: &str, value: &str) -> Result<()> {
         "netmodel_alpha_inter_ns" => {
             let v: u64 = value.parse().map_err(|_| mpi_err!(Arg, "bad alpha '{value}'"))?;
             ALPHA_INTER_OVERRIDE.store(v, Ordering::Relaxed);
+            Ok(())
+        }
+        "transport_backend" => {
+            if value == "auto" {
+                crate::transport::backend::write_backend_cvar(None);
+                return Ok(());
+            }
+            // BackendKind::parse rejects unknown names with an error
+            // listing every valid spelling (PR 3 knob convention).
+            let k = crate::transport::backend::BackendKind::parse(value)
+                .map_err(|e| mpi_err!(Arg, "{e}"))?;
+            crate::transport::backend::write_backend_cvar(Some(k));
             Ok(())
         }
         "deadlock_timeout_s" => Err(mpi_err!(Arg, "cvar 'deadlock_timeout_s' is read-only")),
@@ -346,6 +368,23 @@ mod tests {
         if std::env::var("FERROMPI_CHAOS_SEED").is_err() {
             assert_eq!(cvar_read("chaos_seed").unwrap(), "0", "env unset → chaos off");
             assert_eq!(cvar_read("chaos_delay_ns").unwrap(), "off");
+        }
+    }
+
+    #[test]
+    fn transport_backend_cvar_roundtrips_and_lists_spellings() {
+        assert!(cvar_index("transport_backend").is_some());
+        cvar_write("transport_backend", "socket").unwrap();
+        assert_eq!(cvar_read("transport_backend").unwrap(), "socket");
+        cvar_write("transport_backend", "shm").unwrap();
+        assert_eq!(cvar_read("transport_backend").unwrap(), "shm");
+        let err = format!("{}", cvar_write("transport_backend", "tcp").unwrap_err());
+        for valid in ["inproc", "shm", "socket"] {
+            assert!(err.contains(valid), "missing '{valid}' in: {err}");
+        }
+        cvar_write("transport_backend", "auto").unwrap();
+        if std::env::var("FERROMPI_BACKEND").is_err() {
+            assert_eq!(cvar_read("transport_backend").unwrap(), "inproc");
         }
     }
 

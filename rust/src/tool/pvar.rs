@@ -34,6 +34,11 @@ pub fn pvars() -> Vec<PvarInfo> {
         PvarInfo { name: "fabric_intra_node_msgs", description: "intra-node transfers", class: Counter, category: "transport" },
         PvarInfo { name: "fabric_inter_node_msgs", description: "inter-node transfers", class: Counter, category: "transport" },
         PvarInfo { name: "fabric_mailbox_hwm", description: "deepest delivery queue observed", class: HighWatermark, category: "transport" },
+        PvarInfo { name: "backend_frames_tx", description: "packets handed to the transport backend for delivery", class: Counter, category: "transport" },
+        PvarInfo { name: "backend_frames_rx", description: "packets received from the transport backend", class: Counter, category: "transport" },
+        PvarInfo { name: "backend_bytes_tx", description: "payload bytes handed to the transport backend", class: Counter, category: "transport" },
+        PvarInfo { name: "backend_bytes_rx", description: "payload bytes received from the transport backend", class: Counter, category: "transport" },
+        PvarInfo { name: "backend_reconnects", description: "transport connections re-established after a failure (socket backend)", class: Counter, category: "transport" },
         PvarInfo { name: "wire_bytes_copied", description: "payload bytes CPU-copied on the wire path (non-contiguous staging, partitioned/arena two-hop staging, arena shuffles); the contiguous eager fast path counts zero", class: Counter, category: "transport" },
         PvarInfo { name: "pool_recycled", description: "wire buffers reused from the fabric's buffer pool", class: Counter, category: "transport" },
         PvarInfo { name: "pool_allocated", description: "fresh wire-buffer allocations (buffer-pool misses)", class: Counter, category: "transport" },
@@ -96,6 +101,11 @@ impl<'a> PvarSession<'a> {
             "fabric_intra_node_msgs" => f.intra_node_msgs.load(Ordering::Relaxed),
             "fabric_inter_node_msgs" => f.inter_node_msgs.load(Ordering::Relaxed),
             "fabric_mailbox_hwm" => f.mailbox_hwm.load(Ordering::Relaxed),
+            "backend_frames_tx" => f.backend.frames_tx.load(Ordering::Relaxed),
+            "backend_frames_rx" => f.backend.frames_rx.load(Ordering::Relaxed),
+            "backend_bytes_tx" => f.backend.bytes_tx.load(Ordering::Relaxed),
+            "backend_bytes_rx" => f.backend.bytes_rx.load(Ordering::Relaxed),
+            "backend_reconnects" => f.backend.reconnects.load(Ordering::Relaxed),
             "wire_bytes_copied" => ctx.fabric.pool.copied_bytes.load(Ordering::Relaxed),
             "pool_recycled" => ctx.fabric.pool.recycled.load(Ordering::Relaxed),
             "pool_allocated" => ctx.fabric.pool.allocated.load(Ordering::Relaxed),

@@ -1,0 +1,337 @@
+//! The transport-backend boundary: packet delivery and drain, carved out
+//! of [`super::fabric::Fabric`] so the binding core stays
+//! transport-agnostic (the "Concepts for designing modern C++ interfaces
+//! for MPI" argument — see PAPERS.md).
+//!
+//! The front fabric keeps everything semantic — the cost model, counters,
+//! chaos plan, trace rings, the shared-object registry — and delegates
+//! the *mechanical* half to a [`Backend`]:
+//!
+//! * [`InprocBackend`] — the original thread fabric: one [`Mailbox`] per
+//!   rank in one address space. The deterministic sim/chaos substrate;
+//!   the only backend that supports chaos reordering.
+//! * [`crate::transport::shm::ShmBackend`] — lock-free shared-memory
+//!   rings between processes on one node.
+//! * [`crate::transport::socket::SocketBackend`] — length-prefix-framed
+//!   TCP with one stream per (peer, protocol class).
+//!
+//! Ordering contract every backend must honor: packets from one sender to
+//! one receiver in one *protocol class* (see [`ProtocolClass`]) arrive in
+//! send order. The in-process mailbox and the shm ring give the stronger
+//! full per-sender FIFO; the socket backend gives exactly the per-class
+//! guarantee, which is all the matching engine needs because p2p,
+//! collective and RMA traffic match in disjoint context spaces.
+
+use super::mailbox::Mailbox;
+use super::packet::{Packet, PacketKind};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Wire-level counters shared between the fabric front (pvar reads) and
+/// the backend's delivery/pump threads. All monotonically increasing.
+#[derive(Debug, Default)]
+pub struct BackendStats {
+    /// Frames handed to the wire (or to a peer's in-process mailbox).
+    pub frames_tx: AtomicU64,
+    /// Frames taken off the wire on this process's behalf.
+    pub frames_rx: AtomicU64,
+    /// Payload bytes in transmitted frames.
+    pub bytes_tx: AtomicU64,
+    /// Payload bytes in received frames.
+    pub bytes_rx: AtomicU64,
+    /// Connections re-established after a write failure (socket backend;
+    /// always 0 for inproc and shm).
+    pub reconnects: AtomicU64,
+}
+
+impl BackendStats {
+    pub(crate) fn count_tx(&self, payload: usize) {
+        self.frames_tx.fetch_add(1, Ordering::Relaxed);
+        self.bytes_tx.fetch_add(payload as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn count_rx(&self, payload: usize) {
+        self.frames_rx.fetch_add(1, Ordering::Relaxed);
+        self.bytes_rx.fetch_add(payload as u64, Ordering::Relaxed);
+    }
+}
+
+/// The three stream classes of the socket backend. Matching contexts are
+/// disjoint between them (p2p contexts are even, collective contexts odd
+/// — see `RankCtx::next_ctx` — and RMA packets carry window ids), so
+/// non-overtaking only ever needs to hold *within* a class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProtocolClass {
+    /// Point-to-point traffic (even contexts) plus all token-addressed
+    /// handshake replies, which need no ordering at all.
+    P2p,
+    /// Collective traffic (odd contexts).
+    Coll,
+    /// One-sided operations (per-origin FIFO gives flush semantics).
+    Rma,
+}
+
+/// Classify a packet for stream selection.
+pub fn protocol_class(kind: &PacketKind) -> ProtocolClass {
+    match kind {
+        PacketKind::Eager { ctx, .. } | PacketKind::Rts { ctx, .. } => {
+            if ctx % 2 == 0 {
+                ProtocolClass::P2p
+            } else {
+                ProtocolClass::Coll
+            }
+        }
+        // Token-addressed replies: deliverable on any stream; ride p2p.
+        PacketKind::Cts { .. } | PacketKind::RData { .. } | PacketKind::SsendAck { .. } => {
+            ProtocolClass::P2p
+        }
+        PacketKind::RmaPut { .. }
+        | PacketKind::RmaGet { .. }
+        | PacketKind::RmaAcc { .. }
+        | PacketKind::RmaCas { .. }
+        | PacketKind::RmaAck { .. }
+        | PacketKind::RmaGetResp { .. } => ProtocolClass::Rma,
+    }
+}
+
+/// Which backend implementation carries a job's packets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// All ranks are threads of one process (the deterministic simulator).
+    Inproc,
+    /// One process per rank, shared-memory rings (intra-node).
+    Shm,
+    /// One process per rank, TCP streams (works across nodes).
+    Socket,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] = [BackendKind::Inproc, BackendKind::Shm, BackendKind::Socket];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::Inproc => "inproc",
+            BackendKind::Shm => "shm",
+            BackendKind::Socket => "socket",
+        }
+    }
+
+    /// Parse a backend name. Unknown spellings error listing every valid
+    /// one (the knob-parse convention of the collective-algorithm cvars).
+    pub fn parse(s: &str) -> Result<BackendKind, String> {
+        match s.trim() {
+            "inproc" => Ok(BackendKind::Inproc),
+            "shm" => Ok(BackendKind::Shm),
+            "socket" => Ok(BackendKind::Socket),
+            other => Err(format!(
+                "unknown transport backend '{other}' (valid: inproc | shm | socket)"
+            )),
+        }
+    }
+}
+
+/// The resolved backend for new launched jobs: a written `transport_backend`
+/// cvar wins, then the `FERROMPI_BACKEND` environment, then inproc.
+/// Malformed values are an error (never a silent fallback).
+pub fn effective_backend() -> Result<BackendKind, String> {
+    if let Some(k) = *BACKEND_OVERRIDE.lock().unwrap() {
+        return Ok(k);
+    }
+    match std::env::var("FERROMPI_BACKEND") {
+        Ok(v) => BackendKind::parse(&v),
+        Err(_) => Ok(BackendKind::Inproc),
+    }
+}
+
+static BACKEND_OVERRIDE: std::sync::Mutex<Option<BackendKind>> = std::sync::Mutex::new(None);
+
+/// `transport_backend` cvar write ("auto" resets to the environment).
+pub fn write_backend_cvar(v: Option<BackendKind>) {
+    *BACKEND_OVERRIDE.lock().unwrap() = v;
+}
+
+/// Packet delivery and drain: the mechanical half of a fabric.
+///
+/// `deliver` may be called from any rank's thread; `poll`/`poll_wait` are
+/// only ever called by `rank`'s own progress engine. Multi-process
+/// backends serve exactly one local rank and return 0 depth for peers.
+pub trait Backend: Send + Sync + std::fmt::Debug {
+    fn kind(&self) -> BackendKind;
+
+    /// Deliver a stamped packet into `to`'s queue (local push or wire
+    /// ship). Must never drop or reorder within a protocol class.
+    fn deliver(&self, to: usize, pkt: Packet);
+
+    /// Chaos-mode delivery: insert at a random legal queue position
+    /// (never ahead of an earlier packet from the same sender). Returns
+    /// whether the packet overtook anything. Only the in-process backend
+    /// can do this; the default is a plain tail delivery.
+    fn deliver_reordered(&self, to: usize, pkt: Packet, _rng: &mut Rng) -> bool {
+        self.deliver(to, pkt);
+        false
+    }
+
+    /// Non-blocking: move everything queued for `rank` into `out`.
+    fn poll(&self, rank: usize, out: &mut Vec<Packet>);
+
+    /// Blocking drain: wait up to `timeout` for at least one packet, then
+    /// take everything. Returns the number of packets taken.
+    fn poll_wait(&self, rank: usize, out: &mut Vec<Packet>, timeout: Duration) -> usize;
+
+    /// Current inbound-queue depth visible to this process (high-watermark
+    /// accounting, quiescence audits). 0 for ranks hosted elsewhere.
+    fn queued(&self, rank: usize) -> usize;
+
+    /// Broadcast the job-abort wakeup so every blocked rank unblocks.
+    fn abort_wake(&self, code: i32);
+
+    /// An abort initiated by another process, observed since the last
+    /// poll. The in-process backend never reports one (its abort flag is
+    /// already shared by all rank threads).
+    fn remote_abort(&self) -> Option<i32> {
+        None
+    }
+
+    /// Tear down pump threads / connections (multi-process backends).
+    fn shutdown(&self) {}
+}
+
+/// The wakeup marker [`Fabric::abort`](super::fabric::Fabric::abort)
+/// broadcasts: `src == usize::MAX` makes the progress engine re-check the
+/// abort flag instead of matching it.
+pub fn abort_marker() -> Packet {
+    Packet { src: usize::MAX, depart_vt: 0.0, kind: PacketKind::SsendAck { token: u64::MAX } }
+}
+
+/// The original thread fabric: one mailbox per rank, all in this process.
+#[derive(Debug)]
+pub struct InprocBackend {
+    mailboxes: Vec<Mailbox>,
+    stats: Arc<BackendStats>,
+}
+
+impl InprocBackend {
+    pub fn new(nranks: usize, stats: Arc<BackendStats>) -> InprocBackend {
+        InprocBackend { mailboxes: (0..nranks).map(|_| Mailbox::new()).collect(), stats }
+    }
+
+    fn count_drained(&self, out: &[Packet], from: usize) {
+        for p in &out[from..] {
+            self.stats.count_rx(p.kind.payload_len());
+        }
+    }
+}
+
+impl Backend for InprocBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Inproc
+    }
+
+    fn deliver(&self, to: usize, pkt: Packet) {
+        self.stats.count_tx(pkt.kind.payload_len());
+        self.mailboxes[to].push(pkt);
+    }
+
+    fn deliver_reordered(&self, to: usize, pkt: Packet, rng: &mut Rng) -> bool {
+        self.stats.count_tx(pkt.kind.payload_len());
+        self.mailboxes[to].push_reordered(pkt, rng)
+    }
+
+    fn poll(&self, rank: usize, out: &mut Vec<Packet>) {
+        let before = out.len();
+        self.mailboxes[rank].drain_into(out);
+        self.count_drained(out, before);
+    }
+
+    fn poll_wait(&self, rank: usize, out: &mut Vec<Packet>, timeout: Duration) -> usize {
+        let before = out.len();
+        let n = self.mailboxes[rank].wait_drain_into(out, timeout);
+        self.count_drained(out, before);
+        n
+    }
+
+    fn queued(&self, rank: usize) -> usize {
+        self.mailboxes[rank].len()
+    }
+
+    fn abort_wake(&self, _code: i32) {
+        for mb in &self.mailboxes {
+            mb.push(abort_marker());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::WireBytes;
+
+    fn eager(ctx: u32, tag: i32, n: usize) -> PacketKind {
+        PacketKind::Eager { ctx, tag, data: WireBytes::from_vec(vec![7; n]), sync_token: None }
+    }
+
+    #[test]
+    fn backend_names_roundtrip_and_unknowns_list_spellings() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.label()), Ok(k));
+        }
+        assert_eq!(BackendKind::parse(" shm "), Ok(BackendKind::Shm));
+        let err = BackendKind::parse("tcp").unwrap_err();
+        for valid in ["inproc", "shm", "socket"] {
+            assert!(err.contains(valid), "missing '{valid}' in: {err}");
+        }
+    }
+
+    #[test]
+    fn protocol_classes_split_by_context_parity() {
+        assert_eq!(protocol_class(&eager(0, 0, 0)), ProtocolClass::P2p);
+        assert_eq!(protocol_class(&eager(1, 0, 0)), ProtocolClass::Coll);
+        assert_eq!(protocol_class(&eager(16, 0, 0)), ProtocolClass::P2p);
+        assert_eq!(protocol_class(&eager(17, 0, 0)), ProtocolClass::Coll);
+        assert_eq!(
+            protocol_class(&PacketKind::Rts { ctx: 3, tag: 0, nbytes: 1, token: 1, sync_token: None }),
+            ProtocolClass::Coll
+        );
+        assert_eq!(
+            protocol_class(&PacketKind::Cts { token: 1, recv_token: 2 }),
+            ProtocolClass::P2p
+        );
+        assert_eq!(
+            protocol_class(&PacketKind::RmaAck { token: 1 }),
+            ProtocolClass::Rma
+        );
+    }
+
+    #[test]
+    fn inproc_backend_delivers_and_counts() {
+        let stats = Arc::new(BackendStats::default());
+        let b = InprocBackend::new(2, stats.clone());
+        b.deliver(1, Packet { src: 0, depart_vt: 0.0, kind: eager(0, 1, 10) });
+        b.deliver(1, Packet { src: 0, depart_vt: 0.0, kind: eager(0, 2, 6) });
+        assert_eq!(b.queued(1), 2);
+        assert_eq!(b.queued(0), 0);
+        let mut out = Vec::new();
+        b.poll(1, &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(b.queued(1), 0);
+        assert_eq!(stats.frames_tx.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.frames_rx.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.bytes_tx.load(Ordering::Relaxed), 16);
+        assert_eq!(stats.bytes_rx.load(Ordering::Relaxed), 16);
+        assert_eq!(stats.reconnects.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn abort_wake_reaches_every_mailbox() {
+        let b = InprocBackend::new(3, Arc::new(BackendStats::default()));
+        b.abort_wake(9);
+        for r in 0..3 {
+            assert_eq!(b.queued(r), 1);
+            let mut out = Vec::new();
+            b.poll(r, &mut out);
+            assert_eq!(out[0].src, usize::MAX);
+        }
+    }
+}

@@ -1,7 +1,10 @@
-//! The fabric: mailboxes + cost model + counters, shared by all ranks of a
-//! simulated job. One `Arc<Fabric>` exists per [`crate::universe::Universe`].
+//! The fabric: transport backend + cost model + counters, shared by all
+//! ranks of a job. One `Arc<Fabric>` exists per
+//! [`crate::universe::Universe`] run — in the classic in-process mode it
+//! is shared by every rank thread; in launched (multi-process) mode each
+//! process holds its own `Fabric` fronting a cross-process backend.
 
-use super::mailbox::Mailbox;
+use super::backend::{abort_marker, Backend, BackendKind, BackendStats, InprocBackend};
 use super::netmodel::NetworkModel;
 use super::nodemap::NodeMap;
 use super::packet::{Packet, PacketKind};
@@ -10,7 +13,7 @@ use crate::sim::chaos::{self, ChaosConfig, ChaosState};
 use crate::sim::trace::TraceBook;
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Transport counters, exported as performance variables by the tool
 /// (`MPI_T`) component. All monotonically increasing unless noted.
@@ -31,6 +34,9 @@ pub struct FabricStats {
     pub inter_node_msgs: AtomicU64,
     /// High-watermark of any mailbox depth observed at delivery.
     pub mailbox_hwm: AtomicU64,
+    /// Backend-level frame/byte counters (`backend_*` pvars). Shared with
+    /// the backend itself, which counts on the wire path.
+    pub backend: Arc<BackendStats>,
 }
 
 impl FabricStats {
@@ -60,7 +66,7 @@ impl FabricStats {
     }
 }
 
-/// The shared interconnect of one simulated job.
+/// The shared interconnect of one job.
 #[derive(Debug)]
 pub struct Fabric {
     pub nodemap: NodeMap,
@@ -71,7 +77,13 @@ pub struct Fabric {
     pub pool: Arc<BufferPool>,
     /// Wall epoch shared by every rank's hybrid clock.
     pub epoch: Instant,
-    mailboxes: Vec<Mailbox>,
+    /// Packet delivery/receipt, pluggable: in-process mailboxes (the
+    /// deterministic sim backend), shared-memory rings, or TCP sockets.
+    backend: Box<dyn Backend>,
+    /// `Some(rank)` in launched multi-process mode: this process hosts
+    /// exactly that rank, and cross-rank shared state (registry, files,
+    /// chaos) is unavailable. `None` = classic all-ranks-in-one-process.
+    local_rank: Option<usize>,
     aborted: AtomicBool,
     abort_code: AtomicI32,
     /// Cross-rank shared-object registry (RMA window segments, shared
@@ -107,6 +119,7 @@ impl Fabric {
 
     /// A fabric with an optional seeded perturbation plan. Chaos turns on
     /// tracing and (in pool-pressure mode) shrinks the wire-buffer pool.
+    /// Always in-process: chaos requires shared mailboxes.
     pub fn with_chaos(nodemap: NodeMap, model: NetworkModel, chaos: Option<ChaosConfig>) -> Fabric {
         let n = nodemap.nranks();
         let pool = match chaos {
@@ -116,19 +129,55 @@ impl Fabric {
             )),
             _ => Arc::new(BufferPool::new()),
         };
+        let stats = FabricStats::default();
+        let backend = Box::new(InprocBackend::new(n, Arc::clone(&stats.backend)));
         Fabric {
             nodemap,
             model,
-            stats: FabricStats::default(),
+            stats,
             pool,
             epoch: Instant::now(),
-            mailboxes: (0..n).map(|_| Mailbox::new()).collect(),
+            backend,
+            local_rank: None,
             aborted: AtomicBool::new(false),
             abort_code: AtomicI32::new(0),
             registry: std::sync::Mutex::new(std::collections::HashMap::new()),
             files: std::sync::Mutex::new(std::collections::HashMap::new()),
             trace: TraceBook::new(n, chaos.is_some()),
             chaos: chaos.map(|c| ChaosState::new(c, n)),
+        }
+    }
+
+    /// A launched-mode fabric: this process hosts `local_rank` only, and
+    /// `backend` carries packets to/from the sibling processes. Chaos and
+    /// tracing are off (they need shared in-process state); `pool` is the
+    /// same pool the backend decodes received payloads into, so the
+    /// per-process quiescence audit still balances.
+    pub fn multiprocess(
+        nodemap: NodeMap,
+        model: NetworkModel,
+        local_rank: usize,
+        pool: Arc<BufferPool>,
+        backend: Box<dyn Backend>,
+        backend_stats: Arc<BackendStats>,
+    ) -> Fabric {
+        let n = nodemap.nranks();
+        assert!(local_rank < n);
+        let stats = FabricStats { backend: backend_stats, ..FabricStats::default() };
+        Fabric {
+            nodemap,
+            model,
+            stats,
+            pool,
+            epoch: Instant::now(),
+            backend,
+            local_rank: Some(local_rank),
+            aborted: AtomicBool::new(false),
+            abort_code: AtomicI32::new(0),
+            registry: std::sync::Mutex::new(std::collections::HashMap::new()),
+            files: std::sync::Mutex::new(std::collections::HashMap::new()),
+            trace: TraceBook::new(n, false),
+            chaos: None,
         }
     }
 
@@ -148,11 +197,50 @@ impl Fabric {
     }
 
     pub fn nranks(&self) -> usize {
-        self.mailboxes.len()
+        self.nodemap.nranks()
     }
 
-    pub fn mailbox(&self, rank: usize) -> &Mailbox {
-        &self.mailboxes[rank]
+    /// Which transport carries this job's packets.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    /// True in launched multi-process mode (one rank per OS process).
+    /// Cross-rank shared-memory facilities (registry publish/fetch,
+    /// simulated shared files, passive-target lock tables, chaos) only
+    /// exist in-process; callers gate on this.
+    pub fn is_multiprocess(&self) -> bool {
+        self.local_rank.is_some()
+    }
+
+    /// The rank this process hosts, in launched mode.
+    pub fn local_rank(&self) -> Option<usize> {
+        self.local_rank
+    }
+
+    /// Drain every deliverable packet for `rank` without blocking.
+    pub fn poll(&self, rank: usize, out: &mut Vec<Packet>) {
+        self.check_remote_abort();
+        self.backend.poll(rank, out);
+    }
+
+    /// Drain packets for `rank`, blocking up to `timeout` for the first
+    /// arrival. Returns the number of packets drained.
+    pub fn poll_wait(&self, rank: usize, out: &mut Vec<Packet>, timeout: Duration) -> usize {
+        self.check_remote_abort();
+        self.backend.poll_wait(rank, out, timeout)
+    }
+
+    /// Packets queued for `rank` (0 for ranks hosted by other processes —
+    /// their own fabric audits them).
+    pub fn queued(&self, rank: usize) -> usize {
+        self.backend.queued(rank)
+    }
+
+    /// Tear down backend resources (threads, connections). Idempotent;
+    /// called by the universe after the final barrier.
+    pub fn shutdown_backend(&self) {
+        self.backend.shutdown();
     }
 
     /// Transmit `kind` from `from` to `to`. `now_vt` is the sender's hybrid
@@ -171,7 +259,7 @@ impl Fabric {
             cost += ch.extra_delay_ns(from);
         }
         let depart_vt = now_vt + cost;
-        self.stats.record(&kind, same, self.mailboxes[to].len() + 1);
+        self.stats.record(&kind, same, self.backend.queued(to) + 1);
         if self.trace.enabled() {
             self.trace.record(
                 from,
@@ -183,13 +271,13 @@ impl Fabric {
         let pkt = Packet { src: from, depart_vt, kind };
         match &self.chaos {
             Some(ch) if ch.roll_reorder(from) => {
-                let overtook = ch.with_rng(from, |r| self.mailboxes[to].push_reordered(pkt, r));
+                let overtook = ch.with_rng(from, |r| self.backend.deliver_reordered(to, pkt, r));
                 if overtook {
                     ch.reorders.fetch_add(1, Ordering::Relaxed);
                     self.trace.record(from, now_vt, "reorder", format!("packet to r{to} overtook"));
                 }
             }
-            _ => self.mailboxes[to].push(pkt),
+            _ => self.backend.deliver(to, pkt),
         }
         depart_vt
     }
@@ -224,29 +312,46 @@ impl Fabric {
     }
 
     /// `MPI_Abort` analog: mark the job failed so every rank's next
-    /// progress loop panics out (joined as an error by the universe).
+    /// progress loop panics out (joined as an error by the universe). In
+    /// launched mode the backend also propagates the abort to sibling
+    /// processes.
     pub fn abort(&self, code: i32) {
         self.abort_code.store(code, Ordering::SeqCst);
         self.aborted.store(true, Ordering::SeqCst);
         // Wake everyone so blocked ranks notice.
-        for mb in &self.mailboxes {
-            mb.push(Packet {
-                src: usize::MAX,
-                depart_vt: 0.0,
-                kind: PacketKind::SsendAck { token: u64::MAX },
-            });
+        self.backend.abort_wake(code);
+    }
+
+    /// Latch an abort flagged by a *remote* process into the local flags.
+    /// Called on every poll so a launched rank notices a sibling's
+    /// `MPI_Abort` without needing a packet to arrive first.
+    fn check_remote_abort(&self) {
+        if self.local_rank.is_none() || self.aborted.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Some(code) = self.backend.remote_abort() {
+            self.abort_code.store(code, Ordering::SeqCst);
+            self.aborted.store(true, Ordering::SeqCst);
         }
     }
 
     pub fn check_abort(&self) {
+        self.check_remote_abort();
         if self.aborted.load(Ordering::SeqCst) {
             panic!("MPI_Abort called with code {}", self.abort_code.load(Ordering::SeqCst));
         }
     }
 
     pub fn is_aborted(&self) -> bool {
+        self.check_remote_abort();
         self.aborted.load(Ordering::SeqCst)
     }
+}
+
+/// The wake-up marker [`Fabric::abort`] floods: re-exported for engine
+/// code that filters it out of packet streams.
+pub fn is_abort_marker(pkt: &Packet) -> bool {
+    pkt.src == abort_marker().src
 }
 
 #[cfg(test)]
@@ -271,8 +376,8 @@ mod tests {
         assert!((d_intra - (now + m.cost_ns(100, true))).abs() < 1e-9);
         assert!((d_inter - (now + m.cost_ns(100, false))).abs() < 1e-9);
         assert!(d_inter > d_intra);
-        assert_eq!(f.mailbox(1).len(), 1);
-        assert_eq!(f.mailbox(2).len(), 1);
+        assert_eq!(f.queued(1), 1);
+        assert_eq!(f.queued(2), 1);
     }
 
     #[test]
@@ -289,6 +394,9 @@ mod tests {
         assert_eq!(f.stats.ctrl_sent.load(Ordering::Relaxed), 1);
         assert_eq!(f.stats.intra_node_msgs.load(Ordering::Relaxed), 1);
         assert_eq!(f.stats.inter_node_msgs.load(Ordering::Relaxed), 2);
+        // The in-process backend counts frames/bytes too.
+        assert_eq!(f.stats.backend.frames_tx.load(Ordering::Relaxed), 3);
+        assert_eq!(f.stats.backend.bytes_tx.load(Ordering::Relaxed), 10);
     }
 
     #[test]
@@ -306,10 +414,10 @@ mod tests {
             // Delay only ever adds latency on top of the model cost.
             assert!(d >= 100.0);
         }
-        assert_eq!(f.mailbox(2).len(), 10, "chaos must never drop packets");
+        assert_eq!(f.queued(2), 10, "chaos must never drop packets");
         // Per-sender FIFO survives forced reordering.
         let mut out = Vec::new();
-        f.mailbox(2).drain_into(&mut out);
+        f.poll(2, &mut out);
         for src in [0usize, 1] {
             let tags: Vec<i32> = out
                 .iter()
@@ -333,6 +441,8 @@ mod tests {
         let f = fabric();
         assert!(f.chaos.is_none());
         assert!(!f.trace.enabled());
+        assert_eq!(f.backend_kind(), BackendKind::Inproc);
+        assert!(!f.is_multiprocess());
         f.chaos_tick(0); // no-op, must not panic
         assert_eq!(f.trace_report(), "");
     }
@@ -344,7 +454,7 @@ mod tests {
         f.abort(3);
         assert!(f.is_aborted());
         for r in 0..f.nranks() {
-            assert!(!f.mailbox(r).is_empty());
+            assert!(f.queued(r) > 0, "abort marker must wake rank {r}");
         }
     }
 }

@@ -1,0 +1,723 @@
+//! Length-prefix packet framing: the byte codec shared by the shm and
+//! socket backends (the in-process backend hands [`Packet`]s over
+//! directly and never serializes).
+//!
+//! Frame layout: `[u32 body_len (LE)] [body]`. Body layout: a one-byte
+//! kind tag, the sender's world rank, the hybrid departure time, then the
+//! tag-specific fields. All integers little-endian; payloads are length-
+//! prefixed byte runs decoded into *pooled* wire buffers, so a received
+//! payload rides the same zero-copy path as a locally-produced one.
+//!
+//! The codec is deliberately exhaustive over [`PacketKind`] — a new
+//! variant fails to compile here rather than silently not crossing
+//! process boundaries. `RmaAcc` is the one structurally interesting case:
+//! its `Arc<TypeMap>` ships as (entries, lb, extent) and is rebuilt with
+//! [`TypeMap::from_wire`] on the far side.
+
+use super::packet::{Packet, PacketKind};
+use super::wire::{BufferPool, PoolHandle, WireBytes};
+use crate::datatype::{Primitive, TypeMap};
+use crate::op::OpKind;
+use std::sync::Arc;
+
+/// Hard cap on a frame body. Far above any legal packet (the pool refuses
+/// to shelve buffers past 4 MiB; rendezvous payloads are the largest
+/// frames) — its real job is rejecting corrupt length prefixes before
+/// they turn into a giant allocation.
+pub const MAX_FRAME_BODY: usize = 256 << 20;
+
+/// Decode failures. Any of these on a live connection is fatal for the
+/// job: framing never recovers from a corrupt stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Length prefix exceeds [`MAX_FRAME_BODY`].
+    Oversized { len: usize },
+    /// Body ended mid-field.
+    Truncated,
+    /// Body longer than its kind requires.
+    Trailing { extra: usize },
+    BadKind(u8),
+    BadPrimitive(u8),
+    BadOp(u8),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { len } => {
+                write!(f, "frame body of {len} bytes exceeds the {MAX_FRAME_BODY}-byte cap")
+            }
+            FrameError::Truncated => write!(f, "frame body truncated mid-field"),
+            FrameError::Trailing { extra } => {
+                write!(f, "frame body has {extra} trailing byte(s)")
+            }
+            FrameError::BadKind(t) => write!(f, "unknown packet kind tag {t}"),
+            FrameError::BadPrimitive(t) => write!(f, "unknown primitive tag {t}"),
+            FrameError::BadOp(t) => write!(f, "unknown op tag {t}"),
+        }
+    }
+}
+
+/// Everything that crosses a multi-process wire: MPI packets plus the
+/// out-of-band job-abort control frame.
+#[derive(Debug)]
+pub enum WireMsg {
+    Packet(Packet),
+    /// `MPI_Abort` propagation: the receiving process flags its local
+    /// fabric and wakes its rank.
+    Abort { code: i32 },
+}
+
+// Kind tags. 0xFF is the abort control frame.
+const TAG_EAGER: u8 = 0;
+const TAG_RTS: u8 = 1;
+const TAG_CTS: u8 = 2;
+const TAG_RDATA: u8 = 3;
+const TAG_SSEND_ACK: u8 = 4;
+const TAG_RMA_PUT: u8 = 5;
+const TAG_RMA_GET: u8 = 6;
+const TAG_RMA_ACC: u8 = 7;
+const TAG_RMA_CAS: u8 = 8;
+const TAG_RMA_ACK: u8 = 9;
+const TAG_RMA_GET_RESP: u8 = 10;
+const TAG_ABORT: u8 = 0xFF;
+
+fn op_tag(op: OpKind) -> u8 {
+    match op {
+        OpKind::Sum => 0,
+        OpKind::Prod => 1,
+        OpKind::Max => 2,
+        OpKind::Min => 3,
+        OpKind::Land => 4,
+        OpKind::Lor => 5,
+        OpKind::Lxor => 6,
+        OpKind::Band => 7,
+        OpKind::Bor => 8,
+        OpKind::Bxor => 9,
+        OpKind::MaxLoc => 10,
+        OpKind::MinLoc => 11,
+        OpKind::Replace => 12,
+        OpKind::NoOp => 13,
+    }
+}
+
+fn op_from_tag(t: u8) -> Result<OpKind, FrameError> {
+    Ok(match t {
+        0 => OpKind::Sum,
+        1 => OpKind::Prod,
+        2 => OpKind::Max,
+        3 => OpKind::Min,
+        4 => OpKind::Land,
+        5 => OpKind::Lor,
+        6 => OpKind::Lxor,
+        7 => OpKind::Band,
+        8 => OpKind::Bor,
+        9 => OpKind::Bxor,
+        10 => OpKind::MaxLoc,
+        11 => OpKind::MinLoc,
+        12 => OpKind::Replace,
+        13 => OpKind::NoOp,
+        other => return Err(FrameError::BadOp(other)),
+    })
+}
+
+fn prim_tag(p: Primitive) -> u8 {
+    match p {
+        Primitive::I8 => 0,
+        Primitive::U8 => 1,
+        Primitive::I16 => 2,
+        Primitive::U16 => 3,
+        Primitive::I32 => 4,
+        Primitive::U32 => 5,
+        Primitive::I64 => 6,
+        Primitive::U64 => 7,
+        Primitive::F32 => 8,
+        Primitive::F64 => 9,
+        Primitive::C32 => 10,
+        Primitive::C64 => 11,
+        Primitive::Bool => 12,
+        Primitive::Byte => 13,
+    }
+}
+
+fn prim_from_tag(t: u8) -> Result<Primitive, FrameError> {
+    Ok(match t {
+        0 => Primitive::I8,
+        1 => Primitive::U8,
+        2 => Primitive::I16,
+        3 => Primitive::U16,
+        4 => Primitive::I32,
+        5 => Primitive::U32,
+        6 => Primitive::I64,
+        7 => Primitive::U64,
+        8 => Primitive::F32,
+        9 => Primitive::F64,
+        10 => Primitive::C32,
+        11 => Primitive::C64,
+        12 => Primitive::Bool,
+        13 => Primitive::Byte,
+        other => return Err(FrameError::BadPrimitive(other)),
+    })
+}
+
+// ---- little-endian writers ----
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            put_u8(out, 1);
+            put_u64(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+fn put_typemap(out: &mut Vec<u8>, map: &TypeMap) {
+    let entries = map.entries();
+    put_u32(out, entries.len() as u32);
+    for &(p, d) in entries {
+        put_u8(out, prim_tag(p));
+        put_i64(out, d as i64);
+    }
+    put_i64(out, map.lb() as i64);
+    put_i64(out, map.extent() as i64);
+}
+
+// ---- cursor reader ----
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let end = self.pos.checked_add(n).ok_or(FrameError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(FrameError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32, FrameError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64, FrameError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn opt_u64(&mut self) -> Result<Option<u64>, FrameError> {
+        match self.u8()? {
+            0 => Ok(None),
+            _ => Ok(Some(self.u64()?)),
+        }
+    }
+
+    /// Length-prefixed payload into a pooled wire buffer.
+    fn payload(&mut self, pool: &Arc<BufferPool>) -> Result<WireBytes, FrameError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        if len == 0 {
+            return Ok(WireBytes::empty());
+        }
+        let mut w = pool.take(len);
+        w.extend_from_slice(bytes);
+        Ok(w.freeze())
+    }
+
+    fn typemap(&mut self) -> Result<Arc<TypeMap>, FrameError> {
+        let n = self.u32()? as usize;
+        let mut entries = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let p = prim_from_tag(self.u8()?)?;
+            let d = self.i64()? as isize;
+            entries.push((p, d));
+        }
+        let lb = self.i64()? as isize;
+        let extent = self.i64()? as isize;
+        Ok(Arc::new(TypeMap::from_wire(entries, lb, extent)))
+    }
+}
+
+/// Append the body (no length prefix) of `pkt` to `out`.
+pub fn encode_packet(pkt: &Packet, out: &mut Vec<u8>) {
+    debug_assert!(pkt.src != usize::MAX, "abort markers never cross the wire");
+    let header = |out: &mut Vec<u8>, tag: u8| {
+        put_u8(out, tag);
+        put_u32(out, pkt.src as u32);
+        put_f64(out, pkt.depart_vt);
+    };
+    match &pkt.kind {
+        PacketKind::Eager { ctx, tag, data, sync_token } => {
+            header(out, TAG_EAGER);
+            put_u32(out, *ctx);
+            put_i32(out, *tag);
+            put_opt_u64(out, *sync_token);
+            put_bytes(out, data.as_slice());
+        }
+        PacketKind::Rts { ctx, tag, nbytes, token, sync_token } => {
+            header(out, TAG_RTS);
+            put_u32(out, *ctx);
+            put_i32(out, *tag);
+            put_u64(out, *nbytes as u64);
+            put_u64(out, *token);
+            put_opt_u64(out, *sync_token);
+        }
+        PacketKind::Cts { token, recv_token } => {
+            header(out, TAG_CTS);
+            put_u64(out, *token);
+            put_u64(out, *recv_token);
+        }
+        PacketKind::RData { recv_token, data } => {
+            header(out, TAG_RDATA);
+            put_u64(out, *recv_token);
+            put_bytes(out, data.as_slice());
+        }
+        PacketKind::SsendAck { token } => {
+            header(out, TAG_SSEND_ACK);
+            put_u64(out, *token);
+        }
+        PacketKind::RmaPut { win, off, data, token } => {
+            header(out, TAG_RMA_PUT);
+            put_u32(out, *win);
+            put_u64(out, *off as u64);
+            put_u64(out, *token);
+            put_bytes(out, data.as_slice());
+        }
+        PacketKind::RmaGet { win, off, nbytes, token } => {
+            header(out, TAG_RMA_GET);
+            put_u32(out, *win);
+            put_u64(out, *off as u64);
+            put_u64(out, *nbytes as u64);
+            put_u64(out, *token);
+        }
+        PacketKind::RmaAcc { win, off, data, count, map, op, fetch, token } => {
+            header(out, TAG_RMA_ACC);
+            put_u32(out, *win);
+            put_u64(out, *off as u64);
+            put_u64(out, *count as u64);
+            put_typemap(out, map);
+            put_u8(out, op_tag(*op));
+            put_u8(out, *fetch as u8);
+            put_u64(out, *token);
+            put_bytes(out, data.as_slice());
+        }
+        PacketKind::RmaCas { win, off, data, token } => {
+            header(out, TAG_RMA_CAS);
+            put_u32(out, *win);
+            put_u64(out, *off as u64);
+            put_u64(out, *token);
+            put_bytes(out, data.as_slice());
+        }
+        PacketKind::RmaAck { token } => {
+            header(out, TAG_RMA_ACK);
+            put_u64(out, *token);
+        }
+        PacketKind::RmaGetResp { token, data } => {
+            header(out, TAG_RMA_GET_RESP);
+            put_u64(out, *token);
+            put_bytes(out, data.as_slice());
+        }
+    }
+}
+
+/// Append a complete frame (length prefix + body) for `pkt` to `out`.
+pub fn encode_frame(pkt: &Packet, out: &mut Vec<u8>) {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    encode_packet(pkt, out);
+    let body = (out.len() - start - 4) as u32;
+    out[start..start + 4].copy_from_slice(&body.to_le_bytes());
+}
+
+/// Append the job-abort control frame.
+pub fn encode_abort_frame(code: i32, out: &mut Vec<u8>) {
+    put_u32(out, 5); // body: tag + code
+    put_u8(out, TAG_ABORT);
+    put_i32(out, code);
+}
+
+/// Decode one frame body. Payloads land in buffers taken from `pool`.
+pub fn decode_msg(body: &[u8], pool: &Arc<BufferPool>) -> Result<WireMsg, FrameError> {
+    let mut c = Cursor::new(body);
+    let tag = c.u8()?;
+    if tag == TAG_ABORT {
+        let code = c.i32()?;
+        return finish(c, WireMsg::Abort { code });
+    }
+    let src = c.u32()? as usize;
+    let depart_vt = c.f64()?;
+    let kind = match tag {
+        TAG_EAGER => {
+            let ctx = c.u32()?;
+            let t = c.i32()?;
+            let sync_token = c.opt_u64()?;
+            let data = c.payload(pool)?;
+            PacketKind::Eager { ctx, tag: t, data, sync_token }
+        }
+        TAG_RTS => PacketKind::Rts {
+            ctx: c.u32()?,
+            tag: c.i32()?,
+            nbytes: c.u64()? as usize,
+            token: c.u64()?,
+            sync_token: c.opt_u64()?,
+        },
+        TAG_CTS => PacketKind::Cts { token: c.u64()?, recv_token: c.u64()? },
+        TAG_RDATA => {
+            let recv_token = c.u64()?;
+            let data = c.payload(pool)?;
+            PacketKind::RData { recv_token, data }
+        }
+        TAG_SSEND_ACK => PacketKind::SsendAck { token: c.u64()? },
+        TAG_RMA_PUT => {
+            let win = c.u32()?;
+            let off = c.u64()? as usize;
+            let token = c.u64()?;
+            let data = c.payload(pool)?;
+            PacketKind::RmaPut { win, off, data, token }
+        }
+        TAG_RMA_GET => PacketKind::RmaGet {
+            win: c.u32()?,
+            off: c.u64()? as usize,
+            nbytes: c.u64()? as usize,
+            token: c.u64()?,
+        },
+        TAG_RMA_ACC => {
+            let win = c.u32()?;
+            let off = c.u64()? as usize;
+            let count = c.u64()? as usize;
+            let map = c.typemap()?;
+            let op = op_from_tag(c.u8()?)?;
+            let fetch = c.u8()? != 0;
+            let token = c.u64()?;
+            let data = c.payload(pool)?;
+            PacketKind::RmaAcc { win, off, data, count, map, op, fetch, token }
+        }
+        TAG_RMA_CAS => {
+            let win = c.u32()?;
+            let off = c.u64()? as usize;
+            let token = c.u64()?;
+            let data = c.payload(pool)?;
+            PacketKind::RmaCas { win, off, data, token }
+        }
+        TAG_RMA_ACK => PacketKind::RmaAck { token: c.u64()? },
+        TAG_RMA_GET_RESP => {
+            let token = c.u64()?;
+            let data = c.payload(pool)?;
+            PacketKind::RmaGetResp { token, data }
+        }
+        other => return Err(FrameError::BadKind(other)),
+    };
+    finish(c, WireMsg::Packet(Packet { src, depart_vt, kind }))
+}
+
+fn finish(c: Cursor<'_>, msg: WireMsg) -> Result<WireMsg, FrameError> {
+    if c.pos != c.buf.len() {
+        return Err(FrameError::Trailing { extra: c.buf.len() - c.pos });
+    }
+    Ok(msg)
+}
+
+/// Stream reassembler for the socket backend: accepts arbitrary read
+/// chunks (partial frames, many coalesced frames) and yields complete
+/// decoded messages.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Feed raw stream bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        // Compact before growing: consumed frames at the front would
+        // otherwise accumulate for the lifetime of the connection.
+        if self.pos > 0 && (self.pos >= self.buf.len() || self.pos > 64 * 1024) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Next complete message, or `None` if more bytes are needed.
+    pub fn next(&mut self, pool: &Arc<BufferPool>) -> Result<Option<WireMsg>, FrameError> {
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME_BODY {
+            return Err(FrameError::Oversized { len });
+        }
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let body = &self.buf[self.pos + 4..self.pos + 4 + len];
+        let msg = decode_msg(body, pool)?;
+        self.pos += 4 + len;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        Ok(Some(msg))
+    }
+
+    /// Bytes buffered but not yet consumed (diagnostics).
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::PoolHandle as _;
+
+    fn pool() -> Arc<BufferPool> {
+        Arc::new(BufferPool::new())
+    }
+
+    fn payload(pool: &Arc<BufferPool>, bytes: &[u8]) -> WireBytes {
+        let mut w = pool.take(bytes.len());
+        w.extend_from_slice(bytes);
+        w.freeze()
+    }
+
+    fn all_kinds(pool: &Arc<BufferPool>) -> Vec<Packet> {
+        let map = Arc::new(TypeMap::vector(3, 2, 5, &TypeMap::primitive(Primitive::I32)));
+        let kinds = vec![
+            PacketKind::Eager {
+                ctx: 16,
+                tag: -3,
+                data: payload(pool, &[1, 2, 3, 4, 5]),
+                sync_token: Some(99),
+            },
+            PacketKind::Eager { ctx: 1, tag: 0, data: WireBytes::empty(), sync_token: None },
+            PacketKind::Rts { ctx: 17, tag: 7, nbytes: 1 << 20, token: 42, sync_token: None },
+            PacketKind::Cts { token: 42, recv_token: 77 },
+            PacketKind::RData { recv_token: 77, data: payload(pool, &[9u8; 100]) },
+            PacketKind::SsendAck { token: 13 },
+            PacketKind::RmaPut { win: 3, off: 64, data: payload(pool, &[8u8; 16]), token: 5 },
+            PacketKind::RmaGet { win: 3, off: 128, nbytes: 256, token: 6 },
+            PacketKind::RmaAcc {
+                win: 3,
+                off: 0,
+                data: payload(pool, &[1u8; 12]),
+                count: 1,
+                map,
+                op: OpKind::MaxLoc,
+                fetch: true,
+                token: 7,
+            },
+            PacketKind::RmaCas { win: 3, off: 8, data: payload(pool, &[2u8; 16]), token: 8 },
+            PacketKind::RmaAck { token: 9 },
+            PacketKind::RmaGetResp { token: 10, data: payload(pool, &[3u8; 4]) },
+        ];
+        kinds
+            .into_iter()
+            .enumerate()
+            .map(|(i, kind)| Packet { src: i, depart_vt: i as f64 * 1.5, kind })
+            .collect()
+    }
+
+    fn assert_packets_equal(a: &Packet, b: &Packet) {
+        assert_eq!(a.src, b.src);
+        assert_eq!(a.depart_vt, b.depart_vt);
+        assert_eq!(a.kind.label(), b.kind.label());
+        assert_eq!(a.kind.payload_len(), b.kind.payload_len());
+        match (&a.kind, &b.kind) {
+            (
+                PacketKind::Eager { ctx: c1, tag: t1, data: d1, sync_token: s1 },
+                PacketKind::Eager { ctx: c2, tag: t2, data: d2, sync_token: s2 },
+            ) => {
+                assert_eq!((c1, t1, s1), (c2, t2, s2));
+                assert_eq!(d1.as_slice(), d2.as_slice());
+            }
+            (
+                PacketKind::RmaAcc { map: m1, op: o1, fetch: f1, count: n1, .. },
+                PacketKind::RmaAcc { map: m2, op: o2, fetch: f2, count: n2, .. },
+            ) => {
+                assert_eq!(m1.as_ref(), m2.as_ref(), "typemap must roundtrip exactly");
+                assert_eq!((o1, f1, n1), (o2, f2, n2));
+            }
+            _ => {}
+        }
+    }
+
+    #[test]
+    fn every_packet_kind_roundtrips() {
+        let p = pool();
+        for pkt in all_kinds(&p) {
+            let mut frame = Vec::new();
+            encode_frame(&pkt, &mut frame);
+            let body = &frame[4..];
+            assert_eq!(
+                u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize,
+                body.len()
+            );
+            match decode_msg(body, &p).unwrap() {
+                WireMsg::Packet(got) => assert_packets_equal(&pkt, &got),
+                other => panic!("expected packet, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_payloads_ride_pooled_buffers_and_balance() {
+        let p = pool();
+        let pkt = Packet {
+            src: 0,
+            depart_vt: 0.0,
+            kind: PacketKind::Eager {
+                ctx: 0,
+                tag: 1,
+                data: WireBytes::from_vec(vec![7u8; 64]),
+                sync_token: None,
+            },
+        };
+        let mut frame = Vec::new();
+        encode_frame(&pkt, &mut frame);
+        let decoded = decode_msg(&frame[4..], &p).unwrap();
+        assert_eq!(p.stats().outstanding, 1, "decoded payload is checked out of the pool");
+        drop(decoded);
+        assert_eq!(p.stats().outstanding, 0, "dropping the packet returns the buffer");
+        assert_eq!(p.stats().pooled, 1);
+    }
+
+    #[test]
+    fn abort_frame_roundtrips() {
+        let p = pool();
+        let mut frame = Vec::new();
+        encode_abort_frame(-7, &mut frame);
+        match decode_msg(&frame[4..], &p).unwrap() {
+            WireMsg::Abort { code } => assert_eq!(code, -7),
+            other => panic!("expected abort, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decoder_handles_partial_reads() {
+        let p = pool();
+        let mut frame = Vec::new();
+        for pkt in all_kinds(&p) {
+            encode_frame(&pkt, &mut frame);
+        }
+        let expected = all_kinds(&p);
+        // Feed one byte at a time: nothing may surface until a frame
+        // completes, and everything must surface exactly once.
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in &frame {
+            dec.push(&[b]);
+            while let Some(msg) = dec.next(&p).unwrap() {
+                match msg {
+                    WireMsg::Packet(pk) => got.push(pk),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        }
+        assert_eq!(got.len(), expected.len());
+        for (a, b) in expected.iter().zip(&got) {
+            assert_packets_equal(a, b);
+        }
+        assert_eq!(dec.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn decoder_handles_coalesced_frames() {
+        let p = pool();
+        let mut frame = Vec::new();
+        let pkts = all_kinds(&p);
+        for pkt in &pkts {
+            encode_frame(pkt, &mut frame);
+        }
+        // One giant read containing every frame.
+        let mut dec = FrameDecoder::new();
+        dec.push(&frame);
+        let mut got = Vec::new();
+        while let Some(msg) = dec.next(&p).unwrap() {
+            match msg {
+                WireMsg::Packet(pk) => got.push(pk),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got.len(), pkts.len());
+        assert_eq!(dec.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_frames() {
+        let p = pool();
+        let mut dec = FrameDecoder::new();
+        let bogus = ((MAX_FRAME_BODY + 1) as u32).to_le_bytes();
+        dec.push(&bogus);
+        match dec.next(&p) {
+            Err(FrameError::Oversized { len }) => assert_eq!(len, MAX_FRAME_BODY + 1),
+            other => panic!("expected oversized error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_trailing_bodies_are_errors() {
+        let p = pool();
+        let pkt = Packet {
+            src: 1,
+            depart_vt: 2.0,
+            kind: PacketKind::Cts { token: 1, recv_token: 2 },
+        };
+        let mut frame = Vec::new();
+        encode_frame(&pkt, &mut frame);
+        let body = &frame[4..];
+        assert_eq!(
+            decode_msg(&body[..body.len() - 1], &p),
+            Err(FrameError::Truncated)
+        );
+        let mut padded = body.to_vec();
+        padded.push(0);
+        assert_eq!(decode_msg(&padded, &p), Err(FrameError::Trailing { extra: 1 }));
+        assert_eq!(decode_msg(&[42], &p), Err(FrameError::BadKind(42)));
+    }
+}

@@ -19,21 +19,39 @@
 //! * [`wire`] — shared, pooled wire bytes: payloads are `Arc`-backed
 //!   views recycled through a per-fabric buffer pool, so the steady-state
 //!   message path neither allocates nor duplicates payload bytes.
+//! * [`backend`] — the pluggable delivery substrate: the [`backend::Backend`]
+//!   trait plus the in-process implementation. [`shm`] (lock-free
+//!   shared-memory rings) and [`socket`] (length-prefix-framed TCP) carry
+//!   packets between *processes*; [`framing`] is the byte codec they
+//!   share. See `docs/TRANSPORT.md`.
 //! * [`fabric`] — ties the above together and keeps transport-level
 //!   counters exported through the tool (`MPI_T`) interface.
 
+pub mod backend;
 pub mod clock;
 pub mod fabric;
+pub mod framing;
 pub mod mailbox;
 pub mod netmodel;
 pub mod nodemap;
 pub mod packet;
+#[cfg(unix)]
+pub mod shm;
+pub mod socket;
 pub mod wire;
 
+pub use backend::{
+    effective_backend, protocol_class, Backend, BackendKind, BackendStats, InprocBackend,
+    ProtocolClass,
+};
 pub use clock::VClock;
 pub use fabric::{Fabric, FabricStats};
+pub use framing::{FrameDecoder, FrameError, WireMsg};
 pub use mailbox::Mailbox;
 pub use netmodel::NetworkModel;
 pub use nodemap::NodeMap;
 pub use packet::{Packet, PacketKind};
+#[cfg(unix)]
+pub use shm::{ShmBackend, ShmSegment};
+pub use socket::{SocketBackend, SocketListener};
 pub use wire::{BufferPool, PoolHandle, PoolStats, WireBytes, WireVec};

@@ -1,0 +1,733 @@
+//! Shared-memory ring backend: intra-node ranks in *separate processes*
+//! exchange framed packets through lock-free SPSC byte rings mapped into
+//! one shared file.
+//!
+//! Segment layout (all offsets 8-aligned):
+//!
+//! ```text
+//! [segment header: 32 B]  magic u64 | nranks u64 | ring_cap u64 | abort u64
+//! [ring 0→0] [ring 0→1] … [ring n-1→n-1]
+//! ```
+//!
+//! Ring `src*n + dst` carries frames from rank `src` to rank `dst` and is
+//! a classic single-producer/single-consumer byte ring: `head`/`tail` are
+//! *monotonic* u64 byte counters (never wrapped — indices are taken mod
+//! the power-of-two capacity), so full/empty are unambiguous and ABA is
+//! impossible. The producer writes a complete `[u32 len][body]` frame and
+//! only then publishes `tail` with `Release`; the consumer `Acquire`-loads
+//! `tail` before reading, so a drained region always holds whole frames —
+//! torn frames cannot be observed (property-tested below).
+//!
+//! The mapping uses raw `mmap(2)` through an `extern "C"` declaration —
+//! the crate is std-only and std exposes no shared mappings.
+
+#![cfg(unix)]
+
+use super::backend::{abort_marker, Backend, BackendKind, BackendStats};
+use super::framing::{decode_msg, encode_frame, FrameDecoder, WireMsg};
+use super::mailbox::Mailbox;
+use super::packet::Packet;
+use super::wire::BufferPool;
+use crate::util::rng::Rng;
+use std::fs::OpenOptions;
+use std::os::fd::AsRawFd;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const MAGIC: u64 = 0x4645_5252_4F4D_5049; // "FERROMPI"
+const SEG_HEADER: usize = 32;
+const RING_HEADER: usize = 64; // head, tail, pad to a cache line
+const OFF_MAGIC: usize = 0;
+const OFF_NRANKS: usize = 8;
+const OFF_RING_CAP: usize = 16;
+const OFF_ABORT: usize = 24;
+
+/// Default per-ring capacity. 4 ranks ⇒ 16 rings ⇒ 32 MiB, comfortably
+/// under the common 64 MiB `/dev/shm` container default. Overridable via
+/// `FERROMPI_SHM_RING` (bytes, power of two).
+pub const DEFAULT_RING_CAP: usize = 2 << 20;
+
+/// Ring capacity from the environment, or the default.
+pub fn ring_cap_from_env() -> Result<usize, String> {
+    match std::env::var("FERROMPI_SHM_RING") {
+        Err(_) => Ok(DEFAULT_RING_CAP),
+        Ok(s) => {
+            let v: usize = s
+                .trim()
+                .parse()
+                .map_err(|_| format!("FERROMPI_SHM_RING: expected bytes, got '{s}'"))?;
+            if !v.is_power_of_two() || v < 4096 {
+                return Err(format!(
+                    "FERROMPI_SHM_RING must be a power of two ≥ 4096, got {v}"
+                ));
+            }
+            Ok(v)
+        }
+    }
+}
+
+// Raw mmap bindings: std-only crate, no libc. Constants are the
+// Linux/POSIX values for the flags we use.
+mod sys {
+    use std::ffi::c_void;
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const MAP_SHARED: i32 = 1;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// An owned `MAP_SHARED` mapping.
+#[derive(Debug)]
+struct Map {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The mapping is plain shared memory; all cross-thread/cross-process
+// access goes through atomics or regions owned by exactly one side of an
+// SPSC ring.
+unsafe impl Send for Map {}
+unsafe impl Sync for Map {}
+
+impl Map {
+    fn new(fd: i32, len: usize) -> std::io::Result<Map> {
+        let p = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                fd,
+                0,
+            )
+        };
+        if p as isize == -1 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Map { ptr: p as *mut u8, len })
+    }
+}
+
+impl Drop for Map {
+    fn drop(&mut self) {
+        unsafe {
+            sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+        }
+    }
+}
+
+/// A mapped transport segment: one per node, shared by every local rank.
+#[derive(Debug)]
+pub struct ShmSegment {
+    map: Map,
+    nranks: usize,
+    ring_cap: usize,
+    path: PathBuf,
+    /// The creating process unlinks the file on drop.
+    owner: bool,
+}
+
+fn segment_len(nranks: usize, ring_cap: usize) -> usize {
+    SEG_HEADER + nranks * nranks * (RING_HEADER + ring_cap)
+}
+
+impl ShmSegment {
+    /// Create and initialise a fresh segment (launcher side).
+    pub fn create(path: &Path, nranks: usize, ring_cap: usize) -> std::io::Result<ShmSegment> {
+        assert!(ring_cap.is_power_of_two(), "ring capacity must be a power of two");
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        let len = segment_len(nranks, ring_cap);
+        file.set_len(len as u64)?;
+        let map = Map::new(file.as_raw_fd(), len)?;
+        let seg = ShmSegment {
+            map,
+            nranks,
+            ring_cap,
+            path: path.to_path_buf(),
+            owner: true,
+        };
+        // set_len zero-fills, so every head/tail/abort word starts at 0;
+        // publish shape last, magic very last (open() keys on it).
+        seg.word(OFF_NRANKS).store(nranks as u64, Ordering::Relaxed);
+        seg.word(OFF_RING_CAP).store(ring_cap as u64, Ordering::Relaxed);
+        seg.word(OFF_MAGIC).store(MAGIC, Ordering::Release);
+        Ok(seg)
+    }
+
+    /// Map an existing segment (worker side).
+    pub fn open(path: &Path, expect_nranks: usize) -> Result<ShmSegment, String> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| format!("open shm segment {}: {e}", path.display()))?;
+        let flen = file
+            .metadata()
+            .map_err(|e| format!("stat shm segment: {e}"))?
+            .len() as usize;
+        if flen < SEG_HEADER {
+            return Err(format!("shm segment {} too small ({flen} B)", path.display()));
+        }
+        let map = Map::new(file.as_raw_fd(), flen)
+            .map_err(|e| format!("mmap shm segment: {e}"))?;
+        let probe = ShmSegment {
+            map,
+            nranks: 0,
+            ring_cap: 0,
+            path: path.to_path_buf(),
+            owner: false,
+        };
+        if probe.word(OFF_MAGIC).load(Ordering::Acquire) != MAGIC {
+            return Err(format!("shm segment {} has bad magic", path.display()));
+        }
+        let nranks = probe.word(OFF_NRANKS).load(Ordering::Relaxed) as usize;
+        let ring_cap = probe.word(OFF_RING_CAP).load(Ordering::Relaxed) as usize;
+        if nranks != expect_nranks {
+            return Err(format!(
+                "shm segment has {nranks} ranks, launcher said {expect_nranks}"
+            ));
+        }
+        if flen < segment_len(nranks, ring_cap) {
+            return Err(format!(
+                "shm segment {} truncated: {flen} < {}",
+                path.display(),
+                segment_len(nranks, ring_cap)
+            ));
+        }
+        Ok(ShmSegment { nranks, ring_cap, ..probe })
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    pub fn ring_cap(&self) -> usize {
+        self.ring_cap
+    }
+
+    /// An `AtomicU64` view of the 8-aligned word at `off`.
+    fn word(&self, off: usize) -> &AtomicU64 {
+        debug_assert!(off % 8 == 0 && off + 8 <= self.map.len);
+        unsafe { &*(self.map.ptr.add(off) as *const AtomicU64) }
+    }
+
+    fn ring_base(&self, src: usize, dst: usize) -> usize {
+        debug_assert!(src < self.nranks && dst < self.nranks);
+        SEG_HEADER + (src * self.nranks + dst) * (RING_HEADER + self.ring_cap)
+    }
+
+    fn ring_head(&self, src: usize, dst: usize) -> &AtomicU64 {
+        self.word(self.ring_base(src, dst))
+    }
+
+    fn ring_tail(&self, src: usize, dst: usize) -> &AtomicU64 {
+        self.word(self.ring_base(src, dst) + 8)
+    }
+
+    fn ring_data(&self, src: usize, dst: usize) -> *mut u8 {
+        unsafe { self.map.ptr.add(self.ring_base(src, dst) + RING_HEADER) }
+    }
+
+    /// Flag a job abort. Word encodes "set" in the high half so exit code
+    /// 0 is representable.
+    pub fn set_abort(&self, code: i32) {
+        self.word(OFF_ABORT)
+            .store((1u64 << 32) | (code as u32 as u64), Ordering::Release);
+    }
+
+    /// The abort code, if any rank has flagged one.
+    pub fn abort_code(&self) -> Option<i32> {
+        let w = self.word(OFF_ABORT).load(Ordering::Acquire);
+        if w >> 32 != 0 { Some(w as u32 as i32) } else { None }
+    }
+
+    /// Producer side: append one complete frame to ring `src→dst`,
+    /// backing off (spin + short sleep) while the ring is full.
+    /// `keep_waiting` is polled during backoff so an aborting job cannot
+    /// deadlock a producer against a dead consumer.
+    pub fn push_frame(
+        &self,
+        src: usize,
+        dst: usize,
+        frame: &[u8],
+        keep_waiting: impl Fn() -> bool,
+    ) -> Result<(), String> {
+        let cap = self.ring_cap;
+        if frame.len() > cap {
+            return Err(format!(
+                "frame of {} bytes exceeds the {cap}-byte shm ring; raise FERROMPI_SHM_RING",
+                frame.len()
+            ));
+        }
+        let head = self.ring_head(src, dst);
+        let tail = self.ring_tail(src, dst);
+        let t = tail.load(Ordering::Relaxed); // we are the only producer
+        loop {
+            let h = head.load(Ordering::Acquire);
+            if cap - (t - h) as usize >= frame.len() {
+                break;
+            }
+            if !keep_waiting() {
+                return Err("shm ring write abandoned: job is aborting".into());
+            }
+            std::thread::sleep(Duration::from_micros(10));
+        }
+        let data = self.ring_data(src, dst);
+        let idx = (t as usize) & (cap - 1);
+        let first = frame.len().min(cap - idx);
+        unsafe {
+            std::ptr::copy_nonoverlapping(frame.as_ptr(), data.add(idx), first);
+            if first < frame.len() {
+                // Wrap: remainder lands at the ring's start.
+                std::ptr::copy_nonoverlapping(
+                    frame.as_ptr().add(first),
+                    data,
+                    frame.len() - first,
+                );
+            }
+        }
+        // Publish: everything before this store is visible to an
+        // Acquire-load of tail.
+        tail.store(t + frame.len() as u64, Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: move every published byte of ring `src→dst` into
+    /// `scratch`. Because producers publish only at frame boundaries the
+    /// drained bytes always parse into whole frames.
+    pub fn drain_ring(&self, src: usize, dst: usize, scratch: &mut Vec<u8>) -> usize {
+        let head = self.ring_head(src, dst);
+        let tail = self.ring_tail(src, dst);
+        let h = head.load(Ordering::Relaxed); // we are the only consumer
+        let t = tail.load(Ordering::Acquire);
+        let n = (t - h) as usize;
+        if n == 0 {
+            return 0;
+        }
+        let cap = self.ring_cap;
+        let data = self.ring_data(src, dst);
+        let idx = (h as usize) & (cap - 1);
+        let first = n.min(cap - idx);
+        let start = scratch.len();
+        scratch.resize(start + n, 0);
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.add(idx), scratch.as_mut_ptr().add(start), first);
+            if first < n {
+                std::ptr::copy_nonoverlapping(
+                    data,
+                    scratch.as_mut_ptr().add(start + first),
+                    n - first,
+                );
+            }
+        }
+        // Free the space for the producer.
+        head.store(t, Ordering::Release);
+        n
+    }
+}
+
+impl Drop for ShmSegment {
+    fn drop(&mut self) {
+        if self.owner {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Per-process transport over a shared [`ShmSegment`].
+///
+/// Self-sends stay in the local [`Mailbox`] (identical to the in-process
+/// backend); everything else is framed into the `me→dst` ring. Receives
+/// sweep every `src→me` ring.
+#[derive(Debug)]
+pub struct ShmBackend {
+    seg: Arc<ShmSegment>,
+    me: usize,
+    local: Mailbox,
+    pool: Arc<BufferPool>,
+    stats: Arc<BackendStats>,
+    encode_buf: Mutex<Vec<u8>>,
+    drain_buf: Mutex<Vec<u8>>,
+}
+
+impl ShmBackend {
+    pub fn new(
+        seg: Arc<ShmSegment>,
+        me: usize,
+        pool: Arc<BufferPool>,
+        stats: Arc<BackendStats>,
+    ) -> ShmBackend {
+        assert!(me < seg.nranks());
+        ShmBackend {
+            seg,
+            me,
+            local: Mailbox::new(),
+            pool,
+            stats,
+            encode_buf: Mutex::new(Vec::new()),
+            drain_buf: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Sweep every inbound ring into `out`; returns packets decoded.
+    fn sweep(&self, out: &mut Vec<Packet>) -> usize {
+        let mut scratch = self.drain_buf.lock().unwrap();
+        let mut got = 0;
+        for src in 0..self.seg.nranks() {
+            if src == self.me {
+                continue;
+            }
+            scratch.clear();
+            if self.seg.drain_ring(src, self.me, &mut scratch) == 0 {
+                continue;
+            }
+            let mut dec = FrameDecoder::new();
+            dec.push(&scratch);
+            loop {
+                match dec.next(&self.pool) {
+                    Ok(Some(WireMsg::Packet(pkt))) => {
+                        self.stats.count_rx(pkt.kind.payload_len());
+                        out.push(pkt);
+                        got += 1;
+                    }
+                    Ok(Some(WireMsg::Abort { code })) => {
+                        self.seg.set_abort(code);
+                        out.push(abort_marker());
+                        got += 1;
+                    }
+                    Ok(None) => break,
+                    Err(e) => panic!(
+                        "shm ring {src}→{me} corrupt: {e}",
+                        me = self.me
+                    ),
+                }
+            }
+            debug_assert_eq!(dec.pending_bytes(), 0, "rings hold whole frames only");
+        }
+        got
+    }
+}
+
+impl Backend for ShmBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Shm
+    }
+
+    fn deliver(&self, to: usize, pkt: Packet) {
+        if to == self.me {
+            self.local.push(pkt);
+            return;
+        }
+        self.stats.count_tx(pkt.kind.payload_len());
+        let mut buf = self.encode_buf.lock().unwrap();
+        buf.clear();
+        encode_frame(&pkt, &mut buf);
+        let seg = &self.seg;
+        if let Err(e) = seg.push_frame(self.me, to, &buf, || seg.abort_code().is_none()) {
+            if seg.abort_code().is_some() {
+                return; // job is going down anyway; drop the frame
+            }
+            panic!("shm deliver {me}→{to}: {e}", me = self.me);
+        }
+    }
+
+    fn deliver_reordered(&self, to: usize, pkt: Packet, _rng: &mut Rng) -> bool {
+        // Chaos reordering is an in-process capability; cross-process
+        // rings always deliver FIFO.
+        self.deliver(to, pkt);
+        false
+    }
+
+    fn poll(&self, rank: usize, out: &mut Vec<Packet>) {
+        if rank != self.me {
+            return;
+        }
+        self.local.drain_into(out);
+        self.sweep(out);
+    }
+
+    fn poll_wait(&self, rank: usize, out: &mut Vec<Packet>, timeout: Duration) -> usize {
+        if rank != self.me {
+            return 0;
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let before = out.len();
+            self.local.drain_into(out);
+            self.sweep(out);
+            let got = out.len() - before;
+            if got > 0 || Instant::now() >= deadline {
+                return got;
+            }
+            // No cross-process condvar on the rings: poll with a short
+            // sleep so a quiet rank doesn't burn a core.
+            std::thread::sleep(Duration::from_micros(20));
+        }
+    }
+
+    fn queued(&self, rank: usize) -> usize {
+        // Remote ranks' queues live in other processes; the quiescence
+        // audit checks them there.
+        if rank == self.me { self.local.len() } else { 0 }
+    }
+
+    fn abort_wake(&self, code: i32) {
+        self.seg.set_abort(code);
+        self.local.push(abort_marker());
+    }
+
+    fn remote_abort(&self) -> Option<i32> {
+        self.seg.abort_code()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    fn seg_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ferrompi-shm-test-{}-{tag}", std::process::id()))
+    }
+
+    /// A deterministic pseudo-frame: length prefix + patterned body.
+    fn make_frame(seq: u32, len: usize) -> Vec<u8> {
+        let mut f = Vec::with_capacity(4 + len);
+        f.extend_from_slice(&(len as u32).to_le_bytes());
+        for i in 0..len {
+            f.push((seq as usize + i) as u8);
+        }
+        f
+    }
+
+    /// Split `scratch` into frames, asserting each is complete and
+    /// matches its expected pattern. Returns frames consumed.
+    fn check_frames(scratch: &[u8], next_seq: &mut u32, lens: &[usize]) -> usize {
+        let mut pos = 0;
+        let mut n = 0;
+        while pos < scratch.len() {
+            assert!(pos + 4 <= scratch.len(), "torn length prefix");
+            let len = u32::from_le_bytes(scratch[pos..pos + 4].try_into().unwrap()) as usize;
+            assert!(pos + 4 + len <= scratch.len(), "torn frame body");
+            let expect = make_frame(*next_seq, lens[*next_seq as usize % lens.len()]);
+            assert_eq!(&scratch[pos..pos + 4 + len], &expect[..], "frame {next_seq} corrupt");
+            pos += 4 + len;
+            *next_seq += 1;
+            n += 1;
+        }
+        n
+    }
+
+    #[test]
+    fn ring_wraps_and_preserves_frames() {
+        let path = seg_path("wrap");
+        let seg = Arc::new(ShmSegment::create(&path, 2, 4096).unwrap());
+        // Varied frame sizes, total traffic ≫ capacity: forces many
+        // wraparounds including frames split across the ring edge.
+        let lens = [1usize, 37, 256, 1000, 13, 511];
+        let total: u32 = 2000;
+        let producer = {
+            let seg = Arc::clone(&seg);
+            std::thread::spawn(move || {
+                for seq in 0..total {
+                    let f = make_frame(seq, lens[seq as usize % lens.len()]);
+                    seg.push_frame(0, 1, &f, || true).unwrap();
+                }
+            })
+        };
+        let mut next_seq = 0u32;
+        let mut scratch = Vec::new();
+        while next_seq < total {
+            scratch.clear();
+            if seg.drain_ring(0, 1, &mut scratch) > 0 {
+                check_frames(&scratch, &mut next_seq, &lens);
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(next_seq, total);
+        assert_eq!(seg.drain_ring(0, 1, &mut scratch), 0, "ring drained clean");
+    }
+
+    #[test]
+    fn full_ring_blocks_producer_until_drained() {
+        let path = seg_path("full");
+        let seg = Arc::new(ShmSegment::create(&path, 2, 4096).unwrap());
+        let blocked = Arc::new(AtomicBool::new(false));
+        let producer = {
+            let seg = Arc::clone(&seg);
+            let blocked = Arc::clone(&blocked);
+            std::thread::spawn(move || {
+                // 8 × (4 + 1020) = 8192 bytes into a 4096 ring: must block.
+                for seq in 0..8u32 {
+                    if seq == 4 {
+                        blocked.store(true, Ordering::SeqCst);
+                    }
+                    let f = make_frame(seq, 1020);
+                    seg.push_frame(0, 1, &f, || true).unwrap();
+                }
+            })
+        };
+        // Wait until the producer has filled the ring and is stuck.
+        while !blocked.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let mut next_seq = 0u32;
+        let mut scratch = Vec::new();
+        while next_seq < 8 {
+            scratch.clear();
+            if seg.drain_ring(0, 1, &mut scratch) > 0 {
+                check_frames(&scratch, &mut next_seq, &[1020]);
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_frame_names_the_knob() {
+        let path = seg_path("oversize");
+        let seg = ShmSegment::create(&path, 2, 4096).unwrap();
+        let big = vec![0u8; 5000];
+        let err = seg.push_frame(0, 1, &big, || true).unwrap_err();
+        assert!(err.contains("FERROMPI_SHM_RING"), "error must name the knob: {err}");
+    }
+
+    #[test]
+    fn abort_word_roundtrips_and_unblocks_producer() {
+        let path = seg_path("abort");
+        let seg = Arc::new(ShmSegment::create(&path, 2, 4096).unwrap());
+        assert_eq!(seg.abort_code(), None);
+        seg.set_abort(0);
+        assert_eq!(seg.abort_code(), Some(0), "exit code 0 must still read as set");
+        // Fill the ring with nobody draining: push_frame must bail via
+        // keep_waiting instead of spinning forever.
+        let f = make_frame(0, 2040);
+        seg.push_frame(0, 1, &f, || true).unwrap();
+        seg.push_frame(0, 1, &f, || true).unwrap();
+        let err = seg
+            .push_frame(0, 1, &f, || seg.abort_code().is_none())
+            .unwrap_err();
+        assert!(err.contains("abort"), "{err}");
+    }
+
+    #[test]
+    fn open_validates_magic_and_shape() {
+        let path = seg_path("open");
+        let seg = ShmSegment::create(&path, 3, 4096).unwrap();
+        let view = ShmSegment::open(&path, 3).unwrap();
+        assert_eq!(view.nranks(), 3);
+        assert_eq!(view.ring_cap(), 4096);
+        assert!(ShmSegment::open(&path, 4).is_err(), "rank-count mismatch must fail");
+        // Two mappings of one file really share memory.
+        seg.set_abort(7);
+        assert_eq!(view.abort_code(), Some(7));
+        drop(view); // non-owner: file stays
+        assert!(path.exists());
+        drop(seg); // owner: file unlinked
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn mpsc_many_producers_one_consumer() {
+        // MPSC across the segment: every ring is still SPSC, the
+        // consumer multiplexes by sweeping — mirrors ShmBackend::sweep.
+        let path = seg_path("mpsc");
+        let nranks = 4;
+        let seg = Arc::new(ShmSegment::create(&path, nranks, 4096).unwrap());
+        let per = 500u32;
+        let lens = [3usize, 64, 700];
+        let producers: Vec<_> = (1..nranks)
+            .map(|src| {
+                let seg = Arc::clone(&seg);
+                std::thread::spawn(move || {
+                    for seq in 0..per {
+                        let f = make_frame(seq, lens[seq as usize % lens.len()]);
+                        seg.push_frame(src, 0, &f, || true).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let mut next = vec![0u32; nranks];
+        let mut scratch = Vec::new();
+        while next[1..].iter().any(|&s| s < per) {
+            let mut idle = true;
+            for src in 1..nranks {
+                scratch.clear();
+                if seg.drain_ring(src, 0, &mut scratch) > 0 {
+                    check_frames(&scratch, &mut next[src], &lens);
+                    idle = false;
+                }
+            }
+            if idle {
+                std::thread::yield_now();
+            }
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert!(next[1..].iter().all(|&s| s == per));
+    }
+
+    #[test]
+    fn backend_self_send_and_cross_process_path() {
+        use crate::transport::packet::PacketKind;
+        use crate::transport::wire::WireBytes;
+        let path = seg_path("backend");
+        let seg = Arc::new(ShmSegment::create(&path, 2, 1 << 16).unwrap());
+        let pool0 = Arc::new(BufferPool::new());
+        let pool1 = Arc::new(BufferPool::new());
+        let b0 = ShmBackend::new(
+            Arc::clone(&seg), 0, pool0, Arc::new(BackendStats::default()),
+        );
+        let stats1 = Arc::new(BackendStats::default());
+        let b1 = ShmBackend::new(Arc::clone(&seg), 1, pool1, Arc::clone(&stats1));
+        let pkt = |tag: i32, body: &[u8]| Packet {
+            src: 0,
+            depart_vt: 1.0,
+            kind: PacketKind::Eager {
+                ctx: 0,
+                tag,
+                data: WireBytes::from_vec(body.to_vec()),
+                sync_token: None,
+            },
+        };
+        b0.deliver(1, pkt(1, &[1, 2, 3]));
+        b0.deliver(1, pkt(2, &[4, 5]));
+        b1.deliver(1, pkt(3, &[6])); // self-send on rank 1
+        let mut out = Vec::new();
+        let got = b1.poll_wait(1, &mut out, Duration::from_secs(5));
+        assert_eq!(got, out.len());
+        // Self-send drains first, then the FIFO ring from rank 0.
+        let tags: Vec<i32> = out
+            .iter()
+            .map(|p| match &p.kind {
+                PacketKind::Eager { tag, .. } => *tag,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(tags, vec![3, 1, 2]);
+        assert_eq!(stats1.frames_rx.load(Ordering::Relaxed), 2, "self-sends skip the wire");
+        assert_eq!(stats1.bytes_rx.load(Ordering::Relaxed), 5);
+    }
+}

@@ -72,6 +72,18 @@ impl Universe {
         let nodes = std::env::var("FERROMPI_NODES").ok();
         let ppn = std::env::var("FERROMPI_PPN").ok();
         let (n, p) = resolve_shape(nodes.as_deref(), ppn.as_deref(), default_nodes, default_ppn);
+        // Under `ferrompi-launch` the world size is fixed by the
+        // launcher: a disagreeing FERROMPI_NODES × FERROMPI_PPN is a
+        // configuration error, never a silent reshape.
+        if let Ok(w) = std::env::var(crate::coordinator::launch::ENV_WORLD) {
+            if let Ok(world) = w.trim().parse::<usize>() {
+                if let Err(e) =
+                    crate::coordinator::launch::validate_launched_shape(n, p, world)
+                {
+                    panic!("{e}");
+                }
+            }
+        }
         Universe::new(n, p)
     }
 
@@ -138,6 +150,14 @@ impl Universe {
     }
 
     fn run_inner<T: Send>(&self, f: impl Fn(&Comm) -> T + Send + Sync) -> (Vec<T>, Arc<Fabric>) {
+        // A process spawned by `ferrompi-launch` hosts exactly one rank:
+        // its first run consumes the launch environment instead of
+        // spawning rank threads.
+        match crate::coordinator::launch::take_launched_job() {
+            Ok(None) => {}
+            Ok(Some(job)) => return self.run_launched(f, job),
+            Err(e) => panic!("{e}"),
+        }
         let n = self.nranks();
         let mut model = self.model;
         if let Some(ch) = &self.chaos {
@@ -197,6 +217,68 @@ impl Universe {
             audit::enforce_fabric(&fabric);
         }
         (out, fabric)
+    }
+
+    /// Run this process's single rank of a launched multi-process job.
+    /// The cluster shape comes from the launch environment (mpiexec
+    /// semantics: the launcher's `-n/--nodes/--ppn` override whatever
+    /// shape this universe was constructed with); chaos is ignored —
+    /// perturbation requires the in-process backend. The returned vector
+    /// holds only the local rank's result.
+    fn run_launched<T: Send>(
+        &self,
+        f: impl Fn(&Comm) -> T + Send + Sync,
+        job: crate::coordinator::launch::LaunchedJob,
+    ) -> (Vec<T>, Arc<Fabric>) {
+        use crate::transport::backend::{BackendKind, BackendStats};
+        use crate::transport::wire::BufferPool;
+        let nodemap = NodeMap::new(job.nodes, job.ppn);
+        let pool = Arc::new(BufferPool::new());
+        let bstats = Arc::new(BackendStats::default());
+        let backend: Box<dyn crate::transport::backend::Backend> = match job.backend {
+            BackendKind::Inproc => unreachable!("launch rejects inproc for launched workers"),
+            #[cfg(unix)]
+            BackendKind::Shm => {
+                let path = job.shm_path.as_ref().expect("launch sets the shm path");
+                let seg = crate::transport::shm::ShmSegment::open(path, job.world)
+                    .unwrap_or_else(|e| panic!("rank {}: {e}", job.rank));
+                Box::new(crate::transport::shm::ShmBackend::new(
+                    Arc::new(seg),
+                    job.rank,
+                    Arc::clone(&pool),
+                    Arc::clone(&bstats),
+                ))
+            }
+            #[cfg(not(unix))]
+            BackendKind::Shm => panic!("the shm backend requires a unix platform"),
+            BackendKind::Socket => Box::new(crate::transport::socket::SocketBackend::start(
+                job.listener.expect("launch binds the fabric listener"),
+                job.rank,
+                job.addrs.clone(),
+                Arc::clone(&pool),
+                Arc::clone(&bstats),
+            )),
+        };
+        let fabric = Arc::new(Fabric::multiprocess(
+            nodemap, self.model, job.rank, pool, backend, bstats,
+        ));
+        let audit = self.audit_on();
+        let ctx = RankCtx::new(job.rank, fabric.clone());
+        let comm = Comm::world(ctx.clone());
+        let out = f(&comm);
+        // Quiesce the whole job before tearing the transport down: a
+        // fast rank closing its sockets mid-collective would look like a
+        // peer failure to the others.
+        crate::collective::barrier(&comm).expect("final launched-job barrier");
+        drop(comm);
+        if audit {
+            audit::enforce_rank(&ctx);
+            // Fabric-global checks are per-process here: remote ranks'
+            // queues are audited by their own processes.
+            audit::enforce_fabric(&fabric);
+        }
+        fabric.shutdown_backend();
+        (vec![out], fabric)
     }
 }
 

@@ -1,0 +1,173 @@
+//! Multi-process transport suite: launcher-spawned jobs on the shm and
+//! socket backends, checked for byte-identical proggen digests against
+//! the in-process fabric (the cross-backend conformance contract), plus
+//! launcher CLI smoke and error-path coverage.
+//!
+//! Everything here spawns real OS processes via the `ferrompi-launch`
+//! binary Cargo builds alongside the test (`CARGO_BIN_EXE_*`), so the
+//! suite exercises the genuine bootstrap-rendezvous / teardown paths.
+
+use ferrompi::sim::proggen::Program;
+use ferrompi::universe::Universe;
+use std::path::PathBuf;
+use std::process::Command;
+
+const LAUNCHER: &str = env!("CARGO_BIN_EXE_ferrompi-launch");
+
+/// Seeds for the cross-backend conformance sweep. Small on purpose: each
+/// seed runs a full multi-process job per backend.
+const CONFORMANCE_SEEDS: &[u64] = &[7, 0xC0FFEE];
+
+const NRANKS: usize = 4;
+
+/// A scratch dir under the target-adjacent temp root, removed on drop so
+/// red runs don't accumulate digest litter.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let dir = std::env::temp_dir()
+            .join(format!("ferrompi-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("create scratch dir");
+        Scratch(dir)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// In-process reference digests, formatted exactly as the
+/// `builtin:conformance` worker writes them (one hex line per phase).
+fn reference_digests(seed: u64) -> Vec<String> {
+    let program = Program::generate(seed, NRANKS);
+    let per_rank = program.run(&Universe::test(NRANKS).calm());
+    per_rank
+        .iter()
+        .map(|digests| digests.iter().map(|d| format!("{d:016x}\n")).collect())
+        .collect()
+}
+
+/// Launch `builtin:conformance` on `backend` and return each rank's
+/// digest file body.
+fn launched_digests(backend: &str, seed: u64) -> Vec<String> {
+    let scratch = Scratch::new(&format!("conf-{backend}-{seed}"));
+    let out = Command::new(LAUNCHER)
+        .args(["-n", &NRANKS.to_string(), "--backend", backend, "builtin:conformance"])
+        .args(["--seed", &seed.to_string(), "--out"])
+        .arg(&scratch.0)
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(
+        out.status.success(),
+        "conformance job failed on {backend} (seed {seed}): {}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (0..NRANKS)
+        .map(|r| {
+            let path = scratch.0.join(format!("rank_{r}.digest"));
+            std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("missing digest {}: {e}", path.display()))
+        })
+        .collect()
+}
+
+fn assert_conformance(backend: &str) {
+    for &seed in CONFORMANCE_SEEDS {
+        let want = reference_digests(seed);
+        let got = launched_digests(backend, seed);
+        for r in 0..NRANKS {
+            assert_eq!(
+                got[r], want[r],
+                "rank {r} digests diverge on {backend} (seed {seed}) — \
+                 the backend broke an ordering or data guarantee"
+            );
+        }
+    }
+}
+
+/// The tentpole contract: a seeded program produces byte-identical
+/// per-rank digests on the socket backend and the in-process fabric.
+#[test]
+fn conformance_socket_matches_inproc() {
+    assert_conformance("socket");
+}
+
+/// Same contract over the shared-memory ring backend.
+#[cfg(unix)]
+#[test]
+fn conformance_shm_matches_inproc() {
+    assert_conformance("shm");
+}
+
+/// The acceptance-criterion smoke: `ferrompi-launch -n 4` runs an
+/// allreduce end-to-end over the socket backend.
+#[test]
+fn launcher_runs_allreduce_over_socket() {
+    let out = Command::new(LAUNCHER)
+        .args(["-n", "4", "--backend", "socket", "builtin:allreduce"])
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(
+        out.status.success(),
+        "allreduce job failed: {}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("allreduce ok: 10 across 4 rank(s)"),
+        "missing success line in stdout: {stdout}"
+    );
+}
+
+/// `--backend inproc` degenerates to a single child hosting every rank
+/// in-process — the launcher is still useful as a uniform front door.
+#[test]
+fn launcher_runs_allreduce_inproc() {
+    let out = Command::new(LAUNCHER)
+        .args(["-n", "4", "--backend", "inproc", "builtin:allreduce"])
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(
+        out.status.success(),
+        "inproc job failed: {}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("allreduce ok"));
+}
+
+/// A failing rank must take the whole job down with a nonzero shepherd
+/// exit, not hang the survivors (kill-all teardown).
+#[test]
+fn launcher_propagates_worker_failure() {
+    let out = Command::new(LAUNCHER)
+        .args(["-n", "2", "--backend", "socket", "builtin:no-such-worker"])
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(!out.status.success(), "job with an unknown worker must fail");
+}
+
+/// Satellite: an unknown backend spelling is rejected up front, listing
+/// every valid spelling.
+#[test]
+fn launcher_rejects_unknown_backend() {
+    let out = Command::new(LAUNCHER)
+        .args(["-n", "2", "--backend", "carrier-pigeon", "builtin:allreduce"])
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("carrier-pigeon")
+            && stderr.contains("inproc")
+            && stderr.contains("shm")
+            && stderr.contains("socket"),
+        "error must name the bad spelling and list the valid ones: {stderr}"
+    );
+}
