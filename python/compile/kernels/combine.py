@@ -29,6 +29,18 @@ TILE_ROWS = 8
 
 OPS = ("sum", "prod", "max", "min")
 
+# Identity element per op: tail blocks of a payload that is not a
+# multiple of BLOCK are padded with these on the rust side, so the pad
+# lanes pass through the combine untouched and can be sliced off. Kept
+# here (next to the kernels) so both language sides share one source of
+# truth — python/tests/test_combine_padding.py pins the semantics.
+IDENTITY = {
+    "sum": 0.0,
+    "prod": 1.0,
+    "max": float("-inf"),
+    "min": float("inf"),
+}
+
 
 def _combine_kernel(op):
     def kernel(x_ref, y_ref, o_ref):
@@ -72,3 +84,30 @@ def combine(op: str, x, y):
         interpret=True,
     )(x2, y2)
     return out.reshape(BLOCK)
+
+
+def combine_padded(op: str, x, y):
+    """``out[i] = x[i] OP y[i]`` over arbitrary-length 1-D f32 payloads.
+
+    The model of the rust chunking seam: payloads whose length is not a
+    multiple of ``BLOCK`` are padded up with the op's :data:`IDENTITY`
+    element, pushed through the fixed-shape :func:`combine` kernel one
+    block at a time, and trimmed back. The kernel itself never sees a
+    ragged shape — exactly the AOT contract (artifact shapes are fixed at
+    compile time).
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown combine op {op!r}")
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"combine_padded expects matching 1-D payloads, got {x.shape}/{y.shape}")
+    n = x.shape[0]
+    if n == 0:
+        return x
+    pad = (-n) % BLOCK
+    ident = jnp.asarray(IDENTITY[op], x.dtype)
+    xp = jnp.concatenate([x, jnp.full((pad,), ident, x.dtype)]) if pad else x
+    yp = jnp.concatenate([y, jnp.full((pad,), ident, y.dtype)]) if pad else y
+    blocks = [
+        combine(op, xp[b : b + BLOCK], yp[b : b + BLOCK]) for b in range(0, n + pad, BLOCK)
+    ]
+    return jnp.concatenate(blocks)[:n]

@@ -1,0 +1,65 @@
+"""Satellite: identity padding for payloads that are not a multiple of
+the fixed 4096-element combine block.
+
+The AOT artifacts are compiled for exactly (BLOCK,) operands, so the
+rust chunking seam pads tail chunks with the op identity and trims the
+result. These tests pin that contract from the python side:
+``combine_padded`` over ragged lengths must match the pure-jnp oracle
+exactly, and the pad lanes must be invisible in the output.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import combine, ref
+
+BLOCK = combine.BLOCK
+
+# Ragged lengths around the block boundary: sub-block, off-by-one both
+# sides of one and several blocks, and a multi-block ragged tail.
+RAGGED = (1, 7, BLOCK - 1, BLOCK + 1, 2 * BLOCK - 17, 3 * BLOCK + 4096 - 1, 16401)
+
+
+def payloads(n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1e3, 1e3, n).astype(np.float32))
+    y = jnp.asarray(rng.uniform(-1e3, 1e3, n).astype(np.float32))
+    return x, y
+
+
+@pytest.mark.parametrize("op", combine.OPS)
+@pytest.mark.parametrize("n", RAGGED)
+def test_padded_combine_matches_ref_on_ragged_lengths(op, n):
+    x, y = payloads(n, seed=n)
+    got = combine.combine_padded(op, x, y)
+    assert got.shape == (n,)
+    want = ref.combine_ref(op, x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("op", combine.OPS)
+def test_identity_element_is_neutral(op):
+    """x OP identity == x for every op — the property padding relies on."""
+    x, _ = payloads(257, seed=3)
+    ident = jnp.full_like(x, combine.IDENTITY[op])
+    got = combine.combine_padded(op, x, ident)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+@pytest.mark.parametrize("op", combine.OPS)
+def test_block_multiple_lengths_need_no_padding(op):
+    """Exact multiples go through unchanged (no concat/trim artifacts)."""
+    x, y = payloads(2 * BLOCK, seed=11)
+    got = combine.combine_padded(op, x, y)
+    want = ref.combine_ref(op, x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_padded_combine_rejects_bad_inputs():
+    x, y = payloads(10)
+    with pytest.raises(ValueError):
+        combine.combine_padded("median", x, y)
+    with pytest.raises(ValueError):
+        combine.combine_padded("sum", x[:-1], y)

@@ -1,0 +1,158 @@
+//! A6 — gradient exchange: allreduce bandwidth for the data-parallel
+//! training pattern, chunked vs unchunked, per combine engine.
+//!
+//! For each payload × rank count × engine the sweep measures the same
+//! persistent-pipeline allreduce twice: once with chunking suppressed
+//! (threshold pushed above the payload) and once under the effective
+//! threshold, so the `overlap_efficiency` column (unchunked time /
+//! chunked time) isolates what the compute/transport overlap buys after
+//! paying the chunking overhead. The combine pvars are sampled per run
+//! and carried into the JSON so a regression in engine selection (e.g.
+//! offload silently falling back) is visible in the artifact, not just
+//! in wall-clock noise.
+//!
+//! Writes `BENCH_gradient_exchange.json` at the repo root (a CI
+//! bench-smoke artifact). Set `FERROMPI_BENCH_QUICK=1` for the
+//! seconds-scale subset.
+
+use ferrompi::collective::config::{self, CombineEngine};
+use ferrompi::coordinator::{write_gradient_json, GradientRow};
+use ferrompi::modern::{Communicator, ReduceOp};
+use ferrompi::tool::PvarSession;
+use ferrompi::universe::Universe;
+use std::time::Instant;
+
+/// One universe run: `iters` pipelined allreduces of `count` f32 on
+/// `ranks` in-process ranks. Returns rank 0's (mean seconds/iter,
+/// combine pvars, chunk count).
+struct Sample {
+    mean_s: f64,
+    combine_blocks: u64,
+    combine_offloaded: u64,
+    combine_fallbacks: u64,
+    chunks_inflight_max: u64,
+    nchunks: usize,
+}
+
+fn measure(ranks: usize, count: usize, iters: usize) -> Sample {
+    let u = Universe::new(1, ranks);
+    let per_rank = u.run(move |comm| {
+        let m = Communicator::world(comm);
+        let coll = m
+            .persistent_all_reduce_chunked::<f32>(count, ReduceOp::Sum)
+            .unwrap_or_else(|e| panic!("chunked allreduce init: {e}"));
+        let pipe = coll.pipeline();
+        let grad: Vec<f32> = (0..count).map(|i| (i % 97) as f32).collect();
+        let mut out = vec![0f32; count];
+        coll.write(&grad);
+        pipe.run().unwrap(); // warmup iteration
+        ferrompi::collective::barrier(comm).unwrap();
+        let start = Instant::now();
+        for _ in 0..iters {
+            coll.write(&grad);
+            pipe.start().and_then(|f| f.get()).unwrap_or_else(|e| panic!("allreduce: {e}"));
+        }
+        let mean_s = start.elapsed().as_secs_f64() / iters as f64;
+        coll.read(&mut out);
+        assert!(out[0].is_finite(), "reduction produced garbage");
+        let s = PvarSession::create(comm);
+        let read = |n| s.read(n).unwrap();
+        (
+            comm.rank(),
+            Sample {
+                mean_s,
+                combine_blocks: read("combine_blocks"),
+                combine_offloaded: read("combine_offloaded"),
+                combine_fallbacks: read("combine_fallbacks"),
+                chunks_inflight_max: read("chunks_inflight_max"),
+                nchunks: coll.num_chunks(),
+            },
+        )
+    });
+    per_rank.into_iter().find(|(r, _)| *r == 0).expect("rank 0 measured").1
+}
+
+fn main() {
+    let quick = std::env::var("FERROMPI_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let counts: Vec<usize> =
+        if quick { vec![1 << 16] } else { vec![1 << 14, 1 << 16, 1 << 20] };
+    let rank_counts: Vec<usize> = if quick { vec![2] } else { vec![2, 4] };
+    let engines: Vec<CombineEngine> = if quick {
+        vec![CombineEngine::Auto, CombineEngine::Scalar]
+    } else {
+        vec![
+            CombineEngine::Auto,
+            CombineEngine::Scalar,
+            CombineEngine::Native,
+            CombineEngine::Offload,
+        ]
+    };
+    let iters = if quick { 3 } else { 10 };
+
+    println!("A6 — gradient exchange: chunked vs unchunked allreduce per combine engine\n");
+    let mut rows: Vec<GradientRow> = Vec::new();
+    for &count in &counts {
+        let payload = count * 4;
+        for &ranks in &rank_counts {
+            for &engine in &engines {
+                config::set_combine_engine(engine);
+
+                // Baseline: chunking suppressed for any realistic payload.
+                config::set_chunk_threshold(1 << 62);
+                let base = measure(ranks, count, iters);
+                // Chunked: back to the env/default threshold.
+                config::set_chunk_threshold(0);
+                let chunked = measure(ranks, count, iters);
+
+                let efficiency = base.mean_s / chunked.mean_s;
+                println!(
+                    "  {:>9} B × {ranks} ranks, {:<7}: unchunked {:>9.1} us, chunked {:>9.1} us \
+                     ({} chunk(s), overlap {:.2}x)",
+                    payload,
+                    engine.label(),
+                    base.mean_s * 1e6,
+                    chunked.mean_s * 1e6,
+                    chunked.nchunks,
+                    efficiency,
+                );
+                rows.push(GradientRow {
+                    payload_bytes: payload,
+                    ranks,
+                    engine: engine.label(),
+                    chunked: false,
+                    bytes_per_s: payload as f64 / base.mean_s,
+                    overlap_efficiency: 1.0,
+                    combine_blocks: base.combine_blocks,
+                    combine_offloaded: base.combine_offloaded,
+                    combine_fallbacks: base.combine_fallbacks,
+                    chunks_inflight_max: base.chunks_inflight_max,
+                });
+                rows.push(GradientRow {
+                    payload_bytes: payload,
+                    ranks,
+                    engine: engine.label(),
+                    chunked: chunked.nchunks > 1,
+                    bytes_per_s: payload as f64 / chunked.mean_s,
+                    overlap_efficiency: efficiency,
+                    combine_blocks: chunked.combine_blocks,
+                    combine_offloaded: chunked.combine_offloaded,
+                    combine_fallbacks: chunked.combine_fallbacks,
+                    chunks_inflight_max: chunked.chunks_inflight_max,
+                });
+            }
+        }
+    }
+    // Leave the process-global knobs the way we found them.
+    config::set_combine_engine(CombineEngine::Auto);
+    config::set_chunk_threshold(0);
+
+    // Repo root = parent of the rust/ crate (CWD under `cargo bench` is
+    // wherever cargo was invoked, so anchor on the manifest instead).
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate has a parent dir")
+        .to_path_buf();
+    let path = root.join("BENCH_gradient_exchange.json");
+    write_gradient_json(&rows, &path).expect("write gradient JSON");
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,276 @@
+//! The combine engine: how `Step::Reduce` folds one buffer into another.
+//!
+//! Three implementations sit behind one dispatch point ([`apply`]),
+//! selected by the `FERROMPI_COMBINE` knob / `coll_combine_engine` cvar
+//! (see [`config::CombineEngine`](super::config::CombineEngine)):
+//!
+//! * **scalar** — [`Op::apply`]'s per-element `combine_prim` dispatch;
+//!   always correct, the ablation baseline.
+//! * **native** — the block-wise vectorizable combiner
+//!   ([`crate::op::combine_block_native`]) for predefined commutative
+//!   ops on contiguous uniform f32/f64/i32/i64 payloads. Arithmetic is
+//!   exactly the scalar path's, so results are byte-identical.
+//! * **offload** — dispatch BLOCK-sized (4096-element) payloads to the
+//!   AOT-lowered Pallas combine kernels through the PJRT engine
+//!   ([`crate::runtime`]). f32 sum/prod/max/min only — everything else,
+//!   and any engine error, falls back to **native** (counted by the
+//!   `combine_fallbacks` pvar). The engine identity-pads the tail block
+//!   on the rust side, so non-multiples of 4096 are fine.
+//!
+//! `auto` (the default) means *native where eligible, scalar otherwise*
+//! — offload is opt-in because crossing into PJRT only pays off when a
+//! real accelerator backs it.
+//!
+//! Every eligibility gate here preserves exactness: user ops (whose
+//! semantics we cannot see), MINLOC/MAXLOC pair types, logical/bitwise
+//! ops, non-uniform typemaps and short buffers all take the scalar path
+//! unchanged. The pvars `combine_blocks` / `combine_offloaded` /
+//! `combine_fallbacks` on [`FabricStats`] make the dispatch observable.
+
+use super::config::{self, CombineEngine};
+use crate::datatype::{Primitive, TypeMap};
+use crate::op::{combine_block_native, Op};
+use crate::runtime;
+use crate::transport::FabricStats;
+use crate::Result;
+use std::sync::atomic::Ordering;
+
+/// Elements per offload block — re-exported from the runtime so the
+/// collective layer has one name for it.
+pub use crate::runtime::BLOCK;
+
+/// The primitive shared by every entry of `map`, if the map is uniform
+/// and in the block-wise fast set (f32/f64/i32/i64). `None` sends the
+/// caller to the scalar path.
+fn uniform_prim(map: &TypeMap) -> Option<Primitive> {
+    let ents = map.entries();
+    let (p0, _) = *ents.first()?;
+    if !matches!(p0, Primitive::F32 | Primitive::F64 | Primitive::I32 | Primitive::I64) {
+        return None;
+    }
+    if ents.iter().any(|&(p, _)| p != p0) {
+        return None;
+    }
+    Some(p0)
+}
+
+/// Whether `(op, map)` is in the chunkable fast set: a predefined
+/// block-wise (hence commutative) op over a contiguous uniform
+/// f32/f64/i32/i64 layout. This is the eligibility gate for the chunked
+/// reduction pipeline ([`super::tuned::resolve_allreduce_chunking`]):
+/// user ops and exotic layouts always take the unchunked, order-exact
+/// path.
+pub(crate) fn chunk_eligible(op: &Op, map: &TypeMap) -> bool {
+    matches!(op, Op::Predefined(k) if k.is_blockwise())
+        && map.is_contiguous()
+        && uniform_prim(map).is_some()
+}
+
+/// Offload one packed f32 payload (`n` values) through the PJRT combine
+/// kernels. `inout` is only written on success, so the caller can fall
+/// back to the native combiner on error without a partial fold.
+fn offload_f32(op: &'static str, input: &[u8], inout: &mut [u8], n: usize) -> Result<()> {
+    let mut xs = vec![0f32; n];
+    let mut ys = vec![0f32; n];
+    for (i, c) in input[..n * 4].chunks_exact(4).enumerate() {
+        xs[i] = f32::from_le_bytes(c.try_into().unwrap());
+    }
+    for (i, c) in inout[..n * 4].chunks_exact(4).enumerate() {
+        ys[i] = f32::from_le_bytes(c.try_into().unwrap());
+    }
+    runtime::engine()?.combine_f32(op, &xs, &mut ys)?;
+    for (i, v) in ys.iter().enumerate() {
+        inout[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+    Ok(())
+}
+
+/// `inout[i] = input[i] OP inout[i]` over `count` packed elements of
+/// `map`, through the configured combine engine. Semantically identical
+/// to [`Op::apply`] for every input; the engines only change *how* the
+/// fold is computed, never what it computes.
+pub fn apply(
+    stats: &FabricStats,
+    op: &Op,
+    map: &TypeMap,
+    input: &[u8],
+    inout: &mut [u8],
+    count: usize,
+) -> Result<()> {
+    let sel = config::combine_engine();
+    if sel == CombineEngine::Scalar {
+        return op.apply(map, input, inout, count);
+    }
+    // Only predefined block-wise ops on uniform fast-set primitives are
+    // eligible; everything else is the scalar path's business.
+    let kind = match op {
+        Op::Predefined(k) if k.is_blockwise() => *k,
+        _ => return op.apply(map, input, inout, count),
+    };
+    let prim = match uniform_prim(map) {
+        Some(p) => p,
+        None => return op.apply(map, input, inout, count),
+    };
+    let need = map.size() * count;
+    if input.len() < need || inout.len() < need {
+        // Delegate so the error message (and its code) stay the scalar
+        // path's.
+        return op.apply(map, input, inout, count);
+    }
+    let n = count * map.entries().len();
+    let nblocks = n.div_ceil(BLOCK) as u64;
+
+    if sel == CombineEngine::Offload {
+        if prim == Primitive::F32 && runtime::artifacts_available() {
+            match offload_f32(kind.name(), input, inout, n) {
+                Ok(()) => {
+                    stats.combine_blocks.fetch_add(nblocks, Ordering::Relaxed);
+                    stats.combine_offloaded.fetch_add(nblocks, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(_) => {
+                    // Engine refused (client init, compile, execute):
+                    // inout is untouched — fold natively instead.
+                    stats.combine_fallbacks.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        } else {
+            stats.combine_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    // Native block-wise combiner (auto, native, and the offload
+    // fallback all land here).
+    if combine_block_native(kind, prim, input, inout, n) {
+        stats.combine_blocks.fetch_add(nblocks, Ordering::Relaxed);
+        Ok(())
+    } else {
+        op.apply(map, input, inout, count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn le<T: Copy>(v: &[T]) -> Vec<u8> {
+        unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)).to_vec()
+        }
+    }
+
+    fn stats() -> FabricStats {
+        FabricStats::default()
+    }
+
+    #[test]
+    fn uniform_prim_gates_correctly() {
+        assert_eq!(uniform_prim(&TypeMap::primitive(Primitive::F32)), Some(Primitive::F32));
+        assert_eq!(uniform_prim(&TypeMap::primitive(Primitive::I64)), Some(Primitive::I64));
+        // Contiguous multiples of a fast primitive stay uniform.
+        let c = TypeMap::contiguous(3, &TypeMap::primitive(Primitive::F64));
+        assert_eq!(uniform_prim(&c), Some(Primitive::F64));
+        // Outside the fast set.
+        assert_eq!(uniform_prim(&TypeMap::primitive(Primitive::U16)), None);
+        // Mixed pair types (value, i32) are not uniform unless the value
+        // is i32 too.
+        assert_eq!(uniform_prim(&crate::op::pair_type(Primitive::F32)), None);
+    }
+
+    #[test]
+    fn chunk_eligibility_gates() {
+        let f32m = TypeMap::primitive(Primitive::F32);
+        assert!(chunk_eligible(&Op::SUM, &f32m));
+        assert!(chunk_eligible(&Op::MIN, &TypeMap::primitive(Primitive::I64)));
+        // Logical/bitwise, pair and user ops are never chunked.
+        assert!(!chunk_eligible(&Op::BAND, &f32m));
+        assert!(!chunk_eligible(&Op::MAXLOC, &crate::op::pair_type(Primitive::F32)));
+        let f: crate::op::UserFn = std::sync::Arc::new(|_, _, _, _| Ok(()));
+        assert!(!chunk_eligible(&Op::user(f, true, "u"), &f32m));
+        // Non-fast primitives and non-contiguous layouts stay unchunked.
+        assert!(!chunk_eligible(&Op::SUM, &TypeMap::primitive(Primitive::U16)));
+        let strided = TypeMap::vector(2, 1, 4, &TypeMap::primitive(Primitive::F32));
+        assert!(!chunk_eligible(&Op::SUM, &strided));
+    }
+
+    #[test]
+    fn engines_match_scalar_bytes() {
+        let s = stats();
+        let map = TypeMap::primitive(Primitive::F32);
+        let n = 1000;
+        let xs: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 100.0).collect();
+        let ys: Vec<f32> = (0..n).map(|i| (n - i) as f32 * 0.5).collect();
+        for op in [Op::SUM, Op::PROD, Op::MAX, Op::MIN] {
+            let mut scalar = le(&ys);
+            op.apply(&map, &le(&xs), &mut scalar, n).unwrap();
+            let mut fast = le(&ys);
+            apply(&s, &op, &map, &le(&xs), &mut fast, n).unwrap();
+            assert_eq!(scalar, fast, "{op:?} diverged from the scalar fold");
+        }
+        assert!(s.combine_blocks.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn ineligible_shapes_fall_back_to_scalar() {
+        let s = stats();
+        // Logical op: not block-wise, must still be correct.
+        let map = TypeMap::primitive(Primitive::I32);
+        let xs = le(&[1i32, 0, 5]);
+        let mut ys = le(&[1i32, 1, 0]);
+        apply(&s, &Op::LAND, &map, &xs, &mut ys, 3).unwrap();
+        let got: Vec<i32> =
+            ys.chunks(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(got, vec![1, 0, 0]);
+        assert_eq!(s.combine_blocks.load(Ordering::Relaxed), 0);
+        // Replace is rejected with the scalar path's reduction error
+        // class untouched — it never reaches a block engine.
+        assert!(Op::REPLACE.require_reduction().is_err());
+    }
+
+    #[test]
+    fn short_buffers_error_like_scalar() {
+        let s = stats();
+        let map = TypeMap::primitive(Primitive::F64);
+        let xs = le(&[1f64]);
+        let mut ys = le(&[2f64]);
+        let e = apply(&s, &Op::SUM, &map, &xs, &mut ys, 2).unwrap_err();
+        let e2 = Op::SUM.apply(&map, &xs, &mut ys, 2).unwrap_err();
+        assert_eq!(e.class, e2.class);
+    }
+
+    #[test]
+    fn block_counting_rounds_up() {
+        let s = stats();
+        let map = TypeMap::primitive(Primitive::I64);
+        let n = BLOCK + 1; // two blocks' worth
+        let xs: Vec<i64> = (0..n as i64).collect();
+        let mut ys = le(&vec![1i64; n]);
+        apply(&s, &Op::SUM, &map, &le(&xs), &mut ys, n).unwrap();
+        assert_eq!(s.combine_blocks.load(Ordering::Relaxed), 2);
+        let got0 = i64::from_le_bytes(ys[0..8].try_into().unwrap());
+        assert_eq!(got0, 1);
+    }
+
+    #[test]
+    fn offload_without_artifacts_counts_a_fallback() {
+        if runtime::artifacts_available() {
+            return; // this test is about the artifact-less path
+        }
+        let s = stats();
+        let map = TypeMap::primitive(Primitive::F32);
+        let xs = le(&[1f32, 2.0]);
+        let mut ys = le(&[10f32, 20.0]);
+        // Serializes with every other test that writes the combine knobs.
+        let g = crate::sim::chaos::CVAR_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        config::set_combine_engine(CombineEngine::Offload);
+        let r = apply(&s, &Op::SUM, &map, &xs, &mut ys, 2);
+        config::set_combine_engine(CombineEngine::Auto);
+        drop(g);
+        r.unwrap();
+        assert_eq!(s.combine_fallbacks.load(Ordering::Relaxed), 1);
+        assert_eq!(s.combine_offloaded.load(Ordering::Relaxed), 0);
+        let got: Vec<f32> =
+            ys.chunks(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(got, vec![11.0, 22.0]);
+    }
+}

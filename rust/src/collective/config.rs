@@ -91,6 +91,23 @@ pub enum AlltoallvAlg {
     Spread,
 }
 
+/// Combine engine for predefined reductions (cvar `coll_combine_engine`,
+/// env `FERROMPI_COMBINE`): how `Step::Reduce` combines payloads — see
+/// [`combine`](super::combine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CombineEngine {
+    /// Native block-wise combine where eligible, scalar otherwise.
+    Auto,
+    /// The original per-element `Op::apply` loop (the ablation baseline).
+    Scalar,
+    /// Block-wise vectorizable Rust loops for the arithmetic ops on
+    /// contiguous f32/f64/i32/i64.
+    Native,
+    /// AOT-Pallas-via-PJRT combine for f32 arithmetic ops (falls back to
+    /// `Native` when the artifacts are absent).
+    Offload,
+}
+
 const UNSET: u8 = u8::MAX;
 const NO_ENV: u8 = u8::MAX - 1;
 
@@ -212,6 +229,58 @@ knob!(AlltoallvAlg, "alltoallv", ALLTOALLV, alltoallv_alg, set_alltoallv_alg, pa
     "FERROMPI_COLL_ALLTOALLV",
     [("auto", Auto), ("pairwise", Pairwise), ("spread", Spread)]);
 
+knob!(CombineEngine, "combine", COMBINE, combine_engine, set_combine_engine, parse_combine_engine,
+    "FERROMPI_COMBINE",
+    [("auto", Auto), ("scalar", Scalar), ("native", Native), ("offload", Offload)]);
+
+// ---------------- chunking threshold ----------------
+
+use std::sync::atomic::AtomicU64;
+use std::sync::OnceLock;
+
+/// Default chunked-reduction threshold in bytes: payloads at or above it
+/// are split into combine-block-aligned chunks whose schedules run
+/// concurrently (combine of chunk *i* overlaps transfers of chunk *i+1*).
+pub const DEFAULT_CHUNK_THRESHOLD: usize = 128 * 1024;
+
+/// Cvar override (`coll_chunk_threshold`); 0 = unset (defer to env).
+static CHUNK_OVERRIDE: AtomicU64 = AtomicU64::new(0);
+/// `FERROMPI_COMBINE_CHUNK`, read once per process like every other knob.
+static CHUNK_ENV: OnceLock<Option<String>> = OnceLock::new();
+
+/// Positive-integer env/cvar value; zero and malformed spellings fall
+/// through to the next precedence level.
+fn parse_positive(s: &str) -> Option<usize> {
+    s.trim().parse::<usize>().ok().filter(|&v| v > 0)
+}
+
+/// Pure precedence resolver (unit-testable without touching the process
+/// environment): a written cvar wins, then a positive env override, then
+/// the default.
+fn resolve_chunk_threshold(cvar: u64, env: Option<&str>, default: usize) -> usize {
+    if cvar > 0 {
+        return cvar as usize;
+    }
+    env.and_then(parse_positive).unwrap_or(default)
+}
+
+/// Effective chunking threshold in bytes (cvar `coll_chunk_threshold` >
+/// env `FERROMPI_COMBINE_CHUNK` > [`DEFAULT_CHUNK_THRESHOLD`]).
+pub fn chunk_threshold() -> usize {
+    let env = CHUNK_ENV.get_or_init(|| std::env::var("FERROMPI_COMBINE_CHUNK").ok());
+    resolve_chunk_threshold(
+        CHUNK_OVERRIDE.load(Ordering::Relaxed),
+        env.as_deref(),
+        DEFAULT_CHUNK_THRESHOLD,
+    )
+}
+
+/// Programmatic threshold write (what a `coll_chunk_threshold` cvar write
+/// lands on); 0 restores the env/default precedence.
+pub fn set_chunk_threshold(bytes: u64) {
+    CHUNK_OVERRIDE.store(bytes, Ordering::Relaxed);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,6 +330,38 @@ mod tests {
         for (name, v) in AllreduceAlg::VALUES {
             assert_eq!(parse_allreduce_alg(name).unwrap(), *v);
         }
+    }
+
+    #[test]
+    fn combine_engine_knob_roundtrips() {
+        assert_eq!(parse_combine_engine("scalar").unwrap(), CombineEngine::Scalar);
+        assert_eq!(parse_combine_engine("native").unwrap(), CombineEngine::Native);
+        assert_eq!(parse_combine_engine("offload").unwrap(), CombineEngine::Offload);
+        let msg = format!("{}", parse_combine_engine("gpu").unwrap_err());
+        for valid in ["auto", "scalar", "native", "offload"] {
+            assert!(msg.contains(valid), "missing '{valid}' in: {msg}");
+        }
+        for (name, v) in CombineEngine::VALUES {
+            assert_eq!(v.label(), *name);
+        }
+        // The set/get round-trip mutates the process-global knob:
+        // serialize against the other combine-knob tests.
+        let _g = crate::sim::chaos::CVAR_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_combine_engine(CombineEngine::Native);
+        assert_eq!(combine_engine(), CombineEngine::Native);
+        set_combine_engine(CombineEngine::Auto);
+        assert_eq!(combine_engine(), CombineEngine::Auto);
+    }
+
+    #[test]
+    fn chunk_threshold_precedence() {
+        // cvar > env > default; malformed / zero values fall through.
+        assert_eq!(resolve_chunk_threshold(4096, Some("8192"), 131072), 4096);
+        assert_eq!(resolve_chunk_threshold(0, Some("8192"), 131072), 8192);
+        assert_eq!(resolve_chunk_threshold(0, Some(" 512 "), 131072), 512);
+        assert_eq!(resolve_chunk_threshold(0, Some("0"), 131072), 131072);
+        assert_eq!(resolve_chunk_threshold(0, Some("wat"), 131072), 131072);
+        assert_eq!(resolve_chunk_threshold(0, None, 131072), 131072);
     }
 
     #[test]

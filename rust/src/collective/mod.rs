@@ -15,6 +15,7 @@
 //! init time; [`PersistentColl::algorithm`] reports it.
 
 pub mod builders;
+pub mod combine;
 pub mod config;
 pub mod persistent;
 pub mod schedule;
@@ -29,7 +30,10 @@ use crate::op::Op;
 use crate::request::Request;
 use crate::Result;
 use schedule::{run_blocking, run_nonblocking, CollState, Schedule};
+use std::collections::VecDeque;
 use std::rc::Rc;
+use std::sync::atomic::Ordering;
+use tuned::ChunkPlan;
 
 fn state(
     comm: &Comm,
@@ -61,6 +65,92 @@ fn uniform(comm: &Comm, count: usize, dtype: &Datatype) -> (Vec<usize>, Vec<usiz
     let p = comm.size();
     let stride = count * dtype.extent() as usize;
     ((0..p).map(|_| count).collect(), (0..p).map(|i| i * stride).collect())
+}
+
+// ---------------- chunked reduction pipeline ----------------
+
+/// Max concurrently in-flight chunk schedules in the blocking chunked
+/// pipeline. Bounds arena memory to `CHUNK_WINDOW` chunk-sized schedules
+/// while still letting chunk `c`'s combine overlap chunk `c+1`'s
+/// transfer.
+const CHUNK_WINDOW: usize = 4;
+
+/// Drive `nchunks` per-chunk schedules through a bounded in-flight
+/// window. Every rank issues chunks in ascending order, so the per-chunk
+/// collective sequence numbers (and hence tag spaces) line up across the
+/// job; waiting drives the whole engine, so a blocked oldest chunk still
+/// progresses the younger ones — that concurrency *is* the overlap.
+fn run_chunked<F>(comm: &Comm, nchunks: usize, mut issue: F) -> Result<()>
+where
+    F: FnMut(usize) -> Result<Request>,
+{
+    let stats = &comm.rank_ctx().fabric.stats;
+    let mut inflight: VecDeque<Request> = VecDeque::new();
+    for c in 0..nchunks {
+        inflight.push_back(issue(c)?);
+        stats.chunks_inflight_max.fetch_max(inflight.len() as u64, Ordering::Relaxed);
+        if inflight.len() >= CHUNK_WINDOW {
+            inflight.pop_front().unwrap().wait()?;
+        }
+    }
+    for r in inflight {
+        r.wait()?;
+    }
+    Ok(())
+}
+
+/// The chunked allreduce body: split the element range into the plan's
+/// chunks and run each as an independent pinned-algorithm allreduce over
+/// disjoint buffer slices. Eligibility (contiguous uniform layout,
+/// predefined commutative op, chunk-invariant algorithm) was already
+/// established by [`tuned::resolve_allreduce_chunking`], which is what
+/// makes this byte-identical to the unchunked fold.
+fn allreduce_chunked(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+    alg: AllreduceAlg,
+    plan: ChunkPlan,
+) -> Result<()> {
+    let esz = dtype.size();
+    run_chunked(comm, plan.nchunks, |c| {
+        // Re-checked per chunk: every chunk is a full reduction schedule
+        // of its own, so the RMA-only-op rejection fires for each.
+        op.require_reduction()?;
+        let base = c * plan.chunk_elems;
+        let n = plan.chunk_elems.min(count - base);
+        let sch = sbuf.map(|s| &s[base * esz..(base + n) * esz]);
+        let rch = &mut rbuf[base * esz..(base + n) * esz];
+        let sched = builders::allreduce(comm, sch, rch, n, dtype, op, alg);
+        Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "allreduce", alg.label())))
+    })
+}
+
+/// The chunked rooted-reduce body (see [`allreduce_chunked`]).
+fn reduce_chunked(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    mut rbuf: Option<&mut [u8]>,
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+    root: usize,
+    alg: ReduceAlg,
+    plan: ChunkPlan,
+) -> Result<()> {
+    let esz = dtype.size();
+    run_chunked(comm, plan.nchunks, |c| {
+        op.require_reduction()?;
+        let base = c * plan.chunk_elems;
+        let n = plan.chunk_elems.min(count - base);
+        let sch = sbuf.map(|s| &s[base * esz..(base + n) * esz]);
+        let rch = rbuf.as_deref_mut().map(|r| &mut r[base * esz..(base + n) * esz]);
+        let sched = builders::reduce(comm, sch, rch, n, dtype, op, root, alg)?;
+        Ok(run_nonblocking(state(comm, dtype, Some(op.clone()), sched, "reduce", alg.label())))
+    })
 }
 
 // ---------------- barrier ----------------
@@ -128,6 +218,9 @@ pub fn reduce(
 ) -> Result<()> {
     dtype.require_committed()?;
     op.require_reduction()?;
+    if let Some((alg, plan)) = tuned::resolve_reduce_chunking(comm, count, dtype, op) {
+        return reduce_chunked(comm, sbuf, rbuf, count, dtype, op, root, alg, plan);
+    }
     let bytes = dtype.size() * count;
     let alg = tuned::resolve_reduce(comm, bytes, op.is_commutative(), config::reduce_alg());
     let sched = builders::reduce(comm, sbuf, rbuf, count, dtype, op, root, alg)?;
@@ -163,6 +256,9 @@ pub fn allreduce(
 ) -> Result<()> {
     dtype.require_committed()?;
     op.require_reduction()?;
+    if let Some((alg, plan)) = tuned::resolve_allreduce_chunking(comm, count, dtype, op) {
+        return allreduce_chunked(comm, sbuf, rbuf, count, dtype, op, alg, plan);
+    }
     let bytes = dtype.size() * count;
     let alg = tuned::resolve_allreduce(comm, bytes, op.is_commutative(), config::allreduce_alg());
     let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
@@ -202,6 +298,26 @@ pub fn allreduce_init(
     op.require_reduction()?;
     let bytes = dtype.size() * count;
     let alg = tuned::resolve_allreduce(comm, bytes, op.is_commutative(), config::allreduce_alg());
+    let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
+    Ok(PersistentColl::new(state(comm, dtype, Some(op.clone()), sched, "allreduce", alg.label())))
+}
+
+/// [`allreduce_init`] with an explicitly pinned algorithm — the chunked
+/// persistent pipeline ([`crate::modern::ChunkedAllReduce`]) builds its
+/// per-chunk templates with this so every chunk folds through the same
+/// chunk-invariant schedule, keeping the chunked result byte-identical
+/// to the unchunked one.
+pub fn allreduce_init_with(
+    comm: &Comm,
+    sbuf: Option<&[u8]>,
+    rbuf: &mut [u8],
+    count: usize,
+    dtype: &Datatype,
+    op: &Op,
+    alg: AllreduceAlg,
+) -> Result<PersistentColl> {
+    dtype.require_committed()?;
+    op.require_reduction()?;
     let sched = builders::allreduce(comm, sbuf, rbuf, count, dtype, op, alg);
     Ok(PersistentColl::new(state(comm, dtype, Some(op.clone()), sched, "allreduce", alg.label())))
 }

@@ -352,7 +352,7 @@ impl CollState {
                 let mut arena = self.arena.borrow_mut();
                 // Split-borrow the two ranges.
                 let (a, b) = split_ranges(&mut arena, *from, *into)?;
-                op.apply(self.dtype.map(), a, b, *count)?;
+                super::combine::apply(&self.ctx.fabric.stats, op, self.dtype.map(), a, b, *count)?;
             }
             Step::PackUser { src, count, dtype, to } => {
                 // Pack straight into the arena (perf pass: saves an

@@ -232,6 +232,128 @@ pub fn decide_alltoallv(p: usize, block_bytes: usize, m: &NetworkModel) -> Allto
     }
 }
 
+// ---------------- chunked-reduction planning ----------------
+
+/// Modeled combine throughput used to cost the chunked pipeline,
+/// ns per payload byte. The fabric's α–β model prices transfers but not
+/// compute; this constant stands in for the combine kernels' block rate
+/// so the chunking decision has both sides of the overlap to compare.
+pub const COMBINE_NS_PER_BYTE: f64 = 0.5;
+
+/// How a large reduction payload is split for the chunked,
+/// compute-overlapped pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPlan {
+    /// Elements per chunk — always a multiple of the combine kernels'
+    /// [`BLOCK`](super::combine::BLOCK) (4096), so only the final tail
+    /// chunk can be partial.
+    pub chunk_elems: usize,
+    /// Total chunks (≥ 2 — a one-chunk plan is just the unchunked path).
+    pub nchunks: usize,
+}
+
+/// Pure chunk sizing: target about a quarter of the payload per chunk so
+/// the pipeline is at least 4 deep, clamped to [1, 8] combine blocks and
+/// rounded to a whole block. Returns `None` when the payload doesn't
+/// yield at least two chunks.
+pub fn plan_chunks(count: usize) -> Option<ChunkPlan> {
+    const BLOCK: usize = super::combine::BLOCK;
+    let target = (count / 4).clamp(BLOCK, 8 * BLOCK);
+    let chunk_elems = (target / BLOCK).max(1) * BLOCK;
+    let nchunks = count.div_ceil(chunk_elems);
+    if nchunks < 2 {
+        return None;
+    }
+    Some(ChunkPlan { chunk_elems, nchunks })
+}
+
+/// The α side of the chunking trade: splitting an `r`-round schedule
+/// into chunks multiplies the per-message latency by the chunk count, so
+/// chunking only pays when the combine work hidden per chunk exceeds the
+/// extra latency per chunk. Pure so the boundary is unit-testable.
+pub fn chunking_pays(chunk_bytes: usize, rounds: usize, single_node: bool, m: &NetworkModel) -> bool {
+    COMBINE_NS_PER_BYTE * chunk_bytes as f64 > rounds as f64 * m.protocol_cost_ns(0, single_node)
+}
+
+/// Decide whether (and how) to run an allreduce through the chunked
+/// pipeline. `None` = take the ordinary unchunked path. Gates, in order:
+///
+/// * the op/layout must be in the chunkable fast set
+///   ([`combine::chunk_eligible`](super::combine) — predefined
+///   commutative sum/prod/max/min over contiguous uniform
+///   f32/f64/i32/i64); user and non-commutative ops always take the
+///   unchunked order-exact path, extending [`resolve_allreduce`]'s
+///   forcing;
+/// * the payload must reach the `FERROMPI_COMBINE_CHUNK` threshold and
+///   split into ≥ 2 chunks;
+/// * the algorithm knob must resolve to a *chunk-invariant* schedule:
+///   recursive doubling (pinned for `auto`) or reduce+bcast pair ranks
+///   by topology alone, so folding per chunk is byte-identical to the
+///   whole-payload fold. Ring reduce-scatters at `count/p` boundaries
+///   and hierarchical folds depend on leader buffering — forcing either
+///   knob disables chunking rather than change answers;
+/// * the α–β model must say the hidden combine time beats the added
+///   per-chunk latency ([`chunking_pays`]).
+pub fn resolve_allreduce_chunking(
+    comm: &Comm,
+    count: usize,
+    dtype: &Datatype,
+    op: &crate::op::Op,
+) -> Option<(AllreduceAlg, ChunkPlan)> {
+    let t = comm_topo(comm);
+    if t.p < 2 || !super::combine::chunk_eligible(op, dtype.map()) {
+        return None;
+    }
+    let bytes = dtype.size() * count;
+    if bytes < super::config::chunk_threshold() {
+        return None;
+    }
+    let alg = match super::config::allreduce_alg() {
+        AllreduceAlg::Auto | AllreduceAlg::RecursiveDoubling => AllreduceAlg::RecursiveDoubling,
+        AllreduceAlg::ReduceBcast => AllreduceAlg::ReduceBcast,
+        AllreduceAlg::Ring | AllreduceAlg::Hier => return None,
+    };
+    let plan = plan_chunks(count)?;
+    let rounds = ceil_log2(t.p.max(2));
+    let chunk_bytes = plan.chunk_elems * dtype.size();
+    if !chunking_pays(chunk_bytes, rounds, t.nodes == 1, &model(comm)) {
+        return None;
+    }
+    Some((alg, plan))
+}
+
+/// [`resolve_allreduce_chunking`]'s rooted-reduce sibling. The
+/// chunk-invariant schedules here are binomial (pinned for `auto`) and
+/// the ordered linear fold — both pair ranks by topology alone;
+/// hierarchical is excluded as above.
+pub fn resolve_reduce_chunking(
+    comm: &Comm,
+    count: usize,
+    dtype: &Datatype,
+    op: &crate::op::Op,
+) -> Option<(ReduceAlg, ChunkPlan)> {
+    let t = comm_topo(comm);
+    if t.p < 2 || !super::combine::chunk_eligible(op, dtype.map()) {
+        return None;
+    }
+    let bytes = dtype.size() * count;
+    if bytes < super::config::chunk_threshold() {
+        return None;
+    }
+    let alg = match super::config::reduce_alg() {
+        ReduceAlg::Auto | ReduceAlg::Binomial => ReduceAlg::Binomial,
+        ReduceAlg::Linear => ReduceAlg::Linear,
+        ReduceAlg::Hier => return None,
+    };
+    let plan = plan_chunks(count)?;
+    let rounds = ceil_log2(t.p.max(2));
+    let chunk_bytes = plan.chunk_elems * dtype.size();
+    if !chunking_pays(chunk_bytes, rounds, t.nodes == 1, &model(comm)) {
+        return None;
+    }
+    Some((alg, plan))
+}
+
 // ---------------- knob → concrete resolution ----------------
 
 /// Resolve the bcast knob to a concrete algorithm for a `bytes`-sized
@@ -643,6 +765,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn chunk_plans_are_block_aligned() {
+        const B: usize = crate::runtime::BLOCK;
+        // Below two chunks' worth: no plan.
+        assert_eq!(plan_chunks(B), None);
+        assert_eq!(plan_chunks(B + 1).map(|p| p.nchunks), Some(2));
+        for count in [2 * B, 3 * B + 17, 16 * B, 100 * B + 1, 1_000_000] {
+            let p = plan_chunks(count).unwrap();
+            assert_eq!(p.chunk_elems % B, 0, "chunk not block-aligned at {count}");
+            assert!(p.chunk_elems <= 8 * B);
+            assert!(p.nchunks >= 2);
+            assert_eq!(p.nchunks, count.div_ceil(p.chunk_elems));
+            // All chunks but the last are full; the tail is non-empty.
+            assert!(count > (p.nchunks - 1) * p.chunk_elems);
+        }
+    }
+
+    #[test]
+    fn chunking_pays_boundary() {
+        let m = omnipath();
+        // A whole-block f32 chunk hides far more combine time than a few
+        // rounds of latency cost.
+        let block_bytes = crate::runtime::BLOCK * 4;
+        assert!(chunking_pays(8 * block_bytes, 4, false, &m));
+        // Tiny chunks never pay.
+        assert!(!chunking_pays(64, 4, false, &m));
     }
 
     #[test]

@@ -506,6 +506,7 @@ transport backend. <program> is any binary built on ferrompi (its
 Universe::run picks the job up from the environment). Builtins:
   builtin:allreduce                     modern-API allreduce smoke
   builtin:conformance --seed S --out D  proggen digests → D/rank_R.digest
+  builtin:conformance --program chunked --out D  chunked-allreduce showcase
   builtin:pingpong --out F [--bytes a,b]  latency sweep → CSV at F
 ";
 
@@ -639,16 +640,27 @@ fn builtin_allreduce() -> Result<(), String> {
     Ok(())
 }
 
-/// Cross-backend conformance worker: run the seeded proggen program and
-/// write this process's rank digests as hex lines to `<out>/rank_R.digest`.
+/// Cross-backend conformance worker: run the seeded proggen program (or
+/// a named handcrafted one via `--program`) and write this process's
+/// rank digests as hex lines to `<out>/rank_R.digest`.
 fn builtin_conformance(args: &[String]) -> Result<(), String> {
-    let seed: u64 = flag_value(args, "--seed")
-        .ok_or("conformance needs --seed")?
-        .parse()
-        .map_err(|e| format!("--seed: {e}"))?;
     let out = PathBuf::from(flag_value(args, "--out").ok_or("conformance needs --out")?);
     let u = crate::universe::Universe::from_env(1, 2).calm();
-    let program = crate::sim::proggen::Program::generate(seed, u.nranks());
+    let program = match flag_value(args, "--program") {
+        // The chunked-allreduce showcase: soaks the chunked reduction
+        // pipeline's threshold seams across process boundaries.
+        Some("chunked") => crate::sim::proggen::Program::chunked_showcase(u.nranks()),
+        Some(other) => {
+            return Err(format!("unknown conformance program '{other}' (known: chunked)"));
+        }
+        None => {
+            let seed: u64 = flag_value(args, "--seed")
+                .ok_or("conformance needs --seed (or --program chunked)")?
+                .parse()
+                .map_err(|e| format!("--seed: {e}"))?;
+            crate::sim::proggen::Program::generate(seed, u.nranks())
+        }
+    };
     let digests = u.run(|comm| (comm.rank(), program.run_local(comm)));
     std::fs::create_dir_all(&out).map_err(|e| format!("create {}: {e}", out.display()))?;
     for (rank, digest) in digests {

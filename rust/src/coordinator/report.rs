@@ -247,6 +247,66 @@ pub fn write_transport_json(rows: &[TransportRow], path: &std::path::Path) -> st
     std::fs::write(path, transport_json(rows))
 }
 
+/// One gradient-exchange measurement (the `bench_gradient_exchange`
+/// sweep): a data-parallel allreduce of `payload_bytes` across `ranks`
+/// ranks under one combine engine, chunked or unchunked, with the
+/// combine pvars sampled after the timed window.
+#[derive(Debug, Clone)]
+pub struct GradientRow {
+    pub payload_bytes: usize,
+    pub ranks: usize,
+    /// Combine-engine knob label (`auto` | `scalar` | `native` | `offload`).
+    pub engine: &'static str,
+    /// Whether the chunked pipeline was enabled for this row.
+    pub chunked: bool,
+    /// Aggregate reduction bandwidth: payload bytes / mean iteration time.
+    pub bytes_per_s: f64,
+    /// Unchunked time / chunked time for the same shape — > 1 means the
+    /// compute/transport overlap paid for its chunking overhead.
+    pub overlap_efficiency: f64,
+    pub combine_blocks: u64,
+    pub combine_offloaded: u64,
+    pub combine_fallbacks: u64,
+    pub chunks_inflight_max: u64,
+}
+
+/// Serialize the gradient-exchange sweep as JSON (the
+/// `BENCH_gradient_exchange.json` CI artifact). Row order is preserved
+/// from the sweep, which iterates payload × ranks × engine × chunking
+/// deterministically.
+pub fn gradient_json(rows: &[GradientRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"payload_bytes\": {}, \"ranks\": {}, \"engine\": \"{}\", \
+                 \"chunked\": {}, \"bytes_per_s\": {}, \"overlap_efficiency\": {}, \
+                 \"combine_blocks\": {}, \"combine_offloaded\": {}, \
+                 \"combine_fallbacks\": {}, \"chunks_inflight_max\": {}}}",
+                r.payload_bytes,
+                r.ranks,
+                r.engine,
+                r.chunked,
+                json_num(r.bytes_per_s),
+                json_num(r.overlap_efficiency),
+                r.combine_blocks,
+                r.combine_offloaded,
+                r.combine_fallbacks,
+                r.chunks_inflight_max,
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"benchmark\": \"gradient_exchange\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    )
+}
+
+/// Write [`gradient_json`] to `path`.
+pub fn write_gradient_json(rows: &[GradientRow], path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, gradient_json(rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::mpibench::BenchOp;
@@ -318,6 +378,45 @@ mod tests {
         assert!(j.contains("\"benchmark\": \"transport_backends\""));
         assert!(j.contains("\"backend\": \"inproc\""));
         assert!(j.contains("\"one_way_s\": null"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn gradient_json_is_well_formed() {
+        let rows = vec![
+            GradientRow {
+                payload_bytes: 1 << 20,
+                ranks: 4,
+                engine: "auto",
+                chunked: true,
+                bytes_per_s: 1e9,
+                overlap_efficiency: 1.25,
+                combine_blocks: 512,
+                combine_offloaded: 0,
+                combine_fallbacks: 0,
+                chunks_inflight_max: 4,
+            },
+            GradientRow {
+                payload_bytes: 4096,
+                ranks: 2,
+                engine: "offload",
+                chunked: false,
+                bytes_per_s: f64::NAN,
+                overlap_efficiency: 1.0,
+                combine_blocks: 0,
+                combine_offloaded: 0,
+                combine_fallbacks: 1,
+                chunks_inflight_max: 0,
+            },
+        ];
+        let j = gradient_json(&rows);
+        assert!(j.contains("\"benchmark\": \"gradient_exchange\""));
+        assert!(j.contains("\"engine\": \"auto\""));
+        assert!(j.contains("\"chunked\": true"));
+        assert!(j.contains("\"overlap_efficiency\": 1.25e0"));
+        assert!(j.contains("\"bytes_per_s\": null"));
+        assert!(j.contains("\"chunks_inflight_max\": 4"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
     }

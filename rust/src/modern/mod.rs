@@ -29,8 +29,8 @@ pub use datatype::{Buffer, BufferMut, Complex, DataType};
 pub use enums::*;
 pub use future::{when_all, when_any, MpiFuture, WhenAnyResult};
 pub use pipeline::{
-    start_all, PersistentAllReduce, PersistentBarrier, PersistentBroadcast, PersistentOp,
-    PersistentRecv, PersistentSend, Pipeline, Restartable,
+    start_all, ChunkedAllReduce, PersistentAllReduce, PersistentBarrier, PersistentBroadcast,
+    PersistentOp, PersistentRecv, PersistentSend, Pipeline, Restartable,
 };
 pub use window::{FenceEpoch, LockEpoch, RmaWindow};
 

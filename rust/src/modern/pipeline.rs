@@ -577,6 +577,29 @@ impl<T: DataType + Default> PersistentAllReduce<T> {
         )?;
         Ok(PersistentAllReduce { template: Rc::new(template), input, output })
     }
+
+    /// [`init`](PersistentAllReduce::init) with an explicitly pinned
+    /// algorithm (the chunked pipeline's per-chunk templates).
+    pub(crate) fn init_with_alg(
+        comm: &Comm,
+        count: usize,
+        op: ReduceOp,
+        alg: crate::collective::AllreduceAlg,
+    ) -> Result<PersistentAllReduce<T>> {
+        let input = shared_buf::<T>(count);
+        let output = shared_buf::<T>(count);
+        let o: Op = op.into();
+        let template = collective::allreduce_init_with(
+            comm,
+            Some(bytes_of(&input)),
+            bytes_of_mut(&output),
+            count,
+            &T::datatype(),
+            &o,
+            alg,
+        )?;
+        Ok(PersistentAllReduce { template: Rc::new(template), input, output })
+    }
 }
 
 impl<T: DataType> PersistentAllReduce<T> {
@@ -619,6 +642,125 @@ impl<T: DataType> Restartable for PersistentAllReduce<T> {
 
     fn complete(&self) -> Result<Status> {
         self.template.wait()
+    }
+}
+
+/// A chunked persistent allreduce: the payload is split into
+/// block-aligned chunks, each backed by its own [`PersistentAllReduce`]
+/// template over a pinned chunk-invariant algorithm. One
+/// [`pipeline()`](ChunkedAllReduce::pipeline) `start()` is an
+/// `MPI_Startall` over every chunk, so all chunk schedules are in flight
+/// together — chunk `c`'s combine overlaps chunk `c+1`'s transfer, which
+/// is the whole point (see `docs/OFFLOAD.md`).
+///
+/// Ineligible shapes (payload under the `FERROMPI_COMBINE_CHUNK`
+/// threshold, non-chunkable op/layout, single-rank communicator)
+/// degrade to a single chunk — the ordinary unchunked template behind
+/// the same API.
+pub struct ChunkedAllReduce<T: DataType> {
+    chunks: Vec<PersistentAllReduce<T>>,
+    chunk_elems: usize,
+    count: usize,
+    fabric: std::sync::Arc<crate::transport::Fabric>,
+}
+
+impl<T: DataType> Clone for ChunkedAllReduce<T> {
+    fn clone(&self) -> Self {
+        ChunkedAllReduce {
+            chunks: self.chunks.clone(),
+            chunk_elems: self.chunk_elems,
+            count: self.count,
+            fabric: self.fabric.clone(),
+        }
+    }
+}
+
+impl<T: DataType + Default> ChunkedAllReduce<T> {
+    pub(crate) fn init(comm: &Comm, count: usize, op: ReduceOp) -> Result<ChunkedAllReduce<T>> {
+        use crate::collective::{combine, config, tuned, AllreduceAlg};
+        let fabric = comm.rank_ctx().fabric.clone();
+        let o: Op = op.into();
+        let dtype = T::datatype();
+        let eligible = comm.size() >= 2
+            && combine::chunk_eligible(&o, dtype.map())
+            && dtype.size() * count >= config::chunk_threshold()
+            && !matches!(config::allreduce_alg(), AllreduceAlg::Ring | AllreduceAlg::Hier);
+        let plan = if eligible { tuned::plan_chunks(count) } else { None };
+        let chunks = match plan {
+            Some(p) => {
+                // Pin the chunk-invariant schedule for every chunk (see
+                // `tuned::resolve_allreduce_chunking`).
+                let alg = match config::allreduce_alg() {
+                    AllreduceAlg::ReduceBcast => AllreduceAlg::ReduceBcast,
+                    _ => AllreduceAlg::RecursiveDoubling,
+                };
+                let mut v = Vec::with_capacity(p.nchunks);
+                for c in 0..p.nchunks {
+                    let n = p.chunk_elems.min(count - c * p.chunk_elems);
+                    v.push(PersistentAllReduce::init_with_alg(comm, n, op, alg)?);
+                }
+                v
+            }
+            None => vec![PersistentAllReduce::init(comm, count, op)?],
+        };
+        let chunk_elems = plan.map(|p| p.chunk_elems).unwrap_or(count);
+        Ok(ChunkedAllReduce { chunks, chunk_elems, count, fabric })
+    }
+}
+
+impl<T: DataType> ChunkedAllReduce<T> {
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Elements per full chunk (the final chunk may be shorter).
+    pub fn chunk_elems(&self) -> usize {
+        self.chunk_elems
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// The algorithm every chunk's template captured at init.
+    pub fn algorithm(&self) -> &'static str {
+        self.chunks[0].algorithm()
+    }
+
+    /// Scatter this rank's contribution across the chunk input buffers
+    /// (`src.len()` must equal [`count`](ChunkedAllReduce::count)).
+    pub fn write(&self, src: &[T]) {
+        assert_eq!(src.len(), self.count, "chunked allreduce write length mismatch");
+        for (c, chunk) in self.chunks.iter().enumerate() {
+            let base = c * self.chunk_elems;
+            let n = chunk.input_mut().len();
+            chunk.write(&src[base..base + n]);
+        }
+    }
+
+    /// Gather the reduced result out of the chunk output buffers.
+    pub fn read(&self, dst: &mut [T]) {
+        assert_eq!(dst.len(), self.count, "chunked allreduce read length mismatch");
+        for (c, chunk) in self.chunks.iter().enumerate() {
+            let base = c * self.chunk_elems;
+            let out = chunk.output();
+            dst[base..base + out.len()].copy_from_slice(&out);
+        }
+    }
+
+    /// The joined pipeline: one `start()` fires every chunk template
+    /// (`MPI_Startall`), completion drives them all. Records the chunk
+    /// depth in the `chunks_inflight_max` pvar.
+    pub fn pipeline(&self) -> Pipeline<()> {
+        let fabric = self.fabric.clone();
+        let depth = self.chunks.len() as u64;
+        Pipeline::join(self.chunks.iter().map(|c| c.pipeline()).collect()).on_start(move || {
+            fabric
+                .stats
+                .chunks_inflight_max
+                .fetch_max(depth, std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        })
     }
 }
 
@@ -705,6 +847,19 @@ impl Communicator {
         op: ReduceOp,
     ) -> Result<PersistentAllReduce<T>> {
         PersistentAllReduce::init(self.native(), count, op)
+    }
+
+    /// The chunked, compute-overlapped variant of
+    /// [`persistent_all_reduce`](Communicator::persistent_all_reduce):
+    /// large eligible payloads split into block-aligned chunks whose
+    /// schedules run concurrently (collective; same chunking decision on
+    /// every rank).
+    pub fn persistent_all_reduce_chunked<T: DataType + Default>(
+        &self,
+        count: usize,
+        op: ReduceOp,
+    ) -> Result<ChunkedAllReduce<T>> {
+        ChunkedAllReduce::init(self.native(), count, op)
     }
 
     /// `MPI_Barrier_init` (collective).

@@ -35,6 +35,13 @@ pub enum OpKind {
 }
 
 impl OpKind {
+    /// Whether the block-wise combine engines ([`crate::collective::combine`])
+    /// implement this op: the elementwise arithmetic set, which is also
+    /// what the AOT Pallas kernels lower.
+    pub const fn is_blockwise(self) -> bool {
+        matches!(self, OpKind::Sum | OpKind::Prod | OpKind::Max | OpKind::Min)
+    }
+
     pub const fn name(self) -> &'static str {
         match self {
             OpKind::Sum => "sum",
@@ -178,6 +185,70 @@ fn combine_prim(kind: OpKind, p: Primitive, input: &[u8], inout: &mut [u8]) -> R
         }
     }
     Ok(())
+}
+
+/// Block-wise native combine: `inout[i] = input[i] OP inout[i]` over `n`
+/// contiguous elements of one primitive, with the (op, type) dispatch
+/// hoisted out of the loop. Each arm monomorphizes to a tight typed loop
+/// (`from_le_bytes`/`to_le_bytes` are free on little-endian targets), so
+/// LLVM can vectorize it — unlike [`Op::apply`]'s per-element
+/// `combine_prim` dispatch. Arithmetic is exactly the scalar path's
+/// (`wrapping_add`/`wrapping_mul` for ints, IEEE `+`/`*`/`max`/`min` for
+/// floats), so results are byte-identical.
+///
+/// Returns `false` when the (op, primitive) pair is outside the fast set
+/// — the caller falls back to the scalar path.
+pub(crate) fn combine_block_native(
+    kind: OpKind,
+    p: Primitive,
+    input: &[u8],
+    inout: &mut [u8],
+    n: usize,
+) -> bool {
+    macro_rules! tight {
+        ($t:ty, $f:expr) => {{
+            const W: usize = std::mem::size_of::<$t>();
+            let f = $f;
+            for (ib, ob) in
+                input[..n * W].chunks_exact(W).zip(inout[..n * W].chunks_exact_mut(W))
+            {
+                let x = <$t>::from_le_bytes(ib.try_into().unwrap());
+                let y = <$t>::from_le_bytes(ob.try_into().unwrap());
+                let r: $t = f(x, y);
+                ob.copy_from_slice(&r.to_le_bytes());
+            }
+        }};
+    }
+    macro_rules! float_ops {
+        ($t:ty) => {
+            match kind {
+                OpKind::Sum => tight!($t, |x: $t, y: $t| x + y),
+                OpKind::Prod => tight!($t, |x: $t, y: $t| x * y),
+                OpKind::Max => tight!($t, |x: $t, y: $t| x.max(y)),
+                OpKind::Min => tight!($t, |x: $t, y: $t| x.min(y)),
+                _ => return false,
+            }
+        };
+    }
+    macro_rules! int_ops {
+        ($t:ty) => {
+            match kind {
+                OpKind::Sum => tight!($t, |x: $t, y: $t| x.wrapping_add(y)),
+                OpKind::Prod => tight!($t, |x: $t, y: $t| x.wrapping_mul(y)),
+                OpKind::Max => tight!($t, |x: $t, y: $t| x.max(y)),
+                OpKind::Min => tight!($t, |x: $t, y: $t| x.min(y)),
+                _ => return false,
+            }
+        };
+    }
+    match p {
+        Primitive::F32 => float_ops!(f32),
+        Primitive::F64 => float_ops!(f64),
+        Primitive::I32 => int_ops!(i32),
+        Primitive::I64 => int_ops!(i64),
+        _ => return false,
+    }
+    true
 }
 
 /// MAXLOC/MINLOC over a wire pair (value, i32 index).
@@ -474,6 +545,44 @@ mod tests {
         let mut b = le(&[2i32]);
         op.apply(&t, &a, &mut b, 1).unwrap();
         assert_eq!(from_le_i32(&b), vec![103]);
+    }
+
+    #[test]
+    fn native_block_matches_scalar_for_all_fast_pairs() {
+        // The block-wise path must be byte-identical to Op::apply for
+        // every (op, primitive) pair it claims.
+        macro_rules! check {
+            ($t:ty, $p:expr, $vals_a:expr, $vals_b:expr) => {{
+                let map = TypeMap::primitive($p);
+                let a = le::<$t>($vals_a);
+                let b0 = le::<$t>($vals_b);
+                let n = $vals_a.len();
+                for kind in [OpKind::Sum, OpKind::Prod, OpKind::Max, OpKind::Min] {
+                    assert!(kind.is_blockwise());
+                    let mut scalar = b0.clone();
+                    Op::Predefined(kind).apply(&map, &a, &mut scalar, n).unwrap();
+                    let mut block = b0.clone();
+                    assert!(combine_block_native(kind, $p, &a, &mut block, n), "{kind:?}");
+                    assert_eq!(scalar, block, "{kind:?} on {:?}", $p);
+                }
+            }};
+        }
+        check!(f32, Primitive::F32, &[1.5f32, -2.0, 0.0, 3.25, f32::MAX], &[0.5f32, 4.0, -1.0, 3.25, 2.0]);
+        check!(f64, Primitive::F64, &[1e300f64, -0.5, 7.0], &[1e300f64, 0.25, -7.0]);
+        check!(i32, Primitive::I32, &[i32::MAX, -5, 0, 1], &[1i32, 5, i32::MIN, 2]);
+        check!(i64, Primitive::I64, &[i64::MAX, 3, -9], &[2i64, i64::MIN, 9]);
+    }
+
+    #[test]
+    fn native_block_declines_outside_the_fast_set() {
+        let a = le(&[1u16, 2]);
+        let mut b = le(&[3u16, 4]);
+        assert!(!combine_block_native(OpKind::Sum, Primitive::U16, &a, &mut b, 2));
+        let a = le(&[1.0f32]);
+        let mut b = le(&[2.0f32]);
+        assert!(!combine_block_native(OpKind::Band, Primitive::F32, &a, &mut b, 1));
+        assert!(!OpKind::Band.is_blockwise());
+        assert!(!OpKind::MaxLoc.is_blockwise());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! PJRT client + executable cache.
 
+use super::xla;
 use crate::op::{Op, OpKind, UserFn};
 use crate::{mpi_err, MpiError, Result};
 use std::collections::HashMap;

@@ -10,5 +10,6 @@
 //!   ([`XlaEngine::heat_step_fused`]).
 
 pub mod engine;
+pub mod xla;
 
 pub use engine::{artifacts_available, engine, xla_op, XlaEngine, BLOCK, TILE};

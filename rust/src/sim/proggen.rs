@@ -94,6 +94,12 @@ pub enum Phase {
     /// back only after a fence closed the epoch (the nondeterministic
     /// fetch-and-op *old* values are asserted for range, not digested).
     Rma { len: usize, incs: usize },
+    /// A world allreduce large enough (i64 SUM, `count` ≥ 16 Ki elements
+    /// = ≥ 128 KiB) to cross the default chunk threshold, soaking the
+    /// chunked compute/transport-overlap pipeline. i64 SUM is exact and
+    /// commutative, so the digest is schedule-independent whether or not
+    /// chunking actually engages under the current knobs.
+    ChunkedAllReduce { count: usize },
 }
 
 /// A generated SPMD program: the recipe the differential harness replays.
@@ -120,7 +126,7 @@ impl Program {
         let target = r.range(5, 10);
         let mut phases = Vec::new();
         while phases.len() < target {
-            match r.range(0, 13) {
+            match r.range(0, 14) {
                 0..=2 => phases.push(gen_immediate(&mut r, nranks, false, false)),
                 3 => phases.push(gen_immediate(&mut r, nranks, true, false)),
                 4 => {
@@ -152,7 +158,10 @@ impl Program {
                     });
                 }
                 11 => phases.push(Phase::Rma { len: r.range(1, 9), incs: r.range(1, 4) }),
-                _ => phases.push(Phase::ModernAllReduce),
+                12 => phases.push(Phase::ModernAllReduce),
+                // ≥ 16 Ki i64 elements so the payload crosses the default
+                // 128 KiB chunk threshold and the chunked path engages.
+                _ => phases.push(Phase::ChunkedAllReduce { count: r.range(16_384, 32_769) }),
             }
         }
         Program { seed, nranks, phases }
@@ -200,6 +209,32 @@ impl Program {
                 Phase::Collective { op: CollOp::Alltoall, split: false, len: 256, count: 1 },
                 Phase::Collective { op: CollOp::Scan, split: false, len: 0, count: 3 },
                 Phase::Rma { len: 4, incs: 3 },
+                Phase::ModernAllReduce,
+            ],
+        }
+    }
+
+    /// A handcrafted program centred on the chunked reduction pipeline:
+    /// large allreduces straddling the default chunk threshold (tail
+    /// exactly at a block boundary, tail mid-block, single-block short
+    /// of chunking) interleaved with ordinary traffic so chunk schedules
+    /// overlap p2p matching. Used by the cross-backend conformance
+    /// builtin — digests must agree on inproc, shm and socket.
+    pub fn chunked_showcase(nranks: usize) -> Program {
+        assert!(nranks >= 2);
+        Program {
+            seed: 0xC4_0C4,
+            nranks,
+            phases: vec![
+                Phase::Barrier,
+                // 4 full 4096-elem blocks: chunk seams only at block edges.
+                Phase::ChunkedAllReduce { count: 16_384 },
+                Phase::Ring { len: 2048 },
+                // Ragged tail: 16 Ki + 17 exercises identity padding.
+                Phase::ChunkedAllReduce { count: 16_401 },
+                Phase::Collective { op: CollOp::Allreduce, split: false, len: 0, count: 5 },
+                // One element past the threshold boundary.
+                Phase::ChunkedAllReduce { count: 16_385 },
                 Phase::ModernAllReduce,
             ],
         }
@@ -420,6 +455,36 @@ fn exec(p: &Program, comm: &Comm) -> Vec<u64> {
             }
             Phase::Rma { len, incs } => {
                 exec_rma(comm, seed, pi, *len, *incs, &mut digest);
+            }
+            Phase::ChunkedAllReduce { count } => {
+                let wr = comm.rank_ctx().world_rank as u64;
+                let vals: Vec<i64> =
+                    (0..*count).map(|k| cval(seed, &[pi as u64, k as u64, wr])).collect();
+                let sbuf = i64s_to_bytes(&vals);
+                let mut rbuf = vec![0u8; count * 8];
+                collective::allreduce(comm, Some(&sbuf), &mut rbuf, *count, &i64t, &Op::SUM)
+                    .unwrap_or_else(|e| panic!("phase {pi} chunked allreduce: {e}"));
+                let got = bytes_to_i64s(&rbuf);
+                // Exact-sum oracle at the chunk seams (block boundaries,
+                // first/last element) — full-width verification happens via
+                // the digest differential; the seams are where a chunking
+                // bug (off-by-one split, double-fold, dropped tail) lands.
+                let block = crate::collective::combine::BLOCK;
+                let mut probes = vec![0, count - 1];
+                probes.extend((1..count / block + 1).flat_map(|b| {
+                    let edge = b * block;
+                    [edge.saturating_sub(1), edge.min(count - 1)]
+                }));
+                for k in probes {
+                    let want: i64 = (0..p.nranks)
+                        .map(|r| cval(seed, &[pi as u64, k as u64, r as u64]))
+                        .sum();
+                    assert_eq!(
+                        got[k], want,
+                        "phase {pi} rank {me} elem {k}: chunked allreduce (seed {seed:#x})"
+                    );
+                }
+                digest.push(fnv1a(&rbuf));
             }
             Phase::ModernAllReduce => {
                 let m = crate::modern::Communicator::world(comm);
@@ -913,5 +978,14 @@ mod tests {
     fn tiny_differential_passes() {
         let p = Program::generate(7, 2);
         assert_differential(&p, &[1]);
+    }
+
+    #[test]
+    fn chunked_showcase_runs_clean_on_a_faithful_fabric() {
+        let p = Program::chunked_showcase(3);
+        let u = Universe::test(3).calm().audited(true);
+        let d = p.run(&u);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d, p.run(&u));
     }
 }

@@ -46,6 +46,18 @@ pub fn cvars() -> Vec<CvarInfo> {
             category: "collective",
         },
         CvarInfo {
+            name: "coll_combine_engine",
+            description: "reduction combine engine: auto | scalar | native | offload (env FERROMPI_COMBINE; a cvar write wins)",
+            writable: true,
+            category: "collective",
+        },
+        CvarInfo {
+            name: "coll_chunk_threshold",
+            description: "payload bytes at which eligible reductions switch to the chunked, compute-overlapped pipeline (env FERROMPI_COMBINE_CHUNK; a cvar write wins, 0 restores env/default)",
+            writable: true,
+            category: "collective",
+        },
+        CvarInfo {
             name: "netmodel_eager_threshold",
             description: "eager/rendezvous switch in bytes for new universes (cvar write wins over the FERROMPI_EAGER_LIMIT env override)",
             writable: true,
@@ -138,6 +150,8 @@ pub fn cvar_read(name: &str) -> Result<String> {
         "coll_reduce_algorithm" => Ok(config::reduce_alg().label().into()),
         "coll_allgatherv_algorithm" => Ok(config::allgatherv_alg().label().into()),
         "coll_alltoallv_algorithm" => Ok(config::alltoallv_alg().label().into()),
+        "coll_combine_engine" => Ok(config::combine_engine().label().into()),
+        "coll_chunk_threshold" => Ok(config::chunk_threshold().to_string()),
         "netmodel_eager_threshold" => {
             let v = EAGER_OVERRIDE.load(Ordering::Relaxed);
             let env = std::env::var("FERROMPI_EAGER_LIMIT").ok();
@@ -216,6 +230,17 @@ pub fn cvar_write(name: &str, value: &str) -> Result<()> {
         }
         "coll_alltoallv_algorithm" => {
             config::set_alltoallv_alg(config::parse_alltoallv_alg(value)?);
+            Ok(())
+        }
+        "coll_combine_engine" => {
+            config::set_combine_engine(config::parse_combine_engine(value)?);
+            Ok(())
+        }
+        "coll_chunk_threshold" => {
+            let v: u64 = value
+                .parse()
+                .map_err(|_| mpi_err!(Arg, "bad chunk threshold '{value}' (bytes; 0 restores env/default)"))?;
+            config::set_chunk_threshold(v);
             Ok(())
         }
         "netmodel_eager_threshold" => {
@@ -320,6 +345,35 @@ mod tests {
         assert!(cvar_write("coll_bcast_algorithm", "wat").is_err());
         assert!(cvar_write("deadlock_timeout_s", "1").is_err());
         assert!(cvar_read("nope").is_err());
+    }
+
+    #[test]
+    fn combine_cvar_group_roundtrips() {
+        // Serializes with every other test that writes the combine knobs.
+        let _g = crate::sim::chaos::CVAR_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(cvar_index("coll_combine_engine").is_some());
+        assert!(cvar_index("coll_chunk_threshold").is_some());
+        cvar_write("coll_combine_engine", "native").unwrap();
+        assert_eq!(cvar_read("coll_combine_engine").unwrap(), "native");
+        cvar_write("coll_combine_engine", "offload").unwrap();
+        assert_eq!(cvar_read("coll_combine_engine").unwrap(), "offload");
+        let err = format!("{}", cvar_write("coll_combine_engine", "gpu").unwrap_err());
+        for valid in ["auto", "scalar", "native", "offload"] {
+            assert!(err.contains(valid), "missing '{valid}' in: {err}");
+        }
+        cvar_write("coll_combine_engine", "auto").unwrap();
+        assert_eq!(cvar_read("coll_combine_engine").unwrap(), "auto");
+
+        cvar_write("coll_chunk_threshold", "4096").unwrap();
+        assert_eq!(cvar_read("coll_chunk_threshold").unwrap(), "4096");
+        assert!(cvar_write("coll_chunk_threshold", "wat").is_err());
+        cvar_write("coll_chunk_threshold", "0").unwrap(); // restore env/default
+        if std::env::var("FERROMPI_COMBINE_CHUNK").is_err() {
+            assert_eq!(
+                cvar_read("coll_chunk_threshold").unwrap(),
+                config::DEFAULT_CHUNK_THRESHOLD.to_string()
+            );
+        }
     }
 
     #[test]

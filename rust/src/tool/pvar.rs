@@ -43,6 +43,10 @@ pub fn pvars() -> Vec<PvarInfo> {
         PvarInfo { name: "pool_recycled", description: "wire buffers reused from the fabric's buffer pool", class: Counter, category: "transport" },
         PvarInfo { name: "pool_allocated", description: "fresh wire-buffer allocations (buffer-pool misses)", class: Counter, category: "transport" },
         PvarInfo { name: "pool_outstanding", description: "absolute take/give imbalance of the wire-buffer pool (0 at quiescence; any residue — leak or double-give — reads nonzero)", class: Level, category: "transport" },
+        PvarInfo { name: "combine_blocks", description: "combine-engine blocks processed by the block-wise reduction path (scalar fallback counts zero)", class: Counter, category: "collective" },
+        PvarInfo { name: "combine_offloaded", description: "combine blocks dispatched through the PJRT offload engine", class: Counter, category: "collective" },
+        PvarInfo { name: "combine_fallbacks", description: "offload combine requests that fell back to the native engine (artifacts absent, non-f32 payload, or engine error)", class: Counter, category: "collective" },
+        PvarInfo { name: "chunks_inflight_max", description: "most chunk schedules concurrently in flight in the chunked reduction pipeline", class: HighWatermark, category: "collective" },
         PvarInfo { name: "rma_puts", description: "one-sided puts injected (RmaPut packets)", class: Counter, category: "rma" },
         PvarInfo { name: "rma_gets", description: "one-sided get requests injected (RmaGet packets)", class: Counter, category: "rma" },
         PvarInfo { name: "rma_accs", description: "one-sided accumulates injected (RmaAcc + RmaCas packets, incl. fetch_and_op / compare_and_swap)", class: Counter, category: "rma" },
@@ -112,6 +116,10 @@ impl<'a> PvarSession<'a> {
             // Absolute imbalance: a negative balance (give without take)
             // is just as much a bug as a leak and must not read as 0.
             "pool_outstanding" => ctx.fabric.pool.stats().outstanding.unsigned_abs(),
+            "combine_blocks" => f.combine_blocks.load(Ordering::Relaxed),
+            "combine_offloaded" => f.combine_offloaded.load(Ordering::Relaxed),
+            "combine_fallbacks" => f.combine_fallbacks.load(Ordering::Relaxed),
+            "chunks_inflight_max" => f.chunks_inflight_max.load(Ordering::Relaxed),
             "rma_puts" => f.rma_puts.load(Ordering::Relaxed),
             "rma_gets" => f.rma_gets.load(Ordering::Relaxed),
             "rma_accs" => f.rma_accs.load(Ordering::Relaxed),

@@ -34,6 +34,17 @@ pub struct FabricStats {
     pub inter_node_msgs: AtomicU64,
     /// High-watermark of any mailbox depth observed at delivery.
     pub mailbox_hwm: AtomicU64,
+    /// Combine-engine blocks processed by `Step::Reduce` (native or
+    /// offload block-wise path; the scalar fallback does not count).
+    pub combine_blocks: AtomicU64,
+    /// Blocks dispatched through the PJRT offload engine.
+    pub combine_offloaded: AtomicU64,
+    /// Offload requests that fell back to the native combiner (artifacts
+    /// absent or non-f32 payload).
+    pub combine_fallbacks: AtomicU64,
+    /// High-watermark of concurrently in-flight chunk schedules in the
+    /// chunked-reduction pipeline.
+    pub chunks_inflight_max: AtomicU64,
     /// Backend-level frame/byte counters (`backend_*` pvars). Shared with
     /// the backend itself, which counts on the wire path.
     pub backend: Arc<BackendStats>,

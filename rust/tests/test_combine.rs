@@ -1,0 +1,298 @@
+//! Chunked-reduction acceptance suite: the chunked allreduce/reduce
+//! pipeline must be byte-identical to the unchunked path for every
+//! predefined blockwise op on f32/f64/i32/i64, across payloads
+//! straddling the chunk threshold, under chaos, and across transport
+//! backends (launcher-spawned shm/socket jobs vs the in-process fabric).
+//!
+//! The combine knobs (`FERROMPI_COMBINE`, `coll_chunk_threshold`) are
+//! process-global, so every test here serializes on [`KNOB_LOCK`] and
+//! restores the defaults before releasing it — including tests that only
+//! *read* the defaults, which would otherwise race a writer.
+
+use ferrompi::collective::{self, config, tuned};
+use ferrompi::collective::config::CombineEngine;
+use ferrompi::datatype::{Datatype, Primitive};
+use ferrompi::op::{Op, UserFn};
+use ferrompi::sim::chaos::ChaosConfig;
+use ferrompi::sim::proggen::Program;
+use ferrompi::tool::PvarSession;
+use ferrompi::universe::Universe;
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Mutex;
+
+static KNOB_LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the knob lock; restore knob defaults on drop so a panicking test
+/// cannot leak its overrides into the next lock holder.
+struct KnobGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl KnobGuard {
+    fn take() -> KnobGuard {
+        KnobGuard(KNOB_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for KnobGuard {
+    fn drop(&mut self) {
+        config::set_combine_engine(CombineEngine::Auto);
+        config::set_chunk_threshold(0);
+    }
+}
+
+fn esize(p: Primitive) -> usize {
+    match p {
+        Primitive::F32 | Primitive::I32 => 4,
+        Primitive::F64 | Primitive::I64 => 8,
+        _ => unreachable!("suite covers the chunk-eligible primitives"),
+    }
+}
+
+/// Deterministic per-rank operand vector: small integer-derived values
+/// so int ops stay in range mostly (wrapping is fine — both paths wrap
+/// identically) and float ops stay finite.
+fn payload(prim: Primitive, rank: usize, count: usize) -> Vec<u8> {
+    (0..count)
+        .flat_map(|i| {
+            let v = ((i * 31 + rank * 17 + 7) % 1009) as i64 - 500;
+            match prim {
+                Primitive::F32 => (v as f32 * 0.25).to_le_bytes().to_vec(),
+                Primitive::F64 => (v as f64 * 0.25).to_le_bytes().to_vec(),
+                Primitive::I32 => (v as i32).to_le_bytes().to_vec(),
+                Primitive::I64 => v.to_le_bytes().to_vec(),
+                _ => unreachable!(),
+            }
+        })
+        .collect()
+}
+
+/// Run a blocking allreduce on a fresh in-process universe and return
+/// every rank's result buffer plus the job's `chunks_inflight_max` pvar.
+fn allreduce_bytes(nranks: usize, count: usize, prim: Primitive, op: &Op) -> (Vec<Vec<u8>>, u64) {
+    let op = op.clone();
+    let u = Universe::test(nranks).calm();
+    let per_rank = u.run(move |comm| {
+        let dtype = Datatype::primitive(prim);
+        let sbuf = payload(prim, comm.rank(), count);
+        let mut rbuf = vec![0u8; count * esize(prim)];
+        collective::allreduce(comm, Some(&sbuf), &mut rbuf, count, &dtype, &op)
+            .unwrap_or_else(|e| panic!("allreduce ({prim:?}): {e}"));
+        let hwm = PvarSession::create(comm).read("chunks_inflight_max").unwrap();
+        (rbuf, hwm)
+    });
+    let hwm = per_rank.iter().map(|(_, h)| *h).max().unwrap();
+    (per_rank.into_iter().map(|(b, _)| b).collect(), hwm)
+}
+
+/// The acceptance criterion: chunked allreduce byte-identical to
+/// unchunked for all predefined blockwise ops on all four eligible
+/// primitives, at payloads one element below, exactly at, and one
+/// element above the threshold.
+#[test]
+fn chunked_matches_unchunked_across_the_threshold() {
+    let _g = KnobGuard::take();
+    const NRANKS: usize = 3; // non-power-of-two: RD takes the fold path
+    const BASE: usize = 12_288; // 3 combine blocks
+    for prim in [Primitive::F32, Primitive::F64, Primitive::I32, Primitive::I64] {
+        let threshold = (BASE * esize(prim)) as u64;
+        for op in [Op::SUM, Op::PROD, Op::MAX, Op::MIN] {
+            for count in [BASE - 1, BASE, BASE + 1] {
+                config::set_chunk_threshold(1 << 62);
+                let (want, hwm) = allreduce_bytes(NRANKS, count, prim, &op);
+                assert!(hwm <= 1, "threshold 2^62 must suppress chunking");
+                config::set_chunk_threshold(threshold);
+                let (got, hwm) = allreduce_bytes(NRANKS, count, prim, &op);
+                if count >= BASE {
+                    assert!(
+                        hwm >= 2,
+                        "{prim:?} {op:?} count {count}: payload at/above the threshold \
+                         did not chunk"
+                    );
+                }
+                for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g, w,
+                        "rank {r}: chunked vs unchunked bytes diverge \
+                         ({prim:?}, {op:?}, count {count})"
+                    );
+                }
+                // All ranks agree with each other (allreduce contract).
+                assert!(got.iter().all(|g| g == &got[0]));
+            }
+        }
+    }
+}
+
+/// The engine ablation: scalar, native and (artifact-dependent) offload
+/// engines all produce the reference bytes on the chunked path.
+#[test]
+fn combine_engines_agree_on_the_chunked_path() {
+    let _g = KnobGuard::take();
+    const COUNT: usize = 12_288;
+    let prim = Primitive::F32;
+    config::set_chunk_threshold((COUNT * esize(prim)) as u64);
+    for op in [Op::SUM, Op::PROD, Op::MAX, Op::MIN] {
+        config::set_combine_engine(CombineEngine::Scalar);
+        let (want, _) = allreduce_bytes(2, COUNT, prim, &op);
+        for engine in [CombineEngine::Native, CombineEngine::Auto, CombineEngine::Offload] {
+            // Offload falls back to native when PJRT artifacts are
+            // absent; with artifacts it runs the AOT combine kernel.
+            // Either way the bytes must match the scalar reference.
+            config::set_combine_engine(engine);
+            let (got, _) = allreduce_bytes(2, COUNT, prim, &op);
+            assert_eq!(got, want, "{engine:?} diverges from scalar ({op:?})");
+        }
+    }
+}
+
+/// Order-exactness satellite: user ops (commutative or not) and
+/// non-blockwise predefined ops never take the chunked path, no matter
+/// how large the payload.
+#[test]
+fn user_and_nonblockwise_ops_never_chunk() {
+    let _g = KnobGuard::take();
+    config::set_chunk_threshold(1); // chunk everything eligible
+    let count = 1 << 16;
+    let f: UserFn = std::sync::Arc::new(|input, inout, count, _map| {
+        for i in 0..count * 8 {
+            inout[i] ^= input[i];
+        }
+        Ok(())
+    });
+    let user = Op::user(f, false, "xor8");
+    Universe::test(2).calm().run(move |comm| {
+        let i64t = Datatype::primitive(Primitive::I64);
+        assert!(
+            tuned::resolve_allreduce_chunking(comm, count, &i64t, &user).is_none(),
+            "user op must stay on the order-exact unchunked path"
+        );
+        assert!(
+            tuned::resolve_allreduce_chunking(comm, count, &i64t, &Op::LAND).is_none(),
+            "non-blockwise predefined op must not chunk"
+        );
+        assert!(
+            tuned::resolve_allreduce_chunking(comm, count, &i64t, &Op::SUM).is_some(),
+            "sanity: SUM at this size should chunk"
+        );
+        assert!(
+            tuned::resolve_reduce_chunking(comm, count, &i64t, &Op::MAX).is_some(),
+            "sanity: reduce chunking mirrors allreduce"
+        );
+    });
+}
+
+/// Chunked reduce (rooted) matches unchunked on every root.
+#[test]
+fn chunked_reduce_matches_unchunked_per_root() {
+    let _g = KnobGuard::take();
+    const NRANKS: usize = 3;
+    const COUNT: usize = 12_288;
+    let prim = Primitive::I64;
+    for root in 0..NRANKS {
+        let mut results = Vec::new();
+        for threshold in [1u64 << 62, (COUNT * esize(prim)) as u64] {
+            config::set_chunk_threshold(threshold);
+            let u = Universe::test(NRANKS).calm();
+            let per_rank = u.run(move |comm| {
+                let dtype = Datatype::primitive(prim);
+                let sbuf = payload(prim, comm.rank(), COUNT);
+                let mut rbuf = vec![0u8; COUNT * esize(prim)];
+                let rb =
+                    if comm.rank() == root { Some(&mut rbuf[..]) } else { None };
+                collective::reduce(comm, Some(&sbuf), rb, COUNT, &dtype, &Op::SUM, root)
+                    .unwrap_or_else(|e| panic!("reduce: {e}"));
+                (comm.rank() == root).then_some(rbuf)
+            });
+            results.push(per_rank.into_iter().flatten().next().expect("root produced bytes"));
+        }
+        assert_eq!(results[0], results[1], "root {root}: chunked reduce diverges");
+    }
+}
+
+/// Chaos differential: the chunked showcase produces identical digests
+/// on a calm fabric and under seeded perturbation — chunk schedules in
+/// flight together must tolerate reordering and delay.
+#[test]
+fn chunked_showcase_is_chaos_invariant() {
+    let _g = KnobGuard::take();
+    const NRANKS: usize = 3;
+    let p = Program::chunked_showcase(NRANKS);
+    let want = p.run(&Universe::test(NRANKS).calm());
+    for seed in [1u64, 42, 0xC4A0] {
+        let got = p.run(&Universe::test(NRANKS).with_chaos(ChaosConfig::from_seed(seed)));
+        assert_eq!(got, want, "chunked digests diverged under chaos seed {seed:#x}");
+    }
+}
+
+// ---- cross-backend: launcher-spawned multi-process jobs ----
+
+const LAUNCHER: &str = env!("CARGO_BIN_EXE_ferrompi-launch");
+const NRANKS_MP: usize = 3;
+
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let dir =
+            std::env::temp_dir().join(format!("ferrompi-combine-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("create scratch dir");
+        Scratch(dir)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn assert_chunked_conformance(backend: &str) {
+    // In-process reference (the knob lock keeps default thresholds in
+    // force; the launched processes read their own fresh environment).
+    let _g = KnobGuard::take();
+    let program = Program::chunked_showcase(NRANKS_MP);
+    let want: Vec<String> = program
+        .run(&Universe::test(NRANKS_MP).calm())
+        .iter()
+        .map(|ds| ds.iter().map(|d| format!("{d:016x}\n")).collect())
+        .collect();
+
+    let scratch = Scratch::new(backend);
+    let out = Command::new(LAUNCHER)
+        .args(["-n", &NRANKS_MP.to_string(), "--backend", backend, "builtin:conformance"])
+        .args(["--program", "chunked", "--out"])
+        .arg(&scratch.0)
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(
+        out.status.success(),
+        "chunked conformance job failed on {backend}: {}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    for r in 0..NRANKS_MP {
+        let path = scratch.0.join(format!("rank_{r}.digest"));
+        let got = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing digest {}: {e}", path.display()));
+        assert_eq!(
+            got, want[r],
+            "rank {r} chunked digests diverge on {backend} — the chunked pipeline \
+             is not backend-invariant"
+        );
+    }
+}
+
+/// Acceptance: chunked allreduce digests are byte-identical between the
+/// in-process fabric and a launcher-spawned socket-backend job.
+#[test]
+fn chunked_conformance_socket_matches_inproc() {
+    assert_chunked_conformance("socket");
+}
+
+/// Same contract over the shared-memory ring backend.
+#[cfg(unix)]
+#[test]
+fn chunked_conformance_shm_matches_inproc() {
+    assert_chunked_conformance("shm");
+}
