@@ -33,6 +33,13 @@ struct PingPong {
     /// framing bytes beyond the payload.
     backend_frames_tx: u64,
     backend_bytes_tx: u64,
+    /// Flow-control counters (docs/FLOWCONTROL.md). A ping-pong holds one
+    /// message in flight per direction, so stalls/demotions here are a
+    /// regression signal, not expected behaviour; the mailbox watermark
+    /// records how deep the bounded mailbox actually got.
+    credits_stalled: u64,
+    eager_demoted: u64,
+    mailbox_hwm: u64,
 }
 
 fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> PingPong {
@@ -88,11 +95,15 @@ fn pingpong(nodes: usize, ppn: usize, bytes: usize) -> PingPong {
         pool: fabric.pool.stats(),
         backend_frames_tx: fabric.stats.backend.frames_tx.load(Ordering::Relaxed),
         backend_bytes_tx: fabric.stats.backend.bytes_tx.load(Ordering::Relaxed),
+        credits_stalled: fabric.stats.credits_stalled.load(Ordering::Relaxed),
+        eager_demoted: fabric.stats.eager_demoted.load(Ordering::Relaxed),
+        mailbox_hwm: fabric.stats.mailbox_hwm.load(Ordering::Relaxed),
     }
 }
 
 /// Run `ferrompi-launch -n 2 --backend <b> builtin:pingpong` and parse
-/// the `backend,bytes,one_way_s` CSV it appends. Returns `None` (with a
+/// the `backend,bytes,one_way_s,credits_stalled,eager_demoted,
+/// mailbox_hwm` CSV it appends. Returns `None` (with a
 /// note) when the launcher binary is unavailable (e.g. a bench run that
 /// didn't build bins) or the job fails — the sweep degrades to whatever
 /// backends it can measure rather than aborting the whole bench.
@@ -123,10 +134,16 @@ fn launched_pingpong(backend: &'static str) -> Option<Vec<TransportRow>> {
                     if b != backend {
                         return None;
                     }
+                    // Flow columns default to 0 so a CSV from an older
+                    // worker still parses.
+                    let mut counter = || f.next().and_then(|v| v.parse().ok()).unwrap_or(0);
                     Some(TransportRow {
                         backend,
                         bytes: nb.parse().ok()?,
                         one_way_s: s.parse().ok()?,
+                        credits_stalled: counter(),
+                        eager_demoted: counter(),
+                        mailbox_hwm: counter(),
                     })
                 })
                 .collect()
@@ -192,7 +209,14 @@ fn main() {
         let intra = pingpong(1, 2, bytes);
         let inter = pingpong(2, 1, bytes);
         if TRANSPORT_BYTES.contains(&bytes) {
-            transport.push(TransportRow { backend: "inproc", bytes, one_way_s: intra.one_way_s });
+            transport.push(TransportRow {
+                backend: "inproc",
+                bytes,
+                one_way_s: intra.one_way_s,
+                credits_stalled: intra.credits_stalled,
+                eager_demoted: intra.eager_demoted,
+                mailbox_hwm: intra.mailbox_hwm,
+            });
         }
         t.push(vec![
             bytes.to_string(),
@@ -233,11 +257,30 @@ fn main() {
     if let Some(rows) = launched_pingpong("socket") {
         transport.extend(rows);
     }
-    let mut t = Table::new(&["backend", "bytes", "one-way (us)"]);
+    let mut t = Table::new(&[
+        "backend",
+        "bytes",
+        "one-way (us)",
+        "credits stalled",
+        "eager demoted",
+        "mailbox hwm",
+    ]);
     for r in &transport {
-        t.push(vec![r.backend.into(), r.bytes.to_string(), format!("{:.2}", r.one_way_s * 1e6)]);
+        t.push(vec![
+            r.backend.into(),
+            r.bytes.to_string(),
+            format!("{:.2}", r.one_way_s * 1e6),
+            r.credits_stalled.to_string(),
+            r.eager_demoted.to_string(),
+            r.mailbox_hwm.to_string(),
+        ]);
     }
     println!("{}", t.to_markdown());
+    println!(
+        "(flow-control columns — docs/FLOWCONTROL.md — should read 0/0/small \
+         for a ping-pong: one message in flight never exhausts a credit \
+         window.)"
+    );
 
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -507,6 +507,7 @@ Universe::run picks the job up from the environment). Builtins:
   builtin:allreduce                     modern-API allreduce smoke
   builtin:conformance --seed S --out D  proggen digests → D/rank_R.digest
   builtin:conformance --program chunked --out D  chunked-allreduce showcase
+  builtin:conformance --program hotspot --out D  many-to-one flow-control showcase
   builtin:pingpong --out F [--bytes a,b]  latency sweep → CSV at F
 ";
 
@@ -650,8 +651,13 @@ fn builtin_conformance(args: &[String]) -> Result<(), String> {
         // The chunked-allreduce showcase: soaks the chunked reduction
         // pipeline's threshold seams across process boundaries.
         Some("chunked") => crate::sim::proggen::Program::chunked_showcase(u.nranks()),
+        // The hot-spot showcase: many-to-one floods that push the eager
+        // credit window (docs/FLOWCONTROL.md) across process boundaries.
+        Some("hotspot") => crate::sim::proggen::Program::hotspot_showcase(u.nranks()),
         Some(other) => {
-            return Err(format!("unknown conformance program '{other}' (known: chunked)"));
+            return Err(format!(
+                "unknown conformance program '{other}' (known: chunked | hotspot)"
+            ));
         }
         None => {
             let seed: u64 = flag_value(args, "--seed")
@@ -673,7 +679,10 @@ fn builtin_conformance(args: &[String]) -> Result<(), String> {
 
 /// Latency sweep worker for `bench_p2p`'s cross-backend comparison:
 /// rank 0 ping-pongs with the last rank and appends CSV rows
-/// `backend,bytes,one_way_s` to `--out`.
+/// `backend,bytes,one_way_s,credits_stalled,eager_demoted,mailbox_hwm`
+/// to `--out` (the trailing columns are the flow-control pvars sampled
+/// after each size's loop, cumulative over the job —
+/// docs/FLOWCONTROL.md).
 fn builtin_pingpong(args: &[String]) -> Result<(), String> {
     let out = PathBuf::from(flag_value(args, "--out").ok_or("pingpong needs --out")?);
     let bytes: Vec<usize> = flag_value(args, "--bytes")
@@ -709,7 +718,15 @@ fn builtin_pingpong(args: &[String]) -> Result<(), String> {
             }
             if me == 0 {
                 let one_way = start.elapsed().as_secs_f64() / (iters as f64 * 2.0);
-                rows.push((nb, one_way));
+                let sess = crate::tool::pvar::PvarSession::create(comm);
+                let pv = |name| sess.read(name).unwrap_or(0);
+                rows.push((
+                    nb,
+                    one_way,
+                    pv("credits_stalled"),
+                    pv("eager_demoted"),
+                    pv("fabric_mailbox_hwm"),
+                ));
             }
             crate::collective::barrier(comm).unwrap();
         }
@@ -720,8 +737,8 @@ fn builtin_pingpong(args: &[String]) -> Result<(), String> {
     let backend = effective_backend().map(|b| b.label()).unwrap_or("unknown");
     let mut csv = String::new();
     for rankrows in rows {
-        for (nb, s) in rankrows {
-            csv.push_str(&format!("{backend},{nb},{s:.9}\n"));
+        for (nb, s, stalled, demoted, hwm) in rankrows {
+            csv.push_str(&format!("{backend},{nb},{s:.9},{stalled},{demoted},{hwm}\n"));
         }
     }
     if !csv.is_empty() {

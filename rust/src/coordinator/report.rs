@@ -219,6 +219,15 @@ pub struct TransportRow {
     pub backend: &'static str,
     pub bytes: usize,
     pub one_way_s: f64,
+    /// Flow-control telemetry sampled when the row was measured,
+    /// cumulative over the job so far (docs/FLOWCONTROL.md): sends that
+    /// stalled waiting for an eager credit, sends demoted to rendezvous,
+    /// and the bounded-mailbox high watermark. A ping-pong keeps one
+    /// message in flight, so nonzero stall/demote counts here flag a
+    /// flow-control regression on the uncontended path.
+    pub credits_stalled: u64,
+    pub eager_demoted: u64,
+    pub mailbox_hwm: u64,
 }
 
 /// Serialize the cross-backend sweep as JSON (the `multiproc` CI
@@ -229,10 +238,14 @@ pub fn transport_json(rows: &[TransportRow]) -> String {
         .iter()
         .map(|r| {
             format!(
-                "    {{\"backend\": \"{}\", \"bytes\": {}, \"one_way_s\": {}}}",
+                "    {{\"backend\": \"{}\", \"bytes\": {}, \"one_way_s\": {}, \
+                 \"credits_stalled\": {}, \"eager_demoted\": {}, \"mailbox_hwm\": {}}}",
                 r.backend,
                 r.bytes,
                 json_num(r.one_way_s),
+                r.credits_stalled,
+                r.eager_demoted,
+                r.mailbox_hwm,
             )
         })
         .collect();
@@ -371,13 +384,30 @@ mod tests {
     #[test]
     fn transport_json_is_well_formed() {
         let rows = vec![
-            TransportRow { backend: "inproc", bytes: 8, one_way_s: 1e-6 },
-            TransportRow { backend: "socket", bytes: 1024, one_way_s: f64::NAN },
+            TransportRow {
+                backend: "inproc",
+                bytes: 8,
+                one_way_s: 1e-6,
+                credits_stalled: 0,
+                eager_demoted: 0,
+                mailbox_hwm: 3,
+            },
+            TransportRow {
+                backend: "socket",
+                bytes: 1024,
+                one_way_s: f64::NAN,
+                credits_stalled: 2,
+                eager_demoted: 1,
+                mailbox_hwm: 7,
+            },
         ];
         let j = transport_json(&rows);
         assert!(j.contains("\"benchmark\": \"transport_backends\""));
         assert!(j.contains("\"backend\": \"inproc\""));
         assert!(j.contains("\"one_way_s\": null"));
+        assert!(j.contains("\"credits_stalled\": 2"));
+        assert!(j.contains("\"eager_demoted\": 1"));
+        assert!(j.contains("\"mailbox_hwm\": 3"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
     }

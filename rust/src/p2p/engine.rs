@@ -44,6 +44,7 @@ use crate::op::{Op, OpKind};
 use crate::transport::{Packet, PacketKind, PoolHandle, WireBytes};
 use crate::{mpi_err, Result};
 use std::rc::Rc;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -121,12 +122,69 @@ pub fn start_send(ctx: &RankCtx, p: SendParams<'_>) -> Result<Option<u64>> {
         } else {
             None
         };
-        ctx.fabric.send(
-            ctx.world_rank,
-            p.dst_world,
-            now,
-            PacketKind::Eager { ctx: p.ctx_id, tag: p.tag, data: wire, sync_token },
-        );
+        let dst = p.dst_world;
+        if ctx.flow.enabled() {
+            // Credit-based flow control (docs/FLOWCONTROL.md). When the
+            // peer's pending queue already holds a full complement of
+            // parked payloads, new sends demote to rendezvous — RTS/CTS
+            // self-limits instead of parking more data. Buffered and
+            // ready sends must complete locally, so they never demote;
+            // they just park (the payload is packed, the user buffer is
+            // already free).
+            let demotable = matches!(p.mode, SendMode::Standard | SendMode::Synchronous);
+            if demotable && ctx.flow.parked_payloads(dst) >= ctx.flow.cfg.pending_cap {
+                ctx.fabric.stats.eager_demoted.fetch_add(1, Ordering::Relaxed);
+                let token = ctx.fresh_token();
+                ctx.sends.borrow_mut().insert(token, SendState::AwaitCts { staged: wire });
+                let rts = PacketKind::Rts {
+                    ctx: p.ctx_id,
+                    tag: p.tag,
+                    nbytes,
+                    token,
+                    sync_token: None,
+                };
+                let prepared = ctx.fabric.prepare(ctx.world_rank, dst, now, rts);
+                if ctx.flow.has_pending(dst) {
+                    // FIFO behind the parked packets: shipping the RTS
+                    // around the queue would break non-overtaking.
+                    ctx.flow.pending(dst).borrow_mut().push_back(prepared);
+                } else {
+                    ctx.fabric.ship(prepared);
+                }
+                return Ok(Some(token));
+            }
+            let kind = PacketKind::Eager { ctx: p.ctx_id, tag: p.tag, data: wire, sync_token };
+            let prepared = ctx.fabric.prepare(ctx.world_rank, dst, now, kind);
+            let refused = if ctx.flow.has_pending(dst) {
+                // Something is already parked for this peer: queue behind
+                // it unconditionally, or this send would overtake.
+                Some(prepared)
+            } else if ctx.flow.take_credit(dst) {
+                match ctx.fabric.try_ship(prepared) {
+                    Ok(_) => None,
+                    Err(p) => {
+                        // Mailbox full: hand the credit back; the flush
+                        // path re-takes it when space opens.
+                        ctx.flow.give_credit(dst);
+                        Some(p)
+                    }
+                }
+            } else {
+                Some(prepared)
+            };
+            if let Some(p) = refused {
+                ctx.fabric.stats.credits_stalled.fetch_add(1, Ordering::Relaxed);
+                ctx.flow.pending(dst).borrow_mut().push_back(p);
+                ctx.flow.note_parked_payload(dst, 1);
+            }
+        } else {
+            ctx.fabric.send(
+                ctx.world_rank,
+                dst,
+                now,
+                PacketKind::Eager { ctx: p.ctx_id, tag: p.tag, data: wire, sync_token },
+            );
+        }
         if let Some(tok) = sync_token {
             ctx.sends.borrow_mut().insert(tok, SendState::AwaitAck);
             Ok(Some(tok))
@@ -154,12 +212,16 @@ pub fn start_send(ctx: &RankCtx, p: SendParams<'_>) -> Result<Option<u64>> {
             }
         };
         ctx.sends.borrow_mut().insert(token, state);
-        ctx.fabric.send(
-            ctx.world_rank,
-            p.dst_world,
-            now,
-            PacketKind::Rts { ctx: p.ctx_id, tag: p.tag, nbytes, token, sync_token: None },
-        );
+        let rts = PacketKind::Rts { ctx: p.ctx_id, tag: p.tag, nbytes, token, sync_token: None };
+        if ctx.flow.enabled() && ctx.flow.has_pending(p.dst_world) {
+            // The RTS lives in the same matching domain as any parked
+            // eager packet: it must queue behind them (header-only, so it
+            // does not count toward the payload demotion threshold).
+            let prepared = ctx.fabric.prepare(ctx.world_rank, p.dst_world, now, rts);
+            ctx.flow.pending(p.dst_world).borrow_mut().push_back(prepared);
+        } else {
+            ctx.fabric.send(ctx.world_rank, p.dst_world, now, rts);
+        }
         Ok(Some(token))
     }
 }
@@ -317,9 +379,17 @@ fn read_segment(ctx: &RankCtx, seg: &[u8], range: std::ops::Range<usize>) -> Wir
     wire.freeze()
 }
 
-fn rma_reply(ctx: &RankCtx, to: usize, kind: PacketKind) {
+/// Ship a reply packet originated *inside* the packet handler. Payload
+/// replies (get responses) may hit mailbox backpressure; they are
+/// token-addressed and order-free, so a refused one parks in
+/// `flow.deferred_tx` and retries each progress turn — the handler never
+/// blocks and never recurses into the engine.
+fn reply_from_handler(ctx: &RankCtx, to: usize, kind: PacketKind) {
     let now = ctx.clock.now_ns();
-    ctx.fabric.send(ctx.world_rank, to, now, kind);
+    let prepared = ctx.fabric.prepare(ctx.world_rank, to, now, kind);
+    if let Err(p) = ctx.fabric.try_ship(prepared) {
+        ctx.flow.deferred_tx.borrow_mut().push(p);
+    }
 }
 
 /// Record a target's completion reply against the origin-side token.
@@ -381,6 +451,11 @@ fn match_arrived(ctx: &RankCtx, recv_token: u64, msg: UnexpectedMsg) -> Result<(
                 let now = ctx.clock.now_ns();
                 ctx.fabric.send(ctx.world_rank, msg.src, now, PacketKind::SsendAck { token: tok });
             }
+            // The credit goes home at *delivery into a user buffer*, not
+            // at arrival — the window is what bounds the unexpected
+            // queue. Returns are batched; the remainder flushes at
+            // closure (`quiesce_flow`).
+            credit_delivery(ctx, msg.src);
             deliver_payload(ctx, recv_token, msg.src, msg.tag, &data)
         }
         UnexpectedBody::Rts { token, sync_token: _, .. } => {
@@ -530,8 +605,10 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
                 }
             };
             ctx.sends.borrow_mut().insert(token, SendState::Done);
-            let now = ctx.clock.now_ns();
-            ctx.fabric.send(ctx.world_rank, pkt.src, now, PacketKind::RData { recv_token, data });
+            // Rendezvous data is receiver-paced (the CTS is the credit)
+            // but still occupies a mailbox payload slot; a full mailbox
+            // defers it rather than over-admitting or recursing.
+            reply_from_handler(ctx, pkt.src, PacketKind::RData { recv_token, data });
             Ok(())
         }
         PacketKind::RData { recv_token, data } => {
@@ -555,7 +632,7 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
                 // DMA-modeled NIC write into exposed memory: not charged.
                 seg[range].copy_from_slice(&data);
             }
-            rma_reply(ctx, pkt.src, PacketKind::RmaAck { token });
+            reply_from_handler(ctx, pkt.src, PacketKind::RmaAck { token });
             Ok(())
         }
         PacketKind::RmaGet { win, off, nbytes, token } => {
@@ -565,7 +642,7 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
                 let range = rma_span(seg.len(), off, nbytes)?;
                 read_segment(ctx, &seg, range)
             };
-            rma_reply(ctx, pkt.src, PacketKind::RmaGetResp { token, data });
+            reply_from_handler(ctx, pkt.src, PacketKind::RmaGetResp { token, data });
             Ok(())
         }
         PacketKind::RmaAcc { win, off, data, count, map, op, fetch, token } => {
@@ -578,8 +655,8 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
                 old
             };
             match old {
-                Some(data) => rma_reply(ctx, pkt.src, PacketKind::RmaGetResp { token, data }),
-                None => rma_reply(ctx, pkt.src, PacketKind::RmaAck { token }),
+                Some(data) => reply_from_handler(ctx, pkt.src, PacketKind::RmaGetResp { token, data }),
+                None => reply_from_handler(ctx, pkt.src, PacketKind::RmaAck { token }),
             }
             Ok(())
         }
@@ -596,11 +673,165 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
                 }
                 old
             };
-            rma_reply(ctx, pkt.src, PacketKind::RmaGetResp { token, data: old });
+            reply_from_handler(ctx, pkt.src, PacketKind::RmaGetResp { token, data: old });
             Ok(())
         }
         PacketKind::RmaAck { token } => rma_complete(ctx, token, WireBytes::empty()),
         PacketKind::RmaGetResp { token, data } => rma_complete(ctx, token, data),
+        PacketKind::CreditReturn { n } => {
+            ctx.flow.returned(pkt.src, n);
+            // Fresh liquidity: ship whatever was parked for that peer.
+            flush_peer(ctx, pkt.src);
+            Ok(())
+        }
+    }
+}
+
+// ---------------- eager flow control (docs/FLOWCONTROL.md) ----------------
+
+/// Receiver side: one eager message from `src` just reached a user
+/// buffer. Accrue the owed credit and ship a batched `CreditReturn` when
+/// one is due (control packets never block on mailbox capacity).
+fn credit_delivery(ctx: &RankCtx, src: usize) {
+    if !ctx.flow.enabled() {
+        return;
+    }
+    if let Some(n) = ctx.flow.accrue_owed(src) {
+        let now = ctx.clock.now_ns();
+        ctx.fabric.send(ctx.world_rank, src, now, PacketKind::CreditReturn { n });
+    }
+}
+
+/// Drain `peer`'s pending queue front-to-back: payload entries need a
+/// credit *and* mailbox space, control entries (demoted RTS) ship
+/// unconditionally. Stops at the first entry that cannot go — anything
+/// behind it must wait to preserve non-overtaking.
+fn flush_peer(ctx: &RankCtx, peer: usize) {
+    loop {
+        let is_payload = {
+            let q = ctx.flow.pending(peer).borrow();
+            match q.front() {
+                None => return,
+                Some(p) => p.kind().counts_against_capacity(),
+            }
+        };
+        if is_payload {
+            if !ctx.flow.take_credit(peer) {
+                return;
+            }
+            let p = ctx.flow.pending(peer).borrow_mut().pop_front().unwrap();
+            match ctx.fabric.try_ship(p) {
+                Ok(_) => ctx.flow.note_parked_payload(peer, -1),
+                Err(p) => {
+                    ctx.flow.give_credit(peer);
+                    ctx.flow.pending(peer).borrow_mut().push_front(p);
+                    return;
+                }
+            }
+        } else {
+            let p = ctx.flow.pending(peer).borrow_mut().pop_front().unwrap();
+            ctx.fabric.ship(p);
+        }
+    }
+}
+
+/// One turn of sender-side flow work: retry deferred in-handler replies,
+/// then every peer's parked sends. No-ops (two empty checks) when flow
+/// control is off or nothing is waiting — the uncontended path stays flat.
+fn flush_flow(ctx: &RankCtx) {
+    if !ctx.flow.enabled() {
+        return;
+    }
+    if !ctx.flow.deferred_tx.borrow().is_empty() {
+        let deferred = ctx.flow.deferred_tx.take();
+        let mut still = Vec::new();
+        for p in deferred {
+            if let Err(p) = ctx.fabric.try_ship(p) {
+                still.push(p);
+            }
+        }
+        // ship does not recurse into the engine, so nothing new can have
+        // landed in the cell meanwhile; restore the survivors in order.
+        *ctx.flow.deferred_tx.borrow_mut() = still;
+    }
+    for peer in 0..ctx.world_size() {
+        if ctx.flow.has_pending(peer) {
+            flush_peer(ctx, peer);
+        }
+    }
+}
+
+/// Closure-time flow drain, called by the universe after the rank's
+/// closure returns (before the quiescence audit, when one runs). Three
+/// steps, ordered so every wait terminates for a correct program:
+///
+/// 1. Flush every owed credit — peers blocked on returns must never wait
+///    on *this* rank's further progress.
+/// 2. Drive progress until nothing is parked or deferred. Parked sends
+///    are a *liveness* obligation (a peer's receive is waiting on the
+///    payload), so a stall here past the deadlock limit panics with the
+///    leak report and trace ring.
+/// 3. Wait for every spent credit to come home. That can only complete
+///    once every peer has closed (their last sub-batch returns flush at
+///    their own step 1), so the grace timer starts when the whole job
+///    has reached closure; credits still missing after the grace are
+///    left for the audit to flag — an erroneous program (e.g. a send
+///    nobody received) can make them *unsatisfiable*, which must not
+///    hang the shutdown.
+pub fn quiesce_flow(ctx: &Rc<RankCtx>) -> Result<()> {
+    if !ctx.flow.enabled() {
+        return Ok(());
+    }
+    for peer in 0..ctx.world_size() {
+        let n = ctx.flow.drain_owed(peer);
+        if n > 0 {
+            let now = ctx.clock.now_ns();
+            ctx.fabric.send(ctx.world_rank, peer, now, PacketKind::CreditReturn { n });
+        }
+    }
+    ctx.fabric.note_rank_closed();
+    let start = std::time::Instant::now();
+    // Multi-process jobs cannot observe sibling closure, so they get a
+    // longer flat grace instead (their caller barriers before quiescing,
+    // which bounds the skew in practice).
+    let grace = if ctx.fabric.is_multiprocess() {
+        Duration::from_secs(10)
+    } else {
+        Duration::from_secs(2)
+    };
+    let mut all_closed_at: Option<std::time::Instant> = None;
+    loop {
+        progress(ctx)?;
+        if ctx.flow.quiescent() {
+            return Ok(());
+        }
+        let drained = ctx.flow.deferred_tx.borrow().is_empty()
+            && (0..ctx.world_size()).all(|p| !ctx.flow.has_pending(p));
+        if drained {
+            if all_closed_at.is_none() && ctx.fabric.all_ranks_closed() {
+                all_closed_at = Some(std::time::Instant::now());
+            }
+            if all_closed_at.is_some_and(|t| t.elapsed() > grace) {
+                // Only credits are missing and they are not coming: the
+                // audit (when enabled) reports the leak.
+                return Ok(());
+            }
+        }
+        ctx.fabric.check_abort();
+        if start.elapsed() > deadlock_limit() {
+            panic!(
+                "rank {} flow-control leak at closure: {}\n{}",
+                ctx.world_rank,
+                ctx.flow.leak_report().join("; "),
+                ctx.fabric.trace_report()
+            );
+        }
+        let mut pkts = ctx.scratch.take();
+        pkts.clear();
+        ctx.fabric.poll_wait(ctx.world_rank, &mut pkts, Duration::from_micros(200));
+        let r = pkts.drain(..).try_for_each(|p| handle_packet(ctx, p));
+        *ctx.scratch.borrow_mut() = pkts;
+        r?;
     }
 }
 
@@ -643,6 +874,7 @@ fn advance_progressables(ctx: &Rc<RankCtx>) -> Result<()> {
 pub fn progress(ctx: &Rc<RankCtx>) -> Result<()> {
     ctx.fabric.chaos_tick(ctx.world_rank);
     process_mailbox(ctx)?;
+    flush_flow(ctx);
     advance_progressables(ctx)
 }
 
@@ -673,8 +905,13 @@ pub fn wait_for(ctx: &Rc<RankCtx>, mut done: impl FnMut() -> bool) -> Result<()>
         ctx.fabric.check_abort();
         if start.elapsed() > deadlock_limit() {
             let m = ctx.matcher.borrow();
+            let flow = if ctx.flow.enabled() && !ctx.flow.quiescent() {
+                format!(", flow: {}", ctx.flow.leak_report().join("; "))
+            } else {
+                String::new()
+            };
             panic!(
-                "rank {} deadlocked in wait (posted={}, unexpected={}, sends={}, recvs={})",
+                "rank {} deadlocked in wait (posted={}, unexpected={}, sends={}, recvs={}{flow})",
                 ctx.world_rank,
                 m.posted_len(),
                 m.unexpected_len(),

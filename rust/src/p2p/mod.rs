@@ -19,8 +19,8 @@ pub mod state;
 pub use buffer::{RawBuf, RawBufMut};
 pub use engine::{
     abandon_recv, cancel_recv, detach_deferred_send, improbe, iprobe, mprobe, mrecv, post_recv,
-    probe, progress, recv_done, rma_done, send_done, start_rma, take_recv_result, take_rma_result,
-    take_send_done, wait_for, Message, RmaKind, RndvStaging, SendMode, SendParams,
+    probe, progress, quiesce_flow, recv_done, rma_done, send_done, start_rma, take_recv_result,
+    take_rma_result, take_send_done, wait_for, Message, RmaKind, RndvStaging, SendMode, SendParams,
 };
 pub use matcher::{Matcher, MatchSelector};
 pub use state::{

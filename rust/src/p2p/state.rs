@@ -4,10 +4,11 @@ use super::buffer::{RawBuf, RawBufMut};
 use super::matcher::Matcher;
 use crate::datatype::Datatype;
 use crate::group::Group;
-use crate::transport::{Fabric, Packet, VClock, WireBytes};
+use crate::transport::fabric::PreparedSend;
+use crate::transport::{Fabric, FlowConfig, Packet, VClock, WireBytes};
 use crate::{MpiError, Result};
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::Arc;
 
@@ -122,6 +123,155 @@ pub trait Progressable {
     fn advance(&self, ctx: &Rc<RankCtx>) -> Result<bool>;
 }
 
+/// This rank's eager flow-control ledger (see `docs/FLOWCONTROL.md`).
+/// Thread-confined like the rest of [`RankCtx`]. Both halves of the
+/// protocol live here: the *sender* side (credits available toward each
+/// peer, parked sends waiting for liquidity) and the *receiver* side
+/// (credits owed back to each peer, batched into `CreditReturn` packets).
+#[derive(Debug)]
+pub struct FlowState {
+    pub cfg: FlowConfig,
+    /// Credits this rank may spend toward each peer. Starts at (and must
+    /// return to, at quiescence) `cfg.window` per peer.
+    avail: Vec<Cell<usize>>,
+    /// Prepared packets parked per peer, strictly FIFO: once anything is
+    /// parked for a peer, every later matching-domain packet to that peer
+    /// (including demoted RTS, which cost no credit) queues behind it —
+    /// shipping around the queue would break non-overtaking.
+    pending: Vec<RefCell<VecDeque<PreparedSend>>>,
+    /// How many entries of each peer's pending queue are payload-bearing
+    /// eager packets (the demotion threshold counts these, not the
+    /// header-only RTS riding along for ordering).
+    parked_payloads: Vec<Cell<usize>>,
+    /// Receiver side: credits owed to each peer, flushed at
+    /// `cfg.return_batch()` and at closure end.
+    owed: Vec<Cell<u32>>,
+    /// Payload packets originated *inside* the packet handler (rendezvous
+    /// RData, RMA get responses) that hit mailbox backpressure. They are
+    /// token-addressed and order-free, so they sit here and retry each
+    /// progress turn instead of recursing into the engine.
+    pub deferred_tx: RefCell<Vec<PreparedSend>>,
+}
+
+impl FlowState {
+    pub fn new(cfg: FlowConfig, nranks: usize) -> FlowState {
+        FlowState {
+            cfg,
+            avail: (0..nranks).map(|_| Cell::new(cfg.window)).collect(),
+            pending: (0..nranks).map(|_| RefCell::new(VecDeque::new())).collect(),
+            parked_payloads: (0..nranks).map(|_| Cell::new(0)).collect(),
+            owed: (0..nranks).map(|_| Cell::new(0)).collect(),
+            deferred_tx: RefCell::new(Vec::new()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    pub fn avail(&self, peer: usize) -> usize {
+        self.avail[peer].get()
+    }
+
+    /// Consume one credit toward `peer`; `false` when out.
+    pub fn take_credit(&self, peer: usize) -> bool {
+        let a = self.avail[peer].get();
+        if a == 0 {
+            return false;
+        }
+        self.avail[peer].set(a - 1);
+        true
+    }
+
+    pub fn give_credit(&self, peer: usize) {
+        self.avail[peer].set(self.avail[peer].get() + 1);
+    }
+
+    /// Credit the sender ledger with `n` returned credits from `peer`.
+    pub fn returned(&self, peer: usize, n: u32) {
+        self.avail[peer].set(self.avail[peer].get() + n as usize);
+    }
+
+    pub fn pending(&self, peer: usize) -> &RefCell<VecDeque<PreparedSend>> {
+        &self.pending[peer]
+    }
+
+    pub fn has_pending(&self, peer: usize) -> bool {
+        !self.pending[peer].borrow().is_empty()
+    }
+
+    /// Payload-bearing entries parked for `peer` (the demotion threshold).
+    pub fn parked_payloads(&self, peer: usize) -> usize {
+        self.parked_payloads[peer].get()
+    }
+
+    pub fn note_parked_payload(&self, peer: usize, delta: isize) {
+        let v = self.parked_payloads[peer].get() as isize + delta;
+        debug_assert!(v >= 0);
+        self.parked_payloads[peer].set(v.max(0) as usize);
+    }
+
+    /// Receiver side: one more eager message from `peer` delivered.
+    /// Returns `Some(n)` when a batch is due to go back on the wire.
+    pub fn accrue_owed(&self, peer: usize) -> Option<u32> {
+        let o = self.owed[peer].get() + 1;
+        if o >= self.cfg.return_batch() {
+            self.owed[peer].set(0);
+            Some(o)
+        } else {
+            self.owed[peer].set(o);
+            None
+        }
+    }
+
+    /// Take everything still owed to `peer` (closure-end flush).
+    pub fn drain_owed(&self, peer: usize) -> u32 {
+        self.owed[peer].replace(0)
+    }
+
+    pub fn owed(&self, peer: usize) -> u32 {
+        self.owed[peer].get()
+    }
+
+    /// Sender-side quiescence: every credit home, nothing parked or
+    /// deferred. (`owed` is receiver-side and flushed separately.)
+    pub fn quiescent(&self) -> bool {
+        self.avail.iter().all(|a| a.get() == self.cfg.window)
+            && self.pending.iter().all(|p| p.borrow().is_empty())
+            && self.deferred_tx.borrow().is_empty()
+    }
+
+    /// Human-readable leak description for the quiescence audit.
+    pub fn leak_report(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (peer, a) in self.avail.iter().enumerate() {
+            if a.get() != self.cfg.window {
+                out.push(format!(
+                    "credits toward r{peer}: {}/{} home",
+                    a.get(),
+                    self.cfg.window
+                ));
+            }
+        }
+        for (peer, q) in self.pending.iter().enumerate() {
+            let q = q.borrow();
+            if !q.is_empty() {
+                out.push(format!("{} send(s) still parked for r{peer}", q.len()));
+            }
+        }
+        for (peer, o) in self.owed.iter().enumerate() {
+            if o.get() != 0 {
+                out.push(format!("{} credit(s) still owed to r{peer}", o.get()));
+            }
+        }
+        let d = self.deferred_tx.borrow().len();
+        if d != 0 {
+            out.push(format!("{d} deferred reply packet(s) never shipped"));
+        }
+        out
+    }
+}
+
 /// Per-rank software counters exported as tool pvars.
 #[derive(Debug, Default)]
 pub struct RankCounters {
@@ -162,11 +312,14 @@ pub struct RankCtx {
     /// Scratch packet vec reused across progress calls (hot-path
     /// allocation avoidance).
     pub(crate) scratch: RefCell<Vec<Packet>>,
+    /// Eager flow-control ledger (credits, parked sends, owed returns).
+    pub(crate) flow: FlowState,
 }
 
 impl RankCtx {
     pub fn new(world_rank: usize, fabric: Arc<Fabric>) -> Rc<RankCtx> {
         let epoch = fabric.epoch;
+        let flow = FlowState::new(fabric.flow, fabric.nranks());
         Rc::new(RankCtx {
             world_rank,
             fabric,
@@ -186,6 +339,7 @@ impl RankCtx {
             windows: RefCell::new(HashMap::new()),
             progressables: RefCell::new(Vec::new()),
             scratch: RefCell::new(Vec::new()),
+            flow,
         })
     }
 
@@ -274,6 +428,38 @@ mod tests {
         let f64t = Datatype::primitive(crate::datatype::Primitive::F64);
         assert_eq!(s.get_count(&i32t), Some(3));
         assert_eq!(s.get_count(&f64t), None); // 12 % 8 != 0 → MPI_UNDEFINED
+    }
+
+    #[test]
+    fn flow_ledger_credits_and_owed_batches() {
+        let f = FlowState::new(FlowConfig { window: 4, pending_cap: 2, mailbox_cap: 0 }, 2);
+        assert!(f.enabled());
+        assert!(f.quiescent());
+        assert_eq!(f.avail(1), 4);
+        for _ in 0..4 {
+            assert!(f.take_credit(1));
+        }
+        assert!(!f.take_credit(1), "window exhausted");
+        assert!(!f.quiescent());
+        assert!(f.leak_report().iter().any(|l| l.contains("0/4 home")));
+        f.returned(1, 3);
+        f.give_credit(1);
+        assert!(f.quiescent());
+        // Receiver side: batch fires at window/2 = 2 deliveries.
+        assert_eq!(f.accrue_owed(0), None);
+        assert_eq!(f.owed(0), 1);
+        assert_eq!(f.accrue_owed(0), Some(2));
+        assert_eq!(f.owed(0), 0);
+        assert_eq!(f.accrue_owed(0), None);
+        assert_eq!(f.drain_owed(0), 1);
+        assert_eq!(f.drain_owed(0), 0);
+    }
+
+    #[test]
+    fn rank_ctx_flow_matches_fabric_plan() {
+        let c = ctx();
+        assert_eq!(c.flow.cfg, c.fabric.flow);
+        assert_eq!(c.flow.avail(1), c.fabric.flow.window);
     }
 
     #[test]

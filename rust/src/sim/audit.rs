@@ -87,6 +87,16 @@ pub fn audit_rank(ctx: &Rc<RankCtx>) -> Vec<String> {
     if live > 0 {
         v.push(format!("{live} composite operation(s) still progressing"));
     }
+    // Flow-control ledger (docs/FLOWCONTROL.md): by closure end every
+    // credit this rank spent must be home, every owed return flushed,
+    // and nothing left parked or deferred. [`engine::quiesce_flow`] ran
+    // before this audit; residue here means a message nobody received
+    // (its credit is unreturnable) or a protocol leak.
+    if ctx.flow.enabled() {
+        for leak in ctx.flow.leak_report() {
+            v.push(format!("flow control: {leak}"));
+        }
+    }
     v
 }
 

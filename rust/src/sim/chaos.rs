@@ -69,6 +69,11 @@ pub struct ChaosConfig {
     pub eager_sweep: bool,
     /// Run the job on a shrunken buffer pool (see `PRESSURE_POOL_*`).
     pub pool_pressure: bool,
+    /// Starvation pressure: run the job with a credit window of 1 and a
+    /// handful of mailbox slots (see [`crate::transport::flow`]), so the
+    /// park/demote/backpressure machinery runs constantly instead of
+    /// never. Results must still be byte-identical to an unpressured run.
+    pub pressure: bool,
 }
 
 impl ChaosConfig {
@@ -85,6 +90,7 @@ impl ChaosConfig {
             yield_prob: 0.02 + 0.12 * r.f64(),
             eager_sweep: true,
             pool_pressure: r.bool(),
+            pressure: r.bool(),
         };
         apply_overrides(cfg)
     }
@@ -110,6 +116,10 @@ impl ChaosConfig {
             let mut cfg = ChaosConfig::from_seed(s);
             cfg.eager_sweep = false;
             cfg.pool_pressure = false;
+            // Starvation pressure is opt-in for env soaks too (tests pin
+            // credit windows and assert flow telemetry); an explicit
+            // `chaos_pressure` cvar write still wins.
+            cfg.pressure = pressure_override().unwrap_or(false);
             cfg
         })
     }
@@ -147,6 +157,8 @@ static DELAY_CVAR: AtomicU64 = AtomicU64::new(UNSET);
 /// Probabilities are stored as permille (0..=1000) to stay in atomics.
 static REORDER_CVAR: AtomicU64 = AtomicU64::new(UNSET);
 static YIELD_CVAR: AtomicU64 = AtomicU64::new(UNSET);
+/// `chaos_pressure` tri-state: UNSET = derive from the seed, 0/1 forced.
+static PRESSURE_CVAR: AtomicU64 = AtomicU64::new(UNSET);
 
 fn read_cvar_seed() -> Option<u64> {
     match SEED_CVAR.load(Ordering::Relaxed) {
@@ -206,6 +218,24 @@ pub fn reset_yield_cvar() {
     YIELD_CVAR.store(UNSET, Ordering::Relaxed);
 }
 
+/// `chaos_pressure` cvar write: force starvation pressure on or off.
+pub fn write_pressure_cvar(on: bool) {
+    PRESSURE_CVAR.store(on as u64, Ordering::Relaxed);
+}
+
+/// Reset `chaos_pressure` to "derived from the seed" (`auto`).
+pub fn reset_pressure_cvar() {
+    PRESSURE_CVAR.store(UNSET, Ordering::Relaxed);
+}
+
+/// Raw `chaos_pressure` override (`None` = auto/seed-derived).
+pub fn pressure_override() -> Option<bool> {
+    match PRESSURE_CVAR.load(Ordering::Relaxed) {
+        UNSET => None,
+        v => Some(v != 0),
+    }
+}
+
 /// Raw intensity-override reads for the cvar layer (`None` = auto). The
 /// cvar read surfaces a latched override even while chaos is inactive,
 /// so writes always round-trip instead of silently waiting for the next
@@ -248,6 +278,9 @@ fn apply_overrides(mut cfg: ChaosConfig) -> ChaosConfig {
     match YIELD_CVAR.load(Ordering::Relaxed) {
         UNSET => {}
         pm => cfg.yield_prob = pm as f64 / 1000.0,
+    }
+    if let Some(p) = pressure_override() {
+        cfg.pressure = p;
     }
     cfg
 }
@@ -346,6 +379,8 @@ mod tests {
         assert_eq!(a.seed, b.seed);
         assert_eq!(a.pool_pressure, b.pool_pressure);
         assert_eq!(a.eager_sweep, b.eager_sweep);
+        // (`pressure` is deliberately left out: like the intensities it
+        // has a cvar override another test may be writing right now.)
         let c = ChaosConfig::from_seed(5);
         assert_eq!(c.pick_eager_threshold(65536), c.pick_eager_threshold(65536));
     }
@@ -362,7 +397,28 @@ mod tests {
         assert_eq!(cfg.seed, 123);
         assert!(!cfg.eager_sweep);
         assert!(!cfg.pool_pressure);
+        assert!(!cfg.pressure, "env soaks must not starve credit windows uninvited");
         assert_eq!(cfg.pick_eager_threshold(65536), 65536);
+    }
+
+    #[test]
+    fn pressure_cvar_forces_and_resets() {
+        let _g = CVAR_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        write_pressure_cvar(true);
+        assert_eq!(pressure_override(), Some(true));
+        // An explicit cvar write wins on both construction paths.
+        assert!(ChaosConfig::from_seed(1).pressure);
+        write_seed_cvar(55);
+        assert!(ChaosConfig::from_env().unwrap().pressure);
+        write_pressure_cvar(false);
+        assert!(!ChaosConfig::from_seed(1).pressure);
+        reset_pressure_cvar();
+        reset_seed_cvar();
+        assert_eq!(pressure_override(), None);
+        // Back on auto, the field derives from the seed again — some
+        // seeds on, some off, so the matrix sweeps both.
+        let derived: Vec<bool> = (0..32).map(|s| ChaosConfig::from_seed(s).pressure).collect();
+        assert!(derived.iter().any(|&p| p) && derived.iter().any(|&p| !p));
     }
 
     #[test]

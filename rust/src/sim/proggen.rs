@@ -100,6 +100,14 @@ pub enum Phase {
     /// commutative, so the digest is schedule-independent whether or not
     /// chunking actually engages under the current knobs.
     ChunkedAllReduce { count: usize },
+    /// Skewed many-to-one traffic: every rank ≠ 0 floods rank 0 with
+    /// `rounds` nonblocking small sends while rank 0 drains them one
+    /// blocking receive at a time in per-sender round order. Per-(sender,
+    /// tag) FIFO makes the receive order deterministic; the deliberately
+    /// lagging receiver is what pushes the eager path against its credit
+    /// window (docs/FLOWCONTROL.md) — under small windows the senders
+    /// park or demote and flush as credits ride back on deliveries.
+    HotSpot { len: usize, rounds: usize },
 }
 
 /// A generated SPMD program: the recipe the differential harness replays.
@@ -126,7 +134,7 @@ impl Program {
         let target = r.range(5, 10);
         let mut phases = Vec::new();
         while phases.len() < target {
-            match r.range(0, 14) {
+            match r.range(0, 15) {
                 0..=2 => phases.push(gen_immediate(&mut r, nranks, false, false)),
                 3 => phases.push(gen_immediate(&mut r, nranks, true, false)),
                 4 => {
@@ -159,6 +167,10 @@ impl Program {
                 }
                 11 => phases.push(Phase::Rma { len: r.range(1, 9), incs: r.range(1, 4) }),
                 12 => phases.push(Phase::ModernAllReduce),
+                13 => phases.push(Phase::HotSpot {
+                    len: r.range(1, 65),
+                    rounds: r.range(8, 33),
+                }),
                 // ≥ 16 Ki i64 elements so the payload crosses the default
                 // 128 KiB chunk threshold and the chunked path engages.
                 _ => phases.push(Phase::ChunkedAllReduce { count: r.range(16_384, 32_769) }),
@@ -235,6 +247,34 @@ impl Program {
                 Phase::Collective { op: CollOp::Allreduce, split: false, len: 0, count: 5 },
                 // One element past the threshold boundary.
                 Phase::ChunkedAllReduce { count: 16_385 },
+                Phase::ModernAllReduce,
+            ],
+        }
+    }
+
+    /// A handcrafted program centred on hot-spot (many-to-one) pressure:
+    /// floods of small sends into rank 0 interleaved with ring shifts and
+    /// collectives, so credit-window parking, demotion and flush overlap
+    /// ordinary matching. Used by the flow-control test suite and the
+    /// cross-backend conformance builtin (`--program hotspot`) — digests
+    /// must agree on inproc, shm and socket, credited or not.
+    pub fn hotspot_showcase(nranks: usize) -> Program {
+        assert!(nranks >= 2);
+        Program {
+            seed: 0xF_100D,
+            nranks,
+            phases: vec![
+                Phase::Barrier,
+                // Deep flood: far more rounds than any sane credit window,
+                // so under pressure mode every sender parks repeatedly.
+                Phase::HotSpot { len: 32, rounds: 200 },
+                Phase::Ring { len: 1024 },
+                // Tiny payloads maximize packet count per byte of data.
+                Phase::HotSpot { len: 1, rounds: 300 },
+                Phase::Collective { op: CollOp::Allreduce, split: false, len: 0, count: 5 },
+                // Mixed sizes straddling the eager/rendezvous boundary:
+                // demoted eagers and native rendezvous share the queue.
+                Phase::HotSpot { len: 65_537, rounds: 3 },
                 Phase::ModernAllReduce,
             ],
         }
@@ -486,6 +526,9 @@ fn exec(p: &Program, comm: &Comm) -> Vec<u64> {
                 }
                 digest.push(fnv1a(&rbuf));
             }
+            Phase::HotSpot { len, rounds } => {
+                exec_hotspot(comm, seed, pi, *len, *rounds, &byte, &mut digest);
+            }
             Phase::ModernAllReduce => {
                 let m = crate::modern::Communicator::world(comm);
                 let wr = comm.rank_ctx().world_rank as u64;
@@ -606,6 +649,57 @@ fn exec_immediate(
             );
             digest.push(fnv1a(&rbufs[i]));
         }
+    }
+}
+
+/// Hot-spot phase: every rank ≠ 0 posts all `rounds` isends to rank 0 up
+/// front, then waits; rank 0 drains with blocking receives in per-sender
+/// round order. The skew is the point — while rank 0 walks sender 1's
+/// messages, everyone else's traffic piles up against the credit window
+/// instead of growing rank 0's unexpected queue without bound. Specific
+/// (source, tag) receives plus per-sender FIFO make the outcome
+/// schedule-deterministic, so the digest is chaos- and backend-stable.
+fn exec_hotspot(
+    comm: &Comm,
+    seed: u64,
+    pi: usize,
+    len: usize,
+    rounds: usize,
+    byte: &Datatype,
+    digest: &mut Vec<u64>,
+) {
+    let me = comm.rank();
+    let pn = comm.size();
+    let tag = tag_base(pi);
+    if me == 0 {
+        let mut buf = vec![0u8; len];
+        for src in 1..pn {
+            for round in 0..rounds {
+                let st = comm
+                    .recv(&mut buf, len, byte, src as i32, tag)
+                    .unwrap_or_else(|e| panic!("phase {pi} hotspot recv: {e}"));
+                let want = pbytes(seed, &[pi as u64, src as u64, round as u64], len);
+                assert!(
+                    st.bytes == len && buf == want,
+                    "phase {pi} rank 0: hotspot payload from {src} round {round} corrupt \
+                     (seed {seed:#x})"
+                );
+                digest.push(fnv1a(&buf));
+            }
+        }
+    } else {
+        let payloads: Vec<Vec<u8>> = (0..rounds)
+            .map(|round| pbytes(seed, &[pi as u64, me as u64, round as u64], len))
+            .collect();
+        let reqs: Vec<Request> = payloads
+            .iter()
+            .map(|p| {
+                comm.isend(p, len, byte, 0, tag)
+                    .unwrap_or_else(|e| panic!("phase {pi} hotspot isend: {e}"))
+            })
+            .collect();
+        wait_all(&reqs).unwrap_or_else(|e| panic!("phase {pi} hotspot waitall: {e}"));
+        digest.push(rounds as u64);
     }
 }
 
@@ -978,6 +1072,28 @@ mod tests {
     fn tiny_differential_passes() {
         let p = Program::generate(7, 2);
         assert_differential(&p, &[1]);
+    }
+
+    #[test]
+    fn hotspot_showcase_runs_clean_on_a_faithful_fabric() {
+        let p = Program::hotspot_showcase(3);
+        let u = Universe::test(3).calm().audited(true);
+        let d = p.run(&u);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d, p.run(&u));
+    }
+
+    #[test]
+    fn hotspot_differential_survives_chaos() {
+        // A trimmed flood: enough rounds to overrun any pressure-mode
+        // credit window, small enough to keep the test quick. Chaos seeds
+        // that draw pressure mode run this with window = 1.
+        let p = Program {
+            seed: 0xF_100D,
+            nranks: 2,
+            phases: vec![Phase::HotSpot { len: 8, rounds: 40 }, Phase::Barrier],
+        };
+        assert_differential(&p, &[3, 11]);
     }
 
     #[test]

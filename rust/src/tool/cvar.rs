@@ -76,6 +76,12 @@ pub fn cvars() -> Vec<CvarInfo> {
             category: "transport",
         },
         CvarInfo {
+            name: "p2p_eager_credits",
+            description: "per-peer eager credit window for new universes: a non-negative integer | off | auto (env FERROMPI_EAGER_CREDITS; a cvar write wins, 'auto' defers to the env again; 0/off disables flow control)",
+            writable: true,
+            category: "transport",
+        },
+        CvarInfo {
             name: "deadlock_timeout_s",
             description: "progress-engine deadlock watchdog (read-only; set FERROMPI_DEADLOCK_S)",
             writable: false,
@@ -102,6 +108,12 @@ pub fn cvars() -> Vec<CvarInfo> {
         CvarInfo {
             name: "chaos_yield_permille",
             description: "probability (‰) of a scheduling yield per progress-loop turn; 'auto' = derived from the seed",
+            writable: true,
+            category: "chaos",
+        },
+        CvarInfo {
+            name: "chaos_pressure",
+            description: "flow-control pressure mode (window=1, tiny pending queues and mailboxes): on | off | auto ('auto' = derived from the seed; env-sourced chaos keeps it off unless written)",
             writable: true,
             category: "chaos",
         },
@@ -174,6 +186,11 @@ pub fn cvar_read(name: &str) -> Result<String> {
             Ok(k) => Ok(k.label().into()),
             Err(e) => Err(mpi_err!(Arg, "{e}")),
         },
+        "p2p_eager_credits" => match crate::transport::flow::effective_window() {
+            Ok(0) => Ok("off".into()),
+            Ok(w) => Ok(w.to_string()),
+            Err(e) => Err(mpi_err!(Arg, "{e}")),
+        },
         "deadlock_timeout_s" => Ok(std::env::var("FERROMPI_DEADLOCK_S").unwrap_or_else(|_| "60".into())),
         "chaos_seed" => Ok(crate::sim::chaos::effective_seed().to_string()),
         "chaos_delay_ns" => Ok(chaos_intensity(crate::sim::chaos::delay_override(), |c| {
@@ -187,6 +204,14 @@ pub fn cvar_read(name: &str) -> Result<String> {
         "chaos_yield_permille" => Ok(chaos_intensity(crate::sim::chaos::yield_override(), |c| {
             format!("{:.0}", c.yield_prob * 1000.0)
         })),
+        "chaos_pressure" => Ok(match crate::sim::chaos::pressure_override() {
+            Some(true) => "on".into(),
+            Some(false) => "off".into(),
+            None => match crate::sim::chaos::ChaosConfig::from_env() {
+                Some(c) if c.pressure => "on".into(),
+                _ => "off".into(),
+            },
+        }),
         other => Err(mpi_err!(Arg, "unknown cvar '{other}'")),
     }
 }
@@ -265,6 +290,17 @@ pub fn cvar_write(name: &str, value: &str) -> Result<()> {
             crate::transport::backend::write_backend_cvar(Some(k));
             Ok(())
         }
+        "p2p_eager_credits" => {
+            if value == "auto" {
+                crate::transport::flow::write_credits_cvar(None);
+                return Ok(());
+            }
+            // parse_credits rejects unknown spellings with an error that
+            // lists every valid one (the backend-knob UX convention).
+            let w = crate::transport::flow::parse_credits(value).map_err(|e| mpi_err!(Arg, "{e}"))?;
+            crate::transport::flow::write_credits_cvar(Some(w));
+            Ok(())
+        }
         "deadlock_timeout_s" => Err(mpi_err!(Arg, "cvar 'deadlock_timeout_s' is read-only")),
         // The chaos cvars all accept "auto": back to unset (seed-derived
         // intensities; the seed defers to the environment again).
@@ -307,6 +343,21 @@ pub fn cvar_write(name: &str, value: &str) -> Result<()> {
             crate::sim::chaos::write_yield_cvar(v);
             Ok(())
         }
+        "chaos_pressure" => match value.trim() {
+            "auto" => {
+                crate::sim::chaos::reset_pressure_cvar();
+                Ok(())
+            }
+            "on" | "1" | "true" => {
+                crate::sim::chaos::write_pressure_cvar(true);
+                Ok(())
+            }
+            "off" | "0" | "false" => {
+                crate::sim::chaos::write_pressure_cvar(false);
+                Ok(())
+            }
+            other => Err(mpi_err!(Arg, "bad pressure mode '{other}' (valid: on | off | auto)")),
+        },
         other => Err(mpi_err!(Arg, "unknown cvar '{other}'")),
     }
 }
@@ -439,6 +490,44 @@ mod tests {
         cvar_write("transport_backend", "auto").unwrap();
         if std::env::var("FERROMPI_BACKEND").is_err() {
             assert_eq!(cvar_read("transport_backend").unwrap(), "inproc");
+        }
+    }
+
+    #[test]
+    fn flow_control_cvar_group_roundtrips() {
+        // Serialized: these knobs are process-global and other tests
+        // (flow.rs, chaos.rs unit tests) write them too.
+        let _g = crate::sim::chaos::CVAR_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(cvar_index("p2p_eager_credits").is_some());
+        assert!(cvar_index("chaos_pressure").is_some());
+
+        cvar_write("p2p_eager_credits", "16").unwrap();
+        assert_eq!(cvar_read("p2p_eager_credits").unwrap(), "16");
+        cvar_write("p2p_eager_credits", "off").unwrap();
+        assert_eq!(cvar_read("p2p_eager_credits").unwrap(), "off");
+        let err = format!("{}", cvar_write("p2p_eager_credits", "many").unwrap_err());
+        for valid in ["non-negative integer", "off", "auto"] {
+            assert!(err.contains(valid), "missing '{valid}' in: {err}");
+        }
+        cvar_write("p2p_eager_credits", "auto").unwrap();
+        if std::env::var("FERROMPI_EAGER_CREDITS").is_err() {
+            assert_eq!(
+                cvar_read("p2p_eager_credits").unwrap(),
+                crate::transport::flow::DEFAULT_WINDOW.to_string()
+            );
+        }
+
+        cvar_write("chaos_pressure", "on").unwrap();
+        assert_eq!(cvar_read("chaos_pressure").unwrap(), "on");
+        cvar_write("chaos_pressure", "off").unwrap();
+        assert_eq!(cvar_read("chaos_pressure").unwrap(), "off");
+        let err = format!("{}", cvar_write("chaos_pressure", "sorta").unwrap_err());
+        for valid in ["on", "off", "auto"] {
+            assert!(err.contains(valid), "missing '{valid}' in: {err}");
+        }
+        cvar_write("chaos_pressure", "auto").unwrap();
+        if std::env::var("FERROMPI_CHAOS_SEED").is_err() {
+            assert_eq!(cvar_read("chaos_pressure").unwrap(), "off", "no chaos → no pressure");
         }
     }
 

@@ -34,6 +34,8 @@ pub fn pvars() -> Vec<PvarInfo> {
         PvarInfo { name: "fabric_intra_node_msgs", description: "intra-node transfers", class: Counter, category: "transport" },
         PvarInfo { name: "fabric_inter_node_msgs", description: "inter-node transfers", class: Counter, category: "transport" },
         PvarInfo { name: "fabric_mailbox_hwm", description: "deepest delivery queue observed", class: HighWatermark, category: "transport" },
+        PvarInfo { name: "credits_stalled", description: "eager sends parked in a pending queue for lack of credits or mailbox space (flow control, docs/FLOWCONTROL.md)", class: Counter, category: "transport" },
+        PvarInfo { name: "eager_demoted", description: "eager-eligible sends demoted to the rendezvous protocol because the per-peer pending queue was full", class: Counter, category: "transport" },
         PvarInfo { name: "backend_frames_tx", description: "packets handed to the transport backend for delivery", class: Counter, category: "transport" },
         PvarInfo { name: "backend_frames_rx", description: "packets received from the transport backend", class: Counter, category: "transport" },
         PvarInfo { name: "backend_bytes_tx", description: "payload bytes handed to the transport backend", class: Counter, category: "transport" },
@@ -105,6 +107,8 @@ impl<'a> PvarSession<'a> {
             "fabric_intra_node_msgs" => f.intra_node_msgs.load(Ordering::Relaxed),
             "fabric_inter_node_msgs" => f.inter_node_msgs.load(Ordering::Relaxed),
             "fabric_mailbox_hwm" => f.mailbox_hwm.load(Ordering::Relaxed),
+            "credits_stalled" => f.credits_stalled.load(Ordering::Relaxed),
+            "eager_demoted" => f.eager_demoted.load(Ordering::Relaxed),
             "backend_frames_tx" => f.backend.frames_tx.load(Ordering::Relaxed),
             "backend_frames_rx" => f.backend.frames_rx.load(Ordering::Relaxed),
             "backend_bytes_tx" => f.backend.bytes_tx.load(Ordering::Relaxed),

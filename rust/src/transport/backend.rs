@@ -84,9 +84,12 @@ pub fn protocol_class(kind: &PacketKind) -> ProtocolClass {
             }
         }
         // Token-addressed replies: deliverable on any stream; ride p2p.
-        PacketKind::Cts { .. } | PacketKind::RData { .. } | PacketKind::SsendAck { .. } => {
-            ProtocolClass::P2p
-        }
+        // Credit returns are per-peer aggregates with no ordering needs
+        // of their own and ride the same stream.
+        PacketKind::Cts { .. }
+        | PacketKind::RData { .. }
+        | PacketKind::SsendAck { .. }
+        | PacketKind::CreditReturn { .. } => ProtocolClass::P2p,
         PacketKind::RmaPut { .. }
         | PacketKind::RmaGet { .. }
         | PacketKind::RmaAcc { .. }
@@ -164,6 +167,17 @@ pub trait Backend: Send + Sync + std::fmt::Debug {
     /// ship). Must never drop or reorder within a protocol class.
     fn deliver(&self, to: usize, pkt: Packet);
 
+    /// Backpressure-aware delivery: like `deliver`, but a payload packet
+    /// aimed at a *full bounded* destination queue comes back `Err` for
+    /// the producer to park and retry. Control packets always land.
+    /// Backends whose wire already exerts its own backpressure (the shm
+    /// ring blocks when full, TCP has flow control) keep the infallible
+    /// default — the bound there is the transport itself.
+    fn try_deliver(&self, to: usize, pkt: Packet) -> Result<(), Packet> {
+        self.deliver(to, pkt);
+        Ok(())
+    }
+
     /// Chaos-mode delivery: insert at a random legal queue position
     /// (never ahead of an earlier packet from the same sender). Returns
     /// whether the packet overtook anything. Only the in-process backend
@@ -171,6 +185,24 @@ pub trait Backend: Send + Sync + std::fmt::Debug {
     fn deliver_reordered(&self, to: usize, pkt: Packet, _rng: &mut Rng) -> bool {
         self.deliver(to, pkt);
         false
+    }
+
+    /// Backpressure-aware chaos delivery: `try_deliver` admission with
+    /// `deliver_reordered` placement. `Ok(bool)` is the overtake flag.
+    fn try_deliver_reordered(
+        &self,
+        to: usize,
+        pkt: Packet,
+        rng: &mut Rng,
+    ) -> Result<bool, Packet> {
+        Ok(self.deliver_reordered(to, pkt, rng))
+    }
+
+    /// Block up to `timeout` for a payload slot in `to`'s queue to free
+    /// up. `true` means space was observed (the caller still re-attempts
+    /// `try_deliver`). Unbounded backends trivially return `true`.
+    fn wait_deliver_space(&self, _to: usize, _timeout: Duration) -> bool {
+        true
     }
 
     /// Non-blocking: move everything queued for `rank` into `out`.
@@ -214,7 +246,16 @@ pub struct InprocBackend {
 
 impl InprocBackend {
     pub fn new(nranks: usize, stats: Arc<BackendStats>) -> InprocBackend {
-        InprocBackend { mailboxes: (0..nranks).map(|_| Mailbox::new()).collect(), stats }
+        InprocBackend::bounded(nranks, stats, 0)
+    }
+
+    /// In-process backend with bounded per-rank mailboxes (`capacity` in
+    /// payload-class packets per rank; 0 = unbounded).
+    pub fn bounded(nranks: usize, stats: Arc<BackendStats>, capacity: usize) -> InprocBackend {
+        InprocBackend {
+            mailboxes: (0..nranks).map(|_| Mailbox::bounded(capacity)).collect(),
+            stats,
+        }
     }
 
     fn count_drained(&self, out: &[Packet], from: usize) {
@@ -234,9 +275,32 @@ impl Backend for InprocBackend {
         self.mailboxes[to].push(pkt);
     }
 
+    fn try_deliver(&self, to: usize, pkt: Packet) -> Result<(), Packet> {
+        let payload = pkt.kind.payload_len();
+        self.mailboxes[to].try_push(pkt)?;
+        self.stats.count_tx(payload);
+        Ok(())
+    }
+
     fn deliver_reordered(&self, to: usize, pkt: Packet, rng: &mut Rng) -> bool {
         self.stats.count_tx(pkt.kind.payload_len());
         self.mailboxes[to].push_reordered(pkt, rng)
+    }
+
+    fn try_deliver_reordered(
+        &self,
+        to: usize,
+        pkt: Packet,
+        rng: &mut Rng,
+    ) -> Result<bool, Packet> {
+        let payload = pkt.kind.payload_len();
+        let overtook = self.mailboxes[to].try_push_reordered(pkt, rng)?;
+        self.stats.count_tx(payload);
+        Ok(overtook)
+    }
+
+    fn wait_deliver_space(&self, to: usize, timeout: Duration) -> bool {
+        self.mailboxes[to].wait_space(timeout)
     }
 
     fn poll(&self, rank: usize, out: &mut Vec<Packet>) {
@@ -321,6 +385,27 @@ mod tests {
         assert_eq!(stats.bytes_tx.load(Ordering::Relaxed), 16);
         assert_eq!(stats.bytes_rx.load(Ordering::Relaxed), 16);
         assert_eq!(stats.reconnects.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn bounded_inproc_backpressures_payloads_only() {
+        let stats = Arc::new(BackendStats::default());
+        let b = InprocBackend::bounded(2, stats.clone(), 2);
+        assert!(b.try_deliver(1, Packet { src: 0, depart_vt: 0.0, kind: eager(0, 1, 4) }).is_ok());
+        assert!(b.try_deliver(1, Packet { src: 0, depart_vt: 0.0, kind: eager(0, 2, 4) }).is_ok());
+        let refused = b.try_deliver(1, Packet { src: 0, depart_vt: 0.0, kind: eager(0, 3, 4) });
+        assert!(refused.is_err());
+        // Refused frames are not counted as transmitted.
+        assert_eq!(stats.frames_tx.load(Ordering::Relaxed), 2);
+        // Control traffic still lands while the queue is full.
+        assert!(b
+            .try_deliver(1, Packet { src: 0, depart_vt: 0.0, kind: PacketKind::CreditReturn { n: 1 } })
+            .is_ok());
+        assert!(!b.wait_deliver_space(1, Duration::from_millis(2)));
+        let mut out = Vec::new();
+        b.poll(1, &mut out);
+        assert_eq!(out.len(), 3);
+        assert!(b.wait_deliver_space(1, Duration::from_millis(2)));
     }
 
     #[test]

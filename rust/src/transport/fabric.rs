@@ -5,6 +5,7 @@
 //! process holds its own `Fabric` fronting a cross-process backend.
 
 use super::backend::{abort_marker, Backend, BackendKind, BackendStats, InprocBackend};
+use super::flow::FlowConfig;
 use super::netmodel::NetworkModel;
 use super::nodemap::NodeMap;
 use super::packet::{Packet, PacketKind};
@@ -34,6 +35,12 @@ pub struct FabricStats {
     pub inter_node_msgs: AtomicU64,
     /// High-watermark of any mailbox depth observed at delivery.
     pub mailbox_hwm: AtomicU64,
+    /// Eager sends that could not inject immediately for lack of credits
+    /// or mailbox space and were parked in a pending queue.
+    pub credits_stalled: AtomicU64,
+    /// Eager-eligible sends demoted to the rendezvous protocol because
+    /// the per-peer pending queue was full too.
+    pub eager_demoted: AtomicU64,
     /// Combine-engine blocks processed by `Step::Reduce` (native or
     /// offload block-wise path; the scalar fallback does not count).
     pub combine_blocks: AtomicU64,
@@ -50,23 +57,42 @@ pub struct FabricStats {
     pub backend: Arc<BackendStats>,
 }
 
+/// Stat bucket of a packet, captured *before* the packet is moved into a
+/// (possibly refused) delivery attempt so counters only bump on success.
+#[derive(Debug, Clone, Copy)]
+enum PacketClass {
+    Eager,
+    Rndv,
+    RmaPut,
+    RmaGet,
+    RmaAcc,
+    Ctrl,
+}
+
+fn class_of(kind: &PacketKind) -> PacketClass {
+    match kind {
+        PacketKind::Eager { .. } => PacketClass::Eager,
+        PacketKind::Rts { .. } | PacketKind::RData { .. } => PacketClass::Rndv,
+        PacketKind::RmaPut { .. } => PacketClass::RmaPut,
+        PacketKind::RmaGet { .. } => PacketClass::RmaGet,
+        PacketKind::RmaAcc { .. } | PacketKind::RmaCas { .. } => PacketClass::RmaAcc,
+        // Acks, credit returns and data responses are protocol replies
+        // (their payload bytes still land in `bytes_sent`).
+        _ => PacketClass::Ctrl,
+    }
+}
+
 impl FabricStats {
-    fn record(&self, kind: &PacketKind, same_node: bool, depth: usize) {
+    fn record(&self, class: PacketClass, payload: usize, same_node: bool, depth: usize) {
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);
-        self.bytes_sent.fetch_add(kind.payload_len() as u64, Ordering::Relaxed);
-        match kind {
-            PacketKind::Eager { .. } => self.eager_sent.fetch_add(1, Ordering::Relaxed),
-            PacketKind::Rts { .. } | PacketKind::RData { .. } => {
-                self.rndv_sent.fetch_add(1, Ordering::Relaxed)
-            }
-            PacketKind::RmaPut { .. } => self.rma_puts.fetch_add(1, Ordering::Relaxed),
-            PacketKind::RmaGet { .. } => self.rma_gets.fetch_add(1, Ordering::Relaxed),
-            PacketKind::RmaAcc { .. } | PacketKind::RmaCas { .. } => {
-                self.rma_accs.fetch_add(1, Ordering::Relaxed)
-            }
-            // Acks and data responses are protocol replies (their payload
-            // bytes still land in `bytes_sent`).
-            _ => self.ctrl_sent.fetch_add(1, Ordering::Relaxed),
+        self.bytes_sent.fetch_add(payload as u64, Ordering::Relaxed);
+        match class {
+            PacketClass::Eager => self.eager_sent.fetch_add(1, Ordering::Relaxed),
+            PacketClass::Rndv => self.rndv_sent.fetch_add(1, Ordering::Relaxed),
+            PacketClass::RmaPut => self.rma_puts.fetch_add(1, Ordering::Relaxed),
+            PacketClass::RmaGet => self.rma_gets.fetch_add(1, Ordering::Relaxed),
+            PacketClass::RmaAcc => self.rma_accs.fetch_add(1, Ordering::Relaxed),
+            PacketClass::Ctrl => self.ctrl_sent.fetch_add(1, Ordering::Relaxed),
         };
         if same_node {
             self.intra_node_msgs.fetch_add(1, Ordering::Relaxed);
@@ -74,6 +100,39 @@ impl FabricStats {
             self.inter_node_msgs.fetch_add(1, Ordering::Relaxed);
         }
         self.mailbox_hwm.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+}
+
+/// A packet whose delivery cost and chaos perturbations are already
+/// rolled, but which has not been handed to the backend yet. Produced by
+/// [`Fabric::prepare`]; shipped by [`Fabric::ship`] (unconditional) or
+/// [`Fabric::try_ship`] (backpressure-aware). Rolling chaos exactly once
+/// here keeps the per-rank chaos RNG consumption a pure function of the
+/// rank's send sequence — retries after backpressure re-ship the *same*
+/// prepared packet rather than re-rolling, so a seed stays replayable.
+#[derive(Debug)]
+pub struct PreparedSend {
+    to: usize,
+    reorder: bool,
+    /// Sender clock reading at prepare time (trace event timestamp).
+    now_vt: f64,
+    pkt: Packet,
+}
+
+impl PreparedSend {
+    /// Destination rank.
+    pub fn dest(&self) -> usize {
+        self.to
+    }
+
+    /// The departure (arrival-at-receiver) timestamp rolled at prepare.
+    pub fn depart_vt(&self) -> f64 {
+        self.pkt.depart_vt
+    }
+
+    /// The packet kind (for diagnostics / queue introspection).
+    pub fn kind(&self) -> &PacketKind {
+        &self.pkt.kind
     }
 }
 
@@ -107,6 +166,14 @@ pub struct Fabric {
     /// Seeded schedule perturbation, when this job runs in chaos mode
     /// (see [`crate::sim::chaos`]). `None` = faithful fabric.
     pub chaos: Option<ChaosState>,
+    /// Eager flow-control plan (credit windows, pending-queue and
+    /// mailbox bounds), resolved once per job. See `docs/FLOWCONTROL.md`.
+    pub flow: FlowConfig,
+    /// Ranks that have entered closure-time flow quiescence (in-process
+    /// jobs only): a quiescing rank's wait for outstanding credit
+    /// returns can terminate only once every peer has flushed its owed
+    /// sub-batch, which happens at that peer's own quiesce entry.
+    closed_ranks: AtomicU64,
     /// Per-rank event rings, recording while chaos is active; dumped into
     /// failure reports so a red run is replayable.
     pub trace: TraceBook,
@@ -130,8 +197,24 @@ impl Fabric {
 
     /// A fabric with an optional seeded perturbation plan. Chaos turns on
     /// tracing and (in pool-pressure mode) shrinks the wire-buffer pool.
-    /// Always in-process: chaos requires shared mailboxes.
+    /// Always in-process: chaos requires shared mailboxes. The flow plan
+    /// comes from the environment (`FERROMPI_EAGER_CREDITS` / cvar), with
+    /// chaos pressure mode overriding it; a malformed spelling panics
+    /// with the valid values.
     pub fn with_chaos(nodemap: NodeMap, model: NetworkModel, chaos: Option<ChaosConfig>) -> Fabric {
+        let pressure = chaos.map_or(false, |c| c.pressure);
+        let flow = FlowConfig::resolve(nodemap.nranks(), pressure).unwrap_or_else(|e| panic!("{e}"));
+        Fabric::with_flow(nodemap, model, chaos, flow)
+    }
+
+    /// A fabric with an explicit flow-control plan (tests; the universe
+    /// resolves the plan once and passes it down).
+    pub fn with_flow(
+        nodemap: NodeMap,
+        model: NetworkModel,
+        chaos: Option<ChaosConfig>,
+        flow: FlowConfig,
+    ) -> Fabric {
         let n = nodemap.nranks();
         let pool = match chaos {
             Some(c) if c.pool_pressure => Arc::new(BufferPool::with_limits(
@@ -141,7 +224,8 @@ impl Fabric {
             _ => Arc::new(BufferPool::new()),
         };
         let stats = FabricStats::default();
-        let backend = Box::new(InprocBackend::new(n, Arc::clone(&stats.backend)));
+        let backend =
+            Box::new(InprocBackend::bounded(n, Arc::clone(&stats.backend), flow.mailbox_cap));
         Fabric {
             nodemap,
             model,
@@ -156,6 +240,8 @@ impl Fabric {
             files: std::sync::Mutex::new(std::collections::HashMap::new()),
             trace: TraceBook::new(n, chaos.is_some()),
             chaos: chaos.map(|c| ChaosState::new(c, n)),
+            flow,
+            closed_ranks: AtomicU64::new(0),
         }
     }
 
@@ -171,6 +257,7 @@ impl Fabric {
         pool: Arc<BufferPool>,
         backend: Box<dyn Backend>,
         backend_stats: Arc<BackendStats>,
+        flow: FlowConfig,
     ) -> Fabric {
         let n = nodemap.nranks();
         assert!(local_rank < n);
@@ -189,6 +276,8 @@ impl Fabric {
             files: std::sync::Mutex::new(std::collections::HashMap::new()),
             trace: TraceBook::new(n, false),
             chaos: None,
+            flow,
+            closed_ranks: AtomicU64::new(0),
         }
     }
 
@@ -264,33 +353,116 @@ impl Fabric {
     /// senders' queued packets (never its own — per-sender FIFO is the
     /// non-overtaking substrate and is preserved unconditionally).
     pub fn send(&self, from: usize, to: usize, now_vt: f64, kind: PacketKind) -> f64 {
+        self.ship(self.prepare(from, to, now_vt, kind))
+    }
+
+    /// Roll the delivery cost and chaos perturbations for a packet
+    /// without handing it to the backend. The prepared packet can be
+    /// shipped now, parked in a pending queue, or retried after
+    /// backpressure — the rolls happen exactly once either way.
+    pub fn prepare(&self, from: usize, to: usize, now_vt: f64, kind: PacketKind) -> PreparedSend {
         let same = self.nodemap.same_node(from, to);
         let mut cost = self.model.cost_ns(kind.payload_len(), same);
+        let mut reorder = false;
         if let Some(ch) = &self.chaos {
             cost += ch.extra_delay_ns(from);
+            reorder = ch.roll_reorder(from);
         }
-        let depart_vt = now_vt + cost;
-        self.stats.record(&kind, same, self.backend.queued(to) + 1);
+        PreparedSend {
+            to,
+            reorder,
+            now_vt,
+            pkt: Packet { src: from, depart_vt: now_vt + cost, kind },
+        }
+    }
+
+    /// Ship a prepared packet unconditionally (the classic path: every
+    /// control packet, and payload packets that already hold a credit).
+    pub fn ship(&self, p: PreparedSend) -> f64 {
+        match self.ship_inner(p, false) {
+            Ok(depart_vt) => depart_vt,
+            Err(_) => unreachable!("unconditional ship cannot be refused"),
+        }
+    }
+
+    /// Backpressure-aware ship: a payload packet aimed at a full bounded
+    /// mailbox comes back `Err` untouched (stats and trace record
+    /// nothing) for the caller to park and re-ship later.
+    pub fn try_ship(&self, p: PreparedSend) -> Result<f64, PreparedSend> {
+        self.ship_inner(p, true)
+    }
+
+    fn ship_inner(&self, p: PreparedSend, fallible: bool) -> Result<f64, PreparedSend> {
+        let PreparedSend { to, reorder, now_vt, pkt } = p;
+        let from = pkt.src;
+        let depart_vt = pkt.depart_vt;
+        let same = self.nodemap.same_node(from, to);
+        let class = class_of(&pkt.kind);
+        let payload = pkt.kind.payload_len();
+        let label = pkt.kind.label();
+        let overtook = match (&self.chaos, reorder) {
+            (Some(ch), true) => {
+                let res = if fallible {
+                    ch.with_rng(from, |r| self.backend.try_deliver_reordered(to, pkt, r))
+                } else {
+                    Ok(ch.with_rng(from, |r| self.backend.deliver_reordered(to, pkt, r)))
+                };
+                match res {
+                    Ok(o) => o,
+                    Err(pkt) => return Err(PreparedSend { to, reorder, now_vt, pkt }),
+                }
+            }
+            _ => {
+                if fallible {
+                    if let Err(pkt) = self.backend.try_deliver(to, pkt) {
+                        return Err(PreparedSend { to, reorder, now_vt, pkt });
+                    }
+                } else {
+                    self.backend.deliver(to, pkt);
+                }
+                false
+            }
+        };
+        self.stats.record(class, payload, same, self.backend.queued(to).max(1));
         if self.trace.enabled() {
             self.trace.record(
                 from,
                 now_vt,
                 "send",
-                format!("{} -> r{to} {}B arr={depart_vt:.0}", kind.label(), kind.payload_len()),
+                format!("{label} -> r{to} {payload}B arr={depart_vt:.0}"),
             );
-        }
-        let pkt = Packet { src: from, depart_vt, kind };
-        match &self.chaos {
-            Some(ch) if ch.roll_reorder(from) => {
-                let overtook = ch.with_rng(from, |r| self.backend.deliver_reordered(to, pkt, r));
-                if overtook {
-                    ch.reorders.fetch_add(1, Ordering::Relaxed);
-                    self.trace.record(from, now_vt, "reorder", format!("packet to r{to} overtook"));
-                }
+            if overtook {
+                self.trace.record(from, now_vt, "reorder", format!("packet to r{to} overtook"));
             }
-            _ => self.backend.deliver(to, pkt),
         }
-        depart_vt
+        if overtook {
+            if let Some(ch) = &self.chaos {
+                ch.reorders.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(depart_vt)
+    }
+
+    /// A rank has entered closure-time flow quiescence (flushed its owed
+    /// credit returns). Idempotence is the caller's job: once per rank
+    /// per job.
+    pub fn note_rank_closed(&self) {
+        self.closed_ranks.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Has every rank of the job entered closure? Trivially true in
+    /// launched mode — sibling processes cannot be observed, so callers
+    /// fall back to a flat grace period there.
+    pub fn all_ranks_closed(&self) -> bool {
+        self.local_rank.is_some()
+            || self.closed_ranks.load(Ordering::SeqCst) >= self.nranks() as u64
+    }
+
+    /// Block up to `timeout` for payload space in `to`'s delivery queue.
+    /// Callers re-attempt [`Fabric::try_ship`] afterwards; a `false`
+    /// return just means the wait timed out.
+    pub fn wait_ship_space(&self, to: usize, timeout: Duration) -> bool {
+        self.backend.wait_deliver_space(to, timeout)
     }
 
     /// One progress-loop turn's worth of scheduling jitter: in chaos mode
@@ -416,6 +588,7 @@ mod tests {
         cfg.max_delay_ns = 10_000.0;
         cfg.reorder_prob = 1.0;
         cfg.pool_pressure = false;
+        cfg.pressure = false;
         let f = Fabric::with_chaos(NodeMap::new(1, 3), NetworkModel::zero(), Some(cfg));
         let payload = |i: u8| super::super::wire::WireBytes::from_vec(vec![i; 16]);
         for i in 0..10u8 {
@@ -456,6 +629,42 @@ mod tests {
         assert!(!f.is_multiprocess());
         f.chaos_tick(0); // no-op, must not panic
         assert_eq!(f.trace_report(), "");
+    }
+
+    #[test]
+    fn bounded_fabric_backpressures_try_ship_only() {
+        use super::super::flow::FlowConfig;
+        let flow = FlowConfig { window: 1, pending_cap: 2, mailbox_cap: 2 };
+        let f = Fabric::with_flow(NodeMap::new(1, 2), NetworkModel::zero(), None, flow);
+        let payload = || super::super::wire::WireBytes::from_vec(vec![0; 8]);
+        let eager = || PacketKind::Eager { ctx: 0, tag: 0, data: payload(), sync_token: None };
+        let sent_before = f.stats.msgs_sent.load(Ordering::Relaxed);
+        for _ in 0..2 {
+            let p = f.prepare(0, 1, 0.0, eager());
+            assert!(f.try_ship(p).is_ok());
+        }
+        // Third payload refuses — and records nothing.
+        let p = f.prepare(0, 1, 0.0, eager());
+        let refused = f.try_ship(p);
+        assert!(refused.is_err());
+        assert_eq!(f.stats.msgs_sent.load(Ordering::Relaxed), sent_before + 2);
+        // The refused prepared send re-ships fine after a drain.
+        assert!(!f.wait_ship_space(1, Duration::from_millis(2)));
+        let mut out = Vec::new();
+        f.poll(1, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(f.wait_ship_space(1, Duration::from_millis(2)));
+        assert!(f.try_ship(refused.unwrap_err()).is_ok());
+        // Control packets always get through, even into a full queue.
+        for _ in 0..2 {
+            let p = f.prepare(0, 1, 0.0, eager());
+            let _ = f.try_ship(p);
+        }
+        assert_eq!(
+            f.send(0, 1, 0.0, PacketKind::CreditReturn { n: 1 }),
+            0.0 + f.model.cost_ns(0, true)
+        );
+        assert_eq!(f.flow.window, 1);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Eager-path flow control configuration: per-peer credit windows and the
+//! bounded-mailbox sizing derived from them.
+//!
+//! The protocol (see `docs/FLOWCONTROL.md`): every (sender, receiver)
+//! pair starts with `window` credits. Injecting an eager packet consumes
+//! one; the receiver returns credits when the message is *delivered into
+//! a user buffer* (not merely queued — the unexpected queue is what the
+//! window bounds), batched into [`super::packet::PacketKind::CreditReturn`]
+//! packets of up to half a window so the uncontended path pays no
+//! per-message control traffic. A sender out of credits parks the
+//! prepared packet in a bounded per-peer pending queue; when that queue
+//! is full too, new sends demote to rendezvous, which self-limits via the
+//! RTS/CTS handshake. Rendezvous and RMA payloads are receiver-paced
+//! already and consume no credits.
+//!
+//! Resolution precedence for the window, matching every other knob: a
+//! written `p2p_eager_credits` cvar wins, then `FERROMPI_EAGER_CREDITS`,
+//! then the default. `0` (or `off`) disables flow control entirely —
+//! the pre-credit unbounded behavior, kept as the differential baseline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Default per-peer credit window. Generous: a peer must have this many
+/// eager messages simultaneously undelivered before flow control does
+/// anything at all, so ordinary traffic never notices it.
+pub const DEFAULT_WINDOW: usize = 1024;
+
+/// Parked sends per peer before new eager sends demote to rendezvous.
+pub const DEFAULT_PENDING_CAP: usize = 64;
+
+/// Pressure mode: window of 1 — every eager send must wait for the
+/// previous one to be delivered.
+pub const PRESSURE_WINDOW: usize = 1;
+
+/// Pressure mode: park at most 2 sends per peer, so demotion fires.
+pub const PRESSURE_PENDING_CAP: usize = 2;
+
+/// Pressure mode: a handful of payload slots per mailbox.
+pub const PRESSURE_MAILBOX_SLOTS: usize = 4;
+
+/// Sentinel for "cvar not written".
+const UNSET: u64 = u64::MAX;
+
+static CREDITS_CVAR: AtomicU64 = AtomicU64::new(UNSET);
+
+/// `p2p_eager_credits` cvar write; `None` ("auto") resets to environment.
+pub fn write_credits_cvar(v: Option<usize>) {
+    CREDITS_CVAR.store(v.map_or(UNSET, |n| n as u64), Ordering::Relaxed);
+}
+
+/// Current cvar override, if written.
+pub fn credits_cvar() -> Option<usize> {
+    match CREDITS_CVAR.load(Ordering::Relaxed) {
+        UNSET => None,
+        v => Some(v as usize),
+    }
+}
+
+/// Parse a credit-window spelling. Accepts a non-negative integer,
+/// `off` (alias for 0), or `auto` (the default window). Anything else
+/// errors listing every valid spelling (the backend-knob UX convention).
+pub fn parse_credits(s: &str) -> Result<usize, String> {
+    match s.trim() {
+        "auto" => Ok(DEFAULT_WINDOW),
+        "off" => Ok(0),
+        t => t.parse::<u32>().map(|n| n as usize).map_err(|_| {
+            format!(
+                "unknown eager-credit window '{t}' (valid: a non-negative integer | off | auto)"
+            )
+        }),
+    }
+}
+
+/// The per-peer credit window for new jobs: cvar > `FERROMPI_EAGER_CREDITS`
+/// > default. Malformed values are an error, never a silent fallback.
+pub fn effective_window() -> Result<usize, String> {
+    if let Some(v) = credits_cvar() {
+        return Ok(v);
+    }
+    match std::env::var("FERROMPI_EAGER_CREDITS") {
+        Ok(v) => parse_credits(&v),
+        Err(_) => Ok(DEFAULT_WINDOW),
+    }
+}
+
+/// Resolved flow-control plan for one job, shared by every rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowConfig {
+    /// Per-peer credit window; 0 disables flow control.
+    pub window: usize,
+    /// Parked sends per peer before demotion to rendezvous.
+    pub pending_cap: usize,
+    /// Payload slots per rank mailbox; 0 = unbounded.
+    pub mailbox_cap: usize,
+}
+
+impl FlowConfig {
+    /// Flow control off: the pre-credit unbounded fabric.
+    pub fn off() -> FlowConfig {
+        FlowConfig { window: 0, pending_cap: 0, mailbox_cap: 0 }
+    }
+
+    /// Whether eager sends consume credits.
+    pub fn enabled(&self) -> bool {
+        self.window > 0
+    }
+
+    /// Batch size for credit returns: half a window, at least 1. The
+    /// receiver owes at most `return_batch - 1` credits per peer at any
+    /// instant, so a sender always regains liquidity after at most half
+    /// its window is delivered.
+    pub fn return_batch(&self) -> u32 {
+        ((self.window / 2).max(1)) as u32
+    }
+
+    /// Build a plan from a window for an `nranks`-rank job. The mailbox
+    /// bound is sized so credit-respecting traffic never hits it
+    /// (`window` eager slots per peer, plus slack for receiver-paced
+    /// rendezvous/RMA payloads): it is a guard rail against protocol
+    /// bugs, not a second throttle.
+    pub fn from_window(window: usize, nranks: usize) -> FlowConfig {
+        if window == 0 {
+            return FlowConfig::off();
+        }
+        FlowConfig {
+            window,
+            pending_cap: DEFAULT_PENDING_CAP,
+            mailbox_cap: window.saturating_mul(nranks.max(1)).saturating_add(64),
+        }
+    }
+
+    /// The starvation plan chaos pressure mode forces: window of 1, a
+    /// couple of parked sends, a handful of mailbox slots.
+    pub fn pressure() -> FlowConfig {
+        FlowConfig {
+            window: PRESSURE_WINDOW,
+            pending_cap: PRESSURE_PENDING_CAP,
+            mailbox_cap: PRESSURE_MAILBOX_SLOTS,
+        }
+    }
+
+    /// Resolve the plan for a new job: pressure mode wins, then the
+    /// cvar/env window.
+    pub fn resolve(nranks: usize, pressure: bool) -> Result<FlowConfig, String> {
+        if pressure {
+            return Ok(FlowConfig::pressure());
+        }
+        Ok(FlowConfig::from_window(effective_window()?, nranks))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::chaos::CVAR_TEST_LOCK;
+
+    #[test]
+    fn spellings_parse_and_unknowns_list_valid_values() {
+        assert_eq!(parse_credits("16"), Ok(16));
+        assert_eq!(parse_credits(" 0 "), Ok(0));
+        assert_eq!(parse_credits("off"), Ok(0));
+        assert_eq!(parse_credits("auto"), Ok(DEFAULT_WINDOW));
+        for bad in ["-3", "many", "1k"] {
+            let err = parse_credits(bad).unwrap_err();
+            for valid in ["non-negative integer", "off", "auto"] {
+                assert!(err.contains(valid), "missing '{valid}' in: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn cvar_beats_env_beats_default() {
+        let _guard = CVAR_TEST_LOCK.lock().unwrap();
+        write_credits_cvar(None);
+        assert_eq!(credits_cvar(), None);
+        write_credits_cvar(Some(7));
+        assert_eq!(credits_cvar(), Some(7));
+        assert_eq!(effective_window(), Ok(7));
+        write_credits_cvar(None);
+        // With no cvar and (in the test environment) no env override set
+        // by this test, the default window applies — unless an outer
+        // harness exported FERROMPI_EAGER_CREDITS, in which case that
+        // value must win. Both legs honored:
+        match std::env::var("FERROMPI_EAGER_CREDITS") {
+            Ok(v) => assert_eq!(effective_window(), parse_credits(&v)),
+            Err(_) => assert_eq!(effective_window(), Ok(DEFAULT_WINDOW)),
+        }
+    }
+
+    #[test]
+    fn plans_scale_with_window_and_ranks() {
+        let off = FlowConfig::from_window(0, 8);
+        assert!(!off.enabled());
+        assert_eq!(off.mailbox_cap, 0);
+        let f = FlowConfig::from_window(16, 4);
+        assert!(f.enabled());
+        assert_eq!(f.window, 16);
+        assert_eq!(f.return_batch(), 8);
+        assert_eq!(f.mailbox_cap, 16 * 4 + 64);
+        let tight = FlowConfig::pressure();
+        assert_eq!(tight.window, 1);
+        assert_eq!(tight.return_batch(), 1);
+        assert_eq!(tight.mailbox_cap, PRESSURE_MAILBOX_SLOTS);
+    }
+}

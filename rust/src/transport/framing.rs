@@ -80,6 +80,7 @@ const TAG_RMA_ACC: u8 = 7;
 const TAG_RMA_CAS: u8 = 8;
 const TAG_RMA_ACK: u8 = 9;
 const TAG_RMA_GET_RESP: u8 = 10;
+const TAG_CREDIT: u8 = 11;
 const TAG_ABORT: u8 = 0xFF;
 
 fn op_tag(op: OpKind) -> u8 {
@@ -356,6 +357,10 @@ pub fn encode_packet(pkt: &Packet, out: &mut Vec<u8>) {
             put_u64(out, *token);
             put_bytes(out, data.as_slice());
         }
+        PacketKind::CreditReturn { n } => {
+            header(out, TAG_CREDIT);
+            put_u32(out, *n);
+        }
     }
 }
 
@@ -444,6 +449,7 @@ pub fn decode_msg(body: &[u8], pool: &Arc<BufferPool>) -> Result<WireMsg, FrameE
             let data = c.payload(pool)?;
             PacketKind::RmaGetResp { token, data }
         }
+        TAG_CREDIT => PacketKind::CreditReturn { n: c.u32()? },
         other => return Err(FrameError::BadKind(other)),
     };
     finish(c, WireMsg::Packet(Packet { src, depart_vt, kind }))
@@ -555,6 +561,7 @@ mod tests {
             PacketKind::RmaCas { win: 3, off: 8, data: payload(pool, &[2u8; 16]), token: 8 },
             PacketKind::RmaAck { token: 9 },
             PacketKind::RmaGetResp { token: 10, data: payload(pool, &[3u8; 4]) },
+            PacketKind::CreditReturn { n: 17 },
         ];
         kinds
             .into_iter()
@@ -582,6 +589,9 @@ mod tests {
             ) => {
                 assert_eq!(m1.as_ref(), m2.as_ref(), "typemap must roundtrip exactly");
                 assert_eq!((o1, f1, n1), (o2, f2, n2));
+            }
+            (PacketKind::CreditReturn { n: n1 }, PacketKind::CreditReturn { n: n2 }) => {
+                assert_eq!(n1, n2, "credit count must roundtrip exactly");
             }
             _ => {}
         }

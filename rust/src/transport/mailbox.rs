@@ -1,6 +1,17 @@
 //! Per-rank delivery queue: a Mutex-protected FIFO with a Condvar for
 //! blocking waits. FIFO order per sender is what gives the matching engine
 //! the standard's non-overtaking guarantee.
+//!
+//! A mailbox may be **bounded**: capacity counts only payload-class
+//! packets ([`PacketKind::counts_against_capacity`]) — control packets
+//! (CTS, acks, credit returns) always get through, because they are the
+//! packets that *free* capacity and blocking them would deadlock the
+//! protocol. A full bounded mailbox refuses payload pushes through
+//! [`Mailbox::try_push`], returning the packet to the producer as a
+//! backpressure signal; producers park or drain-and-retry, they never
+//! spin-push. Every successful push wakes consumer-side
+//! [`Mailbox::wait_drain_into`] waiters; every drain wakes producer-side
+//! [`Mailbox::wait_space`] waiters.
 
 use super::packet::Packet;
 use crate::util::rng::Rng;
@@ -9,22 +20,74 @@ use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 #[derive(Debug, Default)]
+struct Inner {
+    q: VecDeque<Packet>,
+    /// Number of queued packets that count against `capacity`.
+    payload: usize,
+}
+
+#[derive(Debug, Default)]
 pub struct Mailbox {
-    q: Mutex<VecDeque<Packet>>,
+    inner: Mutex<Inner>,
+    /// Consumer side: signalled on every push.
     cv: Condvar,
+    /// Producer side: signalled whenever payload slots free up.
+    space_cv: Condvar,
+    /// Max payload-class packets queued at once; 0 = unbounded.
+    capacity: usize,
 }
 
 impl Mailbox {
+    /// Unbounded mailbox (capacity 0): every push is admitted.
     pub fn new() -> Mailbox {
         Mailbox::default()
     }
 
-    /// Deliver a packet (called from any rank thread).
+    /// Bounded mailbox: at most `capacity` payload-class packets queued.
+    /// `capacity` 0 means unbounded.
+    pub fn bounded(capacity: usize) -> Mailbox {
+        Mailbox { capacity, ..Mailbox::default() }
+    }
+
+    /// The payload-slot bound (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Deliver a packet unconditionally (called from any rank thread).
+    ///
+    /// On a bounded mailbox this *over-admits* past capacity rather than
+    /// dropping or blocking: it is the path for packets that already
+    /// crossed a wire (a socket pump thread or shm ring sweep cannot
+    /// refuse bytes that were sent) and for abort markers. In-fabric
+    /// producers that can still back off must use [`Mailbox::try_push`].
     pub fn push(&self, pkt: Packet) {
-        let mut q = self.q.lock().unwrap();
-        q.push_back(pkt);
-        drop(q);
+        let mut inner = self.inner.lock().unwrap();
+        if pkt.kind.counts_against_capacity() {
+            inner.payload += 1;
+        }
+        inner.q.push_back(pkt);
+        drop(inner);
         self.cv.notify_one();
+    }
+
+    /// Deliver a packet if the mailbox has room for it. Control packets
+    /// and pushes into an unbounded mailbox always succeed; a payload
+    /// push into a full bounded mailbox returns the packet unqueued so
+    /// the producer can park it and retry after draining its own inbox.
+    /// Wakes consumer-side waiters on success, exactly like `push`.
+    pub fn try_push(&self, pkt: Packet) -> Result<(), Packet> {
+        let mut inner = self.inner.lock().unwrap();
+        if pkt.kind.counts_against_capacity() {
+            if self.capacity > 0 && inner.payload >= self.capacity {
+                return Err(pkt);
+            }
+            inner.payload += 1;
+        }
+        inner.q.push_back(pkt);
+        drop(inner);
+        self.cv.notify_one();
+        Ok(())
     }
 
     /// Chaos-mode delivery: insert the packet at a random **legal**
@@ -35,39 +98,99 @@ impl Mailbox {
     /// (exactly the freedom a real interconnect has). Returns whether the
     /// packet actually overtook anything.
     pub fn push_reordered(&self, pkt: Packet, rng: &mut Rng) -> bool {
-        let mut q = self.q.lock().unwrap();
-        let floor = q.iter().rposition(|p| p.src == pkt.src).map(|i| i + 1).unwrap_or(0);
-        let pos = rng.range(floor, q.len() + 1);
-        let overtook = pos < q.len();
-        q.insert(pos, pkt);
-        drop(q);
+        let mut inner = self.inner.lock().unwrap();
+        if pkt.kind.counts_against_capacity() {
+            inner.payload += 1;
+        }
+        let overtook = Self::insert_reordered(&mut inner.q, pkt, rng);
+        drop(inner);
         self.cv.notify_one();
         overtook
     }
 
+    /// Capacity-checked chaos delivery: [`Mailbox::try_push`] admission
+    /// plus [`Mailbox::push_reordered`] placement, atomically. `Ok(bool)`
+    /// reports whether the packet overtook anything.
+    pub fn try_push_reordered(&self, pkt: Packet, rng: &mut Rng) -> Result<bool, Packet> {
+        let mut inner = self.inner.lock().unwrap();
+        if pkt.kind.counts_against_capacity() {
+            if self.capacity > 0 && inner.payload >= self.capacity {
+                return Err(pkt);
+            }
+            inner.payload += 1;
+        }
+        let overtook = Self::insert_reordered(&mut inner.q, pkt, rng);
+        drop(inner);
+        self.cv.notify_one();
+        Ok(overtook)
+    }
+
+    fn insert_reordered(q: &mut VecDeque<Packet>, pkt: Packet, rng: &mut Rng) -> bool {
+        let floor = q.iter().rposition(|p| p.src == pkt.src).map(|i| i + 1).unwrap_or(0);
+        let pos = rng.range(floor, q.len() + 1);
+        let overtook = pos < q.len();
+        q.insert(pos, pkt);
+        overtook
+    }
+
     /// Take everything currently queued (non-blocking). Appends to `out`
-    /// to let the caller reuse its scratch vector.
+    /// to let the caller reuse its scratch vector. Wakes producers that
+    /// are blocked on a full mailbox.
     pub fn drain_into(&self, out: &mut Vec<Packet>) {
-        let mut q = self.q.lock().unwrap();
-        out.extend(q.drain(..));
+        let mut inner = self.inner.lock().unwrap();
+        let freed = inner.payload;
+        inner.payload = 0;
+        out.extend(inner.q.drain(..));
+        drop(inner);
+        if freed > 0 {
+            self.space_cv.notify_all();
+        }
     }
 
     /// Block until at least one packet is queued or `timeout` elapses,
     /// then take everything. Returns the number of packets taken.
     pub fn wait_drain_into(&self, out: &mut Vec<Packet>, timeout: Duration) -> usize {
-        let mut q = self.q.lock().unwrap();
-        if q.is_empty() {
-            let (guard, _res) = self.cv.wait_timeout_while(q, timeout, |q| q.is_empty()).unwrap();
-            q = guard;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.q.is_empty() {
+            let (guard, _res) =
+                self.cv.wait_timeout_while(inner, timeout, |i| i.q.is_empty()).unwrap();
+            inner = guard;
         }
-        let n = q.len();
-        out.extend(q.drain(..));
+        let n = inner.q.len();
+        let freed = inner.payload;
+        inner.payload = 0;
+        out.extend(inner.q.drain(..));
+        drop(inner);
+        if freed > 0 {
+            self.space_cv.notify_all();
+        }
         n
+    }
+
+    /// Producer-side wait: block until a payload slot is free or
+    /// `timeout` elapses. Returns whether space was observed. Callers
+    /// must re-attempt `try_push` — space seen here can be taken by
+    /// another producer before the retry.
+    pub fn wait_space(&self, timeout: Duration) -> bool {
+        let inner = self.inner.lock().unwrap();
+        if self.capacity == 0 || inner.payload < self.capacity {
+            return true;
+        }
+        let (guard, _res) = self
+            .space_cv
+            .wait_timeout_while(inner, timeout, |i| i.payload >= self.capacity)
+            .unwrap();
+        guard.payload < self.capacity
     }
 
     /// Number of queued packets (tool pvar: receive-queue depth).
     pub fn len(&self) -> usize {
-        self.q.lock().unwrap().len()
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// Queued packets that occupy capacity slots.
+    pub fn payload_len(&self) -> usize {
+        self.inner.lock().unwrap().payload
     }
 
     pub fn is_empty(&self) -> bool {
@@ -92,6 +215,10 @@ mod tests {
                 sync_token: None,
             },
         }
+    }
+
+    fn ctrl(src: usize, token: u64) -> Packet {
+        Packet { src, depart_vt: 0.0, kind: PacketKind::SsendAck { token } }
     }
 
     #[test]
@@ -165,5 +292,91 @@ mod tests {
         let n = mb.wait_drain_into(&mut out, Duration::from_secs(5));
         assert_eq!(n, 1);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn bounded_mailbox_refuses_payload_when_full() {
+        let mb = Mailbox::bounded(2);
+        assert!(mb.try_push(pkt(0, 0)).is_ok());
+        assert!(mb.try_push(pkt(0, 1)).is_ok());
+        let refused = mb.try_push(pkt(0, 2));
+        assert!(refused.is_err(), "third payload packet must be refused");
+        // The refused packet comes back intact for the producer to park.
+        let back = refused.unwrap_err();
+        assert!(matches!(back.kind, PacketKind::Eager { tag: 2, .. }));
+        assert_eq!(mb.len(), 2);
+        assert_eq!(mb.payload_len(), 2);
+    }
+
+    #[test]
+    fn control_packets_bypass_capacity() {
+        let mb = Mailbox::bounded(1);
+        assert!(mb.try_push(pkt(0, 0)).is_ok());
+        // Full for payloads — but control packets must always land.
+        assert!(mb.try_push(ctrl(0, 1)).is_ok());
+        assert!(mb.try_push(Packet { src: 0, depart_vt: 0.0, kind: PacketKind::CreditReturn { n: 1 } }).is_ok());
+        assert!(mb.try_push(pkt(0, 1)).is_err());
+        assert_eq!(mb.len(), 3);
+        assert_eq!(mb.payload_len(), 1);
+    }
+
+    #[test]
+    fn forced_push_over_admits_and_wakes_consumer() {
+        let mb = Arc::new(Mailbox::bounded(1));
+        mb.push(pkt(0, 0));
+        // push (the wire-arrival path) may exceed the bound...
+        mb.push(pkt(0, 1));
+        assert_eq!(mb.payload_len(), 2);
+        // ...and still wakes blocked consumers.
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            mb2.push(pkt(1, 9));
+        });
+        let mut out = Vec::new();
+        mb.drain_into(&mut out);
+        let n = mb.wait_drain_into(&mut out, Duration::from_secs(5));
+        assert_eq!(n, 1);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn drain_wakes_blocked_producer() {
+        let mb = Arc::new(Mailbox::bounded(1));
+        assert!(mb.try_push(pkt(0, 0)).is_ok());
+        assert!(!mb.wait_space(Duration::from_millis(5)), "full mailbox has no space");
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            let mut out = Vec::new();
+            mb2.drain_into(&mut out);
+            out.len()
+        });
+        assert!(mb.wait_space(Duration::from_secs(5)), "drain must wake producers");
+        assert!(mb.try_push(pkt(0, 1)).is_ok());
+        assert_eq!(t.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn try_push_reordered_respects_capacity_and_fifo() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF00D);
+        let mb = Mailbox::bounded(3);
+        for i in 0..3 {
+            assert!(mb.try_push_reordered(pkt(0, i), &mut rng).is_ok());
+        }
+        assert!(mb.try_push_reordered(pkt(0, 3), &mut rng).is_err());
+        let mut out = Vec::new();
+        mb.drain_into(&mut out);
+        let tags: Vec<i32> = out
+            .iter()
+            .map(|p| match &p.kind {
+                PacketKind::Eager { tag, .. } => *tag,
+                _ => unreachable!(),
+            })
+            .collect();
+        let mut sorted = tags.clone();
+        sorted.sort_unstable();
+        assert_eq!(tags, sorted, "same-sender packets must stay FIFO even reordered");
     }
 }

@@ -30,6 +30,7 @@
 pub mod backend;
 pub mod clock;
 pub mod fabric;
+pub mod flow;
 pub mod framing;
 pub mod mailbox;
 pub mod netmodel;
@@ -45,7 +46,8 @@ pub use backend::{
     ProtocolClass,
 };
 pub use clock::VClock;
-pub use fabric::{Fabric, FabricStats};
+pub use fabric::{Fabric, FabricStats, PreparedSend};
+pub use flow::FlowConfig;
 pub use framing::{FrameDecoder, FrameError, WireMsg};
 pub use mailbox::Mailbox;
 pub use netmodel::NetworkModel;

@@ -93,6 +93,11 @@ pub enum PacketKind {
     RmaAck { token: u64 },
     /// Data response for get / get-accumulate / compare-and-swap.
     RmaGetResp { token: u64, data: WireBytes },
+    /// Flow control: the receiver has delivered `n` eager messages from
+    /// this packet's destination and returns that many credits. Returns
+    /// are batched (up to half a window per packet) so the uncontended
+    /// path pays no per-message control traffic.
+    CreditReturn { n: u32 },
 }
 
 impl PacketKind {
@@ -123,7 +128,24 @@ impl PacketKind {
             PacketKind::RmaCas { .. } => "rma_cas",
             PacketKind::RmaAck { .. } => "rma_ack",
             PacketKind::RmaGetResp { .. } => "rma_get_resp",
+            PacketKind::CreditReturn { .. } => "credit_return",
         }
+    }
+
+    /// Whether this packet occupies a slot in a bounded mailbox. Only
+    /// payload-class packets count: control packets (CTS, acks, credit
+    /// returns, get requests) must always get through, or the very
+    /// packets that *free* capacity would be blocked by the lack of it.
+    pub fn counts_against_capacity(&self) -> bool {
+        matches!(
+            self,
+            PacketKind::Eager { .. }
+                | PacketKind::RData { .. }
+                | PacketKind::RmaPut { .. }
+                | PacketKind::RmaAcc { .. }
+                | PacketKind::RmaCas { .. }
+                | PacketKind::RmaGetResp { .. }
+        )
     }
 }
 
@@ -179,5 +201,35 @@ mod tests {
             PacketKind::RmaGetResp { token: 2, data: WireBytes::from_vec(vec![0; 64]) };
         assert_eq!(resp.payload_len(), 64);
         assert_eq!(resp.label(), "rma_get_resp");
+    }
+
+    #[test]
+    fn credit_return_is_slotless_control() {
+        let cr = PacketKind::CreditReturn { n: 7 };
+        assert_eq!(cr.payload_len(), 0);
+        assert_eq!(cr.label(), "credit_return");
+        assert!(!cr.counts_against_capacity());
+    }
+
+    #[test]
+    fn capacity_accounting_tracks_payload_kinds() {
+        let eager = PacketKind::Eager {
+            ctx: 0,
+            tag: 1,
+            data: WireBytes::from_vec(vec![0; 10]),
+            sync_token: None,
+        };
+        assert!(eager.counts_against_capacity());
+        let rdata = PacketKind::RData { recv_token: 3, data: WireBytes::from_vec(vec![0; 5]) };
+        assert!(rdata.counts_against_capacity());
+        for ctrl in [
+            PacketKind::Rts { ctx: 0, tag: 1, nbytes: 1 << 20, token: 7, sync_token: None },
+            PacketKind::Cts { token: 1, recv_token: 2 },
+            PacketKind::SsendAck { token: 1 },
+            PacketKind::RmaGet { win: 1, off: 0, nbytes: 64, token: 2 },
+            PacketKind::RmaAck { token: 3 },
+        ] {
+            assert!(!ctrl.counts_against_capacity(), "{} must bypass bounds", ctrl.label());
+        }
     }
 }

@@ -20,6 +20,14 @@
 //!
 //! The mapping uses raw `mmap(2)` through an `extern "C"` declaration —
 //! the crate is std-only and std exposes no shared mappings.
+//!
+//! Flow control (docs/FLOWCONTROL.md): credit accounting lives above the
+//! backend, in the p2p engine — `CreditReturn` packets cross these rings
+//! like any other control frame. The backend keeps the *defaulted*
+//! `try_deliver`/`wait_deliver_space` trait methods because the ring
+//! itself is the bounded resource here: `push_frame` blocks the producer
+//! when the ring is full, which is exactly the wire-level backpressure a
+//! bounded mailbox models for the in-process backend.
 
 #![cfg(unix)]
 

@@ -18,6 +18,16 @@
 //! [`super::framing`]. One pump thread per accepted connection decodes
 //! frames into the local [`Mailbox`], whose condvar gives us real
 //! blocking waits (unlike the shm backend's polled rings).
+//!
+//! Flow control (docs/FLOWCONTROL.md): credit accounting lives above the
+//! backend, in the p2p engine — `CreditReturn` packets ride the p2p
+//! stream like any other control frame. The backend keeps the
+//! *defaulted* `try_deliver`/`wait_deliver_space` trait methods because
+//! TCP already flow-controls the wire: `write_all` blocks once the
+//! kernel send buffer and the receiver's window fill, so a sender cannot
+//! race unboundedly ahead of a slow pump thread. The engine-level credit
+//! window bounds what *does* grow without it — the receiver's
+//! unexpected queue.
 
 use super::backend::{
     abort_marker, protocol_class, Backend, BackendKind, BackendStats, ProtocolClass,

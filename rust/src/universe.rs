@@ -177,6 +177,15 @@ impl Universe {
                         let comm = Comm::world(ctx.clone());
                         let out = f(&comm);
                         drop(comm);
+                        // Drain the flow-control ledger before the thread
+                        // dies: parked sends are payloads peers still
+                        // wait on, and owed credit returns are what lets
+                        // *their* quiescence terminate. Runs regardless
+                        // of auditing — it is a liveness step, not a
+                        // check.
+                        if let Err(e) = crate::p2p::engine::quiesce_flow(&ctx) {
+                            panic!("rank {r} failed closing its flow ledger: {e}");
+                        }
                         if audit {
                             // Rank-local state dies with this thread: this
                             // is the last moment it can be checked.
@@ -259,8 +268,10 @@ impl Universe {
                 Arc::clone(&bstats),
             )),
         };
+        let flow = crate::transport::FlowConfig::resolve(nodemap.nranks(), false)
+            .unwrap_or_else(|e| panic!("{e}"));
         let fabric = Arc::new(Fabric::multiprocess(
-            nodemap, self.model, job.rank, pool, backend, bstats,
+            nodemap, self.model, job.rank, pool, backend, bstats, flow,
         ));
         let audit = self.audit_on();
         let ctx = RankCtx::new(job.rank, fabric.clone());
@@ -270,6 +281,11 @@ impl Universe {
         // fast rank closing its sockets mid-collective would look like a
         // peer failure to the others.
         crate::collective::barrier(&comm).expect("final launched-job barrier");
+        // The barrier bounds closure skew across processes; the flow
+        // ledger then drains within the quiesce grace period.
+        if let Err(e) = crate::p2p::engine::quiesce_flow(&ctx) {
+            panic!("rank {} failed closing its flow ledger: {e}", job.rank);
+        }
         drop(comm);
         if audit {
             audit::enforce_rank(&ctx);

@@ -104,6 +104,52 @@ fn conformance_shm_matches_inproc() {
     assert_conformance("shm");
 }
 
+/// The hot-spot flow-control showcase (many-to-one floods driving the
+/// eager credit window, docs/FLOWCONTROL.md) must digest identically on
+/// a real multi-process backend and the in-process fabric.
+fn assert_hotspot_conformance(backend: &str) {
+    let program = Program::hotspot_showcase(NRANKS);
+    let want: Vec<String> = program
+        .run(&Universe::test(NRANKS).calm())
+        .iter()
+        .map(|digests| digests.iter().map(|d| format!("{d:016x}\n")).collect())
+        .collect();
+    let scratch = Scratch::new(&format!("conf-hotspot-{backend}"));
+    let out = Command::new(LAUNCHER)
+        .args(["-n", &NRANKS.to_string(), "--backend", backend, "builtin:conformance"])
+        .args(["--program", "hotspot", "--out"])
+        .arg(&scratch.0)
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(
+        out.status.success(),
+        "hotspot conformance job failed on {backend}: {}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    for r in 0..NRANKS {
+        let path = scratch.0.join(format!("rank_{r}.digest"));
+        let got = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing digest {}: {e}", path.display()));
+        assert_eq!(
+            got, want[r],
+            "rank {r} hotspot digests diverge on {backend} — flow control \
+             changed results, not just scheduling"
+        );
+    }
+}
+
+#[test]
+fn hotspot_conformance_socket_matches_inproc() {
+    assert_hotspot_conformance("socket");
+}
+
+#[cfg(unix)]
+#[test]
+fn hotspot_conformance_shm_matches_inproc() {
+    assert_hotspot_conformance("shm");
+}
+
 /// The acceptance-criterion smoke: `ferrompi-launch -n 4` runs an
 /// allreduce end-to-end over the socket backend.
 #[test]
