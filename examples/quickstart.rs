@@ -8,7 +8,7 @@
 
 use ferrompi::modern::{Communicator, ReduceOp, Source, Tag};
 use ferrompi::universe::Universe;
-use ferrompi_derive::DataType;
+use ferrompi::DataType;
 
 /// Listing 1's user-defined type — no MPI_Type_create_struct, no commit.
 #[derive(Debug, Clone, Copy, PartialEq, Default, DataType)]

@@ -3,9 +3,9 @@
 //! vs raw memcpy of a contiguous type, plus the strided-column case.
 
 use ferrompi::datatype::{pack, unpack, Datatype, Primitive, TypeMap};
-use ferrompi::modern::DataType;
 use ferrompi::util::microbench::{quick, Bench};
-use ferrompi_derive::DataType;
+// One import, two namespaces: the trait and the derive macro.
+use ferrompi::DataType;
 
 #[derive(Debug, Clone, Copy, Default, DataType)]
 struct Particle {
@@ -47,6 +47,10 @@ fn main() {
         d
     };
     assert_eq!(manual.size(), derived.size(), "both typemaps describe the same wire layout");
+    assert!(
+        manual.map().layout_eq(derived.map()),
+        "reflection must reproduce the hand-built typemap entry-for-entry"
+    );
     b.run("pack: manual MPI_Type_create_struct", || {
         let mut wire = Vec::with_capacity(N * manual.size());
         pack(manual.map(), src, N, &mut wire).unwrap();

@@ -2,117 +2,314 @@
 //!
 //! This crate is the analog of the paper's use of Boost.PFR: the C++20
 //! interface generates MPI datatypes from user-defined aggregate classes at
-//! compile time. In Rust the idiomatic mechanism is a derive macro:
+//! compile time (Listing 1, the `mpi::compliant` concept). In Rust the
+//! idiomatic mechanism is a derive macro:
 //!
-//! ```ignore
+//! ```
+//! use ferrompi::DataType; // one import: the trait *and* the derive macro
+//!
 //! #[derive(Clone, Copy, DataType)]
 //! struct Particle {
 //!     position: [f32; 3],
 //!     velocity: [f32; 3],
 //!     id: u64,
 //! }
+//!
 //! // `Particle` now satisfies the `compliant` concept analog and can be
 //! // used directly in communication, exactly like Listing 1 of the paper.
+//! let map = Particle::typemap();
+//! assert_eq!(map.size(), 32); // 3·f32 + 3·f32 + u64 wire bytes
+//! assert_eq!(map.extent() as usize, std::mem::size_of::<Particle>());
+//! // Fully dense (no padding): the canonicalized typemap is contiguous,
+//! // so sends of `Particle` ride the zero-copy eager/RMA fast path.
+//! assert!(map.is_contiguous());
 //! ```
 //!
 //! The macro walks the fields of the struct and emits a
 //! [`ferrompi::modern::datatype::DataType`] implementation whose typemap is
 //! assembled from the field typemaps and `core::mem::offset_of!` offsets, so
 //! padding and alignment are captured exactly as the MPI struct-datatype
-//! constructor would.
+//! constructor would. `TypeMap::aggregate` canonicalizes the entries to
+//! memory order — `repr(Rust)` is free to reorder fields, and memory order
+//! is what lets a fully-dense aggregate take the contiguous memcpy path.
+//!
+//! # Generics
+//!
+//! Generic structs are supported; every type parameter gets an auto-added
+//! `DataType` bound (the serde convention):
+//!
+//! ```
+//! use ferrompi::DataType;
+//!
+//! #[derive(Clone, Copy, DataType)]
+//! struct Pair<T, const N: usize> {
+//!     key: u64,
+//!     val: [T; N],
+//! }
+//!
+//! assert_eq!(Pair::<f32, 2>::typemap().size(), 16);
+//! ```
+//!
+//! Lifetime parameters are rejected: references are not plain old data.
+//!
+//! # `#[mpi(skip)]`
+//!
+//! A field marked `#[mpi(skip)]` is excluded from the typemap but still
+//! covered by the aggregate extent — on the wire it behaves as named
+//! padding. The receiver's skipped field keeps its local value:
+//!
+//! ```
+//! use ferrompi::DataType;
+//!
+//! #[derive(Clone, Copy, DataType)]
+//! struct Tracked {
+//!     payload: [f64; 4],
+//!     #[mpi(skip)]
+//!     local_hits: u32, // never transmitted; must still be Copy + 'static
+//! }
+//!
+//! let map = Tracked::typemap();
+//! assert_eq!(map.size(), 32); // skipped field contributes no wire bytes
+//! assert_eq!(map.extent() as usize, std::mem::size_of::<Tracked>());
+//! assert!(!map.is_contiguous()); // the skip gap forces the pack loop
+//! ```
+//!
+//! # The POD gate
+//!
+//! An unsound derive must be a compile error, not UB at pack time. The
+//! macro emits compile-time assertions that the aggregate and every field
+//! (skipped or not) are `Copy + 'static` — which structurally rules out
+//! drop glue, borrows and interior pointers — plus, for non-generic
+//! aggregates, a `const` assertion that `needs_drop::<T>()` is false.
+//! Enums, unions, and zero-field structs of every flavor (`struct S;`,
+//! `struct S {}`, `struct S();`) are rejected with a spanned error; the
+//! trybuild suite in `tests/ui/` pins every macro-emitted diagnostic.
+//!
+//! The rustc-emitted halves of the gate are asserted here as
+//! `compile_fail` doctests (their prose belongs to the compiler, so the
+//! UI suite does not snapshot it). A non-`Copy` field:
+//!
+//! ```compile_fail
+//! #[derive(Clone, ferrompi::DataType)]
+//! struct Holder {
+//!     name: String, // not Copy, not compliant — refused at compile time
+//! }
+//! ```
+//!
+//! A forgotten `Copy` on the aggregate itself:
+//!
+//! ```compile_fail
+//! #[derive(Clone, ferrompi::DataType)]
+//! struct NoCopy {
+//!     x: [f64; 2],
+//! }
+//! ```
+//!
+//! And a generic aggregate instantiated with a non-compliant parameter —
+//! the auto-added `T: DataType` bound refuses it at the use site:
+//!
+//! ```compile_fail
+//! #[derive(Clone, Copy, ferrompi::DataType)]
+//! struct Pair<T> {
+//!     a: T,
+//!     b: T,
+//! }
+//! let _ = <Pair<String> as ferrompi::modern::DataType>::typemap();
+//! ```
 
 use proc_macro::TokenStream;
-use quote::quote;
-use syn::{parse_macro_input, Data, DeriveInput, Fields, Index};
+use proc_macro2::TokenStream as TokenStream2;
+use quote::{quote, quote_spanned};
+use syn::spanned::Spanned;
+use syn::{parse_macro_input, parse_quote, Data, DeriveInput, Fields, GenericParam, Index, Member};
 
-/// Derives `ferrompi::modern::datatype::DataType` for a struct whose fields
-/// all implement `DataType` themselves (the `mpi::compliant` concept of the
-/// paper: arithmetic types, enums-with-repr via manual impl, `[T; N]`,
-/// tuples, `Complex<T>`, and nested derived aggregates).
+/// Derives `ferrompi::modern::datatype::DataType` for a struct whose
+/// non-skipped fields all implement `DataType` themselves (the
+/// `mpi::compliant` concept of the paper: arithmetic types, `[T; N]`,
+/// tuples, `Complex<T>`, nested derived aggregates, and enums-with-repr
+/// via manual impl).
 ///
-/// Compile-time errors are produced for enums, unions, generic structs and
-/// zero-field structs, mirroring PFR's "simple aggregate" constraints.
-#[proc_macro_derive(DataType)]
+/// See the [crate docs](crate) for the full contract: auto-bounded
+/// generics, `#[mpi(skip)]` named padding, and the compile-time POD gate.
+#[proc_macro_derive(DataType, attributes(mpi))]
 pub fn derive_datatype(input: TokenStream) -> TokenStream {
     let input = parse_macro_input!(input as DeriveInput);
+    expand(input).unwrap_or_else(|e| e.to_compile_error()).into()
+}
+
+fn expand(input: DeriveInput) -> Result<TokenStream2, syn::Error> {
     let name = &input.ident;
 
-    if !input.generics.params.is_empty() {
-        return syn::Error::new_spanned(
-            &input.generics,
-            "#[derive(DataType)] does not support generic types \
-             (the aggregate must have a single concrete layout)",
-        )
-        .to_compile_error()
-        .into();
+    // `#[mpi(...)]` is a field attribute; on the container it is misuse.
+    if let Some(attr) = input.attrs.iter().find(|a| a.path().is_ident("mpi")) {
+        return Err(syn::Error::new_spanned(
+            attr,
+            "#[mpi(...)] is a field attribute; place it on a field, not the struct",
+        ));
+    }
+
+    if let Some(lt) = input.generics.lifetimes().next() {
+        return Err(syn::Error::new_spanned(
+            lt,
+            "#[derive(DataType)] does not support lifetime parameters: \
+             references are not plain old data and cannot be packed",
+        ));
     }
 
     let fields = match &input.data {
         Data::Struct(s) => match &s.fields {
-            Fields::Named(f) => f
-                .named
-                .iter()
-                .map(|f| (f.ident.clone().unwrap().into_token_stream2(), f.ty.clone()))
-                .collect::<Vec<_>>(),
-            Fields::Unnamed(f) => f
-                .unnamed
-                .iter()
-                .enumerate()
-                .map(|(i, f)| {
-                    let idx = Index::from(i);
-                    (quote!(#idx), f.ty.clone())
-                })
-                .collect::<Vec<_>>(),
-            Fields::Unit => {
-                return syn::Error::new_spanned(
-                    name,
-                    "#[derive(DataType)] requires at least one field",
-                )
-                .to_compile_error()
-                .into();
-            }
+            Fields::Named(f) => f.named.iter().collect::<Vec<_>>(),
+            Fields::Unnamed(f) => f.unnamed.iter().collect::<Vec<_>>(),
+            Fields::Unit => Vec::new(),
         },
         _ => {
-            return syn::Error::new_spanned(
+            return Err(syn::Error::new_spanned(
                 name,
                 "#[derive(DataType)] only supports structs (aggregates); \
                  implement `DataType` manually for enums with a fixed repr",
-            )
-            .to_compile_error()
-            .into();
+            ));
         }
     };
 
-    let entries = fields.iter().map(|(accessor, ty)| {
+    // Zero-field structs of every flavor — `struct S;`, `struct S {}`,
+    // `struct S();` — have an empty typemap, which `TypeMap::aggregate`
+    // rejects at runtime; make it a compile error here instead.
+    if fields.is_empty() {
+        return Err(syn::Error::new_spanned(
+            name,
+            "#[derive(DataType)] requires at least one field: \
+             a zero-field struct has an empty typemap and nothing to send",
+        ));
+    }
+
+    // Partition wire fields from `#[mpi(skip)]` named padding.
+    let mut wire: Vec<(Member, &syn::Type)> = Vec::new();
+    let mut skipped: Vec<&syn::Type> = Vec::new();
+    for (i, field) in fields.iter().enumerate() {
+        let accessor = match &field.ident {
+            Some(id) => Member::Named(id.clone()),
+            None => Member::Unnamed(Index::from(i)),
+        };
+        if field_is_skipped(field)? {
+            skipped.push(&field.ty);
+        } else {
+            wire.push((accessor, &field.ty));
+        }
+    }
+    if wire.is_empty() {
+        return Err(syn::Error::new_spanned(
+            name,
+            "#[derive(DataType)] requires at least one non-skipped field: \
+             marking every field #[mpi(skip)] leaves an empty typemap",
+        ));
+    }
+
+    // Auto-add `T: DataType` bounds to every type parameter (the serde
+    // convention), so generic aggregates work without explicit bounds.
+    let mut generics = input.generics.clone();
+    for param in &mut generics.params {
+        if let GenericParam::Type(tp) = param {
+            tp.bounds.push(parse_quote!(::ferrompi::modern::datatype::DataType));
+        }
+    }
+    let (impl_generics, ty_generics, where_clause) = generics.split_for_impl();
+
+    // ---- the POD gate: unsound derives are compile errors ----
+    // Per-field compliance/POD checks are spanned to the field type, so
+    // the error points at the offending declaration.
+    let field_gates = wire.iter().map(|(_, ty)| {
+        quote_spanned! {ty.span()=>
+            __ferrompi_compliant::<#ty>();
+        }
+    });
+    let skip_gates = skipped.iter().map(|ty| {
+        quote_spanned! {ty.span()=>
+            __ferrompi_pod::<#ty>();
+        }
+    });
+    let struct_gate = quote_spanned! {name.span()=>
+        __ferrompi_pod::<#name #ty_generics>();
+    };
+    // `Copy` structurally excludes drop glue, but for concrete aggregates
+    // we also pin it with an eager const assertion (generic aggregates
+    // can't name their parameters in a top-level const; their `Copy`
+    // bound carries the same guarantee).
+    let no_drop_assert = if input.generics.params.is_empty() {
+        quote! {
+            const _: () = ::core::assert!(
+                !::core::mem::needs_drop::<#name>(),
+                "#[derive(DataType)] aggregates must be plain old data (no drop glue)",
+            );
+        }
+    } else {
+        TokenStream2::new()
+    };
+
+    let entries = wire.iter().map(|(accessor, ty)| {
         quote! {
             (
-                ::core::mem::offset_of!(#name, #accessor) as isize,
+                ::core::mem::offset_of!(Self, #accessor) as isize,
                 <#ty as ::ferrompi::modern::datatype::DataType>::typemap(),
             )
         }
     });
 
-    let expanded = quote! {
-        unsafe impl ::ferrompi::modern::datatype::DataType for #name {
-            fn typemap() -> ::ferrompi::datatype::TypeMap {
-                ::ferrompi::datatype::TypeMap::aggregate(
-                    &[ #( #entries ),* ],
-                    ::core::mem::size_of::<#name>(),
-                )
+    Ok(quote! {
+        const _: () = {
+            // Compile-time POD gate (see crate docs): the aggregate and
+            // every skipped field must be Copy + 'static; every wire
+            // field must itself be `DataType`-compliant.
+            fn __ferrompi_compliant<__F: ::ferrompi::modern::datatype::DataType>() {}
+            fn __ferrompi_pod<__F: ::core::marker::Copy + 'static>() {}
+            #[allow(dead_code)]
+            fn __ferrompi_pod_gate #impl_generics () #where_clause {
+                #struct_gate
+                #(#field_gates)*
+                #(#skip_gates)*
             }
+
+            #[automatically_derived]
+            unsafe impl #impl_generics ::ferrompi::modern::datatype::DataType
+                for #name #ty_generics #where_clause
+            {
+                fn typemap() -> ::ferrompi::datatype::TypeMap {
+                    ::ferrompi::datatype::TypeMap::aggregate(
+                        &[ #( #entries ),* ],
+                        ::core::mem::size_of::<#name #ty_generics>(),
+                    )
+                }
+            }
+        };
+        #no_drop_assert
+    })
+}
+
+/// Parse a field's `#[mpi(...)]` attributes. Currently the only option is
+/// `skip`; anything else is a spanned error so typos can't silently widen
+/// the wire format.
+fn field_is_skipped(field: &syn::Field) -> Result<bool, syn::Error> {
+    let mut skip = false;
+    for attr in &field.attrs {
+        if !attr.path().is_ident("mpi") {
+            continue;
         }
-    };
-    expanded.into()
-}
-
-/// Small helper: turn an ident into a token stream (kept local to avoid a
-/// trait import at the call site above).
-trait IntoTokens2 {
-    fn into_token_stream2(self) -> proc_macro2::TokenStream;
-}
-
-impl IntoTokens2 for syn::Ident {
-    fn into_token_stream2(self) -> proc_macro2::TokenStream {
-        quote!(#self)
+        attr.parse_nested_meta(|meta| {
+            if meta.path.is_ident("skip") {
+                if !meta.input.is_empty() && !meta.input.peek(syn::Token![,]) {
+                    return Err(syn::Error::new_spanned(
+                        &meta.path,
+                        "#[mpi(skip)] takes no arguments",
+                    ));
+                }
+                skip = true;
+                Ok(())
+            } else {
+                Err(syn::Error::new_spanned(
+                    &meta.path,
+                    "unknown #[mpi(...)] option (supported: `skip`)",
+                ))
+            }
+        })?;
     }
+    Ok(skip)
 }

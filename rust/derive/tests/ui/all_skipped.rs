@@ -1,0 +1,9 @@
+#[derive(Clone, Copy, ferrompi::DataType)]
+struct AllPadding {
+    #[mpi(skip)]
+    a: u32,
+    #[mpi(skip)]
+    b: u64,
+}
+
+fn main() {}

@@ -1,0 +1,27 @@
+// The happy path: tuple structs, nested derived aggregates, generics
+// with auto-added `DataType` bounds, const parameters, and #[mpi(skip)]
+// named padding all compile and produce layout-exact typemaps.
+
+#[derive(Clone, Copy, ferrompi::DataType)]
+struct Inner(u32, u64);
+
+#[derive(Clone, Copy, ferrompi::DataType)]
+struct Outer<T, const N: usize> {
+    inner: Inner,
+    vals: [T; N],
+    pair: (i16, f32),
+    #[mpi(skip)]
+    scratch: i64,
+}
+
+fn main() {
+    use ferrompi::modern::DataType;
+    let map = Outer::<f64, 3>::typemap();
+    assert_eq!(map.extent() as usize, std::mem::size_of::<Outer<f64, 3>>());
+    // inner (4 + 8) + vals (3 × 8) + pair (2 + 4); the skip contributes 0.
+    assert_eq!(map.size(), 12 + 24 + 6);
+    // Padded tuple struct: wire size 12 inside a 16-byte extent.
+    let inner = Inner::typemap();
+    assert_eq!(inner.size(), 12);
+    assert_eq!(inner.extent() as usize, std::mem::size_of::<Inner>());
+}

@@ -1,0 +1,7 @@
+#[derive(Clone, Copy, ferrompi::DataType)]
+enum Kind {
+    A,
+    B,
+}
+
+fn main() {}

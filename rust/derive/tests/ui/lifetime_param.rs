@@ -1,0 +1,6 @@
+#[derive(Clone, Copy, ferrompi::DataType)]
+struct Borrowed<'a> {
+    data: &'a [f32; 4],
+}
+
+fn main() {}

@@ -1,0 +1,7 @@
+#[derive(Clone, Copy, ferrompi::DataType)]
+#[mpi(skip)]
+struct Tagged {
+    x: u32,
+}
+
+fn main() {}

@@ -1,0 +1,7 @@
+#[derive(Clone, Copy, ferrompi::DataType)]
+struct Packed {
+    #[mpi(skip(now))]
+    x: u32,
+}
+
+fn main() {}

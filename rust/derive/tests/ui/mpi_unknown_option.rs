@@ -1,0 +1,7 @@
+#[derive(Clone, Copy, ferrompi::DataType)]
+struct Packed {
+    #[mpi(pack)]
+    x: u32,
+}
+
+fn main() {}

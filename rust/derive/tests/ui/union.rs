@@ -1,0 +1,7 @@
+#[derive(Clone, Copy, ferrompi::DataType)]
+union Raw {
+    a: u32,
+    b: f32,
+}
+
+fn main() {}

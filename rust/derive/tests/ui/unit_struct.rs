@@ -1,0 +1,4 @@
+#[derive(Clone, Copy, ferrompi::DataType)]
+struct Empty;
+
+fn main() {}

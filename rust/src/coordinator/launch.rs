@@ -508,6 +508,7 @@ Universe::run picks the job up from the environment). Builtins:
   builtin:conformance --seed S --out D  proggen digests → D/rank_R.digest
   builtin:conformance --program chunked --out D  chunked-allreduce showcase
   builtin:conformance --program hotspot --out D  many-to-one flow-control showcase
+  builtin:conformance --program derived --out D  #[derive(DataType)] aggregate showcase
   builtin:pingpong --out F [--bytes a,b]  latency sweep → CSV at F
 ";
 
@@ -654,9 +655,13 @@ fn builtin_conformance(args: &[String]) -> Result<(), String> {
         // The hot-spot showcase: many-to-one floods that push the eager
         // credit window (docs/FLOWCONTROL.md) across process boundaries.
         Some("hotspot") => crate::sim::proggen::Program::hotspot_showcase(u.nranks()),
+        // The derived-aggregate showcase: #[derive(DataType)] payloads —
+        // dense zero-copy cells and padded gather/scatter events — must
+        // digest identically across process boundaries.
+        Some("derived") => crate::sim::proggen::Program::derived_showcase(u.nranks()),
         Some(other) => {
             return Err(format!(
-                "unknown conformance program '{other}' (known: chunked | hotspot)"
+                "unknown conformance program '{other}' (known: chunked | hotspot | derived)"
             ));
         }
         None => {

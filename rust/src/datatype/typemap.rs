@@ -183,12 +183,20 @@ impl TypeMap {
     /// `offset_of!` displacements, extent = `size_of` the aggregate (so
     /// trailing padding is part of the stride, exactly like an array of the
     /// struct in memory).
+    ///
+    /// Entries are canonicalized to increasing displacement order. The
+    /// derive feeds fields in *declaration* order, but `repr(Rust)` is free
+    /// to reorder them in memory; sorting makes the typemap describe memory
+    /// order, so a fully-dense aggregate passes `build`'s contiguity check
+    /// and takes the memcpy pack/unpack path. Both peers derive the same
+    /// map from the same definition, so the wire format is unaffected.
     pub fn aggregate(fields: &[(isize, TypeMap)], struct_size: usize) -> TypeMap {
         assert!(!fields.is_empty(), "aggregate needs at least one field");
         let mut entries = Vec::new();
         for (disp, map) in fields {
             entries.extend(map.entries.iter().map(|&(p, d)| (p, d + disp)));
         }
+        entries.sort_by_key(|&(p, d)| (d, p.name()));
         TypeMap::build(entries, 0, struct_size as isize)
     }
 
@@ -291,6 +299,23 @@ impl TypeMap {
     pub fn is_contiguous(&self) -> bool {
         self.contiguous
     }
+
+    /// Whether two typemaps describe the same memory layout: identical
+    /// lb/extent and the same (primitive, displacement) multiset. Entry
+    /// *order* is ignored — a map built field-by-field with `structure` and
+    /// one canonicalized by `aggregate` compare equal — which is exactly
+    /// the sense in which a derived map must match a hand-written one.
+    pub fn layout_eq(&self, other: &TypeMap) -> bool {
+        if self.lb != other.lb || self.extent != other.extent || self.size != other.size {
+            return false;
+        }
+        let canon = |map: &TypeMap| {
+            let mut v = map.entries.clone();
+            v.sort_by_key(|&(p, d)| (d, p.name()));
+            v
+        };
+        canon(self) == canon(other)
+    }
 }
 
 #[cfg(test)]
@@ -379,6 +404,63 @@ mod tests {
         assert_eq!(t.extent(), 16);
         assert_eq!(t.size(), 9);
         assert_eq!(t.lb(), 0);
+        assert!(!t.is_contiguous());
+    }
+
+    #[test]
+    fn aggregate_canonicalizes_to_memory_order() {
+        // Declaration order { a: i32, b: f64 } but repr(Rust) placed b
+        // first: offsets arrive out of order. The canonicalized map must
+        // tile [0, 12) and report contiguous.
+        let t = TypeMap::aggregate(
+            &[(8, TypeMap::primitive(Primitive::I32)), (0, TypeMap::primitive(Primitive::F64))],
+            12,
+        );
+        assert!(t.is_contiguous());
+        assert_eq!(t.size(), 12);
+        let offs: Vec<isize> = t.entries().iter().map(|&(_, d)| d).collect();
+        assert_eq!(offs, vec![0, 8]);
+    }
+
+    #[test]
+    fn aggregate_with_gap_is_not_contiguous() {
+        // A skipped field at [4, 8) leaves a hole: dense prefix + suffix
+        // but the tiling check must still fail.
+        let t = TypeMap::aggregate(
+            &[(0, TypeMap::primitive(Primitive::I32)), (8, TypeMap::primitive(Primitive::I32))],
+            12,
+        );
+        assert!(!t.is_contiguous());
+        assert_eq!(t.size(), 8);
+        assert_eq!(t.extent(), 12);
+    }
+
+    #[test]
+    fn layout_eq_ignores_entry_order() {
+        let derived = TypeMap::aggregate(
+            &[(8, TypeMap::primitive(Primitive::I32)), (0, TypeMap::primitive(Primitive::F64))],
+            12,
+        );
+        let manual = TypeMap::structure(&[
+            (8, TypeMap::primitive(Primitive::I32), 1),
+            (0, TypeMap::primitive(Primitive::F64), 1),
+        ]);
+        // structure() keeps declaration order; aggregate() sorts. Same
+        // layout either way.
+        assert!(derived.layout_eq(&manual));
+        assert!(manual.layout_eq(&derived));
+        // A different displacement is a different layout...
+        let shifted = TypeMap::structure(&[
+            (8, TypeMap::primitive(Primitive::I32), 1),
+            (4, TypeMap::primitive(Primitive::F64), 1),
+        ]);
+        assert!(!derived.layout_eq(&shifted));
+        // ...and so is the same footprint under a different primitive.
+        let retyped = TypeMap::aggregate(
+            &[(8, TypeMap::primitive(Primitive::U32)), (0, TypeMap::primitive(Primitive::F64))],
+            12,
+        );
+        assert!(!derived.layout_eq(&retyped));
     }
 
     #[test]

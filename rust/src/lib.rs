@@ -89,3 +89,9 @@ pub mod coordinator;
 
 pub use error::{ErrorClass, MpiError, Result};
 pub use universe::Universe;
+
+// `ferrompi::DataType` is both the trait and the derive macro — one
+// import covers `#[derive(DataType)]` and trait-method calls, the same
+// dual-namespace trick serde uses for `Serialize`.
+pub use ferrompi_derive::DataType;
+pub use modern::datatype::DataType;

@@ -34,6 +34,9 @@ pub use pipeline::{
 };
 pub use window::{FenceEpoch, LockEpoch, RmaWindow};
 
-// Re-export the derive macro so `use ferrompi::modern::DataType` +
-// `#[derive(DataType)]` work together (Listing 1 ergonomics).
-pub use ferrompi_derive::DataType as DataTypeDerive;
+// Re-export the derive macro under the trait's own name (the serde
+// convention: same identifier, different namespaces), so a single
+// `use ferrompi::modern::DataType` enables both `#[derive(DataType)]`
+// and trait-method calls (Listing 1 ergonomics). The crate root
+// re-exports the same pair as `ferrompi::DataType`.
+pub use ferrompi_derive::DataType;

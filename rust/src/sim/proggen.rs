@@ -108,6 +108,38 @@ pub enum Phase {
     /// window (docs/FLOWCONTROL.md) — under small windows the senders
     /// park or demote and flush as credits ride back on deliveries.
     HotSpot { len: usize, rounds: usize },
+    /// Traffic in `#[derive(DataType)]` aggregates through the modern
+    /// typed layer: a ring shift of `cells` fully-dense [`SimCell`]s
+    /// (contiguous reflected typemap — the memcpy zero-copy path), every
+    /// rank shipping a sender-chosen count of padded [`SimEvent`]s to
+    /// rank 0 (probe + `receive_vec`, gather/scatter pack path), then a
+    /// broadcast and an allgather of derived values. `#[mpi(skip)]`
+    /// scratch fields are asserted receiver-local: the wire never
+    /// carries them.
+    DerivedP2p { cells: usize, events: usize },
+}
+
+// ---------------- the derived aggregates DerivedP2p ships ----------------
+
+/// Fully dense derived aggregate (two `i64`s, no padding): its reflected
+/// typemap is contiguous, so it rides the memcpy zero-copy path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default, crate::DataType)]
+pub struct SimCell {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+/// Padded derived aggregate: a nested derived struct, an array, a tuple,
+/// and a `#[mpi(skip)]` scratch field. Its typemap has holes, forcing the
+/// per-entry gather/scatter pack path; `scratch` never crosses the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Default, crate::DataType)]
+pub struct SimEvent {
+    pub cell: SimCell,
+    pub coords: [f32; 3],
+    pub weight: f32,
+    pub meta: (u8, i32),
+    #[mpi(skip)]
+    pub scratch: u32,
 }
 
 /// A generated SPMD program: the recipe the differential harness replays.
@@ -134,7 +166,7 @@ impl Program {
         let target = r.range(5, 10);
         let mut phases = Vec::new();
         while phases.len() < target {
-            match r.range(0, 15) {
+            match r.range(0, 16) {
                 0..=2 => phases.push(gen_immediate(&mut r, nranks, false, false)),
                 3 => phases.push(gen_immediate(&mut r, nranks, true, false)),
                 4 => {
@@ -170,6 +202,10 @@ impl Program {
                 13 => phases.push(Phase::HotSpot {
                     len: r.range(1, 65),
                     rounds: r.range(8, 33),
+                }),
+                14 => phases.push(Phase::DerivedP2p {
+                    cells: r.range(1, 513),
+                    events: r.range(1, 9),
                 }),
                 // ≥ 16 Ki i64 elements so the payload crosses the default
                 // 128 KiB chunk threshold and the chunked path engages.
@@ -280,6 +316,35 @@ impl Program {
         }
     }
 
+    /// A handcrafted program centred on `#[derive(DataType)]` traffic:
+    /// dense-cell ring shifts on both sides of the eager/rendezvous
+    /// boundary (the contiguous typemap must take the zero-copy path on
+    /// either), padded-event floods into rank 0, and derived broadcasts
+    /// and allgathers — interleaved with ordinary byte traffic so packed
+    /// and memcpy'd payloads share the matching queues. Used by the
+    /// cross-backend conformance builtin (`--program derived`) — digests
+    /// must agree on inproc, shm and socket.
+    pub fn derived_showcase(nranks: usize) -> Program {
+        assert!(nranks >= 2);
+        Program {
+            seed: 0xA66_2E6A7E, // "aggregate"
+            nranks,
+            phases: vec![
+                Phase::Barrier,
+                // Small eager payloads: 256 cells = 4 KiB per hop.
+                Phase::DerivedP2p { cells: 256, events: 4 },
+                Phase::Ring { len: 1024 },
+                // Single-element messages: framing overhead dominates.
+                Phase::DerivedP2p { cells: 1, events: 1 },
+                Phase::Collective { op: CollOp::Allreduce, split: false, len: 0, count: 5 },
+                // 4 100 cells × 16 B = 65 600 B: past the default eager
+                // boundary, so the dense ring rides rendezvous.
+                Phase::DerivedP2p { cells: 4_100, events: 2 },
+                Phase::ModernAllReduce,
+            ],
+        }
+    }
+
     /// The human-readable recipe printed by every failure report —
     /// sufficient, with the chaos seed, to replay the run.
     pub fn recipe(&self) -> String {
@@ -357,6 +422,56 @@ fn bytes_to_i64s(b: &[u8]) -> Vec<i64> {
 /// match another phase's traffic.
 fn tag_base(pi: usize) -> i32 {
     8 + (pi as i32) * 8
+}
+
+/// Deterministic dense cell for (program, context).
+fn dcell(seed: u64, mix: &[u64]) -> SimCell {
+    let mut r = Rng::new(derive(seed, mix));
+    SimCell {
+        lo: r.below(1 << 20) as i64 - (1 << 19),
+        hi: r.below(1 << 20) as i64 - (1 << 19),
+    }
+}
+
+/// Deterministic padded event for (program, context). Every float is a
+/// small integer, so values are exact and digests schedule-independent.
+/// `scratch` is always 0 here: senders overwrite it to prove the wire
+/// never carries it, receivers assert it stayed at `Default`.
+fn devent(seed: u64, mix: &[u64]) -> SimEvent {
+    let mut r = Rng::new(derive(seed, mix));
+    SimEvent {
+        cell: SimCell {
+            lo: r.below(1 << 20) as i64 - (1 << 19),
+            hi: r.below(1 << 20) as i64 - (1 << 19),
+        },
+        coords: [r.below(4096) as f32, r.below(4096) as f32, r.below(4096) as f32],
+        weight: r.below(4096) as f32,
+        meta: (r.below(256) as u8, r.below(100_000) as i32 - 50_000),
+        scratch: 0,
+    }
+}
+
+/// Canonical digest bytes of a cell (little-endian fields, no padding).
+fn cell_bytes(c: &SimCell, out: &mut Vec<u8>) {
+    out.extend_from_slice(&c.lo.to_le_bytes());
+    out.extend_from_slice(&c.hi.to_le_bytes());
+}
+
+/// Canonical digest bytes of an event's *wire* fields — the `#[mpi(skip)]`
+/// scratch is receiver-local and never digested.
+fn event_bytes(e: &SimEvent, out: &mut Vec<u8>) {
+    cell_bytes(&e.cell, out);
+    for v in e.coords {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&e.weight.to_le_bytes());
+    out.push(e.meta.0);
+    out.extend_from_slice(&e.meta.1.to_le_bytes());
+}
+
+/// Equality on the transmitted fields only (`scratch` excluded).
+fn event_wire_eq(a: &SimEvent, b: &SimEvent) -> bool {
+    a.cell == b.cell && a.coords == b.coords && a.weight == b.weight && a.meta == b.meta
 }
 
 // ---------------- generation helpers ----------------
@@ -528,6 +643,9 @@ fn exec(p: &Program, comm: &Comm) -> Vec<u64> {
             }
             Phase::HotSpot { len, rounds } => {
                 exec_hotspot(comm, seed, pi, *len, *rounds, &byte, &mut digest);
+            }
+            Phase::DerivedP2p { cells, events } => {
+                exec_derived(comm, seed, pi, *cells, *events, &mut digest);
             }
             Phase::ModernAllReduce => {
                 let m = crate::modern::Communicator::world(comm);
@@ -701,6 +819,114 @@ fn exec_hotspot(
         wait_all(&reqs).unwrap_or_else(|e| panic!("phase {pi} hotspot waitall: {e}"));
         digest.push(rounds as u64);
     }
+}
+
+/// Derived-aggregate phase, entirely through the modern typed layer:
+///
+/// 1. ring shift of `cells` dense [`SimCell`]s (contiguous typemap —
+///    memcpy path on eager and rendezvous alike),
+/// 2. every rank ≠ 0 sends a *sender-chosen* number of padded
+///    [`SimEvent`]s to rank 0, which probes and `receive_vec`s them in
+///    sender order (per-(src, tag) FIFO keeps this deterministic),
+/// 3. a broadcast of one event from rank 0,
+/// 4. an allgather of one cell per rank.
+///
+/// Senders poison the `#[mpi(skip)]` scratch field before sending;
+/// receivers assert it stayed at `Default` — the typemap must not carry
+/// it. Digests hash canonical little-endian field bytes (never raw struct
+/// memory, whose padding is indeterminate).
+fn exec_derived(comm: &Comm, seed: u64, pi: usize, cells: usize, events: usize, digest: &mut Vec<u64>) {
+    use crate::modern::{Communicator, Source, Tag};
+    let m = Communicator::world(comm);
+    let me = comm.rank();
+    let pn = comm.size();
+    let tag = tag_base(pi);
+
+    // 1. Dense-cell ring shift: isend right, blocking receive from left.
+    let right = (me + 1) % pn;
+    let left = (me + pn - 1) % pn;
+    let mine: Vec<SimCell> =
+        (0..cells).map(|k| dcell(seed, &[pi as u64, me as u64, k as u64])).collect();
+    let sent = m
+        .immediate_send(&mine[..], right, tag)
+        .unwrap_or_else(|e| panic!("phase {pi} derived isend: {e}"));
+    let mut ring = vec![SimCell::default(); cells];
+    m.receive_into(&mut ring[..], Source::Rank(left), Tag::Value(tag))
+        .unwrap_or_else(|e| panic!("phase {pi} derived recv: {e}"));
+    sent.get().unwrap_or_else(|e| panic!("phase {pi} derived isend wait: {e}"));
+    let want: Vec<SimCell> =
+        (0..cells).map(|k| dcell(seed, &[pi as u64, left as u64, k as u64])).collect();
+    assert_eq!(ring, want, "phase {pi} rank {me}: derived ring corrupt (seed {seed:#x})");
+    let mut canon = Vec::with_capacity(cells * 16);
+    ring.iter().for_each(|c| cell_bytes(c, &mut canon));
+    digest.push(fnv1a(&canon));
+
+    // 2. Padded events into rank 0, length chosen by the sender.
+    if me == 0 {
+        for src in 1..pn {
+            let (got, st) = m
+                .receive_vec::<SimEvent>(Source::Rank(src), Tag::Value(tag + 1))
+                .unwrap_or_else(|e| panic!("phase {pi} derived receive_vec: {e}"));
+            let n = events + src % 3;
+            assert!(
+                st.source == src as i32 && got.len() == n,
+                "phase {pi} rank 0: expected {n} events from {src}, got {} (seed {seed:#x})",
+                got.len()
+            );
+            let mut canon = Vec::new();
+            for (j, e) in got.iter().enumerate() {
+                let want = devent(seed, &[pi as u64, src as u64, j as u64]);
+                assert!(
+                    event_wire_eq(e, &want),
+                    "phase {pi} rank 0: event {j} from {src} corrupt (seed {seed:#x})"
+                );
+                assert_eq!(
+                    e.scratch, 0,
+                    "phase {pi} rank 0: #[mpi(skip)] scratch crossed the wire (seed {seed:#x})"
+                );
+                event_bytes(e, &mut canon);
+            }
+            digest.push(fnv1a(&canon));
+        }
+    } else {
+        let evs: Vec<SimEvent> = (0..events + me % 3)
+            .map(|j| {
+                let mut e = devent(seed, &[pi as u64, me as u64, j as u64]);
+                e.scratch = 0xDEAD_BEEF; // must never arrive
+                e
+            })
+            .collect();
+        m.send_tagged(&evs[..], 0, tag + 1)
+            .unwrap_or_else(|e| panic!("phase {pi} derived event send: {e}"));
+        digest.push(evs.len() as u64);
+    }
+
+    // 3. Broadcast one event from rank 0.
+    let bwant = devent(seed, &[pi as u64, 0xBC]);
+    let mut bev = if me == 0 { bwant } else { SimEvent::default() };
+    m.broadcast(&mut bev, 0).unwrap_or_else(|e| panic!("phase {pi} derived bcast: {e}"));
+    assert!(
+        event_wire_eq(&bev, &bwant),
+        "phase {pi} rank {me}: derived bcast corrupt (seed {seed:#x})"
+    );
+    let mut canon = Vec::new();
+    event_bytes(&bev, &mut canon);
+    digest.push(fnv1a(&canon));
+
+    // 4. Allgather one cell per rank.
+    let all = m
+        .all_gather(dcell(seed, &[pi as u64, 0xAA, me as u64]))
+        .unwrap_or_else(|e| panic!("phase {pi} derived allgather: {e}"));
+    let mut canon = Vec::with_capacity(pn * 16);
+    for (r, c) in all.iter().enumerate() {
+        assert_eq!(
+            *c,
+            dcell(seed, &[pi as u64, 0xAA, r as u64]),
+            "phase {pi} rank {me}: derived allgather slot {r} (seed {seed:#x})"
+        );
+        cell_bytes(c, &mut canon);
+    }
+    digest.push(fnv1a(&canon));
 }
 
 /// One-sided phase: window of `len` data slots + 1 counter slot per rank.
@@ -1103,5 +1329,38 @@ mod tests {
         let d = p.run(&u);
         assert_eq!(d.len(), 3);
         assert_eq!(d, p.run(&u));
+    }
+
+    #[test]
+    fn derived_showcase_runs_clean_on_a_faithful_fabric() {
+        let p = Program::derived_showcase(3);
+        let u = Universe::test(3).calm().audited(true);
+        let d = p.run(&u);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d, p.run(&u));
+    }
+
+    #[test]
+    fn derived_cell_typemap_is_contiguous_and_event_is_not() {
+        use crate::modern::datatype::DataType;
+        let cell = SimCell::typemap();
+        assert!(cell.is_contiguous(), "dense SimCell must take the memcpy path");
+        assert_eq!(cell.size(), 16);
+        let ev = SimEvent::typemap();
+        assert!(!ev.is_contiguous(), "padded SimEvent must take the pack path");
+        // wire size: cell 16 + coords 12 + weight 4 + meta (1 + 4); the
+        // skipped scratch contributes nothing.
+        assert_eq!(ev.size(), 16 + 12 + 4 + 5);
+        assert_eq!(ev.extent() as usize, std::mem::size_of::<SimEvent>());
+    }
+
+    #[test]
+    fn derived_differential_survives_chaos() {
+        let p = Program {
+            seed: 0xA66,
+            nranks: 2,
+            phases: vec![Phase::DerivedP2p { cells: 64, events: 3 }, Phase::Barrier],
+        };
+        assert_differential(&p, &[5, 23]);
     }
 }

@@ -1,0 +1,284 @@
+//! Aggregate reflection end to end: `#[derive(DataType)]` structs —
+//! dense, padded, nested, generic, with `#[mpi(skip)]` named padding —
+//! round-tripped through p2p, collectives and RMA; the contiguity
+//! contract (dense derived aggregates ride the zero-copy path, padded
+//! ones charge the copy counter); layout equality against hand-built
+//! `MPI_Type_create_struct` maps; and the chaos differential over the
+//! derived-traffic showcase program.
+
+use ferrompi::comm::Comm;
+use ferrompi::datatype::{Primitive, TypeMap};
+use ferrompi::modern::{Communicator, RmaWindow, Source, Tag};
+use ferrompi::sim::proggen::{assert_differential, Program};
+use ferrompi::tool::pvar::PvarSession;
+use ferrompi::universe::Universe;
+// One import, two namespaces: the trait and the derive macro.
+use ferrompi::DataType;
+use std::mem::{offset_of, size_of};
+
+/// Fully dense: 8 + 8 + 2×4 bytes, no padding possible in any field
+/// order — the reflected typemap must be contiguous.
+#[derive(Debug, Clone, Copy, PartialEq, Default, DataType)]
+struct Dense {
+    a: i64,
+    b: i64,
+    c: [i32; 2],
+}
+
+/// Nested aggregate with internal padding (u8 then i32).
+#[derive(Debug, Clone, Copy, PartialEq, Default, DataType)]
+struct Inner {
+    tag: u8,
+    val: i32,
+}
+
+/// The kitchen sink: nested derived struct, array, tuple, and a
+/// `#[mpi(skip)]` cache slot that must never cross the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Default, DataType)]
+struct Outer {
+    id: u64,
+    inner: Inner,
+    pos: [f32; 3],
+    pair: (i16, f64),
+    #[mpi(skip)]
+    cache: u32,
+}
+
+/// Generic aggregate: the derive auto-adds `T: DataType`.
+#[derive(Debug, Clone, Copy, PartialEq, Default, DataType)]
+struct Pair<T> {
+    lo: T,
+    hi: T,
+}
+
+/// Deterministic sample with exact float values (integers and halves).
+fn sample_outer(k: u64) -> Outer {
+    Outer {
+        id: 0x1000 + k,
+        inner: Inner { tag: (k % 251) as u8, val: (k as i32) * 3 - 7 },
+        pos: [k as f32, (k + 1) as f32, (k + 2) as f32],
+        pair: ((k as i16) - 5, (k as f64) * 0.5),
+        cache: 0,
+    }
+}
+
+/// The transmitted fields of an `Outer` (everything but the skip).
+fn wire_fields(o: &Outer) -> (u64, Inner, [f32; 3], (i16, f64)) {
+    (o.id, o.inner, o.pos, o.pair)
+}
+
+#[test]
+fn dense_reflection_is_contiguous_and_matches_manual() {
+    let map = Dense::typemap();
+    assert!(map.is_contiguous(), "dense struct must reflect to a contiguous typemap");
+    assert_eq!(map.size(), 24);
+    assert_eq!(map.extent() as usize, size_of::<Dense>());
+    // The hand-built MPI_Type_create_struct equivalent: reflection must
+    // reproduce it entry-for-entry (order-insensitively).
+    let manual = TypeMap::structure(&[
+        (offset_of!(Dense, a) as isize, TypeMap::primitive(Primitive::I64), 1),
+        (offset_of!(Dense, b) as isize, TypeMap::primitive(Primitive::I64), 1),
+        (
+            offset_of!(Dense, c) as isize,
+            TypeMap::contiguous(2, &TypeMap::primitive(Primitive::I32)),
+            1,
+        ),
+    ])
+    .resized(0, size_of::<Dense>() as isize);
+    assert!(map.layout_eq(&manual), "derived {map:?} != manual {manual:?}");
+}
+
+#[test]
+fn padded_reflection_skips_holes_and_skip_fields() {
+    let map = Outer::typemap();
+    assert!(!map.is_contiguous(), "padded struct must not claim contiguity");
+    // Wire bytes: u64 8 + inner (1 + 4) + pos 12 + pair (2 + 8); the
+    // skipped cache and all alignment padding contribute nothing.
+    assert_eq!(map.size(), 8 + 5 + 12 + 10);
+    assert_eq!(map.extent() as usize, size_of::<Outer>());
+    // No typemap entry may overlap the skipped field's bytes.
+    let skip_at = offset_of!(Outer, cache) as isize;
+    for &(p, d) in map.entries() {
+        assert!(
+            d + p.size() as isize <= skip_at || d >= skip_at + 4,
+            "entry {p:?} at {d} overlaps the #[mpi(skip)] field at {skip_at}"
+        );
+    }
+    // Entries are canonicalized to strictly increasing displacements.
+    for w in map.entries().windows(2) {
+        assert!(w[0].1 + w[0].0.size() as isize <= w[1].1, "entries overlap or are unsorted");
+    }
+}
+
+#[test]
+fn nested_padded_aggregate_roundtrips_p2p() {
+    const N: usize = 33;
+    Universe::test(2).run(|comm: &Comm| {
+        let m = Communicator::world(comm);
+        if m.rank() == 0 {
+            let mut out: Vec<Outer> = (0..N as u64).map(sample_outer).collect();
+            for o in &mut out {
+                o.cache = 0xFFFF_FFFF; // poisoned: must not be transmitted
+            }
+            m.send_tagged(&out[..], 1, 4).unwrap();
+        } else {
+            let mut got = vec![Outer::default(); N];
+            m.receive_into(&mut got[..], Source::Rank(0), Tag::Value(4)).unwrap();
+            for (k, g) in got.iter().enumerate() {
+                let want = sample_outer(k as u64);
+                assert_eq!(wire_fields(g), wire_fields(&want), "element {k} corrupt");
+                assert_eq!(g.cache, 0, "#[mpi(skip)] field crossed the wire");
+            }
+        }
+    });
+}
+
+/// The acceptance check: a dense derived aggregate ping-pong performs
+/// zero payload copies, asserted through the `wire_bytes_copied` pvar.
+#[test]
+fn dense_derived_send_is_zero_copy() {
+    let u = Universe::test(2);
+    let (_, fabric) = u.run_with_stats(|comm: &Comm| {
+        let m = Communicator::world(comm);
+        let data: Vec<Dense> =
+            (0..128i64).map(|k| Dense { a: k, b: -k, c: [k as i32, 2 * k as i32] }).collect();
+        let mut buf = vec![Dense::default(); data.len()];
+        let peer = 1 - m.rank();
+        for _ in 0..4 {
+            if m.rank() == 0 {
+                m.send_tagged(&data[..], peer, 2).unwrap();
+                m.receive_into(&mut buf[..], Source::Rank(peer), Tag::Value(2)).unwrap();
+            } else {
+                m.receive_into(&mut buf[..], Source::Rank(peer), Tag::Value(2)).unwrap();
+                m.send_tagged(&data[..], peer, 2).unwrap();
+            }
+            assert_eq!(buf, data);
+        }
+        let session = PvarSession::create(comm);
+        assert_eq!(
+            session.read("wire_bytes_copied").unwrap(),
+            0,
+            "dense derived aggregates must ride the memcpy zero-copy path"
+        );
+    });
+    assert_eq!(fabric.pool.stats().copied_bytes, 0);
+}
+
+/// The inverse: a padded derived aggregate must charge the copy counter
+/// on both the sender's gather and the receiver's scatter.
+#[test]
+fn padded_derived_send_charges_the_copy_counter() {
+    const N: usize = 4;
+    let u = Universe::test(2);
+    let (_, fabric) = u.run_with_stats(|comm: &Comm| {
+        let m = Communicator::world(comm);
+        if m.rank() == 0 {
+            let evs: Vec<Outer> = (0..N as u64).map(sample_outer).collect();
+            m.send_tagged(&evs[..], 1, 6).unwrap();
+        } else {
+            let mut got = vec![Outer::default(); N];
+            m.receive_into(&mut got[..], Source::Rank(0), Tag::Value(6)).unwrap();
+            assert_eq!(wire_fields(&got[2]), wire_fields(&sample_outer(2)));
+        }
+    });
+    let wire = Outer::typemap().size() * N;
+    assert_eq!(
+        fabric.pool.stats().copied_bytes,
+        2 * wire,
+        "expected one gather + one scatter of {wire} wire bytes"
+    );
+}
+
+#[test]
+fn derived_aggregates_roundtrip_collectives() {
+    Universe::test(4).run(|comm: &Comm| {
+        let m = Communicator::world(comm);
+        let me = m.rank();
+        // Broadcast of a padded nested aggregate.
+        let want = sample_outer(42);
+        let mut b = if me == 0 { want } else { Outer::default() };
+        m.broadcast(&mut b, 0).unwrap();
+        assert_eq!(wire_fields(&b), wire_fields(&want), "rank {me}: bcast corrupt");
+        // Allgather of dense cells.
+        let all = m
+            .all_gather(Dense { a: me as i64, b: -(me as i64), c: [me as i32; 2] })
+            .unwrap();
+        for (r, d) in all.iter().enumerate() {
+            assert_eq!(*d, Dense { a: r as i64, b: -(r as i64), c: [r as i32; 2] });
+        }
+        // All-to-all of dense cells.
+        let outv: Vec<Dense> =
+            (0..4).map(|dst| Dense { a: (me * 10 + dst) as i64, b: 0, c: [0; 2] }).collect();
+        let inv = m.all_to_all(&outv).unwrap();
+        for (src, d) in inv.iter().enumerate() {
+            assert_eq!(d.a, (src * 10 + me) as i64, "rank {me}: alltoall slot {src}");
+        }
+    });
+}
+
+#[test]
+fn derived_aggregates_roundtrip_rma() {
+    const SLOTS: usize = 4;
+    Universe::test(3).run(|comm: &Comm| {
+        let me = comm.rank();
+        let pn = comm.size();
+        let win: RmaWindow<Dense> = RmaWindow::allocate(comm, SLOTS).unwrap();
+        let right = (me + 1) % pn;
+        let left = (me + pn - 1) % pn;
+        let cell = |r: usize, k: usize| Dense {
+            a: (r * 100 + k) as i64,
+            b: -((r * 100 + k) as i64),
+            c: [r as i32, k as i32],
+        };
+        let mine: Vec<Dense> = (0..SLOTS).map(|k| cell(me, k)).collect();
+        win.fence().unwrap();
+        win.put(&mine[..], right, 0).unwrap();
+        win.fence().unwrap();
+        // My window now holds my left neighbor's cells.
+        let want: Vec<Dense> = (0..SLOTS).map(|k| cell(left, k)).collect();
+        assert_eq!(win.with_local(|w| w.to_vec()), want, "rank {me}: rma put corrupt");
+        // Read one of my own cells back out of my right neighbor's window.
+        let got = win.get(right, 1).unwrap();
+        assert_eq!(got, cell(me, 1), "rank {me}: rma get corrupt");
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn generic_derived_aggregate_roundtrips() {
+    // Instantiation-time reflection: both monomorphizations get their own
+    // layout-exact typemap.
+    let fmap = Pair::<f64>::typemap();
+    assert!(fmap.is_contiguous());
+    assert_eq!(fmap.size(), 16);
+    let dmap = Pair::<Dense>::typemap();
+    assert!(dmap.is_contiguous());
+    assert_eq!(dmap.size(), 48);
+
+    let pf = Pair { lo: 1.5f64, hi: -2.25 };
+    let pd = Pair {
+        lo: Dense { a: 1, b: 2, c: [3, 4] },
+        hi: Dense { a: -1, b: -2, c: [-3, -4] },
+    };
+    Universe::test(2).run(move |comm: &Comm| {
+        let m = Communicator::world(comm);
+        if m.rank() == 0 {
+            m.send(&pf, 1).unwrap();
+            m.send(&pd, 1).unwrap();
+        } else {
+            let (got_f, _) = m.receive::<Pair<f64>>(Source::Rank(0)).unwrap();
+            assert_eq!(got_f, pf);
+            let (got_d, _) = m.receive::<Pair<Dense>>(Source::Rank(0)).unwrap();
+            assert_eq!(got_d, pd);
+        }
+    });
+}
+
+/// The derived-traffic showcase must produce byte-identical digests
+/// under schedule perturbation: reflection is a layout contract, so a
+/// chaos-revealed divergence would mean the pack path (not the program)
+/// depends on timing.
+#[test]
+fn derived_showcase_survives_chaos_differential() {
+    assert_differential(&Program::derived_showcase(2), &[7, 19]);
+}

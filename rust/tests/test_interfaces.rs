@@ -1,10 +1,11 @@
 //! Integration tests for the two interfaces the paper compares: the raw
 //! C-shaped baseline and the modern layer (Listing 1 + Listing 2).
 
+// `DataType` here is both the trait and the derive macro (dual-namespace
+// re-export, serde-style).
 use ferrompi::modern::{self, Communicator, Complex, DataType, MpiFuture, ReduceOp, Source, Tag};
 use ferrompi::raw;
 use ferrompi::universe::Universe;
-use ferrompi_derive::DataType;
 
 // ---------------- Listing 1: automatic datatype generation ----------------
 

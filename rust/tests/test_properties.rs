@@ -88,6 +88,80 @@ fn prop_pack_unpack_roundtrip_random_types() {
     );
 }
 
+/// Reflection invariants over random aggregates: primitives at aligned,
+/// strictly increasing offsets with random holes (alignment padding or
+/// `#[mpi(skip)]` fields) and random trailing padding — exactly the
+/// field lists `#[derive(DataType)]` hands to `TypeMap::aggregate`.
+#[test]
+fn prop_aggregate_reflection_invariants() {
+    check_no_shrink(
+        Config { cases: 200, seed: seed(0xA66), ..Default::default() },
+        |rng| {
+            let nfields = rng.range(1, 6);
+            let mut fields = Vec::new();
+            let mut off = 0usize;
+            for _ in 0..nfields {
+                let p = *rng
+                    .choose(&[Primitive::U8, Primitive::I16, Primitive::I32, Primitive::F64]);
+                let align = p.size();
+                off = off.div_ceil(align) * align; // natural alignment
+                if rng.range(0, 4) == 0 {
+                    off += align * rng.range(1, 3); // a hole
+                }
+                fields.push((off as isize, p));
+                off += p.size();
+            }
+            let max_align = fields.iter().map(|&(_, p)| p.size()).max().unwrap();
+            let struct_size = off.div_ceil(max_align) * max_align;
+            // A shuffled copy models repr(Rust) handing the derive a
+            // declaration order that differs from memory order.
+            let mut shuffled = fields.clone();
+            rng.shuffle(&mut shuffled);
+            (fields, shuffled, struct_size, rng.next_u64())
+        },
+        |(fields, shuffled, struct_size, pseed)| {
+            let to_maps = |fs: &[(isize, Primitive)]| -> Vec<(isize, TypeMap)> {
+                fs.iter().map(|&(d, p)| (d, TypeMap::primitive(p))).collect()
+            };
+            let map = TypeMap::aggregate(&to_maps(fields), *struct_size);
+            // Aggregate contract: lb 0, extent = size_of.
+            if map.lb() != 0 || map.extent() != *struct_size as isize {
+                return Err(format!("lb/extent broken for {map:?}"));
+            }
+            let wire: usize = fields.iter().map(|&(_, p)| p.size()).sum();
+            if map.size() != wire {
+                return Err(format!("wire size {} != Σ fields {wire}", map.size()));
+            }
+            // Contiguity ⇔ dense: the generator never overlaps fields, so
+            // the map is contiguous exactly when no byte is padding.
+            if map.is_contiguous() != (wire == *struct_size) {
+                return Err(format!(
+                    "contiguity {} but wire {wire} of {struct_size} bytes: {map:?}",
+                    map.is_contiguous()
+                ));
+            }
+            // Canonicalization: declaration order must not matter.
+            let shuffled_map = TypeMap::aggregate(&to_maps(shuffled), *struct_size);
+            if shuffled_map != map || !map.layout_eq(&shuffled_map) {
+                return Err("field declaration order leaked into the typemap".into());
+            }
+            // pack ∘ unpack = id on wire data.
+            let mut src = vec![0u8; *struct_size];
+            Rng::new(*pseed).fill_bytes(&mut src);
+            let mut wire_img = Vec::new();
+            pack(&map, &src, 1, &mut wire_img).map_err(|e| e.to_string())?;
+            let mut dst = vec![0u8; *struct_size];
+            unpack(&map, &wire_img, &mut dst, 1).map_err(|e| e.to_string())?;
+            let mut wire2 = Vec::new();
+            pack(&map, &dst, 1, &mut wire2).map_err(|e| e.to_string())?;
+            if wire_img != wire2 {
+                return Err(format!("pack/unpack not a fixed point for {map:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_group_set_algebra() {
     check_no_shrink(

@@ -150,6 +150,54 @@ fn hotspot_conformance_shm_matches_inproc() {
     assert_hotspot_conformance("shm");
 }
 
+/// The derived-aggregate showcase (`#[derive(DataType)]` payloads: dense
+/// zero-copy cells, padded gather/scatter events, skip fields) must
+/// digest identically on a real multi-process backend and the in-process
+/// fabric — reflection is a layout contract, not a serialization format,
+/// so both ends deriving the same typemap is what this pins down.
+fn assert_derived_conformance(backend: &str) {
+    let program = Program::derived_showcase(NRANKS);
+    let want: Vec<String> = program
+        .run(&Universe::test(NRANKS).calm())
+        .iter()
+        .map(|digests| digests.iter().map(|d| format!("{d:016x}\n")).collect())
+        .collect();
+    let scratch = Scratch::new(&format!("conf-derived-{backend}"));
+    let out = Command::new(LAUNCHER)
+        .args(["-n", &NRANKS.to_string(), "--backend", backend, "builtin:conformance"])
+        .args(["--program", "derived", "--out"])
+        .arg(&scratch.0)
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(
+        out.status.success(),
+        "derived conformance job failed on {backend}: {}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    for r in 0..NRANKS {
+        let path = scratch.0.join(format!("rank_{r}.digest"));
+        let got = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing digest {}: {e}", path.display()));
+        assert_eq!(
+            got, want[r],
+            "rank {r} derived-type digests diverge on {backend} — the reflected \
+             typemap or its pack path is backend-dependent"
+        );
+    }
+}
+
+#[test]
+fn derived_conformance_socket_matches_inproc() {
+    assert_derived_conformance("socket");
+}
+
+#[cfg(unix)]
+#[test]
+fn derived_conformance_shm_matches_inproc() {
+    assert_derived_conformance("shm");
+}
+
 /// The acceptance-criterion smoke: `ferrompi-launch -n 4` runs an
 /// allreduce end-to-end over the socket backend.
 #[test]

@@ -7,11 +7,21 @@
 
 use ferrompi::comm::Comm;
 use ferrompi::datatype::{pack, pack_into, pack_size, unpack, Datatype, Primitive, TypeMap};
+use ferrompi::modern::{Communicator, Source, Tag};
 use ferrompi::tool::pvar::PvarSession;
 use ferrompi::transport::NetworkModel;
 use ferrompi::universe::Universe;
 use ferrompi::util::prop::{check_no_shrink, Config};
 use ferrompi::util::rng::Rng;
+use ferrompi::DataType;
+
+/// Fully dense derived aggregate: reflection must put it on the same
+/// zero-copy path as a primitive array.
+#[derive(Debug, Clone, Copy, PartialEq, Default, DataType)]
+struct Cell {
+    a: i64,
+    b: i64,
+}
 
 fn bytes(v: &[i32]) -> Vec<u8> {
     v.iter().flat_map(|x| x.to_le_bytes()).collect()
@@ -164,6 +174,65 @@ fn noncontiguous_send_charges_the_copy_counter() {
     // The sender's gather staged 12 wire bytes; the receiver's unpack was
     // contiguous (uncounted).
     assert_eq!(fabric.pool.stats().copied_bytes, 12);
+}
+
+/// The derive-level version of the acceptance check: a dense
+/// `#[derive(DataType)]` aggregate ping-pong through the modern typed
+/// layer copies zero payload bytes, end to end.
+#[test]
+fn dense_derived_eager_path_is_zero_copy() {
+    assert!(Cell::typemap().is_contiguous());
+    let u = Universe::test(2);
+    let (_, fabric) = u.run_with_stats(|comm: &Comm| {
+        let m = Communicator::world(comm);
+        let data: Vec<Cell> = (0..64i64).map(|k| Cell { a: k, b: k * k }).collect();
+        let mut buf = vec![Cell::default(); data.len()];
+        let peer = 1 - m.rank();
+        for _ in 0..4 {
+            if m.rank() == 0 {
+                m.send_tagged(&data[..], peer, 11).unwrap();
+                m.receive_into(&mut buf[..], Source::Rank(peer), Tag::Value(11)).unwrap();
+            } else {
+                m.receive_into(&mut buf[..], Source::Rank(peer), Tag::Value(11)).unwrap();
+                m.send_tagged(&data[..], peer, 11).unwrap();
+            }
+            assert_eq!(buf, data);
+        }
+        let session = PvarSession::create(comm);
+        assert_eq!(
+            session.read("wire_bytes_copied").unwrap(),
+            0,
+            "dense derived eager traffic must not CPU-copy payload bytes"
+        );
+    });
+    assert_eq!(fabric.pool.stats().copied_bytes, 0);
+}
+
+/// Dense derived aggregates over the rendezvous protocol: packing is
+/// deferred until CTS and the contiguous reflected typemap still copies
+/// nothing.
+#[test]
+fn dense_derived_rendezvous_stays_zero_copy() {
+    let mut model = NetworkModel::zero();
+    model.eager_threshold = 16;
+    let u = Universe::with_model(1, 2, model);
+    let (_, fabric) = u.run_with_stats(|comm: &Comm| {
+        let m = Communicator::world(comm);
+        const N: usize = 512; // 8 KiB ≫ the 16-byte eager limit
+        if m.rank() == 0 {
+            let data: Vec<Cell> = (0..N as i64).map(|k| Cell { a: k, b: -k }).collect();
+            m.send_tagged(&data[..], 1, 13).unwrap();
+        } else {
+            let mut buf = vec![Cell::default(); N];
+            m.receive_into(&mut buf[..], Source::Rank(0), Tag::Value(13)).unwrap();
+            assert!(buf.iter().enumerate().all(|(k, c)| c.a == k as i64 && c.b == -(k as i64)));
+        }
+    });
+    assert!(
+        fabric.stats.rndv_sent.load(std::sync::atomic::Ordering::Relaxed) >= 2,
+        "expected RTS + RData over the rendezvous protocol"
+    );
+    assert_eq!(fabric.pool.stats().copied_bytes, 0);
 }
 
 /// Rendezvous with a tiny eager limit: packing is deferred until CTS and
