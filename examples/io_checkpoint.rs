@@ -1,20 +1,41 @@
-//! MPI-IO (chapter 14) demo: checkpoint/restart with file views.
+//! MPI-IO (chapter 14) demo, async edition: a checkpoint/restart
+//! pipeline on the request-based wire-path IO subsystem (docs/IO.md).
 //!
-//! Each rank owns a strided slice of a global vector; a single shared
-//! file holds the global data. Writes go through per-rank *file views*
-//! (displacement + filetype), so every rank writes its own interleaved
-//! blocks; restart reads them back through the same view. Also shows
-//! rank-ordered shared-pointer writes for a log file.
+//! Three movements:
+//!
+//! 1. **Overlapped checkpoint pipeline** — each epoch posts a collective
+//!    `write_at_all_async` of the field into a double-buffered slot file,
+//!    evolves the field *while the write is in flight* (payloads are
+//!    packed at post time, so the buffer is immediately reusable), then
+//!    completes the future and commits an epoch marker. Restart recovers
+//!    the last committed epoch and verifies it against a recompute.
+//! 2. **Strided views + split collectives** — every rank writes its
+//!    interleaved blocks of a shared file through a per-rank file view
+//!    with `write_at_all_begin`/`_end` bracketing local work.
+//! 3. **Rank-ordered log** via the server-held shared file pointer.
 //!
 //! Run: `cargo run --release --example io_checkpoint`
 
 use ferrompi::datatype::{Datatype, Primitive, TypeMap};
 use ferrompi::io::{AccessMode, File};
-use ferrompi::modern::Communicator;
+use ferrompi::modern::{Communicator, TypedFile};
 use ferrompi::universe::Universe;
 
-const BLOCK_ELEMS: usize = 16; // f64 per block
+const ELEMS: usize = 1 << 12; // f64 per rank per checkpoint
+const EPOCHS: u64 = 4;
+const BLOCK_ELEMS: usize = 16; // f64 per strided block
 const BLOCKS_PER_RANK: usize = 8;
+
+/// One deterministic timestep, so restart can verify by recomputing.
+fn evolve(field: &mut [f64]) {
+    for v in field.iter_mut() {
+        *v = *v * 0.5 + 1.0;
+    }
+}
+
+fn initial(rank: usize) -> Vec<f64> {
+    (0..ELEMS).map(|i| (rank * ELEMS + i) as f64).collect()
+}
 
 fn main() {
     let universe = Universe::new(2, 2);
@@ -22,7 +43,51 @@ fn main() {
         let comm = Communicator::world(world);
         let (r, p) = (comm.rank(), comm.size());
 
-        // --- checkpoint with a strided view ---
+        // --- 1. overlapped async checkpoint pipeline ---
+        let slots = [
+            TypedFile::<f64>::open(world, "ckpt_a.dat", AccessMode::read_write()).unwrap(),
+            TypedFile::<f64>::open(world, "ckpt_b.dat", AccessMode::read_write()).unwrap(),
+        ];
+        let meta = TypedFile::<u64>::open(world, "ckpt_meta.dat", AccessMode::read_write())
+            .unwrap();
+        let mut field = initial(r);
+        for epoch in 1..=EPOCHS {
+            let slot = &slots[(epoch % 2) as usize];
+            // Post the collective write of this epoch's state...
+            let pending = slot.write_at_all_async((r * ELEMS) as u64, &field[..]);
+            // ...and run the next timestep against the in-flight write.
+            evolve(&mut field);
+            let wrote = pending.get().unwrap();
+            assert_eq!(wrote, ELEMS, "rank {r}: short checkpoint write");
+            slot.sync().unwrap();
+            // Commit only after the data is globally synced: a restart
+            // sees the old epoch or this one, never a torn mix.
+            if r == 0 {
+                meta.write_at(0, &[epoch][..]).unwrap();
+            }
+            meta.sync().unwrap();
+        }
+
+        // --- restart: recover the last committed epoch ---
+        let mut committed = vec![0u64; 1];
+        meta.read_at(0, &mut committed[..]).unwrap();
+        let committed = committed[0];
+        assert_eq!(committed, EPOCHS);
+        let slot = &slots[(committed % 2) as usize];
+        let restored = slot.read_at_all_async((r * ELEMS) as u64, ELEMS).get().unwrap();
+        // The committed checkpoint is the state after `committed` - 1
+        // evolutions of the initial field (epoch e writes, then evolves).
+        let mut expect = initial(r);
+        for _ in 1..committed {
+            evolve(&mut expect);
+        }
+        assert_eq!(restored, expect, "rank {r}: restart state diverges from recompute");
+        meta.close().unwrap();
+        let [a, b] = slots;
+        a.close().unwrap();
+        b.close().unwrap();
+
+        // --- 2. strided views + split collectives ---
         let f64t = Datatype::primitive(Primitive::F64);
         // Filetype: BLOCK_ELEMS doubles out of every p*BLOCK_ELEMS,
         // starting at my block (classic block-cyclic striping).
@@ -32,25 +97,21 @@ fn main() {
                 .resized(0, stride_bytes),
         );
         ft.commit();
-
-        let file = File::open(world, "checkpoint.dat", AccessMode::read_write()).unwrap();
+        let file = File::open(world, "strided.dat", AccessMode::read_write()).unwrap();
         file.set_view((r * BLOCK_ELEMS * 8) as u64, &f64t, &ft).unwrap();
-
-        let mine: Vec<f64> = (0..BLOCK_ELEMS * BLOCKS_PER_RANK)
-            .map(|i| (r * 1000 + i) as f64)
-            .collect();
+        let mine: Vec<f64> =
+            (0..BLOCK_ELEMS * BLOCKS_PER_RANK).map(|i| (r * 1000 + i) as f64).collect();
         let as_b = |v: &[f64]| unsafe {
             std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8)
         };
-        let n = file.write_at_all(0, as_b(&mine), mine.len(), &f64t).unwrap();
-        assert_eq!(n, mine.len());
+        // Split collective: initiate, do unrelated local work, complete.
+        file.write_at_all_begin(0, as_b(&mine), mine.len(), &f64t).unwrap();
+        let local_checksum: f64 = mine.iter().sum();
+        let n = file.write_at_all_end().unwrap();
+        assert_eq!(n, mine.len() * 8, "split write must land every byte");
         file.sync().unwrap();
-
-        // Global size check: p ranks × blocks × elems × 8 bytes.
-        let expect_bytes = p * BLOCK_ELEMS * BLOCKS_PER_RANK * 8;
-        assert_eq!(file.size().unwrap(), expect_bytes);
-
-        // --- restart: read back through the same view ---
+        assert_eq!(file.size().unwrap(), p * BLOCK_ELEMS * BLOCKS_PER_RANK * 8);
+        // Read back through the same view.
         let mut restored = vec![0f64; mine.len()];
         let as_bm = |v: &mut [f64]| unsafe {
             std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 8)
@@ -60,9 +121,11 @@ fn main() {
         assert_eq!(restored, mine);
         file.close().unwrap();
 
-        // --- rank-ordered log writes via the shared file pointer ---
+        // --- 3. rank-ordered log via the shared file pointer ---
         let log = File::open(world, "run.log", AccessMode::read_write()).unwrap();
-        let line = format!("rank {r:02} checkpointed {} elems\n", mine.len());
+        let line = format!(
+            "rank {r:02} checkpointed epoch {committed} (checksum {local_checksum:.1})\n"
+        );
         let byte = Datatype::primitive(Primitive::Byte);
         log.write_ordered(line.as_bytes(), line.len(), &byte).unwrap();
         if r == 0 {
@@ -71,7 +134,7 @@ fn main() {
             log.read_at(0, &mut buf, len, &byte).unwrap();
             let text = String::from_utf8(buf).unwrap();
             println!("--- run.log ---\n{text}-----------------");
-            // Ordered: rank 0's line first.
+            // Ordered: rank 0's line first, one line per rank.
             assert!(text.starts_with("rank 00"));
             assert_eq!(text.lines().count(), p);
         }
@@ -79,7 +142,10 @@ fn main() {
 
         comm.barrier().unwrap();
         if r == 0 {
-            println!("io_checkpoint OK (checkpoint.dat: {expect_bytes} bytes, strided views verified)");
+            println!(
+                "io_checkpoint OK ({EPOCHS} overlapped epochs, restart from epoch {committed}, \
+                 strided split-collective views verified)"
+            );
         }
     });
 }

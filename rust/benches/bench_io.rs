@@ -1,0 +1,131 @@
+//! A7 — MPI-IO: collective checkpoint-write bandwidth through the wire
+//! path, independent vs two-phase vs async-overlapped.
+//!
+//! For each payload × rank count the sweep times the same striped
+//! collective write three ways: `independent` (two-phase aggregation
+//! off — every rank's stripes go straight to the file server),
+//! `twophase` (collective buffering through pool-allocated exchange
+//! stripes), and `async` (`iwrite_at_all` posted, a compute kernel run
+//! against the in-flight request, then completed). The IO pvars are
+//! sampled per run and carried into the JSON, so a regression in the
+//! aggregation path (staging suddenly charged where DMA should be, or
+//! the exchange silently bypassed) is visible in the artifact, not just
+//! in wall-clock noise.
+//!
+//! Writes `BENCH_io.json` at the repo root (a CI bench-smoke artifact).
+//! Set `FERROMPI_BENCH_QUICK=1` for the seconds-scale subset.
+
+use ferrompi::coordinator::{write_io_json, IoRow};
+use ferrompi::datatype::{Datatype, Primitive, TypeMap};
+use ferrompi::io::{AccessMode, File};
+use ferrompi::tool::PvarSession;
+use ferrompi::universe::Universe;
+use std::time::Instant;
+
+/// One universe run: `iters` collective writes of `len` bytes per rank.
+/// Returns rank 0's mean seconds/iter plus the job's IO pvars.
+struct Sample {
+    mean_s: f64,
+    io_reads: u64,
+    io_writes: u64,
+    io_aggregated_bytes: u64,
+    wire_bytes_copied: u64,
+}
+
+fn measure(ranks: usize, len: usize, iters: usize, mode: &'static str) -> Sample {
+    let u = Universe::new(1, ranks);
+    let per_rank = u.run(move |comm| {
+        let me = comm.rank();
+        let pn = comm.size();
+        let byte = Datatype::primitive(Primitive::Byte);
+        let f = File::open(comm, "/bench/ckpt", AccessMode::read_write().with_delete_on_close())
+            .unwrap();
+        f.set_twophase(Some(mode != "independent"));
+        // Block-cyclic striping: rank me owns one len-byte block of every
+        // pn*len window — the classic checkpoint layout two-phase
+        // aggregation exists for.
+        let ft = Datatype::new(
+            TypeMap::vector(1, len, len as isize, &TypeMap::primitive(Primitive::Byte))
+                .resized(0, (pn * len) as isize),
+        );
+        f.set_view((me * len) as u64, &byte, &ft).unwrap();
+        let payload: Vec<u8> = (0..len).map(|i| (i as u64 * 167 + me as u64) as u8).collect();
+        // Warmup iteration, then the timed window.
+        f.write_at_all(0, &payload, len, &byte).unwrap();
+        ferrompi::collective::barrier(comm).unwrap();
+        let start = Instant::now();
+        let mut overlap_sink = 0u64;
+        for _ in 0..iters {
+            if mode == "async" {
+                let req = f.iwrite_at_all(0, &payload, len, &byte).unwrap();
+                // The "compute" the posted write overlaps with.
+                overlap_sink = overlap_sink
+                    .wrapping_add(payload.iter().map(|&b| b as u64).sum::<u64>());
+                req.wait().unwrap();
+            } else {
+                f.write_at_all(0, &payload, len, &byte).unwrap();
+            }
+        }
+        let mean_s = start.elapsed().as_secs_f64() / iters as f64;
+        std::hint::black_box(overlap_sink);
+        let s = PvarSession::create(comm);
+        let read = |n| s.read(n).unwrap();
+        let sample = Sample {
+            mean_s,
+            io_reads: read("io_reads"),
+            io_writes: read("io_writes"),
+            io_aggregated_bytes: read("io_aggregated_bytes"),
+            wire_bytes_copied: read("wire_bytes_copied"),
+        };
+        f.close().unwrap();
+        (me, sample)
+    });
+    per_rank.into_iter().find(|(r, _)| *r == 0).expect("rank 0 measured").1
+}
+
+fn main() {
+    let quick = std::env::var("FERROMPI_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let payloads: Vec<usize> =
+        if quick { vec![1 << 16] } else { vec![1 << 14, 1 << 18, 1 << 20] };
+    let rank_counts: Vec<usize> = if quick { vec![4] } else { vec![2, 4] };
+    let iters = if quick { 3 } else { 10 };
+
+    println!("A7 — MPI-IO: independent vs two-phase vs async collective writes\n");
+    let mut rows: Vec<IoRow> = Vec::new();
+    for &len in &payloads {
+        for &ranks in &rank_counts {
+            for mode in ["independent", "twophase", "async"] {
+                let s = measure(ranks, len, iters, mode);
+                let agg = (ranks * len) as f64 / s.mean_s;
+                println!(
+                    "  {:>9} B × {ranks} ranks, {mode:<11}: {:>9.1} us/iter \
+                     ({:>7.1} MB/s aggregate, staged {} B)",
+                    len,
+                    s.mean_s * 1e6,
+                    agg / 1e6,
+                    s.io_aggregated_bytes,
+                );
+                rows.push(IoRow {
+                    mode,
+                    payload_bytes: len,
+                    ranks,
+                    bytes_per_s: agg,
+                    io_reads: s.io_reads,
+                    io_writes: s.io_writes,
+                    io_aggregated_bytes: s.io_aggregated_bytes,
+                    wire_bytes_copied: s.wire_bytes_copied,
+                });
+            }
+        }
+    }
+
+    // Repo root = parent of the rust/ crate (CWD under `cargo bench` is
+    // wherever cargo was invoked, so anchor on the manifest instead).
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate has a parent dir")
+        .to_path_buf();
+    let path = root.join("BENCH_io.json");
+    write_io_json(&rows, &path).expect("write io JSON");
+    println!("\nwrote {}", path.display());
+}

@@ -232,6 +232,21 @@ pub fn decide_alltoallv(p: usize, block_bytes: usize, m: &NetworkModel) -> Allto
     }
 }
 
+// ---------------- collective-IO aggregator planning ----------------
+
+/// Auto table for the two-phase collective-IO exchange: how many
+/// aggregator ranks collect stripes on behalf of the communicator.
+/// Roughly one per node — the exchange exists to replace many small
+/// strided file ops with few large contiguous ones, and per-node
+/// aggregation removes the inter-node hop for everyone sharing a node —
+/// but never more than the stripe count (an aggregator owning zero
+/// stripes is pure overhead) and never more than the communicator size.
+/// Always at least one, so a degenerate span still has an owner.
+pub fn decide_io_aggregators(t: CommTopo, stripe_bytes: usize, total_bytes: usize) -> usize {
+    let stripes = total_bytes.div_ceil(stripe_bytes.max(1)).max(1);
+    t.nodes.clamp(1, t.p.max(1)).min(stripes)
+}
+
 // ---------------- chunked-reduction planning ----------------
 
 /// Modeled combine throughput used to cost the chunked pipeline,
@@ -765,6 +780,21 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn io_aggregator_table_boundaries() {
+        // One aggregator per node on hierarchical shapes.
+        assert_eq!(decide_io_aggregators(topo(8, 4, 2), 1 << 16, 4 << 20), 4);
+        // Single node: one aggregator regardless of size.
+        assert_eq!(decide_io_aggregators(topo(8, 1, 8), 1 << 16, 4 << 20), 1);
+        // Never more aggregators than stripes.
+        assert_eq!(decide_io_aggregators(topo(8, 8, 1), 1 << 16, 1 << 16), 1);
+        assert_eq!(decide_io_aggregators(topo(8, 8, 1), 1 << 16, (2 << 16) + 1), 3);
+        // Never more than the communicator, and ≥ 1 even for empty spans.
+        assert_eq!(decide_io_aggregators(topo(2, 4, 1), 1 << 16, usize::MAX), 2);
+        assert_eq!(decide_io_aggregators(topo(4, 2, 2), 1 << 16, 0), 1);
+        assert_eq!(decide_io_aggregators(topo(1, 1, 1), 0, 0), 1);
     }
 
     #[test]

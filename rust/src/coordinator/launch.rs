@@ -509,6 +509,7 @@ Universe::run picks the job up from the environment). Builtins:
   builtin:conformance --program chunked --out D  chunked-allreduce showcase
   builtin:conformance --program hotspot --out D  many-to-one flow-control showcase
   builtin:conformance --program derived --out D  #[derive(DataType)] aggregate showcase
+  builtin:conformance --program io --out D  MPI-IO wire-path showcase (rank-0 file server)
   builtin:pingpong --out F [--bytes a,b]  latency sweep → CSV at F
 ";
 
@@ -659,9 +660,13 @@ fn builtin_conformance(args: &[String]) -> Result<(), String> {
         // dense zero-copy cells and padded gather/scatter events — must
         // digest identically across process boundaries.
         Some("derived") => crate::sim::proggen::Program::derived_showcase(u.nranks()),
+        // The MPI-IO showcase: striped collective writes, whole-file
+        // collective reads and async tails through the rank-0 file
+        // server — Io* packets must digest identically across backends.
+        Some("io") => crate::sim::proggen::Program::io_showcase(u.nranks()),
         Some(other) => {
             return Err(format!(
-                "unknown conformance program '{other}' (known: chunked | hotspot | derived)"
+                "unknown conformance program '{other}' (known: chunked | hotspot | derived | io)"
             ));
         }
         None => {

@@ -11,7 +11,7 @@ pub use mpibench::{
     ALL_OPS,
 };
 pub use report::{
-    figure1_cells, figure1_report, gradient_json, overhead_json, transport_json, tuned_json,
-    write_gradient_json, write_overhead_json, write_transport_json, write_tuned_json,
-    Figure1Cell, Figure1Report, GradientRow, TransportRow,
+    figure1_cells, figure1_report, gradient_json, io_json, overhead_json, transport_json,
+    tuned_json, write_gradient_json, write_io_json, write_overhead_json, write_transport_json,
+    write_tuned_json, Figure1Cell, Figure1Report, GradientRow, IoRow, TransportRow,
 };

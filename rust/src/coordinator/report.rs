@@ -320,6 +320,60 @@ pub fn write_gradient_json(rows: &[GradientRow], path: &std::path::Path) -> std:
     std::fs::write(path, gradient_json(rows))
 }
 
+/// One IO-sweep measurement (`benches/bench_io.rs`): a collective
+/// checkpoint write of `payload_bytes` per rank on `ranks` ranks through
+/// one of the three write paths, with the IO pvars sampled after the
+/// timed window.
+#[derive(Debug, Clone)]
+pub struct IoRow {
+    /// Write path: `independent` (two-phase off), `twophase`
+    /// (aggregated collective buffering), or `async` (iwrite_at_all
+    /// overlapped with compute).
+    pub mode: &'static str,
+    /// Bytes contributed per rank per iteration.
+    pub payload_bytes: usize,
+    pub ranks: usize,
+    /// Aggregate file bandwidth: ranks × payload / mean iteration time.
+    pub bytes_per_s: f64,
+    pub io_reads: u64,
+    pub io_writes: u64,
+    /// Bytes staged through the two-phase exchange (0 off the aggregated
+    /// path — pinned against `wire_bytes_copied` by tests/test_io.rs).
+    pub io_aggregated_bytes: u64,
+    pub wire_bytes_copied: u64,
+}
+
+/// Serialize the IO sweep as JSON (the `BENCH_io.json` CI artifact).
+pub fn io_json(rows: &[IoRow]) -> String {
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"mode\": \"{}\", \"payload_bytes\": {}, \"ranks\": {}, \
+                 \"bytes_per_s\": {}, \"io_reads\": {}, \"io_writes\": {}, \
+                 \"io_aggregated_bytes\": {}, \"wire_bytes_copied\": {}}}",
+                r.mode,
+                r.payload_bytes,
+                r.ranks,
+                json_num(r.bytes_per_s),
+                r.io_reads,
+                r.io_writes,
+                r.io_aggregated_bytes,
+                r.wire_bytes_copied,
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"benchmark\": \"io\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    )
+}
+
+/// Write [`io_json`] to `path`.
+pub fn write_io_json(rows: &[IoRow], path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, io_json(rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::mpibench::BenchOp;
@@ -447,6 +501,40 @@ mod tests {
         assert!(j.contains("\"overlap_efficiency\": 1.25e0"));
         assert!(j.contains("\"bytes_per_s\": null"));
         assert!(j.contains("\"chunks_inflight_max\": 4"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn io_json_is_well_formed() {
+        let rows = vec![
+            IoRow {
+                mode: "twophase",
+                payload_bytes: 1 << 16,
+                ranks: 4,
+                bytes_per_s: 2e9,
+                io_reads: 0,
+                io_writes: 4,
+                io_aggregated_bytes: 1 << 18,
+                wire_bytes_copied: 1 << 18,
+            },
+            IoRow {
+                mode: "independent",
+                payload_bytes: 4096,
+                ranks: 2,
+                bytes_per_s: f64::NAN,
+                io_reads: 2,
+                io_writes: 2,
+                io_aggregated_bytes: 0,
+                wire_bytes_copied: 0,
+            },
+        ];
+        let j = io_json(&rows);
+        assert!(j.contains("\"benchmark\": \"io\""));
+        assert!(j.contains("\"mode\": \"twophase\""));
+        assert!(j.contains("\"bytes_per_s\": 2e9"));
+        assert!(j.contains("\"bytes_per_s\": null"));
+        assert!(j.contains("\"io_aggregated_bytes\": 262144"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
     }

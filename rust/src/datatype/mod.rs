@@ -41,6 +41,13 @@ impl Datatype {
         Datatype { map: Arc::new(TypeMap::primitive(p)), committed: true }
     }
 
+    /// Wrap an already-shared typemap as a committed handle — the
+    /// receiving side of typemaps that crossed the wire (RMA accumulate,
+    /// IO filetype views), which were committed at the origin.
+    pub fn from_shared(map: Arc<TypeMap>) -> Datatype {
+        Datatype { map, committed: true }
+    }
+
     /// `MPI_Type_commit`: after this the type may be used in communication.
     pub fn commit(&mut self) {
         self.committed = true;

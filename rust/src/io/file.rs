@@ -1,17 +1,41 @@
 //! File handles (§14.2): open/close/delete, read/write at explicit
-//! offsets, individual and shared file pointers, collective and ordered
-//! variants, nonblocking wrappers.
+//! offsets, individual and shared file pointers, collective (including
+//! split) and ordered variants, and nonblocking operations returning
+//! first-class [`Request`]s.
+//!
+//! Every operation is transport traffic: the client injects an `Io*`
+//! packet toward the file server rank ([`server_rank`]) and waits on (or
+//! hands the caller a request for) the origin-side completion token —
+//! exactly the RMA pattern. Blocking calls drive the engine with
+//! [`wait_for`]; nonblocking ones wrap the token in a [`CustomRequest`].
+//! Collective writes route through the two-phase exchange
+//! ([`CollectiveWrite`]) when enabled (`FERROMPI_IO_TWOPHASE`, default
+//! on; [`File::set_twophase`] overrides per handle — collectively, all
+//! ranks must agree).
+//!
+//! On launched (`shm`/`socket`) backends the one real filesystem lives
+//! in world rank 0's process and every packet crosses the wire to it;
+//! set `FERROMPI_IO_SERVER=0` to disable the served path, in which case
+//! `File::open` refuses cleanly on multi-process backends.
 
+use super::server::{
+    self, server_rank, FLAG_CREATE, FLAG_DELETE_ON_CLOSE, FLAG_EXCL, OP_CLOSE, OP_DELETE, OP_OPEN,
+    OP_PREALLOC, OP_SET_SIZE, OP_SHARED_BUMP, OP_SHARED_GET, OP_SHARED_SET, OP_SIZE,
+};
+use super::twophase::{twophase_default, CollectiveWrite};
 use super::view::View;
 use crate::collective;
 use crate::comm::Comm;
-use crate::datatype::{pack, unpack, Datatype, Primitive};
+use crate::datatype::{pack, unpack, Datatype, Primitive, TypeMap};
 use crate::op::Op;
-use crate::request::{grequest_start, Request};
-use crate::transport::fabric::FileNode;
+use crate::p2p::{
+    io_done, start_io, take_io_result, wait_for, IoKind, RankCtx, RawBufMut, Status,
+};
+use crate::request::{CustomRequest, Request};
+use crate::transport::WireBytes;
 use crate::{mpi_err, ErrorClass, MpiError, Result};
 use std::cell::{Cell, RefCell};
-use std::sync::atomic::Ordering;
+use std::rc::Rc;
 use std::sync::Arc;
 
 /// `MPI_MODE_*` access-mode flags.
@@ -74,16 +98,46 @@ impl AccessMode {
     }
 }
 
+/// Issue one metadata op toward the file server and block for the reply
+/// scalar (the engine keeps processing inbound packets while waiting, so
+/// a blocked client still serves others in in-process mode).
+fn run_meta(ctx: &Rc<RankCtx>, path: &str, op: u8, arg: u64) -> Result<u64> {
+    let token = start_io(ctx, server_rank(ctx), IoKind::Meta { path: path.to_string(), op, arg });
+    wait_for(ctx, || io_done(ctx, token))?;
+    let (_, value) = take_io_result(ctx, token)?;
+    Ok(value)
+}
+
+/// Which half of a split collective is outstanding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SplitKind {
+    Read,
+    Write,
+}
+
+struct PendingSplit {
+    kind: SplitKind,
+    req: Request,
+    /// Bytes for the `_end` return value when known at begin time
+    /// (writes); reads report the possibly-short completion status.
+    bytes: Option<usize>,
+}
+
 /// `MPI_File`.
 pub struct File {
     comm: Comm,
-    node: Arc<FileNode>,
     path: String,
     amode: AccessMode,
     view: RefCell<View>,
-    /// Individual file pointer, in *logical view bytes*.
+    /// Individual file pointer, in *etypes*.
     ptr: Cell<u64>,
     atomicity: Cell<bool>,
+    /// Per-handle two-phase override; `None` defers to the env knob.
+    twophase: Cell<Option<bool>>,
+    /// Tag-space sequencer for collective-IO ops on the private comm.
+    op_seq: Cell<i32>,
+    /// The outstanding split collective, if any (§14.4.5 allows one).
+    split: RefCell<Option<PendingSplit>>,
 }
 
 impl std::fmt::Debug for File {
@@ -97,34 +151,28 @@ impl std::fmt::Debug for File {
 }
 
 impl File {
-    /// `MPI_File_open` — collective over `comm`.
+    /// `MPI_File_open` — collective over `comm`. Rank 0 runs the server
+    /// transaction (opening one handle per rank at once) and the outcome
+    /// is broadcast so every rank agrees.
     pub fn open(comm: &Comm, path: &str, amode: AccessMode) -> Result<File> {
         amode.validate()?;
-        if comm.rank_ctx().fabric.is_multiprocess() {
-            // The simulated parallel filesystem lives in process memory;
-            // a launched job would give every rank a private disconnected
-            // "shared" file. Refuse cleanly instead.
+        if comm.rank_ctx().fabric.is_multiprocess() && !server::server_enabled() {
             return Err(mpi_err!(
                 Io,
-                "the simulated shared filesystem is per-process — MPI-IO is \
-                 unavailable on multi-process transport backends"
+                "MPI-IO on multi-process backends routes through the rank-0 file \
+                 server, which is disabled (FERROMPI_IO_SERVER=0)"
             ));
         }
         let comm = comm.dup()?;
-        let fabric = comm.rank_ctx().fabric.clone();
-        // Rank 0 performs the filesystem transaction; the outcome is
-        // broadcast so every rank agrees.
+        let ctx = comm.rank_ctx().clone();
         let mut code = [0u8; 4];
         if comm.rank() == 0 {
-            let mut files = fabric.files.lock().unwrap();
-            let exists = files.contains_key(path);
-            let c: i32 = if exists && amode.excl {
-                ErrorClass::FileExists.code()
-            } else if !exists && !amode.create {
-                ErrorClass::NoSuchFile.code()
-            } else {
-                files.entry(path.to_string()).or_default();
-                0
+            let flags = if amode.create { FLAG_CREATE } else { 0 }
+                | if amode.excl { FLAG_EXCL } else { 0 };
+            let arg = ((comm.size() as u64) << 8) | flags;
+            let c = match run_meta(&ctx, path, OP_OPEN, arg) {
+                Ok(_) => 0,
+                Err(e) => e.class.code(),
             };
             code.copy_from_slice(&c.to_le_bytes());
         }
@@ -134,16 +182,16 @@ impl File {
         if code != 0 {
             return Err(MpiError::new(ErrorClass::from_code(code), format!("open '{path}'")));
         }
-        let node = fabric.files.lock().unwrap().get(path).unwrap().clone();
-        node.open_count.fetch_add(1, Ordering::SeqCst);
         let f = File {
             comm,
-            node,
             path: path.to_string(),
             amode,
             view: RefCell::new(View::default()),
             ptr: Cell::new(0),
             atomicity: Cell::new(false),
+            twophase: Cell::new(None),
+            op_seq: Cell::new(0),
+            split: RefCell::new(None),
         };
         if amode.append {
             f.ptr.set(f.size()? as u64);
@@ -153,26 +201,32 @@ impl File {
 
     /// `MPI_File_delete` (non-collective, any rank).
     pub fn delete(comm: &Comm, path: &str) -> Result<()> {
-        let fabric = comm.rank_ctx().fabric.clone();
-        let mut files = fabric.files.lock().unwrap();
-        match files.get(path) {
-            None => Err(mpi_err!(NoSuchFile, "delete '{path}'")),
-            Some(node) if node.open_count.load(Ordering::SeqCst) > 0 => {
-                Err(mpi_err!(FileInUse, "delete '{path}' while open"))
-            }
-            Some(_) => {
-                files.remove(path);
-                Ok(())
-            }
-        }
+        run_meta(comm.rank_ctx(), path, OP_DELETE, 0).map(|_| ())
     }
 
-    /// `MPI_File_close` — collective; honors delete-on-close.
+    /// `MPI_File_close` — collective; honors delete-on-close. The leading
+    /// barrier guarantees every rank's operations completed before rank 0
+    /// drops the handles.
     pub fn close(self) -> Result<()> {
+        if self.split.borrow().is_some() {
+            return Err(mpi_err!(Io, "close with an outstanding split collective"));
+        }
         collective::barrier(&self.comm)?;
-        let remaining = self.node.open_count.fetch_sub(1, Ordering::SeqCst) - 1;
-        if self.amode.delete_on_close && remaining == 0 && self.comm.rank() == 0 {
-            self.comm.rank_ctx().fabric.files.lock().unwrap().remove(&self.path);
+        let mut code = [0u8; 4];
+        if self.comm.rank() == 0 {
+            let flags = if self.amode.delete_on_close { FLAG_DELETE_ON_CLOSE } else { 0 };
+            let arg = ((self.comm.size() as u64) << 8) | flags;
+            let c = match run_meta(self.comm.rank_ctx(), &self.path, OP_CLOSE, arg) {
+                Ok(_) => 0,
+                Err(e) => e.class.code(),
+            };
+            code.copy_from_slice(&c.to_le_bytes());
+        }
+        let i32t = Datatype::primitive(Primitive::I32);
+        collective::bcast(&self.comm, &mut code, 1, &i32t, 0)?;
+        let code = i32::from_le_bytes(code);
+        if code != 0 {
+            return Err(MpiError::new(ErrorClass::from_code(code), format!("close '{}'", self.path)));
         }
         Ok(())
     }
@@ -185,18 +239,41 @@ impl File {
         &self.comm
     }
 
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Per-handle two-phase override: `Some(true)`/`Some(false)` force
+    /// the collective-buffering path on or off, `None` defers to
+    /// `FERROMPI_IO_TWOPHASE`. Set it collectively — all ranks of the
+    /// file's communicator must agree or collective writes mismatch.
+    pub fn set_twophase(&self, on: Option<bool>) {
+        self.twophase.set(on);
+    }
+
+    fn use_twophase(&self) -> bool {
+        self.twophase.get().unwrap_or_else(twophase_default)
+    }
+
+    /// Fresh tag base for one collective-IO op on the private comm.
+    fn next_tags(&self) -> i32 {
+        let s = self.op_seq.get();
+        self.op_seq.set(s + 4);
+        s
+    }
+
     /// `MPI_File_get_size` (physical bytes).
     pub fn size(&self) -> Result<usize> {
-        Ok(self.node.data.lock().unwrap().len())
+        run_meta(self.comm.rank_ctx(), &self.path, OP_SIZE, 0).map(|v| v as usize)
     }
 
     /// `MPI_File_set_size` (truncate or zero-extend); collective. The
-    /// leading barrier keeps the resize from racing reads other ranks
-    /// issue before entering the call.
+    /// leading barrier keeps the resize from racing operations other
+    /// ranks issue before entering the call.
     pub fn set_size(&self, size: usize) -> Result<()> {
         collective::barrier(&self.comm)?;
         if self.comm.rank() == 0 {
-            self.node.data.lock().unwrap().resize(size, 0);
+            run_meta(self.comm.rank_ctx(), &self.path, OP_SET_SIZE, size as u64)?;
         }
         collective::barrier(&self.comm)
     }
@@ -205,21 +282,18 @@ impl File {
     pub fn preallocate(&self, size: usize) -> Result<()> {
         collective::barrier(&self.comm)?;
         if self.comm.rank() == 0 {
-            let mut d = self.node.data.lock().unwrap();
-            if d.len() < size {
-                d.resize(size, 0);
-            }
+            run_meta(self.comm.rank_ctx(), &self.path, OP_PREALLOC, size as u64)?;
         }
         collective::barrier(&self.comm)
     }
 
-    /// `MPI_File_set_view` — collective.
+    /// `MPI_File_set_view` — collective; resets both file pointers.
     pub fn set_view(&self, displacement: u64, etype: &Datatype, filetype: &Datatype) -> Result<()> {
         let v = View::new(displacement, etype.clone(), filetype.clone())?;
         *self.view.borrow_mut() = v;
         self.ptr.set(0);
         if self.comm.rank() == 0 {
-            *self.node.shared_ptr.lock().unwrap() = 0;
+            run_meta(self.comm.rank_ctx(), &self.path, OP_SHARED_SET, 0)?;
         }
         collective::barrier(&self.comm)
     }
@@ -238,53 +312,139 @@ impl File {
         self.atomicity.get()
     }
 
-    /// `MPI_File_sync` (the in-memory store is always durable; this is a
-    /// collective ordering point).
+    /// `MPI_File_sync`: a collective ordering point. The server applies
+    /// operations in arrival order and every blocking/waited op implies
+    /// its server-side completion, so the barrier is the only missing
+    /// piece of the §14.6 semantics.
     pub fn sync(&self) -> Result<()> {
         collective::barrier(&self.comm)
     }
 
     // ---- explicit-offset ops (§14.4.2) ----
 
-    /// `MPI_File_read_at`: `offset` is in etypes. Returns elements read.
-    pub fn read_at(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
+    /// Post the wire read for `count` elements at etype-offset `offset`
+    /// and return the completion token (no waiting).
+    fn start_read(&self, offset: u64, count: usize, dtype: &Datatype) -> Result<u64> {
         if !self.amode.can_read() {
             return Err(mpi_err!(Amode, "file not opened for reading"));
         }
         dtype.require_committed()?;
         let view = self.view.borrow();
-        let lo = offset * view.etype.size() as u64;
-        let nbytes = dtype.size() * count;
-        let mut wire = vec![0u8; nbytes];
-        let got = {
-            let data = self.node.data.lock().unwrap();
-            view.read(&data, lo, &mut wire)
-        };
-        let whole = got / dtype.size().max(1);
-        unpack(dtype.map(), &wire[..whole * dtype.size()], buf, whole)?;
-        Ok(whole)
+        let ctx = self.comm.rank_ctx();
+        Ok(start_io(
+            ctx,
+            server_rank(ctx),
+            IoKind::Read {
+                path: self.path.clone(),
+                disp: view.displacement,
+                map: view.filetype.shared_map(),
+                lo: offset * view.etype.size() as u64,
+                nbytes: dtype.size() * count,
+            },
+        ))
     }
 
-    /// `MPI_File_write_at`. Returns elements written.
-    pub fn write_at(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
+    /// Pack and post the wire write; returns the completion token.
+    fn start_write(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<u64> {
         if !self.amode.can_write() {
             return Err(mpi_err!(Amode, "file not opened for writing"));
         }
         dtype.require_committed()?;
         let view = self.view.borrow();
-        let lo = offset * view.etype.size() as u64;
-        let mut wire = Vec::with_capacity(dtype.size() * count);
+        let ctx = self.comm.rank_ctx();
+        let nbytes = dtype.size() * count;
+        // Contiguous user bytes → wire buffer is the DMA-modeled single
+        // memcpy (uncharged, like the send path); non-contiguous layouts
+        // charge their pack.
+        let mut wire = ctx.fabric.pool.take(nbytes);
         pack(dtype.map(), buf, count, &mut wire)?;
-        {
-            let mut data = self.node.data.lock().unwrap();
-            view.write(&mut data, lo, &wire);
+        if !dtype.map().is_contiguous() {
+            ctx.fabric.pool.count_copied(nbytes);
         }
+        Ok(start_io(
+            ctx,
+            server_rank(ctx),
+            IoKind::Write {
+                path: self.path.clone(),
+                disp: view.displacement,
+                map: view.filetype.shared_map(),
+                lo: offset * view.etype.size() as u64,
+                data: wire.freeze(),
+            },
+        ))
+    }
+
+    /// Unpack a completed read into `buf`; returns whole elements read
+    /// (short at EOF).
+    fn finish_read(data: &WireBytes, buf: &mut [u8], dtype: &Datatype) -> Result<usize> {
+        let sz = dtype.size().max(1);
+        let whole = data.len() / sz;
+        unpack(dtype.map(), &data.as_slice()[..whole * dtype.size()], buf, whole)?;
+        Ok(whole)
+    }
+
+    /// `MPI_File_read_at`: `offset` is in etypes. Returns elements read.
+    pub fn read_at(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let ctx = self.comm.rank_ctx();
+        let token = self.start_read(offset, count, dtype)?;
+        wait_for(ctx, || io_done(ctx, token))?;
+        let (data, _) = take_io_result(ctx, token)?;
+        Self::finish_read(&data, buf, dtype)
+    }
+
+    /// `MPI_File_write_at`. Returns elements written.
+    pub fn write_at(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
+        let ctx = self.comm.rank_ctx();
+        let token = self.start_write(offset, buf, count, dtype)?;
+        wait_for(ctx, || io_done(ctx, token))?;
+        take_io_result(ctx, token)?;
         Ok(count)
     }
 
-    /// `MPI_File_read_at_all` / `write_at_all`: collective versions (the
-    /// in-memory store needs no two-phase aggregation; the collective
-    /// contract — all ranks arrive — is enforced with a barrier).
+    /// Build the request behind every collective-write entry point:
+    /// two-phase aggregation when enabled and the communicator is
+    /// non-trivial, otherwise an independent write followed by a
+    /// nonblocking barrier (the collective contract without exchange).
+    fn write_at_all_start(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        if !self.amode.can_write() {
+            return Err(mpi_err!(Amode, "file not opened for writing"));
+        }
+        if self.use_twophase() && self.comm.size() > 1 {
+            let view = self.view.borrow().clone();
+            let op = CollectiveWrite::begin(
+                &self.comm,
+                &self.path,
+                &view,
+                offset,
+                buf,
+                count,
+                dtype,
+                self.next_tags(),
+            )?;
+            Ok(Request::custom(self.comm.rank_ctx().clone(), op))
+        } else {
+            self.write_at(offset, buf, count, dtype)?;
+            collective::ibarrier(&self.comm)
+        }
+    }
+
+    /// Build the request behind the collective-read entry points: the
+    /// independent wire read plus a nonblocking barrier, completing only
+    /// when both have.
+    fn read_at_all_start(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        let token = self.start_read(offset, count, dtype)?;
+        let barrier = collective::ibarrier(&self.comm)?;
+        let ctx = self.comm.rank_ctx().clone();
+        let op = Rc::new(IoOp {
+            ctx: ctx.clone(),
+            token,
+            dest: RefCell::new(Some((RawBufMut::from_slice(buf), dtype.clone()))),
+            barrier: Some(barrier),
+        });
+        Ok(Request::custom(ctx, op))
+    }
+
+    /// `MPI_File_read_at_all` / `write_at_all` — collective.
     pub fn read_at_all(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
         let n = self.read_at(offset, buf, count, dtype)?;
         collective::barrier(&self.comm)?;
@@ -292,9 +452,67 @@ impl File {
     }
 
     pub fn write_at_all(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
-        let n = self.write_at(offset, buf, count, dtype)?;
-        collective::barrier(&self.comm)?;
-        Ok(n)
+        self.write_at_all_start(offset, buf, count, dtype)?.wait()?;
+        Ok(count)
+    }
+
+    // ---- split collectives (§14.4.5) ----
+
+    /// `MPI_File_write_at_all_begin`. One split collective may be
+    /// outstanding per file handle; `begin` initiates (for two-phase,
+    /// including the exchange planning collectives) and returns.
+    pub fn write_at_all_begin(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<()> {
+        if self.split.borrow().is_some() {
+            return Err(mpi_err!(Io, "a split collective is already outstanding on this file"));
+        }
+        let req = self.write_at_all_start(offset, buf, count, dtype)?;
+        *self.split.borrow_mut() =
+            Some(PendingSplit { kind: SplitKind::Write, req, bytes: Some(dtype.size() * count) });
+        Ok(())
+    }
+
+    /// `MPI_File_write_at_all_end`: completes the outstanding split
+    /// write; returns bytes written.
+    pub fn write_at_all_end(&self) -> Result<usize> {
+        let ps = self
+            .split
+            .borrow_mut()
+            .take()
+            .ok_or_else(|| mpi_err!(Io, "write_at_all_end without a matching begin"))?;
+        if ps.kind != SplitKind::Write {
+            *self.split.borrow_mut() = Some(ps);
+            return Err(mpi_err!(Io, "write_at_all_end while a split read is outstanding"));
+        }
+        let st = ps.req.wait()?;
+        Ok(ps.bytes.unwrap_or(st.bytes))
+    }
+
+    /// `MPI_File_read_at_all_begin`. The caller must keep `buf` alive
+    /// and untouched until `read_at_all_end` (the standard's split-
+    /// collective buffer contract).
+    pub fn read_at_all_begin(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<()> {
+        if self.split.borrow().is_some() {
+            return Err(mpi_err!(Io, "a split collective is already outstanding on this file"));
+        }
+        let req = self.read_at_all_start(offset, buf, count, dtype)?;
+        *self.split.borrow_mut() = Some(PendingSplit { kind: SplitKind::Read, req, bytes: None });
+        Ok(())
+    }
+
+    /// `MPI_File_read_at_all_end`: completes the outstanding split read;
+    /// returns bytes read (short at EOF).
+    pub fn read_at_all_end(&self) -> Result<usize> {
+        let ps = self
+            .split
+            .borrow_mut()
+            .take()
+            .ok_or_else(|| mpi_err!(Io, "read_at_all_end without a matching begin"))?;
+        if ps.kind != SplitKind::Read {
+            *self.split.borrow_mut() = Some(ps);
+            return Err(mpi_err!(Io, "read_at_all_end while a split write is outstanding"));
+        }
+        let st = ps.req.wait()?;
+        Ok(st.bytes)
     }
 
     // ---- individual file pointer (§14.4.3) ----
@@ -309,19 +527,22 @@ impl File {
         self.ptr.get()
     }
 
+    fn advance_ptr(&self, elems: usize, dtype: &Datatype) {
+        let esz = self.view.borrow().etype.size().max(1);
+        self.ptr.set(self.ptr.get() + (elems * dtype.size() / esz) as u64);
+    }
+
     /// `MPI_File_read`.
     pub fn read(&self, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
         let n = self.read_at(self.ptr.get(), buf, count, dtype)?;
-        let esz = self.view.borrow().etype.size().max(1);
-        self.ptr.set(self.ptr.get() + (n * dtype.size() / esz) as u64);
+        self.advance_ptr(n, dtype);
         Ok(n)
     }
 
     /// `MPI_File_write`.
     pub fn write(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
         let n = self.write_at(self.ptr.get(), buf, count, dtype)?;
-        let esz = self.view.borrow().etype.size().max(1);
-        self.ptr.set(self.ptr.get() + (n * dtype.size() / esz) as u64);
+        self.advance_ptr(n, dtype);
         Ok(n)
     }
 
@@ -333,74 +554,305 @@ impl File {
     }
 
     pub fn write_all(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
-        let n = self.write(buf, count, dtype)?;
-        collective::barrier(&self.comm)?;
-        Ok(n)
+        let at = self.ptr.get();
+        self.write_at_all_start(at, buf, count, dtype)?.wait()?;
+        self.advance_ptr(count, dtype);
+        Ok(count)
     }
 
     // ---- shared file pointer (§14.4.4) ----
 
-    fn bump_shared(&self, etypes: u64) -> u64 {
-        let mut p = self.node.shared_ptr.lock().unwrap();
-        let at = *p;
-        *p += etypes;
-        at
+    /// Fetch-and-add the server-held shared pointer; returns the old
+    /// position (etypes).
+    fn bump_shared(&self, etypes: u64) -> Result<u64> {
+        run_meta(self.comm.rank_ctx(), &self.path, OP_SHARED_BUMP, etypes)
+    }
+
+    fn shared_etypes(&self, count: usize, dtype: &Datatype) -> u64 {
+        let esz = self.view.borrow().etype.size().max(1);
+        (dtype.size() * count / esz) as u64
     }
 
     /// `MPI_File_read_shared`.
     pub fn read_shared(&self, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<usize> {
-        let esz = self.view.borrow().etype.size().max(1);
-        let at = self.bump_shared((dtype.size() * count / esz) as u64);
+        let at = self.bump_shared(self.shared_etypes(count, dtype))?;
         self.read_at(at, buf, count, dtype)
     }
 
     /// `MPI_File_write_shared`.
     pub fn write_shared(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
-        let esz = self.view.borrow().etype.size().max(1);
-        let at = self.bump_shared((dtype.size() * count / esz) as u64);
+        let at = self.bump_shared(self.shared_etypes(count, dtype))?;
         self.write_at(at, buf, count, dtype)
     }
 
-    /// `MPI_File_write_ordered`: rank-order offsets via exscan of sizes.
+    /// `MPI_File_write_ordered`: rank-order offsets via an exscan of
+    /// contribution sizes on top of the server-held shared pointer.
     pub fn write_ordered(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<usize> {
-        let esz = self.view.borrow().etype.size().max(1);
-        let mine = (dtype.size() * count / esz) as u64;
-        let base = {
-            let p = self.node.shared_ptr.lock().unwrap();
-            *p
-        };
+        let mine = self.shared_etypes(count, dtype);
+        let mut base = [0u8; 8];
+        if self.comm.rank() == 0 {
+            let b = run_meta(self.comm.rank_ctx(), &self.path, OP_SHARED_GET, 0)?;
+            base.copy_from_slice(&b.to_le_bytes());
+        }
         let u64t = Datatype::primitive(Primitive::U64);
+        collective::bcast(&self.comm, &mut base, 1, &u64t, 0)?;
+        let base = u64::from_le_bytes(base);
         let mut before = [0u8; 8];
         collective::exscan(&self.comm, Some(&mine.to_le_bytes()), &mut before, 1, &u64t, &Op::SUM)?;
         let before = if self.comm.rank() == 0 { 0 } else { u64::from_le_bytes(before) };
         let n = self.write_at(base + before, buf, count, dtype)?;
-        // Advance the shared pointer past everyone (rank 0, after barrier).
         let mut total = [0u8; 8];
         collective::allreduce(&self.comm, Some(&mine.to_le_bytes()), &mut total, 1, &u64t, &Op::SUM)?;
         if self.comm.rank() == 0 {
-            *self.node.shared_ptr.lock().unwrap() = base + u64::from_le_bytes(total);
+            let end = base + u64::from_le_bytes(total);
+            run_meta(self.comm.rank_ctx(), &self.path, OP_SHARED_SET, end)?;
         }
         collective::barrier(&self.comm)?;
         Ok(n)
     }
 
-    // ---- nonblocking (§14.4.5): performed eagerly, completion via
-    // generalized request (legal: "nonblocking" bounds completion, not
-    // initiation). ----
+    // ---- nonblocking (§14.4.5): first-class requests on the wire
+    // path, completed by the progress engine. ----
 
-    /// `MPI_File_iread_at`.
+    /// `MPI_File_iread_at`. The caller must keep `buf` alive and
+    /// untouched until the request completes.
     pub fn iread_at(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<Request> {
-        let n = self.read_at(offset, buf, count, dtype)?;
-        let (req, done) = grequest_start(self.comm.rank_ctx().clone());
-        done.complete(crate::p2p::Status { source: 0, tag: 0, bytes: n * dtype.size(), cancelled: false });
-        Ok(req)
+        let token = self.start_read(offset, count, dtype)?;
+        let ctx = self.comm.rank_ctx().clone();
+        let op = Rc::new(IoOp {
+            ctx: ctx.clone(),
+            token,
+            dest: RefCell::new(Some((RawBufMut::from_slice(buf), dtype.clone()))),
+            barrier: None,
+        });
+        Ok(Request::custom(ctx, op))
     }
 
-    /// `MPI_File_iwrite_at`.
+    /// `MPI_File_iwrite_at`. The payload is packed at post time, so the
+    /// buffer is free as soon as this returns.
     pub fn iwrite_at(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<Request> {
-        let n = self.write_at(offset, buf, count, dtype)?;
-        let (req, done) = grequest_start(self.comm.rank_ctx().clone());
-        done.complete(crate::p2p::Status { source: 0, tag: 0, bytes: n * dtype.size(), cancelled: false });
-        Ok(req)
+        let token = self.start_write(offset, buf, count, dtype)?;
+        let ctx = self.comm.rank_ctx().clone();
+        let op = Rc::new(IoOp { ctx: ctx.clone(), token, dest: RefCell::new(None), barrier: None });
+        Ok(Request::custom(ctx, op))
+    }
+
+    /// `MPI_File_iread` / `MPI_File_iwrite`: individual-pointer
+    /// nonblocking ops. The pointer advances at post time by the
+    /// requested amount (completion may still read short at EOF).
+    pub fn iread(&self, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        let at = self.ptr.get();
+        let r = self.iread_at(at, buf, count, dtype)?;
+        self.advance_ptr(count, dtype);
+        Ok(r)
+    }
+
+    pub fn iwrite(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        let at = self.ptr.get();
+        let r = self.iwrite_at(at, buf, count, dtype)?;
+        self.advance_ptr(count, dtype);
+        Ok(r)
+    }
+
+    /// `MPI_File_iread_at_all` / `iwrite_at_all`: nonblocking collective
+    /// access. Initiation runs the (blocking) exchange-planning
+    /// collectives; the data movement completes in the background —
+    /// overlap computation between post and wait.
+    pub fn iread_at_all(&self, offset: u64, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        self.read_at_all_start(offset, buf, count, dtype)
+    }
+
+    pub fn iwrite_at_all(&self, offset: u64, buf: &[u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        self.write_at_all_start(offset, buf, count, dtype)
+    }
+
+    /// `MPI_File_iread_shared` / `iwrite_shared`: the shared-pointer
+    /// fetch-and-add and the data op chain through the progress engine
+    /// without blocking.
+    pub fn iread_shared(&self, buf: &mut [u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        self.start_shared(None, Some((RawBufMut::from_slice(buf), dtype.clone())), count, dtype)
+    }
+
+    pub fn iwrite_shared(&self, buf: &[u8], count: usize, dtype: &Datatype) -> Result<Request> {
+        if !self.amode.can_write() {
+            return Err(mpi_err!(Amode, "file not opened for writing"));
+        }
+        dtype.require_committed()?;
+        let ctx = self.comm.rank_ctx();
+        let nbytes = dtype.size() * count;
+        let mut wire = ctx.fabric.pool.take(nbytes);
+        pack(dtype.map(), buf, count, &mut wire)?;
+        if !dtype.map().is_contiguous() {
+            ctx.fabric.pool.count_copied(nbytes);
+        }
+        self.start_shared(Some(wire.freeze()), None, count, dtype)
+    }
+
+    fn start_shared(
+        &self,
+        payload: Option<WireBytes>,
+        dest: Option<(RawBufMut, Datatype)>,
+        count: usize,
+        dtype: &Datatype,
+    ) -> Result<Request> {
+        if dest.is_some() {
+            if !self.amode.can_read() {
+                return Err(mpi_err!(Amode, "file not opened for reading"));
+            }
+            dtype.require_committed()?;
+        }
+        let ctx = self.comm.rank_ctx().clone();
+        let view = self.view.borrow();
+        let bump = start_io(
+            &ctx,
+            server_rank(&ctx),
+            IoKind::Meta {
+                path: self.path.clone(),
+                op: OP_SHARED_BUMP,
+                arg: self.shared_etypes(count, dtype),
+            },
+        );
+        let op = Rc::new(SharedIoOp {
+            ctx: ctx.clone(),
+            path: self.path.clone(),
+            disp: view.displacement,
+            map: view.filetype.shared_map(),
+            esz: view.etype.size().max(1) as u64,
+            nbytes: dtype.size() * count,
+            bump: Cell::new(Some(bump)),
+            data: Cell::new(None),
+            payload: RefCell::new(payload),
+            dest: RefCell::new(dest),
+            error: RefCell::new(None),
+            done: Cell::new(false),
+        });
+        ctx.register_progressable(op.clone());
+        Ok(Request::custom(ctx, op))
+    }
+}
+
+/// A single wire IO op as a request: read (with unpack destination) or
+/// write, optionally fused with a nonblocking barrier (the collective
+/// read path).
+struct IoOp {
+    ctx: Rc<RankCtx>,
+    token: u64,
+    /// Read destination: raw capture of the user buffer plus its type.
+    dest: RefCell<Option<(RawBufMut, Datatype)>>,
+    /// The collective contract, when this op backs `*_at_all`.
+    barrier: Option<Request>,
+}
+
+impl CustomRequest for IoOp {
+    fn done(&self) -> bool {
+        io_done(&self.ctx, self.token)
+            && self.barrier.as_ref().map_or(true, |b| b.test_ready_nonconsuming())
+    }
+
+    fn take_status(&self) -> Result<Status> {
+        if let Some(b) = &self.barrier {
+            // Already complete (done() gated on it); consumes without
+            // blocking.
+            b.wait()?;
+        }
+        let (data, value) = take_io_result(&self.ctx, self.token)?;
+        match self.dest.borrow_mut().take() {
+            Some((buf, dtype)) => {
+                let sz = dtype.size().max(1);
+                let whole = data.len() / sz;
+                let out = unsafe { buf.as_slice_mut() };
+                unpack(dtype.map(), &data.as_slice()[..whole * dtype.size()], out, whole)?;
+                Ok(Status { source: 0, tag: 0, bytes: whole * dtype.size(), cancelled: false })
+            }
+            None => Ok(Status { source: 0, tag: 0, bytes: value as usize, cancelled: false }),
+        }
+    }
+}
+
+/// A shared-pointer nonblocking op: stage 1 is the server-side
+/// fetch-and-add, stage 2 the data transfer at the returned offset. The
+/// chaining happens in `advance` (packet injection only — no engine
+/// re-entry), so the whole chain is progress-driven.
+struct SharedIoOp {
+    ctx: Rc<RankCtx>,
+    path: String,
+    disp: u64,
+    map: Arc<TypeMap>,
+    esz: u64,
+    nbytes: usize,
+    bump: Cell<Option<u64>>,
+    data: Cell<Option<u64>>,
+    /// Pre-packed write payload (None for reads).
+    payload: RefCell<Option<WireBytes>>,
+    /// Read destination (None for writes).
+    dest: RefCell<Option<(RawBufMut, Datatype)>>,
+    error: RefCell<Option<MpiError>>,
+    done: Cell<bool>,
+}
+
+impl crate::p2p::Progressable for SharedIoOp {
+    fn advance(&self, ctx: &Rc<RankCtx>) -> Result<bool> {
+        if let Some(b) = self.bump.get() {
+            if !io_done(ctx, b) {
+                return Ok(false);
+            }
+            self.bump.set(None);
+            match take_io_result(ctx, b) {
+                Err(e) => {
+                    *self.error.borrow_mut() = Some(e);
+                    self.done.set(true);
+                    return Ok(true);
+                }
+                Ok((_, old)) => {
+                    let lo = old * self.esz;
+                    let kind = match self.payload.borrow_mut().take() {
+                        Some(data) => IoKind::Write {
+                            path: self.path.clone(),
+                            disp: self.disp,
+                            map: self.map.clone(),
+                            lo,
+                            data,
+                        },
+                        None => IoKind::Read {
+                            path: self.path.clone(),
+                            disp: self.disp,
+                            map: self.map.clone(),
+                            lo,
+                            nbytes: self.nbytes,
+                        },
+                    };
+                    self.data.set(Some(start_io(ctx, server_rank(ctx), kind)));
+                }
+            }
+        }
+        let finished = self.data.get().is_some_and(|t| io_done(ctx, t));
+        if finished {
+            self.done.set(true);
+        }
+        Ok(finished)
+    }
+}
+
+impl CustomRequest for SharedIoOp {
+    fn done(&self) -> bool {
+        self.done.get()
+    }
+
+    fn take_status(&self) -> Result<Status> {
+        if let Some(e) = self.error.borrow_mut().take() {
+            return Err(e);
+        }
+        let token = self.data.get().ok_or_else(|| mpi_err!(Intern, "shared io op has no data token"))?;
+        let (data, value) = take_io_result(&self.ctx, token)?;
+        match self.dest.borrow_mut().take() {
+            Some((buf, dtype)) => {
+                let sz = dtype.size().max(1);
+                let whole = data.len() / sz;
+                let out = unsafe { buf.as_slice_mut() };
+                unpack(dtype.map(), &data.as_slice()[..whole * dtype.size()], out, whole)?;
+                Ok(Status { source: 0, tag: 0, bytes: whole * dtype.size(), cancelled: false })
+            }
+            None => Ok(Status { source: 0, tag: 0, bytes: value as usize, cancelled: false }),
+        }
     }
 }

@@ -1,13 +1,24 @@
 //! The IO component (MPI-4.0 chapter 14, `MPI_File_*`).
 //!
-//! Files live in the fabric's simulated parallel filesystem (shared across
-//! the job's ranks). Views — displacement + etype + filetype — are full
-//! typemap-based mappings from each rank's logical element space to
-//! physical file bytes, so strided/subarray file access behaves exactly
-//! like the standard describes. Collective variants (`*_all`, ordered)
-//! synchronize over the file's own communicator.
+//! Files live on a *file server rank* and every operation is real
+//! transport traffic: clients inject `Io*` packets through the fabric
+//! ([`server`]) and the server rank's engine applies them to the
+//! simulated parallel filesystem — so chaos injection, flow control, the
+//! cost model and the quiescence audit all cover the IO path. In-process
+//! jobs self-serve (the filesystem is shared memory); launched `shm`/
+//! `socket` jobs route through world rank 0. Views — displacement +
+//! etype + filetype — are full typemap-based mappings from each rank's
+//! logical element space to physical file bytes, so strided/subarray
+//! file access behaves exactly like the standard describes.
+//!
+//! Collective writes aggregate through the two-phase exchange
+//! ([`twophase`]); nonblocking variants return first-class
+//! [`Request`](crate::request::Request)s driven by the progress engine.
+//! See `docs/IO.md` for the full lifecycle and knob table.
 
 pub mod file;
+pub mod server;
+pub mod twophase;
 pub mod view;
 
 pub use file::{AccessMode, File};

@@ -1,0 +1,289 @@
+//! The rank-hosted file server: server-side application of `Io*` packets.
+//!
+//! Every MPI-IO operation is real transport traffic — the client injects
+//! an `IoMeta`/`IoWrite`/`IoRead` packet ([`crate::p2p::start_io`]) and
+//! the *server* rank's engine applies it to the simulated filesystem
+//! (`fabric.files`) when its own progress loop processes the packet, then
+//! replies with `IoDone`/`IoData`. Which rank serves depends on the mode:
+//!
+//! * **In-process** jobs: every rank is its own server
+//!   ([`server_rank`] returns the caller's world rank). The packet still
+//!   crosses the full wire path — chaos delay/reorder, the cost model and
+//!   the mailbox all apply — but lands back on the issuing rank's own
+//!   engine, whose `fabric.files` map is shared with every other rank.
+//!   Self-serving keeps the job live: a dedicated server rank would stop
+//!   progressing once its own closure returned.
+//! * **Launched** (`shm`/`socket`) jobs: world rank 0 is the authoritative
+//!   server — its process memory holds the one real filesystem; every
+//!   other process's `files` map stays empty. Blocked clients keep
+//!   processing inbound packets inside `wait_for`, and the launcher's
+//!   final barrier keeps rank 0 alive until every client is done.
+//!
+//! Metadata ops ride one packet kind (`IoMeta`) with a small op code —
+//! the codes below — rather than a kind per op: they are all
+//! header-only request/scalar-reply exchanges with identical flow.
+
+use super::view::View;
+use crate::datatype::Datatype;
+use crate::error::ErrorClass;
+use crate::p2p::RankCtx;
+use crate::transport::{PoolHandle, WireBytes};
+use crate::{mpi_err, Result};
+use crate::datatype::TypeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+// ---- `IoMeta` op codes ----
+
+/// Open: `arg = (handles << 8) | flags` — rank 0 of the opening
+/// communicator opens `handles` handles at once. Replies the
+/// `ErrorClass` code (0 = success).
+pub const OP_OPEN: u8 = 0;
+/// File size query: reply `value` = physical length in bytes.
+pub const OP_SIZE: u8 = 1;
+/// Truncate / zero-extend to `arg` bytes.
+pub const OP_SET_SIZE: u8 = 2;
+/// Grow to at least `arg` bytes (never shrinks).
+pub const OP_PREALLOC: u8 = 3;
+/// Delete: fails `NoSuchFile` / `FileInUse` by code.
+pub const OP_DELETE: u8 = 4;
+/// Shared-pointer fetch-and-add of `arg` etypes; reply `value` = old.
+pub const OP_SHARED_BUMP: u8 = 5;
+/// Shared-pointer store of `arg`.
+pub const OP_SHARED_SET: u8 = 6;
+/// Shared-pointer load; reply `value` = current.
+pub const OP_SHARED_GET: u8 = 7;
+/// Close: `arg = (handles << 8) | delete_on_close` — drops `handles`
+/// open handles; removes the file when delete-on-close and none remain.
+pub const OP_CLOSE: u8 = 8;
+
+// Flag bits in the low byte of `arg` (OP_OPEN / OP_CLOSE).
+pub const FLAG_CREATE: u64 = 1;
+pub const FLAG_EXCL: u64 = 2;
+pub const FLAG_DELETE_ON_CLOSE: u64 = 1;
+
+/// Whether the served-file path is enabled (`FERROMPI_IO_SERVER`,
+/// default on). With it off, `File::open` on a multi-process backend
+/// refuses cleanly instead of routing through rank 0.
+pub fn server_enabled() -> bool {
+    std::env::var("FERROMPI_IO_SERVER").map_or(true, |v| v != "0")
+}
+
+/// The world rank that serves IO packets for this job (see module docs).
+pub fn server_rank(ctx: &RankCtx) -> usize {
+    if ctx.fabric.is_multiprocess() {
+        0
+    } else {
+        ctx.world_rank
+    }
+}
+
+/// Reconstruct the client's file view from the wire fields of an
+/// `IoWrite`/`IoRead` packet. The etype is always byte on the wire: a
+/// view's logical space is byte-addressed once offsets are scaled at the
+/// client, so only (displacement, filetype) need to cross.
+fn wire_view(disp: u64, map: &Arc<TypeMap>) -> View {
+    View {
+        displacement: disp,
+        etype: Datatype::primitive(crate::datatype::Primitive::Byte),
+        filetype: Datatype::from_shared(Arc::clone(map)),
+    }
+}
+
+/// Apply one metadata op. Returns `(value, code)` for the `IoDone` reply;
+/// a nonzero code is the `ErrorClass` the client surfaces.
+pub(crate) fn serve_meta(ctx: &RankCtx, path: &str, op: u8, arg: u64) -> (u64, i32) {
+    let files = &ctx.fabric.files;
+    match op {
+        OP_OPEN => {
+            let handles = (arg >> 8) as u32;
+            let mut files = files.lock().unwrap();
+            let exists = files.contains_key(path);
+            if exists && arg & FLAG_EXCL != 0 {
+                return (0, ErrorClass::FileExists.code());
+            }
+            if !exists && arg & FLAG_CREATE == 0 {
+                return (0, ErrorClass::NoSuchFile.code());
+            }
+            let node = files.entry(path.to_string()).or_default();
+            node.open_count.fetch_add(handles, Ordering::SeqCst);
+            (0, 0)
+        }
+        OP_CLOSE => {
+            let handles = (arg >> 8) as u32;
+            let mut files = files.lock().unwrap();
+            let Some(node) = files.get(path) else {
+                return (0, ErrorClass::NoSuchFile.code());
+            };
+            let remaining = node.open_count.fetch_sub(handles, Ordering::SeqCst) - handles;
+            if arg & FLAG_DELETE_ON_CLOSE != 0 && remaining == 0 {
+                files.remove(path);
+            }
+            (remaining as u64, 0)
+        }
+        OP_DELETE => {
+            let mut files = files.lock().unwrap();
+            match files.get(path) {
+                None => (0, ErrorClass::NoSuchFile.code()),
+                Some(node) if node.open_count.load(Ordering::SeqCst) > 0 => {
+                    (0, ErrorClass::FileInUse.code())
+                }
+                Some(_) => {
+                    files.remove(path);
+                    (0, 0)
+                }
+            }
+        }
+        _ => {
+            let node = {
+                let files = files.lock().unwrap();
+                match files.get(path) {
+                    Some(n) => Arc::clone(n),
+                    None => return (0, ErrorClass::NoSuchFile.code()),
+                }
+            };
+            match op {
+                OP_SIZE => (node.data.lock().unwrap().len() as u64, 0),
+                OP_SET_SIZE => {
+                    node.data.lock().unwrap().resize(arg as usize, 0);
+                    (arg, 0)
+                }
+                OP_PREALLOC => {
+                    let mut d = node.data.lock().unwrap();
+                    if d.len() < arg as usize {
+                        d.resize(arg as usize, 0);
+                    }
+                    (d.len() as u64, 0)
+                }
+                OP_SHARED_BUMP => {
+                    let mut p = node.shared_ptr.lock().unwrap();
+                    let old = *p;
+                    *p += arg;
+                    (old, 0)
+                }
+                OP_SHARED_SET => {
+                    *node.shared_ptr.lock().unwrap() = arg;
+                    (arg, 0)
+                }
+                OP_SHARED_GET => (*node.shared_ptr.lock().unwrap(), 0),
+                other => (0, {
+                    debug_assert!(false, "unknown io meta op {other}");
+                    ErrorClass::UnsupportedOperation.code()
+                }),
+            }
+        }
+    }
+}
+
+/// Scatter an `IoWrite` payload through the view. Returns
+/// `(bytes_written, code)`. The scatter writes straight from the shared
+/// wire buffer into the file store (DMA-modeled, like `RmaPut`), so it is
+/// not charged to `wire_bytes_copied`.
+pub(crate) fn serve_write(
+    ctx: &RankCtx,
+    path: &str,
+    disp: u64,
+    map: &Arc<TypeMap>,
+    lo: u64,
+    data: &WireBytes,
+) -> (u64, i32) {
+    let node = {
+        let files = ctx.fabric.files.lock().unwrap();
+        match files.get(path) {
+            Some(n) => Arc::clone(n),
+            None => return (0, ErrorClass::NoSuchFile.code()),
+        }
+    };
+    let view = wire_view(disp, map);
+    let mut file = node.data.lock().unwrap();
+    view.write(&mut file, lo, data);
+    (data.len() as u64, 0)
+}
+
+/// Gather `nbytes` through the view into a pooled wire buffer (short at
+/// EOF). The gather is the NIC-read half of the exchange (DMA-modeled,
+/// uncharged), mirroring RMA get.
+pub(crate) fn serve_read(
+    ctx: &RankCtx,
+    path: &str,
+    disp: u64,
+    map: &Arc<TypeMap>,
+    lo: u64,
+    nbytes: usize,
+) -> Result<WireBytes> {
+    let node = {
+        let files = ctx.fabric.files.lock().unwrap();
+        match files.get(path) {
+            Some(n) => Arc::clone(n),
+            None => return Err(mpi_err!(NoSuchFile, "read '{path}'")),
+        }
+    };
+    let view = wire_view(disp, map);
+    let mut out = vec![0u8; nbytes];
+    let got = {
+        let file = node.data.lock().unwrap();
+        view.read(&file, lo, &mut out)
+    };
+    let mut wire = ctx.fabric.pool.take(got);
+    wire.extend_from_slice(&out[..got]);
+    Ok(wire.freeze())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{Fabric, NetworkModel, NodeMap};
+    use std::rc::Rc;
+
+    fn ctx() -> Rc<RankCtx> {
+        let fabric = Arc::new(Fabric::new(NodeMap::new(1, 2), NetworkModel::zero()));
+        RankCtx::new(0, fabric)
+    }
+
+    #[test]
+    fn open_close_lifecycle_and_codes() {
+        let c = ctx();
+        // Open without create: NoSuchFile.
+        let (_, code) = serve_meta(&c, "/f", OP_OPEN, 2 << 8);
+        assert_eq!(code, ErrorClass::NoSuchFile.code());
+        // Create two handles.
+        let (_, code) = serve_meta(&c, "/f", OP_OPEN, (2 << 8) | FLAG_CREATE);
+        assert_eq!(code, 0);
+        // Excl on an existing file refuses.
+        let (_, code) = serve_meta(&c, "/f", OP_OPEN, (1 << 8) | FLAG_CREATE | FLAG_EXCL);
+        assert_eq!(code, ErrorClass::FileExists.code());
+        // Delete while open: FileInUse.
+        let (_, code) = serve_meta(&c, "/f", OP_DELETE, 0);
+        assert_eq!(code, ErrorClass::FileInUse.code());
+        // Close both handles with delete-on-close: the file goes away.
+        let (remaining, code) = serve_meta(&c, "/f", OP_CLOSE, (2 << 8) | FLAG_DELETE_ON_CLOSE);
+        assert_eq!((remaining, code), (0, 0));
+        assert!(c.fabric.files.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn size_shared_ptr_and_write_read_roundtrip() {
+        let c = ctx();
+        serve_meta(&c, "/f", OP_OPEN, (1 << 8) | FLAG_CREATE);
+        let byte = Arc::new(TypeMap::primitive(crate::datatype::Primitive::Byte));
+        let data = WireBytes::from_vec(vec![7u8; 16]);
+        let (n, code) = serve_write(&c, "/f", 4, &byte, 0, &data);
+        assert_eq!((n, code), (16, 0));
+        assert_eq!(serve_meta(&c, "/f", OP_SIZE, 0), (20, 0));
+        let got = serve_read(&c, "/f", 4, &byte, 0, 16).unwrap();
+        assert_eq!(got.as_slice(), &[7u8; 16]);
+        // Short read at EOF.
+        let got = serve_read(&c, "/f", 0, &byte, 0, 64).unwrap();
+        assert_eq!(got.len(), 20);
+        // Shared pointer fetch-add.
+        assert_eq!(serve_meta(&c, "/f", OP_SHARED_BUMP, 8), (0, 0));
+        assert_eq!(serve_meta(&c, "/f", OP_SHARED_BUMP, 4), (8, 0));
+        assert_eq!(serve_meta(&c, "/f", OP_SHARED_GET, 0), (12, 0));
+        serve_meta(&c, "/f", OP_SHARED_SET, 0);
+        assert_eq!(serve_meta(&c, "/f", OP_SHARED_GET, 0), (0, 0));
+        // Ops against a missing path answer NoSuchFile, never panic.
+        assert_eq!(serve_meta(&c, "/nope", OP_SIZE, 0).1, ErrorClass::NoSuchFile.code());
+        assert_eq!(serve_write(&c, "/nope", 0, &byte, 0, &data).1, ErrorClass::NoSuchFile.code());
+        assert!(serve_read(&c, "/nope", 0, &byte, 0, 4).is_err());
+    }
+}

@@ -1,0 +1,642 @@
+//! Two-phase collective write buffering (§14.4.5's "collective buffering"
+//! optimization, the heart of every production ROMIO-style MPI-IO stack).
+//!
+//! A collective write over strided per-rank views produces, naively, a
+//! storm of small non-contiguous file ops. Two-phase IO rearranges the
+//! same bytes in two steps:
+//!
+//! 1. **Exchange** — the file span under write is cut into fixed-width
+//!    *stripes*, each owned by one *aggregator* rank (selection keyed on
+//!    the communicator topology via
+//!    [`decide_io_aggregators`](crate::collective::tuned::decide_io_aggregators):
+//!    roughly one per node). Every rank splits its physical runs at
+//!    stripe boundaries and ships each fragment to the owning aggregator
+//!    as one framed message (`[n_runs][(off,len)…][payload]`) over the
+//!    ordinary p2p path — pooled wire buffers, credits, chaos and the
+//!    cost model all apply. A rank's fragments for a stripe it owns
+//!    itself stay local.
+//! 2. **Write** — each aggregator merges the fragments it collected
+//!    (sorted by `(offset, source rank)`, so overlaps resolve
+//!    deterministically with the higher rank winning), coalesces adjacent
+//!    runs into contiguous segments, stages each segment through a pooled
+//!    exchange buffer, and injects one `IoWrite` per segment toward the
+//!    file server ([`server_rank`](super::server::server_rank)). When its
+//!    segments are acknowledged it broadcasts a zero-byte *done-note*;
+//!    the collective completes on a rank only once every aggregator's
+//!    note has arrived, so no rank can observe a torn write after its own
+//!    `write_at_all` returns.
+//!
+//! Copy accounting: payload bytes staged through the exchange — the
+//! scatter into per-aggregator messages at the source and the gather into
+//! contiguous segments at the aggregator — are *genuine* CPU copies and
+//! are charged to both `wire_bytes_copied` and the `io_aggregated_bytes`
+//! pvar. Nothing else on the collective-IO path charges, so with
+//! contiguous user buffers the two counters stay equal (and both stay
+//! zero with two-phase disabled) — pinned by `tests/test_io.rs`.
+//!
+//! The op is a [`Progressable`] driven by the ordinary engine loop and a
+//! [`CustomRequest`], so the same object backs blocking `write_at_all`,
+//! split `write_at_all_begin/_end`, and nonblocking `iwrite_at_all`.
+//! `begin` runs on the user thread and may block in collectives (span
+//! reduction, per-aggregator size allgather); `advance` never blocks and
+//! never re-enters the engine — it only polls completion tokens.
+
+use super::server::server_rank;
+use super::view::View;
+use crate::collective;
+use crate::collective::tuned::{comm_topo, decide_io_aggregators};
+use crate::comm::Comm;
+use crate::datatype::{pack, Datatype, Primitive, TypeMap};
+use crate::error::MpiError;
+use crate::group::Group;
+use crate::op::Op;
+use crate::p2p::engine::start_send;
+use crate::p2p::{
+    engine, post_recv, IoKind, Progressable, RankCtx, RawBufMut, RndvStaging, SendMode, SendParams,
+    Status,
+};
+use crate::request::CustomRequest;
+use crate::Result;
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// `FERROMPI_IO_STRIPE`: exchange stripe width in bytes (default 64 KiB).
+pub fn stripe_bytes() -> usize {
+    std::env::var("FERROMPI_IO_STRIPE")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&s| s > 0)
+        .unwrap_or(64 * 1024)
+}
+
+/// `FERROMPI_IO_TWOPHASE`: whether collective writes aggregate (default
+/// on). [`File::set_twophase`](super::File::set_twophase) overrides it
+/// per handle.
+pub fn twophase_default() -> bool {
+    std::env::var("FERROMPI_IO_TWOPHASE").map_or(true, |v| v != "0")
+}
+
+// ---------------- pure exchange planning ----------------
+
+/// One stripe-bounded piece of a rank's write, in logical payload order.
+/// `pos` is the byte position of this fragment's data in the rank's
+/// packed payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Frag {
+    off: u64,
+    len: usize,
+    pos: usize,
+}
+
+/// Split physical runs at stripe boundaries and bin them by owning
+/// aggregator (`stripe_index % n_aggregators`). Runs arrive in logical
+/// payload order; each bin preserves that order, so a bin's payload is
+/// the in-order concatenation of its fragments' bytes.
+fn bin_runs(runs: &[(u64, usize)], stripe: usize, naggs: usize) -> Vec<Vec<Frag>> {
+    let mut bins = vec![Vec::new(); naggs];
+    let mut pos = 0usize;
+    for &(mut off, mut len) in runs {
+        while len > 0 {
+            let s = off / stripe as u64;
+            let take = len.min(((s + 1) * stripe as u64 - off) as usize);
+            bins[(s % naggs as u64) as usize].push(Frag { off, len: take, pos });
+            off += take as u64;
+            pos += take;
+            len -= take;
+        }
+    }
+    bins
+}
+
+/// Frame one aggregator-bound message:
+/// `[u32 n_runs][(u64 off, u64 len) × n][payload bytes in run order]`.
+fn encode_msg(frags: &[Frag], payload: &[u8]) -> Vec<u8> {
+    let data: usize = frags.iter().map(|f| f.len).sum();
+    let mut msg = Vec::with_capacity(4 + 16 * frags.len() + data);
+    msg.extend_from_slice(&(frags.len() as u32).to_le_bytes());
+    for f in frags {
+        msg.extend_from_slice(&f.off.to_le_bytes());
+        msg.extend_from_slice(&(f.len as u64).to_le_bytes());
+    }
+    for f in frags {
+        msg.extend_from_slice(&payload[f.pos..f.pos + f.len]);
+    }
+    msg
+}
+
+/// Parse a framed exchange message back into `(runs, payload offset)`.
+/// `None` on a malformed frame (truncated header, or a payload shorter
+/// than the runs claim).
+fn parse_msg(msg: &[u8]) -> Option<(Vec<(u64, usize)>, usize)> {
+    let n = u32::from_le_bytes(msg.get(..4)?.try_into().ok()?) as usize;
+    let body = 4 + 16 * n;
+    let mut runs = Vec::with_capacity(n);
+    let mut total = 0usize;
+    for i in 0..n {
+        let at = 4 + 16 * i;
+        let off = u64::from_le_bytes(msg.get(at..at + 8)?.try_into().ok()?);
+        let len = u64::from_le_bytes(msg.get(at + 8..at + 16)?.try_into().ok()?) as usize;
+        runs.push((off, len));
+        total += len;
+    }
+    if msg.len() < body + total {
+        return None;
+    }
+    Some((runs, body))
+}
+
+/// A fragment an aggregator collected: where it lands in the file and
+/// where its bytes live (`msg` indexes the collected-message list,
+/// `pos` the payload position inside that message).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Collected {
+    off: u64,
+    len: usize,
+    src: usize,
+    msg: usize,
+    pos: usize,
+}
+
+/// One contiguous staged write: `[start, end)` covered by `frags` in
+/// deterministic overwrite order.
+struct Segment {
+    start: u64,
+    end: u64,
+    frags: Vec<Collected>,
+}
+
+/// Merge collected fragments into contiguous segments. Sorting by
+/// `(off, src)` makes overlap resolution deterministic (a later copy in
+/// segment order overwrites an earlier one, so the highest contributing
+/// rank wins byte-wise) — the chaos differential depends on this.
+fn plan_segments(mut frags: Vec<Collected>) -> Vec<Segment> {
+    frags.sort_by_key(|f| (f.off, f.src));
+    let mut segs: Vec<Segment> = Vec::new();
+    for f in frags {
+        match segs.last_mut() {
+            Some(s) if f.off <= s.end => {
+                s.end = s.end.max(f.off + f.len as u64);
+                s.frags.push(f);
+            }
+            _ => segs.push(Segment { start: f.off, end: f.off + f.len as u64, frags: vec![f] }),
+        }
+    }
+    segs
+}
+
+// ---------------- the collective-write op ----------------
+
+/// Aggregator-side state: inbound exchange messages and the staged
+/// writes they turn into.
+struct AggState {
+    /// `(source group rank, recv token)` for each expected message.
+    recv_tokens: RefCell<Vec<(usize, u64)>>,
+    /// `(source group rank, message bytes)` — exact-size buffers the
+    /// recvs above land in, plus this rank's own (local) message. The
+    /// inner vectors are never resized after posting: the engine holds
+    /// raw pointers into their heap storage.
+    bufs: Vec<(usize, Vec<u8>)>,
+    /// Exchange messages merged and `IoWrite`s injected.
+    assembled: Cell<bool>,
+    io_tokens: RefCell<Vec<u64>>,
+}
+
+/// A two-phase collective write in flight (see the module docs). Created
+/// by [`CollectiveWrite::begin`] on the user thread; completed by the
+/// progress engine. Backs blocking, split and nonblocking collective
+/// writes alike via [`Request::custom`](crate::request::Request::custom).
+pub struct CollectiveWrite {
+    group: Group,
+    ctx_id: u32,
+    path: String,
+    tag_note: i32,
+    /// World ranks of every aggregator, in slot order.
+    agg_worlds: Vec<usize>,
+    /// Set when this rank owns an aggregator slot.
+    agg: Option<AggState>,
+    byte_map: Arc<TypeMap>,
+    data_sends: RefCell<Vec<u64>>,
+    note_sends: RefCell<Vec<u64>>,
+    note_recvs: RefCell<Vec<u64>>,
+    notes_sent: Cell<bool>,
+    error: RefCell<Option<MpiError>>,
+    done: Cell<bool>,
+    /// User payload bytes this rank contributed (for the final status).
+    bytes: usize,
+}
+
+impl CollectiveWrite {
+    /// Run the exchange-planning collectives and post all communication.
+    /// Collective over `comm`. `tag_base` must be distinct per
+    /// outstanding op on the file's private communicator (the caller's
+    /// `op_seq` provides it); this op uses `tag_base` for exchange data
+    /// and `tag_base + 1` for done-notes. The returned op is already
+    /// registered with the progress engine — wrap it in a
+    /// [`Request`](crate::request::Request) to wait on it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn begin(
+        comm: &Comm,
+        path: &str,
+        view: &View,
+        offset: u64,
+        buf: &[u8],
+        count: usize,
+        dtype: &Datatype,
+        tag_base: i32,
+    ) -> Result<Rc<CollectiveWrite>> {
+        dtype.require_committed()?;
+        let ctx = comm.rank_ctx();
+        let p = comm.size();
+        let me = comm.rank();
+        let nbytes = dtype.size() * count;
+        let tag_data = tag_base;
+        let tag_note = tag_base + 1;
+        let byte = Datatype::primitive(Primitive::Byte);
+
+        // Pack the user payload once. The pack engine's contiguous fast
+        // path is an uncharged single memcpy (DMA-modeled, as on the send
+        // path); non-contiguous layouts charge like any other pack.
+        let mut payload = Vec::with_capacity(nbytes);
+        pack(dtype.map(), buf, count, &mut payload)?;
+        if !dtype.map().is_contiguous() {
+            ctx.fabric.pool.count_copied(nbytes);
+        }
+        let lo = offset * view.etype.size() as u64;
+        let runs = view.runs(lo, nbytes);
+
+        // Agree on the file span under write (min/max over all ranks).
+        let u64t = Datatype::primitive(Primitive::U64);
+        let my_lo = runs.first().map_or(u64::MAX, |r| r.0);
+        let my_hi = runs.iter().map(|r| r.0 + r.1 as u64).max().unwrap_or(0);
+        let mut span_lo = [0u8; 8];
+        let mut span_hi = [0u8; 8];
+        collective::allreduce(comm, Some(&my_lo.to_le_bytes()), &mut span_lo, 1, &u64t, &Op::MIN)?;
+        collective::allreduce(comm, Some(&my_hi.to_le_bytes()), &mut span_hi, 1, &u64t, &Op::MAX)?;
+        let (span_lo, span_hi) = (u64::from_le_bytes(span_lo), u64::from_le_bytes(span_hi));
+
+        if span_hi <= span_lo {
+            // No rank wrote anything — the span reductions were the
+            // synchronization; there is nothing to exchange.
+            return Ok(Rc::new(CollectiveWrite {
+                group: comm.group().clone(),
+                ctx_id: comm.ctx_p2p(),
+                path: path.to_string(),
+                tag_note,
+                agg_worlds: Vec::new(),
+                agg: None,
+                byte_map: Arc::new(TypeMap::primitive(Primitive::Byte)),
+                data_sends: RefCell::new(Vec::new()),
+                note_sends: RefCell::new(Vec::new()),
+                note_recvs: RefCell::new(Vec::new()),
+                notes_sent: Cell::new(true),
+                error: RefCell::new(None),
+                done: Cell::new(true),
+                bytes: nbytes,
+            }));
+        }
+
+        // Plan the exchange: aggregator count from the tuned table,
+        // aggregator ranks spread evenly over the communicator (which
+        // spreads them over nodes under block rank placement).
+        let stripe = stripe_bytes();
+        let naggs = decide_io_aggregators(comm_topo(comm), stripe, (span_hi - span_lo) as usize);
+        let agg_ranks: Vec<usize> = (0..naggs).map(|k| k * p / naggs).collect();
+        let my_slot = agg_ranks.iter().position(|&r| r == me);
+
+        // Bin my runs by owning aggregator and frame the messages. The
+        // payload scatter into the frames is the client half of the
+        // exchange staging — charged (see the module docs).
+        let bins = bin_runs(&runs, stripe, naggs);
+        let mut msgs: Vec<Option<Vec<u8>>> = Vec::with_capacity(naggs);
+        let mut sizes = vec![0u8; naggs * 8];
+        for (k, frags) in bins.iter().enumerate() {
+            if frags.is_empty() {
+                msgs.push(None);
+                continue;
+            }
+            let staged: usize = frags.iter().map(|f| f.len).sum();
+            ctx.fabric.pool.count_copied(staged);
+            ctx.fabric.stats.io_aggregated_bytes.fetch_add(staged as u64, Ordering::Relaxed);
+            let m = encode_msg(frags, &payload);
+            sizes[k * 8..k * 8 + 8].copy_from_slice(&(m.len() as u64).to_le_bytes());
+            msgs.push(Some(m));
+        }
+
+        // Everyone learns every (source, aggregator) message size, so
+        // aggregators can post exact-size receives up front.
+        let mut all_sizes = vec![0u8; p * naggs * 8];
+        collective::allgather(comm, Some(&sizes), naggs, &u64t, &mut all_sizes, naggs, &u64t)?;
+        let size_of = |src: usize, k: usize| {
+            let at = (src * naggs + k) * 8;
+            u64::from_le_bytes(all_sizes[at..at + 8].try_into().unwrap()) as usize
+        };
+
+        let group = comm.group().clone();
+        let ctx_id = comm.ctx_p2p();
+
+        // Aggregator slot: post one exact-size receive per contributing
+        // peer. The inner `Vec`s' heap storage is stable across the later
+        // move into the op, which is what makes the raw-pointer capture
+        // in `post_recv` sound.
+        let agg = match my_slot {
+            None => None,
+            Some(slot) => {
+                let mut bufs: Vec<(usize, Vec<u8>)> = Vec::new();
+                let mut recv_tokens = Vec::new();
+                for src in 0..p {
+                    if src == me || size_of(src, slot) == 0 {
+                        continue;
+                    }
+                    bufs.push((src, vec![0u8; size_of(src, slot)]));
+                }
+                for (src, b) in bufs.iter_mut() {
+                    let n = b.len();
+                    let token = post_recv(
+                        ctx,
+                        ctx_id,
+                        Some(group.world_rank(*src)?),
+                        Some(tag_data),
+                        RawBufMut::from_slice(b),
+                        n,
+                        byte.clone(),
+                        group.clone(),
+                    )?;
+                    recv_tokens.push((*src, token));
+                }
+                if let Some(own) = msgs[slot].take() {
+                    bufs.push((me, own));
+                }
+                Some(AggState {
+                    recv_tokens: RefCell::new(recv_tokens),
+                    bufs,
+                    assembled: Cell::new(false),
+                    io_tokens: RefCell::new(Vec::new()),
+                })
+            }
+        };
+
+        // Every rank waits for a done-note from every aggregator it is
+        // not itself — that barrier-with-meaning is what makes the
+        // collective's return imply "bytes are on the server".
+        let mut note_recvs = Vec::new();
+        for &ar in &agg_ranks {
+            if ar == me {
+                continue;
+            }
+            let token = post_recv(
+                ctx,
+                ctx_id,
+                Some(group.world_rank(ar)?),
+                Some(tag_note),
+                RawBufMut::from_slice(&mut []),
+                0,
+                byte.clone(),
+                group.clone(),
+            )?;
+            note_recvs.push(token);
+        }
+
+        // Ship my fragments to their aggregators.
+        let mut data_sends = Vec::new();
+        for (k, m) in msgs.iter().enumerate() {
+            let Some(m) = m else { continue };
+            if let Some(token) = start_send(
+                ctx,
+                SendParams {
+                    ctx_id,
+                    dst_world: group.world_rank(agg_ranks[k])?,
+                    tag: tag_data,
+                    buf: m,
+                    count: m.len(),
+                    dtype: &byte,
+                    mode: SendMode::Standard,
+                    staging: RndvStaging::Staged,
+                },
+            )? {
+                data_sends.push(token);
+            }
+        }
+
+        let mut agg_worlds = Vec::with_capacity(naggs);
+        for &ar in &agg_ranks {
+            agg_worlds.push(group.world_rank(ar)?);
+        }
+        let op = Rc::new(CollectiveWrite {
+            group,
+            ctx_id,
+            path: path.to_string(),
+            tag_note,
+            agg_worlds,
+            agg,
+            byte_map: Arc::new(TypeMap::primitive(Primitive::Byte)),
+            data_sends: RefCell::new(data_sends),
+            note_sends: RefCell::new(Vec::new()),
+            note_recvs: RefCell::new(note_recvs),
+            notes_sent: Cell::new(false),
+            error: RefCell::new(None),
+            done: Cell::new(false),
+            bytes: nbytes,
+        });
+        ctx.register_progressable(op.clone());
+        Ok(op)
+    }
+
+    fn record(&self, e: MpiError) {
+        self.error.borrow_mut().get_or_insert(e);
+    }
+
+    /// Merge the collected exchange messages, stage each contiguous
+    /// segment through a pooled buffer (the charged aggregator half of
+    /// the exchange) and inject one `IoWrite` per segment.
+    fn assemble_and_write(&self, ctx: &Rc<RankCtx>, agg: &AggState) {
+        let mut frags = Vec::new();
+        let mut payload_at = vec![0usize; agg.bufs.len()];
+        for (i, (src, msg)) in agg.bufs.iter().enumerate() {
+            match parse_msg(msg) {
+                Some((runs, body)) => {
+                    payload_at[i] = body;
+                    let mut pos = body;
+                    for (off, len) in runs {
+                        frags.push(Collected { off, len, src: *src, msg: i, pos });
+                        pos += len;
+                    }
+                }
+                None => self.record(crate::mpi_err!(
+                    Io,
+                    "malformed two-phase exchange message from rank {src}"
+                )),
+            }
+        }
+        let server = server_rank(ctx);
+        for seg in plan_segments(frags) {
+            let len = (seg.end - seg.start) as usize;
+            let mut staged = ctx.fabric.pool.take(len);
+            staged.resize(len, 0);
+            for f in &seg.frags {
+                let at = (f.off - seg.start) as usize;
+                staged[at..at + f.len].copy_from_slice(&agg.bufs[f.msg].1[f.pos..f.pos + f.len]);
+            }
+            ctx.fabric.pool.count_copied(len);
+            ctx.fabric.stats.io_aggregated_bytes.fetch_add(len as u64, Ordering::Relaxed);
+            let token = engine::start_io(
+                ctx,
+                server,
+                IoKind::Write {
+                    path: self.path.clone(),
+                    disp: 0,
+                    map: self.byte_map.clone(),
+                    lo: seg.start,
+                    data: staged.freeze(),
+                },
+            );
+            agg.io_tokens.borrow_mut().push(token);
+        }
+    }
+}
+
+impl Progressable for CollectiveWrite {
+    /// One non-blocking turn. Never returns `Err`: failures are recorded
+    /// on the op (surfaced by `take_status`) while the machinery drains,
+    /// so one rank's IO error cannot wedge its peers mid-exchange.
+    fn advance(&self, ctx: &Rc<RankCtx>) -> Result<bool> {
+        self.data_sends.borrow_mut().retain(|&t| !engine::take_send_done(ctx, t));
+        self.note_sends.borrow_mut().retain(|&t| !engine::take_send_done(ctx, t));
+        self.note_recvs.borrow_mut().retain(|&t| match engine::take_recv_result(ctx, t) {
+            None => true,
+            Some(Ok(_)) => false,
+            Some(Err(e)) => {
+                self.record(e);
+                false
+            }
+        });
+
+        if let Some(agg) = &self.agg {
+            if !agg.assembled.get()
+                && agg.recv_tokens.borrow().iter().all(|&(_, t)| engine::recv_done(ctx, t))
+            {
+                for (_, t) in agg.recv_tokens.borrow_mut().drain(..) {
+                    if let Some(Err(e)) = engine::take_recv_result(ctx, t) {
+                        self.record(e);
+                    }
+                }
+                self.assemble_and_write(ctx, agg);
+                agg.assembled.set(true);
+            }
+            if agg.assembled.get()
+                && !self.notes_sent.get()
+                && agg.io_tokens.borrow().iter().all(|&t| engine::io_done(ctx, t))
+            {
+                for t in agg.io_tokens.borrow_mut().drain(..) {
+                    if let Err(e) = engine::take_io_result(ctx, t) {
+                        self.record(e);
+                    }
+                }
+                // The stripes are on the server — tell everyone.
+                let byte = Datatype::primitive(Primitive::Byte);
+                for &w in self.group.members() {
+                    if w == ctx.world_rank {
+                        continue;
+                    }
+                    match start_send(
+                        ctx,
+                        SendParams {
+                            ctx_id: self.ctx_id,
+                            dst_world: w,
+                            tag: self.tag_note,
+                            buf: &[],
+                            count: 0,
+                            dtype: &byte,
+                            mode: SendMode::Standard,
+                            staging: RndvStaging::Staged,
+                        },
+                    ) {
+                        Ok(Some(t)) => self.note_sends.borrow_mut().push(t),
+                        Ok(None) => {}
+                        Err(e) => self.record(e),
+                    }
+                }
+                self.notes_sent.set(true);
+            }
+        }
+
+        let finished = self.agg.as_ref().map_or(true, |_| self.notes_sent.get())
+            && self.data_sends.borrow().is_empty()
+            && self.note_sends.borrow().is_empty()
+            && self.note_recvs.borrow().is_empty();
+        if finished {
+            self.done.set(true);
+        }
+        Ok(finished)
+    }
+}
+
+impl CustomRequest for CollectiveWrite {
+    fn done(&self) -> bool {
+        self.done.get()
+    }
+
+    fn take_status(&self) -> Result<Status> {
+        match self.error.borrow_mut().take() {
+            Some(e) => Err(e),
+            None => Ok(Status { source: 0, tag: 0, bytes: self.bytes, cancelled: false }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binning_splits_at_stripe_boundaries_in_payload_order() {
+        // Two runs; stripe 8; 2 aggregators. Run 1 spans stripes 0|1,
+        // run 2 sits in stripe 3 (owner 3 % 2 = 1).
+        let bins = bin_runs(&[(4, 10), (26, 3)], 8, 2);
+        assert_eq!(bins[0], vec![Frag { off: 4, len: 4, pos: 0 }]);
+        assert_eq!(
+            bins[1],
+            vec![Frag { off: 8, len: 6, pos: 4 }, Frag { off: 26, len: 3, pos: 10 }]
+        );
+        // Payload positions tile the payload exactly.
+        let total: usize = bins.iter().flatten().map(|f| f.len).sum();
+        assert_eq!(total, 13);
+    }
+
+    #[test]
+    fn message_frame_roundtrips() {
+        let payload: Vec<u8> = (0..20u8).collect();
+        let frags = [Frag { off: 100, len: 12, pos: 0 }, Frag { off: 300, len: 8, pos: 12 }];
+        let msg = encode_msg(&frags, &payload);
+        let (runs, body) = parse_msg(&msg).unwrap();
+        assert_eq!(runs, vec![(100, 12), (300, 8)]);
+        assert_eq!(&msg[body..], &payload[..]);
+        // Truncation in the header or payload is rejected, not a panic.
+        assert!(parse_msg(&msg[..3]).is_none());
+        assert!(parse_msg(&msg[..msg.len() - 1]).is_none());
+        // The degenerate empty frame roundtrips too.
+        let empty = encode_msg(&[], &[]);
+        assert_eq!(parse_msg(&empty), Some((vec![], 4)));
+    }
+
+    #[test]
+    fn segment_planning_coalesces_and_orders_overlaps() {
+        let f = |off, len, src| Collected { off, len, src, msg: 0, pos: 0 };
+        // Adjacent + overlapping fragments from two ranks, out of order.
+        let segs = plan_segments(vec![f(8, 4, 1), f(0, 8, 0), f(6, 4, 0), f(32, 8, 1)]);
+        assert_eq!(segs.len(), 2);
+        assert_eq!((segs[0].start, segs[0].end), (0, 12));
+        assert_eq!((segs[1].start, segs[1].end), (32, 40));
+        // Overwrite order inside a segment: (off, src) ascending, so the
+        // rank-1 fragment at offset 8 lands after rank 0's at 6.
+        let order: Vec<(u64, usize)> = segs[0].frags.iter().map(|f| (f.off, f.src)).collect();
+        assert_eq!(order, vec![(0, 0), (6, 0), (8, 1)]);
+    }
+
+    #[test]
+    fn knob_defaults() {
+        assert_eq!(stripe_bytes(), 64 * 1024);
+        assert!(twophase_default());
+    }
+}

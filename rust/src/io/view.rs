@@ -100,6 +100,28 @@ impl View {
         }
     }
 
+    /// The physical `(offset, length)` runs that `len` logical bytes
+    /// starting at logical offset `lo` map to, in logical order with
+    /// physically-adjacent runs merged. This is the write-side plan the
+    /// two-phase exchange splits at stripe boundaries — the payload for
+    /// run *i* is the next `runs[i].1` bytes of the packed data.
+    pub fn runs(&self, lo: u64, len: usize) -> Vec<(u64, usize)> {
+        let mut out: Vec<(u64, usize)> = Vec::new();
+        let mut done = 0;
+        while done < len {
+            let l = lo + done as u64;
+            let phys = self.physical(l);
+            let within = (l % self.tile_bytes() as u64) as usize;
+            let run = self.entry_run(within).min(len - done);
+            match out.last_mut() {
+                Some((p, n)) if *p + *n as u64 == phys => *n += run,
+                _ => out.push((phys, run)),
+            }
+            done += run;
+        }
+        out
+    }
+
     /// Remaining bytes of the typemap entry containing logical-in-tile
     /// offset `within`.
     fn entry_run(&self, mut within: usize) -> usize {
@@ -162,6 +184,22 @@ mod tests {
         // Read past EOF is short.
         let mut out = [0u8; 8];
         assert_eq!(v.read(&file, 0, &mut out), 4);
+    }
+
+    #[test]
+    fn runs_merge_contiguous_and_split_strided() {
+        // Identity view: one merged run regardless of tile walking.
+        let v = View::default();
+        assert_eq!(v.runs(5, 12), vec![(5, 12)]);
+        assert_eq!(v.runs(0, 0), Vec::<(u64, usize)>::new());
+        // Strided view (4 of every 8 bytes, displacement 2): runs split
+        // at tile gaps.
+        let byte = Datatype::primitive(Primitive::Byte);
+        let ft = TypeMap::vector(1, 4, 8, &TypeMap::primitive(Primitive::Byte)).resized(0, 8);
+        let v = View::new(2, byte, Datatype::new(ft)).unwrap();
+        assert_eq!(v.runs(0, 10), vec![(2, 4), (10, 4), (18, 2)]);
+        // Mid-tile start.
+        assert_eq!(v.runs(2, 4), vec![(4, 2), (10, 2)]);
     }
 
     #[test]

@@ -3,8 +3,16 @@
 //! (the paper's "meaningful defaults"), reads/writes take typed slices,
 //! and the handle closes collectively on drop. The untyped substrate
 //! lives in [`crate::io`].
+//!
+//! The `*_async` variants return chainable [`MpiFuture`]s (paper §II,
+//! Listing 2) backed by the wire-path requests of [`crate::io::file`]:
+//! post, compute, then `.get()` — or `.then()` into the next stage of a
+//! checkpoint pipeline. Write futures own their packed payload from post
+//! time; read futures own the destination `Vec<T>`, so no borrow
+//! outlives the call.
 
 use super::datatype::{Buffer, BufferMut, DataType};
+use super::future::MpiFuture;
 use crate::comm::Comm;
 use crate::io::{AccessMode, File};
 use crate::Result;
@@ -53,6 +61,72 @@ impl<T: DataType + Default> TypedFile<T> {
     /// Rank-ordered shared write.
     pub fn write_ordered<B: Buffer<Elem = T> + ?Sized>(&self, data: &B) -> Result<usize> {
         self.file.write_ordered(data.as_raw_bytes(), data.count(), &T::datatype())
+    }
+
+    // ---- futures (paper Listing 2): post, compute, `.get()` ----
+
+    /// Nonblocking write at element offset. The payload is packed at
+    /// post time, so `data` is free the moment this returns; `.get()`
+    /// yields elements written.
+    pub fn write_at_async<B: Buffer<Elem = T> + ?Sized>(&self, offset: u64, data: &B) -> MpiFuture<usize> {
+        let esz = T::datatype().size().max(1);
+        match self.file.iwrite_at(offset, data.as_raw_bytes(), data.count(), &T::datatype()) {
+            Ok(req) => MpiFuture::from_request(req, move |st| Ok(st.bytes / esz)),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Nonblocking read of `count` elements at element offset. The future
+    /// owns the destination; `.get()` yields the elements actually read
+    /// (short at EOF).
+    pub fn read_at_async(&self, offset: u64, count: usize) -> MpiFuture<Vec<T>> {
+        let dt = T::datatype();
+        let esz = dt.size().max(1);
+        let mut out: Vec<T> = vec![T::default(); count];
+        match self.file.iread_at(offset, out.as_raw_bytes_mut(), count, &dt) {
+            Ok(req) => MpiFuture::from_request(req, move |st| {
+                let mut out = out;
+                out.truncate(st.bytes / esz);
+                Ok(out)
+            }),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Nonblocking *collective* write: initiation runs the two-phase
+    /// exchange planning; the aggregation and file traffic complete in
+    /// the background. Every rank must post (collective call).
+    pub fn write_at_all_async<B: Buffer<Elem = T> + ?Sized>(&self, offset: u64, data: &B) -> MpiFuture<usize> {
+        let esz = T::datatype().size().max(1);
+        match self.file.iwrite_at_all(offset, data.as_raw_bytes(), data.count(), &T::datatype()) {
+            Ok(req) => MpiFuture::from_request(req, move |st| Ok(st.bytes / esz)),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Nonblocking collective read; the future owns the destination.
+    pub fn read_at_all_async(&self, offset: u64, count: usize) -> MpiFuture<Vec<T>> {
+        let dt = T::datatype();
+        let esz = dt.size().max(1);
+        let mut out: Vec<T> = vec![T::default(); count];
+        match self.file.iread_at_all(offset, out.as_raw_bytes_mut(), count, &dt) {
+            Ok(req) => MpiFuture::from_request(req, move |st| {
+                let mut out = out;
+                out.truncate(st.bytes / esz);
+                Ok(out)
+            }),
+            Err(e) => MpiFuture::err(e),
+        }
+    }
+
+    /// Nonblocking shared-pointer write: the fetch-and-add and the data
+    /// transfer chain through the progress engine without blocking.
+    pub fn write_shared_async<B: Buffer<Elem = T> + ?Sized>(&self, data: &B) -> MpiFuture<usize> {
+        let esz = T::datatype().size().max(1);
+        match self.file.iwrite_shared(data.as_raw_bytes(), data.count(), &T::datatype()) {
+            Ok(req) => MpiFuture::from_request(req, move |st| Ok(st.bytes / esz)),
+            Err(e) => MpiFuture::err(e),
+        }
     }
 
     /// File length in elements.

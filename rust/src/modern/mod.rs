@@ -27,6 +27,7 @@ pub mod window;
 pub use communicator::{Communicator, Source, Tag, DEFAULT_TAG};
 pub use datatype::{Buffer, BufferMut, Complex, DataType};
 pub use enums::*;
+pub use file::{FileMode, TypedFile};
 pub use future::{when_all, when_any, MpiFuture, WhenAnyResult};
 pub use pipeline::{
     start_all, ChunkedAllReduce, PersistentAllReduce, PersistentBarrier, PersistentBroadcast,

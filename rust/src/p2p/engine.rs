@@ -36,7 +36,8 @@
 use super::buffer::{RawBuf, RawBufMut};
 use super::matcher::{MatchSelector, PostedRecv, UnexpectedBody, UnexpectedMsg};
 use super::state::{
-    RankCtx, RecvProgress, RecvState, RmaProgress, SendState, Status, WindowMem, BSEND_OVERHEAD,
+    IoProgress, RankCtx, RecvProgress, RecvState, RmaProgress, SendState, Status, WindowMem,
+    BSEND_OVERHEAD,
 };
 use crate::datatype::{pack, pack_size, unpack, validate_send_span, Datatype, TypeMap};
 use crate::group::Group;
@@ -400,6 +401,88 @@ fn rma_complete(ctx: &RankCtx, token: u64, data: WireBytes) -> Result<()> {
     }
 }
 
+// ---------------- MPI-IO over the wire ----------------
+
+/// One IO operation as the engine injects it toward the file server:
+/// metadata ops (open/close/resize/shared-pointer arithmetic), a
+/// view-scattered write, or a view-gathered read. See `io::server` for
+/// the server-side application.
+#[derive(Debug)]
+pub enum IoKind {
+    /// A metadata op (`io::server::meta_op` codes); `arg` is op-specific.
+    Meta { path: String, op: u8, arg: u64 },
+    /// Scatter `data` through the (displacement, filetype) view starting
+    /// at logical byte `lo`.
+    Write { path: String, disp: u64, map: Arc<TypeMap>, lo: u64, data: WireBytes },
+    /// Gather `nbytes` through the view starting at logical byte `lo`
+    /// (short at EOF).
+    Read { path: String, disp: u64, map: Arc<TypeMap>, lo: u64, nbytes: usize },
+}
+
+/// Inject one IO operation toward the file-server rank and return the
+/// token its completion (`IoDone`/`IoData`) will carry. Like RMA, local
+/// servers go through the fabric too — one uniform path, so chaos
+/// delay/reorder and the packet cost model apply to every file access.
+pub fn start_io(ctx: &RankCtx, server_world: usize, kind: IoKind) -> u64 {
+    let token = ctx.fresh_token();
+    ctx.io.borrow_mut().insert(token, IoProgress::Pending);
+    ctx.fabric.stats.io_ops_inflight.fetch_add(1, Ordering::Relaxed);
+    let pk = match kind {
+        IoKind::Meta { path, op, arg } => PacketKind::IoMeta { path, op, arg, token },
+        IoKind::Write { path, disp, map, lo, data } => {
+            PacketKind::IoWrite { path, disp, map, lo, data, token }
+        }
+        IoKind::Read { path, disp, map, lo, nbytes } => {
+            PacketKind::IoRead { path, disp, map, lo, nbytes, token }
+        }
+    };
+    let now = ctx.clock.now_ns();
+    ctx.fabric.send(ctx.world_rank, server_world, now, pk);
+    token
+}
+
+/// Has the file server completed this IO op? Non-consuming, drives no
+/// progress; a consumed (absent) token reads as done.
+pub fn io_done(ctx: &RankCtx, token: u64) -> bool {
+    !matches!(ctx.io.borrow().get(&token), Some(IoProgress::Pending))
+}
+
+/// Take a completed IO op's result: the response payload (read data;
+/// empty for writes and metadata ops) and the scalar value (bytes
+/// written, file size, old shared-pointer — op-specific).
+pub fn take_io_result(ctx: &RankCtx, token: u64) -> Result<(WireBytes, u64)> {
+    let mut io = ctx.io.borrow_mut();
+    match io.remove(&token) {
+        Some(IoProgress::Done { data, value }) => Ok((data, value)),
+        Some(IoProgress::Failed(e)) => Err(e),
+        Some(p @ IoProgress::Pending) => {
+            io.insert(token, p);
+            Err(mpi_err!(Intern, "take of incomplete io op {token}"))
+        }
+        None => Err(mpi_err!(Request, "unknown io op token {token}")),
+    }
+}
+
+/// Record the file server's completion reply against the origin-side
+/// token. A nonzero `code` is the wire form of the server-side
+/// `ErrorClass`; it surfaces when the result is taken.
+fn io_complete(ctx: &RankCtx, token: u64, data: WireBytes, value: u64, code: i32) -> Result<()> {
+    ctx.fabric.stats.io_ops_inflight.fetch_sub(1, Ordering::Relaxed);
+    let state = if code == 0 {
+        IoProgress::Done { data, value }
+    } else {
+        let class = crate::error::ErrorClass::from_code(code);
+        IoProgress::Failed(crate::error::MpiError::new(
+            class,
+            format!("file server: {}", class.as_str()),
+        ))
+    };
+    match ctx.io.borrow_mut().insert(token, state) {
+        Some(IoProgress::Pending) => Ok(()),
+        _ => Err(mpi_err!(Intern, "IO completion for token {token} not pending")),
+    }
+}
+
 /// Post a receive. `src_world`/`tag` of `None` are the wildcards. Returns
 /// the receive token to wait on.
 pub fn post_recv(
@@ -678,6 +761,35 @@ fn handle_packet(ctx: &RankCtx, pkt: Packet) -> Result<()> {
         }
         PacketKind::RmaAck { token } => rma_complete(ctx, token, WireBytes::empty()),
         PacketKind::RmaGetResp { token, data } => rma_complete(ctx, token, data),
+        // ---- MPI-IO ops applied on the file-server rank's own thread ----
+        PacketKind::IoMeta { path, op, arg, token } => {
+            let (value, code) = crate::io::server::serve_meta(ctx, &path, op, arg);
+            reply_from_handler(ctx, pkt.src, PacketKind::IoDone { token, value, code });
+            Ok(())
+        }
+        PacketKind::IoWrite { path, disp, map, lo, data, token } => {
+            let (value, code) = crate::io::server::serve_write(ctx, &path, disp, &map, lo, &data);
+            reply_from_handler(ctx, pkt.src, PacketKind::IoDone { token, value, code });
+            Ok(())
+        }
+        PacketKind::IoRead { path, disp, map, lo, nbytes, token } => {
+            match crate::io::server::serve_read(ctx, &path, disp, &map, lo, nbytes) {
+                Ok(data) => reply_from_handler(ctx, pkt.src, PacketKind::IoData { token, data }),
+                Err(e) => reply_from_handler(
+                    ctx,
+                    pkt.src,
+                    PacketKind::IoDone { token, value: 0, code: e.code() },
+                ),
+            }
+            Ok(())
+        }
+        PacketKind::IoDone { token, value, code } => {
+            io_complete(ctx, token, WireBytes::empty(), value, code)
+        }
+        PacketKind::IoData { token, data } => {
+            let value = data.len() as u64;
+            io_complete(ctx, token, data, value, 0)
+        }
         PacketKind::CreditReturn { n } => {
             ctx.flow.returned(pkt.src, n);
             // Fresh liquidity: ship whatever was parked for that peer.

@@ -18,11 +18,13 @@ pub mod state;
 
 pub use buffer::{RawBuf, RawBufMut};
 pub use engine::{
-    abandon_recv, cancel_recv, detach_deferred_send, improbe, iprobe, mprobe, mrecv, post_recv,
-    probe, progress, quiesce_flow, recv_done, rma_done, send_done, start_rma, take_recv_result,
-    take_rma_result, take_send_done, wait_for, Message, RmaKind, RndvStaging, SendMode, SendParams,
+    abandon_recv, cancel_recv, detach_deferred_send, improbe, io_done, iprobe, mprobe, mrecv,
+    post_recv, probe, progress, quiesce_flow, recv_done, rma_done, send_done, start_io, start_rma,
+    take_io_result, take_recv_result, take_rma_result, take_send_done, wait_for, IoKind, Message,
+    RmaKind, RndvStaging, SendMode, SendParams,
 };
 pub use matcher::{Matcher, MatchSelector};
 pub use state::{
-    Progressable, RankCtx, RecvProgress, RecvState, RmaProgress, SendState, Status, WindowMem,
+    IoProgress, Progressable, RankCtx, RecvProgress, RecvState, RmaProgress, SendState, Status,
+    WindowMem,
 };

@@ -91,6 +91,18 @@ pub enum RmaProgress {
     Done(WireBytes),
 }
 
+/// Origin-side progress of one asynchronous MPI-IO operation: inserted as
+/// `Pending` when the `Io*` request packet is injected, flipped to `Done`
+/// by the file server's `IoDone`/`IoData` reply. For reads the payload is
+/// the (possibly short) data that came back; for writes and metadata ops
+/// it is empty and `value` carries the scalar result.
+#[derive(Debug)]
+pub enum IoProgress {
+    Pending,
+    Done { data: WireBytes, value: u64 },
+    Failed(MpiError),
+}
+
 /// Rank-local memory of one RMA window — the target side of one-sided
 /// operations. The exposed segment is written **only** by the owning
 /// rank's engine thread as `Rma*` packets are processed (and by the owner
@@ -304,6 +316,9 @@ pub struct RankCtx {
     /// In-flight one-sided operations this rank originated: token →
     /// progress (completed by the target's `RmaAck`/`RmaGetResp`).
     pub(crate) rma: RefCell<HashMap<u64, RmaProgress>>,
+    /// In-flight MPI-IO operations this rank originated: token → progress
+    /// (completed by the file server's `IoDone`/`IoData` reply).
+    pub(crate) io: RefCell<HashMap<u64, IoProgress>>,
     /// RMA windows whose local segment this rank exposes: window id →
     /// memory. Registered at `MPI_Win_allocate`, retired at `MPI_Win_free`.
     pub(crate) windows: RefCell<HashMap<u32, Rc<WindowMem>>>,
@@ -336,6 +351,7 @@ impl RankCtx {
             bsend: RefCell::new(BsendPool::default()),
             pending_rndv: RefCell::new(HashMap::new()),
             rma: RefCell::new(HashMap::new()),
+            io: RefCell::new(HashMap::new()),
             windows: RefCell::new(HashMap::new()),
             progressables: RefCell::new(Vec::new()),
             scratch: RefCell::new(Vec::new()),

@@ -5,7 +5,8 @@
 //! *quiescent*: every mailbox empty, the matcher's posted and unexpected
 //! queues drained, no rendezvous transfer half-finished, every request in
 //! a terminal state, no one-sided op still awaiting its target's ack, no
-//! window segment still exposed (`MPI_Win_free` ran), the buffered-send
+//! IO op still awaiting (or holding unclaimed) the file server's reply,
+//! no window segment still exposed (`MPI_Win_free` ran), the buffered-send
 //! pool unreserved, and every wire buffer handed back to the fabric's
 //! pool (window get/fetch responses ride pooled buffers too, so a leaked
 //! RMA future shows up in the pool balance). Any residue is either a
@@ -24,7 +25,7 @@
 //! on: explicitly via `.audited(true)`, via `FERROMPI_AUDIT=1`, or by
 //! default whenever the job runs in chaos mode.
 
-use crate::p2p::{engine, RankCtx, RecvProgress, RecvState, RmaProgress, SendState};
+use crate::p2p::{engine, IoProgress, RankCtx, RecvProgress, RecvState, RmaProgress, SendState};
 use crate::transport::Fabric;
 use std::rc::Rc;
 
@@ -74,6 +75,19 @@ pub fn audit_rank(ctx: &Rc<RankCtx>) -> Vec<String> {
         .count();
     if rma_pending > 0 {
         v.push(format!("{rma_pending} one-sided op(s) still awaiting target completion"));
+    }
+    let io_pending = ctx
+        .io
+        .borrow()
+        .iter()
+        .filter(|(_, p)| matches!(p, IoProgress::Pending))
+        .count();
+    if io_pending > 0 {
+        v.push(format!("{io_pending} IO op(s) still awaiting the file server's reply"));
+    }
+    let io_unclaimed = ctx.io.borrow().len() - io_pending;
+    if io_unclaimed > 0 {
+        v.push(format!("{io_unclaimed} completed IO op(s) never waited on (leaked request)"));
     }
     let wins = ctx.windows.borrow().len();
     if wins > 0 {
@@ -202,6 +216,27 @@ mod tests {
         assert!(v.iter().any(|s| s.contains("window segment")), "{v:?}");
         c.rma.borrow_mut().clear();
         engine::unregister_window(&c, 7);
+        assert!(audit_rank(&c).is_empty());
+    }
+
+    #[test]
+    fn pending_and_unclaimed_io_ops_are_flagged() {
+        let c = ctx();
+        // An IO op whose server reply never arrived.
+        c.io.borrow_mut().insert(5, crate::p2p::IoProgress::Pending);
+        let v = audit_rank(&c);
+        assert!(v.iter().any(|s| s.contains("file server")), "{v:?}");
+        // A completed op nobody consumed is a leaked request, not quiet.
+        c.io.borrow_mut().insert(
+            5,
+            crate::p2p::IoProgress::Done {
+                data: crate::transport::WireBytes::empty(),
+                value: 0,
+            },
+        );
+        let v = audit_rank(&c);
+        assert!(v.iter().any(|s| s.contains("never waited on")), "{v:?}");
+        c.io.borrow_mut().clear();
         assert!(audit_rank(&c).is_empty());
     }
 

@@ -117,6 +117,15 @@ pub enum Phase {
     /// scratch fields are asserted receiver-local: the wire never
     /// carries them.
     DerivedP2p { cells: usize, events: usize },
+    /// MPI-IO on the wire path: a striped per-rank file view (rank *r*
+    /// owns bytes `[r·elems, (r+1)·elems)` of every `p·elems` stripe)
+    /// written with a *split* collective write (two-phase aggregation on
+    /// or off per `twophase`), verified by each rank's own view readback,
+    /// a collective whole-file read against the interleave oracle under
+    /// the identity view, and an async `iwrite_at`/`iread_at` pair on a
+    /// rank-private tail region. All traffic is `Io*` packets, so chaos
+    /// and the quiescence audits land on it like any other phase.
+    Io { elems: usize, twophase: bool },
 }
 
 // ---------------- the derived aggregates DerivedP2p ships ----------------
@@ -166,7 +175,7 @@ impl Program {
         let target = r.range(5, 10);
         let mut phases = Vec::new();
         while phases.len() < target {
-            match r.range(0, 16) {
+            match r.range(0, 17) {
                 0..=2 => phases.push(gen_immediate(&mut r, nranks, false, false)),
                 3 => phases.push(gen_immediate(&mut r, nranks, true, false)),
                 4 => {
@@ -206,6 +215,10 @@ impl Program {
                 14 => phases.push(Phase::DerivedP2p {
                     cells: r.range(1, 513),
                     events: r.range(1, 9),
+                }),
+                15 => phases.push(Phase::Io {
+                    elems: r.range(16, 1025),
+                    twophase: r.bool(),
                 }),
                 // ≥ 16 Ki i64 elements so the payload crosses the default
                 // 128 KiB chunk threshold and the chunked path engages.
@@ -340,6 +353,33 @@ impl Program {
                 // 4 100 cells × 16 B = 65 600 B: past the default eager
                 // boundary, so the dense ring rides rendezvous.
                 Phase::DerivedP2p { cells: 4_100, events: 2 },
+                Phase::ModernAllReduce,
+            ],
+        }
+    }
+
+    /// A handcrafted program centred on the MPI-IO wire path: striped
+    /// collective writes with two-phase aggregation on and off, a
+    /// stripe-crossing payload large enough to span aggregator
+    /// boundaries, whole-file collective readback and async tails —
+    /// interleaved with ordinary traffic so `Io*` packets share the
+    /// mailboxes with p2p and collectives. Used by the cross-backend
+    /// conformance builtin (`--program io`) — digests must agree on
+    /// inproc, shm and socket.
+    pub fn io_showcase(nranks: usize) -> Program {
+        assert!(nranks >= 2);
+        Program {
+            seed: 0x10_F11E,
+            nranks,
+            phases: vec![
+                Phase::Barrier,
+                Phase::Io { elems: 256, twophase: true },
+                Phase::Ring { len: 1024 },
+                Phase::Io { elems: 64, twophase: false },
+                Phase::Collective { op: CollOp::Allreduce, split: false, len: 0, count: 5 },
+                // 20 000 × 4 tiles = 80 KB per rank: past the default
+                // 64 KiB stripe, so runs cross aggregator boundaries.
+                Phase::Io { elems: 20_000, twophase: true },
                 Phase::ModernAllReduce,
             ],
         }
@@ -647,6 +687,9 @@ fn exec(p: &Program, comm: &Comm) -> Vec<u64> {
             Phase::DerivedP2p { cells, events } => {
                 exec_derived(comm, seed, pi, *cells, *events, &mut digest);
             }
+            Phase::Io { elems, twophase } => {
+                exec_io(comm, seed, pi, *elems, *twophase, &mut digest);
+            }
             Phase::ModernAllReduce => {
                 let m = crate::modern::Communicator::world(comm);
                 let wr = comm.rank_ctx().world_rank as u64;
@@ -927,6 +970,88 @@ fn exec_derived(comm: &Comm, seed: u64, pi: usize, cells: usize, events: usize, 
         cell_bytes(c, &mut canon);
     }
     digest.push(fnv1a(&canon));
+}
+
+/// MPI-IO phase (see [`Phase::Io`]). Digests are pure functions of
+/// (seed, rank, payload), so runs must agree across backends and chaos
+/// seeds; the file is unique to (program seed, phase) and removed by
+/// delete-on-close, so repeated runs of the same program start clean.
+fn exec_io(comm: &Comm, seed: u64, pi: usize, elems: usize, twophase: bool, digest: &mut Vec<u64>) {
+    use crate::datatype::TypeMap;
+    use crate::io::{AccessMode, File};
+    const TILES: usize = 4;
+    let me = comm.rank();
+    let pn = comm.size();
+    let byte = Datatype::primitive(Primitive::Byte);
+    let len = elems * TILES;
+    let path = format!("/proggen/{seed:x}-{pi}");
+    let f = File::open(comm, &path, AccessMode::read_write().with_delete_on_close())
+        .unwrap_or_else(|e| panic!("phase {pi} io open: {e}"));
+    f.set_twophase(Some(twophase));
+
+    // Striped view + split collective write of this rank's stripes.
+    let ft = Datatype::new(
+        TypeMap::vector(1, elems, elems as isize, &TypeMap::primitive(Primitive::Byte))
+            .resized(0, (pn * elems) as isize),
+    );
+    f.set_view((me * elems) as u64, &byte, &ft)
+        .unwrap_or_else(|e| panic!("phase {pi} io set_view: {e}"));
+    let payload = pbytes(seed, &[pi as u64, me as u64, 0xF1], len);
+    f.write_at_all_begin(0, &payload, len, &byte)
+        .unwrap_or_else(|e| panic!("phase {pi} io write begin: {e}"));
+    let wrote = f.write_at_all_end().unwrap_or_else(|e| panic!("phase {pi} io write end: {e}"));
+    assert_eq!(wrote, len, "phase {pi} rank {me}: short collective write (seed {seed:#x})");
+
+    // Readback through the same view must be byte-identical.
+    let mut back = vec![0u8; len];
+    let got = f
+        .read_at(0, &mut back, len, &byte)
+        .unwrap_or_else(|e| panic!("phase {pi} io readback: {e}"));
+    assert!(
+        got == len && back == payload,
+        "phase {pi} rank {me}: view readback corrupt (seed {seed:#x})"
+    );
+    digest.push(fnv1a(&back));
+
+    // Identity view: collective whole-file read against the interleave
+    // oracle (stripe s = rank 0's block s, then rank 1's, ...).
+    f.set_view(0, &byte, &byte).unwrap_or_else(|e| panic!("phase {pi} io set_view: {e}"));
+    let total = pn * len;
+    let mut whole = vec![0u8; total];
+    let got = f
+        .read_at_all(0, &mut whole, total, &byte)
+        .unwrap_or_else(|e| panic!("phase {pi} io read_at_all: {e}"));
+    assert_eq!(got, total, "phase {pi} rank {me}: short whole-file read (seed {seed:#x})");
+    let mut oracle = Vec::with_capacity(total);
+    for s in 0..TILES {
+        for r in 0..pn {
+            let p = pbytes(seed, &[pi as u64, r as u64, 0xF1], len);
+            oracle.extend_from_slice(&p[s * elems..(s + 1) * elems]);
+        }
+    }
+    assert_eq!(whole, oracle, "phase {pi} rank {me}: interleave oracle (seed {seed:#x})");
+    digest.push(fnv1a(&whole));
+
+    // Async tail: iwrite_at a rank-private region past the stripes, then
+    // iread_at it back — both requests complete through the engine.
+    let tail = pbytes(seed, &[pi as u64, me as u64, 0xA5], elems);
+    let at = (total + me * elems) as u64;
+    f.iwrite_at(at, &tail, elems, &byte)
+        .unwrap_or_else(|e| panic!("phase {pi} io iwrite: {e}"))
+        .wait()
+        .unwrap_or_else(|e| panic!("phase {pi} io iwrite wait: {e}"));
+    let mut tback = vec![0u8; elems];
+    let req = f
+        .iread_at(at, &mut tback, elems, &byte)
+        .unwrap_or_else(|e| panic!("phase {pi} io iread: {e}"));
+    let st = req.wait().unwrap_or_else(|e| panic!("phase {pi} io iread wait: {e}"));
+    assert!(
+        st.bytes == elems && tback == tail,
+        "phase {pi} rank {me}: async tail corrupt (seed {seed:#x})"
+    );
+    digest.push(fnv1a(&tback));
+
+    f.close().unwrap_or_else(|e| panic!("phase {pi} io close: {e}"));
 }
 
 /// One-sided phase: window of `len` data slots + 1 counter slot per rank.
@@ -1352,6 +1477,15 @@ mod tests {
         // skipped scratch contributes nothing.
         assert_eq!(ev.size(), 16 + 12 + 4 + 5);
         assert_eq!(ev.extent() as usize, std::mem::size_of::<SimEvent>());
+    }
+
+    #[test]
+    fn io_showcase_runs_clean_on_a_faithful_fabric() {
+        let p = Program::io_showcase(3);
+        let u = Universe::test(3).calm().audited(true);
+        let d = p.run(&u);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d, p.run(&u));
     }
 
     #[test]

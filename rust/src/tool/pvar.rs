@@ -52,6 +52,10 @@ pub fn pvars() -> Vec<PvarInfo> {
         PvarInfo { name: "rma_puts", description: "one-sided puts injected (RmaPut packets)", class: Counter, category: "rma" },
         PvarInfo { name: "rma_gets", description: "one-sided get requests injected (RmaGet packets)", class: Counter, category: "rma" },
         PvarInfo { name: "rma_accs", description: "one-sided accumulates injected (RmaAcc + RmaCas packets, incl. fetch_and_op / compare_and_swap)", class: Counter, category: "rma" },
+        PvarInfo { name: "io_reads", description: "IO read requests injected (IoRead packets)", class: Counter, category: "io" },
+        PvarInfo { name: "io_writes", description: "IO write payloads injected (IoWrite packets, incl. two-phase aggregated stripes)", class: Counter, category: "io" },
+        PvarInfo { name: "io_aggregated_bytes", description: "payload bytes staged through the two-phase collective-buffering exchange (both client scatter and aggregator gather halves; independent IO counts zero)", class: Counter, category: "io" },
+        PvarInfo { name: "io_ops_inflight", description: "IO operations started but not yet completed at the origin (0 at quiescence)", class: Level, category: "io" },
         PvarInfo { name: "chaos_delays", description: "packets given extra delivery latency by the chaos injector", class: Counter, category: "chaos" },
         PvarInfo { name: "chaos_reorders", description: "packets that overtook another sender's queued packet under chaos", class: Counter, category: "chaos" },
         PvarInfo { name: "chaos_yields", description: "scheduling yields injected into the progress loop under chaos", class: Counter, category: "chaos" },
@@ -127,6 +131,10 @@ impl<'a> PvarSession<'a> {
             "rma_puts" => f.rma_puts.load(Ordering::Relaxed),
             "rma_gets" => f.rma_gets.load(Ordering::Relaxed),
             "rma_accs" => f.rma_accs.load(Ordering::Relaxed),
+            "io_reads" => f.io_reads.load(Ordering::Relaxed),
+            "io_writes" => f.io_writes.load(Ordering::Relaxed),
+            "io_aggregated_bytes" => f.io_aggregated_bytes.load(Ordering::Relaxed),
+            "io_ops_inflight" => f.io_ops_inflight.load(Ordering::Relaxed),
             "chaos_delays" => {
                 ctx.fabric.chaos.as_ref().map_or(0, |c| c.delays.load(Ordering::Relaxed))
             }

@@ -52,6 +52,16 @@ pub struct FabricStats {
     /// High-watermark of concurrently in-flight chunk schedules in the
     /// chunked-reduction pipeline.
     pub chunks_inflight_max: AtomicU64,
+    /// MPI-IO read requests injected (`IoRead` packets).
+    pub io_reads: AtomicU64,
+    /// MPI-IO write requests injected (`IoWrite` packets).
+    pub io_writes: AtomicU64,
+    /// Bytes staged through two-phase collective-IO exchange buffers
+    /// (aggregator-side copies only — the genuine staging cost).
+    pub io_aggregated_bytes: AtomicU64,
+    /// Currently outstanding IO requests (level, not monotonic): bumped
+    /// at injection, dropped when the completion arrives.
+    pub io_ops_inflight: AtomicU64,
     /// Backend-level frame/byte counters (`backend_*` pvars). Shared with
     /// the backend itself, which counts on the wire path.
     pub backend: Arc<BackendStats>,
@@ -66,6 +76,8 @@ enum PacketClass {
     RmaPut,
     RmaGet,
     RmaAcc,
+    IoWrite,
+    IoRead,
     Ctrl,
 }
 
@@ -76,8 +88,11 @@ fn class_of(kind: &PacketKind) -> PacketClass {
         PacketKind::RmaPut { .. } => PacketClass::RmaPut,
         PacketKind::RmaGet { .. } => PacketClass::RmaGet,
         PacketKind::RmaAcc { .. } | PacketKind::RmaCas { .. } => PacketClass::RmaAcc,
-        // Acks, credit returns and data responses are protocol replies
-        // (their payload bytes still land in `bytes_sent`).
+        PacketKind::IoWrite { .. } => PacketClass::IoWrite,
+        PacketKind::IoRead { .. } => PacketClass::IoRead,
+        // Acks, credit returns, metadata ops and data responses are
+        // protocol replies (their payload bytes still land in
+        // `bytes_sent`).
         _ => PacketClass::Ctrl,
     }
 }
@@ -92,6 +107,8 @@ impl FabricStats {
             PacketClass::RmaPut => self.rma_puts.fetch_add(1, Ordering::Relaxed),
             PacketClass::RmaGet => self.rma_gets.fetch_add(1, Ordering::Relaxed),
             PacketClass::RmaAcc => self.rma_accs.fetch_add(1, Ordering::Relaxed),
+            PacketClass::IoWrite => self.io_writes.fetch_add(1, Ordering::Relaxed),
+            PacketClass::IoRead => self.io_reads.fetch_add(1, Ordering::Relaxed),
             PacketClass::Ctrl => self.ctrl_sent.fetch_add(1, Ordering::Relaxed),
         };
         if same_node {

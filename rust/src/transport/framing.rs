@@ -39,6 +39,8 @@ pub enum FrameError {
     BadKind(u8),
     BadPrimitive(u8),
     BadOp(u8),
+    /// A length-prefixed string field (IO paths) was not valid UTF-8.
+    BadUtf8,
 }
 
 impl std::fmt::Display for FrameError {
@@ -54,6 +56,7 @@ impl std::fmt::Display for FrameError {
             FrameError::BadKind(t) => write!(f, "unknown packet kind tag {t}"),
             FrameError::BadPrimitive(t) => write!(f, "unknown primitive tag {t}"),
             FrameError::BadOp(t) => write!(f, "unknown op tag {t}"),
+            FrameError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
         }
     }
 }
@@ -81,6 +84,11 @@ const TAG_RMA_CAS: u8 = 8;
 const TAG_RMA_ACK: u8 = 9;
 const TAG_RMA_GET_RESP: u8 = 10;
 const TAG_CREDIT: u8 = 11;
+const TAG_IO_META: u8 = 12;
+const TAG_IO_WRITE: u8 = 13;
+const TAG_IO_READ: u8 = 14;
+const TAG_IO_DONE: u8 = 15;
+const TAG_IO_DATA: u8 = 16;
 const TAG_ABORT: u8 = 0xFF;
 
 fn op_tag(op: OpKind) -> u8 {
@@ -264,6 +272,13 @@ impl<'a> Cursor<'a> {
         Ok(w.freeze())
     }
 
+    /// Length-prefixed UTF-8 string (IO file paths).
+    fn string(&mut self) -> Result<String, FrameError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| FrameError::BadUtf8)
+    }
+
     fn typemap(&mut self) -> Result<Arc<TypeMap>, FrameError> {
         let n = self.u32()? as usize;
         let mut entries = Vec::with_capacity(n.min(4096));
@@ -361,6 +376,42 @@ pub fn encode_packet(pkt: &Packet, out: &mut Vec<u8>) {
             header(out, TAG_CREDIT);
             put_u32(out, *n);
         }
+        PacketKind::IoMeta { path, op, arg, token } => {
+            header(out, TAG_IO_META);
+            put_bytes(out, path.as_bytes());
+            put_u8(out, *op);
+            put_u64(out, *arg);
+            put_u64(out, *token);
+        }
+        PacketKind::IoWrite { path, disp, map, lo, data, token } => {
+            header(out, TAG_IO_WRITE);
+            put_bytes(out, path.as_bytes());
+            put_u64(out, *disp);
+            put_typemap(out, map);
+            put_u64(out, *lo);
+            put_u64(out, *token);
+            put_bytes(out, data.as_slice());
+        }
+        PacketKind::IoRead { path, disp, map, lo, nbytes, token } => {
+            header(out, TAG_IO_READ);
+            put_bytes(out, path.as_bytes());
+            put_u64(out, *disp);
+            put_typemap(out, map);
+            put_u64(out, *lo);
+            put_u64(out, *nbytes as u64);
+            put_u64(out, *token);
+        }
+        PacketKind::IoDone { token, value, code } => {
+            header(out, TAG_IO_DONE);
+            put_u64(out, *token);
+            put_u64(out, *value);
+            put_i32(out, *code);
+        }
+        PacketKind::IoData { token, data } => {
+            header(out, TAG_IO_DATA);
+            put_u64(out, *token);
+            put_bytes(out, data.as_slice());
+        }
     }
 }
 
@@ -450,6 +501,40 @@ pub fn decode_msg(body: &[u8], pool: &Arc<BufferPool>) -> Result<WireMsg, FrameE
             PacketKind::RmaGetResp { token, data }
         }
         TAG_CREDIT => PacketKind::CreditReturn { n: c.u32()? },
+        TAG_IO_META => PacketKind::IoMeta {
+            path: c.string()?,
+            op: c.u8()?,
+            arg: c.u64()?,
+            token: c.u64()?,
+        },
+        TAG_IO_WRITE => {
+            let path = c.string()?;
+            let disp = c.u64()?;
+            let map = c.typemap()?;
+            let lo = c.u64()?;
+            let token = c.u64()?;
+            let data = c.payload(pool)?;
+            PacketKind::IoWrite { path, disp, map, lo, data, token }
+        }
+        TAG_IO_READ => {
+            let path = c.string()?;
+            let disp = c.u64()?;
+            let map = c.typemap()?;
+            let lo = c.u64()?;
+            let nbytes = c.u64()? as usize;
+            let token = c.u64()?;
+            PacketKind::IoRead { path, disp, map, lo, nbytes, token }
+        }
+        TAG_IO_DONE => PacketKind::IoDone {
+            token: c.u64()?,
+            value: c.u64()?,
+            code: c.i32()?,
+        },
+        TAG_IO_DATA => {
+            let token = c.u64()?;
+            let data = c.payload(pool)?;
+            PacketKind::IoData { token, data }
+        }
         other => return Err(FrameError::BadKind(other)),
     };
     finish(c, WireMsg::Packet(Packet { src, depart_vt, kind }))
@@ -562,6 +647,25 @@ mod tests {
             PacketKind::RmaAck { token: 9 },
             PacketKind::RmaGetResp { token: 10, data: payload(pool, &[3u8; 4]) },
             PacketKind::CreditReturn { n: 17 },
+            PacketKind::IoMeta { path: "/ckpt/a.bin".into(), op: 2, arg: 4096, token: 11 },
+            PacketKind::IoWrite {
+                path: "/ckpt/a.bin".into(),
+                disp: 32,
+                map: Arc::new(TypeMap::contiguous(1, &TypeMap::primitive(Primitive::Byte))),
+                lo: 128,
+                data: payload(pool, &[5u8; 24]),
+                token: 12,
+            },
+            PacketKind::IoRead {
+                path: "/ckpt/a.bin".into(),
+                disp: 0,
+                map: Arc::new(TypeMap::vector(2, 4, 8, &TypeMap::primitive(Primitive::U8))),
+                lo: 16,
+                nbytes: 64,
+                token: 13,
+            },
+            PacketKind::IoDone { token: 12, value: 24, code: 0 },
+            PacketKind::IoData { token: 13, data: payload(pool, &[6u8; 64]) },
         ];
         kinds
             .into_iter()
@@ -592,6 +696,33 @@ mod tests {
             }
             (PacketKind::CreditReturn { n: n1 }, PacketKind::CreditReturn { n: n2 }) => {
                 assert_eq!(n1, n2, "credit count must roundtrip exactly");
+            }
+            (
+                PacketKind::IoMeta { path: p1, op: o1, arg: a1, token: t1 },
+                PacketKind::IoMeta { path: p2, op: o2, arg: a2, token: t2 },
+            ) => {
+                assert_eq!((p1, o1, a1, t1), (p2, o2, a2, t2));
+            }
+            (
+                PacketKind::IoWrite { path: p1, disp: d1, map: m1, lo: l1, data: b1, token: t1 },
+                PacketKind::IoWrite { path: p2, disp: d2, map: m2, lo: l2, data: b2, token: t2 },
+            ) => {
+                assert_eq!((p1, d1, l1, t1), (p2, d2, l2, t2));
+                assert_eq!(m1.as_ref(), m2.as_ref(), "IO filetype map must roundtrip exactly");
+                assert_eq!(b1.as_slice(), b2.as_slice());
+            }
+            (
+                PacketKind::IoRead { path: p1, disp: d1, map: m1, lo: l1, nbytes: n1, token: t1 },
+                PacketKind::IoRead { path: p2, disp: d2, map: m2, lo: l2, nbytes: n2, token: t2 },
+            ) => {
+                assert_eq!((p1, d1, l1, n1, t1), (p2, d2, l2, n2, t2));
+                assert_eq!(m1.as_ref(), m2.as_ref());
+            }
+            (
+                PacketKind::IoDone { token: t1, value: v1, code: c1 },
+                PacketKind::IoDone { token: t2, value: v2, code: c2 },
+            ) => {
+                assert_eq!((t1, v1, c1), (t2, v2, c2));
             }
             _ => {}
         }

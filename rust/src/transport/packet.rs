@@ -98,6 +98,26 @@ pub enum PacketKind {
     /// are batched (up to half a window per packet) so the uncontended
     /// path pays no per-message control traffic.
     CreditReturn { n: u32 },
+    /// File-server metadata op (open / size / resize / delete / shared
+    /// pointer / close). `op` selects the transaction (see
+    /// `io::server::meta_op`), `arg` is its packed operand; the server
+    /// answers with an [`PacketKind::IoDone`] carrying `token`.
+    IoMeta { path: String, op: u8, arg: u64, token: u64 },
+    /// File write: scatter `data` through the file view described by
+    /// (`disp`, filetype `map`) starting at logical byte `lo`. One data
+    /// crossing plus an [`PacketKind::IoDone`] ack — the RDMA-like shape
+    /// the `Rma*` family uses, applied to the simulated filesystem.
+    IoWrite { path: String, disp: u64, map: Arc<TypeMap>, lo: u64, data: WireBytes, token: u64 },
+    /// File read request: gather up to `nbytes` through the view
+    /// (`disp`, `map`) from logical byte `lo`; the server answers with an
+    /// [`PacketKind::IoData`] on a pooled wire buffer (short at EOF).
+    IoRead { path: String, disp: u64, map: Arc<TypeMap>, lo: u64, nbytes: usize, token: u64 },
+    /// File-server completion ack: scalar result in `value` (bytes
+    /// written, file size, old shared-pointer value, …), `code` an
+    /// `ErrorClass` code (0 = success).
+    IoDone { token: u64, value: u64, code: i32 },
+    /// File-read response payload.
+    IoData { token: u64, data: WireBytes },
 }
 
 impl PacketKind {
@@ -109,7 +129,9 @@ impl PacketKind {
             | PacketKind::RmaPut { data, .. }
             | PacketKind::RmaAcc { data, .. }
             | PacketKind::RmaCas { data, .. }
-            | PacketKind::RmaGetResp { data, .. } => data.len(),
+            | PacketKind::RmaGetResp { data, .. }
+            | PacketKind::IoWrite { data, .. }
+            | PacketKind::IoData { data, .. } => data.len(),
             _ => 0,
         }
     }
@@ -129,6 +151,11 @@ impl PacketKind {
             PacketKind::RmaAck { .. } => "rma_ack",
             PacketKind::RmaGetResp { .. } => "rma_get_resp",
             PacketKind::CreditReturn { .. } => "credit_return",
+            PacketKind::IoMeta { .. } => "io_meta",
+            PacketKind::IoWrite { .. } => "io_write",
+            PacketKind::IoRead { .. } => "io_read",
+            PacketKind::IoDone { .. } => "io_done",
+            PacketKind::IoData { .. } => "io_data",
         }
     }
 
@@ -145,6 +172,8 @@ impl PacketKind {
                 | PacketKind::RmaAcc { .. }
                 | PacketKind::RmaCas { .. }
                 | PacketKind::RmaGetResp { .. }
+                | PacketKind::IoWrite { .. }
+                | PacketKind::IoData { .. }
         )
     }
 }
@@ -209,6 +238,43 @@ mod tests {
         assert_eq!(cr.payload_len(), 0);
         assert_eq!(cr.label(), "credit_return");
         assert!(!cr.counts_against_capacity());
+    }
+
+    #[test]
+    fn io_kinds_payload_labels_and_capacity() {
+        let byte = Arc::new(TypeMap::primitive(crate::datatype::Primitive::Byte));
+        let w = PacketKind::IoWrite {
+            path: "ckpt.dat".into(),
+            disp: 0,
+            map: byte.clone(),
+            lo: 16,
+            data: WireBytes::from_vec(vec![0; 12]),
+            token: 1,
+        };
+        assert_eq!(w.payload_len(), 12);
+        assert_eq!(w.label(), "io_write");
+        assert!(w.counts_against_capacity());
+        let r = PacketKind::IoRead {
+            path: "ckpt.dat".into(),
+            disp: 0,
+            map: byte,
+            lo: 0,
+            nbytes: 64,
+            token: 2,
+        };
+        assert_eq!(r.payload_len(), 0, "a read request is header-only");
+        assert_eq!(r.label(), "io_read");
+        assert!(!r.counts_against_capacity(), "read requests must bypass bounds");
+        let d = PacketKind::IoData { token: 2, data: WireBytes::from_vec(vec![0; 64]) };
+        assert_eq!(d.payload_len(), 64);
+        assert!(d.counts_against_capacity());
+        for ctrl in [
+            PacketKind::IoMeta { path: "x".into(), op: 1, arg: 0, token: 3 },
+            PacketKind::IoDone { token: 3, value: 7, code: 0 },
+        ] {
+            assert_eq!(ctrl.payload_len(), 0);
+            assert!(!ctrl.counts_against_capacity(), "{} must bypass bounds", ctrl.label());
+        }
     }
 
     #[test]

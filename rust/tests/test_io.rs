@@ -1,0 +1,341 @@
+//! MPI-IO over the wire path: async/blocking identity, split-collective
+//! ordering, two-phase vs. independent collective buffering, futures over
+//! IO requests, the copy-accounting contract, and a checkpoint/restart
+//! chaos differential (docs/IO.md).
+//!
+//! Every byte of file traffic here crosses the simulated fabric as
+//! `Io*` packets — the same mailboxes chaos perturbs and the quiescence
+//! audit drains — so each test doubles as an end-of-job leak check
+//! (`.audited(true)` throughout).
+
+use ferrompi::collective;
+use ferrompi::datatype::{Datatype, Primitive, TypeMap};
+use ferrompi::io::{AccessMode, File};
+use ferrompi::modern::{when_all, MpiFuture, TypedFile};
+use ferrompi::sim::proggen::{assert_differential, Program};
+use ferrompi::tool::pvar::PvarSession;
+use ferrompi::universe::Universe;
+
+/// Deterministic pseudo-random payload (no process-global RNG: the same
+/// seed must produce the same bytes on every rank and every run).
+fn pattern(seed: u64, len: usize) -> Vec<u8> {
+    let mut x = seed | 1;
+    (0..len)
+        .map(|i| {
+            x = x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(13) ^ i as u64;
+            (x >> 24) as u8
+        })
+        .collect()
+}
+
+fn byte() -> Datatype {
+    Datatype::primitive(Primitive::Byte)
+}
+
+/// The striped filetype every collective test uses: rank `me` owns one
+/// `elems`-byte block per `pn * elems` window (set together with a
+/// displacement of `me * elems`).
+fn striped(pn: usize, elems: usize) -> Datatype {
+    Datatype::new(
+        TypeMap::vector(1, elems, elems as isize, &TypeMap::primitive(Primitive::Byte))
+            .resized(0, (pn * elems) as isize),
+    )
+}
+
+/// `iwrite_at`/`iread_at` and their blocking forms must produce
+/// byte-identical files: the request path is a scheduling difference,
+/// never a data difference.
+#[test]
+fn async_and_blocking_writes_are_byte_identical() {
+    const LEN: usize = 4096;
+    let images = Universe::test(2).calm().audited(true).run(|comm| {
+        let me = comm.rank();
+        let pn = comm.size();
+        let dt = byte();
+        let a = File::open(comm, "/t/blocking", AccessMode::read_write().with_delete_on_close())
+            .unwrap();
+        let b = File::open(comm, "/t/async", AccessMode::read_write().with_delete_on_close())
+            .unwrap();
+        let payload = pattern(0xB10C ^ me as u64, LEN);
+        let off = (me * LEN) as u64;
+        assert_eq!(a.write_at(off, &payload, LEN, &dt).unwrap(), LEN);
+        let st = b.iwrite_at(off, &payload, LEN, &dt).unwrap().wait().unwrap();
+        assert_eq!(st.bytes, LEN);
+        collective::barrier(comm).unwrap();
+        let total = pn * LEN;
+        let mut via_blocking = vec![0u8; total];
+        let mut via_async = vec![0u8; total];
+        assert_eq!(a.read_at(0, &mut via_blocking, total, &dt).unwrap(), total);
+        let st = b.iread_at(0, &mut via_async, total, &dt).unwrap().wait().unwrap();
+        assert_eq!(st.bytes, total);
+        assert_eq!(via_blocking, via_async, "rank {me}: async and blocking files diverge");
+        a.close().unwrap();
+        b.close().unwrap();
+        via_blocking
+    });
+    let want: Vec<u8> =
+        [pattern(0xB10C, LEN), pattern(0xB10C ^ 1, LEN)].concat();
+    for (r, img) in images.iter().enumerate() {
+        assert_eq!(img, &want, "rank {r} read a wrong whole-file image");
+    }
+}
+
+/// Split-collective rules (§14.4.5): one outstanding pair per handle,
+/// begin/end strictly matched by kind, and a mismatched end must leave
+/// the pending operation intact rather than destroy it.
+#[test]
+fn split_collective_ordering_is_enforced() {
+    const LEN: usize = 512;
+    Universe::test(2).calm().audited(true).run(|comm| {
+        let me = comm.rank();
+        let dt = byte();
+        let f = File::open(comm, "/t/split", AccessMode::read_write().with_delete_on_close())
+            .unwrap();
+        // end with nothing outstanding
+        assert!(f.write_at_all_end().is_err());
+        assert!(f.read_at_all_end().is_err());
+        let payload = pattern(0x5917 ^ me as u64, LEN);
+        f.write_at_all_begin((me * LEN) as u64, &payload, LEN, &dt).unwrap();
+        // only one split collective may be outstanding per handle
+        assert!(f.write_at_all_begin(0, &payload, LEN, &dt).is_err());
+        // ending the wrong kind is rejected without consuming the pending op
+        assert!(f.read_at_all_end().is_err());
+        assert_eq!(f.write_at_all_end().unwrap(), LEN);
+        // same discipline on the read side
+        let mut back = vec![0u8; LEN];
+        f.read_at_all_begin((me * LEN) as u64, &mut back, LEN, &dt).unwrap();
+        assert!(f.write_at_all_end().is_err());
+        assert_eq!(f.read_at_all_end().unwrap(), LEN);
+        assert_eq!(back, payload, "rank {me}: split read returned wrong bytes");
+        f.close().unwrap();
+    });
+}
+
+/// Two-phase collective buffering is an optimization, not a semantic:
+/// the aggregated and independent paths must write byte-identical files
+/// for the same striped views, at every communicator size.
+#[test]
+fn twophase_and_independent_collectives_write_identical_files() {
+    const TILES: usize = 3;
+    const ELEMS: usize = 257; // deliberately un-round
+    for p in [1usize, 2, 4] {
+        let wholes = Universe::test(p).calm().audited(true).run(move |comm| {
+            let me = comm.rank();
+            let pn = comm.size();
+            let dt = byte();
+            let len = TILES * ELEMS;
+            let ft = striped(pn, ELEMS);
+            let payload = pattern(0x27F0 + me as u64, len);
+            let mut images = Vec::new();
+            for (path, twophase) in [("/t/agg", true), ("/t/flat", false)] {
+                let f =
+                    File::open(comm, path, AccessMode::read_write().with_delete_on_close())
+                        .unwrap();
+                f.set_twophase(Some(twophase));
+                f.set_view((me * ELEMS) as u64, &dt, &ft).unwrap();
+                assert_eq!(f.write_at_all(0, &payload, len, &dt).unwrap(), len);
+                f.set_view(0, &dt, &dt).unwrap();
+                let total = pn * len;
+                let mut whole = vec![0u8; total];
+                assert_eq!(f.read_at_all(0, &mut whole, total, &dt).unwrap(), total);
+                f.close().unwrap();
+                images.push(whole);
+            }
+            assert_eq!(
+                images[0], images[1],
+                "rank {me} of {pn}: two-phase and independent collective writes diverge"
+            );
+            images.pop().unwrap()
+        });
+        for (r, w) in wholes.iter().enumerate() {
+            assert_eq!(w, &wholes[0], "rank {r} disagrees on the file image at p={p}");
+        }
+    }
+}
+
+/// IO requests are futures (paper §II): `.then()` continuations chain off
+/// a collective write, `when_all` joins a fan-out of reads, and nothing
+/// in the chain ever calls an explicit wait.
+#[test]
+fn future_then_chains_and_when_all_over_io() {
+    const N: usize = 64;
+    let sums = Universe::test(2).calm().audited(true).run(|comm| {
+        let me = comm.rank() as u64;
+        let pn = comm.size() as u64;
+        let tf = TypedFile::<u64>::open(
+            comm,
+            "/t/futures",
+            AccessMode::read_write().with_delete_on_close(),
+        )
+        .unwrap();
+        let mine: Vec<u64> = (0..N as u64).map(|i| me * 1000 + i).collect();
+        // post → continue: the continuation turns "elements written" into
+        // the next pipeline stage's input.
+        let wrote = tf
+            .write_at_async(me * N as u64, &mine[..])
+            .then(|done| MpiFuture::from_result(done.get().map(|n| n as u64)))
+            .get()
+            .unwrap();
+        assert_eq!(wrote, N as u64);
+        tf.sync().unwrap();
+        // fan out one read per rank region, join with when_all.
+        let futs: Vec<MpiFuture<Vec<u64>>> =
+            (0..pn).map(|r| tf.read_at_async(r * N as u64, N)).collect();
+        let blocks = when_all(futs).get().unwrap();
+        let sum: u64 = blocks.iter().flatten().sum();
+        tf.sync().unwrap();
+        tf.close().unwrap();
+        sum
+    });
+    let expect: u64 = (0..2u64)
+        .map(|r| (0..N as u64).map(|i| r * 1000 + i).sum::<u64>())
+        .sum();
+    assert_eq!(sums, vec![expect, expect]);
+}
+
+/// The copy-accounting contract (acceptance criterion): contiguous
+/// payloads move through the IO path with **zero** CPU copies when
+/// two-phase is off, and under two-phase every copied byte is accounted
+/// to the aggregation exchange — `wire_bytes_copied` never exceeds what
+/// `io_aggregated_bytes` explains.
+#[test]
+fn contiguous_collective_io_copies_only_in_the_aggregation_exchange() {
+    const LEN: usize = 4096;
+    Universe::test(4).calm().audited(true).run(|comm| {
+        let me = comm.rank();
+        let pn = comm.size();
+        let dt = byte();
+        let payload = pattern(0xC09 ^ me as u64, LEN);
+        let s = PvarSession::create(comm);
+        let f = File::open(comm, "/t/nocopy", AccessMode::read_write().with_delete_on_close())
+            .unwrap();
+
+        // Independent path: contiguous end to end, DMA-modeled throughout.
+        f.set_twophase(Some(false));
+        f.iwrite_at_all((me * LEN) as u64, &payload, LEN, &dt).unwrap().wait().unwrap();
+        collective::barrier(comm).unwrap();
+        assert_eq!(
+            s.read("wire_bytes_copied").unwrap(),
+            0,
+            "contiguous iwrite_at_all must not CPU-copy outside the exchange"
+        );
+        assert_eq!(s.read("io_aggregated_bytes").unwrap(), 0);
+        assert!(s.read("io_writes").unwrap() >= pn as u64);
+        assert_eq!(s.read("io_ops_inflight").unwrap(), 0, "ops must be quiescent here");
+
+        // Two-phase path: the only copies are the exchange's two halves.
+        f.set_twophase(Some(true));
+        let ft = striped(pn, LEN);
+        f.set_view((me * LEN) as u64, &dt, &ft).unwrap();
+        let st = f.iwrite_at_all(0, &payload, LEN, &dt).unwrap().wait().unwrap();
+        assert_eq!(st.bytes, LEN);
+        collective::barrier(comm).unwrap();
+        let copied = s.read("wire_bytes_copied").unwrap();
+        let staged = s.read("io_aggregated_bytes").unwrap();
+        assert!(staged > 0, "a {pn}-rank two-phase write must stage through the exchange");
+        assert_eq!(
+            copied, staged,
+            "every CPU copy on this job must be explained by the aggregation exchange"
+        );
+        f.close().unwrap();
+    });
+}
+
+/// Per-rank checkpoint state at a given epoch.
+fn ck_state(rank: usize, epoch: u64, len: usize) -> Vec<u8> {
+    pattern(0xC8E0_0000 ^ ((rank as u64) << 16) ^ epoch, len)
+}
+
+/// One checkpoint/restart job: epochs of double-buffered collective
+/// checkpoint writes, each committed by a marker record only after the
+/// data is globally synced; then a crash mid-write (data written, marker
+/// never updated) and a restart that must recover the last *committed*
+/// checkpoint byte-for-byte — old or fully-synced new, never torn.
+fn run_checkpoint_job(u: &Universe) -> Vec<(u64, Vec<u8>)> {
+    const LEN: usize = 2048; // per-rank slice
+    const EPOCHS: u64 = 3;
+    u.run(|comm| {
+        let me = comm.rank();
+        let pn = comm.size();
+        let dt = byte();
+        let slots = ["/ckpt/a", "/ckpt/b"];
+        let a = File::open(comm, slots[0], AccessMode::read_write()).unwrap();
+        let b = File::open(comm, slots[1], AccessMode::read_write()).unwrap();
+        let meta = File::open(comm, "/ckpt/meta", AccessMode::read_write()).unwrap();
+        let files = [&a, &b];
+        for e in 1..=EPOCHS {
+            let f = files[(e % 2) as usize];
+            let state = ck_state(me, e, LEN);
+            // Post the collective write, overlap the next epoch's
+            // "compute", then complete and commit.
+            let req = f.iwrite_at_all((me * LEN) as u64, &state, LEN, &dt).unwrap();
+            let _next = ck_state(me, e + 1, LEN);
+            req.wait().unwrap();
+            f.sync().unwrap();
+            if me == 0 {
+                meta.write_at(0, &e.to_le_bytes(), 8, &dt).unwrap();
+            }
+            meta.sync().unwrap();
+        }
+        // Crash mid-write: epoch EPOCHS+1 reaches its (non-committed)
+        // slot, but the commit record is never updated.
+        let doomed = ck_state(me, EPOCHS + 1, LEN);
+        files[((EPOCHS + 1) % 2) as usize]
+            .iwrite_at_all((me * LEN) as u64, &doomed, LEN, &dt)
+            .unwrap()
+            .wait()
+            .unwrap();
+        collective::barrier(comm).unwrap();
+        // Restart: drop every handle and come back up from the marker.
+        a.close().unwrap();
+        b.close().unwrap();
+        meta.close().unwrap();
+        let meta = File::open(comm, "/ckpt/meta", AccessMode::read()).unwrap();
+        let mut em = [0u8; 8];
+        assert_eq!(meta.read_at(0, &mut em, 8, &dt).unwrap(), 8, "commit record torn");
+        let committed = u64::from_le_bytes(em);
+        meta.close().unwrap();
+        assert_eq!(committed, EPOCHS, "rank {me}: wrong committed epoch");
+        let f = File::open(comm, slots[(committed % 2) as usize], AccessMode::read()).unwrap();
+        let total = pn * LEN;
+        let mut img = vec![0u8; total];
+        assert_eq!(f.read_at_all(0, &mut img, total, &dt).unwrap(), total);
+        f.close().unwrap();
+        for r in 0..pn {
+            assert_eq!(
+                img[r * LEN..(r + 1) * LEN],
+                ck_state(r, committed, LEN)[..],
+                "torn checkpoint: rank {r}'s slice mixes epochs"
+            );
+        }
+        collective::barrier(comm).unwrap();
+        if me == 0 {
+            for p in slots.iter().chain(["/ckpt/meta"].iter()) {
+                File::delete(comm, p).unwrap();
+            }
+        }
+        collective::barrier(comm).unwrap();
+        (committed, img)
+    })
+}
+
+/// The checkpoint/restart chaos differential (acceptance criterion):
+/// across a matrix of chaos seeds — delivery delay, reordering, yield
+/// jitter, eager-limit sweeps, all with the quiescence audit armed — the
+/// recovered checkpoint is byte-identical to the calm run's.
+#[test]
+fn checkpoint_restart_mid_write_is_never_torn_under_chaos() {
+    let calm = run_checkpoint_job(&Universe::test(3).calm().audited(true));
+    for &seed in &[7u64, 11, 13, 17, 19] {
+        let chaotic = run_checkpoint_job(&Universe::test(3).chaotic(seed).audited(true));
+        assert_eq!(chaotic, calm, "checkpoint/restart diverged under chaos seed {seed}");
+    }
+}
+
+/// The proggen IO showcase (striped split-collective writes, interleave
+/// oracles, async tails) digests identically calm and under chaos — the
+/// same program CI replays cross-backend via `builtin:conformance`.
+#[test]
+fn io_showcase_digests_are_chaos_immune() {
+    assert_differential(&Program::io_showcase(3), &[7, 19]);
+}

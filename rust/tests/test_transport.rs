@@ -198,6 +198,75 @@ fn derived_conformance_shm_matches_inproc() {
     assert_derived_conformance("shm");
 }
 
+/// The MPI-IO showcase (striped split-collective writes through file
+/// views, two-phase aggregation, async tails) must digest identically on
+/// a real multi-process backend and the in-process fabric. On launched
+/// backends every file op crosses the wire to the rank-0 file server, so
+/// this is the served-path regression test.
+fn assert_io_conformance(backend: &str) {
+    let program = Program::io_showcase(NRANKS);
+    let want: Vec<String> = program
+        .run(&Universe::test(NRANKS).calm())
+        .iter()
+        .map(|digests| digests.iter().map(|d| format!("{d:016x}\n")).collect())
+        .collect();
+    let scratch = Scratch::new(&format!("conf-io-{backend}"));
+    let out = Command::new(LAUNCHER)
+        .args(["-n", &NRANKS.to_string(), "--backend", backend, "builtin:conformance"])
+        .args(["--program", "io", "--out"])
+        .arg(&scratch.0)
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(
+        out.status.success(),
+        "io conformance job failed on {backend}: {}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    for r in 0..NRANKS {
+        let path = scratch.0.join(format!("rank_{r}.digest"));
+        let got = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing digest {}: {e}", path.display()));
+        assert_eq!(
+            got, want[r],
+            "rank {r} io digests diverge on {backend} — the file-server wire \
+             path changed file contents, not just scheduling"
+        );
+    }
+}
+
+#[test]
+fn io_conformance_socket_matches_inproc() {
+    assert_io_conformance("socket");
+}
+
+#[cfg(unix)]
+#[test]
+fn io_conformance_shm_matches_inproc() {
+    assert_io_conformance("shm");
+}
+
+/// Satellite: with the rank-0 file server disabled, launched-mode file
+/// access must refuse cleanly (a nonzero job exit naming the knob), not
+/// hang or silently fall back to per-process filesystems.
+#[test]
+fn launcher_io_refuses_cleanly_when_server_disabled() {
+    let scratch = Scratch::new("conf-io-noserver");
+    let out = Command::new(LAUNCHER)
+        .args(["-n", "2", "--backend", "socket", "builtin:conformance"])
+        .args(["--program", "io", "--out"])
+        .arg(&scratch.0)
+        .env("FERROMPI_IO_SERVER", "0")
+        .output()
+        .expect("spawn ferrompi-launch");
+    assert!(!out.status.success(), "io job must fail with the file server disabled");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("FERROMPI_IO_SERVER"),
+        "the refusal must name the knob that caused it: {stderr}"
+    );
+}
+
 /// The acceptance-criterion smoke: `ferrompi-launch -n 4` runs an
 /// allreduce end-to-end over the socket backend.
 #[test]
